@@ -1,0 +1,45 @@
+//! Quickstart: the library in 60 lines — build a filter, batch-insert,
+//! query, delete, inspect occupancy and FPR.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use cuckoo_gpu::device::Device;
+use cuckoo_gpu::filter::{CuckooConfig, CuckooFilter, Fp16};
+use cuckoo_gpu::workload;
+
+fn main() {
+    // A filter sized for 1M keys at the design load factor (95%).
+    let filter = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(1_000_000)).unwrap();
+    let device = Device::default(); // one worker per core
+
+    // Batched operations — each logical "CUDA thread" handles one key.
+    let keys = workload::insert_keys(1_000_000, 42);
+    let r = filter.insert_batch(&device, &keys);
+    println!(
+        "inserted {} / {} keys  (load factor {:.1}%)",
+        r.inserted,
+        keys.len(),
+        filter.load_factor() * 100.0
+    );
+
+    let hits = filter.count_contains_batch(&device, &keys);
+    println!("positive queries: {hits} hits (no false negatives: {})", hits == r.inserted);
+
+    // Empirical FPR with guaranteed-absent probes.
+    let negatives = workload::negative_probes(1_000_000, 7);
+    let fp = filter.count_contains_batch(&device, &negatives);
+    println!(
+        "negative queries: {fp} false positives ({:.4}% FPR; fp16 theory ≈0.046%)",
+        fp as f64 / negatives.len() as f64 * 100.0
+    );
+
+    // True deletion — the feature Bloom filters lack.
+    let removed = filter.remove_batch(&device, &keys[..500_000]);
+    println!("deleted {removed} keys; {} remain", filter.len());
+
+    // Single-key API.
+    filter.insert(0xDEAD_BEEF).unwrap();
+    assert!(filter.contains(0xDEAD_BEEF));
+    assert!(filter.remove(0xDEAD_BEEF));
+    println!("quickstart OK");
+}

@@ -1,0 +1,72 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; Python never executes on the Rust
+request path.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--buckets 4096]
+                          [--batch 4096] [--fp-bits 16] [--slots 16]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import FilterModel
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(model: FilterModel, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"model": model.meta(), "artifacts": {}}
+    for name in FilterModel.GRAPHS:
+        lowered = jax.jit(model.fn(name)).lower(*model.specs(name))
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = fname
+        print(f"  {name}: {len(text)} chars -> {fname}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--buckets", type=int, default=4096)
+    ap.add_argument("--slots", type=int, default=16)
+    ap.add_argument("--fp-bits", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--tile", type=int, default=1024)
+    args = ap.parse_args()
+
+    model = FilterModel(
+        num_buckets=args.buckets,
+        bucket_slots=args.slots,
+        fp_bits=args.fp_bits,
+        batch=args.batch,
+        tile=args.tile,
+    )
+    print(f"lowering {len(FilterModel.GRAPHS)} graphs to {args.out_dir}")
+    lower_all(model, args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Layer-1 Pallas kernel: blocked-Bloom query (the GBBF baseline's read
+path), so the benchmark comparison can also run through the AOT/PJRT
+pipeline end to end."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+u64 = jnp.uint64
+
+
+def _bloom_kernel_body(num_blocks, k, seed):
+    def kernel(words_ref, keys_ref, out_ref):
+        keys = keys_ref[...]
+        words = words_ref[...]
+        block, h1, h2 = ref.bloom_plan(keys, num_blocks, seed)
+        hit = jnp.ones(keys.shape, dtype=bool)
+        base = block * u64(ref.BLOOM_BLOCK_WORDS)
+        for i in range(k):
+            bit = (h1 + h2 * u64(i)) % u64(ref.BLOOM_BLOCK_BITS)
+            w = jnp.take(words, (base + bit // u64(64)).astype(jnp.int64))
+            hit = hit & ((w >> (bit % u64(64))) & u64(1)).astype(bool)
+        out_ref[...] = hit.astype(jnp.uint8)
+
+    return kernel
+
+
+def bloom_query_pallas(words, keys, k=8, seed=ref.DEFAULT_SEED, tile=1024):
+    words = jnp.asarray(words, dtype=u64)
+    keys = jnp.asarray(keys, dtype=u64)
+    n = keys.shape[0]
+    m_words = words.shape[0]
+    num_blocks = m_words // ref.BLOOM_BLOCK_WORDS
+    tile = min(tile, n)
+    assert n % tile == 0
+
+    kernel = _bloom_kernel_body(num_blocks, k, seed)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((m_words,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint8),
+        interpret=True,
+    )(words, keys)

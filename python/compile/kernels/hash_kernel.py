@@ -1,0 +1,47 @@
+"""Layer-1 Pallas kernel: batched xxHash64 key planning.
+
+Computes, per key, the fingerprint and both candidate bucket indices
+(§4.3 step 1: xxHash64, upper 32 bits → fingerprint, lower 32 bits →
+primary index, partial-key XOR for the alternate). The Rust coordinator
+uses this artifact to offload hash planning for large mutation batches.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _hash_kernel_body(num_buckets, fp_bits, seed):
+    def kernel(keys_ref, fp_ref, i1_ref, i2_ref):
+        keys = keys_ref[...]
+        fp, i1, i2 = ref.candidates(keys, num_buckets, fp_bits, seed)
+        fp_ref[...] = fp.astype(jnp.uint32)
+        i1_ref[...] = i1.astype(jnp.uint32)
+        i2_ref[...] = i2.astype(jnp.uint32)
+
+    return kernel
+
+
+def hash_pallas(keys, num_buckets, fp_bits=16, seed=ref.DEFAULT_SEED, tile=1024):
+    """(fp, i1, i2) per key as uint32 vectors."""
+    keys = jnp.asarray(keys, dtype=jnp.uint64)
+    n = keys.shape[0]
+    tile = min(tile, n)
+    assert n % tile == 0
+
+    kernel = _hash_kernel_body(num_buckets, fp_bits, seed)
+    out = jax.ShapeDtypeStruct((n,), jnp.uint32)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=(
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ),
+        out_shape=(out, out, out),
+        interpret=True,
+    )(keys)

@@ -1,0 +1,85 @@
+"""Layer-1 Pallas kernel: batched two-bucket SWAR membership query.
+
+This is the paper's read-only hot path (Algorithm 2) expressed for the
+TPU programming model (DESIGN.md §Hardware-Adaptation):
+
+* the CUDA grid over keys becomes the Pallas ``grid`` with a tile of keys
+  per step (``BlockSpec`` carves the key and output vectors);
+* the 256-bit vectorised bucket loads become whole-bucket vector reads
+  from the table (resident in kernel memory), consumed lane-wise by the
+  VPU — the SWAR compare is identical bit math to the CUDA version;
+* there is no thread divergence by construction: every key performs the
+  same constant-shape compare over both candidate buckets (the paper's
+  branch-free "constant-time arithmetic" formulation).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO that the Rust
+runtime loads (see /opt/xla-example/README.md).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+u64 = jnp.uint64
+
+
+def _query_kernel_body(num_buckets, words_per_bucket, fp_bits, seed):
+    """Build the kernel body with static table geometry."""
+
+    def kernel(words_ref, keys_ref, out_ref):
+        keys = keys_ref[...]
+        words = words_ref[...]
+        fp, i1, i2 = ref.candidates(keys, num_buckets, fp_bits, seed)
+
+        def bucket_hit(b):
+            hit = jnp.zeros(b.shape, dtype=bool)
+            base = (b * u64(words_per_bucket)).astype(jnp.int64)
+            # Static unroll over the bucket's words — the "unrolled loop
+            # over the returned word sequence" of Algorithm 2.
+            for j in range(words_per_bucket):
+                w = jnp.take(words, base + j)
+                hit = hit | (ref.match_mask(w, fp, fp_bits) != u64(0))
+            return hit
+
+        out_ref[...] = (bucket_hit(i1) | bucket_hit(i2)).astype(jnp.uint8)
+
+    return kernel
+
+
+def query_pallas(
+    words,
+    keys,
+    words_per_bucket,
+    fp_bits=16,
+    seed=ref.DEFAULT_SEED,
+    tile=1024,
+):
+    """Run the Pallas query kernel over a batch of keys.
+
+    `words`: packed table snapshot (num_buckets * words_per_bucket u64).
+    `keys`: (n,) u64, n divisible by `tile` (pad with any key).
+    Returns (n,) uint8 membership flags.
+    """
+    words = jnp.asarray(words, dtype=u64)
+    keys = jnp.asarray(keys, dtype=u64)
+    n = keys.shape[0]
+    m_words = words.shape[0]
+    num_buckets = m_words // words_per_bucket
+    tile = min(tile, n)
+    assert n % tile == 0, f"batch {n} not divisible by tile {tile}"
+
+    kernel = _query_kernel_body(num_buckets, words_per_bucket, fp_bits, seed)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((m_words,), lambda i: (0,)),  # whole table each step
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint8),
+        interpret=True,
+    )(words, keys)

@@ -1,0 +1,217 @@
+"""Pure-jnp / pure-python correctness oracles for the Pallas kernels.
+
+Everything here mirrors the Rust hot path bit-for-bit:
+
+* ``xxh64_u64`` — xxHash64 specialised to one little-endian u64 key
+  (== ``rust/src/filter/hash.rs::xxhash64_u64``);
+* ``mix64`` — the SplitMix64 finaliser used for fingerprint spreading
+  (== ``rust/src/util/prng.rs::mix64``);
+* ``candidates`` — fingerprint + two bucket indices, XOR policy
+  (== ``rust/src/filter/policy.rs``);
+* ``query_ref`` — two-bucket SWAR membership over a packed-word table
+  (== ``rust/src/filter/core.rs::contains``);
+* ``bloom_query_ref`` — the blocked-Bloom baseline query
+  (== ``rust/src/baselines/bbf.rs``).
+
+The jnp versions are vectorised and run under ``jax_enable_x64``; the
+``*_scalar`` versions are plain-python integer golden models used to test
+the jnp versions themselves.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+# ----------------------------------------------------------------------
+# Constants (shared with the Rust side — see hash.rs / prng.rs)
+# ----------------------------------------------------------------------
+P64_1 = 0x9E3779B185EBCA87
+P64_2 = 0xC2B2AE3D27D4EB4F
+P64_3 = 0x165667B19E3779F9
+P64_4 = 0x85EBCA77C2B2AE63
+P64_5 = 0x27D4EB2F165667C5
+DEFAULT_SEED = 0x5EEDCAFEF00DD00D
+M64 = (1 << 64) - 1
+
+u64 = jnp.uint64
+
+
+def _c(x):
+    """Lift a python int into a u64 scalar."""
+    return jnp.asarray(x & M64, dtype=u64)
+
+
+def rotl(x, r):
+    return (x << u64(r)) | (x >> u64(64 - r))
+
+
+def xxh64_u64(key, seed=DEFAULT_SEED):
+    """xxHash64 of one (vector of) u64 key(s) — the fixed-8-byte path."""
+    key = jnp.asarray(key, dtype=u64)
+    h = _c(seed) + _c(P64_5) + u64(8)
+    # round(0, key)
+    k = rotl(key * _c(P64_2), 31) * _c(P64_1)
+    h = h ^ k
+    h = rotl(h, 27) * _c(P64_1) + _c(P64_4)
+    # avalanche
+    h = h ^ (h >> u64(33))
+    h = h * _c(P64_2)
+    h = h ^ (h >> u64(29))
+    h = h * _c(P64_3)
+    h = h ^ (h >> u64(32))
+    return h
+
+
+def mix64(z):
+    """SplitMix64 finaliser (fingerprint spreading hash)."""
+    z = jnp.asarray(z, dtype=u64)
+    z = (z ^ (z >> u64(30))) * _c(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> u64(27))) * _c(0x94D049BB133111EB)
+    return z ^ (z >> u64(31))
+
+
+# ----------------------------------------------------------------------
+# Partial-key cuckoo hashing (XOR policy) for fp_bits-wide tags
+# ----------------------------------------------------------------------
+def candidates(keys, num_buckets, fp_bits=16, seed=DEFAULT_SEED):
+    """fingerprint + (i1, i2) for each key; XOR policy, power-of-two m."""
+    assert num_buckets & (num_buckets - 1) == 0, "XOR policy needs 2^k buckets"
+    h = xxh64_u64(keys, seed)
+    lane_mask = _c((1 << fp_bits) - 1)
+    fp = (h >> u64(32)) & lane_mask
+    fp = fp + (fp == u64(0)).astype(u64)
+    m = _c(num_buckets)
+    i1 = (h & _c(0xFFFFFFFF)) % m
+    spread = mix64(fp ^ _c(seed)) % m
+    i2 = i1 ^ spread
+    return fp, i1, i2
+
+
+# ----------------------------------------------------------------------
+# SWAR lane ops over packed u64 words (== swar.rs)
+# ----------------------------------------------------------------------
+def lane_consts(fp_bits):
+    lanes = 64 // fp_bits
+    lsbs = 0
+    for i in range(lanes):
+        lsbs |= 1 << (i * fp_bits)
+    msbs = lsbs << (fp_bits - 1)
+    return lanes, lsbs, msbs
+
+
+def zero_mask(word, fp_bits=16):
+    """Exact per-lane zero detector (same formula as swar.rs)."""
+    _, _, msbs = lane_consts(fp_bits)
+    low = _c(~msbs)
+    word = jnp.asarray(word, dtype=u64)
+    return ~(((word & low) + low) | word | low)
+
+
+def match_mask(word, tag, fp_bits=16):
+    _, lsbs, _ = lane_consts(fp_bits)
+    pattern = jnp.asarray(tag, dtype=u64) * _c(lsbs)
+    return zero_mask(word ^ pattern, fp_bits)
+
+
+# ----------------------------------------------------------------------
+# Whole-filter query reference
+# ----------------------------------------------------------------------
+def query_ref(words, keys, words_per_bucket, fp_bits=16, seed=DEFAULT_SEED):
+    """Two-bucket membership for each key over the packed table `words`.
+
+    `words` is the Rust table snapshot (num_buckets * words_per_bucket u64).
+    Returns uint8 hits. Pure jnp — the oracle the Pallas kernel is tested
+    against, and itself tested against `query_scalar`.
+    """
+    words = jnp.asarray(words, dtype=u64)
+    num_buckets = words.shape[0] // words_per_bucket
+    fp, i1, i2 = candidates(keys, num_buckets, fp_bits, seed)
+
+    def bucket_hit(b):
+        hit = jnp.zeros(b.shape, dtype=bool)
+        base = b * u64(words_per_bucket)
+        for j in range(words_per_bucket):
+            w = jnp.take(words, (base + u64(j)).astype(jnp.int64))
+            hit = hit | (match_mask(w, fp, fp_bits) != u64(0))
+        return hit
+
+    return (bucket_hit(i1) | bucket_hit(i2)).astype(jnp.uint8)
+
+
+# ----------------------------------------------------------------------
+# Blocked-Bloom reference (== bbf.rs)
+# ----------------------------------------------------------------------
+BLOOM_BLOCK_WORDS = 8
+BLOOM_BLOCK_BITS = 512
+
+
+def bloom_plan(keys, num_blocks, seed=DEFAULT_SEED):
+    h = xxh64_u64(keys, seed)
+    block = h % _c(num_blocks)
+    h1 = h >> u64(32)
+    h2 = (h >> u64(17)) | u64(1)
+    return block, h1, h2
+
+
+def bloom_query_ref(words, keys, k, seed=DEFAULT_SEED):
+    """Blocked-Bloom membership; `words` = num_blocks*8 u64."""
+    words = jnp.asarray(words, dtype=u64)
+    num_blocks = words.shape[0] // BLOOM_BLOCK_WORDS
+    block, h1, h2 = bloom_plan(keys, num_blocks, seed)
+    hit = jnp.ones(jnp.asarray(keys).shape, dtype=bool)
+    base = block * u64(BLOOM_BLOCK_WORDS)
+    for i in range(k):
+        bit = (h1 + h2 * u64(i)) % u64(BLOOM_BLOCK_BITS)
+        widx = (base + bit // u64(64)).astype(jnp.int64)
+        w = jnp.take(words, widx)
+        hit = hit & ((w >> (bit % u64(64))) & u64(1)).astype(bool)
+    return hit.astype(jnp.uint8)
+
+
+# ----------------------------------------------------------------------
+# Plain-python scalar golden models (test the jnp code itself)
+# ----------------------------------------------------------------------
+def xxh64_u64_scalar(key: int, seed: int = DEFAULT_SEED) -> int:
+    def rotl_i(x, r):
+        return ((x << r) | (x >> (64 - r))) & M64
+
+    h = (seed + P64_5 + 8) & M64
+    k = (rotl_i((key * P64_2) & M64, 31) * P64_1) & M64
+    h ^= k
+    h = (rotl_i(h, 27) * P64_1 + P64_4) & M64
+    h ^= h >> 33
+    h = (h * P64_2) & M64
+    h ^= h >> 29
+    h = (h * P64_3) & M64
+    h ^= h >> 32
+    return h
+
+
+def mix64_scalar(z: int) -> int:
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return z ^ (z >> 31)
+
+
+def candidates_scalar(key: int, num_buckets: int, fp_bits: int = 16, seed: int = DEFAULT_SEED):
+    h = xxh64_u64_scalar(key, seed)
+    fp = (h >> 32) & ((1 << fp_bits) - 1)
+    fp += fp == 0
+    i1 = (h & 0xFFFFFFFF) % num_buckets
+    i2 = i1 ^ (mix64_scalar(fp ^ seed) % num_buckets)
+    return fp, i1, i2
+
+
+def query_scalar(words, key, words_per_bucket, fp_bits=16, seed=DEFAULT_SEED) -> bool:
+    lanes = 64 // fp_bits
+    lane_mask = (1 << fp_bits) - 1
+    num_buckets = len(words) // words_per_bucket
+    fp, i1, i2 = candidates_scalar(key, num_buckets, fp_bits, seed)
+    for b in (i1, i2):
+        for j in range(words_per_bucket):
+            w = int(words[b * words_per_bucket + j])
+            for lane in range(lanes):
+                if (w >> (lane * fp_bits)) & lane_mask == fp:
+                    return True
+    return False

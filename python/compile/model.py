@@ -1,0 +1,118 @@
+"""Layer-2 JAX model: the batched filter compute graphs, composed from
+the Layer-1 Pallas kernels, in the form the Rust runtime executes.
+
+Three exported graphs (all lowered once by ``aot.py``):
+
+* ``query``  — ``(words, keys) -> hits``: the paper's read-only query
+  path; calls the Pallas SWAR kernel and nothing else, so the whole
+  request-path computation lives in the kernel;
+* ``query_stats`` — same plus a fused hit-count reduction (the warp-level
+  tally of §4.3 maps to an XLA fused sum);
+* ``hash``   — ``keys -> (fp, i1, i2)``: mutation planning for the Rust
+  coordinator's insert path;
+* ``bloom_query`` — the GBBF baseline's read path.
+
+The geometry (bucket count, batch size) is static per artifact — the
+analogue of the paper's compile-time template configuration (§4.7). The
+Rust side pads batches to the artifact's batch size.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.bloom_kernel import bloom_query_pallas
+from .kernels.hash_kernel import hash_pallas
+from .kernels.query_kernel import query_pallas
+
+
+class FilterModel:
+    """Static geometry + the jax functions over it."""
+
+    def __init__(
+        self,
+        num_buckets=4096,
+        bucket_slots=16,
+        fp_bits=16,
+        batch=4096,
+        tile=1024,
+        seed=ref.DEFAULT_SEED,
+        bloom_k=3,
+    ):
+        assert num_buckets & (num_buckets - 1) == 0
+        self.num_buckets = num_buckets
+        self.bucket_slots = bucket_slots
+        self.fp_bits = fp_bits
+        self.words_per_bucket = bucket_slots * fp_bits // 64
+        self.num_words = num_buckets * self.words_per_bucket
+        self.batch = batch
+        self.tile = tile
+        self.seed = seed
+        self.bloom_k = bloom_k
+        # Same byte budget for the bloom artifact as the cuckoo table.
+        self.bloom_words = self.num_words
+
+    # -- graphs ----------------------------------------------------------
+    def query(self, words, keys):
+        """Membership flags for a batch (uint8)."""
+        return query_pallas(
+            words, keys, self.words_per_bucket, self.fp_bits, self.seed, self.tile
+        )
+
+    def query_stats(self, words, keys):
+        """Flags plus fused positive-hit count (uint32)."""
+        hits = self.query(words, keys)
+        return hits, jnp.sum(hits.astype(jnp.uint32))
+
+    def hash(self, keys):
+        """(fp, i1, i2) planning vectors (uint32 each)."""
+        return hash_pallas(keys, self.num_buckets, self.fp_bits, self.seed, self.tile)
+
+    def bloom_query(self, words, keys):
+        return bloom_query_pallas(words, keys, self.bloom_k, self.seed, self.tile)
+
+    # -- example inputs for lowering --------------------------------------
+    def specs(self, name):
+        words = jax.ShapeDtypeStruct((self.num_words,), jnp.uint64)
+        keys = jax.ShapeDtypeStruct((self.batch,), jnp.uint64)
+        bloom_words = jax.ShapeDtypeStruct((self.bloom_words,), jnp.uint64)
+        return {
+            "query": (words, keys),
+            "query_stats": (words, keys),
+            "hash": (keys,),
+            "bloom_query": (bloom_words, keys),
+        }[name]
+
+    def fn(self, name):
+        f = {
+            "query": self.query,
+            "query_stats": self.query_stats,
+            "hash": self.hash,
+            "bloom_query": self.bloom_query,
+        }[name]
+
+        # Outputs must be a tuple for the rust loader (return_tuple=True).
+        @functools.wraps(f)
+        def tupled(*args):
+            out = f(*args)
+            return out if isinstance(out, tuple) else (out,)
+
+        return tupled
+
+    GRAPHS = ("query", "query_stats", "hash", "bloom_query")
+
+    def meta(self):
+        return {
+            "num_buckets": self.num_buckets,
+            "bucket_slots": self.bucket_slots,
+            "fp_bits": self.fp_bits,
+            "words_per_bucket": self.words_per_bucket,
+            "num_words": self.num_words,
+            "batch": self.batch,
+            "tile": self.tile,
+            "seed": self.seed,
+            "bloom_k": self.bloom_k,
+            "bloom_words": self.bloom_words,
+        }

@@ -1,0 +1,11 @@
+//! `cargo bench` wrapper for Figure 6.
+fn main() {
+    cuckoo_gpu::bench::fig6::run(&cuckoo_gpu::bench::BenchOpts {
+        // CI-scale for `cargo bench`; the `repro` CLI uses bigger
+        // defaults and --paper-scale selects the paper's sizes.
+        l2_slots: 1 << 18,
+        dram_slots: 1 << 20,
+        runs: 2,
+        ..cuckoo_gpu::bench::BenchOpts::default()
+    });
+}

@@ -1,0 +1,77 @@
+//! Micro-benchmarks of the hot paths (the §Perf profiling harness):
+//! hash, SWAR scan, single-threaded op latency, multi-thread scaling.
+//! Run with `cargo bench --bench micro_hot_paths`.
+
+use cuckoo_gpu::device::Device;
+use cuckoo_gpu::filter::{hash::xxhash64_u64, CuckooConfig, CuckooFilter, Fp16, Layout};
+use cuckoo_gpu::util::Timer;
+use std::hint::black_box;
+
+fn bench(name: &str, ops: usize, f: impl FnOnce()) -> f64 {
+    let t = Timer::new();
+    f();
+    let s = t.elapsed_secs();
+    let mops = ops as f64 / s / 1e6;
+    println!("{name:<42} {mops:>10.1} M op/s");
+    mops
+}
+
+fn main() {
+    let n = 1 << 22;
+    let keys: Vec<u64> = (0..n as u64).map(cuckoo_gpu::util::prng::mix64).collect();
+
+    bench("xxhash64_u64", n, || {
+        let mut acc = 0u64;
+        for &k in &keys {
+            acc ^= xxhash64_u64(k, 0);
+        }
+        black_box(acc);
+    });
+
+    bench("swar zero_mask+match (fp16)", n, || {
+        let mut acc = 0u64;
+        for &k in &keys {
+            acc ^= Fp16::zero_mask(k) ^ Fp16::match_mask(k, 0xBEEF);
+        }
+        black_box(acc);
+    });
+
+    let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(n)).unwrap();
+    bench("insert single-thread", n, || {
+        for &k in &keys {
+            let _ = f.insert(k);
+        }
+    });
+    bench("query+ single-thread", n, || {
+        let mut acc = 0usize;
+        for &k in &keys {
+            acc += f.contains(k) as usize;
+        }
+        black_box(acc);
+    });
+    let neg: Vec<u64> = cuckoo_gpu::workload::negative_probes(n, 3);
+    bench("query- single-thread", n, || {
+        let mut acc = 0usize;
+        for &k in &neg {
+            acc += f.contains(k) as usize;
+        }
+        black_box(acc);
+    });
+    bench("delete single-thread", n, || {
+        for &k in &keys {
+            let _ = f.remove(k);
+        }
+    });
+
+    // Multi-thread scaling through the device.
+    for workers in [1, 2, 4, 8, cuckoo_gpu::device::default_workers()] {
+        let d = Device::with_workers(workers);
+        let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(n)).unwrap();
+        bench(&format!("insert batch x{workers} workers"), n, || {
+            f.insert_batch(&d, &keys);
+        });
+        bench(&format!("query+ batch x{workers} workers"), n, || {
+            f.count_contains_batch(&d, &keys);
+        });
+    }
+}

@@ -1,0 +1,227 @@
+//! Bucketed Cuckoo Hash Table (BCHT) baseline — Awad et al. (APOCS'23),
+//! included by the paper to show that a full hash table "used as a
+//! filter" pays roughly an order of magnitude in memory and bandwidth
+//! versus a fingerprint filter (§3, §5.2 "Hash Table and CPU Baseline").
+//!
+//! Stores *full 64-bit keys* in 16-slot buckets; insertion is a cuckoo
+//! random-walk over whole-key slots via 64-bit CAS. Exact membership —
+//! zero false positives — but 4× the bytes of a 16-bit-tag filter and
+//! therefore 4× the memory traffic per probe.
+
+use super::common::AmqFilter;
+use crate::filter::hash::{xxhash64_u64, DEFAULT_SEED};
+use crate::util::prng::{mix64, SplitMix64};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const EMPTY: u64 = 0;
+const BUCKET_SLOTS: usize = 16;
+const MAX_EVICTIONS: usize = 500;
+
+pub struct BuckCuckooHashTable {
+    slots: Box<[AtomicU64]>,
+    num_buckets: usize,
+    seed: u64,
+}
+
+impl BuckCuckooHashTable {
+    pub fn with_capacity(capacity: usize) -> Self {
+        let slots_needed = (capacity as f64 / 0.90).ceil() as usize;
+        let num_buckets = slots_needed.div_ceil(BUCKET_SLOTS).next_power_of_two().max(2);
+        let slots: Vec<AtomicU64> = (0..num_buckets * BUCKET_SLOTS)
+            .map(|_| AtomicU64::new(EMPTY))
+            .collect();
+        Self {
+            slots: slots.into_boxed_slice(),
+            num_buckets,
+            seed: DEFAULT_SEED,
+        }
+    }
+
+    /// Keys are stored transformed so the EMPTY sentinel (0) never
+    /// collides with a real key: store mix64(key) which is a bijection,
+    /// remapping the single key that hits 0.
+    #[inline(always)]
+    fn encode(key: u64) -> u64 {
+        let e = mix64(key);
+        e + (e == EMPTY) as u64
+    }
+
+    #[inline(always)]
+    fn bucket_pair(&self, encoded: u64) -> (usize, usize) {
+        let h = xxhash64_u64(encoded, self.seed);
+        let mask = (self.num_buckets - 1) as u64;
+        let b1 = (h & mask) as usize;
+        let b2 = (b1 as u64 ^ (mix64(h >> 32 | 1).max(1) & mask)) as usize;
+        (b1, b2)
+    }
+
+    fn try_insert_bucket(&self, bucket: usize, encoded: u64) -> bool {
+        let base = bucket * BUCKET_SLOTS;
+        for s in 0..BUCKET_SLOTS {
+            let slot = &self.slots[base + s];
+            let mut cur = slot.load(Ordering::Acquire);
+            while cur == EMPTY {
+                match slot.compare_exchange(EMPTY, encoded, Ordering::AcqRel, Ordering::Acquire) {
+                    Ok(_) => return true,
+                    Err(now) => cur = now,
+                }
+            }
+        }
+        false
+    }
+
+    fn bucket_contains(&self, bucket: usize, encoded: u64) -> bool {
+        let base = bucket * BUCKET_SLOTS;
+        (0..BUCKET_SLOTS).any(|s| self.slots[base + s].load(Ordering::Relaxed) == encoded)
+    }
+
+    fn bucket_remove(&self, bucket: usize, encoded: u64) -> bool {
+        let base = bucket * BUCKET_SLOTS;
+        for s in 0..BUCKET_SLOTS {
+            let slot = &self.slots[base + s];
+            let mut cur = slot.load(Ordering::Acquire);
+            while cur == encoded {
+                match slot.compare_exchange(encoded, EMPTY, Ordering::AcqRel, Ordering::Acquire) {
+                    Ok(_) => return true,
+                    Err(now) => cur = now,
+                }
+            }
+        }
+        false
+    }
+}
+
+impl AmqFilter for BuckCuckooHashTable {
+    fn name(&self) -> &'static str {
+        "bcht"
+    }
+
+    fn insert(&self, key: u64) -> bool {
+        let mut enc = Self::encode(key);
+        let (b1, b2) = self.bucket_pair(enc);
+        if self.try_insert_bucket(b1, enc) || self.try_insert_bucket(b2, enc) {
+            return true;
+        }
+        // Cuckoo random walk over full keys.
+        let mut rng = SplitMix64::new(enc ^ 0x1234_5678_9ABC_DEF0);
+        let mut bucket = if rng.next_u64() & 1 == 0 { b1 } else { b2 };
+        for _ in 0..MAX_EVICTIONS {
+            let s = rng.next_below(BUCKET_SLOTS as u64) as usize;
+            let slot = &self.slots[bucket * BUCKET_SLOTS + s];
+            // Swap our key with the victim.
+            let mut victim = slot.load(Ordering::Acquire);
+            loop {
+                match slot.compare_exchange(victim, enc, Ordering::AcqRel, Ordering::Acquire) {
+                    Ok(_) => break,
+                    Err(now) => victim = now,
+                }
+            }
+            if victim == EMPTY {
+                return true;
+            }
+            // Victim moves to its other bucket.
+            let (v1, v2) = self.bucket_pair(victim);
+            let next = if v1 == bucket { v2 } else { v1 };
+            if self.try_insert_bucket(next, victim) {
+                return true;
+            }
+            enc = victim;
+            bucket = next;
+        }
+        false
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        let enc = Self::encode(key);
+        let (b1, b2) = self.bucket_pair(enc);
+        self.bucket_contains(b1, enc) || self.bucket_contains(b2, enc)
+    }
+
+    fn remove(&self, key: u64) -> bool {
+        let enc = Self::encode(key);
+        let (b1, b2) = self.bucket_pair(enc);
+        self.bucket_remove(b1, enc) || self.bucket_remove(b2, enc)
+    }
+
+    fn bytes(&self) -> usize {
+        self.slots.len() * 8
+    }
+
+    fn bits_per_entry(&self) -> f64 {
+        64.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::mix64 as mx;
+
+    fn keys(n: usize, stream: u64) -> Vec<u64> {
+        (0..n as u64).map(|i| mx(i ^ (stream << 36))).collect()
+    }
+
+    #[test]
+    fn exact_membership() {
+        let t = BuckCuckooHashTable::with_capacity(10_000);
+        let ks = keys(10_000, 1);
+        for &k in &ks {
+            assert!(t.insert(k));
+        }
+        for &k in &ks {
+            assert!(t.contains(k));
+        }
+        // Zero false positives — it stores full keys.
+        for k in keys(50_000, 999) {
+            assert!(!t.contains(k));
+        }
+    }
+
+    #[test]
+    fn delete_exact() {
+        let t = BuckCuckooHashTable::with_capacity(1000);
+        let ks = keys(1000, 2);
+        for &k in &ks {
+            t.insert(k);
+        }
+        for &k in &ks {
+            assert!(t.remove(k));
+            assert!(!t.contains(k));
+        }
+    }
+
+    #[test]
+    fn memory_is_4x_of_fp16_filter() {
+        let t = BuckCuckooHashTable::with_capacity(100_000);
+        let f =
+            crate::filter::CuckooFilter::<crate::filter::Fp16>::new(
+                crate::filter::CuckooConfig::with_capacity(100_000),
+            )
+            .unwrap();
+        let ratio = t.bytes() as f64 / crate::filter::CuckooFilter::bytes(&f) as f64;
+        assert!(ratio >= 3.0, "BCHT/cuckoo byte ratio = {ratio}");
+    }
+
+    #[test]
+    fn key_zero_and_friends() {
+        let t = BuckCuckooHashTable::with_capacity(100);
+        for k in [0u64, 1, u64::MAX] {
+            assert!(t.insert(k));
+            assert!(t.contains(k));
+        }
+        assert!(t.remove(0));
+        assert!(!t.contains(0));
+        assert!(t.contains(1));
+    }
+
+    #[test]
+    fn concurrent_fill() {
+        use crate::device::Device;
+        let t = BuckCuckooHashTable::with_capacity(50_000);
+        let d = Device::with_workers(8);
+        let ks = keys(50_000, 3);
+        let ok = super::super::common::insert_batch(&t, &d, &ks);
+        assert_eq!(ok, 50_000);
+        assert_eq!(super::super::common::contains_batch(&t, &d, &ks), 50_000);
+    }
+}

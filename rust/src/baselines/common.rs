@@ -1,0 +1,140 @@
+//! The uniform AMQ interface all filters (ours and the baselines)
+//! implement, plus batched helpers that run any of them through the
+//! [`crate::device::Device`] launch engine.
+
+use crate::device::Device;
+
+/// An approximate-membership-query structure with (optional) deletion.
+/// All methods take `&self`: implementations are internally synchronised
+/// (lock-free or locked), matching the GPU batch model where a single
+/// structure is hammered by thousands of threads.
+pub trait AmqFilter: Sync {
+    /// Structure name for bench output (matches the paper's legends).
+    fn name(&self) -> &'static str;
+
+    /// Insert; returns false when the structure rejects the key
+    /// (full / eviction budget exhausted).
+    fn insert(&self, key: u64) -> bool;
+
+    /// Approximate membership (no false negatives for inserted keys).
+    fn contains(&self, key: u64) -> bool;
+
+    /// Delete one instance. Returns false if unsupported or not found.
+    fn remove(&self, key: u64) -> bool;
+
+    /// Whether deletion is supported at all (false for Bloom variants).
+    fn supports_delete(&self) -> bool {
+        true
+    }
+
+    /// Backing-storage bytes (the paper's space metric).
+    fn bytes(&self) -> usize;
+
+    /// Effective false-positive knob for reporting: bits of fingerprint
+    /// (or bits-per-key for Bloom variants).
+    fn bits_per_entry(&self) -> f64;
+}
+
+/// Batched operations over any [`AmqFilter`] via the device engine.
+pub fn insert_batch(f: &dyn AmqFilter, device: &Device, keys: &[u64]) -> u64 {
+    device.launch(keys.len(), |ctx| {
+        for i in ctx.range.clone() {
+            ctx.tally(f.insert(keys[i]));
+        }
+    })
+}
+
+pub fn contains_batch(f: &dyn AmqFilter, device: &Device, keys: &[u64]) -> u64 {
+    device.launch(keys.len(), |ctx| {
+        for i in ctx.range.clone() {
+            ctx.tally(f.contains(keys[i]));
+        }
+    })
+}
+
+pub fn remove_batch(f: &dyn AmqFilter, device: &Device, keys: &[u64]) -> u64 {
+    device.launch(keys.len(), |ctx| {
+        for i in ctx.range.clone() {
+            ctx.tally(f.remove(keys[i]));
+        }
+    })
+}
+
+/// Empirical FPR measurement (§5.3 protocol): query `probes` keys known
+/// to be absent; the hit fraction is the false-positive rate.
+pub fn empirical_fpr(f: &dyn AmqFilter, device: &Device, negative_probes: &[u64]) -> f64 {
+    let fp = contains_batch(f, device, negative_probes);
+    fp as f64 / negative_probes.len() as f64
+}
+
+impl<L: crate::filter::Layout> AmqFilter for crate::filter::CuckooFilter<L> {
+    fn name(&self) -> &'static str {
+        "cuckoo-gpu"
+    }
+
+    fn insert(&self, key: u64) -> bool {
+        CuckooFilterExt::insert(self, key)
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        crate::filter::CuckooFilter::contains(self, key)
+    }
+
+    fn remove(&self, key: u64) -> bool {
+        crate::filter::CuckooFilter::remove(self, key)
+    }
+
+    fn bytes(&self) -> usize {
+        crate::filter::CuckooFilter::bytes(self)
+    }
+
+    fn bits_per_entry(&self) -> f64 {
+        self.policy().effective_fp_bits() as f64
+    }
+}
+
+/// Disambiguation shim: `CuckooFilter::insert` returns `Result`, the trait
+/// wants `bool`.
+trait CuckooFilterExt {
+    fn insert(&self, key: u64) -> bool;
+}
+
+impl<L: crate::filter::Layout> CuckooFilterExt for crate::filter::CuckooFilter<L> {
+    fn insert(&self, key: u64) -> bool {
+        crate::filter::CuckooFilter::insert(self, key).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::{CuckooConfig, CuckooFilter, Fp16};
+
+    #[test]
+    fn cuckoo_through_trait_object() {
+        let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(1000)).unwrap();
+        let dyn_f: &dyn AmqFilter = &f;
+        assert!(dyn_f.insert(1));
+        assert!(dyn_f.contains(1));
+        assert!(dyn_f.remove(1));
+        assert!(!dyn_f.contains(1));
+        assert_eq!(dyn_f.name(), "cuckoo-gpu");
+        assert!(dyn_f.supports_delete());
+        assert_eq!(dyn_f.bits_per_entry(), 16.0);
+    }
+
+    #[test]
+    fn batched_trait_ops() {
+        let device = Device::with_workers(2);
+        let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(10_000)).unwrap();
+        let keys: Vec<u64> = (0..10_000u64).map(|i| crate::util::prng::mix64(i)).collect();
+        assert_eq!(insert_batch(&f, &device, &keys), 10_000);
+        assert_eq!(contains_batch(&f, &device, &keys), 10_000);
+        let negatives: Vec<u64> = (0..10_000u64)
+            .map(|i| crate::util::prng::mix64(i + (1 << 40)))
+            .collect();
+        let fpr = empirical_fpr(&f, &device, &negatives);
+        assert!(fpr < 0.02, "fp16 FPR should be tiny, got {fpr}");
+        assert_eq!(remove_batch(&f, &device, &keys), 10_000);
+    }
+}

@@ -1,0 +1,26 @@
+//! Reimplementations of the paper's five comparison structures (§5.1):
+//!
+//! | Paper baseline | Module | Character preserved |
+//! |---|---|---|
+//! | GPU Blocked Bloom filter (cuCollections/WarpCore) | [`bbf`] | append-only, one-block access per op |
+//! | Bulk Two-Choice filter (McCoy et al.) | [`tcf`] | power-of-two-choices + overflow stash, per-op occupancy comparison |
+//! | GPU Counting Quotient filter | [`gqf`]  | Robin-Hood shifting of sorted runs → serial dependencies |
+//! | Bucketed Cuckoo Hash Table (Awad et al.) | [`bcht`] | full 64-bit keys → ~4× the memory traffic |
+//! | Partitioned CPU Cuckoo filter (Schmidt et al.) | [`pcf`] | classic b=4 CPU layout behind partition locks |
+//!
+//! All implement [`AmqFilter`], so the benchmark harness treats them and
+//! [`crate::filter::CuckooFilter`] uniformly.
+
+pub mod common;
+pub mod bbf;
+pub mod tcf;
+pub mod gqf;
+pub mod bcht;
+pub mod pcf;
+
+pub use bbf::BlockedBloomFilter;
+pub use bcht::BuckCuckooHashTable;
+pub use common::AmqFilter;
+pub use gqf::QuotientFilter;
+pub use pcf::PartitionedCuckooFilter;
+pub use tcf::TwoChoiceFilter;

@@ -1,0 +1,291 @@
+//! Bulk Two-Choice Filter (TCF) baseline — McCoy, Hofmeyr, Yelick &
+//! Pandey (PPoPP'23), the paper's main dynamic GPU competitor (§3, §5.1).
+//!
+//! The TCF eliminates cuckoo-style eviction chains with the
+//! power-of-two-choices paradigm: a key has two candidate buckets and is
+//! placed in the *less loaded* one; if both are full it overflows into a
+//! small secondary stash. The original uses CUDA cooperative groups to
+//! load, sort and rewrite whole buckets in shared memory — the compute
+//! and intra-warp synchronisation overhead the paper blames for its
+//! stagnation on HBM3. We preserve that character: every insert reads
+//! both buckets in full (the occupancy comparison), and bucket
+//! mutations go through a per-bucket CAS loop over whole words.
+//!
+//! Layout: like the cuckoo table, fingerprints are packed into u64 words
+//! (16-bit tags, 16-slot buckets by default).
+
+use super::common::AmqFilter;
+use crate::filter::hash::{xxhash64_u64, DEFAULT_SEED};
+use crate::filter::swar::{first_lane, Fp16, Layout};
+use crate::filter::table::Table;
+use std::sync::Mutex;
+
+/// Stash capacity relative to the primary table (the TCF paper sizes the
+/// stash at a small constant fraction).
+const STASH_FRACTION: f64 = 0.01;
+
+pub struct TwoChoiceFilter {
+    table: Table,
+    num_buckets: usize,
+    #[allow(dead_code)] // geometry record, reported via bytes()
+    bucket_slots: usize,
+    seed: u64,
+    /// Overflow stash: a locked vector of full fingerprints (the GPU
+    /// version uses a cooperative hash table; a lock here is faithful to
+    /// its serialisation behaviour under contention).
+    stash: Mutex<Vec<u64>>,
+    stash_cap: usize,
+}
+
+type L = Fp16;
+
+impl TwoChoiceFilter {
+    pub fn with_capacity(capacity: usize) -> Self {
+        let slots = (capacity as f64 / 0.90).ceil() as usize; // TCF targets ~90%
+        let bucket_slots = 16usize;
+        let num_buckets = slots.div_ceil(bucket_slots).next_power_of_two().max(2);
+        Self::new(num_buckets, bucket_slots)
+    }
+
+    pub fn new(num_buckets: usize, bucket_slots: usize) -> Self {
+        assert!(num_buckets.is_power_of_two());
+        let words_per_bucket = bucket_slots / L::TAGS_PER_WORD as usize;
+        let stash_cap =
+            ((num_buckets * bucket_slots) as f64 * STASH_FRACTION).ceil() as usize + 16;
+        Self {
+            table: Table::new(num_buckets, words_per_bucket),
+            num_buckets,
+            bucket_slots,
+            seed: DEFAULT_SEED,
+            stash: Mutex::new(Vec::new()),
+            stash_cap,
+        }
+    }
+
+    /// Two independent bucket choices + tag. Unlike partial-key cuckoo
+    /// hashing the two indices are unrelated (no relocation ever happens),
+    /// and the stored tag identifies the key in either bucket or stash.
+    ///
+    /// The TCF's 16-bit slots are not all fingerprint: the PPoPP'23
+    /// design spends slot bits on metadata/counters, leaving ~12
+    /// discriminative bits — which is why the paper measures its FPR an
+    /// order of magnitude above the cuckoo filter's (Figure 4,
+    /// 0.35%–0.55%). We reproduce that: 13-bit effective tags in 16-bit
+    /// lanes (2·b·α·2^-13 ≈ 0.35%).
+    #[inline(always)]
+    fn plan(&self, key: u64) -> (usize, usize, u64) {
+        let h = xxhash64_u64(key, self.seed);
+        let mask = (self.num_buckets - 1) as u64;
+        let b1 = (h & mask) as usize;
+        let b2 = ((h >> 21) & mask) as usize;
+        let mut tag = (h >> 48) & 0x1FFF;
+        tag += (tag == 0) as u64;
+        (b1, b2, tag)
+    }
+
+    /// Full-bucket occupancy scan — the cooperative-group load the real
+    /// TCF performs per op.
+    #[inline]
+    fn occupancy(&self, bucket: usize) -> u32 {
+        let mut occ = 0;
+        for w in 0..self.table.words_per_bucket {
+            occ += L::count_occupied(self.table.load(self.table.word_index(bucket, w)));
+        }
+        occ
+    }
+
+    fn try_insert_bucket(&self, bucket: usize, tag: u64) -> bool {
+        for w in 0..self.table.words_per_bucket {
+            let idx = self.table.word_index(bucket, w);
+            let mut word = self.table.load_acquire(idx);
+            let mut mask = L::zero_mask(word);
+            while mask != 0 {
+                let lane = first_lane::<L>(mask);
+                match self.table.cas(idx, word, L::replace(word, lane, tag)) {
+                    Ok(()) => return true,
+                    Err(cur) => {
+                        word = cur;
+                        mask = L::zero_mask(word);
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    fn bucket_contains(&self, bucket: usize, tag: u64) -> bool {
+        (0..self.table.words_per_bucket)
+            .any(|w| L::contains_tag(self.table.load(self.table.word_index(bucket, w)), tag))
+    }
+
+    fn bucket_remove(&self, bucket: usize, tag: u64) -> bool {
+        for w in 0..self.table.words_per_bucket {
+            let idx = self.table.word_index(bucket, w);
+            let mut word = self.table.load_acquire(idx);
+            let mut mask = L::match_mask(word, tag);
+            while mask != 0 {
+                let lane = first_lane::<L>(mask);
+                match self.table.cas(idx, word, L::replace(word, lane, 0)) {
+                    Ok(()) => return true,
+                    Err(cur) => {
+                        word = cur;
+                        mask = L::match_mask(word, tag);
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    /// Stash key: bucket-qualified tag so different buckets don't alias.
+    #[inline(always)]
+    fn stash_token(b1: usize, tag: u64) -> u64 {
+        ((b1 as u64) << 16) | tag
+    }
+
+    pub fn stash_len(&self) -> usize {
+        self.stash.lock().unwrap().len()
+    }
+}
+
+impl AmqFilter for TwoChoiceFilter {
+    fn name(&self) -> &'static str {
+        "tcf"
+    }
+
+    fn insert(&self, key: u64) -> bool {
+        let (b1, b2, tag) = self.plan(key);
+        // Power of two choices: compare occupancy (two full bucket reads),
+        // then insert into the emptier bucket; tie → primary first.
+        let (first, second) = if self.occupancy(b1) <= self.occupancy(b2) {
+            (b1, b2)
+        } else {
+            (b2, b1)
+        };
+        if self.try_insert_bucket(first, tag) || self.try_insert_bucket(second, tag) {
+            return true;
+        }
+        // Overflow → stash.
+        let mut stash = self.stash.lock().unwrap();
+        if stash.len() >= self.stash_cap {
+            return false;
+        }
+        stash.push(Self::stash_token(b1, tag));
+        true
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        let (b1, b2, tag) = self.plan(key);
+        if self.bucket_contains(b1, tag) || self.bucket_contains(b2, tag) {
+            return true;
+        }
+        let tok = Self::stash_token(b1, tag);
+        self.stash.lock().unwrap().contains(&tok)
+    }
+
+    fn remove(&self, key: u64) -> bool {
+        let (b1, b2, tag) = self.plan(key);
+        if self.bucket_remove(b1, tag) || self.bucket_remove(b2, tag) {
+            return true;
+        }
+        let tok = Self::stash_token(b1, tag);
+        let mut stash = self.stash.lock().unwrap();
+        if let Some(pos) = stash.iter().position(|&t| t == tok) {
+            stash.swap_remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        self.table.bytes() + self.stash_cap * 8
+    }
+
+    fn bits_per_entry(&self) -> f64 {
+        16.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::mix64;
+
+    fn keys(n: usize, stream: u64) -> Vec<u64> {
+        (0..n as u64).map(|i| mix64(i ^ (stream << 44))).collect()
+    }
+
+    #[test]
+    fn insert_query_delete() {
+        let f = TwoChoiceFilter::with_capacity(10_000);
+        let ks = keys(10_000, 1);
+        for &k in &ks {
+            assert!(f.insert(k));
+        }
+        for &k in &ks {
+            assert!(f.contains(k));
+        }
+        // 13-bit tags collide occasionally: deleting key A may consume
+        // key B's matching copy (standard AMQ false-delete semantics), so
+        // a handful of removes may miss. Require ≥99.5% success and a
+        // near-empty filter afterwards.
+        let removed = ks.iter().filter(|&&k| f.remove(k)).count();
+        assert!(removed >= 9_950, "removed only {removed}");
+        let residue = ks.iter().filter(|&&k| f.contains(k)).count();
+        assert!(residue <= 100, "residue {residue}");
+    }
+
+    #[test]
+    fn overflow_goes_to_stash() {
+        // Tiny table to force overflow.
+        let f = TwoChoiceFilter::new(2, 16); // 32 slots
+        let ks = keys(40, 2);
+        let mut ok = 0;
+        for &k in &ks {
+            if f.insert(k) {
+                ok += 1;
+            }
+        }
+        assert!(ok > 32, "stash should absorb some overflow");
+        assert!(f.stash_len() > 0);
+        // Everything accepted must be findable.
+        let found = ks.iter().filter(|&&k| f.contains(k)).count();
+        assert!(found >= ok);
+    }
+
+    #[test]
+    fn balances_load() {
+        let f = TwoChoiceFilter::with_capacity(100_000);
+        for k in keys(100_000, 3) {
+            assert!(f.insert(k));
+        }
+        // Two-choice placement at 90% target: stash stays small.
+        assert!(f.stash_len() < 1000, "stash={}", f.stash_len());
+    }
+
+    #[test]
+    fn fpr_order_of_magnitude() {
+        // Paper Fig. 4: TCF FPR ~0.35%–0.55% (worse than cuckoo fp16
+        // because only 16 tag bits minus bucket entropy are discriminative).
+        let f = TwoChoiceFilter::with_capacity(200_000);
+        for k in keys(200_000, 4) {
+            f.insert(k);
+        }
+        let probes = keys(200_000, 555);
+        let fp = probes.iter().filter(|&&k| f.contains(k)).count();
+        let fpr = fp as f64 / probes.len() as f64;
+        assert!(fpr < 0.02, "fpr={fpr}");
+    }
+
+    #[test]
+    fn concurrent_batch() {
+        use crate::device::Device;
+        let f = TwoChoiceFilter::with_capacity(50_000);
+        let d = Device::with_workers(8);
+        let ks = keys(50_000, 5);
+        let ok = super::super::common::insert_batch(&f, &d, &ks);
+        assert_eq!(ok, 50_000);
+        assert_eq!(super::super::common::contains_batch(&f, &d, &ks), 50_000);
+    }
+}

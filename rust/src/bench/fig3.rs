@@ -1,0 +1,313 @@
+//! Figure 3: insert / query(+/−) / delete throughput for every filter,
+//! L2-resident and DRAM-resident scenarios, 95% target load factor.
+//!
+//! Two result columns per configuration:
+//! * **measured** — real wall-clock throughput of this host's lock-free
+//!   execution through the batch device (B elem/s);
+//! * **est-GH200 / est-RTX** — the gpusim model's device estimates
+//!   (System B / System A). For our cuckoo filter the model is fed the
+//!   *measured* access trace; baselines use their analytic access models
+//!   (gpusim::filters).
+//!
+//! Paper shapes to look for: cuckoo ≫ TCF/GQF everywhere; GBBF leads
+//! insert; cuckoo rivals GBBF on positive queries (beats it L2-resident);
+//! negative queries cost ~2× in DRAM; BCHT pays ~4× traffic; PCF (CPU)
+//! is orders of magnitude behind the GPU estimates.
+
+use super::{fmt_tput, BenchOpts, Csv, Table};
+use crate::baselines::{
+    common, AmqFilter, BlockedBloomFilter, BuckCuckooHashTable, PartitionedCuckooFilter,
+    QuotientFilter, TwoChoiceFilter,
+};
+use crate::device::Device;
+use crate::filter::{CuckooConfig, CuckooFilter, Fp16};
+use crate::gpusim::filters as fmodels;
+use crate::gpusim::{estimate, OpClass, OpStats, Residency, GH200, RTX_PRO_6000, XEON_W9_DDR5};
+use crate::workload;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    Cuckoo,
+    Gbbf,
+    Tcf,
+    Gqf,
+    Bcht,
+    Pcf,
+}
+
+pub const ALL_KINDS: [Kind; 6] = [
+    Kind::Cuckoo,
+    Kind::Gbbf,
+    Kind::Tcf,
+    Kind::Gqf,
+    Kind::Bcht,
+    Kind::Pcf,
+];
+
+impl Kind {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Cuckoo => "cuckoo-gpu",
+            Kind::Gbbf => "gbbf",
+            Kind::Tcf => "tcf",
+            Kind::Gqf => "gqf",
+            Kind::Bcht => "bcht",
+            Kind::Pcf => "pcf",
+        }
+    }
+
+    /// Build sized for `capacity` keys (≈95% of the scenario's slots).
+    pub fn build(self, capacity: usize) -> Box<dyn AmqFilter> {
+        match self {
+            Kind::Cuckoo => Box::new(
+                CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(capacity)).unwrap(),
+            ),
+            Kind::Gbbf => Box::new(BlockedBloomFilter::with_capacity(capacity, 16.0)),
+            Kind::Tcf => Box::new(TwoChoiceFilter::with_capacity(capacity)),
+            Kind::Gqf => Box::new(QuotientFilter::with_capacity(capacity)),
+            Kind::Bcht => Box::new(BuckCuckooHashTable::with_capacity(capacity)),
+            Kind::Pcf => Box::new(PartitionedCuckooFilter::with_capacity(capacity)),
+        }
+    }
+
+    /// gpusim access model for this structure.
+    fn model(self, op: OpClass, alpha: f64, slots: usize) -> fmodels::FilterOpModel {
+        match self {
+            Kind::Cuckoo => fmodels::cuckoo(op, alpha, true),
+            Kind::Gbbf => fmodels::bbf(op, alpha),
+            Kind::Tcf => fmodels::tcf(op, alpha),
+            Kind::Gqf => fmodels::gqf(op, alpha, slots),
+            Kind::Bcht => fmodels::bcht(op, alpha),
+            Kind::Pcf => fmodels::pcf(op, alpha),
+        }
+    }
+}
+
+const ALPHA: f64 = 0.95;
+
+struct Row {
+    scenario: &'static str,
+    filter: &'static str,
+    op: &'static str,
+    measured: f64,
+    est_b: f64,
+    est_a: f64,
+}
+
+pub fn run(opts: &BenchOpts) {
+    println!("== Figure 3: throughput, all filters, 95% load ==");
+    println!(
+        "   scales: L2-resident {} slots, DRAM-resident {} slots, {} workers, {} runs",
+        opts.l2_slots, opts.dram_slots, opts.workers, opts.runs
+    );
+    let device = Device::with_workers(opts.workers);
+    let mut rows = Vec::new();
+
+    for (scenario, slots) in [("L2", opts.l2_slots), ("DRAM", opts.dram_slots)] {
+        let residency = if scenario == "L2" {
+            Residency::L2
+        } else {
+            Residency::Dram
+        };
+        // The paper's scenario is defined by the *paper's* slot counts;
+        // estimates always use those (2^22 / 2^28) regardless of the
+        // host-scaled measured size.
+        let paper_slots = if scenario == "L2" { 1 << 22 } else { 1 << 28 };
+        let capacity = (slots as f64 * ALPHA) as usize;
+        let insert_keys = workload::insert_keys(capacity, 0xF16_3 + slots as u64);
+        let n_probe = capacity.min(1 << 22);
+        let pos = workload::positive_probes(&insert_keys, n_probe, 11);
+        let neg = workload::negative_probes(n_probe, 12);
+
+        for kind in ALL_KINDS {
+            // ---- measured -------------------------------------------
+            let filter = std::cell::RefCell::new(kind.build(capacity));
+            // insert (rebuild per run)
+            let t_insert = super::measure_throughput(
+                capacity,
+                opts.runs,
+                || *filter.borrow_mut() = kind.build(capacity),
+                || {
+                    common::insert_batch(filter.borrow().as_ref(), &device, &insert_keys);
+                },
+            );
+            // positive / negative queries over the filled filter
+            let t_qpos = super::measure_throughput(n_probe, opts.runs, || {}, || {
+                common::contains_batch(filter.borrow().as_ref(), &device, &pos);
+            });
+            let t_qneg = super::measure_throughput(n_probe, opts.runs, || {}, || {
+                common::contains_batch(filter.borrow().as_ref(), &device, &neg);
+            });
+            // delete (refill between runs)
+            let t_del = if filter.borrow().supports_delete() {
+                super::measure_throughput(
+                    capacity,
+                    1,
+                    || {},
+                    || {
+                        common::remove_batch(filter.borrow().as_ref(), &device, &insert_keys);
+                    },
+                )
+            } else {
+                f64::NAN
+            };
+
+            // ---- gpusim estimates ------------------------------------
+            // Cuckoo insert/query use measured traces; everything else
+            // analytic.
+            let trace_stats = if kind == Kind::Cuckoo {
+                Some(trace_cuckoo(&device, slots, capacity))
+            } else {
+                None
+            };
+            for (op_name, op, measured) in [
+                ("insert", OpClass::Insert, t_insert),
+                ("query+", OpClass::QueryPositive, t_qpos),
+                ("query-", OpClass::QueryNegative, t_qneg),
+                ("delete", OpClass::Delete, t_del),
+            ] {
+                if measured.is_nan() && kind == Kind::Gbbf {
+                    // GBBF has no delete — the paper omits the bar.
+                    continue;
+                }
+                let (est_b, est_a) = match (&trace_stats, kind) {
+                    (Some(tr), Kind::Cuckoo) => {
+                        let stats = tr.get(&op).cloned().unwrap_or_else(|| {
+                            kind.model(op, ALPHA, paper_slots).stats
+                        });
+                        (
+                            estimate(&GH200, residency, &stats).b_ops,
+                            estimate(&RTX_PRO_6000, residency, &stats).b_ops,
+                        )
+                    }
+                    (_, Kind::Pcf) => {
+                        // PCF runs on System C (Xeon) in the paper.
+                        let m = kind.model(op, ALPHA, paper_slots);
+                        let e = fmodels::estimate_capped(&XEON_W9_DDR5, residency, &m).b_ops;
+                        (e, e)
+                    }
+                    _ => {
+                        let m = kind.model(op, ALPHA, paper_slots);
+                        (
+                            fmodels::estimate_capped(&GH200, residency, &m).b_ops,
+                            fmodels::estimate_capped(&RTX_PRO_6000, residency, &m).b_ops,
+                        )
+                    }
+                };
+                rows.push(Row {
+                    scenario,
+                    filter: kind.name(),
+                    op: op_name,
+                    measured,
+                    est_b,
+                    est_a,
+                });
+            }
+        }
+    }
+
+    // ---- output -------------------------------------------------------
+    let table = Table::new(&[
+        "scenario", "filter", "op", "measured", "est-GH200", "est-RTX6000",
+    ]);
+    let mut csv = Csv::create(
+        &opts.out_dir,
+        "fig3_throughput.csv",
+        "scenario,filter,op,measured_belem_s,est_gh200_belem_s,est_rtx6000_belem_s",
+    )
+    .expect("csv");
+    for r in &rows {
+        table.print_row(&[
+            r.scenario.to_string(),
+            r.filter.to_string(),
+            r.op.to_string(),
+            fmt_tput(r.measured),
+            fmt_tput(r.est_b),
+            fmt_tput(r.est_a),
+        ]);
+        csv.row(&[
+            r.scenario.to_string(),
+            r.filter.to_string(),
+            r.op.to_string(),
+            format!("{}", r.measured),
+            format!("{}", r.est_b),
+            format!("{}", r.est_a),
+        ]);
+    }
+
+    // Headline ratios (the paper's claims), from the estimates.
+    print_ratio(&rows, "L2", "insert", "cuckoo-gpu", "gqf", "378x (paper)");
+    print_ratio(&rows, "L2", "insert", "cuckoo-gpu", "tcf", "4.1x (paper)");
+    print_ratio(&rows, "L2", "query+", "cuckoo-gpu", "gqf", "6x (paper)");
+    print_ratio(&rows, "L2", "query+", "cuckoo-gpu", "tcf", "34.7x (paper)");
+    print_ratio(&rows, "L2", "delete", "cuckoo-gpu", "gqf", "258x (paper)");
+    print_ratio(&rows, "L2", "delete", "cuckoo-gpu", "tcf", "107x (paper)");
+    print_ratio(&rows, "DRAM", "insert", "cuckoo-gpu", "gqf", "10x (paper)");
+    print_ratio(&rows, "DRAM", "insert", "cuckoo-gpu", "tcf", "2.1x (paper)");
+    print_ratio(&rows, "DRAM", "query+", "cuckoo-gpu", "gbbf", "0.90x (paper)");
+}
+
+fn print_ratio(rows: &[Row], scenario: &str, op: &str, a: &str, b: &str, paper: &str) {
+    let find = |f: &str| {
+        rows.iter()
+            .find(|r| r.scenario == scenario && r.op == op && r.filter == f)
+            .map(|r| r.est_b)
+    };
+    if let (Some(x), Some(y)) = (find(a), find(b)) {
+        println!(
+            "   {scenario} {op}: {a}/{b} = {:.1}x (model est, System B)   [{paper}]",
+            x / y
+        );
+    }
+}
+
+/// Measured per-op access statistics for the cuckoo filter at this scale
+/// (drives the gpusim estimate for our filter).
+fn trace_cuckoo(
+    device: &Device,
+    slots: usize,
+    capacity: usize,
+) -> std::collections::HashMap<OpClass, OpStats> {
+    // Trace at a reduced size for speed — access *statistics* converge
+    // fast with scale.
+    let t_slots = slots.min(1 << 18);
+    let t_cap = ((t_slots as f64 * ALPHA) as usize).min(capacity);
+    let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(t_cap)).unwrap();
+    let keys = workload::insert_keys(t_cap, 0x7A3);
+    let mut out = std::collections::HashMap::new();
+
+    let (_, tr) = f.insert_batch_traced(device, &keys);
+    out.insert(OpClass::Insert, OpStats::from_trace(&tr, t_cap));
+
+    let pos = workload::positive_probes(&keys, t_cap, 21);
+    let (_, tr) = f.contains_batch_traced(device, &pos);
+    out.insert(OpClass::QueryPositive, OpStats::from_trace(&tr, t_cap));
+
+    let neg = workload::negative_probes(t_cap, 22);
+    let (_, tr) = f.contains_batch_traced(device, &neg);
+    out.insert(OpClass::QueryNegative, OpStats::from_trace(&tr, t_cap));
+
+    let (_, tr) = f.remove_batch_traced(device, &keys);
+    out.insert(OpClass::Delete, OpStats::from_trace(&tr, t_cap));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_tiny() {
+        // The full figure at toy scale must run end to end.
+        let opts = BenchOpts {
+            l2_slots: 1 << 12,
+            dram_slots: 1 << 13,
+            runs: 1,
+            warmup: 0,
+            workers: 2,
+            out_dir: std::env::temp_dir().join("fig3_test"),
+        };
+        run(&opts);
+        assert!(opts.out_dir.join("fig3_throughput.csv").exists());
+    }
+}

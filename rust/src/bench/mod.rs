@@ -1,0 +1,188 @@
+//! The benchmark harness: measurement loop, paper-style table output and
+//! CSV capture. One submodule per paper artifact (Figures 3–8); each is
+//! runnable both from the `repro` CLI (`repro bench fig3`) and from
+//! `cargo bench` (thin wrappers in `rust/benches/`).
+//!
+//! Protocol follows §5.2: several internal warm-up iterations, multiple
+//! independent runs, median reported, throughput in B elem/s.
+
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+
+use crate::util::stats::median;
+use crate::util::Timer;
+use std::io::Write;
+
+/// Common scale / effort knobs shared by the figure benches.
+#[derive(Clone, Debug)]
+pub struct BenchOpts {
+    /// L2-resident slot count (paper: 2^22).
+    pub l2_slots: usize,
+    /// DRAM-resident slot count (paper: 2^28).
+    pub dram_slots: usize,
+    /// Independent runs per configuration (median reported).
+    pub runs: usize,
+    /// Warm-up iterations inside each run.
+    pub warmup: usize,
+    /// Worker threads for the batch device.
+    pub workers: usize,
+    /// Output directory for CSV capture.
+    pub out_dir: std::path::PathBuf,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            // Host-scaled defaults; --paper-scale selects the paper's
+            // 2^22 / 2^28 sizes (see DESIGN.md §2 substitutions).
+            l2_slots: 1 << 20,
+            dram_slots: 1 << 22,
+            runs: 3,
+            warmup: 1,
+            workers: crate::device::default_workers(),
+            out_dir: "bench_out".into(),
+        }
+    }
+}
+
+impl BenchOpts {
+    pub fn from_args(args: &crate::util::cli::Args) -> Self {
+        let mut o = Self::default();
+        if args.has("paper-scale") {
+            o.l2_slots = 1 << 22;
+            o.dram_slots = 1 << 28;
+        }
+        o.l2_slots = args.get_usize("l2-slots", o.l2_slots);
+        o.dram_slots = args.get_usize("dram-slots", o.dram_slots);
+        o.runs = args.get_usize("runs", o.runs);
+        o.workers = args.get_usize("workers", o.workers);
+        if let Some(d) = args.get("out-dir") {
+            o.out_dir = d.into();
+        }
+        o
+    }
+
+    /// Quick profile for `cargo bench` wrappers and CI smoke runs.
+    pub fn quick() -> Self {
+        Self {
+            l2_slots: 1 << 16,
+            dram_slots: 1 << 18,
+            runs: 1,
+            warmup: 0,
+            ..Self::default()
+        }
+    }
+}
+
+/// Median-of-runs throughput of `f`, which processes `elems` items per
+/// invocation; `setup` rebuilds state before each run.
+pub fn measure_throughput(
+    elems: usize,
+    runs: usize,
+    mut setup: impl FnMut(),
+    mut f: impl FnMut(),
+) -> f64 {
+    let mut samples = Vec::with_capacity(runs);
+    for _ in 0..runs.max(1) {
+        setup();
+        let t = Timer::new();
+        f();
+        let secs = t.elapsed_secs();
+        samples.push(elems as f64 / secs / 1e9);
+    }
+    median(&samples)
+}
+
+/// CSV capture: one file per figure under `out_dir`.
+pub struct Csv {
+    file: std::fs::File,
+}
+
+impl Csv {
+    pub fn create(dir: &std::path::Path, name: &str, header: &str) -> std::io::Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        let mut file = std::fs::File::create(dir.join(name))?;
+        writeln!(file, "{header}")?;
+        Ok(Self { file })
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        let _ = writeln!(self.file, "{}", fields.join(","));
+    }
+}
+
+/// Pretty table printer (paper-style rows on stdout).
+pub struct Table {
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        let widths: Vec<usize> = header.iter().map(|h| h.len().max(10)).collect();
+        let t = Self { widths };
+        t.print_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+        println!(
+            "{}",
+            t.widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("-+-")
+        );
+        t
+    }
+
+    pub fn print_row(&self, fields: &[String]) {
+        let cells: Vec<String> = fields
+            .iter()
+            .zip(&self.widths)
+            .map(|(f, w)| format!("{f:>w$}"))
+            .collect();
+        println!("{}", cells.join(" | "));
+    }
+}
+
+/// Format a throughput in the paper's unit (B elem/s).
+pub fn fmt_tput(b_elem_s: f64) -> String {
+    if b_elem_s.is_nan() {
+        "-".to_string()
+    } else if b_elem_s >= 0.01 {
+        format!("{b_elem_s:.3}")
+    } else {
+        format!("{:.1}e-3", b_elem_s * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_is_positive() {
+        let t = measure_throughput(1_000_000, 3, || {}, || {
+            std::hint::black_box((0..1000u64).sum::<u64>());
+        });
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn csv_writes() {
+        let dir = std::env::temp_dir().join("cuckoo_csv_test");
+        let mut c = Csv::create(&dir, "t.csv", "a,b").unwrap();
+        c.row(&["1".into(), "2".into()]);
+        drop(c);
+        let text = std::fs::read_to_string(dir.join("t.csv")).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn fmt_tput_ranges() {
+        assert_eq!(fmt_tput(1.2345), "1.234");
+        assert_eq!(fmt_tput(0.0005), "0.5e-3");
+        assert_eq!(fmt_tput(f64::NAN), "-");
+    }
+}

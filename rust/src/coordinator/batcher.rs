@@ -1,0 +1,250 @@
+//! Dynamic batching: small client requests accumulate into device-sized
+//! launches (the GPU analogue: kernel launches amortise over batches, so
+//! the serving layer must aggregate).
+//!
+//! Requests of the *same* operation kind coalesce; a flush triggers when
+//! the pending batch reaches `max_keys` or the oldest request exceeds
+//! `max_delay`. Mixed kinds flush in arrival order of their groups,
+//! which preserves the epoch guard's query/mutation phase separation and
+//! keeps per-request ordering within a kind.
+
+use super::engine::Engine;
+use super::request::{OpKind, Request, Response};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Flush when a kind's pending keys reach this count.
+    pub max_keys: usize,
+    /// Flush when the oldest pending request is this old.
+    pub max_delay: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_keys: 1 << 16,
+            max_delay: Duration::from_millis(2),
+        }
+    }
+}
+
+struct PendingGroup {
+    op: OpKind,
+    keys: Vec<u64>,
+    /// (client, range in `keys`) so responses can be scattered back.
+    clients: Vec<(mpsc::Sender<Response>, std::ops::Range<usize>)>,
+    oldest: Instant,
+}
+
+#[derive(Default)]
+struct QueueState {
+    groups: Vec<PendingGroup>,
+    shutdown: bool,
+}
+
+/// The dynamic batcher. `submit` is thread-safe; a background flusher
+/// thread drives the engine.
+pub struct Batcher {
+    state: Arc<(Mutex<QueueState>, Condvar)>,
+    cfg: BatcherConfig,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn new(engine: Arc<Engine>, cfg: BatcherConfig) -> Self {
+        let state = Arc::new((Mutex::new(QueueState::default()), Condvar::new()));
+        let worker_state = state.clone();
+        let worker = std::thread::spawn(move || Self::run_flusher(worker_state, engine, cfg));
+        Self {
+            state,
+            cfg,
+            worker: Some(worker),
+        }
+    }
+
+    /// Enqueue a request; the returned receiver yields the response after
+    /// the batch it lands in is flushed.
+    pub fn submit(&self, req: Request) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        debug_assert!(!st.shutdown);
+        // Join the newest group of the same kind, else open a new group.
+        let join_last = matches!(st.groups.last(), Some(g) if g.op == req.op && g.keys.len() < self.cfg.max_keys);
+        if join_last {
+            let g = st.groups.last_mut().unwrap();
+            let start = g.keys.len();
+            g.keys.extend_from_slice(&req.keys);
+            g.clients.push((tx, start..g.keys.len()));
+        } else {
+            st.groups.push(PendingGroup {
+                op: req.op,
+                keys: req.keys.clone(),
+                clients: vec![(tx, 0..req.keys.len())],
+                oldest: Instant::now(),
+            });
+        }
+        cv.notify_one();
+        rx
+    }
+
+    fn run_flusher(
+        state: Arc<(Mutex<QueueState>, Condvar)>,
+        engine: Arc<Engine>,
+        cfg: BatcherConfig,
+    ) {
+        let (lock, cv) = &*state;
+        loop {
+            let group = {
+                let mut st = lock.lock().unwrap();
+                loop {
+                    if st.shutdown && st.groups.is_empty() {
+                        return;
+                    }
+                    // Flush-ready: full group, aged group, or shutdown drain.
+                    let ready = !st.groups.is_empty()
+                        && (st.shutdown
+                            || st.groups[0].keys.len() >= cfg.max_keys
+                            || st.groups[0].oldest.elapsed() >= cfg.max_delay
+                            || st.groups.len() > 1);
+                    if ready {
+                        break st.groups.remove(0);
+                    }
+                    let wait = if st.groups.is_empty() {
+                        Duration::from_millis(50)
+                    } else {
+                        cfg.max_delay
+                            .saturating_sub(st.groups[0].oldest.elapsed())
+                            .max(Duration::from_micros(50))
+                    };
+                    st = cv.wait_timeout(st, wait).unwrap().0;
+                }
+            };
+
+            engine.metrics.record_batch();
+            let resp = engine.execute(&Request::new(group.op, group.keys));
+            for (tx, range) in group.clients {
+                let _ = tx.send(Response {
+                    op: resp.op,
+                    outcomes: resp.outcomes[range.clone()].to_vec(),
+                    successes: resp.outcomes[range].iter().filter(|&&b| b).count() as u64,
+                });
+            }
+        }
+    }
+
+    /// Submit and wait (convenience for sync callers).
+    pub fn call(&self, req: Request) -> Response {
+        self.submit(req).recv().expect("batcher dropped response")
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        {
+            let (lock, cv) = &*self.state;
+            lock.lock().unwrap().shutdown = true;
+            cv.notify_all();
+        }
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineConfig;
+    use crate::util::prng::mix64;
+
+    fn engine() -> Arc<Engine> {
+        Arc::new(
+            Engine::new(EngineConfig {
+                capacity: 100_000,
+                shards: 1,
+                workers: 2,
+                artifacts_dir: None,
+            })
+            .unwrap(),
+        )
+    }
+
+    fn keys(n: usize, stream: u64) -> Vec<u64> {
+        (0..n as u64).map(|i| mix64(i ^ (stream << 37))).collect()
+    }
+
+    #[test]
+    fn single_request_flushes_by_deadline() {
+        let b = Batcher::new(
+            engine(),
+            BatcherConfig {
+                max_keys: 1 << 20, // force deadline path
+                max_delay: Duration::from_millis(1),
+            },
+        );
+        let r = b.call(Request::new(OpKind::Insert, keys(100, 1)));
+        assert_eq!(r.successes, 100);
+    }
+
+    #[test]
+    fn many_small_requests_coalesce() {
+        let e = engine();
+        let b = Batcher::new(
+            e.clone(),
+            BatcherConfig {
+                max_keys: 1000,
+                max_delay: Duration::from_millis(20),
+            },
+        );
+        // 50 concurrent clients × 100 keys → should flush as few batches.
+        let receivers: Vec<_> = (0..50)
+            .map(|i| b.submit(Request::new(OpKind::Insert, keys(100, 100 + i))))
+            .collect();
+        let mut total = 0;
+        for rx in receivers {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.outcomes.len(), 100);
+            total += resp.successes;
+        }
+        assert_eq!(total, 5000);
+        assert_eq!(e.len(), 5000);
+        // Coalescing actually happened: far fewer batches than requests.
+        assert!(
+            e.metrics.batches() < 25,
+            "batches = {}",
+            e.metrics.batches()
+        );
+    }
+
+    #[test]
+    fn per_client_outcomes_are_correctly_scattered() {
+        let e = engine();
+        let b = Batcher::new(e.clone(), BatcherConfig::default());
+        let present = keys(500, 7);
+        b.call(Request::new(OpKind::Insert, present.clone()));
+
+        // Two clients: one queries present keys, one absent keys; their
+        // responses must not be swapped or interleaved.
+        let rx1 = b.submit(Request::new(OpKind::Query, present[..100].to_vec()));
+        let rx2 = b.submit(Request::new(OpKind::Query, keys(100, 999)));
+        let r1 = rx1.recv().unwrap();
+        let r2 = rx2.recv().unwrap();
+        assert_eq!(r1.successes, 100);
+        assert!(r2.successes < 5);
+    }
+
+    #[test]
+    fn mixed_kinds_do_not_merge() {
+        let e = engine();
+        let b = Batcher::new(e.clone(), BatcherConfig::default());
+        let ks = keys(100, 8);
+        let rx_i = b.submit(Request::new(OpKind::Insert, ks.clone()));
+        let rx_q = b.submit(Request::new(OpKind::Query, ks.clone()));
+        assert_eq!(rx_i.recv().unwrap().op, OpKind::Insert);
+        assert_eq!(rx_q.recv().unwrap().op, OpKind::Query);
+    }
+}

@@ -1,0 +1,220 @@
+//! The servable engine: sharded filter + batch device + epoch guard +
+//! metrics (+ optional PJRT runtime on the query path).
+
+use super::epoch::EpochGuard;
+use super::metrics::Metrics;
+use super::request::{OpKind, Request, Response};
+use super::shard::ShardedFilter;
+use crate::device::Device;
+use crate::filter::Fp16;
+use crate::runtime::RuntimeHandle;
+use crate::util::Timer;
+
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Total key capacity across shards.
+    pub capacity: usize,
+    pub shards: usize,
+    pub workers: usize,
+    /// Artifacts directory for the PJRT query path (None = native only).
+    pub artifacts_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            capacity: 1 << 20,
+            shards: 1,
+            workers: crate::device::default_workers(),
+            artifacts_dir: None,
+        }
+    }
+}
+
+/// The engine serves batched requests over an fp16 sharded filter.
+pub struct Engine {
+    filter: ShardedFilter<Fp16>,
+    device: Device,
+    epoch: EpochGuard,
+    pub metrics: Metrics,
+    runtime: Option<RuntimeHandle>,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> anyhow::Result<Self> {
+        let filter = ShardedFilter::with_capacity(cfg.capacity, cfg.shards)?;
+        let runtime = match &cfg.artifacts_dir {
+            Some(dir) => {
+                let rt = RuntimeHandle::spawn(dir)?;
+                // The PJRT artifact is usable only if the single shard
+                // matches its static geometry exactly.
+                let g = &rt.geometry;
+                let usable = cfg.shards == 1
+                    && filter.shard(0).config().num_buckets == g.num_buckets
+                    && filter.shard(0).config().bucket_slots == g.bucket_slots
+                    && filter.shard(0).config().seed == g.seed;
+                if usable {
+                    Some(rt)
+                } else {
+                    log::warn!(
+                        "artifacts geometry mismatch; PJRT query path disabled \
+                         (need shards=1, buckets={}, slots={}, seed={})",
+                        g.num_buckets,
+                        g.bucket_slots,
+                        g.seed
+                    );
+                    None
+                }
+            }
+            None => None,
+        };
+        Ok(Self {
+            filter,
+            device: Device::with_workers(cfg.workers),
+            epoch: EpochGuard::new(),
+            metrics: Metrics::new(),
+            runtime,
+        })
+    }
+
+    /// Build an engine whose single shard matches the artifacts exactly,
+    /// so the PJRT path is active (used by the filter_server example).
+    pub fn with_pjrt(dir: impl Into<std::path::PathBuf>, workers: usize) -> anyhow::Result<Self> {
+        let dir = dir.into();
+        let rt = RuntimeHandle::spawn(&dir)?;
+        let g = rt.geometry.clone();
+        let cfg = crate::filter::CuckooConfig::new(g.num_buckets)
+            .bucket_slots(g.bucket_slots)
+            .seed(g.seed);
+        let filter_inner = crate::filter::CuckooFilter::<Fp16>::new(cfg)?;
+        let filter = ShardedFilter::from_single(filter_inner);
+        Ok(Self {
+            filter,
+            device: Device::with_workers(workers),
+            epoch: EpochGuard::new(),
+            metrics: Metrics::new(),
+            runtime: Some(rt),
+        })
+    }
+
+    pub fn pjrt_active(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.filter.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.filter.is_empty()
+    }
+
+    /// Execute one batched request (the batcher calls this per flush).
+    pub fn execute(&self, req: &Request) -> Response {
+        let t = Timer::new();
+        let n = req.keys.len();
+        let mut outcomes = vec![false; n];
+        let successes = match req.op {
+            OpKind::Insert => {
+                let _tok = self.epoch.begin_mutation();
+                self.device
+                    .launch_map(|i| self.filter.insert(req.keys[i]).is_ok(), &mut outcomes)
+            }
+            OpKind::Delete => {
+                let _tok = self.epoch.begin_mutation();
+                self.device
+                    .launch_map(|i| self.filter.remove(req.keys[i]), &mut outcomes)
+            }
+            OpKind::Query => {
+                let _tok = self.epoch.begin_query();
+                match &self.runtime {
+                    Some(rt) => {
+                        // AOT path: snapshot + PJRT batches. Safe inside
+                        // the query phase (no concurrent mutation).
+                        let snapshot = std::sync::Arc::new(self.filter.shard(0).table().snapshot());
+                        match rt.query_all(snapshot, req.keys.clone()) {
+                            Ok(flags) => {
+                                outcomes.copy_from_slice(&flags);
+                                flags.iter().filter(|&&b| b).count() as u64
+                            }
+                            Err(e) => {
+                                log::error!("PJRT query failed, native fallback: {e}");
+                                self.device.launch_map(
+                                    |i| self.filter.contains(req.keys[i]),
+                                    &mut outcomes,
+                                )
+                            }
+                        }
+                    }
+                    None => self
+                        .device
+                        .launch_map(|i| self.filter.contains(req.keys[i]), &mut outcomes),
+                }
+            }
+        };
+        self.metrics.record(req.op, n, successes, t.elapsed_ns());
+        Response {
+            op: req.op,
+            outcomes,
+            successes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::mix64;
+
+    fn keys(n: usize, stream: u64) -> Vec<u64> {
+        (0..n as u64).map(|i| mix64(i ^ (stream << 41))).collect()
+    }
+
+    #[test]
+    fn engine_native_roundtrip() {
+        let e = Engine::new(EngineConfig {
+            capacity: 10_000,
+            shards: 2,
+            workers: 4,
+            artifacts_dir: None,
+        })
+        .unwrap();
+        let ks = keys(10_000, 1);
+
+        let r = e.execute(&Request::new(OpKind::Insert, ks.clone()));
+        assert_eq!(r.successes, 10_000);
+        assert!(r.outcomes.iter().all(|&b| b));
+        assert_eq!(e.len(), 10_000);
+
+        let r = e.execute(&Request::new(OpKind::Query, ks.clone()));
+        assert_eq!(r.successes, 10_000);
+
+        let r = e.execute(&Request::new(OpKind::Delete, ks.clone()));
+        assert_eq!(r.successes, 10_000);
+        assert_eq!(e.len(), 0);
+
+        assert_eq!(e.metrics.requests(OpKind::Insert), 1);
+        assert_eq!(e.metrics.keys(OpKind::Query), 10_000);
+    }
+
+    #[test]
+    fn engine_mixed_outcomes() {
+        let e = Engine::new(EngineConfig {
+            capacity: 1_000,
+            shards: 1,
+            workers: 2,
+            artifacts_dir: None,
+        })
+        .unwrap();
+        let present = keys(500, 2);
+        e.execute(&Request::new(OpKind::Insert, present.clone()));
+        let absent = keys(500, 999);
+        let mut probe = present.clone();
+        probe.extend(&absent);
+        let r = e.execute(&Request::new(OpKind::Query, probe));
+        assert!(r.outcomes[..500].iter().all(|&b| b));
+        // Nearly all absents must miss (fp16 FPR is tiny).
+        let false_pos = r.outcomes[500..].iter().filter(|&&b| b).count();
+        assert!(false_pos < 5);
+    }
+}

@@ -1,0 +1,167 @@
+//! Phase separation between queries and mutations.
+//!
+//! The paper's query kernel uses non-atomic, non-coherent vectorised
+//! loads and therefore "cannot safely execute concurrently with
+//! insertions or deletions" (§4.4). On the GPU this is enforced by
+//! stream ordering between kernel launches; here an [`EpochGuard`] —
+//! effectively a phase-fair reader-writer latch where *both* sides are
+//! multi-entry — serialises query phases against mutation phases while
+//! allowing unlimited concurrency within a phase.
+
+use std::sync::{Condvar, Mutex};
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Phase {
+    Idle,
+    Query(usize),
+    Mutate(usize),
+}
+
+/// Multi-entry two-phase guard.
+pub struct EpochGuard {
+    state: Mutex<Phase>,
+    cv: Condvar,
+}
+
+impl Default for EpochGuard {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EpochGuard {
+    pub fn new() -> Self {
+        Self {
+            state: Mutex::new(Phase::Idle),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enter a query phase (blocks while a mutation phase is active).
+    pub fn begin_query(&self) -> PhaseToken<'_> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match *st {
+                Phase::Idle => {
+                    *st = Phase::Query(1);
+                    break;
+                }
+                Phase::Query(n) => {
+                    *st = Phase::Query(n + 1);
+                    break;
+                }
+                Phase::Mutate(_) => st = self.cv.wait(st).unwrap(),
+            }
+        }
+        PhaseToken {
+            guard: self,
+            mutation: false,
+        }
+    }
+
+    /// Enter a mutation phase (blocks while a query phase is active).
+    pub fn begin_mutation(&self) -> PhaseToken<'_> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match *st {
+                Phase::Idle => {
+                    *st = Phase::Mutate(1);
+                    break;
+                }
+                Phase::Mutate(n) => {
+                    *st = Phase::Mutate(n + 1);
+                    break;
+                }
+                Phase::Query(_) => st = self.cv.wait(st).unwrap(),
+            }
+        }
+        PhaseToken {
+            guard: self,
+            mutation: true,
+        }
+    }
+
+    fn exit(&self, mutation: bool) {
+        let mut st = self.state.lock().unwrap();
+        *st = match (*st, mutation) {
+            (Phase::Mutate(1), true) | (Phase::Query(1), false) => Phase::Idle,
+            (Phase::Mutate(n), true) => Phase::Mutate(n - 1),
+            (Phase::Query(n), false) => Phase::Query(n - 1),
+            other => unreachable!("epoch state corrupted: {other:?}"),
+        };
+        if *st == Phase::Idle {
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// RAII token for an active phase.
+pub struct PhaseToken<'a> {
+    guard: &'a EpochGuard,
+    mutation: bool,
+}
+
+impl Drop for PhaseToken<'_> {
+    fn drop(&mut self) {
+        self.guard.exit(self.mutation);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn same_phase_is_concurrent() {
+        let g = EpochGuard::new();
+        let a = g.begin_query();
+        let b = g.begin_query(); // must not deadlock
+        drop(a);
+        drop(b);
+        let a = g.begin_mutation();
+        let b = g.begin_mutation();
+        drop(a);
+        drop(b);
+    }
+
+    #[test]
+    fn phases_exclude_each_other() {
+        let g = Arc::new(EpochGuard::new());
+        let in_query = Arc::new(AtomicUsize::new(0));
+        let in_mutation = Arc::new(AtomicUsize::new(0));
+        let violations = Arc::new(AtomicUsize::new(0));
+
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let g = g.clone();
+            let iq = in_query.clone();
+            let im = in_mutation.clone();
+            let v = violations.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500 {
+                    if (t + i) % 2 == 0 {
+                        let _tok = g.begin_query();
+                        iq.fetch_add(1, Ordering::SeqCst);
+                        if im.load(Ordering::SeqCst) > 0 {
+                            v.fetch_add(1, Ordering::SeqCst);
+                        }
+                        iq.fetch_sub(1, Ordering::SeqCst);
+                    } else {
+                        let _tok = g.begin_mutation();
+                        im.fetch_add(1, Ordering::SeqCst);
+                        if iq.load(Ordering::SeqCst) > 0 {
+                            v.fetch_add(1, Ordering::SeqCst);
+                        }
+                        im.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(violations.load(Ordering::SeqCst), 0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Serving metrics: per-op counters and latency histograms.
+
+use crate::coordinator::request::OpKind;
+use crate::util::stats::Histogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Default)]
+struct OpMetrics {
+    requests: AtomicU64,
+    keys: AtomicU64,
+    successes: AtomicU64,
+    latency: Mutex<Histogram>,
+}
+
+/// Aggregate serving metrics; all methods are thread-safe.
+#[derive(Default)]
+pub struct Metrics {
+    insert: OpMetrics,
+    query: OpMetrics,
+    delete: OpMetrics,
+    batches: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn op(&self, op: OpKind) -> &OpMetrics {
+        match op {
+            OpKind::Insert => &self.insert,
+            OpKind::Query => &self.query,
+            OpKind::Delete => &self.delete,
+        }
+    }
+
+    pub fn record(&self, op: OpKind, keys: usize, successes: u64, latency_ns: u64) {
+        let m = self.op(op);
+        m.requests.fetch_add(1, Ordering::Relaxed);
+        m.keys.fetch_add(keys as u64, Ordering::Relaxed);
+        m.successes.fetch_add(successes, Ordering::Relaxed);
+        m.latency.lock().unwrap().record(latency_ns);
+    }
+
+    pub fn record_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn requests(&self, op: OpKind) -> u64 {
+        self.op(op).requests.load(Ordering::Relaxed)
+    }
+
+    pub fn keys(&self, op: OpKind) -> u64 {
+        self.op(op).keys.load(Ordering::Relaxed)
+    }
+
+    pub fn successes(&self, op: OpKind) -> u64 {
+        self.op(op).successes.load(Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn latency_p99_bound_ns(&self, op: OpKind) -> u64 {
+        self.op(op).latency.lock().unwrap().percentile_bound(99.0)
+    }
+
+    /// One-line human-readable summary (the server's STATS reply).
+    pub fn summary(&self) -> String {
+        let line = |name: &str, m: &OpMetrics| {
+            format!(
+                "{name}: req={} keys={} ok={} p99<={}us",
+                m.requests.load(Ordering::Relaxed),
+                m.keys.load(Ordering::Relaxed),
+                m.successes.load(Ordering::Relaxed),
+                m.latency.lock().unwrap().percentile_bound(99.0) / 1000,
+            )
+        };
+        format!(
+            "{} | {} | {} | batches={}",
+            line("insert", &self.insert),
+            line("query", &self.query),
+            line("delete", &self.delete),
+            self.batches.load(Ordering::Relaxed)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarises() {
+        let m = Metrics::new();
+        m.record(OpKind::Insert, 100, 99, 5_000);
+        m.record(OpKind::Query, 50, 25, 2_000);
+        m.record_batch();
+        assert_eq!(m.requests(OpKind::Insert), 1);
+        assert_eq!(m.keys(OpKind::Insert), 100);
+        assert_eq!(m.successes(OpKind::Insert), 99);
+        assert_eq!(m.requests(OpKind::Delete), 0);
+        assert_eq!(m.batches(), 1);
+        let s = m.summary();
+        assert!(s.contains("keys=100"));
+        assert!(m.latency_p99_bound_ns(OpKind::Insert) >= 5_000);
+    }
+}

@@ -1,0 +1,31 @@
+//! The L3 serving coordinator: batched AMQ requests over the filter.
+//!
+//! The paper ships a *library*; a production deployment wraps it in a
+//! serving layer, which is what this module provides (vLLM-router-style):
+//!
+//! * [`request`] — the operation/request/response types;
+//! * [`epoch`]   — the phase guard that keeps queries from overlapping
+//!   mutations (the paper's torn-read caveat for non-coherent vectorised
+//!   loads, §4.4);
+//! * [`batcher`] — dynamic batching: requests accumulate until a size or
+//!   deadline trigger, then launch as one device batch;
+//! * [`shard`]   — key-space sharding across multiple filters for
+//!   multi-device topologies;
+//! * [`engine`]  — ties filter + device + epoch + (optional) PJRT runtime
+//!   into a servable engine;
+//! * [`server`]  — a line-protocol TCP front end;
+//! * [`metrics`] — op counters and latency histograms.
+
+pub mod request;
+pub mod epoch;
+pub mod batcher;
+pub mod shard;
+pub mod engine;
+pub mod server;
+pub mod metrics;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use engine::{Engine, EngineConfig};
+pub use epoch::EpochGuard;
+pub use request::{OpKind, Request, Response};
+pub use shard::ShardedFilter;

@@ -1,0 +1,75 @@
+//! Request/response types for the serving layer.
+
+/// The three filter operations (plus a ping for health checks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Insert,
+    Query,
+    Delete,
+}
+
+impl OpKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Insert => "insert",
+            OpKind::Query => "query",
+            OpKind::Delete => "delete",
+        }
+    }
+
+    pub fn is_mutation(self) -> bool {
+        !matches!(self, OpKind::Query)
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "insert" | "INSERT" | "i" => Some(OpKind::Insert),
+            "query" | "QUERY" | "q" | "contains" => Some(OpKind::Query),
+            "delete" | "DELETE" | "d" | "remove" => Some(OpKind::Delete),
+            _ => None,
+        }
+    }
+}
+
+/// A batch request: one operation over a vector of keys.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub op: OpKind,
+    pub keys: Vec<u64>,
+}
+
+impl Request {
+    pub fn new(op: OpKind, keys: Vec<u64>) -> Self {
+        Self { op, keys }
+    }
+}
+
+/// The response: per-key outcome bits plus a tally.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Response {
+    pub op: OpKind,
+    /// insert → accepted; query → present; delete → removed.
+    pub outcomes: Vec<bool>,
+    /// Count of `true` outcomes (hierarchically reduced on device).
+    pub successes: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_ops() {
+        assert_eq!(OpKind::parse("insert"), Some(OpKind::Insert));
+        assert_eq!(OpKind::parse("q"), Some(OpKind::Query));
+        assert_eq!(OpKind::parse("remove"), Some(OpKind::Delete));
+        assert_eq!(OpKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn mutation_classes() {
+        assert!(OpKind::Insert.is_mutation());
+        assert!(OpKind::Delete.is_mutation());
+        assert!(!OpKind::Query.is_mutation());
+    }
+}

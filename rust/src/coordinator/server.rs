@@ -1,0 +1,257 @@
+//! A line-protocol TCP front end over the engine + batcher.
+//!
+//! Protocol (one request per line, space-separated):
+//! ```text
+//! INSERT <k1> <k2> ...    ->  OK <successes> <outcome bits 0/1...>
+//! QUERY  <k1> <k2> ...    ->  OK <hits> <bits>
+//! DELETE <k1> <k2> ...    ->  OK <removed> <bits>
+//! LEN                     ->  OK <stored fingerprints>
+//! STATS                   ->  OK <metrics summary>
+//! PING                    ->  PONG
+//! QUIT                    ->  BYE (closes connection)
+//! ```
+//! Keys are decimal or 0x-hex u64. Errors reply `ERR <message>`.
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::engine::Engine;
+use super::request::{OpKind, Request};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+pub struct Server {
+    engine: Arc<Engine>,
+    batcher: Arc<Batcher>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn new(engine: Arc<Engine>, batch_cfg: BatcherConfig) -> Self {
+        let batcher = Arc::new(Batcher::new(engine.clone(), batch_cfg));
+        Self {
+            engine,
+            batcher,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        self.shutdown.clone()
+    }
+
+    /// Serve until the shutdown flag is set. Binds `addr` and returns the
+    /// local address through `on_bound` before accepting (lets tests grab
+    /// the ephemeral port).
+    pub fn serve(&self, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> std::io::Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        on_bound(listener.local_addr()?);
+        let mut workers = Vec::new();
+        while !self.shutdown.load(Ordering::Acquire) {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let engine = self.engine.clone();
+                    let batcher = self.batcher.clone();
+                    let shutdown = self.shutdown.clone();
+                    workers.push(std::thread::spawn(move || {
+                        let _ = handle_conn(stream, engine, batcher, shutdown);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        for w in workers {
+            let _ = w.join();
+        }
+        Ok(())
+    }
+}
+
+fn parse_key(tok: &str) -> Option<u64> {
+    if let Some(hex) = tok.strip_prefix("0x").or_else(|| tok.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        tok.parse().ok()
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    engine: Arc<Engine>,
+    batcher: Arc<Batcher>,
+    shutdown: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    // The listener is non-blocking (for shutdown polling) and accepted
+    // sockets can inherit that — force blocking mode with a read timeout,
+    // otherwise connection threads busy-spin and starve the workers.
+    stream.set_nonblocking(false)?;
+    stream.set_nodelay(true)?; // request/response protocol: Nagle off
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if shutdown.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        // NOTE: on timeout, `read_line` may already have consumed a
+        // partial line into `line` — keep accumulating, clear only after
+        // a complete line is processed.
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // EOF
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+        if !line.ends_with('\n') {
+            continue; // partial line, keep reading
+        }
+        let mut parts = line.split_whitespace();
+        let Some(cmd) = parts.next() else { continue };
+        let reply = match cmd.to_ascii_uppercase().as_str() {
+            "PING" => "PONG".to_string(),
+            "QUIT" => {
+                writeln!(writer, "BYE")?;
+                return Ok(());
+            }
+            "LEN" => format!("OK {}", engine.len()),
+            "STATS" => format!("OK {}", engine.metrics.summary()),
+            op_str => match OpKind::parse(&op_str.to_ascii_lowercase()) {
+                Some(op) => {
+                    let keys: Option<Vec<u64>> = parts.map(parse_key).collect();
+                    match keys {
+                        Some(keys) if !keys.is_empty() => {
+                            let resp = batcher.call(Request::new(op, keys));
+                            let bits: String = resp
+                                .outcomes
+                                .iter()
+                                .map(|&b| if b { '1' } else { '0' })
+                                .collect();
+                            format!("OK {} {}", resp.successes, bits)
+                        }
+                        Some(_) => "ERR empty key list".to_string(),
+                        None => "ERR bad key".to_string(),
+                    }
+                }
+                None => format!("ERR unknown command '{cmd}'"),
+            },
+        };
+        writeln!(writer, "{reply}")?;
+        line.clear();
+    }
+}
+
+/// Minimal blocking client for tests and examples.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let writer = stream.try_clone()?;
+        Ok(Self {
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+
+    pub fn call(&mut self, line: &str) -> std::io::Result<String> {
+        writeln!(self.writer, "{line}")?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply)?;
+        Ok(reply.trim_end().to_string())
+    }
+
+    pub fn op(&mut self, op: &str, keys: &[u64]) -> std::io::Result<(u64, Vec<bool>)> {
+        let keys_str: Vec<String> = keys.iter().map(|k| k.to_string()).collect();
+        let reply = self.call(&format!("{op} {}", keys_str.join(" ")))?;
+        let mut parts = reply.split_whitespace();
+        match parts.next() {
+            Some("OK") => {
+                let n: u64 = parts.next().unwrap_or("0").parse().unwrap_or(0);
+                let bits = parts
+                    .next()
+                    .unwrap_or("")
+                    .chars()
+                    .map(|c| c == '1')
+                    .collect();
+                Ok((n, bits))
+            }
+            _ => Err(std::io::Error::other(reply)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineConfig;
+
+    #[test]
+    fn key_parsing() {
+        assert_eq!(parse_key("42"), Some(42));
+        assert_eq!(parse_key("0xff"), Some(255));
+        assert_eq!(parse_key("0XFF"), Some(255));
+        assert_eq!(parse_key("zap"), None);
+    }
+
+    #[test]
+    fn server_end_to_end() {
+        let engine = Arc::new(
+            Engine::new(EngineConfig {
+                capacity: 10_000,
+                shards: 1,
+                workers: 2,
+                artifacts_dir: None,
+            })
+            .unwrap(),
+        );
+        let server = Arc::new(Server::new(engine, BatcherConfig::default()));
+        let shutdown = server.shutdown_handle();
+        let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+        let srv = server.clone();
+        let handle = std::thread::spawn(move || {
+            srv.serve("127.0.0.1:0", move |a| {
+                addr_tx.send(a).unwrap();
+            })
+            .unwrap();
+        });
+        let addr = addr_rx.recv().unwrap();
+
+        let mut c = Client::connect(addr).unwrap();
+        assert_eq!(c.call("PING").unwrap(), "PONG");
+
+        let (ok, bits) = c.op("INSERT", &[1, 2, 3, 4]).unwrap();
+        assert_eq!(ok, 4);
+        assert_eq!(bits, vec![true; 4]);
+
+        let (hits, bits) = c.op("QUERY", &[1, 2, 3, 4, 5000]).unwrap();
+        assert_eq!(hits, 4);
+        assert_eq!(bits[..4], [true; 4]);
+
+        let reply = c.call("LEN").unwrap();
+        assert_eq!(reply, "OK 4");
+
+        let (removed, _) = c.op("DELETE", &[1, 2]).unwrap();
+        assert_eq!(removed, 2);
+
+        assert!(c.call("STATS").unwrap().starts_with("OK insert:"));
+        assert!(c.call("BOGUS 1").unwrap().starts_with("ERR"));
+        assert_eq!(c.call("QUIT").unwrap(), "BYE");
+
+        shutdown.store(true, Ordering::Release);
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,163 @@
+//! Key-space sharding: one filter per shard, routed by a stable hash of
+//! the key. This is the multi-device topology of the serving layer (each
+//! GPU owns a shard; here each shard is an independent lock-free filter,
+//! which also reduces epoch-guard scope in mixed workloads).
+
+use crate::device::Device;
+use crate::filter::{CuckooConfig, CuckooFilter, FilterError, Layout};
+use crate::util::prng::mix64;
+
+pub struct ShardedFilter<L: Layout> {
+    shards: Vec<CuckooFilter<L>>,
+    route_seed: u64,
+}
+
+impl<L: Layout> ShardedFilter<L> {
+    /// `capacity` total keys across `num_shards` shards.
+    pub fn with_capacity(capacity: usize, num_shards: usize) -> Result<Self, FilterError> {
+        let num_shards = num_shards.max(1);
+        let per = capacity.div_ceil(num_shards);
+        let shards = (0..num_shards)
+            .map(|i| {
+                let cfg = CuckooConfig::with_capacity(per).seed(
+                    crate::filter::hash::DEFAULT_SEED ^ (i as u64).wrapping_mul(0x9E37),
+                );
+                CuckooFilter::new(cfg)
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Self {
+            shards,
+            route_seed: 0xD15EA5E,
+        })
+    }
+
+    /// Wrap an existing single filter as a one-shard topology (used when
+    /// the shard must match a fixed AOT artifact geometry).
+    pub fn from_single(filter: CuckooFilter<L>) -> Self {
+        Self {
+            shards: vec![filter],
+            route_seed: 0xD15EA5E,
+        }
+    }
+
+    #[inline]
+    pub fn route(&self, key: u64) -> usize {
+        if self.shards.len() == 1 {
+            return 0;
+        }
+        (mix64(key ^ self.route_seed) % self.shards.len() as u64) as usize
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, i: usize) -> &CuckooFilter<L> {
+        &self.shards[i]
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn insert(&self, key: u64) -> Result<(), FilterError> {
+        self.shards[self.route(key)].insert(key)
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.shards[self.route(key)].contains(key)
+    }
+
+    pub fn remove(&self, key: u64) -> bool {
+        self.shards[self.route(key)].remove(key)
+    }
+
+    /// Batch insert: group keys by shard, then run all shard batches on
+    /// the device (each shard's batch is itself parallel — shards only
+    /// bound contention, they don't serialise).
+    pub fn insert_batch(&self, device: &Device, keys: &[u64]) -> u64 {
+        let groups = self.group_by_shard(keys);
+        let mut ok = 0;
+        for (s, ks) in groups.iter().enumerate() {
+            ok += self.shards[s].insert_batch(device, ks).inserted;
+        }
+        ok
+    }
+
+    pub fn contains_batch(&self, device: &Device, keys: &[u64]) -> u64 {
+        let groups = self.group_by_shard(keys);
+        let mut hits = 0;
+        for (s, ks) in groups.iter().enumerate() {
+            hits += self.shards[s].count_contains_batch(device, ks);
+        }
+        hits
+    }
+
+    pub fn remove_batch(&self, device: &Device, keys: &[u64]) -> u64 {
+        let groups = self.group_by_shard(keys);
+        let mut ok = 0;
+        for (s, ks) in groups.iter().enumerate() {
+            ok += self.shards[s].remove_batch(device, ks);
+        }
+        ok
+    }
+
+    fn group_by_shard(&self, keys: &[u64]) -> Vec<Vec<u64>> {
+        let mut groups = vec![Vec::new(); self.shards.len()];
+        for &k in keys {
+            groups[self.route(k)].push(k);
+        }
+        groups
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::Fp16;
+
+    fn keys(n: usize, stream: u64) -> Vec<u64> {
+        (0..n as u64).map(|i| mix64(i ^ (stream << 33))).collect()
+    }
+
+    #[test]
+    fn routes_are_stable_and_balanced() {
+        let s = ShardedFilter::<Fp16>::with_capacity(100_000, 8).unwrap();
+        let ks = keys(100_000, 1);
+        let mut counts = vec![0usize; 8];
+        for &k in &ks {
+            let r = s.route(k);
+            assert_eq!(r, s.route(k));
+            counts[r] += 1;
+        }
+        let avg = 100_000.0 / 8.0;
+        for &c in &counts {
+            assert!((c as f64) > avg * 0.9 && (c as f64) < avg * 1.1, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_roundtrip() {
+        let device = Device::with_workers(4);
+        let s = ShardedFilter::<Fp16>::with_capacity(50_000, 4).unwrap();
+        let ks = keys(50_000, 2);
+        assert_eq!(s.insert_batch(&device, &ks), 50_000);
+        assert_eq!(s.len(), 50_000);
+        assert_eq!(s.contains_batch(&device, &ks), 50_000);
+        assert_eq!(s.remove_batch(&device, &ks), 50_000);
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn single_key_ops() {
+        let s = ShardedFilter::<Fp16>::with_capacity(1000, 3).unwrap();
+        s.insert(42).unwrap();
+        assert!(s.contains(42));
+        assert!(s.remove(42));
+        assert!(!s.contains(42));
+    }
+}

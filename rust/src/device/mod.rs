@@ -1,0 +1,262 @@
+//! The batch "kernel launch" engine — the CPU stand-in for the CUDA
+//! device (§2.2 / §4.3).
+//!
+//! A [`Device`] owns a logical worker topology shaped like a GPU grid:
+//! a batch of N items is decomposed into *blocks* of `block_size`
+//! logical threads, blocks are distributed over OS worker threads
+//! (the "SMs"), and inside a block, per-*warp* partial results are
+//! reduced before a single atomic commit per block — the paper's
+//! hierarchical occupancy counting (warp shuffle → shared memory →
+//! one global atomic, §4.3 last paragraph).
+//!
+//! The engine is deliberately simple: a launch is synchronous (like a
+//! stream-ordered kernel + sync), work distribution is an atomic block
+//! cursor (the GPU's hardware block scheduler), and scoped threads keep
+//! borrows safe without `Arc` gymnastics.
+
+use crossbeam_utils::thread as cb;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// GPU-like launch geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct LaunchConfig {
+    /// Logical threads per block (CUDA default 256).
+    pub block_size: usize,
+    /// Logical threads per warp (32 on NVIDIA).
+    pub warp_size: usize,
+    /// OS worker threads ("SMs"). Defaults to available parallelism.
+    pub workers: usize,
+}
+
+impl Default for LaunchConfig {
+    fn default() -> Self {
+        Self {
+            block_size: 256,
+            warp_size: 32,
+            workers: default_workers(),
+        }
+    }
+}
+
+pub fn default_workers() -> usize {
+    std::env::var("CUCKOO_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        })
+}
+
+/// Per-warp view handed to kernel closures: item range + warp-local
+/// success accumulator.
+pub struct WarpCtx {
+    /// Index range of this warp's items in the launch batch.
+    pub range: std::ops::Range<usize>,
+    /// Warp-local success tally (the "warp shuffle" reduction level).
+    successes: u64,
+}
+
+impl WarpCtx {
+    #[inline(always)]
+    pub fn tally(&mut self, success: bool) {
+        self.successes += success as u64;
+    }
+}
+
+/// The batch execution device.
+pub struct Device {
+    pub cfg: LaunchConfig,
+}
+
+impl Default for Device {
+    fn default() -> Self {
+        Self::new(LaunchConfig::default())
+    }
+}
+
+impl Device {
+    pub fn new(cfg: LaunchConfig) -> Self {
+        Self { cfg }
+    }
+
+    pub fn with_workers(workers: usize) -> Self {
+        Self::new(LaunchConfig {
+            workers: workers.max(1),
+            ..LaunchConfig::default()
+        })
+    }
+
+    /// Launch a "kernel" over `n` items. `kernel` is invoked once per
+    /// *warp* with a [`WarpCtx`]; it processes `ctx.range` and tallies
+    /// successes. Returns the total success count, committed with one
+    /// atomic addition per block (hierarchical reduction).
+    pub fn launch<F>(&self, n: usize, kernel: F) -> u64
+    where
+        F: Fn(&mut WarpCtx) + Sync,
+    {
+        if n == 0 {
+            return 0;
+        }
+        let bs = self.cfg.block_size;
+        let ws = self.cfg.warp_size;
+        let num_blocks = n.div_ceil(bs);
+        let cursor = AtomicUsize::new(0);
+        let global = AtomicU64::new(0);
+        let workers = self.cfg.workers.min(num_blocks).max(1);
+
+        cb::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|_| {
+                    loop {
+                        // The hardware block scheduler: grab the next block.
+                        let block = cursor.fetch_add(1, Ordering::Relaxed);
+                        if block >= num_blocks {
+                            break;
+                        }
+                        let block_start = block * bs;
+                        let block_end = (block_start + bs).min(n);
+                        // Block-level accumulator ("shared memory").
+                        let mut block_successes = 0u64;
+                        let mut w = block_start;
+                        while w < block_end {
+                            let mut ctx = WarpCtx {
+                                range: w..(w + ws).min(block_end),
+                                successes: 0,
+                            };
+                            kernel(&mut ctx);
+                            // Warp reduction joins the block tally.
+                            block_successes += ctx.successes;
+                            w += ws;
+                        }
+                        // One global atomic per block (§4.3).
+                        global.fetch_add(block_successes, Ordering::Relaxed);
+                    }
+                });
+            }
+        })
+        .expect("device worker panicked");
+
+        global.load(Ordering::Acquire)
+    }
+
+    /// Convenience: launch over items with a per-item closure returning
+    /// success. Still reduces hierarchically.
+    pub fn launch_items<F>(&self, n: usize, f: F) -> u64
+    where
+        F: Fn(usize) -> bool + Sync,
+    {
+        self.launch(n, |ctx| {
+            for i in ctx.range.clone() {
+                ctx.tally(f(i));
+            }
+        })
+    }
+
+    /// Launch with a per-item predicate, writing each item's outcome into
+    /// `out` (disjoint writes, warp ranges never overlap). Returns the
+    /// success count, reduced hierarchically.
+    pub fn launch_map<F>(&self, f: F, out: &mut [bool]) -> u64
+    where
+        F: Fn(usize) -> bool + Sync,
+    {
+        let n = out.len();
+        let ptr = SendMutPtr(out.as_mut_ptr());
+        self.launch(n, |ctx| {
+            let ptr = &ptr;
+            for i in ctx.range.clone() {
+                let ok = f(i);
+                unsafe { *ptr.0.add(i) = ok };
+                ctx.tally(ok);
+            }
+        })
+    }
+
+    /// Partition `n` items into per-worker contiguous shards and run one
+    /// closure per shard with the shard index — used when each worker
+    /// needs its own mutable scratch (e.g. trace probes).
+    pub fn launch_sharded<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, std::ops::Range<usize>) + Sync,
+    {
+        let workers = self.cfg.workers.max(1);
+        let chunk = n.div_ceil(workers).max(1);
+        cb::scope(|scope| {
+            for w in 0..workers {
+                let lo = (w * chunk).min(n);
+                let hi = ((w + 1) * chunk).min(n);
+                if lo >= hi {
+                    break;
+                }
+                let f = &f;
+                scope.spawn(move |_| f(w, lo..hi));
+            }
+        })
+        .expect("device worker panicked");
+    }
+}
+
+/// Raw-pointer wrapper for disjoint parallel writes across the scoped-
+/// thread boundary.
+struct SendMutPtr<T>(*mut T);
+unsafe impl<T> Sync for SendMutPtr<T> {}
+unsafe impl<T> Send for SendMutPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn launch_counts_successes() {
+        let d = Device::with_workers(4);
+        // Every third item "succeeds".
+        let got = d.launch_items(10_000, |i| i % 3 == 0);
+        let expect = (0..10_000).filter(|i| i % 3 == 0).count() as u64;
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn launch_covers_every_item_exactly_once() {
+        let d = Device::new(LaunchConfig {
+            block_size: 64,
+            warp_size: 8,
+            workers: 7,
+        });
+        let n = 12_345;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        d.launch(n, |ctx| {
+            for i in ctx.range.clone() {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+                ctx.tally(true);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_launch() {
+        let d = Device::default();
+        assert_eq!(d.launch_items(0, |_| true), 0);
+    }
+
+    #[test]
+    fn sharded_partitions() {
+        let d = Device::with_workers(3);
+        let n = 1000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        d.launch_sharded(n, |_w, range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_worker_still_works() {
+        let d = Device::with_workers(1);
+        assert_eq!(d.launch_items(100, |_| true), 100);
+    }
+}

@@ -1,0 +1,224 @@
+//! Filter configuration — the runtime analogue of the paper's single
+//! template configuration structure (§4.7). The tag width is a
+//! compile-time type parameter ([`crate::filter::Layout`]); everything
+//! else lives here.
+
+use super::error::FilterError;
+
+/// Which partial-key scheme maps fingerprints to their alternate bucket
+/// (§2.1 / §4.6.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BucketPolicy {
+    /// Classic `i2 = i1 ^ H(fp)`; requires a power-of-two bucket count.
+    Xor,
+    /// Offset + choice-bit policy (Schmitz et al.): `i2 = i1 + offset(fp)
+    /// mod m`, any `m`; costs one fingerprint bit for the choice flag.
+    Offset,
+}
+
+impl BucketPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            BucketPolicy::Xor => "xor",
+            BucketPolicy::Offset => "offset",
+        }
+    }
+}
+
+/// Eviction strategy (§4.3 step 3 vs §4.6.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EvictionPolicy {
+    /// Greedy depth-first: evict one random victim and chase its chain.
+    Dfs,
+    /// Breadth-first heuristic: inspect up to `b/2` victims, prefer one
+    /// whose alternate bucket has a free slot (two-step lock-free
+    /// relocation with undo).
+    Bfs,
+}
+
+impl EvictionPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            EvictionPolicy::Dfs => "dfs",
+            EvictionPolicy::Bfs => "bfs",
+        }
+    }
+}
+
+/// Emulated vector-load width for the read-only query path (§4.4):
+/// 1 word = plain 64-bit loads, 2 words = 128-bit, 4 words = 256-bit
+/// (`ld.global.nc.v4.u64` on Blackwell).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LoadWidth {
+    W64 = 1,
+    W128 = 2,
+    W256 = 4,
+}
+
+impl LoadWidth {
+    pub fn words(self) -> usize {
+        self as usize
+    }
+}
+
+/// Full filter configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CuckooConfig {
+    /// Number of buckets (`m`). Power of two required for [`BucketPolicy::Xor`].
+    pub num_buckets: usize,
+    /// Slots (tags) per bucket (`b`). The paper's GPU default is 16.
+    pub bucket_slots: usize,
+    pub policy: BucketPolicy,
+    pub eviction: EvictionPolicy,
+    /// Maximum evictions before an insert reports failure (Alg. 1).
+    pub max_evictions: usize,
+    /// Query vector-load width.
+    pub load_width: LoadWidth,
+    /// Hash seed baked into all derived values.
+    pub seed: u64,
+}
+
+impl CuckooConfig {
+    /// Paper defaults: b = 16 slots, XOR policy, BFS eviction, 500-step
+    /// eviction budget, 256-bit loads.
+    pub fn new(num_buckets: usize) -> Self {
+        Self {
+            num_buckets,
+            bucket_slots: 16,
+            policy: BucketPolicy::Xor,
+            eviction: EvictionPolicy::Bfs,
+            max_evictions: 500,
+            load_width: LoadWidth::W256,
+            seed: super::hash::DEFAULT_SEED,
+        }
+    }
+
+    /// Size the filter for `capacity` items at a 95% design load factor,
+    /// rounding buckets up to a power of two (XOR policy constraint §4.6.2).
+    pub fn with_capacity(capacity: usize) -> Self {
+        let slots_needed = (capacity as f64 / 0.95).ceil() as usize;
+        let buckets = slots_needed.div_ceil(16).next_power_of_two();
+        Self::new(buckets)
+    }
+
+    /// Same, but for the Offset policy: any bucket count is allowed, so no
+    /// power-of-two rounding — this is the policy's whole point.
+    pub fn with_capacity_offset(capacity: usize) -> Self {
+        let slots_needed = (capacity as f64 / 0.95).ceil() as usize;
+        let mut cfg = Self::new(slots_needed.div_ceil(16).max(2));
+        cfg.policy = BucketPolicy::Offset;
+        cfg
+    }
+
+    pub fn bucket_slots(mut self, b: usize) -> Self {
+        self.bucket_slots = b;
+        self
+    }
+
+    pub fn policy(mut self, p: BucketPolicy) -> Self {
+        self.policy = p;
+        self
+    }
+
+    pub fn eviction(mut self, e: EvictionPolicy) -> Self {
+        self.eviction = e;
+        self
+    }
+
+    pub fn max_evictions(mut self, n: usize) -> Self {
+        self.max_evictions = n;
+        self
+    }
+
+    pub fn load_width(mut self, w: LoadWidth) -> Self {
+        self.load_width = w;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Total slot count.
+    pub fn total_slots(&self) -> usize {
+        self.num_buckets * self.bucket_slots
+    }
+
+    /// Validate against a tag layout with `fp_bits`-wide fingerprints.
+    pub fn validate(&self, fp_bits: u32) -> Result<(), FilterError> {
+        if self.num_buckets < 2 {
+            return Err(FilterError::BadConfig("need at least 2 buckets".into()));
+        }
+        if self.policy == BucketPolicy::Xor && !self.num_buckets.is_power_of_two() {
+            return Err(FilterError::BadConfig(format!(
+                "XOR policy requires a power-of-two bucket count, got {}",
+                self.num_buckets
+            )));
+        }
+        let tags_per_word = (64 / fp_bits) as usize;
+        if self.bucket_slots == 0 || self.bucket_slots % tags_per_word != 0 {
+            return Err(FilterError::BadConfig(format!(
+                "bucket_slots ({}) must be a positive multiple of tags-per-word ({tags_per_word})",
+                self.bucket_slots
+            )));
+        }
+        if self.policy == BucketPolicy::Offset && fp_bits < 2 {
+            return Err(FilterError::BadConfig(
+                "offset policy needs at least 2 fingerprint bits".into(),
+            ));
+        }
+        let words_per_bucket = self.bucket_slots / tags_per_word;
+        if self.load_width.words() > words_per_bucket
+            && self.load_width.words() % words_per_bucket != 0
+        {
+            // Wide loads wrap across buckets only in whole-bucket multiples.
+            return Err(FilterError::BadConfig(format!(
+                "load width {} words incompatible with {} words per bucket",
+                self.load_width.words(),
+                words_per_bucket
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_sizing() {
+        let cfg = CuckooConfig::with_capacity(1_000_000);
+        assert!(cfg.num_buckets.is_power_of_two());
+        // Must hold 1M at <= 95% load.
+        assert!(cfg.total_slots() as f64 * 0.95 >= 1_000_000.0);
+        cfg.validate(16).unwrap();
+    }
+
+    #[test]
+    fn offset_capacity_not_rounded() {
+        let cfg = CuckooConfig::with_capacity_offset(1_000_000);
+        assert_eq!(cfg.policy, BucketPolicy::Offset);
+        // Offset sizing should be much tighter than the next power of two.
+        let xor = CuckooConfig::with_capacity(1_000_000);
+        assert!(cfg.total_slots() <= xor.total_slots());
+        cfg.validate(16).unwrap();
+    }
+
+    #[test]
+    fn xor_rejects_non_pow2() {
+        let cfg = CuckooConfig::new(1000);
+        assert!(cfg.validate(16).is_err());
+        let cfg = cfg.policy(BucketPolicy::Offset);
+        cfg.validate(16).unwrap();
+    }
+
+    #[test]
+    fn bucket_slots_must_fill_words() {
+        let cfg = CuckooConfig::new(1024).bucket_slots(3);
+        assert!(cfg.validate(16).is_err()); // 4 tags/word for fp16
+        let cfg = CuckooConfig::new(1024).bucket_slots(8);
+        cfg.validate(16).unwrap();
+    }
+}

@@ -1,0 +1,783 @@
+//! The lock-free Cuckoo filter core — Algorithms 1–3 of the paper plus
+//! the BFS eviction heuristic (§4.6.1).
+//!
+//! Every mutation is a 64-bit CAS on a packed word; there are no locks
+//! anywhere. A single [`CuckooFilter`] value is shared by reference across
+//! worker threads (all methods take `&self`).
+//!
+//! Concurrency contract (matching the paper):
+//! * inserts ∥ inserts — safe;
+//! * deletes ∥ deletes, deletes ∥ inserts — safe;
+//! * queries ∥ mutations — **not** torn-read safe (the query path uses
+//!   relaxed loads, the analogue of `ld.global.nc`); the coordinator's
+//!   epoch guard serialises phases.
+
+use super::config::{CuckooConfig, EvictionPolicy};
+use super::error::FilterError;
+use super::policy::PolicyEngine;
+use super::probe::{NoProbe, Probe};
+use super::swar::{clear_lane, first_lane, Layout};
+use super::table::Table;
+use crate::util::prng::SplitMix64;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+thread_local! {
+    /// Per-thread eviction randomness (the CUDA version derives this from
+    /// thread id + clock; any per-thread stream works).
+    static EVICT_RNG: Cell<u64> = const { Cell::new(0) };
+}
+
+#[inline]
+fn thread_rand() -> u64 {
+    EVICT_RNG.with(|c| {
+        let mut s = c.get();
+        if s == 0 {
+            // Seed lazily from the thread's address-ish entropy.
+            let tid = &s as *const _ as u64;
+            s = crate::util::prng::mix64(tid ^ 0x9E37_79B9_7F4A_7C15);
+        }
+        s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        c.set(s);
+        crate::util::prng::mix64(s)
+    })
+}
+
+/// A concurrent, lock-free Cuckoo filter with `L`-packed fingerprints.
+pub struct CuckooFilter<L: Layout> {
+    table: Table,
+    policy: PolicyEngine<L>,
+    cfg: CuckooConfig,
+    /// Occupancy. Batch paths add per-block deltas (hierarchical counting,
+    /// §4.3); single-op paths add directly.
+    count: AtomicU64,
+}
+
+impl<L: Layout> CuckooFilter<L> {
+    pub fn new(cfg: CuckooConfig) -> Result<Self, FilterError> {
+        cfg.validate(L::FP_BITS)?;
+        let words_per_bucket = cfg.bucket_slots / L::TAGS_PER_WORD as usize;
+        Ok(Self {
+            table: Table::new(cfg.num_buckets, words_per_bucket),
+            policy: PolicyEngine::new(cfg.policy, cfg.num_buckets, cfg.seed),
+            cfg,
+            count: AtomicU64::new(0),
+        })
+    }
+
+    pub fn config(&self) -> &CuckooConfig {
+        &self.cfg
+    }
+
+    pub fn policy(&self) -> &PolicyEngine<L> {
+        &self.policy
+    }
+
+    pub fn table(&self) -> &Table {
+        &self.table
+    }
+
+    /// Number of stored fingerprints.
+    pub fn len(&self) -> usize {
+        self.count.load(Ordering::Relaxed) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current load factor α.
+    pub fn load_factor(&self) -> f64 {
+        self.len() as f64 / self.cfg.total_slots() as f64
+    }
+
+    /// Fingerprint-storage bytes (the paper's space metric).
+    pub fn bytes(&self) -> usize {
+        self.table.bytes()
+    }
+
+    /// Used by batch paths that count successes hierarchically.
+    pub(crate) fn add_count(&self, delta: u64) {
+        self.count.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub(crate) fn sub_count(&self, delta: u64) {
+        self.count.fetch_sub(delta, Ordering::Relaxed);
+    }
+
+    /// Remove everything.
+    pub fn clear(&self) {
+        self.table.clear();
+        self.count.store(0, Ordering::Release);
+    }
+
+    // ------------------------------------------------------------------
+    // Insertion (Algorithm 1)
+    // ------------------------------------------------------------------
+
+    /// Insert a key. Fails only when the eviction budget is exhausted.
+    pub fn insert(&self, key: u64) -> Result<(), FilterError> {
+        self.insert_probed(key, &mut NoProbe)
+    }
+
+    /// Insert with a memory-access probe attached (gpusim / Figure 5).
+    /// Does not update the occupancy counter — see [`Self::insert`] vs the
+    /// batch paths in `batch.rs`; this low-level entry leaves counting to
+    /// the caller and returns `Ok` exactly when a fingerprint was stored.
+    pub fn insert_probed_raw<P: Probe>(&self, key: u64, probe: &mut P) -> Result<(), FilterError> {
+        let c = self.policy.candidates(key);
+        // Overlap the candidate fetches (see contains_probed).
+        self.prefetch_bucket(c.alternate.0);
+
+        // Phase 1: direct insertion into either candidate bucket.
+        if self.try_insert(c.primary.0, c.primary.1, probe)
+            || self.try_insert(c.alternate.0, c.alternate.1, probe)
+        {
+            probe.evictions(0);
+            return Ok(());
+        }
+
+        // Phase 2: eviction chain.
+        match self.cfg.eviction {
+            EvictionPolicy::Dfs => self.evict_dfs(c, probe),
+            EvictionPolicy::Bfs => self.evict_bfs(c, probe),
+        }
+    }
+
+    fn insert_probed<P: Probe>(&self, key: u64, probe: &mut P) -> Result<(), FilterError> {
+        let r = self.insert_probed_raw(key, probe);
+        if r.is_ok() {
+            self.count.fetch_add(1, Ordering::Relaxed);
+        }
+        r
+    }
+
+    /// `TryInsert` of Algorithm 1: scan the bucket's words from a
+    /// pseudo-random start position derived from the tag, CAS the tag into
+    /// the first empty lane found.
+    #[inline]
+    fn try_insert<P: Probe>(&self, bucket: usize, tag: u64, probe: &mut P) -> bool {
+        let wpb = self.table.words_per_bucket;
+        // Pseudo-random start word via multiply-shift (no integer divide).
+        let start = ((tag.wrapping_mul(wpb as u64)) >> L::FP_BITS) as usize % wpb.max(1);
+        let mut w = start;
+        for _ in 0..wpb {
+            let idx = self.table.word_index(bucket, w);
+            w += 1;
+            if w == wpb {
+                w = 0;
+            }
+            let mut word = self.table.load_acquire(idx);
+            probe.read(idx);
+            let mut mask = L::zero_mask(word);
+            while mask != 0 {
+                let lane = first_lane::<L>(mask);
+                let desired = L::replace(word, lane, tag);
+                match self.table.cas(idx, word, desired) {
+                    Ok(()) => {
+                        probe.atomic(idx, true);
+                        return true;
+                    }
+                    Err(cur) => {
+                        probe.atomic(idx, false);
+                        // Reload on CAS failure (Alg. 1 line 36).
+                        word = cur;
+                        mask = L::zero_mask(word);
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    /// Greedy DFS eviction: displace a random victim and chase its chain
+    /// (Algorithm 1, phase 2).
+    fn evict_dfs<P: Probe>(
+        &self,
+        c: super::policy::Candidates,
+        probe: &mut P,
+    ) -> Result<(), FilterError> {
+        let mut rnd = SplitMix64::new(thread_rand());
+        // Randomly pick i1 or i2 (Alg. 1 line 8).
+        let (mut bucket, mut tag) = if rnd.next_u64() & 1 == 0 {
+            (c.primary.0, c.primary.1)
+        } else {
+            (c.alternate.0, c.alternate.1)
+        };
+
+        for n in 1..=self.cfg.max_evictions {
+            // Random slot in the bucket (Alg. 1 line 11).
+            let slot = rnd.next_below(self.cfg.bucket_slots as u64) as u32;
+            let word_in_bucket = (slot / L::TAGS_PER_WORD) as usize;
+            let lane = slot % L::TAGS_PER_WORD;
+            let idx = self.table.word_index(bucket, word_in_bucket);
+
+            // Atomically swap our tag with the victim (lines 15-19).
+            let mut word = self.table.load_acquire(idx);
+            probe.read(idx);
+            let evicted = loop {
+                let evicted = L::extract(word, lane);
+                let desired = L::replace(word, lane, tag);
+                match self.table.cas(idx, word, desired) {
+                    Ok(()) => {
+                        probe.atomic(idx, true);
+                        break evicted;
+                    }
+                    Err(cur) => {
+                        probe.atomic(idx, false);
+                        word = cur;
+                    }
+                }
+            };
+
+            if evicted == 0 {
+                // Concurrent delete freed the lane: we inserted, done.
+                probe.evictions(n as u32);
+                return Ok(());
+            }
+
+            // Carry the victim to its alternate bucket (lines 20-23).
+            let (next_bucket, next_tag) = self.policy.relocate(evicted, bucket);
+            if self.try_insert(next_bucket, next_tag, probe) {
+                probe.evictions(n as u32);
+                return Ok(());
+            }
+            bucket = next_bucket;
+            tag = next_tag;
+        }
+        probe.evictions(self.cfg.max_evictions as u32);
+        Err(FilterError::TooFull {
+            evictions: self.cfg.max_evictions,
+        })
+    }
+
+    /// BFS eviction heuristic (§4.6.1): inspect up to `b/2` victims in the
+    /// full bucket; prefer one whose alternate bucket has a free slot and
+    /// relocate it with the two-step lock-free protocol (insert-then-CAS,
+    /// undo on failure). Fall back to evicting the last candidate.
+    fn evict_bfs<P: Probe>(
+        &self,
+        c: super::policy::Candidates,
+        probe: &mut P,
+    ) -> Result<(), FilterError> {
+        let mut rnd = SplitMix64::new(thread_rand());
+        let (mut bucket, mut tag) = if rnd.next_u64() & 1 == 0 {
+            (c.primary.0, c.primary.1)
+        } else {
+            (c.alternate.0, c.alternate.1)
+        };
+
+        let inspect = (self.cfg.bucket_slots / 2).max(1) as u32;
+        let mut evictions = 0u32;
+
+        while evictions < self.cfg.max_evictions as u32 {
+            // --- BFS phase: look for a shallow eviction path -----------
+            let start_slot = rnd.next_below(self.cfg.bucket_slots as u64) as u32;
+            let mut last: Option<(u32, u64)> = None; // (slot, victim tag)
+            let mut probes = 0u32;
+
+            for k in 0..self.cfg.bucket_slots as u32 {
+                if probes >= inspect {
+                    break;
+                }
+                let slot = (start_slot + k) % self.cfg.bucket_slots as u32;
+                let widx = self
+                    .table
+                    .word_index(bucket, (slot / L::TAGS_PER_WORD) as usize);
+                let word = self.table.load_acquire(widx);
+                probe.read(widx);
+                let victim = L::extract(word, slot % L::TAGS_PER_WORD);
+                if victim == 0 {
+                    // A slot freed up meanwhile — just take it.
+                    if self.try_insert(bucket, tag, probe) {
+                        probe.bfs_probes(probes);
+                        probe.evictions(evictions);
+                        return Ok(());
+                    }
+                    continue;
+                }
+                probes += 1;
+                last = Some((slot, victim));
+
+                let (alt_bucket, alt_tag) = self.policy.relocate(victim, bucket);
+                // Does the victim's alternate bucket have room?
+                if !self.bucket_has_space(alt_bucket, probe) {
+                    continue;
+                }
+                // Two-step relocation; on conflict it undoes itself and we
+                // move on to the next candidate.
+                if self.two_step_relocate(bucket, slot, victim, tag, alt_bucket, alt_tag, probe) {
+                    probe.bfs_probes(probes);
+                    probe.evictions(evictions + 1);
+                    return Ok(());
+                }
+            }
+
+            // --- Fallback: evict the last inspected candidate ----------
+            probe.bfs_probes(probes);
+            let Some((slot, _)) = last else {
+                // Bucket emptied out concurrently; retry direct insert.
+                if self.try_insert(bucket, tag, probe) {
+                    probe.evictions(evictions);
+                    return Ok(());
+                }
+                evictions += 1; // budget the retry to guarantee progress
+                continue;
+            };
+            let widx = self
+                .table
+                .word_index(bucket, (slot / L::TAGS_PER_WORD) as usize);
+            let lane = slot % L::TAGS_PER_WORD;
+            let mut word = self.table.load_acquire(widx);
+            probe.read(widx);
+            let evicted = loop {
+                let evicted = L::extract(word, lane);
+                let desired = L::replace(word, lane, tag);
+                match self.table.cas(widx, word, desired) {
+                    Ok(()) => {
+                        probe.atomic(widx, true);
+                        break evicted;
+                    }
+                    Err(cur) => {
+                        probe.atomic(widx, false);
+                        word = cur;
+                    }
+                }
+            };
+            evictions += 1;
+            if evicted == 0 {
+                probe.evictions(evictions);
+                return Ok(());
+            }
+            let (next_bucket, next_tag) = self.policy.relocate(evicted, bucket);
+            if self.try_insert(next_bucket, next_tag, probe) {
+                probe.evictions(evictions);
+                return Ok(());
+            }
+            // Restart BFS from the alternate bucket, carrying the victim.
+            bucket = next_bucket;
+            tag = next_tag;
+        }
+
+        probe.evictions(evictions);
+        Err(FilterError::TooFull {
+            evictions: evictions as usize,
+        })
+    }
+
+    /// The BFS two-step lock-free relocation (§4.6.1): (1) insert the
+    /// victim's tag into its alternate bucket, then (2) CAS our tag over
+    /// the victim's old slot. If step (2) finds the slot changed, step (1)
+    /// is undone (the duplicate is removed) and `false` is returned.
+    #[allow(clippy::too_many_arguments)]
+    fn two_step_relocate<P: Probe>(
+        &self,
+        bucket: usize,
+        slot: u32,
+        victim: u64,
+        my_tag: u64,
+        alt_bucket: usize,
+        alt_tag: u64,
+        probe: &mut P,
+    ) -> bool {
+        // Step 1: place the victim in its alternate bucket.
+        if !self.try_insert(alt_bucket, alt_tag, probe) {
+            return false; // alternate filled up concurrently
+        }
+        // Step 2: replace the victim with our tag.
+        let widx = self
+            .table
+            .word_index(bucket, (slot / L::TAGS_PER_WORD) as usize);
+        let lane = slot % L::TAGS_PER_WORD;
+        let mut w = self.table.load_acquire(widx);
+        probe.read(widx);
+        loop {
+            if L::extract(w, lane) != victim {
+                // Slot modified by another thread: undo step 1.
+                self.remove_one_tag(alt_bucket, alt_tag, probe);
+                return false;
+            }
+            let desired = L::replace(w, lane, my_tag);
+            match self.table.cas(widx, w, desired) {
+                Ok(()) => {
+                    probe.atomic(widx, true);
+                    return true;
+                }
+                Err(cur) => {
+                    probe.atomic(widx, false);
+                    w = cur;
+                }
+            }
+        }
+    }
+
+    /// Cheap scan: does `bucket` contain at least one empty lane?
+    #[inline]
+    fn bucket_has_space<P: Probe>(&self, bucket: usize, probe: &mut P) -> bool {
+        for w in 0..self.table.words_per_bucket {
+            let idx = self.table.word_index(bucket, w);
+            let word = self.table.load(idx);
+            probe.read(idx);
+            if L::zero_mask(word) != 0 {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Remove exactly one instance of `tag` from `bucket` (BFS undo path).
+    fn remove_one_tag<P: Probe>(&self, bucket: usize, tag: u64, probe: &mut P) -> bool {
+        self.try_remove_tag(bucket, tag, probe)
+    }
+
+    // ------------------------------------------------------------------
+    // Query (Algorithm 2)
+    // ------------------------------------------------------------------
+
+    /// Approximate membership: never a false negative for inserted keys.
+    pub fn contains(&self, key: u64) -> bool {
+        self.contains_probed(key, &mut NoProbe)
+    }
+
+    pub fn contains_probed<P: Probe>(&self, key: u64, probe: &mut P) -> bool {
+        let c = self.policy.candidates(key);
+        // Overlap the two candidate fetches: issue the alternate bucket's
+        // cache-line fill before scanning the primary (the CPU analogue
+        // of the GPU's in-flight dual bucket loads — negative queries
+        // need both, and serialising them doubles latency).
+        self.prefetch_bucket(c.alternate.0);
+        self.find(c.primary.0, c.primary.1, probe) || self.find(c.alternate.0, c.alternate.1, probe)
+    }
+
+    /// Best-effort prefetch of a bucket's first cache line.
+    #[inline(always)]
+    fn prefetch_bucket(&self, bucket: usize) {
+        #[cfg(target_arch = "x86_64")]
+        unsafe {
+            let idx = self.table.word_index(bucket, 0);
+            let ptr = self.table.word_ptr(idx);
+            std::arch::x86_64::_mm_prefetch::<{ std::arch::x86_64::_MM_HINT_T0 }>(ptr as *const i8);
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = bucket;
+    }
+
+    /// `Find` of Algorithm 2: vectorised scan of one bucket. `LoadWords`
+    /// is modelled by reading `load_width` consecutive words per step from
+    /// an aligned start.
+    #[inline]
+    fn find<P: Probe>(&self, bucket: usize, tag: u64, probe: &mut P) -> bool {
+        let wpb = self.table.words_per_bucket;
+        let lw = self.cfg.load_width.words().min(wpb);
+        let start = {
+            let s = ((tag.wrapping_mul(wpb as u64)) >> L::FP_BITS) as usize % wpb.max(1);
+            s - s % lw // AlignDown to the load width
+        };
+        let pattern = L::broadcast(tag);
+        let mut base = start;
+        let mut i = 0;
+        while i < wpb {
+            // One "vector load" of lw words, compared branch-free against
+            // the broadcast pattern (Alg. 2's SWAR over the word vector).
+            let mut hit = 0u64;
+            for k in 0..lw {
+                let idx = self.table.word_index(bucket, base + k);
+                let word = self.table.load(idx);
+                probe.read(idx);
+                hit |= L::zero_mask(word ^ pattern);
+            }
+            if hit != 0 {
+                return true;
+            }
+            i += lw;
+            base += lw;
+            if base >= wpb {
+                base = 0;
+            }
+        }
+        false
+    }
+
+    // ------------------------------------------------------------------
+    // Deletion (Algorithm 3)
+    // ------------------------------------------------------------------
+
+    /// Remove a key (one stored instance). Returns whether a fingerprint
+    /// was removed. Deleting a never-inserted key may, with fingerprint-
+    /// collision probability, remove another key's fingerprint — the
+    /// standard Cuckoo-filter contract.
+    pub fn remove(&self, key: u64) -> bool {
+        self.remove_probed(key, &mut NoProbe)
+    }
+
+    pub fn remove_probed<P: Probe>(&self, key: u64, probe: &mut P) -> bool {
+        let r = self.remove_probed_raw(key, probe);
+        if r {
+            self.count.fetch_sub(1, Ordering::Relaxed);
+        }
+        r
+    }
+
+    /// As [`Self::remove_probed`] but without counter maintenance (batch
+    /// paths count hierarchically).
+    pub fn remove_probed_raw<P: Probe>(&self, key: u64, probe: &mut P) -> bool {
+        let c = self.policy.candidates(key);
+        self.try_remove_tag(c.primary.0, c.primary.1, probe)
+            || self.try_remove_tag(c.alternate.0, c.alternate.1, probe)
+    }
+
+    /// `TryRemove` of Algorithm 3: SWAR-match then CAS the lane to EMPTY,
+    /// reloading on CAS failure.
+    fn try_remove_tag<P: Probe>(&self, bucket: usize, tag: u64, probe: &mut P) -> bool {
+        let wpb = self.table.words_per_bucket;
+        let start = ((tag.wrapping_mul(wpb as u64)) >> L::FP_BITS) as usize % wpb.max(1);
+        let mut w = start;
+        for _ in 0..wpb {
+            let idx = self.table.word_index(bucket, w);
+            w += 1;
+            if w == wpb {
+                w = 0;
+            }
+            let mut word = self.table.load_acquire(idx);
+            probe.read(idx);
+            let mut mask = L::match_mask(word, tag);
+            while mask != 0 {
+                let lane = first_lane::<L>(mask);
+                let desired = L::replace(word, lane, 0);
+                match self.table.cas(idx, word, desired) {
+                    Ok(()) => {
+                        probe.atomic(idx, true);
+                        return true;
+                    }
+                    Err(cur) => {
+                        probe.atomic(idx, false);
+                        word = cur;
+                        mask = L::match_mask(word, tag);
+                        let _ = clear_lane::<L>(mask, lane); // keep scanning fresh mask
+                    }
+                }
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::config::{BucketPolicy, CuckooConfig, EvictionPolicy, LoadWidth};
+    use crate::filter::probe::TraceProbe;
+    use crate::filter::swar::{Fp16, Fp8};
+    use crate::util::prng::mix64;
+
+    fn keys(n: usize, stream: u64) -> Vec<u64> {
+        (0..n as u64).map(|i| mix64(i ^ (stream << 32).wrapping_add(stream))).collect()
+    }
+
+    #[test]
+    fn insert_then_contains() {
+        let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(10_000)).unwrap();
+        for k in keys(10_000, 1) {
+            f.insert(k).unwrap();
+        }
+        for k in keys(10_000, 1) {
+            assert!(f.contains(k), "false negative for {k:#x}");
+        }
+        assert_eq!(f.len(), 10_000);
+    }
+
+    #[test]
+    fn remove_then_absent() {
+        let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(5_000)).unwrap();
+        let ks = keys(5_000, 2);
+        for &k in &ks {
+            f.insert(k).unwrap();
+        }
+        for &k in &ks {
+            assert!(f.remove(k));
+        }
+        assert_eq!(f.len(), 0);
+        // After deleting everything, nothing should be found (no residue).
+        for &k in &ks {
+            assert!(!f.contains(k));
+        }
+    }
+
+    #[test]
+    fn fills_to_95_percent_bfs_and_dfs() {
+        for ev in [EvictionPolicy::Bfs, EvictionPolicy::Dfs] {
+            let cfg = CuckooConfig::new(1 << 10).eviction(ev); // 16384 slots
+            let f = CuckooFilter::<Fp16>::new(cfg).unwrap();
+            let target = (f.config().total_slots() as f64 * 0.95) as usize;
+            for k in keys(target, 3) {
+                f.insert(k).unwrap_or_else(|e| panic!("{ev:?} failed at α={}: {e}", f.load_factor()));
+            }
+            assert!(f.load_factor() >= 0.949, "{ev:?}: α={}", f.load_factor());
+            for k in keys(target, 3) {
+                assert!(f.contains(k));
+            }
+        }
+    }
+
+    #[test]
+    fn offset_policy_end_to_end() {
+        // Non-power-of-two bucket count.
+        let cfg = CuckooConfig::new(1000)
+            .policy(BucketPolicy::Offset)
+            .eviction(EvictionPolicy::Bfs);
+        let f = CuckooFilter::<Fp16>::new(cfg).unwrap();
+        let target = (f.config().total_slots() as f64 * 0.90) as usize;
+        let ks = keys(target, 4);
+        for &k in &ks {
+            f.insert(k).unwrap();
+        }
+        for &k in &ks {
+            assert!(f.contains(k));
+        }
+        for &k in &ks {
+            assert!(f.remove(k));
+        }
+        for &k in &ks {
+            assert!(!f.contains(k));
+        }
+    }
+
+    #[test]
+    fn too_full_reports_error() {
+        // Tiny filter, fill beyond capacity.
+        let cfg = CuckooConfig::new(2).max_evictions(50);
+        let f = CuckooFilter::<Fp8>::new(cfg).unwrap(); // 32 slots
+        let mut failures = 0;
+        for k in keys(64, 5) {
+            if f.insert(k).is_err() {
+                failures += 1;
+            }
+        }
+        assert!(failures > 0, "overfilling 32 slots with 64 keys must fail");
+        // Everything that reported success must be findable.
+        assert!(f.len() <= 32);
+    }
+
+    #[test]
+    fn load_widths_agree() {
+        let ks = keys(2_000, 6);
+        let mut reference: Option<Vec<bool>> = None;
+        for lw in [LoadWidth::W64, LoadWidth::W128, LoadWidth::W256] {
+            let cfg = CuckooConfig::new(1 << 8).load_width(lw);
+            let f = CuckooFilter::<Fp16>::new(cfg).unwrap();
+            for &k in &ks {
+                f.insert(k).unwrap();
+            }
+            let got: Vec<bool> = keys(4_000, 6).iter().map(|&k| f.contains(k)).collect();
+            match &reference {
+                None => reference = Some(got),
+                Some(r) => assert_eq!(r, &got, "load width {lw:?} changes results"),
+            }
+        }
+    }
+
+    #[test]
+    fn fpr_close_to_theory() {
+        // ε ≈ 1 - (1 - 2^-f)^(2bα)  (Eq. 4)
+        let cfg = CuckooConfig::new(1 << 10); // b=16, fp16
+        let f = CuckooFilter::<Fp16>::new(cfg).unwrap();
+        let n = (f.config().total_slots() as f64 * 0.95) as usize;
+        for k in keys(n, 7) {
+            f.insert(k).unwrap();
+        }
+        let probes = 200_000;
+        let mut fp = 0usize;
+        for k in keys(probes, 8888) {
+            if f.contains(k) {
+                fp += 1;
+            }
+        }
+        let eps = fp as f64 / probes as f64;
+        let theory = 1.0 - (1.0 - 2f64.powi(-16)).powf(2.0 * 16.0 * 0.95);
+        // Within 3x of theory (small-sample tolerance).
+        assert!(eps < theory * 3.0 + 1e-4, "eps={eps} theory={theory}");
+    }
+
+    #[test]
+    fn eviction_probe_records_chains() {
+        let cfg = CuckooConfig::new(1 << 6).eviction(EvictionPolicy::Dfs);
+        let f = CuckooFilter::<Fp16>::new(cfg).unwrap();
+        let mut probe = TraceProbe::new();
+        let n = (f.config().total_slots() as f64 * 0.95) as usize;
+        for k in keys(n, 9) {
+            if f.insert_probed_raw(k, &mut probe).is_ok() {
+                f.add_count(1);
+            }
+        }
+        assert_eq!(probe.eviction_samples.len() as u64, n as u64);
+        // At 95% load some insertions must have evicted.
+        assert!(probe.total_evictions() > 0);
+        assert!(probe.reads > 0 && probe.atomics > 0);
+    }
+
+    #[test]
+    fn bfs_shorter_tails_than_dfs() {
+        // The paper's Figure 5 claim, in miniature: at 95% load the p99
+        // eviction count under BFS is no worse than under DFS.
+        let mut tails = Vec::new();
+        for ev in [EvictionPolicy::Bfs, EvictionPolicy::Dfs] {
+            let cfg = CuckooConfig::new(1 << 9).eviction(ev);
+            let f = CuckooFilter::<Fp16>::new(cfg).unwrap();
+            let n = (f.config().total_slots() as f64 * 0.95) as usize;
+            let mut probe = TraceProbe::new();
+            for k in keys(n, 10) {
+                let _ = f.insert_probed_raw(k, &mut probe);
+            }
+            let mut samples = probe.eviction_samples.clone();
+            samples.sort_unstable();
+            tails.push(crate::util::stats::percentile_u32(&samples, 99.0));
+        }
+        assert!(
+            tails[0] <= tails[1],
+            "BFS p99 ({}) should not exceed DFS p99 ({})",
+            tails[0],
+            tails[1]
+        );
+    }
+
+    #[test]
+    fn clear_resets() {
+        let f = CuckooFilter::<Fp16>::new(CuckooConfig::new(1 << 6)).unwrap();
+        for k in keys(100, 11) {
+            f.insert(k).unwrap();
+        }
+        assert_eq!(f.len(), 100);
+        f.clear();
+        assert_eq!(f.len(), 0);
+        assert_eq!(f.table().count_occupied::<Fp16>(), 0);
+    }
+
+    #[test]
+    fn count_matches_table_scan() {
+        let f = CuckooFilter::<Fp16>::new(CuckooConfig::new(1 << 8)).unwrap();
+        let ks = keys(3_000, 12);
+        for &k in &ks {
+            f.insert(k).unwrap();
+        }
+        assert_eq!(f.len(), f.table().count_occupied::<Fp16>());
+        for &k in ks.iter().take(1_000) {
+            assert!(f.remove(k));
+        }
+        assert_eq!(f.len(), f.table().count_occupied::<Fp16>());
+    }
+
+    #[test]
+    fn duplicate_inserts_occupy_slots() {
+        // Cuckoo filters store duplicates as distinct fingerprint copies.
+        let f = CuckooFilter::<Fp16>::new(CuckooConfig::new(1 << 6)).unwrap();
+        for _ in 0..4 {
+            f.insert(77).unwrap();
+        }
+        assert_eq!(f.len(), 4);
+        for _ in 0..4 {
+            assert!(f.remove(77));
+        }
+        assert!(!f.remove(77));
+        assert!(!f.contains(77));
+    }
+}

@@ -1,0 +1,15 @@
+//! Error types for the filter core.
+
+use thiserror::Error;
+
+#[derive(Error, Debug, Clone, PartialEq, Eq)]
+pub enum FilterError {
+    /// Invalid configuration (validated at construction).
+    #[error("bad filter configuration: {0}")]
+    BadConfig(String),
+
+    /// Insertion abandoned after the eviction budget was exhausted —
+    /// "Table too full, caller will have to rebuild" (Alg. 1).
+    #[error("filter too full: eviction budget exhausted after {evictions} evictions")]
+    TooFull { evictions: usize },
+}

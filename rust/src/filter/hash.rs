@@ -1,0 +1,191 @@
+//! xxHash64 — the paper's hash function (§4.3 step 1): "Each item is first
+//! hashed into a 64-bit value using the xxHash64 algorithm, chosen for its
+//! high performance and excellent statistical properties."
+//!
+//! Two entry points:
+//! * [`xxhash64`] — the full streaming algorithm over byte slices (used by
+//!   the k-mer pipeline and for arbitrary keys);
+//! * [`xxhash64_u64`] — the specialised fixed-8-byte path used on the hot
+//!   path for `u64` keys. It is *exactly* `xxhash64(&key.to_le_bytes(), seed)`
+//!   but fully unrolled and branch-free.
+//!
+//! The Python build path (`python/compile/kernels/hash_kernel.py`)
+//! implements the same fixed-width variant; golden vectors below pin both
+//! sides to the reference implementation.
+
+const PRIME64_1: u64 = 0x9E37_79B1_85EB_CA87;
+const PRIME64_2: u64 = 0xC2B2_AE3D_27D4_EB4F;
+const PRIME64_3: u64 = 0x1656_67B1_9E37_79F9;
+const PRIME64_4: u64 = 0x85EB_CA77_C2B2_AE63;
+const PRIME64_5: u64 = 0x27D4_EB2F_1656_67C5;
+
+#[inline(always)]
+fn round(acc: u64, input: u64) -> u64 {
+    acc.wrapping_add(input.wrapping_mul(PRIME64_2))
+        .rotate_left(31)
+        .wrapping_mul(PRIME64_1)
+}
+
+#[inline(always)]
+fn merge_round(acc: u64, val: u64) -> u64 {
+    (acc ^ round(0, val))
+        .wrapping_mul(PRIME64_1)
+        .wrapping_add(PRIME64_4)
+}
+
+#[inline(always)]
+fn avalanche(mut h: u64) -> u64 {
+    h ^= h >> 33;
+    h = h.wrapping_mul(PRIME64_2);
+    h ^= h >> 29;
+    h = h.wrapping_mul(PRIME64_3);
+    h ^= h >> 32;
+    h
+}
+
+#[inline(always)]
+fn read_u64(b: &[u8], i: usize) -> u64 {
+    u64::from_le_bytes(b[i..i + 8].try_into().unwrap())
+}
+
+#[inline(always)]
+fn read_u32(b: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes(b[i..i + 4].try_into().unwrap())
+}
+
+/// Full xxHash64 over a byte slice.
+pub fn xxhash64(input: &[u8], seed: u64) -> u64 {
+    let len = input.len();
+    let mut h: u64;
+    let mut i = 0usize;
+
+    if len >= 32 {
+        let mut v1 = seed.wrapping_add(PRIME64_1).wrapping_add(PRIME64_2);
+        let mut v2 = seed.wrapping_add(PRIME64_2);
+        let mut v3 = seed;
+        let mut v4 = seed.wrapping_sub(PRIME64_1);
+        while i + 32 <= len {
+            v1 = round(v1, read_u64(input, i));
+            v2 = round(v2, read_u64(input, i + 8));
+            v3 = round(v3, read_u64(input, i + 16));
+            v4 = round(v4, read_u64(input, i + 24));
+            i += 32;
+        }
+        h = v1
+            .rotate_left(1)
+            .wrapping_add(v2.rotate_left(7))
+            .wrapping_add(v3.rotate_left(12))
+            .wrapping_add(v4.rotate_left(18));
+        h = merge_round(h, v1);
+        h = merge_round(h, v2);
+        h = merge_round(h, v3);
+        h = merge_round(h, v4);
+    } else {
+        h = seed.wrapping_add(PRIME64_5);
+    }
+
+    h = h.wrapping_add(len as u64);
+
+    while i + 8 <= len {
+        h ^= round(0, read_u64(input, i));
+        h = h.rotate_left(27)
+            .wrapping_mul(PRIME64_1)
+            .wrapping_add(PRIME64_4);
+        i += 8;
+    }
+    if i + 4 <= len {
+        h ^= (read_u32(input, i) as u64).wrapping_mul(PRIME64_1);
+        h = h.rotate_left(23)
+            .wrapping_mul(PRIME64_2)
+            .wrapping_add(PRIME64_3);
+        i += 4;
+    }
+    while i < len {
+        h ^= (input[i] as u64).wrapping_mul(PRIME64_5);
+        h = h.rotate_left(11).wrapping_mul(PRIME64_1);
+        i += 1;
+    }
+    avalanche(h)
+}
+
+/// xxHash64 specialised to a single little-endian `u64` key — the hot-path
+/// hash. Identical to `xxhash64(&key.to_le_bytes(), seed)`.
+#[inline(always)]
+pub fn xxhash64_u64(key: u64, seed: u64) -> u64 {
+    let mut h = seed.wrapping_add(PRIME64_5).wrapping_add(8);
+    h ^= round(0, key);
+    h = h.rotate_left(27)
+        .wrapping_mul(PRIME64_1)
+        .wrapping_add(PRIME64_4);
+    avalanche(h)
+}
+
+/// Default seed used across the crate (and baked into the AOT artifacts).
+pub const DEFAULT_SEED: u64 = 0x5EED_CAFE_F00D_D00D;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Golden vectors produced with the reference xxHash implementation
+    // (python xxhash / C xxh64). These pin Rust and Python to identical
+    // bit-level behaviour.
+    #[test]
+    fn golden_empty() {
+        assert_eq!(xxhash64(b"", 0), 0xEF46_DB37_51D8_E999);
+    }
+
+    #[test]
+    fn golden_abc() {
+        assert_eq!(xxhash64(b"abc", 0), 0x44BC_2CF5_AD77_0999);
+    }
+
+    #[test]
+    fn golden_hello_seeded() {
+        // xxh64("Hello, world!", seed=20141025)
+        assert_eq!(xxhash64(b"Hello, world!", 20141025), 0x9409_FD3E_3AEE_7471);
+    }
+
+    #[test]
+    fn golden_long_input() {
+        // 64 bytes of 0..63 — exercises the 32-byte stripe loop.
+        let data: Vec<u8> = (0u8..64).collect();
+        assert_eq!(xxhash64(&data, 0), 0xF7C6_7301_DB67_13F0);
+    }
+
+    #[test]
+    fn u64_fast_path_matches_bytes_path() {
+        for (i, key) in [0u64, 1, 42, u64::MAX, 0xDEAD_BEEF_CAFE_BABE]
+            .into_iter()
+            .enumerate()
+        {
+            let seed = i as u64 * 0x1234_5678;
+            assert_eq!(
+                xxhash64_u64(key, seed),
+                xxhash64(&key.to_le_bytes(), seed),
+                "key={key:#x} seed={seed:#x}"
+            );
+        }
+        // And a sweep.
+        let mut s = crate::util::SplitMix64::new(99);
+        for _ in 0..10_000 {
+            let key = s.next_u64();
+            assert_eq!(xxhash64_u64(key, DEFAULT_SEED), xxhash64(&key.to_le_bytes(), DEFAULT_SEED));
+        }
+    }
+
+    #[test]
+    fn distributes_bits() {
+        // Sanity: low/high 32-bit halves of sequential keys look uniform.
+        let n = 1 << 14;
+        let mut buckets = vec![0u32; 64];
+        for k in 0..n {
+            let h = xxhash64_u64(k, DEFAULT_SEED);
+            buckets[(h % 64) as usize] += 1;
+        }
+        let expect = n as f64 / 64.0;
+        for &c in &buckets {
+            assert!((c as f64) > expect * 0.7 && (c as f64) < expect * 1.3);
+        }
+    }
+}

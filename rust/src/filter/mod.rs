@@ -1,0 +1,31 @@
+//! The Cuckoo-GPU filter core: packed SWAR buckets, lock-free CAS
+//! mutation, DFS/BFS eviction and both bucket-placement policies.
+//!
+//! Module map (one file per concern, mirroring §4 of the paper):
+//! * [`hash`] — xxHash64 (§4.3 step 1);
+//! * [`swar`] — packed-word lane operations (§4.2);
+//! * [`policy`] — partial-key hashing, XOR and offset/choice-bit (§2.1, §4.6.2);
+//! * [`table`] — the atomic word array (§4.2, Fig. 2);
+//! * [`core`] — Algorithms 1–3 + BFS eviction (§4.3–§4.6.1);
+//! * [`batch`] — device-wide batched operations (§4.3 "parallel insertion");
+//! * [`sorted`] — the pre-sorted insertion variant (§4.6.3);
+//! * [`persist`] — save/load filter images (rebuild-free index reuse);
+//! * [`probe`] — memory-access tracing for gpusim and Figure 5.
+
+pub mod hash;
+pub mod swar;
+pub mod config;
+pub mod error;
+pub mod policy;
+pub mod table;
+pub mod probe;
+pub mod core;
+pub mod batch;
+pub mod sorted;
+pub mod persist;
+
+pub use config::{BucketPolicy, CuckooConfig, EvictionPolicy, LoadWidth};
+pub use core::CuckooFilter;
+pub use error::FilterError;
+pub use probe::{NoProbe, Probe, TraceProbe};
+pub use swar::{Fp16, Fp32, Fp8, Layout};

@@ -1,0 +1,270 @@
+//! Partial-key cuckoo hashing: fingerprint + bucket-index derivation for
+//! both bucket-placement policies (§2.1, §4.3 step 1, §4.6.2).
+//!
+//! Everything an operation needs is derived from the key's 64-bit xxHash:
+//! the *upper* 32 bits feed the fingerprint and the *lower* 32 bits the
+//! primary bucket index ("distinct hash parts are used to avoid
+//! fingerprint clustering", §4.3).
+//!
+//! The two policies differ in how the alternate bucket is found and in
+//! what is stored:
+//!
+//! * **XOR** (classic, Fan et al.): `i2 = i1 ^ H(fp)`; the stored tag is
+//!   the fingerprint itself and the mapping is an involution, so a stored
+//!   tag's alternate bucket is computable from its current bucket alone.
+//!   Requires `m` to be a power of two.
+//! * **Offset + choice bit** (Schmitz et al., §4.6.2): `i2 = (i1 +
+//!   offset(fp)) mod m` for any `m`. The stored tag's MSB (the *choice
+//!   bit*) records whether the item currently sits in its primary (0) or
+//!   alternate (1) bucket, and is flipped on every relocation. One
+//!   fingerprint bit is sacrificed.
+
+use super::hash::xxhash64_u64;
+use super::swar::Layout;
+use crate::util::prng::mix64;
+
+/// The two candidate placements of a key: `(bucket, stored_tag)` pairs.
+/// `slots[0]` is the primary location.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Candidates {
+    pub primary: (usize, u64),
+    pub alternate: (usize, u64),
+}
+
+/// Policy engine: resolves keys and stored tags to bucket locations.
+/// All methods are branch-light and fully inlined into the filter ops.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyEngine<L: Layout> {
+    pub num_buckets: u64,
+    pub seed: u64,
+    kind: super::config::BucketPolicy,
+    /// `num_buckets - 1` when the bucket count is a power of two —
+    /// strength-reduces the hot-path `% m` to an AND (a 20-40 cycle
+    /// saving per access on the integer divider).
+    pow2_mask: Option<u64>,
+    _marker: std::marker::PhantomData<L>,
+}
+
+impl<L: Layout> PolicyEngine<L> {
+    pub fn new(kind: super::config::BucketPolicy, num_buckets: usize, seed: u64) -> Self {
+        Self {
+            num_buckets: num_buckets as u64,
+            seed,
+            kind,
+            pow2_mask: num_buckets
+                .is_power_of_two()
+                .then(|| num_buckets as u64 - 1),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// `x mod num_buckets`, as an AND when the count is a power of two.
+    #[inline(always)]
+    fn mod_buckets(&self, x: u64) -> u64 {
+        match self.pow2_mask {
+            Some(mask) => x & mask,
+            None => x % self.num_buckets,
+        }
+    }
+
+    pub fn kind(&self) -> super::config::BucketPolicy {
+        self.kind
+    }
+
+    /// Fingerprint mask for the *effective* fingerprint (excluding the
+    /// choice bit under the offset policy).
+    #[inline(always)]
+    pub fn fp_mask(&self) -> u64 {
+        match self.kind {
+            super::config::BucketPolicy::Xor => L::LANE_MASK,
+            super::config::BucketPolicy::Offset => L::LANE_MASK >> 1,
+        }
+    }
+
+    /// Choice-bit position (offset policy): lane MSB.
+    #[inline(always)]
+    fn choice_bit(&self) -> u64 {
+        (L::LANE_MASK >> 1) + 1
+    }
+
+    /// Derive the fingerprint from the hash's upper half. Never returns 0
+    /// (0 encodes an empty slot).
+    #[inline(always)]
+    pub fn fingerprint(&self, h: u64) -> u64 {
+        let fp = (h >> 32) & self.fp_mask();
+        fp + (fp == 0) as u64
+    }
+
+    /// The XOR policy's `H(fp)` / the offset policy's `offset(fp)`.
+    #[inline(always)]
+    fn fp_spread(&self, fp: u64) -> u64 {
+        mix64(fp ^ self.seed)
+    }
+
+    /// Offset in `[1, m-1]` — never 0 so the two candidates differ
+    /// whenever `m > 1`.
+    #[inline(always)]
+    fn offset_of(&self, fp: u64) -> u64 {
+        1 + self.fp_spread(fp) % (self.num_buckets - 1)
+    }
+
+    /// Resolve a key to its two candidate `(bucket, stored_tag)` slots.
+    #[inline(always)]
+    pub fn candidates(&self, key: u64) -> Candidates {
+        let h = xxhash64_u64(key, self.seed);
+        let fp = self.fingerprint(h);
+        let i1 = self.mod_buckets(h & 0xFFFF_FFFF);
+        match self.kind {
+            super::config::BucketPolicy::Xor => {
+                let i2 = i1 ^ self.mod_buckets(self.fp_spread(fp));
+                Candidates {
+                    primary: (i1 as usize, fp),
+                    alternate: (i2 as usize, fp),
+                }
+            }
+            super::config::BucketPolicy::Offset => {
+                let i2 = (i1 + self.offset_of(fp)) % self.num_buckets;
+                Candidates {
+                    primary: (i1 as usize, fp),
+                    alternate: (i2 as usize, fp | self.choice_bit()),
+                }
+            }
+        }
+    }
+
+    /// Where does a *stored* tag go when evicted from `bucket`, and what
+    /// is stored there? (Alg. 1 line 21 / §4.6.2 choice-bit flip.)
+    #[inline(always)]
+    pub fn relocate(&self, stored_tag: u64, bucket: usize) -> (usize, u64) {
+        match self.kind {
+            super::config::BucketPolicy::Xor => {
+                let alt = (bucket as u64) ^ self.mod_buckets(self.fp_spread(stored_tag));
+                (alt as usize, stored_tag)
+            }
+            super::config::BucketPolicy::Offset => {
+                let choice = stored_tag & self.choice_bit();
+                let fp = stored_tag & self.fp_mask();
+                let m = self.num_buckets;
+                let off = self.offset_of(fp);
+                if choice == 0 {
+                    // Currently in primary; moves to alternate.
+                    let alt = (bucket as u64 + off) % m;
+                    (alt as usize, fp | self.choice_bit())
+                } else {
+                    // Currently in alternate; moves back to primary.
+                    let prim = (bucket as u64 + m - off % m) % m;
+                    (prim as usize, fp)
+                }
+            }
+        }
+    }
+
+    /// Memory footprint note for benches: bits of fingerprint entropy.
+    pub fn effective_fp_bits(&self) -> u32 {
+        match self.kind {
+            super::config::BucketPolicy::Xor => L::FP_BITS,
+            super::config::BucketPolicy::Offset => L::FP_BITS - 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::config::BucketPolicy;
+    use crate::filter::swar::{Fp16, Fp8};
+
+    #[test]
+    fn xor_relocation_is_involution() {
+        let eng = PolicyEngine::<Fp16>::new(BucketPolicy::Xor, 1 << 12, 1);
+        let mut rng = crate::util::SplitMix64::new(3);
+        for _ in 0..10_000 {
+            let key = rng.next_u64();
+            let c = eng.candidates(key);
+            // relocate(primary) == alternate and vice versa.
+            assert_eq!(
+                eng.relocate(c.primary.1, c.primary.0),
+                (c.alternate.0, c.alternate.1)
+            );
+            assert_eq!(
+                eng.relocate(c.alternate.1, c.alternate.0),
+                (c.primary.0, c.primary.1)
+            );
+        }
+    }
+
+    #[test]
+    fn offset_relocation_roundtrip() {
+        for m in [1000usize, 1 << 12, 12345, 7] {
+            let eng = PolicyEngine::<Fp16>::new(BucketPolicy::Offset, m, 99);
+            let mut rng = crate::util::SplitMix64::new(4);
+            for _ in 0..10_000 {
+                let key = rng.next_u64();
+                let c = eng.candidates(key);
+                assert!(c.primary.0 < m && c.alternate.0 < m);
+                assert_eq!(
+                    eng.relocate(c.primary.1, c.primary.0),
+                    (c.alternate.0, c.alternate.1),
+                    "m={m}"
+                );
+                assert_eq!(
+                    eng.relocate(c.alternate.1, c.alternate.0),
+                    (c.primary.0, c.primary.1),
+                    "m={m}"
+                );
+                // Double relocation returns to start.
+                let (b1, t1) = eng.relocate(c.primary.1, c.primary.0);
+                let (b2, t2) = eng.relocate(t1, b1);
+                assert_eq!((b2, t2), (c.primary.0, c.primary.1));
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprint_never_zero() {
+        let eng = PolicyEngine::<Fp8>::new(BucketPolicy::Xor, 1 << 10, 0);
+        for h in 0..200_000u64 {
+            assert_ne!(eng.fingerprint(h << 32), 0);
+        }
+        let eng = PolicyEngine::<Fp8>::new(BucketPolicy::Offset, 1000, 0);
+        for h in 0..200_000u64 {
+            let fp = eng.fingerprint(h << 32);
+            assert_ne!(fp, 0);
+            assert!(fp <= eng.fp_mask());
+        }
+    }
+
+    #[test]
+    fn offset_candidates_differ() {
+        let eng = PolicyEngine::<Fp16>::new(BucketPolicy::Offset, 977, 5);
+        let mut rng = crate::util::SplitMix64::new(8);
+        for _ in 0..5_000 {
+            let c = eng.candidates(rng.next_u64());
+            assert_ne!(c.primary.0, c.alternate.0);
+            // Stored tags differ exactly in the choice bit.
+            assert_eq!(c.primary.1 | (1 << 15), c.alternate.1);
+        }
+    }
+
+    #[test]
+    fn effective_bits() {
+        let x = PolicyEngine::<Fp16>::new(BucketPolicy::Xor, 1 << 4, 0);
+        let o = PolicyEngine::<Fp16>::new(BucketPolicy::Offset, 17, 0);
+        assert_eq!(x.effective_fp_bits(), 16);
+        assert_eq!(o.effective_fp_bits(), 15);
+    }
+
+    #[test]
+    fn xor_indices_in_range() {
+        // m power of two: i1 ^ (spread % m) < m requires i1 < m and spread%m < m
+        // — XOR of two values below a power of two stays below it.
+        let m = 1 << 14;
+        let eng = PolicyEngine::<Fp16>::new(BucketPolicy::Xor, m, 77);
+        let mut rng = crate::util::SplitMix64::new(10);
+        for _ in 0..10_000 {
+            let c = eng.candidates(rng.next_u64());
+            assert!(c.primary.0 < m);
+            assert!(c.alternate.0 < m);
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Memory-access probes: zero-cost hooks that the filter operations call
+//! on every word read, atomic update and eviction step. The default
+//! [`NoProbe`] monomorphises to nothing; [`TraceProbe`] feeds the
+//! [`crate::gpusim`] performance model and the Figure-5 eviction-tail
+//! experiment.
+
+/// Observation hooks. Implementations must be cheap; the filter calls
+/// them inside its hot loops.
+pub trait Probe {
+    /// A word was read (bucket scan / query load). `idx` is the global
+    /// word index.
+    fn read(&mut self, idx: usize);
+    /// A CAS was issued; `success` is its outcome.
+    fn atomic(&mut self, idx: usize, success: bool);
+    /// An insert finished having performed `n` evictions (0 = direct).
+    fn evictions(&mut self, n: u32);
+    /// BFS inspected `n` candidate victims before deciding.
+    fn bfs_probes(&mut self, n: u32);
+}
+
+/// The default probe: everything compiles away.
+#[derive(Default, Clone, Copy)]
+pub struct NoProbe;
+
+impl Probe for NoProbe {
+    #[inline(always)]
+    fn read(&mut self, _idx: usize) {}
+    #[inline(always)]
+    fn atomic(&mut self, _idx: usize, _success: bool) {}
+    #[inline(always)]
+    fn evictions(&mut self, _n: u32) {}
+    #[inline(always)]
+    fn bfs_probes(&mut self, _n: u32) {}
+}
+
+/// Aggregate counters for the gpusim model and experiments.
+#[derive(Default, Clone, Debug)]
+pub struct TraceProbe {
+    pub reads: u64,
+    pub atomics: u64,
+    pub atomic_failures: u64,
+    /// Eviction count per completed insertion (Figure 5's sample).
+    pub eviction_samples: Vec<u32>,
+    pub bfs_probe_total: u64,
+    /// Distinct-ish memory footprint proxy: sector (32 B = 4-word) touches.
+    pub sector_touches: u64,
+    last_sector: u64,
+}
+
+impl TraceProbe {
+    pub fn new() -> Self {
+        Self {
+            last_sector: u64::MAX,
+            ..Default::default()
+        }
+    }
+
+    pub fn total_evictions(&self) -> u64 {
+        self.eviction_samples.iter().map(|&e| e as u64).sum()
+    }
+
+    pub fn merge(&mut self, other: &TraceProbe) {
+        self.reads += other.reads;
+        self.atomics += other.atomics;
+        self.atomic_failures += other.atomic_failures;
+        self.eviction_samples
+            .extend_from_slice(&other.eviction_samples);
+        self.bfs_probe_total += other.bfs_probe_total;
+        self.sector_touches += other.sector_touches;
+    }
+}
+
+impl Probe for TraceProbe {
+    #[inline]
+    fn read(&mut self, idx: usize) {
+        self.reads += 1;
+        // A 32-byte sector holds 4 words; consecutive same-sector reads
+        // coalesce (temporal coalescing, §2.2).
+        let sector = idx as u64 >> 2;
+        if sector != self.last_sector {
+            self.sector_touches += 1;
+            self.last_sector = sector;
+        }
+    }
+
+    #[inline]
+    fn atomic(&mut self, _idx: usize, success: bool) {
+        self.atomics += 1;
+        if !success {
+            self.atomic_failures += 1;
+        }
+    }
+
+    #[inline]
+    fn evictions(&mut self, n: u32) {
+        self.eviction_samples.push(n);
+    }
+
+    #[inline]
+    fn bfs_probes(&mut self, n: u32) {
+        self.bfs_probe_total += n as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_counts() {
+        let mut p = TraceProbe::new();
+        p.read(0);
+        p.read(1); // same sector → coalesced
+        p.read(8); // new sector
+        p.atomic(0, true);
+        p.atomic(0, false);
+        p.evictions(3);
+        p.evictions(0);
+        assert_eq!(p.reads, 3);
+        assert_eq!(p.sector_touches, 2);
+        assert_eq!(p.atomics, 2);
+        assert_eq!(p.atomic_failures, 1);
+        assert_eq!(p.total_evictions(), 3);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = TraceProbe::new();
+        a.read(0);
+        let mut b = TraceProbe::new();
+        b.read(100);
+        b.evictions(2);
+        a.merge(&b);
+        assert_eq!(a.reads, 2);
+        assert_eq!(a.eviction_samples, vec![2]);
+    }
+}

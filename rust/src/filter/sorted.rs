@@ -1,0 +1,131 @@
+//! Pre-sorted insertion (§4.6.3): order the batch by primary bucket index
+//! with a radix sort before launching, so neighbouring logical threads
+//! touch neighbouring buckets. The paper found the sort does not amortise
+//! on HBM-class parts; we keep it for the ablation bench (it *is* a win in
+//! the gpusim GDDR model at large batch sizes, and on CPUs it improves
+//! cache locality measurably).
+
+use super::core::CuckooFilter;
+use super::swar::Layout;
+use crate::device::Device;
+
+/// LSD radix sort of `(bucket, key)` pairs by bucket index, 8 bits per
+/// pass — the CPU stand-in for CUB's `DeviceRadixSort`.
+pub fn radix_sort_by_bucket(pairs: &mut Vec<(u32, u64)>) {
+    let n = pairs.len();
+    if n <= 1 {
+        return;
+    }
+    let max_bucket = pairs.iter().map(|p| p.0).max().unwrap_or(0);
+    let passes = (32 - max_bucket.leading_zeros()).div_ceil(8).max(1);
+    let mut scratch: Vec<(u32, u64)> = vec![(0, 0); n];
+    let mut src_is_pairs = true;
+    for pass in 0..passes {
+        let shift = pass * 8;
+        let (src, dst): (&[(u32, u64)], &mut [(u32, u64)]) = if src_is_pairs {
+            (&pairs[..], &mut scratch[..])
+        } else {
+            (&scratch[..], &mut pairs[..])
+        };
+        let mut counts = [0usize; 256];
+        for p in src {
+            counts[((p.0 >> shift) & 0xFF) as usize] += 1;
+        }
+        let mut offsets = [0usize; 256];
+        let mut acc = 0;
+        for i in 0..256 {
+            offsets[i] = acc;
+            acc += counts[i];
+        }
+        for p in src {
+            let d = ((p.0 >> shift) & 0xFF) as usize;
+            dst[offsets[d]] = *p;
+            offsets[d] += 1;
+        }
+        src_is_pairs = !src_is_pairs;
+    }
+    if !src_is_pairs {
+        pairs.copy_from_slice(&scratch);
+    }
+}
+
+impl<L: Layout> CuckooFilter<L> {
+    /// Sorted-insertion variant: radix-sort the batch by primary bucket
+    /// index, then insert in that order. Returns the same tallies as
+    /// [`CuckooFilter::insert_batch`] plus the sort time share, so benches
+    /// can report the amortisation trade-off the paper discusses.
+    pub fn insert_batch_sorted(
+        &self,
+        device: &Device,
+        keys: &[u64],
+    ) -> (super::batch::BatchInsertResult, f64) {
+        let t = crate::util::Timer::new();
+        let mut pairs: Vec<(u32, u64)> = keys
+            .iter()
+            .map(|&k| (self.policy().candidates(k).primary.0 as u32, k))
+            .collect();
+        radix_sort_by_bucket(&mut pairs);
+        let sorted_keys: Vec<u64> = pairs.into_iter().map(|(_, k)| k).collect();
+        let sort_secs = t.elapsed_secs();
+        let r = self.insert_batch(device, &sorted_keys);
+        (r, sort_secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::config::CuckooConfig;
+    use crate::filter::swar::Fp16;
+    use crate::util::prng::mix64;
+
+    #[test]
+    fn radix_sort_sorts() {
+        let mut rng = crate::util::SplitMix64::new(1);
+        let mut pairs: Vec<(u32, u64)> = (0..10_000)
+            .map(|_| ((rng.next_u64() >> 40) as u32, rng.next_u64()))
+            .collect();
+        let mut expect = pairs.clone();
+        expect.sort_by_key(|p| p.0);
+        radix_sort_by_bucket(&mut pairs);
+        let got: Vec<u32> = pairs.iter().map(|p| p.0).collect();
+        let want: Vec<u32> = expect.iter().map(|p| p.0).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn radix_sort_is_stable_permutation() {
+        let mut pairs = vec![(3u32, 30u64), (1, 10), (3, 31), (0, 0), (1, 11)];
+        radix_sort_by_bucket(&mut pairs);
+        assert_eq!(pairs, vec![(0, 0), (1, 10), (1, 11), (3, 30), (3, 31)]);
+    }
+
+    #[test]
+    fn radix_sort_empty_and_single() {
+        let mut v: Vec<(u32, u64)> = vec![];
+        radix_sort_by_bucket(&mut v);
+        assert!(v.is_empty());
+        let mut v = vec![(5u32, 55u64)];
+        radix_sort_by_bucket(&mut v);
+        assert_eq!(v, vec![(5, 55)]);
+    }
+
+    #[test]
+    fn sorted_insert_equivalent_results() {
+        let device = Device::with_workers(4);
+        let keys: Vec<u64> = (0..20_000u64).map(|i| mix64(i)).collect();
+
+        let plain = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(20_000)).unwrap();
+        plain.insert_batch(&device, &keys);
+
+        let sorted = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(20_000)).unwrap();
+        let (r, sort_secs) = sorted.insert_batch_sorted(&device, &keys);
+        assert_eq!(r.inserted, 20_000);
+        assert!(sort_secs >= 0.0);
+
+        // Same membership answers afterwards.
+        for &k in keys.iter().take(5_000) {
+            assert!(plain.contains(k) && sorted.contains(k));
+        }
+    }
+}

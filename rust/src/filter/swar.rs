@@ -1,0 +1,269 @@
+//! SWAR (SIMD-Within-A-Register) primitives over 64-bit words (§4.2/§4.3).
+//!
+//! Fingerprints ("tags") are tightly packed into `u64` words: eight 8-bit,
+//! four 16-bit or two 32-bit tags per word. All bucket scans operate on
+//! whole words using the classic bit-twiddling-hacks zero-detection
+//! pattern (Anderson [1] in the paper), exactly as the CUDA kernels do:
+//!
+//! * [`Layout::zero_mask`] — one bit set at each *empty* lane's MSB;
+//! * [`Layout::match_mask`] — lanes equal to a broadcast tag;
+//! * [`first_lane`] — `FindFirstSet` over a lane mask;
+//! * [`Layout::replace`] / [`Layout::extract`] — lane read/write.
+//!
+//! The empty slot is encoded as tag `0`; fingerprint derivation therefore
+//! never produces 0 (see `policy.rs`).
+//!
+//! `Layout` is implemented by zero-sized types ([`Fp8`], [`Fp16`], [`Fp32`])
+//! so the whole filter monomorphises — the Rust analogue of the paper's
+//! compile-time template configuration (§4.7).
+
+/// Tag-packing layout: how `FP_BITS`-wide fingerprints pack into u64 words.
+pub trait Layout: Copy + Send + Sync + 'static {
+    /// Fingerprint width in bits (8, 16 or 32).
+    const FP_BITS: u32;
+    /// Tags per 64-bit word.
+    const TAGS_PER_WORD: u32 = 64 / Self::FP_BITS;
+    /// All-ones in one lane, i.e. the maximum tag value.
+    const LANE_MASK: u64 = if Self::FP_BITS == 64 {
+        u64::MAX
+    } else {
+        (1u64 << Self::FP_BITS) - 1
+    };
+    /// 0x0101..01-style pattern: LSB of every lane.
+    const LANE_LSBS: u64;
+    /// 0x8080..80-style pattern: MSB of every lane.
+    const LANE_MSBS: u64;
+
+    /// Human-readable name, for bench output.
+    const NAME: &'static str;
+
+    /// Broadcast a tag to all lanes.
+    #[inline(always)]
+    fn broadcast(tag: u64) -> u64 {
+        debug_assert!(tag <= Self::LANE_MASK);
+        tag.wrapping_mul(Self::LANE_LSBS)
+    }
+
+    /// Mask with the MSB of each all-zero lane set ("`ZeroMask`" in the
+    /// paper's pseudocode).
+    ///
+    /// Note: the *exact* per-lane variant of the bit-twiddling zero test is
+    /// used, `~(((v & ~msb) + ~msb) | v | ~msb)`, not the cheaper
+    /// `(v - lsb) & ~v & msb` one-liner — the latter only guarantees a
+    /// nonzero result when some lane is zero, and cross-lane borrows can
+    /// flag a lane holding value 1 right above an empty lane. We rely on
+    /// exact lane positions (CAS targets a specific slot), so exactness is
+    /// required. The per-lane add cannot carry across lanes because
+    /// `(b & 0x7F) + 0x7F <= 0xFE`.
+    #[inline(always)]
+    fn zero_mask(word: u64) -> u64 {
+        let low = !Self::LANE_MSBS;
+        !(((word & low).wrapping_add(low)) | word | low)
+    }
+
+    /// Mask with the MSB of each lane equal to `tag` set.
+    #[inline(always)]
+    fn match_mask(word: u64, tag: u64) -> u64 {
+        Self::zero_mask(word ^ Self::broadcast(tag))
+    }
+
+    /// Extract the tag in lane `slot`.
+    #[inline(always)]
+    fn extract(word: u64, slot: u32) -> u64 {
+        (word >> (slot * Self::FP_BITS)) & Self::LANE_MASK
+    }
+
+    /// Return `word` with lane `slot` replaced by `tag`.
+    #[inline(always)]
+    fn replace(word: u64, slot: u32, tag: u64) -> u64 {
+        debug_assert!(tag <= Self::LANE_MASK);
+        let shift = slot * Self::FP_BITS;
+        (word & !(Self::LANE_MASK << shift)) | (tag << shift)
+    }
+
+    /// Number of empty lanes in a word.
+    #[inline(always)]
+    fn count_empty(word: u64) -> u32 {
+        Self::zero_mask(word).count_ones()
+    }
+
+    /// Number of occupied lanes in a word.
+    #[inline(always)]
+    fn count_occupied(word: u64) -> u32 {
+        Self::TAGS_PER_WORD - Self::count_empty(word)
+    }
+
+    /// True if any lane equals `tag` ("`HasZeroSegment(w ^ pattern)`").
+    #[inline(always)]
+    fn contains_tag(word: u64, tag: u64) -> bool {
+        Self::match_mask(word, tag) != 0
+    }
+}
+
+/// Lane index of the first set MSB in a lane mask (`FindFirstSet`).
+/// Caller must ensure `mask != 0`.
+#[inline(always)]
+pub fn first_lane<L: Layout>(mask: u64) -> u32 {
+    debug_assert!(mask != 0);
+    mask.trailing_zeros() / L::FP_BITS
+}
+
+/// Clear the lane bit found by [`first_lane`] so scans can continue.
+#[inline(always)]
+pub fn clear_lane<L: Layout>(mask: u64, lane: u32) -> u64 {
+    mask & !(1u64 << (lane * L::FP_BITS + (L::FP_BITS - 1)))
+}
+
+/// 8-bit fingerprints, 8 per word.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Fp8;
+impl Layout for Fp8 {
+    const FP_BITS: u32 = 8;
+    const LANE_LSBS: u64 = 0x0101_0101_0101_0101;
+    const LANE_MSBS: u64 = 0x8080_8080_8080_8080;
+    const NAME: &'static str = "fp8";
+}
+
+/// 16-bit fingerprints, 4 per word — the paper's evaluation default.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Fp16;
+impl Layout for Fp16 {
+    const FP_BITS: u32 = 16;
+    const LANE_LSBS: u64 = 0x0001_0001_0001_0001;
+    const LANE_MSBS: u64 = 0x8000_8000_8000_8000;
+    const NAME: &'static str = "fp16";
+}
+
+/// 32-bit fingerprints, 2 per word.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Fp32;
+impl Layout for Fp32 {
+    const FP_BITS: u32 = 32;
+    const LANE_LSBS: u64 = 0x0000_0001_0000_0001;
+    const LANE_MSBS: u64 = 0x8000_0000_8000_0000;
+    const NAME: &'static str = "fp32";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scalar reference: recompute masks lane-by-lane.
+    fn zero_mask_ref<L: Layout>(word: u64) -> u64 {
+        let mut m = 0u64;
+        for s in 0..L::TAGS_PER_WORD {
+            if L::extract(word, s) == 0 {
+                m |= 1u64 << (s * L::FP_BITS + (L::FP_BITS - 1));
+            }
+        }
+        m
+    }
+
+    fn match_mask_ref<L: Layout>(word: u64, tag: u64) -> u64 {
+        let mut m = 0u64;
+        for s in 0..L::TAGS_PER_WORD {
+            if L::extract(word, s) == tag {
+                m |= 1u64 << (s * L::FP_BITS + (L::FP_BITS - 1));
+            }
+        }
+        m
+    }
+
+    fn sweep<L: Layout>() {
+        let mut rng = crate::util::SplitMix64::new(0xABCD);
+        for _ in 0..20_000 {
+            let word = rng.next_u64();
+            // Bias toward words with zero lanes too.
+            let word = if rng.next_u64() & 1 == 0 {
+                let lane = (rng.next_u64() % L::TAGS_PER_WORD as u64) as u32;
+                L::replace(word, lane, 0)
+            } else {
+                word
+            };
+            assert_eq!(L::zero_mask(word), zero_mask_ref::<L>(word), "{word:#x}");
+            let tag = rng.next_u64() & L::LANE_MASK;
+            assert_eq!(
+                L::match_mask(word, tag),
+                match_mask_ref::<L>(word, tag),
+                "{word:#x} tag {tag:#x}"
+            );
+        }
+    }
+
+    #[test]
+    fn swar_matches_scalar_fp8() {
+        sweep::<Fp8>();
+    }
+    #[test]
+    fn swar_matches_scalar_fp16() {
+        sweep::<Fp16>();
+    }
+    #[test]
+    fn swar_matches_scalar_fp32() {
+        sweep::<Fp32>();
+    }
+
+    #[test]
+    fn extract_replace_roundtrip() {
+        fn check<L: Layout>() {
+            let mut rng = crate::util::SplitMix64::new(7);
+            for _ in 0..5_000 {
+                let word = rng.next_u64();
+                let slot = (rng.next_u64() % L::TAGS_PER_WORD as u64) as u32;
+                let tag = rng.next_u64() & L::LANE_MASK;
+                let w2 = L::replace(word, slot, tag);
+                assert_eq!(L::extract(w2, slot), tag);
+                // Other lanes untouched.
+                for s in 0..L::TAGS_PER_WORD {
+                    if s != slot {
+                        assert_eq!(L::extract(w2, s), L::extract(word, s));
+                    }
+                }
+            }
+        }
+        check::<Fp8>();
+        check::<Fp16>();
+        check::<Fp32>();
+    }
+
+    #[test]
+    fn first_lane_positions() {
+        // Word with zeros in lanes 2 and 5 (fp8).
+        let mut w = u64::MAX;
+        w = Fp8::replace(w, 2, 0);
+        w = Fp8::replace(w, 5, 0);
+        let m = Fp8::zero_mask(w);
+        let l0 = first_lane::<Fp8>(m);
+        assert_eq!(l0, 2);
+        let m2 = clear_lane::<Fp8>(m, l0);
+        assert_eq!(first_lane::<Fp8>(m2), 5);
+        assert_eq!(clear_lane::<Fp8>(m2, 5), 0);
+    }
+
+    #[test]
+    fn broadcast_fills_lanes() {
+        let b = Fp16::broadcast(0xBEEF);
+        for s in 0..4 {
+            assert_eq!(Fp16::extract(b, s), 0xBEEF);
+        }
+    }
+
+    #[test]
+    fn counts() {
+        let mut w = 0u64; // all empty
+        assert_eq!(Fp16::count_empty(w), 4);
+        assert_eq!(Fp16::count_occupied(w), 0);
+        w = Fp16::replace(w, 1, 0x1234);
+        w = Fp16::replace(w, 3, 0x4321);
+        assert_eq!(Fp16::count_empty(w), 2);
+        assert_eq!(Fp16::count_occupied(w), 2);
+    }
+
+    #[test]
+    fn contains_tag_no_false_negative() {
+        let mut w = 0u64;
+        w = Fp8::replace(w, 6, 0x7F);
+        assert!(Fp8::contains_tag(w, 0x7F));
+        assert!(!Fp8::contains_tag(w, 0x80));
+    }
+}

@@ -1,0 +1,162 @@
+//! The bucket table: one contiguous, cache-line-aligned array of
+//! `AtomicU64` words in which all fingerprints live (§4.2, Figure 2).
+//!
+//! All mutation goes through 64-bit compare-and-swap on these words; reads
+//! on the query path are relaxed loads (the paper's non-coherent vector
+//! loads — queries are only safe when not concurrent with mutations, and
+//! the [`crate::coordinator`] enforces that phase separation).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// 64-byte aligned chunk so buckets start on cache-line boundaries, the
+/// CPU analogue of the GPU's 128-byte-aligned allocation.
+#[repr(C, align(64))]
+struct CacheLine([AtomicU64; 8]);
+
+pub struct Table {
+    lines: Box<[CacheLine]>,
+    num_words: usize,
+    pub words_per_bucket: usize,
+    pub num_buckets: usize,
+}
+
+impl Table {
+    pub fn new(num_buckets: usize, words_per_bucket: usize) -> Self {
+        let num_words = num_buckets * words_per_bucket;
+        let num_lines = num_words.div_ceil(8).max(1);
+        let mut v = Vec::with_capacity(num_lines);
+        for _ in 0..num_lines {
+            v.push(CacheLine(Default::default()));
+        }
+        Self {
+            lines: v.into_boxed_slice(),
+            num_words,
+            words_per_bucket,
+            num_buckets,
+        }
+    }
+
+    #[inline(always)]
+    fn word(&self, idx: usize) -> &AtomicU64 {
+        debug_assert!(idx < self.num_words);
+        &self.lines[idx >> 3].0[idx & 7]
+    }
+
+    /// Raw pointer to a word, for prefetch hints only.
+    #[inline(always)]
+    pub fn word_ptr(&self, idx: usize) -> *const AtomicU64 {
+        self.word(idx) as *const AtomicU64
+    }
+
+    /// Global word index of word `w` in bucket `b`.
+    #[inline(always)]
+    pub fn word_index(&self, bucket: usize, w: usize) -> usize {
+        bucket * self.words_per_bucket + w
+    }
+
+    /// Relaxed (non-coherent) load — the query path's vectorised read.
+    #[inline(always)]
+    pub fn load(&self, idx: usize) -> u64 {
+        self.word(idx).load(Ordering::Relaxed)
+    }
+
+    /// Acquire load used before CAS attempts.
+    #[inline(always)]
+    pub fn load_acquire(&self, idx: usize) -> u64 {
+        self.word(idx).load(Ordering::Acquire)
+    }
+
+    /// The one write primitive: compare-and-swap a whole word.
+    /// Returns `Ok(())` on success, `Err(current)` on failure.
+    #[inline(always)]
+    pub fn cas(&self, idx: usize, expected: u64, desired: u64) -> Result<(), u64> {
+        self.word(idx)
+            .compare_exchange(expected, desired, Ordering::AcqRel, Ordering::Acquire)
+            .map(|_| ())
+    }
+
+    /// Non-atomic store, only for construction/reset paths.
+    pub fn store(&self, idx: usize, value: u64) {
+        self.word(idx).store(value, Ordering::Release);
+    }
+
+    pub fn num_words(&self) -> usize {
+        self.num_words
+    }
+
+    /// Size of the fingerprint storage in bytes.
+    pub fn bytes(&self) -> usize {
+        self.num_words * 8
+    }
+
+    /// Copy the whole table out (feeds the AOT query artifact and tests).
+    pub fn snapshot(&self) -> Vec<u64> {
+        (0..self.num_words).map(|i| self.load(i)).collect()
+    }
+
+    /// Zero every word.
+    pub fn clear(&self) {
+        for i in 0..self.num_words {
+            self.store(i, 0);
+        }
+    }
+
+    /// Count occupied slots by scanning (exact; O(words)). Used to verify
+    /// the hierarchical occupancy counter.
+    pub fn count_occupied<L: super::swar::Layout>(&self) -> usize {
+        (0..self.num_words)
+            .map(|i| L::count_occupied(self.load(i)) as usize)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::swar::{Fp16, Layout};
+
+    #[test]
+    fn alignment() {
+        let t = Table::new(64, 4);
+        let p = t.word(0) as *const AtomicU64 as usize;
+        assert_eq!(p % 64, 0, "table must start cache-line aligned");
+    }
+
+    #[test]
+    fn cas_semantics() {
+        let t = Table::new(4, 4);
+        assert_eq!(t.load(3), 0);
+        t.cas(3, 0, 42).unwrap();
+        assert_eq!(t.load(3), 42);
+        assert_eq!(t.cas(3, 0, 7), Err(42));
+        assert_eq!(t.load(3), 42);
+    }
+
+    #[test]
+    fn word_indexing() {
+        let t = Table::new(10, 4);
+        assert_eq!(t.word_index(0, 0), 0);
+        assert_eq!(t.word_index(2, 3), 11);
+        assert_eq!(t.num_words(), 40);
+        assert_eq!(t.bytes(), 320);
+    }
+
+    #[test]
+    fn snapshot_and_clear() {
+        let t = Table::new(2, 2);
+        t.store(0, 1);
+        t.store(3, 0xFFFF);
+        assert_eq!(t.snapshot(), vec![1, 0, 0, 0xFFFF]);
+        assert_eq!(t.count_occupied::<Fp16>(), 1 + 1);
+        t.clear();
+        assert_eq!(t.snapshot(), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn count_occupied_matches_layout() {
+        let t = Table::new(1, 1);
+        let w = Fp16::replace(Fp16::replace(0, 0, 5), 2, 9);
+        t.store(0, w);
+        assert_eq!(t.count_occupied::<Fp16>(), 2);
+    }
+}

@@ -1,0 +1,27 @@
+//! GPU memory-system performance model.
+//!
+//! The paper's evaluation runs on an NVIDIA GH200 (HBM3, 3.4 TB/s) and an
+//! RTX PRO 6000 Blackwell (GDDR7, 1.8 TB/s). Neither is available here,
+//! so — per the reproduction contract — we *simulate the hardware*: a
+//! first-order analytic model of the GPU memory subsystem (§2.2 of the
+//! paper: sectors, coalescing, L2 vs DRAM residency, latency-bound
+//! dependent accesses, atomic throughput) that converts per-operation
+//! access statistics into estimated device throughput.
+//!
+//! The model is deliberately transparent: four roofline terms —
+//! bandwidth, latency×concurrency, compute, atomics — and the minimum
+//! wins. Access statistics for *our* filter come from real traces
+//! ([`crate::filter::TraceProbe`] attached to the actual lock-free
+//! implementation); the baselines get analytic access models derived
+//! from their structure (documented per filter in [`filters`]).
+//!
+//! What this reproduces is the *shape* of the paper's Figures 3, 6 and 7
+//! — who wins, by roughly what factor, and how L2-resident vs
+//! DRAM-resident scenarios differ — not absolute silicon numbers.
+
+pub mod spec;
+pub mod model;
+pub mod filters;
+
+pub use model::{estimate, OpClass, OpStats, Residency, ThroughputEstimate};
+pub use spec::{DeviceSpec, GH200, RTX_PRO_6000, XEON_W9_DDR5};

@@ -1,0 +1,254 @@
+//! The four-term roofline estimator.
+//!
+//! An operation class is summarised by per-op access statistics
+//! ([`OpStats`]); a device by its [`super::DeviceSpec`]. Estimated
+//! throughput is the minimum of:
+//!
+//! 1. **bandwidth**: `BW / (sectors_per_op × 32 B)` — the paper's claim
+//!    is that Cuckoo-GPU is the only dynamic filter that actually reaches
+//!    this term on HBM3;
+//! 2. **latency × concurrency**: `inflight / (serial_deps × latency)` —
+//!    dependent accesses (eviction chains, GQF run shifting) serialise
+//!    round trips and cap throughput regardless of bandwidth;
+//! 3. **compute**: `compute_gops / cycles_per_op` — the TCF's cooperative
+//!    sorting and SWAR arithmetic land here;
+//! 4. **atomics**: `atomic_gops / atomics_per_op`, derated by the CAS
+//!    failure (retry) fraction.
+
+use super::spec::DeviceSpec;
+
+/// Which memory level the structure lives in (the paper's two scenarios).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Residency {
+    L2,
+    Dram,
+}
+
+impl Residency {
+    pub fn name(self) -> &'static str {
+        match self {
+            Residency::L2 => "L2-resident",
+            Residency::Dram => "DRAM-resident",
+        }
+    }
+
+    pub fn for_bytes(spec: &DeviceSpec, bytes: usize) -> Self {
+        if spec.l2_resident(bytes) {
+            Residency::L2
+        } else {
+            Residency::Dram
+        }
+    }
+}
+
+/// Operation class, for reporting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    Insert,
+    QueryPositive,
+    QueryNegative,
+    Delete,
+}
+
+impl OpClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Insert => "insert",
+            OpClass::QueryPositive => "query+",
+            OpClass::QueryNegative => "query-",
+            OpClass::Delete => "delete",
+        }
+    }
+}
+
+/// Per-operation access statistics (averages over a batch).
+#[derive(Clone, Copy, Debug)]
+pub struct OpStats {
+    /// 32-byte sectors touched per op (after intra-warp coalescing).
+    pub sectors_per_op: f64,
+    /// Length of the *dependent* access chain (eviction chain steps,
+    /// quotient-run shift steps, ...). 1.0 = fully parallel single access.
+    pub serial_deps: f64,
+    /// Integer-pipe work per op, in scalar-op equivalents.
+    pub compute_ops: f64,
+    /// Atomic RMW/CAS issued per op.
+    pub atomics_per_op: f64,
+    /// Fraction of atomics that fail and retry (contention derate).
+    pub atomic_retry_frac: f64,
+}
+
+impl OpStats {
+    /// Build cuckoo-filter stats from a real execution trace.
+    pub fn from_trace(trace: &crate::filter::TraceProbe, ops: usize) -> Self {
+        let n = ops.max(1) as f64;
+        let atomics = trace.atomics as f64 / n;
+        // Serial dependency ≈ 1 (hash→bucket) + mean eviction chain.
+        let mean_evictions = if trace.eviction_samples.is_empty() {
+            0.0
+        } else {
+            trace.total_evictions() as f64 / trace.eviction_samples.len() as f64
+        };
+        Self {
+            sectors_per_op: trace.sector_touches as f64 / n,
+            serial_deps: 1.0 + mean_evictions,
+            // SWAR scan cost scales with words read.
+            compute_ops: 24.0 + 6.0 * (trace.reads as f64 / n),
+            atomics_per_op: atomics,
+            atomic_retry_frac: if trace.atomics == 0 {
+                0.0
+            } else {
+                trace.atomic_failures as f64 / trace.atomics as f64
+            },
+        }
+    }
+}
+
+/// The estimate plus the binding term, for analysis output.
+#[derive(Clone, Copy, Debug)]
+pub struct ThroughputEstimate {
+    /// Billions of ops per second — the paper's unit.
+    pub b_ops: f64,
+    pub bound: Bound,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bound {
+    Bandwidth,
+    Latency,
+    Compute,
+    Atomics,
+}
+
+impl Bound {
+    pub fn name(self) -> &'static str {
+        match self {
+            Bound::Bandwidth => "bandwidth",
+            Bound::Latency => "latency",
+            Bound::Compute => "compute",
+            Bound::Atomics => "atomics",
+        }
+    }
+}
+
+/// Estimate device throughput for an op class described by `stats`.
+pub fn estimate(spec: &DeviceSpec, residency: Residency, stats: &OpStats) -> ThroughputEstimate {
+    let (bw_gbs, latency_ns) = match residency {
+        Residency::L2 => (spec.l2_bw_gbs, spec.l2_latency_ns),
+        Residency::Dram => (spec.dram_bw_gbs, spec.dram_latency_ns),
+    };
+
+    // 1. Bandwidth term: sectors × 32 B per op.
+    let bytes_per_op = stats.sectors_per_op.max(0.25) * 32.0;
+    let bw_limit = bw_gbs * 1e9 / bytes_per_op;
+
+    // 2. Latency × concurrency: each op is a chain of `serial_deps`
+    //    dependent round trips; the device keeps `max_inflight` chains
+    //    going at once.
+    let chain_ns = stats.serial_deps.max(1.0) * latency_ns;
+    let lat_limit = spec.max_inflight / (chain_ns * 1e-9);
+
+    // 3. Compute.
+    let comp_limit = spec.compute_gops * 1e9 / stats.compute_ops.max(1.0);
+
+    // 4. Atomics, derated by retry traffic.
+    let eff_atomics = stats.atomics_per_op * (1.0 + stats.atomic_retry_frac);
+    let atomic_limit = if eff_atomics <= 0.0 {
+        f64::INFINITY
+    } else {
+        spec.atomic_gops * 1e9 / eff_atomics
+    };
+
+    let (mut best, mut bound) = (bw_limit, Bound::Bandwidth);
+    for (v, b) in [
+        (lat_limit, Bound::Latency),
+        (comp_limit, Bound::Compute),
+        (atomic_limit, Bound::Atomics),
+    ] {
+        if v < best {
+            best = v;
+            bound = b;
+        }
+    }
+    ThroughputEstimate {
+        b_ops: best / 1e9,
+        bound,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::spec::{GH200, RTX_PRO_6000};
+
+    fn simple_stats() -> OpStats {
+        OpStats {
+            sectors_per_op: 2.0,
+            serial_deps: 1.0,
+            compute_ops: 40.0,
+            atomics_per_op: 0.0,
+            atomic_retry_frac: 0.0,
+        }
+    }
+
+    #[test]
+    fn bandwidth_bound_in_dram() {
+        let e = estimate(&GH200, Residency::Dram, &simple_stats());
+        // 3.4 TB/s ÷ 64 B/op ≈ 53 B ops/s.
+        assert!(e.b_ops > 30.0 && e.b_ops < 60.0, "{e:?}");
+        assert_eq!(e.bound, Bound::Bandwidth);
+    }
+
+    #[test]
+    fn hbm_beats_gddr_when_bandwidth_bound() {
+        let s = simple_stats();
+        let h = estimate(&GH200, Residency::Dram, &s);
+        let g = estimate(&RTX_PRO_6000, Residency::Dram, &s);
+        assert!(h.b_ops > g.b_ops * 1.5, "HBM3 should lead: {h:?} vs {g:?}");
+    }
+
+    #[test]
+    fn long_chains_become_latency_bound() {
+        let mut s = simple_stats();
+        s.serial_deps = 20.0; // deep eviction chain / run shifting
+        let e = estimate(&GH200, Residency::Dram, &s);
+        assert_eq!(e.bound, Bound::Latency);
+        let short = estimate(&GH200, Residency::Dram, &simple_stats());
+        assert!(e.b_ops < short.b_ops / 4.0);
+    }
+
+    #[test]
+    fn compute_heavy_ops_bound_by_compute_in_l2() {
+        let mut s = simple_stats();
+        s.compute_ops = 4000.0; // TCF-style cooperative sorting
+        let e = estimate(&GH200, Residency::L2, &s);
+        assert_eq!(e.bound, Bound::Compute);
+        // The RTX (more SMs × higher clock) should pull ahead on a
+        // compute-bound op — the paper's System A vs B contrast.
+        let g = estimate(&RTX_PRO_6000, Residency::L2, &s);
+        assert!(g.b_ops > e.b_ops);
+    }
+
+    #[test]
+    fn l2_faster_than_dram() {
+        let s = simple_stats();
+        let l2 = estimate(&GH200, Residency::L2, &s);
+        let dram = estimate(&GH200, Residency::Dram, &s);
+        assert!(l2.b_ops > dram.b_ops);
+    }
+
+    #[test]
+    fn from_trace_conversion() {
+        use crate::filter::probe::Probe as _;
+        let mut t = crate::filter::TraceProbe::new();
+        for i in 0..100 {
+            t.read(i * 8); // distinct sectors
+            t.atomic(i * 8, i % 10 != 0);
+            t.evictions((i % 3 == 0) as u32);
+        }
+        let s = OpStats::from_trace(&t, 100);
+        assert!((s.sectors_per_op - 1.0).abs() < 1e-9);
+        assert!((s.atomics_per_op - 1.0).abs() < 1e-9);
+        assert!((s.atomic_retry_frac - 0.1).abs() < 1e-9);
+        assert!(s.serial_deps > 1.0);
+    }
+}

@@ -1,0 +1,114 @@
+//! Device descriptors for the paper's three systems (§5.1).
+
+/// First-order hardware description of a memory-bound accelerator.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Streaming multiprocessors (or cores for the CPU system).
+    pub sms: u32,
+    /// Core clock, GHz.
+    pub clock_ghz: f64,
+    /// Sustained DRAM bandwidth, GB/s.
+    pub dram_bw_gbs: f64,
+    /// DRAM access latency, ns.
+    pub dram_latency_ns: f64,
+    /// Unified L2 capacity, bytes.
+    pub l2_bytes: usize,
+    /// L2 bandwidth, GB/s (several × DRAM on modern parts).
+    pub l2_bw_gbs: f64,
+    /// L2 hit latency, ns.
+    pub l2_latency_ns: f64,
+    /// Maximum memory requests in flight device-wide (MLP): pending loads
+    /// per SM × SMs. Hides latency when chains are short.
+    pub max_inflight: f64,
+    /// Scalar integer ops/s device-wide (SMs × clock × lanes × IPC), Gops.
+    pub compute_gops: f64,
+    /// Sustained atomic CAS/RMW throughput to distinct lines, Gops.
+    pub atomic_gops: f64,
+}
+
+impl DeviceSpec {
+    /// Does a structure of `bytes` fit in L2? (The paper's two scenarios.)
+    pub fn l2_resident(&self, bytes: usize) -> bool {
+        bytes <= self.l2_bytes
+    }
+}
+
+/// System B: GH200 Grace-Hopper, H100 GPU, 96 GB HBM3 @ 3.4 TB/s, 132 SMs,
+/// 50 MB L2 (§5.1).
+pub const GH200: DeviceSpec = DeviceSpec {
+    name: "GH200-HBM3",
+    sms: 132,
+    clock_ghz: 1.83,
+    dram_bw_gbs: 3400.0,
+    dram_latency_ns: 600.0,
+    l2_bytes: 50 * 1024 * 1024,
+    l2_bw_gbs: 8000.0,
+    l2_latency_ns: 260.0,
+    // ~512 outstanding sectors per SM (2048 resident threads with
+    // fractional pending loads each; H100-class MSHR depth).
+    max_inflight: 132.0 * 512.0,
+    // 132 SMs × 1.83 GHz × 128 int lanes ≈ 31 Tops.
+    compute_gops: 31_000.0,
+    atomic_gops: 20.0,
+};
+
+/// System A: RTX PRO 6000 Blackwell, 96 GB GDDR7 @ 1.8 TB/s, 188 SMs,
+/// 128 MB L2 (§5.1). ~50% more cores than System B but half the DRAM
+/// bandwidth — the compute-vs-bandwidth contrast the paper leans on.
+pub const RTX_PRO_6000: DeviceSpec = DeviceSpec {
+    name: "RTXPRO6000-GDDR7",
+    sms: 188,
+    clock_ghz: 2.4,
+    dram_bw_gbs: 1800.0,
+    dram_latency_ns: 450.0,
+    l2_bytes: 128 * 1024 * 1024,
+    l2_bw_gbs: 9000.0,
+    l2_latency_ns: 240.0,
+    max_inflight: 188.0 * 512.0,
+    // 188 SMs × 2.4 GHz × 128 lanes ≈ 58 Tops.
+    compute_gops: 58_000.0,
+    atomic_gops: 24.0,
+};
+
+/// System C: Xeon W9-3595X, 60 cores, DDR5 @ 300 GB/s (§5.1) — the PCF
+/// test bed.
+pub const XEON_W9_DDR5: DeviceSpec = DeviceSpec {
+    name: "XeonW9-DDR5",
+    sms: 60,
+    clock_ghz: 2.0,
+    dram_bw_gbs: 300.0,
+    dram_latency_ns: 90.0,
+    l2_bytes: 120 * 1024 * 1024, // L3, acting as the cache level here
+    l2_bw_gbs: 1200.0,
+    l2_latency_ns: 25.0,
+    // ~12 line-fill buffers per core.
+    max_inflight: 60.0 * 12.0,
+    // 60 cores × 2 GHz × ~4 IPC scalar.
+    compute_gops: 480.0,
+    atomic_gops: 1.0,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residency_thresholds() {
+        // The paper's two scenarios: 2^22 slots (fp16, b independent) is
+        // L2-resident (8 MiB), 2^28 slots (512 MiB) is DRAM-resident.
+        let l2_bytes = (1usize << 22) * 2;
+        let dram_bytes = (1usize << 28) * 2;
+        assert!(GH200.l2_resident(l2_bytes));
+        assert!(!GH200.l2_resident(dram_bytes));
+        assert!(RTX_PRO_6000.l2_resident(l2_bytes));
+        assert!(!RTX_PRO_6000.l2_resident(dram_bytes));
+    }
+
+    #[test]
+    fn bandwidth_ordering() {
+        assert!(GH200.dram_bw_gbs > RTX_PRO_6000.dram_bw_gbs);
+        assert!(RTX_PRO_6000.sms > GH200.sms);
+        assert!(XEON_W9_DDR5.dram_bw_gbs < RTX_PRO_6000.dram_bw_gbs / 4.0);
+    }
+}

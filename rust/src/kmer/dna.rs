@@ -1,0 +1,198 @@
+//! 2-bit DNA encoding and k-mer packing (§5.5: "the text-based k-mers
+//! were packed into a 2-bit-per-base binary representation ... allowing
+//! each 31-mer to fit within a single uint64_t").
+
+/// A nucleotide. `N` (and anything else) is *not* encodable — k-mers
+/// spanning Ns are skipped, as KMC does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Base {
+    A = 0,
+    C = 1,
+    G = 2,
+    T = 3,
+}
+
+impl Base {
+    #[inline(always)]
+    pub fn from_ascii(c: u8) -> Option<Base> {
+        match c {
+            b'A' | b'a' => Some(Base::A),
+            b'C' | b'c' => Some(Base::C),
+            b'G' | b'g' => Some(Base::G),
+            b'T' | b't' => Some(Base::T),
+            _ => None,
+        }
+    }
+
+    #[inline(always)]
+    pub fn to_ascii(self) -> u8 {
+        b"ACGT"[self as usize]
+    }
+
+    #[inline(always)]
+    pub fn complement(self) -> Base {
+        match self {
+            Base::A => Base::T,
+            Base::C => Base::G,
+            Base::G => Base::C,
+            Base::T => Base::A,
+        }
+    }
+
+    #[inline(always)]
+    pub fn code(self) -> u64 {
+        self as u64
+    }
+}
+
+/// 2-bit code of one ASCII base (None for N etc.).
+#[inline(always)]
+pub fn code_of(c: u8) -> Option<u64> {
+    Base::from_ascii(c).map(Base::code)
+}
+
+/// Pack `k` ASCII bases into a u64 (k ≤ 31; bit 2i+1..2i holds base
+/// k-1-i, i.e. the first base is in the most-significant position —
+/// lexicographic order is preserved). Returns None if any base is
+/// unencodable.
+pub fn pack_kmer(seq: &[u8]) -> Option<u64> {
+    assert!(seq.len() <= 31, "k must be <= 31 to fit a u64");
+    let mut v = 0u64;
+    for &c in seq {
+        v = (v << 2) | code_of(c)?;
+    }
+    Some(v)
+}
+
+/// Unpack a packed k-mer back to ASCII (for tests / debugging).
+pub fn unpack_kmer(mut v: u64, k: usize) -> Vec<u8> {
+    let mut out = vec![0u8; k];
+    for i in (0..k).rev() {
+        out[i] = Base::from_code((v & 3) as u8).to_ascii();
+        v >>= 2;
+    }
+    out
+}
+
+impl Base {
+    #[inline(always)]
+    pub fn from_code(code: u8) -> Base {
+        match code & 3 {
+            0 => Base::A,
+            1 => Base::C,
+            2 => Base::G,
+            _ => Base::T,
+        }
+    }
+}
+
+/// Reverse complement of a packed k-mer.
+pub fn revcomp_packed(v: u64, k: usize) -> u64 {
+    // Complement: A<->T (00<->11), C<->G (01<->10) == bitwise NOT per 2-bit.
+    let mut x = !v;
+    // Reverse 2-bit groups.
+    let mut out = 0u64;
+    for _ in 0..k {
+        out = (out << 2) | (x & 3);
+        x >>= 2;
+    }
+    out
+}
+
+/// Canonical k-mer: min(kmer, revcomp) — KMC3's convention for "distinct"
+/// counting (a k-mer and its reverse complement are the same molecule).
+#[inline]
+pub fn canonical_kmer(v: u64, k: usize) -> u64 {
+    v.min(revcomp_packed(v, k))
+}
+
+/// Iterate all packed k-mers of a sequence, skipping windows with Ns.
+/// Calls `f(packed)` for each valid window (non-canonical; callers decide).
+pub fn for_each_kmer(seq: &[u8], k: usize, mut f: impl FnMut(u64)) {
+    assert!(k <= 31 && k >= 1);
+    let mask = if k == 32 { u64::MAX } else { (1u64 << (2 * k)) - 1 };
+    let mut v = 0u64;
+    let mut valid = 0usize; // consecutive encodable bases ending here
+    for &c in seq {
+        match code_of(c) {
+            Some(code) => {
+                v = ((v << 2) | code) & mask;
+                valid += 1;
+                if valid >= k {
+                    f(v);
+                }
+            }
+            None => valid = 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let s = b"ACGTACGTACGTACGTACGTACGTACGTACG"; // 31 bases
+        let v = pack_kmer(s).unwrap();
+        assert_eq!(unpack_kmer(v, 31), s.to_vec());
+    }
+
+    #[test]
+    fn pack_rejects_n() {
+        assert!(pack_kmer(b"ACGN").is_none());
+    }
+
+    #[test]
+    fn lexicographic_order_preserved() {
+        let a = pack_kmer(b"AAAC").unwrap();
+        let b = pack_kmer(b"AAAG").unwrap();
+        let c = pack_kmer(b"CAAA").unwrap();
+        assert!(a < b && b < c);
+    }
+
+    #[test]
+    fn revcomp_involution() {
+        let v = pack_kmer(b"ACGTTGCAACGTTGCAACGTTGCAACGTTGC").unwrap();
+        assert_eq!(revcomp_packed(revcomp_packed(v, 31), 31), v);
+    }
+
+    #[test]
+    fn revcomp_known() {
+        // revcomp(ACGT) = ACGT (palindrome), revcomp(AAAA) = TTTT.
+        let v = pack_kmer(b"ACGT").unwrap();
+        assert_eq!(revcomp_packed(v, 4), v);
+        let a = pack_kmer(b"AAAA").unwrap();
+        let t = pack_kmer(b"TTTT").unwrap();
+        assert_eq!(revcomp_packed(a, 4), t);
+        // revcomp(ACCT) = AGGT
+        let x = pack_kmer(b"ACCT").unwrap();
+        let y = pack_kmer(b"AGGT").unwrap();
+        assert_eq!(revcomp_packed(x, 4), y);
+    }
+
+    #[test]
+    fn canonical_is_same_for_both_strands() {
+        let v = pack_kmer(b"GATTACAGATTACAGATTACAGATTACAGAT").unwrap();
+        let rc = revcomp_packed(v, 31);
+        assert_eq!(canonical_kmer(v, 31), canonical_kmer(rc, 31));
+    }
+
+    #[test]
+    fn for_each_kmer_skips_ns() {
+        let mut kmers = Vec::new();
+        for_each_kmer(b"ACGTNACGTA", 4, |v| kmers.push(v));
+        // Windows: ACGT (then N breaks), ACGT, CGTA = 3 valid.
+        assert_eq!(kmers.len(), 3);
+        assert_eq!(kmers[0], pack_kmer(b"ACGT").unwrap());
+        assert_eq!(kmers[2], pack_kmer(b"CGTA").unwrap());
+    }
+
+    #[test]
+    fn for_each_kmer_count() {
+        let seq = vec![b'A'; 100];
+        let mut n = 0;
+        for_each_kmer(&seq, 31, |_| n += 1);
+        assert_eq!(n, 70);
+    }
+}

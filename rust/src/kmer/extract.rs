@@ -1,0 +1,103 @@
+//! KMC3-like distinct k-mer extraction: canonical packed k-mers,
+//! deduplicated. The case-study pipeline is
+//! genome → packed canonical 31-mers → distinct set → filter workload.
+
+use super::dna::{canonical_kmer, for_each_kmer};
+use std::collections::HashMap;
+
+/// Distinct canonical k-mers plus multiplicity statistics.
+pub struct KmerCounts {
+    /// Distinct canonical packed k-mers (sorted).
+    pub distinct: Vec<u64>,
+    /// Multiplicity per distinct k-mer.
+    pub counts: HashMap<u64, u32>,
+    /// Total k-mer windows seen.
+    pub total_kmers: usize,
+    pub k: usize,
+}
+
+impl KmerCounts {
+    pub fn from_seq(seq: &[u8], k: usize) -> Self {
+        let mut counts: HashMap<u64, u32> = HashMap::new();
+        let mut total = 0usize;
+        for_each_kmer(seq, k, |v| {
+            total += 1;
+            *counts.entry(canonical_kmer(v, k)).or_insert(0) += 1;
+        });
+        let mut distinct: Vec<u64> = counts.keys().cloned().collect();
+        distinct.sort_unstable();
+        Self {
+            distinct,
+            counts,
+            total_kmers: total,
+            k,
+        }
+    }
+}
+
+/// Just the distinct canonical k-mers (sorted), without multiplicities —
+/// cheaper for the big benchmark workloads (sort + dedup, like KMC's
+/// final stage).
+pub fn distinct_kmers(seq: &[u8], k: usize) -> Vec<u64> {
+    let mut all = Vec::new();
+    for_each_kmer(seq, k, |v| all.push(canonical_kmer(v, k)));
+    all.sort_unstable();
+    all.dedup();
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmer::dna::pack_kmer;
+
+    #[test]
+    fn distinct_simple() {
+        // AAAA repeated → exactly one distinct canonical 4-mer.
+        let d = distinct_kmers(b"AAAAAAAA", 4);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0], pack_kmer(b"AAAA").unwrap()); // AAAA < TTTT
+    }
+
+    #[test]
+    fn strands_collapse() {
+        // A sequence and its reverse complement yield identical sets.
+        let fwd = b"GATTACAGATTACAGATTACA";
+        let rc: Vec<u8> = fwd
+            .iter()
+            .rev()
+            .map(|&c| match c {
+                b'A' => b'T',
+                b'T' => b'A',
+                b'C' => b'G',
+                _ => b'C',
+            })
+            .collect();
+        assert_eq!(distinct_kmers(fwd, 11), distinct_kmers(&rc, 11));
+    }
+
+    #[test]
+    fn counts_match_windows() {
+        let counts = KmerCounts::from_seq(b"ACGTACGTACGT", 4);
+        assert_eq!(counts.total_kmers, 9);
+        let sum: u32 = counts.counts.values().sum();
+        assert_eq!(sum as usize, counts.total_kmers);
+        assert_eq!(counts.distinct.len(), counts.counts.len());
+    }
+
+    #[test]
+    fn ns_break_windows() {
+        let d = distinct_kmers(b"ACGTNNNNACGT", 4);
+        assert_eq!(d.len(), 1); // only ACGT on both sides (same canonical)
+    }
+
+    #[test]
+    fn distinct_sorted_deduped() {
+        let g = crate::kmer::synth::SyntheticGenome::generate(crate::kmer::SynthConfig {
+            length: 50_000,
+            ..Default::default()
+        });
+        let d = distinct_kmers(&g.seq, 31);
+        assert!(d.windows(2).all(|w| w[0] < w[1]), "not sorted/deduped");
+    }
+}

@@ -1,0 +1,96 @@
+//! Minimal FASTA reader/writer (the case-study input format).
+
+use std::io::{BufRead, BufReader, Read, Write};
+
+/// One FASTA record.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Record {
+    pub id: String,
+    pub seq: Vec<u8>,
+}
+
+/// Parse all records from a reader.
+pub fn read_fasta<R: Read>(r: R) -> std::io::Result<Vec<Record>> {
+    let mut records = Vec::new();
+    let mut cur: Option<Record> = None;
+    for line in BufReader::new(r).lines() {
+        let line = line?;
+        let line = line.trim_end();
+        if let Some(id) = line.strip_prefix('>') {
+            if let Some(rec) = cur.take() {
+                records.push(rec);
+            }
+            cur = Some(Record {
+                id: id.split_whitespace().next().unwrap_or("").to_string(),
+                seq: Vec::new(),
+            });
+        } else if !line.is_empty() {
+            match &mut cur {
+                Some(rec) => rec.seq.extend_from_slice(line.as_bytes()),
+                None => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        "sequence data before any '>' header",
+                    ))
+                }
+            }
+        }
+    }
+    if let Some(rec) = cur {
+        records.push(rec);
+    }
+    Ok(records)
+}
+
+/// Write records, wrapping sequence lines at 80 columns.
+pub fn write_fasta<W: Write>(mut w: W, records: &[Record]) -> std::io::Result<()> {
+    for rec in records {
+        writeln!(w, ">{}", rec.id)?;
+        for chunk in rec.seq.chunks(80) {
+            w.write_all(chunk)?;
+            writeln!(w)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let recs = vec![
+            Record {
+                id: "chr1".into(),
+                seq: b"ACGTACGTACGT".to_vec(),
+            },
+            Record {
+                id: "chr2".into(),
+                seq: vec![b'G'; 200],
+            },
+        ];
+        let mut buf = Vec::new();
+        write_fasta(&mut buf, &recs).unwrap();
+        let parsed = read_fasta(&buf[..]).unwrap();
+        assert_eq!(parsed, recs);
+    }
+
+    #[test]
+    fn header_with_description() {
+        let text = b">chr1 Homo sapiens chromosome 1\nACGT\nACGT\n";
+        let recs = read_fasta(&text[..]).unwrap();
+        assert_eq!(recs[0].id, "chr1");
+        assert_eq!(recs[0].seq, b"ACGTACGT");
+    }
+
+    #[test]
+    fn rejects_headerless() {
+        assert!(read_fasta(&b"ACGT\n"[..]).is_err());
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(read_fasta(&b""[..]).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,23 @@
+//! Genomic k-mer substrate for the paper's case study (§5.5).
+//!
+//! The paper indexes all distinct 31-mers of the T2T-CHM13 human genome
+//! (packed 2-bit-per-base into u64 by KMC3). That dataset isn't
+//! available here, so [`synth`] generates a human-like synthetic genome
+//! (repeat families, tandem repeats, GC skew, N runs) whose *distinct
+//! packed 31-mer distribution* — the only thing the filter sees —
+//! matches the real workload's character: high-entropy keys with heavy
+//! duplication from repeats. See DESIGN.md §2.
+//!
+//! * [`dna`]     — 2-bit encoding, reverse complement, canonical k-mers;
+//! * [`fasta`]   — FASTA read/write;
+//! * [`synth`]   — the synthetic genome generator;
+//! * [`extract`] — KMC3-like distinct-k-mer extraction (sort + dedup).
+
+pub mod dna;
+pub mod fasta;
+pub mod synth;
+pub mod extract;
+
+pub use dna::{canonical_kmer, pack_kmer, revcomp_packed, Base};
+pub use extract::{distinct_kmers, KmerCounts};
+pub use synth::{SynthConfig, SyntheticGenome};

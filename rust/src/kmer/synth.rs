@@ -1,0 +1,232 @@
+//! Synthetic human-like genome generator — the T2T-CHM13 stand-in.
+//!
+//! What matters for the filter benchmark is the *distribution of packed
+//! 31-mers*: real genomes are far from uniform — repeat families (LINEs,
+//! SINEs, satellites) duplicate long stretches, tandem repeats produce
+//! low-complexity runs, and assembly gaps contribute N runs that break
+//! k-mer windows. The generator reproduces those features:
+//!
+//! * a library of repeat elements is seeded once, then *copied* with
+//!   point mutations all over the genome (≈50% of sequence, like the
+//!   human genome's repeat content);
+//! * tandem repeats with short motifs (satellite DNA);
+//! * the rest is random sequence with a configurable GC bias;
+//! * occasional N runs.
+//!
+//! The k-mer *duplication skew* (many k-mers occur once, repeat-derived
+//! k-mers occur hundreds of times) is what exercises the filter the same
+//! way the real genome does.
+
+use crate::util::prng::Xoshiro256;
+
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    /// Total length in bases.
+    pub length: usize,
+    /// Fraction of the genome covered by repeat-family copies (~0.5 for
+    /// human).
+    pub repeat_fraction: f64,
+    /// Number of distinct repeat families.
+    pub families: usize,
+    /// Repeat element length range.
+    pub family_len: (usize, usize),
+    /// Point-mutation rate when copying a repeat element.
+    pub mutation_rate: f64,
+    /// Probability of starting an N-run at any position.
+    pub n_run_rate: f64,
+    /// GC content (human ≈ 0.41).
+    pub gc_content: f64,
+    pub seed: u64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        Self {
+            length: 1 << 20, // 1 Mbp default; benches scale this up
+            repeat_fraction: 0.5,
+            families: 24,
+            family_len: (300, 6000),
+            mutation_rate: 0.03,
+            n_run_rate: 2e-6,
+            gc_content: 0.41,
+            seed: 0x9E0C_0DE5,
+        }
+    }
+}
+
+pub struct SyntheticGenome {
+    pub seq: Vec<u8>,
+    pub cfg: SynthConfig,
+}
+
+impl SyntheticGenome {
+    pub fn generate(cfg: SynthConfig) -> Self {
+        let mut rng = Xoshiro256::new(cfg.seed);
+        // Seed the repeat library.
+        let families: Vec<Vec<u8>> = (0..cfg.families)
+            .map(|_| {
+                let len = cfg.family_len.0
+                    + rng.next_below((cfg.family_len.1 - cfg.family_len.0) as u64 + 1) as usize;
+                random_seq(&mut rng, len, cfg.gc_content)
+            })
+            .collect();
+
+        let mut seq = Vec::with_capacity(cfg.length);
+        while seq.len() < cfg.length {
+            let roll = rng.next_f64();
+            if roll < cfg.repeat_fraction {
+                // Insert a mutated copy of a repeat element.
+                let fam = &families[rng.next_below(families.len() as u64) as usize];
+                for &b in fam {
+                    if seq.len() >= cfg.length {
+                        break;
+                    }
+                    if rng.next_f64() < cfg.mutation_rate {
+                        seq.push(random_base(&mut rng, cfg.gc_content));
+                    } else {
+                        seq.push(b);
+                    }
+                }
+            } else if roll < cfg.repeat_fraction + 0.08 {
+                // Tandem repeat: short motif repeated many times.
+                let motif_len = 2 + rng.next_below(6) as usize;
+                let motif = random_seq(&mut rng, motif_len, cfg.gc_content);
+                let copies = 20 + rng.next_below(200) as usize;
+                for _ in 0..copies {
+                    for &b in &motif {
+                        if seq.len() >= cfg.length {
+                            break;
+                        }
+                        seq.push(b);
+                    }
+                }
+            } else {
+                // Unique sequence stretch.
+                let len = 200 + rng.next_below(2000) as usize;
+                for _ in 0..len {
+                    if seq.len() >= cfg.length {
+                        break;
+                    }
+                    if rng.next_f64() < cfg.n_run_rate {
+                        // N run (assembly gap).
+                        let n = 50 + rng.next_below(500) as usize;
+                        for _ in 0..n {
+                            if seq.len() >= cfg.length {
+                                break;
+                            }
+                            seq.push(b'N');
+                        }
+                    } else {
+                        seq.push(random_base(&mut rng, cfg.gc_content));
+                    }
+                }
+            }
+        }
+        seq.truncate(cfg.length);
+        Self { seq, cfg }
+    }
+
+    /// As a single-record FASTA.
+    pub fn to_fasta(&self) -> Vec<super::fasta::Record> {
+        vec![super::fasta::Record {
+            id: "synthetic_chm13_like".into(),
+            seq: self.seq.clone(),
+        }]
+    }
+}
+
+fn random_base(rng: &mut Xoshiro256, gc: f64) -> u8 {
+    if rng.next_f64() < gc {
+        if rng.next_u64() & 1 == 0 {
+            b'G'
+        } else {
+            b'C'
+        }
+    } else if rng.next_u64() & 1 == 0 {
+        b'A'
+    } else {
+        b'T'
+    }
+}
+
+fn random_seq(rng: &mut Xoshiro256, len: usize, gc: f64) -> Vec<u8> {
+    (0..len).map(|_| random_base(rng, gc)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_length() {
+        let g = SyntheticGenome::generate(SynthConfig {
+            length: 100_000,
+            ..Default::default()
+        });
+        assert_eq!(g.seq.len(), 100_000);
+    }
+
+    #[test]
+    fn alphabet_is_acgtn() {
+        let g = SyntheticGenome::generate(SynthConfig {
+            length: 50_000,
+            ..Default::default()
+        });
+        assert!(g.seq.iter().all(|&b| matches!(b, b'A' | b'C' | b'G' | b'T' | b'N')));
+    }
+
+    #[test]
+    fn gc_content_close_to_target() {
+        let g = SyntheticGenome::generate(SynthConfig {
+            length: 500_000,
+            ..Default::default()
+        });
+        let gc = g.seq.iter().filter(|&&b| b == b'G' || b == b'C').count() as f64;
+        let acgt = g.seq.iter().filter(|&&b| b != b'N').count() as f64;
+        let ratio = gc / acgt;
+        assert!((0.30..0.52).contains(&ratio), "gc = {ratio}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = SyntheticGenome::generate(SynthConfig {
+            length: 10_000,
+            seed: 7,
+            ..Default::default()
+        });
+        let b = SyntheticGenome::generate(SynthConfig {
+            length: 10_000,
+            seed: 7,
+            ..Default::default()
+        });
+        assert_eq!(a.seq, b.seq);
+        let c = SyntheticGenome::generate(SynthConfig {
+            length: 10_000,
+            seed: 8,
+            ..Default::default()
+        });
+        assert_ne!(a.seq, c.seq);
+    }
+
+    #[test]
+    fn kmer_duplication_skew_present() {
+        // Repeats must make some 31-mers occur many times while most
+        // occur once — the property that distinguishes genomic keys from
+        // uniform keys.
+        let g = SyntheticGenome::generate(SynthConfig {
+            length: 400_000,
+            ..Default::default()
+        });
+        let counts = super::super::extract::KmerCounts::from_seq(&g.seq, 31);
+        let total = counts.total_kmers;
+        let distinct = counts.distinct.len();
+        assert!(distinct > 0);
+        let dup_ratio = total as f64 / distinct as f64;
+        assert!(
+            dup_ratio > 1.3,
+            "expected duplication skew, total/distinct = {dup_ratio}"
+        );
+        let max_count = *counts.counts.values().max().unwrap();
+        assert!(max_count > 20, "no high-multiplicity repeat k-mers ({max_count})");
+    }
+}

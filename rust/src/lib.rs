@@ -1,0 +1,46 @@
+//! # cuckoo-gpu — a reproduction of *Cuckoo-GPU: Accelerating Cuckoo Filters on Modern GPUs*
+//!
+//! This crate reproduces the system described in Dortmann, Vieth & Schmidt
+//! (CS.DC 2026) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the lock-free Cuckoo-filter core
+//!   ([`filter`]), a batch "kernel-launch" execution engine ([`device`]),
+//!   the five comparison baselines ([`baselines`]), a GPU memory-system
+//!   performance model ([`gpusim`]), a genomic k-mer substrate ([`kmer`]),
+//!   the serving coordinator ([`coordinator`]) and the PJRT runtime
+//!   ([`runtime`]) that executes the AOT-compiled query artifacts.
+//! * **Layer 2** — `python/compile/model.py`: the batched filter math in
+//!   JAX, lowered once to HLO text.
+//! * **Layer 1** — `python/compile/kernels/`: Pallas kernels for hashing
+//!   and SWAR bucket queries (interpret mode, validated against `ref.py`).
+//!
+//! The paper's CUDA device is substituted by (a) real lock-free concurrency
+//! over `AtomicU64` words executed by a thread-pool device, and (b) an
+//! analytic GPU memory model that reproduces the L2-resident vs
+//! DRAM-resident behaviour of the evaluation section. See `DESIGN.md`.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use cuckoo_gpu::filter::{CuckooConfig, CuckooFilter, Fp16};
+//!
+//! let cfg = CuckooConfig::with_capacity(1 << 12);
+//! let filter = CuckooFilter::<Fp16>::new(cfg).unwrap();
+//! assert!(filter.insert(42).is_ok());
+//! assert!(filter.contains(42));
+//! assert!(filter.remove(42));
+//! assert!(!filter.contains(42));
+//! ```
+
+pub mod util;
+pub mod filter;
+pub mod device;
+pub mod baselines;
+pub mod gpusim;
+pub mod workload;
+pub mod kmer;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+
+pub use filter::{CuckooConfig, CuckooFilter, Fp16, Fp32, Fp8};

@@ -1,0 +1,137 @@
+//! `repro` — the Cuckoo-GPU reproduction CLI.
+//!
+//! Subcommands:
+//! ```text
+//! repro bench <fig3|fig4|fig5|fig6|fig7|fig8|all> [--paper-scale]
+//!       [--l2-slots N] [--dram-slots N] [--runs N] [--workers N]
+//!       [--out-dir DIR]
+//! repro serve [--addr HOST:PORT] [--capacity N] [--shards N]
+//!       [--artifacts DIR]          # line-protocol filter server
+//! repro selftest                   # quick end-to-end sanity check
+//! repro info                       # build/config/device info
+//! ```
+
+use cuckoo_gpu::bench::{self, BenchOpts};
+use cuckoo_gpu::coordinator::{BatcherConfig, Engine, EngineConfig};
+use cuckoo_gpu::util::cli::Args;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("bench") => cmd_bench(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("selftest") => cmd_selftest(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!("usage: repro <bench|serve|selftest|info> [options]");
+            eprintln!("       repro bench <fig3|fig4|fig5|fig6|fig7|fig8|all> [--paper-scale]");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_bench(args: &Args) {
+    let opts = BenchOpts::from_args(args);
+    let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let t = cuckoo_gpu::util::Timer::new();
+    match which {
+        "fig3" => bench::fig3::run(&opts),
+        "fig4" => bench::fig4::run(&opts),
+        "fig5" => bench::fig5::run(&opts),
+        "fig6" => bench::fig6::run(&opts),
+        "fig7" => bench::fig7::run(&opts),
+        "fig8" => bench::fig8::run(&opts),
+        "all" => {
+            bench::fig3::run(&opts);
+            bench::fig4::run(&opts);
+            bench::fig5::run(&opts);
+            bench::fig6::run(&opts);
+            bench::fig7::run(&opts);
+            bench::fig8::run(&opts);
+        }
+        other => {
+            eprintln!("unknown figure '{other}' (expected fig3..fig8 or all)");
+            std::process::exit(2);
+        }
+    }
+    println!("\nbench '{which}' done in {:.1}s; CSVs in {}", t.elapsed_secs(), opts.out_dir.display());
+}
+
+fn cmd_serve(args: &Args) {
+    let addr = args.get_or("addr", "127.0.0.1:7070").to_string();
+    let engine = if let Some(dir) = args.get("artifacts") {
+        println!("loading PJRT artifacts from {dir}...");
+        Arc::new(Engine::with_pjrt(dir, args.get_usize("workers", cuckoo_gpu::device::default_workers())).expect("engine"))
+    } else {
+        Arc::new(
+            Engine::new(EngineConfig {
+                capacity: args.get_usize("capacity", 1 << 20),
+                shards: args.get_usize("shards", 1),
+                workers: args.get_usize("workers", cuckoo_gpu::device::default_workers()),
+                artifacts_dir: None,
+            })
+            .expect("engine"),
+        )
+    };
+    println!(
+        "serving on {addr} (pjrt={}, workers={})",
+        engine.pjrt_active(),
+        args.get_usize("workers", cuckoo_gpu::device::default_workers())
+    );
+    let server = cuckoo_gpu::coordinator::server::Server::new(engine, BatcherConfig::default());
+    server
+        .serve(&addr, |a| println!("listening on {a}"))
+        .expect("server failed");
+}
+
+fn cmd_selftest(args: &Args) {
+    println!("== selftest ==");
+    let opts = BenchOpts {
+        l2_slots: 1 << 14,
+        dram_slots: 1 << 15,
+        runs: 1,
+        warmup: 0,
+        workers: args.get_usize("workers", 4),
+        out_dir: std::env::temp_dir().join("cuckoo_selftest"),
+    };
+    bench::fig3::run(&opts);
+    // PJRT path if artifacts exist.
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let engine = Engine::with_pjrt(dir, 4).expect("pjrt engine");
+        use cuckoo_gpu::coordinator::{OpKind, Request};
+        let keys: Vec<u64> = (0..1000u64).map(|i| i * 7 + 1).collect();
+        engine.execute(&Request::new(OpKind::Insert, keys.clone()));
+        let r = engine.execute(&Request::new(OpKind::Query, keys));
+        assert_eq!(r.successes, 1000);
+        println!("PJRT query path OK ({} hits)", r.successes);
+    } else {
+        println!("(artifacts missing; run `make artifacts` for the PJRT path)");
+    }
+    println!("selftest OK");
+}
+
+fn cmd_info() {
+    println!("cuckoo-gpu reproduction of 'Cuckoo-GPU: Accelerating Cuckoo Filters on Modern GPUs'");
+    println!("workers(default) = {}", cuckoo_gpu::device::default_workers());
+    for spec in [
+        cuckoo_gpu::gpusim::GH200,
+        cuckoo_gpu::gpusim::RTX_PRO_6000,
+        cuckoo_gpu::gpusim::XEON_W9_DDR5,
+    ] {
+        println!(
+            "device model {}: {} SMs, {:.1} GHz, DRAM {:.0} GB/s, L2 {} MiB",
+            spec.name,
+            spec.sms,
+            spec.clock_ghz,
+            spec.dram_bw_gbs,
+            spec.l2_bytes >> 20
+        );
+    }
+    let dir = std::path::Path::new("artifacts");
+    println!(
+        "artifacts: {}",
+        if dir.join("manifest.json").exists() { "present" } else { "missing (run `make artifacts`)" }
+    );
+}

@@ -1,0 +1,103 @@
+//! Runtime actor: the xla crate's PJRT client is `Rc`-based and thus
+//! neither `Send` nor `Sync`, so the compiled executables live on one
+//! dedicated driver thread. [`RuntimeHandle`] is the cloneable,
+//! thread-safe front the engine uses; jobs cross over an mpsc channel.
+//! (This mirrors how real deployments pin a CUDA context to a driver
+//! thread and feed it from a request pool.)
+
+use super::artifacts::ModelGeometry;
+use super::client::{QueryRuntime, RuntimeError};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+enum Job {
+    Query {
+        words: Arc<Vec<u64>>,
+        keys: Vec<u64>,
+        reply: mpsc::Sender<Result<Vec<bool>, String>>,
+    },
+    Hash {
+        keys: Vec<u64>,
+        reply: mpsc::Sender<Result<(Vec<u32>, Vec<u32>, Vec<u32>), String>>,
+    },
+    Shutdown,
+}
+
+/// Thread-safe handle to the PJRT driver thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Arc<Mutex<mpsc::Sender<Job>>>,
+    pub geometry: ModelGeometry,
+}
+
+impl RuntimeHandle {
+    /// Spawn the driver thread, loading + compiling all artifacts in `dir`.
+    /// Fails fast if loading fails.
+    pub fn spawn(dir: impl AsRef<std::path::Path>) -> Result<Self, RuntimeError> {
+        let dir = dir.as_ref().to_path_buf();
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<ModelGeometry, String>>();
+        std::thread::Builder::new()
+            .name("pjrt-driver".into())
+            .spawn(move || {
+                let rt = match QueryRuntime::load(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(rt.manifest.geometry.clone()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e.to_string()));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Query { words, keys, reply } => {
+                            let r = rt.query_all(&words, &keys).map_err(|e| e.to_string());
+                            let _ = reply.send(r);
+                        }
+                        Job::Hash { keys, reply } => {
+                            let r = rt.hash(&keys).map_err(|e| e.to_string());
+                            let _ = reply.send(r);
+                        }
+                        Job::Shutdown => break,
+                    }
+                }
+            })
+            .expect("failed to spawn pjrt driver thread");
+        let geometry = ready_rx
+            .recv()
+            .map_err(|_| RuntimeError::MissingArtifact("driver thread died".into()))?
+            .map_err(|e| RuntimeError::Other(anyhow::anyhow!(e)))?;
+        Ok(Self {
+            tx: Arc::new(Mutex::new(tx)),
+            geometry,
+        })
+    }
+
+    fn send(&self, job: Job) {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(job)
+            .expect("pjrt driver thread gone");
+    }
+
+    /// Chunked membership query through the compiled artifact.
+    pub fn query_all(&self, words: Arc<Vec<u64>>, keys: Vec<u64>) -> Result<Vec<bool>, String> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Job::Query { words, keys, reply });
+        rx.recv().map_err(|_| "driver dropped reply".to_string())?
+    }
+
+    /// Hash planning through the compiled artifact.
+    pub fn hash(&self, keys: Vec<u64>) -> Result<(Vec<u32>, Vec<u32>, Vec<u32>), String> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Job::Hash { keys, reply });
+        rx.recv().map_err(|_| "driver dropped reply".to_string())?
+    }
+
+    pub fn shutdown(&self) {
+        self.send(Job::Shutdown);
+    }
+}

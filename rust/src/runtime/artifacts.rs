@@ -1,0 +1,174 @@
+//! Artifact manifest parsing (artifacts/manifest.json).
+//!
+//! The manifest is written by `aot.py` and records the static geometry
+//! every artifact was lowered with. The JSON is flat and fixed-schema, so
+//! a small hand-rolled parser keeps the crate dependency-free.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// The model geometry the artifacts were compiled for. Batches must be
+/// padded to `batch`; the table snapshot must have exactly `num_words`
+/// words.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelGeometry {
+    pub num_buckets: usize,
+    pub bucket_slots: usize,
+    pub fp_bits: u32,
+    pub words_per_bucket: usize,
+    pub num_words: usize,
+    pub batch: usize,
+    pub tile: usize,
+    pub seed: u64,
+    pub bloom_k: u32,
+    pub bloom_words: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub geometry: ModelGeometry,
+    pub artifacts: BTreeMap<String, PathBuf>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Self> {
+        let fields = flat_json_fields(text);
+        let get = |k: &str| -> anyhow::Result<u64> {
+            fields
+                .get(k)
+                .and_then(|v| v.parse::<u64>().ok())
+                .ok_or_else(|| anyhow::anyhow!("manifest missing numeric field '{k}'"))
+        };
+        let geometry = ModelGeometry {
+            num_buckets: get("num_buckets")? as usize,
+            bucket_slots: get("bucket_slots")? as usize,
+            fp_bits: get("fp_bits")? as u32,
+            words_per_bucket: get("words_per_bucket")? as usize,
+            num_words: get("num_words")? as usize,
+            batch: get("batch")? as usize,
+            tile: get("tile")? as usize,
+            seed: get("seed")?,
+            bloom_k: get("bloom_k")? as u32,
+            bloom_words: get("bloom_words")? as usize,
+        };
+        let mut artifacts = BTreeMap::new();
+        for name in ["query", "query_stats", "hash", "bloom_query"] {
+            let f = dir.join(format!("{name}.hlo.txt"));
+            if f.exists() {
+                artifacts.insert(name.to_string(), f);
+            }
+        }
+        if artifacts.is_empty() {
+            anyhow::bail!("no .hlo.txt artifacts found in {}", dir.display());
+        }
+        Ok(Self {
+            dir,
+            geometry,
+            artifacts,
+        })
+    }
+}
+
+/// Extract `"key": value` pairs from a flat-ish JSON document (numbers
+/// and strings only; nested objects are walked through transparently —
+/// key collisions are avoided by the manifest's schema).
+fn flat_json_fields(text: &str) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    let bytes = text.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'"' {
+            // read key
+            let start = i + 1;
+            let mut j = start;
+            while j < bytes.len() && bytes[j] != b'"' {
+                j += 1;
+            }
+            let key = &text[start..j];
+            // skip to ':'
+            let mut k = j + 1;
+            while k < bytes.len() && (bytes[k] as char).is_whitespace() {
+                k += 1;
+            }
+            if k < bytes.len() && bytes[k] == b':' {
+                k += 1;
+                while k < bytes.len() && (bytes[k] as char).is_whitespace() {
+                    k += 1;
+                }
+                if k < bytes.len() && bytes[k] == b'"' {
+                    let vs = k + 1;
+                    let mut ve = vs;
+                    while ve < bytes.len() && bytes[ve] != b'"' {
+                        ve += 1;
+                    }
+                    out.insert(key.to_string(), text[vs..ve].to_string());
+                    i = ve + 1;
+                    continue;
+                } else if k < bytes.len() && (bytes[k].is_ascii_digit() || bytes[k] == b'-') {
+                    let vs = k;
+                    let mut ve = vs;
+                    while ve < bytes.len() && (bytes[ve].is_ascii_digit() || bytes[ve] == b'-') {
+                        ve += 1;
+                    }
+                    out.insert(key.to_string(), text[vs..ve].to_string());
+                    i = ve;
+                    continue;
+                }
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {
+        "num_buckets": 4096, "bucket_slots": 16, "fp_bits": 16,
+        "words_per_bucket": 4, "num_words": 16384, "batch": 4096,
+        "tile": 1024, "seed": 6840554560047811597, "bloom_k": 8,
+        "bloom_words": 16384
+      },
+      "artifacts": {"query": "query.hlo.txt"}
+    }"#;
+
+    #[test]
+    fn parses_manifest_geometry() {
+        let dir = std::env::temp_dir().join("cuckoo_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("query.hlo.txt"), "HloModule m").unwrap();
+        let m = ArtifactManifest::parse(SAMPLE, dir.clone()).unwrap();
+        assert_eq!(m.geometry.num_buckets, 4096);
+        assert_eq!(m.geometry.words_per_bucket, 4);
+        assert_eq!(m.geometry.batch, 4096);
+        assert_eq!(m.geometry.seed, 6840554560047811597);
+        assert!(m.artifacts.contains_key("query"));
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        let r = ArtifactManifest::parse("{}", std::env::temp_dir());
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn flat_json_extraction() {
+        let f = flat_json_fields(r#"{"a": 1, "b": {"c": 2, "d": "xyz"}}"#);
+        assert_eq!(f.get("a").unwrap(), "1");
+        assert_eq!(f.get("c").unwrap(), "2");
+        assert_eq!(f.get("d").unwrap(), "xyz");
+    }
+}

@@ -1,0 +1,166 @@
+//! The PJRT execution wrapper: compile HLO-text artifacts once, execute
+//! batches from the hot path.
+//!
+//! Mirrors /opt/xla-example/load_hlo.rs: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`.
+
+use super::artifacts::ArtifactManifest;
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum RuntimeError {
+    #[error("artifact '{0}' not found (run `make artifacts`)")]
+    MissingArtifact(String),
+    #[error("geometry mismatch: {0}")]
+    Geometry(String),
+    #[error(transparent)]
+    Xla(#[from] xla::Error),
+    #[error(transparent)]
+    Other(#[from] anyhow::Error),
+}
+
+/// A compiled filter runtime: the PJRT client plus one loaded executable
+/// per AOT graph.
+pub struct QueryRuntime {
+    pub manifest: ArtifactManifest,
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl QueryRuntime {
+    /// Compile every artifact in `dir` on the PJRT CPU client.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self, RuntimeError> {
+        let manifest = ArtifactManifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = BTreeMap::new();
+        for (name, path) in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            executables.insert(name.clone(), client.compile(&comp)?);
+        }
+        Ok(Self {
+            manifest,
+            client,
+            executables,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has_graph(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable, RuntimeError> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| RuntimeError::MissingArtifact(name.into()))
+    }
+
+    /// Pad a key batch to the artifact's static batch size. Padding keys
+    /// repeat the first key (their results are discarded).
+    fn pad_keys(&self, keys: &[u64]) -> Result<Vec<u64>, RuntimeError> {
+        let b = self.manifest.geometry.batch;
+        if keys.is_empty() || keys.len() > b {
+            return Err(RuntimeError::Geometry(format!(
+                "batch size {} not in 1..={b}",
+                keys.len()
+            )));
+        }
+        let mut padded = Vec::with_capacity(b);
+        padded.extend_from_slice(keys);
+        padded.resize(b, keys[0]);
+        Ok(padded)
+    }
+
+    fn check_words(&self, words: &[u64], expect: usize) -> Result<(), RuntimeError> {
+        if words.len() != expect {
+            return Err(RuntimeError::Geometry(format!(
+                "table snapshot has {} words, artifact compiled for {expect}",
+                words.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Execute the `query` graph: membership flags for up to `batch` keys
+    /// against a table snapshot.
+    pub fn query(&self, words: &[u64], keys: &[u64]) -> Result<Vec<bool>, RuntimeError> {
+        self.check_words(words, self.manifest.geometry.num_words)?;
+        let padded = self.pad_keys(keys)?;
+        let w = xla::Literal::vec1(words);
+        let k = xla::Literal::vec1(&padded);
+        let result = self.exe("query")?.execute::<xla::Literal>(&[w, k])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let flags: Vec<u8> = out.to_vec::<u8>()?;
+        Ok(flags[..keys.len()].iter().map(|&b| b != 0).collect())
+    }
+
+    /// Execute `query_stats`: flags + fused device-side hit count.
+    /// The count covers the padded batch, so we correct for padding by
+    /// subtracting the padding key's contribution.
+    pub fn query_stats(
+        &self,
+        words: &[u64],
+        keys: &[u64],
+    ) -> Result<(Vec<bool>, u64), RuntimeError> {
+        self.check_words(words, self.manifest.geometry.num_words)?;
+        let padded = self.pad_keys(keys)?;
+        let w = xla::Literal::vec1(words);
+        let k = xla::Literal::vec1(&padded);
+        let result = self.exe("query_stats")?.execute::<xla::Literal>(&[w, k])?[0][0]
+            .to_literal_sync()?;
+        let (flags_l, count_l) = result.to_tuple2()?;
+        let flags_u8: Vec<u8> = flags_l.to_vec::<u8>()?;
+        // Under jax_enable_x64 the fused sum promotes to u64.
+        let padded_count = count_l.to_vec::<u64>()?[0];
+        let pad_hits = flags_u8[keys.len()..].iter().filter(|&&b| b != 0).count() as u64;
+        let flags = flags_u8[..keys.len()].iter().map(|&b| b != 0).collect();
+        Ok((flags, padded_count - pad_hits))
+    }
+
+    /// Execute the `hash` graph: (fp, i1, i2) planning vectors.
+    pub fn hash(&self, keys: &[u64]) -> Result<(Vec<u32>, Vec<u32>, Vec<u32>), RuntimeError> {
+        let padded = self.pad_keys(keys)?;
+        let k = xla::Literal::vec1(&padded);
+        let result = self.exe("hash")?.execute::<xla::Literal>(&[k])?[0][0]
+            .to_literal_sync()?;
+        let (fp, i1, i2) = result.to_tuple3()?;
+        let n = keys.len();
+        let mut fp = fp.to_vec::<u32>()?;
+        let mut i1 = i1.to_vec::<u32>()?;
+        let mut i2 = i2.to_vec::<u32>()?;
+        fp.truncate(n);
+        i1.truncate(n);
+        i2.truncate(n);
+        Ok((fp, i1, i2))
+    }
+
+    /// Execute the `bloom_query` graph (GBBF baseline read path).
+    pub fn bloom_query(&self, words: &[u64], keys: &[u64]) -> Result<Vec<bool>, RuntimeError> {
+        self.check_words(words, self.manifest.geometry.bloom_words)?;
+        let padded = self.pad_keys(keys)?;
+        let w = xla::Literal::vec1(words);
+        let k = xla::Literal::vec1(&padded);
+        let result = self.exe("bloom_query")?.execute::<xla::Literal>(&[w, k])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let flags: Vec<u8> = out.to_vec::<u8>()?;
+        Ok(flags[..keys.len()].iter().map(|&b| b != 0).collect())
+    }
+
+    /// Query a batch of arbitrary length by chunking into artifact-sized
+    /// sub-batches.
+    pub fn query_all(&self, words: &[u64], keys: &[u64]) -> Result<Vec<bool>, RuntimeError> {
+        let b = self.manifest.geometry.batch;
+        let mut out = Vec::with_capacity(keys.len());
+        for chunk in keys.chunks(b) {
+            out.extend(self.query(words, chunk)?);
+        }
+        Ok(out)
+    }
+}

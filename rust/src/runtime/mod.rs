@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust request path.
+//!
+//! Python runs exactly once (at `make artifacts`); afterwards the Rust
+//! binary is self-contained: `PjRtClient::cpu()` compiles the HLO text
+//! and the coordinator executes query/hash batches against it.
+
+pub mod artifacts;
+pub mod client;
+pub mod actor;
+
+pub use artifacts::{ArtifactManifest, ModelGeometry};
+pub use actor::RuntimeHandle;
+pub use client::{QueryRuntime, RuntimeError};

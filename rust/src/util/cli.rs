@@ -1,0 +1,141 @@
+//! A minimal command-line argument parser (the environment is offline, so
+//! no `clap`). Supports `--flag`, `--key value`, `--key=value` and
+//! positional arguments, with typed getters and defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) or `std::env::args().skip(1)`.
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Self {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag.
+                    let is_value_next = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if is_value_next {
+                        let v = it.next().unwrap();
+                        out.flags.insert(stripped.to_string(), v);
+                    } else {
+                        out.flags.insert(stripped.to_string(), "true".to_string());
+                    }
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| parse_scaled(v).unwrap_or_else(|| panic!("--{key}: bad integer '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get_usize(key, default as usize) as u64
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: bad float '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("--{key}: bad bool '{v}'"),
+        }
+    }
+}
+
+/// Parse integers with scale suffixes: `4k`, `16M`, `1G`, and power-of-two
+/// shorthand `2^22`.
+pub fn parse_scaled(s: &str) -> Option<usize> {
+    let s = s.trim();
+    if let Some(exp) = s.strip_prefix("2^") {
+        let e: u32 = exp.parse().ok()?;
+        return Some(1usize.checked_shl(e)?);
+    }
+    let (num, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1usize << 10),
+        'm' | 'M' => (&s[..s.len() - 1], 1usize << 20),
+        'g' | 'G' => (&s[..s.len() - 1], 1usize << 30),
+        _ => (s, 1usize),
+    };
+    num.parse::<usize>().ok().map(|n| n * mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parse_forms() {
+        let a = args("bench fig3 --paper-scale --n 1024 --alpha=0.95");
+        assert_eq!(a.positional, vec!["bench", "fig3"]);
+        assert!(a.has("paper-scale"));
+        assert_eq!(a.get_usize("n", 0), 1024);
+        assert_eq!(a.get_f64("alpha", 0.0), 0.95);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = args("--verbose --n 8");
+        assert!(a.get_bool("verbose", false));
+        assert_eq!(a.get_usize("n", 0), 8);
+    }
+
+    #[test]
+    fn scaled_integers() {
+        assert_eq!(parse_scaled("4k"), Some(4096));
+        assert_eq!(parse_scaled("2M"), Some(2 << 20));
+        assert_eq!(parse_scaled("2^22"), Some(1 << 22));
+        assert_eq!(parse_scaled("123"), Some(123));
+        assert_eq!(parse_scaled("x"), None);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("");
+        assert_eq!(a.get_or("mode", "fast"), "fast");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert!(!a.get_bool("verbose", false));
+    }
+}

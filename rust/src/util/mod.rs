@@ -1,0 +1,13 @@
+//! Small self-contained utilities: PRNGs, statistics, timing and a
+//! mini CLI parser. The build environment is fully offline, so these
+//! replace the usual `rand`/`clap`/`criterion` dependencies.
+
+pub mod prng;
+pub mod stats;
+pub mod timer;
+pub mod cli;
+pub mod prop;
+
+pub use prng::{SplitMix64, Xoshiro256};
+pub use stats::{median, percentile, Summary};
+pub use timer::Timer;

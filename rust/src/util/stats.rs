@@ -1,0 +1,187 @@
+//! Order statistics and summaries used by the benchmark harness and the
+//! eviction-tail experiment (Figure 5 reports p90/p95/p99).
+
+/// Median of a sample (interpolated for even lengths).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Linear-interpolated percentile (`p` in `[0, 100]`) of an unsorted sample.
+/// Returns NaN on an empty sample.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile over an already-sorted sample (no copy).
+pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    if v.len() == 1 {
+        return v[0];
+    }
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Integer-sample percentile used for eviction-chain lengths: the
+/// nearest-rank method over `u32` counts, cheap enough for hundreds of
+/// millions of samples.
+pub fn percentile_u32(sorted: &[u32], p: f64) -> u32 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Summary statistics of a benchmark sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return Self {
+                n: 0,
+                min: f64::NAN,
+                max: f64::NAN,
+                mean: f64::NAN,
+                median: f64::NAN,
+                stddev: f64::NAN,
+            };
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Self {
+            n,
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            mean,
+            median: median(xs),
+            stddev: var.sqrt(),
+        }
+    }
+}
+
+/// Fixed-bucket histogram for latency distributions (power-of-two bucket
+/// edges in nanoseconds). Lock-free increments are done by the caller
+/// holding one histogram per thread and merging.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0; 64] }
+    }
+
+    #[inline]
+    pub fn record(&mut self, value_ns: u64) {
+        let bucket = 64 - value_ns.leading_zeros() as usize;
+        self.counts[bucket.min(63)] += 1;
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Upper bucket edge (ns) below which fraction `p/100` of samples fall.
+    pub fn percentile_bound(&self, p: f64) -> u64 {
+        let total = self.total();
+        if total == 0 {
+            return 0;
+        }
+        let target = (p / 100.0 * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return if i == 0 { 0 } else { 1u64 << i };
+            }
+        }
+        u64::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        let p50 = percentile(&xs, 50.0);
+        assert!((p50 - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_u32_nearest_rank() {
+        let v: Vec<u32> = (1..=100).collect();
+        assert_eq!(percentile_u32(&v, 90.0), 90);
+        assert_eq!(percentile_u32(&v, 99.0), 99);
+        assert_eq!(percentile_u32(&v, 100.0), 100);
+        assert_eq!(percentile_u32(&[], 99.0), 0);
+    }
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.mean, 2.5);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::new();
+        for v in [1u64, 2, 4, 8, 1024, 1 << 20] {
+            h.record(v);
+        }
+        assert_eq!(h.total(), 6);
+        assert!(h.percentile_bound(50.0) <= 16);
+        assert!(h.percentile_bound(100.0) >= 1 << 20);
+    }
+}

@@ -1,0 +1,68 @@
+//! Wall-clock timing helpers for the benchmark harness.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn restart(&mut self) {
+        self.start = Instant::now();
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ns(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t = Timer::new();
+    let r = f();
+    (r, t.elapsed_secs())
+}
+
+/// Throughput in billions of elements per second — the paper's unit.
+pub fn belem_per_sec(elems: usize, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return f64::NAN;
+    }
+    elems as f64 / secs / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::new();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_secs() > 0.0);
+        assert!(t.elapsed_ns() > 0);
+    }
+
+    #[test]
+    fn throughput_units() {
+        // 2e9 elements in 2 seconds = 1.0 B elem/s.
+        assert!((belem_per_sec(2_000_000_000, 2.0) - 1.0).abs() < 1e-12);
+        assert!(belem_per_sec(1, 0.0).is_nan());
+    }
+}

@@ -1,0 +1,121 @@
+//! Workload generation for the evaluation (§5.2): uniformly distributed
+//! 64-bit integers, with the positive/negative split of §5.3 — inserted
+//! keys drawn from [0, 2^32), negative probes from [2^32, 2^64) — so
+//! probes are *guaranteed* absent and every positive probe is present.
+
+use crate::util::prng::Xoshiro256;
+
+/// Keys for insertion: uniform in [0, 2^32) (distinct with high
+/// probability; the paper's FPR protocol uses this range).
+pub fn insert_keys(n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n).map(|_| rng.next_u64() >> 32).collect()
+}
+
+/// Distinct keys for insertion (deduplicated uniform draw — used where
+/// duplicate fingerprint copies would distort occupancy accounting).
+pub fn distinct_insert_keys(n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Xoshiro256::new(seed);
+    let mut keys: Vec<u64> = Vec::with_capacity(n + n / 8);
+    // Draw from the full 2^32 space then dedup; top up as needed.
+    while keys.len() < n {
+        keys.extend((0..(n - keys.len()) + 64).map(|_| rng.next_u64() >> 32));
+        keys.sort_unstable();
+        keys.dedup();
+    }
+    let mut rng2 = Xoshiro256::new(seed ^ 0xF00D);
+    rng2.shuffle(&mut keys);
+    keys.truncate(n);
+    keys
+}
+
+/// Negative probes: uniform in [2^32, 2^64) — disjoint from insert keys.
+pub fn negative_probes(n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n)
+        .map(|_| {
+            let v = rng.next_u64();
+            if v < (1u64 << 32) {
+                v | (1u64 << 32)
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
+/// Positive probes: a shuffled resample of inserted keys.
+pub fn positive_probes(inserted: &[u64], n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n)
+        .map(|_| inserted[rng.next_below(inserted.len() as u64) as usize])
+        .collect()
+}
+
+/// Zipf-distributed probe workload (skewed access, used by the ablation
+/// benches; s is the exponent, 0 = uniform).
+pub fn zipf_probes(inserted: &[u64], n: usize, s: f64, seed: u64) -> Vec<u64> {
+    let mut rng = Xoshiro256::new(seed);
+    let m = inserted.len();
+    // Inverse-CDF sampling over a truncated zeta distribution.
+    let norm: f64 = (1..=m).map(|i| 1.0 / (i as f64).powf(s)).sum();
+    let mut cdf = Vec::with_capacity(m);
+    let mut acc = 0.0;
+    for i in 1..=m {
+        acc += 1.0 / (i as f64).powf(s) / norm;
+        cdf.push(acc);
+    }
+    (0..n)
+        .map(|_| {
+            let u = rng.next_f64();
+            let idx = cdf.partition_point(|&c| c < u).min(m - 1);
+            inserted[idx]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_are_disjoint() {
+        let ins = insert_keys(10_000, 1);
+        let neg = negative_probes(10_000, 2);
+        assert!(ins.iter().all(|&k| k < (1 << 32)));
+        assert!(neg.iter().all(|&k| k >= (1 << 32)));
+    }
+
+    #[test]
+    fn distinct_keys_are_distinct() {
+        let ks = distinct_insert_keys(50_000, 3);
+        assert_eq!(ks.len(), 50_000);
+        let mut sorted = ks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 50_000);
+    }
+
+    #[test]
+    fn positive_probes_come_from_inserted() {
+        let ins = insert_keys(1000, 4);
+        let pos = positive_probes(&ins, 5000, 5);
+        let set: std::collections::HashSet<u64> = ins.iter().cloned().collect();
+        assert!(pos.iter().all(|k| set.contains(k)));
+    }
+
+    #[test]
+    fn zipf_skews_head() {
+        let ins: Vec<u64> = (0..1000).collect();
+        let probes = zipf_probes(&ins, 20_000, 1.2, 6);
+        let head_hits = probes.iter().filter(|&&k| k < 10).count();
+        // With s=1.2 the top-10 items should get far more than 1% of hits.
+        assert!(head_hits > 2_000, "head hits = {head_hits}");
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(insert_keys(100, 7), insert_keys(100, 7));
+        assert_ne!(insert_keys(100, 7), insert_keys(100, 8));
+    }
+}

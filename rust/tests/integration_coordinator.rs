@@ -1,0 +1,141 @@
+//! Coordinator integration: engine + batcher + server over TCP with
+//! concurrent clients, sharding, and metrics.
+
+use cuckoo_gpu::coordinator::server::{Client, Server};
+use cuckoo_gpu::coordinator::{
+    Batcher, BatcherConfig, Engine, EngineConfig, OpKind, Request,
+};
+use cuckoo_gpu::workload;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+fn engine(capacity: usize, shards: usize) -> Arc<Engine> {
+    Arc::new(
+        Engine::new(EngineConfig {
+            capacity,
+            shards,
+            workers: 4,
+            artifacts_dir: None,
+        })
+        .unwrap(),
+    )
+}
+
+#[test]
+fn tcp_server_many_concurrent_clients() {
+    let e = engine(200_000, 4);
+    let server = Arc::new(Server::new(e.clone(), BatcherConfig::default()));
+    let shutdown = server.shutdown_handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || {
+        srv.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+
+    let mut clients = Vec::new();
+    for c in 0..6u64 {
+        clients.push(std::thread::spawn(move || {
+            let mut cl = Client::connect(addr).unwrap();
+            let keys = workload::distinct_insert_keys(2_000, 50 + c);
+            let (ok, _) = cl.op("INSERT", &keys).unwrap();
+            assert_eq!(ok, 2_000);
+            let (hits, bits) = cl.op("QUERY", &keys).unwrap();
+            assert_eq!(hits, 2_000);
+            assert!(bits.iter().all(|&b| b));
+            let (removed, _) = cl.op("DELETE", &keys).unwrap();
+            assert_eq!(removed, 2_000);
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    assert_eq!(e.len(), 0);
+    assert_eq!(e.metrics.keys(OpKind::Insert), 12_000);
+
+    shutdown.store(true, Ordering::Release);
+    handle.join().unwrap();
+}
+
+#[test]
+fn batcher_coalesces_and_scatters_correctly() {
+    let e = engine(100_000, 1);
+    let b = Batcher::new(
+        e.clone(),
+        BatcherConfig {
+            max_keys: 50_000,
+            max_delay: std::time::Duration::from_millis(10),
+        },
+    );
+    // Interleave many clients with distinct key sets; each must get
+    // exactly its own answers back.
+    let sets: Vec<Vec<u64>> = (0..20)
+        .map(|i| workload::distinct_insert_keys(500, 2000 + i))
+        .collect();
+    let rxs: Vec<_> = sets
+        .iter()
+        .map(|ks| b.submit(Request::new(OpKind::Insert, ks.clone())))
+        .collect();
+    for rx in rxs {
+        assert_eq!(rx.recv().unwrap().successes, 500);
+    }
+    // Queries: half the clients ask for present keys, half for absent.
+    let present_rx: Vec<_> = sets[..10]
+        .iter()
+        .map(|ks| b.submit(Request::new(OpKind::Query, ks.clone())))
+        .collect();
+    let absent: Vec<Vec<u64>> = (0..10)
+        .map(|i| workload::negative_probes(500, 9000 + i))
+        .collect();
+    let absent_rx: Vec<_> = absent
+        .iter()
+        .map(|ks| b.submit(Request::new(OpKind::Query, ks.clone())))
+        .collect();
+    for rx in present_rx {
+        assert_eq!(rx.recv().unwrap().successes, 500);
+    }
+    for rx in absent_rx {
+        assert!(rx.recv().unwrap().successes < 5);
+    }
+    // Coalescing happened.
+    assert!(e.metrics.batches() < 40, "batches = {}", e.metrics.batches());
+}
+
+#[test]
+fn sharded_engine_balances_and_agrees() {
+    let e1 = engine(50_000, 1);
+    let e8 = engine(50_000, 8);
+    let keys = workload::distinct_insert_keys(40_000, 77);
+    for e in [&e1, &e8] {
+        let r = e.execute(&Request::new(OpKind::Insert, keys.clone()));
+        assert_eq!(r.successes, 40_000);
+        let r = e.execute(&Request::new(OpKind::Query, keys.clone()));
+        assert_eq!(r.successes, 40_000);
+    }
+}
+
+#[test]
+fn server_protocol_edge_cases() {
+    let e = engine(1_000, 1);
+    let server = Arc::new(Server::new(e, BatcherConfig::default()));
+    let shutdown = server.shutdown_handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || {
+        srv.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    let mut c = Client::connect(addr).unwrap();
+
+    assert!(c.call("INSERT").unwrap().starts_with("ERR")); // no keys
+    assert!(c.call("INSERT 1 2 bogus").unwrap().starts_with("ERR")); // bad key
+    assert!(c.call("FLY me to the moon").unwrap().starts_with("ERR"));
+    assert_eq!(c.call("insert 0xFF 255").unwrap().split(' ').next(), Some("OK")); // hex + case
+    let (hits, _) = c.op("QUERY", &[255]).unwrap();
+    assert_eq!(hits, 1); // 0xFF == 255: same key, present
+    assert_eq!(c.call("PING").unwrap(), "PONG");
+    assert_eq!(c.call("QUIT").unwrap(), "BYE");
+
+    shutdown.store(true, Ordering::Release);
+    handle.join().unwrap();
+}

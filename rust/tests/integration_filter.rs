@@ -1,0 +1,185 @@
+//! Integration tests of the filter core across modules: fills, mixed
+//! workloads, policies × layouts × eviction strategies, failure modes.
+
+use cuckoo_gpu::device::Device;
+use cuckoo_gpu::filter::{
+    BucketPolicy, CuckooConfig, CuckooFilter, EvictionPolicy, Fp16, Fp32, Fp8, LoadWidth,
+};
+use cuckoo_gpu::workload;
+
+#[test]
+fn full_matrix_policies_layouts_evictions() {
+    // Every (layout × policy × eviction) combination must fill to 90%
+    // and answer correctly.
+    fn check<L: cuckoo_gpu::filter::Layout>(policy: BucketPolicy, ev: EvictionPolicy) {
+        let buckets = match policy {
+            BucketPolicy::Xor => 1 << 8,
+            BucketPolicy::Offset => 250, // exercise non-power-of-two
+        };
+        let cfg = CuckooConfig::new(buckets).policy(policy).eviction(ev);
+        let f = CuckooFilter::<L>::new(cfg).unwrap();
+        let n = (f.config().total_slots() as f64 * 0.9) as usize;
+        let keys = workload::distinct_insert_keys(n, 0xA11 ^ buckets as u64);
+        for &k in &keys {
+            f.insert(k).unwrap_or_else(|e| {
+                panic!("{policy:?}/{ev:?}/{}bit α={:.2}: {e}", L::FP_BITS, f.load_factor())
+            });
+        }
+        for &k in &keys {
+            assert!(f.contains(k), "{policy:?}/{ev:?}: false negative");
+        }
+        for &k in &keys {
+            assert!(f.remove(k));
+        }
+        assert_eq!(f.len(), 0);
+    }
+    for policy in [BucketPolicy::Xor, BucketPolicy::Offset] {
+        for ev in [EvictionPolicy::Bfs, EvictionPolicy::Dfs] {
+            check::<Fp8>(policy, ev);
+            check::<Fp16>(policy, ev);
+            check::<Fp32>(policy, ev);
+        }
+    }
+}
+
+#[test]
+fn mixed_interleaved_workload() {
+    // Insert/delete interleaving with a shadow model (multiset semantics).
+    use std::collections::HashMap;
+    let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(20_000)).unwrap();
+    let mut shadow: HashMap<u64, u32> = HashMap::new();
+    let mut rng = cuckoo_gpu::util::prng::Xoshiro256::new(3);
+    for step in 0..60_000u64 {
+        let key = rng.next_below(5_000); // small key space → collisions & dups
+        match step % 3 {
+            0 | 1 => {
+                if f.insert(key).is_ok() {
+                    *shadow.entry(key).or_insert(0) += 1;
+                }
+            }
+            _ => {
+                let removed = f.remove(key);
+                let expected = shadow.get(&key).copied().unwrap_or(0) > 0;
+                // If the shadow holds a copy, remove must succeed (no
+                // false negatives on delete).
+                if expected {
+                    assert!(removed, "step {step}: remove missed a present key");
+                    *shadow.get_mut(&key).unwrap() -= 1;
+                } else if removed {
+                    // False-positive delete (fingerprint collision) —
+                    // allowed by the AMQ contract. Account by removing a
+                    // copy from whichever colliding key exists.
+                    if let Some((_, c)) = shadow.iter_mut().find(|(_, c)| **c > 0) {
+                        *c -= 1;
+                    }
+                }
+            }
+        }
+    }
+    // Total count agrees with the shadow multiset.
+    let shadow_total: u32 = shadow.values().sum();
+    assert_eq!(f.len() as u32, shadow_total);
+}
+
+#[test]
+fn batch_and_serial_agree() {
+    let device = Device::with_workers(4);
+    let f1 = CuckooFilter::<Fp16>::new(CuckooConfig::new(1 << 10)).unwrap();
+    let f2 = CuckooFilter::<Fp16>::new(CuckooConfig::new(1 << 10)).unwrap();
+    let keys = workload::distinct_insert_keys(10_000, 5);
+    f1.insert_batch(&device, &keys);
+    for &k in &keys {
+        f2.insert(k).unwrap();
+    }
+    for &k in &keys {
+        assert!(f1.contains(k) && f2.contains(k));
+    }
+    assert_eq!(f1.len(), f2.len());
+}
+
+#[test]
+fn insert_failure_leaves_filter_usable() {
+    let cfg = CuckooConfig::new(16).max_evictions(20); // 256 slots
+    let f = CuckooFilter::<Fp16>::new(cfg).unwrap();
+    let keys = workload::distinct_insert_keys(300, 6);
+    let mut stored = Vec::new();
+    let mut failures = 0;
+    for &k in &keys {
+        if f.insert(k).is_ok() {
+            stored.push(k);
+        } else {
+            failures += 1;
+        }
+    }
+    assert!(failures > 0, "overfull filter must reject some");
+    // Classic cuckoo failure semantics (Alg. 1: "table too full, caller
+    // will have to rebuild"): each failed insert abandons the fingerprint
+    // it was carrying, which may belong to a previously stored key. So at
+    // most `failures` stored keys may be lost — no more.
+    let missing = stored.iter().filter(|&&k| !f.contains(k)).count();
+    assert!(
+        missing <= failures,
+        "{missing} missing > {failures} failures"
+    );
+    // The filter stays fully usable: delete what's left, reinsert.
+    let removed = stored.iter().filter(|&&k| f.remove(k)).count();
+    assert!(removed >= stored.len() - failures);
+    for &k in &stored {
+        while f.remove(k) {} // clear residue from swapped-in orphans
+    }
+    f.insert(42).unwrap();
+    assert!(f.contains(42));
+}
+
+#[test]
+fn load_width_and_policy_cross_product() {
+    for lw in [LoadWidth::W64, LoadWidth::W128, LoadWidth::W256] {
+        for policy in [BucketPolicy::Xor, BucketPolicy::Offset] {
+            let buckets = if policy == BucketPolicy::Xor { 1 << 9 } else { 500 };
+            let cfg = CuckooConfig::new(buckets).policy(policy).load_width(lw);
+            let f = CuckooFilter::<Fp16>::new(cfg).unwrap();
+            let keys = workload::distinct_insert_keys(4_000, 7);
+            for &k in &keys {
+                f.insert(k).unwrap();
+            }
+            for &k in &keys {
+                assert!(f.contains(k), "{policy:?}/{lw:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sorted_insertion_matches_unsorted() {
+    let device = Device::with_workers(4);
+    let keys = workload::distinct_insert_keys(30_000, 8);
+    let a = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(30_000)).unwrap();
+    let (ra, _sort_secs) = a.insert_batch_sorted(&device, &keys);
+    let b = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(30_000)).unwrap();
+    let rb = b.insert_batch(&device, &keys);
+    assert_eq!(ra.inserted, rb.inserted);
+    for &k in &keys {
+        assert!(a.contains(k) && b.contains(k));
+    }
+}
+
+#[test]
+fn high_load_99_percent_with_bfs() {
+    // Push past the paper's 95%: BFS keeps succeeding into the high 90s.
+    let cfg = CuckooConfig::new(1 << 10)
+        .eviction(EvictionPolicy::Bfs)
+        .max_evictions(2000);
+    let f = CuckooFilter::<Fp16>::new(cfg).unwrap();
+    let total = f.config().total_slots();
+    let keys = workload::distinct_insert_keys(total, 9);
+    let mut ok = 0;
+    for &k in &keys {
+        if f.insert(k).is_ok() {
+            ok += 1;
+        } else {
+            break;
+        }
+    }
+    let alpha = ok as f64 / total as f64;
+    assert!(alpha > 0.97, "BFS stalled at α={alpha}");
+}

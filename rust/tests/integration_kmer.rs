@@ -1,0 +1,103 @@
+//! k-mer pipeline integration: genome → FASTA round trip → distinct
+//! 31-mers → filter → screening, end to end.
+
+use cuckoo_gpu::device::Device;
+use cuckoo_gpu::filter::{CuckooConfig, CuckooFilter, Fp16};
+use cuckoo_gpu::kmer::dna::{canonical_kmer, for_each_kmer};
+use cuckoo_gpu::kmer::fasta::{read_fasta, write_fasta};
+use cuckoo_gpu::kmer::{distinct_kmers, KmerCounts, SynthConfig, SyntheticGenome};
+
+#[test]
+fn genome_to_filter_pipeline() {
+    let genome = SyntheticGenome::generate(SynthConfig {
+        length: 300_000,
+        ..Default::default()
+    });
+
+    // FASTA round trip.
+    let mut buf = Vec::new();
+    write_fasta(&mut buf, &genome.to_fasta()).unwrap();
+    let parsed = read_fasta(&buf[..]).unwrap();
+    assert_eq!(parsed[0].seq, genome.seq);
+
+    // Distinct canonical 31-mers.
+    let kmers = distinct_kmers(&parsed[0].seq, 31);
+    assert!(!kmers.is_empty());
+
+    // Index and screen.
+    let filter = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(kmers.len())).unwrap();
+    let device = Device::with_workers(4);
+    let r = filter.insert_batch(&device, &kmers);
+    assert_eq!(r.inserted as usize, kmers.len());
+
+    // Every k-mer window of the genome must hit (no false negatives
+    // through the whole pipeline, both strands).
+    let mut probes = Vec::new();
+    for_each_kmer(&genome.seq[..100_000], 31, |v| probes.push(canonical_kmer(v, 31)));
+    let hits = filter.count_contains_batch(&device, &probes);
+    assert_eq!(hits as usize, probes.len());
+
+    // Reverse-complement reads must hit as well (canonicalisation).
+    let rc: Vec<u8> = genome.seq[..50_000]
+        .iter()
+        .rev()
+        .map(|&c| match c {
+            b'A' => b'T',
+            b'T' => b'A',
+            b'C' => b'G',
+            b'G' => b'C',
+            other => other,
+        })
+        .collect();
+    let mut rc_probes = Vec::new();
+    for_each_kmer(&rc, 31, |v| rc_probes.push(canonical_kmer(v, 31)));
+    let rc_hits = filter.count_contains_batch(&device, &rc_probes);
+    assert_eq!(rc_hits as usize, rc_probes.len(), "reverse strand must match");
+}
+
+#[test]
+fn multiplicity_statistics_sane() {
+    let genome = SyntheticGenome::generate(SynthConfig {
+        length: 200_000,
+        ..Default::default()
+    });
+    let counts = KmerCounts::from_seq(&genome.seq, 31);
+    // Consistency between the two extraction paths.
+    let plain = distinct_kmers(&genome.seq, 31);
+    assert_eq!(counts.distinct, plain);
+    // Multiplicities sum to the window count.
+    let sum: u64 = counts.counts.values().map(|&c| c as u64).sum();
+    assert_eq!(sum as usize, counts.total_kmers);
+}
+
+#[test]
+fn deletion_supports_kmer_turnover() {
+    // The bioinformatics motive for deletions: remove one sample's
+    // k-mers from a shared index without rebuilding.
+    let a = SyntheticGenome::generate(SynthConfig {
+        length: 100_000,
+        seed: 1,
+        ..Default::default()
+    });
+    let b = SyntheticGenome::generate(SynthConfig {
+        length: 100_000,
+        seed: 2,
+        ..Default::default()
+    });
+    let ka = distinct_kmers(&a.seq, 31);
+    let kb = distinct_kmers(&b.seq, 31);
+    let device = Device::with_workers(4);
+    let filter =
+        CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(ka.len() + kb.len())).unwrap();
+    filter.insert_batch(&device, &ka);
+    filter.insert_batch(&device, &kb);
+
+    // Remove sample A entirely.
+    let removed = filter.remove_batch(&device, &ka);
+    assert_eq!(removed as usize, ka.len());
+
+    // Sample B must remain fully queryable (keys shared between A and B
+    // were inserted twice, so one copy survives A's deletion).
+    let hits = filter.count_contains_batch(&device, &kb);
+    assert_eq!(hits as usize, kb.len(), "sample B lost k-mers");
+}

@@ -1,0 +1,150 @@
+//! End-to-end AOT path: the filter's table snapshot is queried through
+//! the PJRT-compiled Pallas kernel, and the answers must match the native
+//! Rust query path exactly.
+//!
+//! Requires `make artifacts` to have run (skips cleanly otherwise so
+//! `cargo test` works on a fresh checkout).
+
+use cuckoo_gpu::filter::{CuckooConfig, CuckooFilter, Fp16};
+use cuckoo_gpu::runtime::QueryRuntime;
+use cuckoo_gpu::util::prng::mix64;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn keys(n: usize, stream: u64) -> Vec<u64> {
+    (0..n as u64).map(|i| mix64(i ^ (stream << 50))).collect()
+}
+
+fn load() -> Option<QueryRuntime> {
+    let dir = artifacts_dir()?;
+    match QueryRuntime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => panic!("artifacts exist but failed to load: {e}"),
+    }
+}
+
+/// Build a filter with the exact geometry the artifacts were compiled for.
+fn filter_for(rt: &QueryRuntime) -> CuckooFilter<Fp16> {
+    let g = &rt.manifest.geometry;
+    assert_eq!(g.fp_bits, 16, "tests assume fp16 artifacts");
+    let cfg = CuckooConfig::new(g.num_buckets)
+        .bucket_slots(g.bucket_slots)
+        .seed(g.seed);
+    CuckooFilter::<Fp16>::new(cfg).unwrap()
+}
+
+#[test]
+fn pjrt_query_matches_native() {
+    let Some(rt) = load() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let f = filter_for(&rt);
+    let n = (f.config().total_slots() as f64 * 0.8) as usize;
+    let positive = keys(n, 1);
+    for &k in &positive {
+        f.insert(k).unwrap();
+    }
+    let negative = keys(4096, 99);
+
+    let snapshot = f.table().snapshot();
+    // Mixed batch: half positives, half negatives.
+    let mut batch: Vec<u64> = positive.iter().take(2048).cloned().collect();
+    batch.extend(negative.iter().take(2048));
+
+    let got = rt.query(&snapshot, &batch).unwrap();
+    for (i, (&k, &hit)) in batch.iter().zip(&got).enumerate() {
+        assert_eq!(
+            hit,
+            f.contains(k),
+            "PJRT and native disagree at {i} (key {k:#x})"
+        );
+    }
+    // All positives must be found.
+    assert!(got[..2048].iter().all(|&h| h));
+}
+
+#[test]
+fn pjrt_query_stats_counts() {
+    let Some(rt) = load() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let f = filter_for(&rt);
+    let positive = keys(1000, 2);
+    for &k in &positive {
+        f.insert(k).unwrap();
+    }
+    let snapshot = f.table().snapshot();
+    let (flags, count) = rt.query_stats(&snapshot, &positive).unwrap();
+    assert_eq!(count, 1000);
+    assert!(flags.iter().all(|&h| h));
+
+    // Short (padded) batch: count must correct for padding.
+    let (flags, count) = rt.query_stats(&snapshot, &positive[..7]).unwrap();
+    assert_eq!(flags.len(), 7);
+    assert_eq!(count, 7);
+}
+
+#[test]
+fn pjrt_hash_matches_native_policy() {
+    let Some(rt) = load() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let f = filter_for(&rt);
+    let ks = keys(512, 3);
+    let (fp, i1, i2) = rt.hash(&ks).unwrap();
+    for (i, &k) in ks.iter().enumerate() {
+        let c = f.policy().candidates(k);
+        assert_eq!(fp[i] as u64, c.primary.1, "fp mismatch at {i}");
+        assert_eq!(i1[i] as usize, c.primary.0, "i1 mismatch at {i}");
+        assert_eq!(i2[i] as usize, c.alternate.0, "i2 mismatch at {i}");
+    }
+}
+
+#[test]
+fn pjrt_bloom_query_matches_native_bbf() {
+    use cuckoo_gpu::baselines::{AmqFilter, BlockedBloomFilter};
+    let Some(rt) = load() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let g = rt.manifest.geometry.clone();
+    // Native BBF with the same block count and seed-compatible layout.
+    let bbf = BlockedBloomFilter::with_bytes(g.bloom_words * 8, 16.0);
+    assert_eq!(bbf.k(), g.bloom_k, "bloom K mismatch with artifact");
+    let positive = keys(2000, 4);
+    for &k in &positive {
+        bbf.insert(k);
+    }
+    let snapshot = bbf.snapshot();
+    let got = rt.bloom_query(&snapshot, &positive[..1024].to_vec()).unwrap();
+    assert!(got.iter().all(|&h| h), "bloom false negative through PJRT");
+
+    let negative = keys(1024, 77);
+    let got_neg = rt.bloom_query(&snapshot, &negative).unwrap();
+    for (i, &k) in negative.iter().enumerate() {
+        assert_eq!(got_neg[i], bbf.contains(k), "bloom mismatch at {i}");
+    }
+}
+
+#[test]
+fn pjrt_chunked_query_all() {
+    let Some(rt) = load() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let f = filter_for(&rt);
+    let ks = keys(10_000, 5);
+    for &k in &ks[..5_000] {
+        f.insert(k).unwrap();
+    }
+    let snapshot = f.table().snapshot();
+    let got = rt.query_all(&snapshot, &ks).unwrap();
+    assert_eq!(got.len(), ks.len());
+    assert!(got[..5_000].iter().all(|&h| h));
+}

@@ -1,0 +1,124 @@
+//! Property tests over the baseline structures: the AMQ contract under
+//! random configurations and workloads, plus GQF structural invariants.
+
+use cuckoo_gpu::baselines::{AmqFilter, QuotientFilter, TwoChoiceFilter};
+use cuckoo_gpu::prop_assert;
+use cuckoo_gpu::util::prop::{default_cases, run_property, Gen};
+
+#[test]
+fn prop_gqf_multiset_model() {
+    // The quotient filter against an exact multiset shadow (its FPR at
+    // r=16 is negligible at these sizes, so answers should be exact).
+    run_property("gqf == multiset shadow", default_cases(), |g| {
+        let cap = g.usize_in(100, 3_000);
+        let f = QuotientFilter::new(cap, 16);
+        let universe: Vec<u64> = g.distinct_keys(cap / 2);
+        let mut shadow = std::collections::HashMap::<u64, i64>::new();
+        for _ in 0..cap * 2 {
+            let k = universe[g.usize_in(0, universe.len() - 1)];
+            if g.bool() {
+                if f.insert(k) {
+                    *shadow.entry(k).or_insert(0) += 1;
+                }
+            } else {
+                let removed = f.remove(k);
+                let present = shadow.get(&k).copied().unwrap_or(0) > 0;
+                prop_assert!(
+                    removed == present,
+                    "gqf remove({k:#x}) = {removed}, shadow {present}"
+                );
+                if removed {
+                    *shadow.get_mut(&k).unwrap() -= 1;
+                }
+            }
+        }
+        for (&k, &c) in &shadow {
+            prop_assert!(
+                f.contains(k) == (c > 0),
+                "gqf contains({k:#x}) disagrees with shadow count {c}"
+            );
+        }
+        let total: i64 = shadow.values().sum();
+        prop_assert!(f.len() as i64 == total, "gqf len {} != {total}", f.len());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tcf_no_false_negatives() {
+    run_property("tcf: inserted ⇒ found", default_cases(), |g| {
+        let cap = g.usize_in(64, 4_000);
+        let f = TwoChoiceFilter::with_capacity(cap);
+        let keys = g.distinct_keys(cap);
+        for &k in &keys {
+            if f.insert(k) {
+                prop_assert!(f.contains(k), "tcf false negative {k:#x}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bbf_monotone() {
+    // Bloom filters are monotone: inserting more keys never turns a
+    // positive answer negative.
+    use cuckoo_gpu::baselines::BlockedBloomFilter;
+    run_property("bbf monotonicity", default_cases(), |g| {
+        let f = BlockedBloomFilter::with_capacity(g.usize_in(100, 5_000), 16.0);
+        let keys = g.distinct_keys(200);
+        let (first, rest) = keys.split_at(50);
+        for &k in first {
+            f.insert(k);
+        }
+        let before: Vec<bool> = first.iter().map(|&k| f.contains(k)).collect();
+        prop_assert!(before.iter().all(|&b| b), "immediate false negative");
+        for &k in rest {
+            f.insert(k);
+        }
+        for (i, &k) in first.iter().enumerate() {
+            prop_assert!(
+                f.contains(k) >= before[i],
+                "monotonicity violated for {k:#x}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bcht_exactness() {
+    use cuckoo_gpu::baselines::BuckCuckooHashTable;
+    run_property("bcht is exact", default_cases(), |g| {
+        let cap = g.usize_in(64, 3_000);
+        let t = BuckCuckooHashTable::with_capacity(cap);
+        let keys = g.distinct_keys(cap);
+        let (ins, probe) = keys.split_at(cap / 2);
+        for &k in ins {
+            t.insert(k);
+        }
+        for &k in ins {
+            prop_assert!(t.contains(k), "bcht lost {k:#x}");
+        }
+        for &k in probe {
+            prop_assert!(!t.contains(k), "bcht false positive {k:#x}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pcf_amq_contract() {
+    use cuckoo_gpu::baselines::PartitionedCuckooFilter;
+    run_property("pcf: inserted ⇒ found", default_cases(), |g| {
+        let cap = g.usize_in(256, 8_000);
+        let f = PartitionedCuckooFilter::new(cap, 1 << g.usize_in(2, 6));
+        let keys = g.distinct_keys(cap / 2);
+        for &k in &keys {
+            if f.insert(k) {
+                prop_assert!(f.contains(k), "pcf false negative {k:#x}");
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,174 @@
+//! Property-based tests (mini-framework in `util::prop`) for the filter
+//! core's invariants across randomly generated configurations.
+
+use cuckoo_gpu::filter::{
+    BucketPolicy, CuckooConfig, CuckooFilter, EvictionPolicy, Fp16, Fp8, Layout,
+};
+use cuckoo_gpu::prop_assert;
+use cuckoo_gpu::util::prop::{default_cases, run_property, Gen};
+
+fn random_config(g: &mut Gen) -> CuckooConfig {
+    let policy = if g.bool() { BucketPolicy::Xor } else { BucketPolicy::Offset };
+    let buckets = match policy {
+        BucketPolicy::Xor => 1usize << g.usize_in(4, 10),
+        BucketPolicy::Offset => g.usize_in(17, 1025),
+    };
+    let eviction = if g.bool() { EvictionPolicy::Bfs } else { EvictionPolicy::Dfs };
+    let slots = [4usize, 8, 16, 32][g.usize_in(0, 3)];
+    CuckooConfig::new(buckets)
+        .bucket_slots(slots)
+        .policy(policy)
+        .eviction(eviction)
+        .seed(g.u64())
+}
+
+#[test]
+fn prop_insert_implies_contains() {
+    run_property("insert ⇒ contains", default_cases(), |g| {
+        let cfg = random_config(g);
+        let f = CuckooFilter::<Fp16>::new(cfg).map_err(|e| e.to_string())?;
+        let n = (cfg.total_slots() as f64 * g.f64_unit() * 0.9) as usize;
+        let keys = g.distinct_keys(n.max(1));
+        for &k in &keys {
+            if f.insert(k).is_ok() {
+                prop_assert!(f.contains(k), "false negative for {k:#x} under {cfg:?}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_policy_relocation_roundtrip() {
+    run_property("relocate is an involution", default_cases() * 4, |g| {
+        let cfg = random_config(g);
+        let f = CuckooFilter::<Fp16>::new(cfg).map_err(|e| e.to_string())?;
+        let p = f.policy();
+        for _ in 0..256 {
+            let key = g.u64();
+            let c = p.candidates(key);
+            let (b2, t2) = p.relocate(c.primary.1, c.primary.0);
+            prop_assert!(
+                (b2, t2) == (c.alternate.0, c.alternate.1),
+                "primary→alternate mismatch for {key:#x} under {cfg:?}"
+            );
+            let (b1, t1) = p.relocate(t2, b2);
+            prop_assert!(
+                (b1, t1) == (c.primary.0, c.primary.1),
+                "roundtrip mismatch for {key:#x} under {cfg:?}"
+            );
+            prop_assert!(b1 < cfg.num_buckets && b2 < cfg.num_buckets, "index overflow");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_count_equals_table_scan() {
+    run_property("len == table scan", default_cases(), |g| {
+        let cfg = random_config(g);
+        let f = CuckooFilter::<Fp16>::new(cfg).map_err(|e| e.to_string())?;
+        let n = (cfg.total_slots() / 2).max(1);
+        let keys = g.distinct_keys(n);
+        let mut expected = 0usize;
+        for &k in &keys {
+            if f.insert(k).is_ok() {
+                expected += 1;
+            }
+        }
+        // Delete a random subset.
+        for &k in keys.iter().take(n / 3) {
+            if f.remove(k) {
+                expected -= 1;
+            }
+        }
+        prop_assert!(f.len() == expected, "counter {} != ledger {expected}", f.len());
+        prop_assert!(
+            f.table().count_occupied::<Fp16>() == expected,
+            "table scan {} != ledger {expected}",
+            f.table().count_occupied::<Fp16>()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_insert_delete_returns_to_empty() {
+    run_property("insert-all delete-all ⇒ empty", default_cases(), |g| {
+        let mut cfg = random_config(g);
+        // Fp8 packs 8 tags per word; bucket_slots must be a multiple.
+        cfg.bucket_slots = cfg.bucket_slots.max(8);
+        let f = CuckooFilter::<Fp8>::new(cfg).map_err(|e| e.to_string())?;
+        let n = (cfg.total_slots() as f64 * 0.7) as usize;
+        let keys = g.distinct_keys(n.max(1));
+        let mut stored = Vec::new();
+        for &k in &keys {
+            if f.insert(k).is_ok() {
+                stored.push(k);
+            }
+        }
+        for &k in &stored {
+            prop_assert!(f.remove(k), "remove failed for stored key {k:#x}");
+        }
+        prop_assert!(f.len() == 0, "len {} after deleting all", f.len());
+        prop_assert!(
+            f.table().count_occupied::<Fp8>() == 0,
+            "table residue after deleting all"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fpr_bounded_by_theory() {
+    run_property("FPR ≲ Eq.4", 12, |g| {
+        // Fixed geometry, random seeds/keys; ε ≈ 1-(1-2^-f)^(2bα).
+        let cfg = CuckooConfig::new(1 << 10).seed(g.u64());
+        let f = CuckooFilter::<Fp16>::new(cfg).map_err(|e| e.to_string())?;
+        let n = (cfg.total_slots() as f64 * 0.95) as usize;
+        for &k in &g.distinct_keys(n) {
+            let _ = f.insert(k);
+        }
+        let alpha = f.load_factor();
+        let probes = g.distinct_keys(100_000);
+        let fp = probes.iter().filter(|&&k| f.contains(k)).count();
+        let eps = fp as f64 / probes.len() as f64;
+        let theory = 1.0 - (1.0 - 2f64.powi(-16)).powf(2.0 * 16.0 * alpha);
+        prop_assert!(
+            eps < theory * 4.0 + 2e-4,
+            "eps {eps} ≫ theory {theory} at α={alpha}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_swar_layouts_consistent() {
+    use cuckoo_gpu::filter::swar::{clear_lane, first_lane};
+    run_property("swar lane algebra", default_cases() * 8, |g| {
+        fn check<L: Layout>(g: &mut Gen) -> Result<(), String> {
+            let word = g.u64();
+            let tag = g.u64() & L::LANE_MASK;
+            let slot = g.usize_in(0, L::TAGS_PER_WORD as usize - 1) as u32;
+            // replace-then-extract.
+            let w2 = L::replace(word, slot, tag);
+            prop_assert!(L::extract(w2, slot) == tag, "extract(replace) != tag");
+            // match_mask finds exactly the lanes equal to tag.
+            let mut mask = L::match_mask(w2, tag);
+            let mut found_slot = false;
+            while mask != 0 {
+                let lane = first_lane::<L>(mask);
+                prop_assert!(L::extract(w2, lane) == tag, "match_mask lied");
+                if lane == slot {
+                    found_slot = true;
+                }
+                mask = clear_lane::<L>(mask, lane);
+            }
+            prop_assert!(found_slot, "match_mask missed the written lane");
+            Ok(())
+        }
+        check::<Fp8>(g)?;
+        check::<Fp16>(g)?;
+        check::<cuckoo_gpu::filter::Fp32>(g)
+    });
+}
