@@ -10,7 +10,9 @@ use cuckoo_gpu::workload;
 fn main() {
     // A filter sized for 1M keys at the design load factor (95%).
     let filter = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(1_000_000)).unwrap();
-    let device = Device::default(); // one worker per core
+    // One persistent worker per core, spawned once; every batch below is
+    // an enqueue + barrier on this pool, not a round of thread spawns.
+    let device = Device::default();
 
     // Batched operations — each logical "CUDA thread" handles one key.
     let keys = workload::insert_keys(1_000_000, 42);

@@ -1,7 +1,9 @@
 //! Micro-benchmarks of the hot paths (the §Perf profiling harness):
-//! hash, SWAR scan, single-threaded op latency, multi-thread scaling.
+//! launch overhead of the persistent pool, hash, SWAR scan,
+//! single-threaded op latency, multi-thread scaling.
 //! Run with `cargo bench --bench micro_hot_paths`.
 
+use cuckoo_gpu::coordinator::ShardedFilter;
 use cuckoo_gpu::device::Device;
 use cuckoo_gpu::filter::{hash::xxhash64_u64, CuckooConfig, CuckooFilter, Fp16, Layout};
 use cuckoo_gpu::util::Timer;
@@ -16,7 +18,67 @@ fn bench(name: &str, ops: usize, f: impl FnOnce()) -> f64 {
     mops
 }
 
+/// Launch-overhead section: how much a device "kernel launch" costs now
+/// that workers persist. Empty-kernel latency isolates the enqueue +
+/// epoch-barrier round trip (the pool's analogue of a stream-ordered
+/// launch); the small-batch rows show how quickly real work amortises
+/// it — the serving regime the batcher lives in.
+fn launch_overhead() {
+    println!("-- launch_overhead (persistent pool) --");
+    let d = Device::default();
+    let workers = d.workers();
+
+    // Warm the pool (first wakeups page in stacks etc.).
+    for _ in 0..100 {
+        d.launch_items(1 << 14, |_| true);
+    }
+
+    let iters = 5_000;
+    // Multi-block empty kernel: full enqueue + wakeup + barrier.
+    let grid = 256 * workers.max(2); // >=2 blocks → pool path
+    let t = Timer::new();
+    for _ in 0..iters {
+        black_box(d.launch_items(grid, |_| true));
+    }
+    let ns = t.elapsed_ns() as f64 / iters as f64;
+    println!("empty launch, pool path ({workers} workers)     {ns:>10.0} ns/launch");
+
+    // Single-block empty kernel: the inline fast path (no wakeup).
+    let t = Timer::new();
+    for _ in 0..iters {
+        black_box(d.launch_items(64, |_| true));
+    }
+    let ns = t.elapsed_ns() as f64 / iters as f64;
+    println!("empty launch, inline path (1 block)        {ns:>10.0} ns/launch");
+
+    // Small serving batches: op throughput including launch cost.
+    for batch in [1 << 10, 1 << 12] {
+        let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(1 << 16)).unwrap();
+        let keys: Vec<u64> = (0..batch as u64).map(cuckoo_gpu::util::prng::mix64).collect();
+        f.insert_batch(&d, &keys);
+        bench(&format!("query+ batch={batch} (launch incl.)"), batch * 2_000, || {
+            for _ in 0..2_000 {
+                black_box(f.count_contains_batch(&d, &keys));
+            }
+        });
+    }
+
+    // Fused sharded pipeline at serving batch size: one scatter + one
+    // launch across all shards.
+    let shards = 8;
+    let sf = ShardedFilter::<Fp16>::with_capacity(1 << 16, shards).unwrap();
+    let batch = 1 << 12;
+    let keys: Vec<u64> = (0..batch as u64).map(cuckoo_gpu::util::prng::mix64).collect();
+    sf.insert_batch(&d, &keys);
+    bench(&format!("sharded query+ batch={batch} x{shards} shards"), batch * 1_000, || {
+        for _ in 0..1_000 {
+            black_box(sf.contains_batch(&d, &keys));
+        }
+    });
+}
+
 fn main() {
+    launch_overhead();
     let n = 1 << 22;
     let keys: Vec<u64> = (0..n as u64).map(cuckoo_gpu::util::prng::mix64).collect();
 

@@ -100,6 +100,9 @@ pub fn run(opts: &BenchOpts) {
         "   scales: L2-resident {} slots, DRAM-resident {} slots, {} workers, {} runs",
         opts.l2_slots, opts.dram_slots, opts.workers, opts.runs
     );
+    // One persistent pool for the whole figure: every measured batch is
+    // an enqueue on already-running workers, so per-launch cost does not
+    // pollute the throughput numbers.
     let device = Device::with_workers(opts.workers);
     let mut rows = Vec::new();
 

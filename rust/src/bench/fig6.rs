@@ -26,6 +26,8 @@ pub struct Row {
 }
 
 pub fn collect(opts: &BenchOpts) -> Vec<Row> {
+    // Shared persistent pool across all load factors and both policies;
+    // only the filter is rebuilt per run.
     let device = Device::with_workers(opts.workers);
     let slots = opts.dram_slots;
     let mut rows = Vec::new();

@@ -1,14 +1,51 @@
 //! The servable engine: sharded filter + batch device + epoch guard +
 //! metrics (+ optional PJRT runtime on the query path).
+//!
+//! Every batched request executes as **one** fused device launch over
+//! the persistent worker pool, with per-key outcomes returned in input
+//! order even when the key space is sharded (`shards > 1`) — the
+//! sharded filter scatters the batch shard-contiguously and threads a
+//! permutation index through the kernel (see [`super::shard`]).
 
 use super::epoch::EpochGuard;
 use super::metrics::Metrics;
 use super::request::{OpKind, Request, Response};
 use super::shard::ShardedFilter;
 use crate::device::Device;
-use crate::filter::Fp16;
-use crate::runtime::RuntimeHandle;
+use crate::filter::{FilterError, Fp16};
+use crate::runtime::{RuntimeError, RuntimeHandle};
 use crate::util::Timer;
+
+/// Construction failure: the filter geometry was rejected or the PJRT
+/// runtime could not come up for a strict (`with_pjrt`) engine.
+#[derive(Debug)]
+pub enum EngineError {
+    Filter(FilterError),
+    Runtime(RuntimeError),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Filter(e) => write!(f, "filter error: {e}"),
+            EngineError::Runtime(e) => write!(f, "runtime error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<FilterError> for EngineError {
+    fn from(e: FilterError) -> Self {
+        EngineError::Filter(e)
+    }
+}
+
+impl From<RuntimeError> for EngineError {
+    fn from(e: RuntimeError) -> Self {
+        EngineError::Runtime(e)
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -41,31 +78,36 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(cfg: EngineConfig) -> anyhow::Result<Self> {
+    pub fn new(cfg: EngineConfig) -> Result<Self, EngineError> {
         let filter = ShardedFilter::with_capacity(cfg.capacity, cfg.shards)?;
         let runtime = match &cfg.artifacts_dir {
-            Some(dir) => {
-                let rt = RuntimeHandle::spawn(dir)?;
-                // The PJRT artifact is usable only if the single shard
-                // matches its static geometry exactly.
-                let g = &rt.geometry;
-                let usable = cfg.shards == 1
-                    && filter.shard(0).config().num_buckets == g.num_buckets
-                    && filter.shard(0).config().bucket_slots == g.bucket_slots
-                    && filter.shard(0).config().seed == g.seed;
-                if usable {
-                    Some(rt)
-                } else {
-                    log::warn!(
-                        "artifacts geometry mismatch; PJRT query path disabled \
-                         (need shards=1, buckets={}, slots={}, seed={})",
-                        g.num_buckets,
-                        g.bucket_slots,
-                        g.seed
-                    );
+            Some(dir) => match RuntimeHandle::spawn(dir) {
+                Ok(rt) => {
+                    // The PJRT artifact is usable only if the single shard
+                    // matches its static geometry exactly.
+                    let g = &rt.geometry;
+                    let usable = cfg.shards == 1
+                        && filter.shard(0).config().num_buckets == g.num_buckets
+                        && filter.shard(0).config().bucket_slots == g.bucket_slots
+                        && filter.shard(0).config().seed == g.seed;
+                    if usable {
+                        Some(rt)
+                    } else {
+                        eprintln!(
+                            "[cuckoo-gpu] warn: artifacts geometry mismatch; PJRT query \
+                             path disabled (need shards=1, buckets={}, slots={}, seed={})",
+                            g.num_buckets, g.bucket_slots, g.seed
+                        );
+                        None
+                    }
+                }
+                Err(e) => {
+                    // Soft fallback: serve natively rather than refuse to
+                    // start (e.g. built without the `xla` feature).
+                    eprintln!("[cuckoo-gpu] warn: PJRT runtime unavailable, native path only: {e}");
                     None
                 }
-            }
+            },
             None => None,
         };
         Ok(Self {
@@ -79,7 +121,8 @@ impl Engine {
 
     /// Build an engine whose single shard matches the artifacts exactly,
     /// so the PJRT path is active (used by the filter_server example).
-    pub fn with_pjrt(dir: impl Into<std::path::PathBuf>, workers: usize) -> anyhow::Result<Self> {
+    /// Strict: fails if the runtime cannot come up.
+    pub fn with_pjrt(dir: impl Into<std::path::PathBuf>, workers: usize) -> Result<Self, EngineError> {
         let dir = dir.into();
         let rt = RuntimeHandle::spawn(&dir)?;
         let g = rt.geometry.clone();
@@ -110,6 +153,8 @@ impl Engine {
     }
 
     /// Execute one batched request (the batcher calls this per flush).
+    /// One fused device launch per request; `outcomes` is positional in
+    /// the request's key order regardless of sharding.
     pub fn execute(&self, req: &Request) -> Response {
         let t = Timer::new();
         let n = req.keys.len();
@@ -117,13 +162,13 @@ impl Engine {
         let successes = match req.op {
             OpKind::Insert => {
                 let _tok = self.epoch.begin_mutation();
-                self.device
-                    .launch_map(|i| self.filter.insert(req.keys[i]).is_ok(), &mut outcomes)
+                self.filter
+                    .insert_batch_map(&self.device, &req.keys, &mut outcomes)
             }
             OpKind::Delete => {
                 let _tok = self.epoch.begin_mutation();
-                self.device
-                    .launch_map(|i| self.filter.remove(req.keys[i]), &mut outcomes)
+                self.filter
+                    .remove_batch_map(&self.device, &req.keys, &mut outcomes)
             }
             OpKind::Query => {
                 let _tok = self.epoch.begin_query();
@@ -138,17 +183,15 @@ impl Engine {
                                 flags.iter().filter(|&&b| b).count() as u64
                             }
                             Err(e) => {
-                                log::error!("PJRT query failed, native fallback: {e}");
-                                self.device.launch_map(
-                                    |i| self.filter.contains(req.keys[i]),
-                                    &mut outcomes,
-                                )
+                                eprintln!("[cuckoo-gpu] error: PJRT query failed, native fallback: {e}");
+                                self.filter
+                                    .contains_batch_map(&self.device, &req.keys, &mut outcomes)
                             }
                         }
                     }
                     None => self
-                        .device
-                        .launch_map(|i| self.filter.contains(req.keys[i]), &mut outcomes),
+                        .filter
+                        .contains_batch_map(&self.device, &req.keys, &mut outcomes),
                 }
             }
         };
@@ -216,5 +259,31 @@ mod tests {
         // Nearly all absents must miss (fp16 FPR is tiny).
         let false_pos = r.outcomes[500..].iter().filter(|&&b| b).count();
         assert!(false_pos < 5);
+    }
+
+    #[test]
+    fn sharded_query_outcomes_are_positional() {
+        // The regression the fused pipeline fixes: under shards > 1 the
+        // per-key outcome at position i must answer key i, not a key
+        // from another shard's sub-batch.
+        let e = Engine::new(EngineConfig {
+            capacity: 40_000,
+            shards: 5,
+            workers: 4,
+            artifacts_dir: None,
+        })
+        .unwrap();
+        let present = keys(8_000, 6);
+        e.execute(&Request::new(OpKind::Insert, present.clone()));
+        let absent = keys(8_000, 7777);
+        let mut probe = Vec::with_capacity(16_000);
+        for i in 0..8_000 {
+            probe.push(present[i]);
+            probe.push(absent[i]);
+        }
+        let r = e.execute(&Request::new(OpKind::Query, probe.clone()));
+        assert!(r.outcomes.iter().step_by(2).all(|&b| b), "lost a present key");
+        let false_pos = r.outcomes.iter().skip(1).step_by(2).filter(|&&b| b).count();
+        assert!(false_pos < 40, "absent half should mostly miss, got {false_pos}");
     }
 }

@@ -10,7 +10,10 @@
 //! * [`batcher`] — dynamic batching: requests accumulate until a size or
 //!   deadline trigger, then launch as one device batch;
 //! * [`shard`]   — key-space sharding across multiple filters for
-//!   multi-device topologies;
+//!   multi-device topologies; batches scatter once into a flat
+//!   shard-contiguous buffer and execute as a single fused launch on the
+//!   persistent device pool, with per-key results permuted back to input
+//!   order;
 //! * [`engine`]  — ties filter + device + epoch + (optional) PJRT runtime
 //!   into a servable engine;
 //! * [`server`]  — a line-protocol TCP front end;
@@ -25,7 +28,7 @@ pub mod server;
 pub mod metrics;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use engine::{Engine, EngineConfig};
+pub use engine::{Engine, EngineConfig, EngineError};
 pub use epoch::EpochGuard;
 pub use request::{OpKind, Request, Response};
 pub use shard::ShardedFilter;

@@ -2,14 +2,40 @@
 //! the key. This is the multi-device topology of the serving layer (each
 //! GPU owns a shard; here each shard is an independent lock-free filter,
 //! which also reduces epoch-guard scope in mixed workloads).
+//!
+//! ## Fused batch pipeline
+//!
+//! Batch operations run as **one** device launch per call, not one per
+//! shard. A batch is first scattered shard-contiguously with a two-pass
+//! counting scatter (per-shard histogram → prefix offsets → one flat
+//! `(key, original index)` buffer — a single allocation, no per-shard
+//! `Vec<Vec<_>>`), then a single fused kernel walks the flat buffer and
+//! routes each warp's items to their shard via the offset table. All
+//! shards therefore execute concurrently inside one launch — the
+//! multi-device parallelism the GPU analogue gets from one kernel over
+//! partitioned device memory — and the permutation index carried next to
+//! each key lets per-key outcomes scatter back into **input order**, so
+//! the serving layer's positional responses stay correct under
+//! `shards > 1`.
 
-use crate::device::Device;
-use crate::filter::{CuckooConfig, CuckooFilter, FilterError, Layout};
+use crate::device::{Device, SendMutPtr};
+use crate::filter::{CuckooConfig, CuckooFilter, FilterError, Layout, NoProbe};
 use crate::util::prng::mix64;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 pub struct ShardedFilter<L: Layout> {
     shards: Vec<CuckooFilter<L>>,
     route_seed: u64,
+}
+
+/// A batch scattered into shard-contiguous order: the single flat
+/// per-batch allocation plus the O(#shards) offset table.
+struct ShardScatter {
+    /// `(key, original index)` pairs grouped by shard.
+    flat: Vec<(u64, u32)>,
+    /// Per-shard ranges into `flat`: shard `s` owns
+    /// `flat[offsets[s]..offsets[s + 1]]`.
+    offsets: Vec<usize>,
 }
 
 impl<L: Layout> ShardedFilter<L> {
@@ -76,42 +102,167 @@ impl<L: Layout> ShardedFilter<L> {
         self.shards[self.route(key)].remove(key)
     }
 
-    /// Batch insert: group keys by shard, then run all shard batches on
-    /// the device (each shard's batch is itself parallel — shards only
-    /// bound contention, they don't serialise).
-    pub fn insert_batch(&self, device: &Device, keys: &[u64]) -> u64 {
-        let groups = self.group_by_shard(keys);
-        let mut ok = 0;
-        for (s, ks) in groups.iter().enumerate() {
-            ok += self.shards[s].insert_batch(device, ks).inserted;
-        }
-        ok
-    }
-
-    pub fn contains_batch(&self, device: &Device, keys: &[u64]) -> u64 {
-        let groups = self.group_by_shard(keys);
-        let mut hits = 0;
-        for (s, ks) in groups.iter().enumerate() {
-            hits += self.shards[s].count_contains_batch(device, ks);
-        }
-        hits
-    }
-
-    pub fn remove_batch(&self, device: &Device, keys: &[u64]) -> u64 {
-        let groups = self.group_by_shard(keys);
-        let mut ok = 0;
-        for (s, ks) in groups.iter().enumerate() {
-            ok += self.shards[s].remove_batch(device, ks);
-        }
-        ok
-    }
-
-    fn group_by_shard(&self, keys: &[u64]) -> Vec<Vec<u64>> {
-        let mut groups = vec![Vec::new(); self.shards.len()];
+    /// Two-pass counting scatter: histogram → exclusive prefix → one
+    /// flat `(key, original index)` buffer in shard order.
+    fn scatter(&self, keys: &[u64]) -> ShardScatter {
+        let num_shards = self.shards.len();
+        debug_assert!(
+            keys.len() <= u32::MAX as usize,
+            "batch larger than the u32 permutation index"
+        );
+        let mut offsets = vec![0usize; num_shards + 1];
         for &k in keys {
-            groups[self.route(k)].push(k);
+            offsets[self.route(k) + 1] += 1;
         }
-        groups
+        for s in 0..num_shards {
+            offsets[s + 1] += offsets[s];
+        }
+        let mut cursor: Vec<usize> = offsets[..num_shards].to_vec();
+        let mut flat = vec![(0u64, 0u32); keys.len()];
+        // The route hash is deliberately recomputed in the fill pass
+        // (GPU-style: one mix64 is cheaper than materialising and
+        // re-reading an O(n) route array, and it keeps the scatter at a
+        // single flat allocation).
+        for (i, &k) in keys.iter().enumerate() {
+            let s = self.route(k);
+            flat[cursor[s]] = (k, i as u32);
+            cursor[s] += 1;
+        }
+        ShardScatter { flat, offsets }
+    }
+
+    /// One fused launch over a scattered batch: each item runs `op`
+    /// against its shard, per-key outcomes scatter back to input order
+    /// through `out` (when given), and per-shard success tallies are
+    /// committed with a few atomics per warp (a warp flushes its local
+    /// tally only when it crosses a shard boundary). Returns the global
+    /// success count and the per-shard tallies.
+    fn fused_launch<F>(
+        &self,
+        device: &Device,
+        scatter: &ShardScatter,
+        out: Option<&mut [bool]>,
+        op: F,
+    ) -> (u64, Vec<u64>)
+    where
+        F: Fn(&CuckooFilter<L>, u64) -> bool + Sync,
+    {
+        let flat = &scatter.flat;
+        let offsets = &scatter.offsets;
+        let per_shard: Vec<AtomicU64> = (0..self.shards.len()).map(|_| AtomicU64::new(0)).collect();
+        let out_ptr = out.map(|o| {
+            assert_eq!(o.len(), flat.len());
+            SendMutPtr(o.as_mut_ptr())
+        });
+        let total = device.launch(flat.len(), |ctx| {
+            let out_ptr = &out_ptr;
+            // Shard of the warp's first item; items are shard-contiguous,
+            // so the kernel only ever steps the shard index forward.
+            let mut s = offsets.partition_point(|&o| o <= ctx.range.start) - 1;
+            let mut local = 0u64;
+            for j in ctx.range.clone() {
+                while j >= offsets[s + 1] {
+                    if local > 0 {
+                        per_shard[s].fetch_add(local, Ordering::Relaxed);
+                        local = 0;
+                    }
+                    s += 1;
+                }
+                let (key, orig) = flat[j];
+                let ok = op(&self.shards[s], key);
+                if let Some(p) = out_ptr {
+                    unsafe { *p.0.add(orig as usize) = ok };
+                }
+                local += ok as u64;
+                ctx.tally(ok);
+            }
+            if local > 0 {
+                per_shard[s].fetch_add(local, Ordering::Relaxed);
+            }
+        });
+        (
+            total,
+            per_shard.into_iter().map(AtomicU64::into_inner).collect(),
+        )
+    }
+
+    /// Batch insert through one fused launch; returns the accept count.
+    pub fn insert_batch(&self, device: &Device, keys: &[u64]) -> u64 {
+        if self.shards.len() == 1 {
+            return self.shards[0].insert_batch(device, keys).inserted;
+        }
+        let scatter = self.scatter(keys);
+        let (ok, per_shard) = self.fused_launch(device, &scatter, None, |f, k| {
+            f.insert_probed_raw(k, &mut NoProbe).is_ok()
+        });
+        for (s, &n) in per_shard.iter().enumerate() {
+            self.shards[s].add_count(n);
+        }
+        ok
+    }
+
+    /// Batch insert with per-key outcomes in **input order**.
+    pub fn insert_batch_map(&self, device: &Device, keys: &[u64], out: &mut [bool]) -> u64 {
+        if self.shards.len() == 1 {
+            return self.shards[0].insert_batch_map(device, keys, out);
+        }
+        let scatter = self.scatter(keys);
+        let (ok, per_shard) = self.fused_launch(device, &scatter, Some(out), |f, k| {
+            f.insert_probed_raw(k, &mut NoProbe).is_ok()
+        });
+        for (s, &n) in per_shard.iter().enumerate() {
+            self.shards[s].add_count(n);
+        }
+        ok
+    }
+
+    /// Batch membership count through one fused launch.
+    pub fn contains_batch(&self, device: &Device, keys: &[u64]) -> u64 {
+        if self.shards.len() == 1 {
+            return self.shards[0].count_contains_batch(device, keys);
+        }
+        let scatter = self.scatter(keys);
+        self.fused_launch(device, &scatter, None, |f, k| f.contains(k)).0
+    }
+
+    /// Batch membership with per-key results in **input order** (the
+    /// serving layer's query path).
+    pub fn contains_batch_map(&self, device: &Device, keys: &[u64], out: &mut [bool]) -> u64 {
+        if self.shards.len() == 1 {
+            return self.shards[0].contains_batch(device, keys, out);
+        }
+        let scatter = self.scatter(keys);
+        self.fused_launch(device, &scatter, Some(out), |f, k| f.contains(k)).0
+    }
+
+    /// Batch delete through one fused launch; returns the removal count.
+    pub fn remove_batch(&self, device: &Device, keys: &[u64]) -> u64 {
+        if self.shards.len() == 1 {
+            return self.shards[0].remove_batch(device, keys);
+        }
+        let scatter = self.scatter(keys);
+        let (ok, per_shard) = self.fused_launch(device, &scatter, None, |f, k| {
+            f.remove_probed_raw(k, &mut NoProbe)
+        });
+        for (s, &n) in per_shard.iter().enumerate() {
+            self.shards[s].sub_count(n);
+        }
+        ok
+    }
+
+    /// Batch delete with per-key outcomes in **input order**.
+    pub fn remove_batch_map(&self, device: &Device, keys: &[u64], out: &mut [bool]) -> u64 {
+        if self.shards.len() == 1 {
+            return self.shards[0].remove_batch_map(device, keys, out);
+        }
+        let scatter = self.scatter(keys);
+        let (ok, per_shard) = self.fused_launch(device, &scatter, Some(out), |f, k| {
+            f.remove_probed_raw(k, &mut NoProbe)
+        });
+        for (s, &n) in per_shard.iter().enumerate() {
+            self.shards[s].sub_count(n);
+        }
+        ok
     }
 }
 
@@ -141,6 +292,28 @@ mod tests {
     }
 
     #[test]
+    fn scatter_is_shard_contiguous_and_a_permutation() {
+        let s = ShardedFilter::<Fp16>::with_capacity(10_000, 5).unwrap();
+        let ks = keys(10_000, 9);
+        let sc = s.scatter(&ks);
+        assert_eq!(sc.flat.len(), ks.len());
+        assert_eq!(sc.offsets.len(), 6);
+        assert_eq!(sc.offsets[0], 0);
+        assert_eq!(sc.offsets[5], ks.len());
+        let mut seen = vec![false; ks.len()];
+        for shard in 0..5 {
+            for j in sc.offsets[shard]..sc.offsets[shard + 1] {
+                let (k, orig) = sc.flat[j];
+                assert_eq!(s.route(k), shard, "key routed to wrong shard segment");
+                assert_eq!(ks[orig as usize], k, "permutation index broken");
+                assert!(!seen[orig as usize], "duplicate permutation index");
+                seen[orig as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
     fn sharded_roundtrip() {
         let device = Device::with_workers(4);
         let s = ShardedFilter::<Fp16>::with_capacity(50_000, 4).unwrap();
@@ -150,6 +323,55 @@ mod tests {
         assert_eq!(s.contains_batch(&device, &ks), 50_000);
         assert_eq!(s.remove_batch(&device, &ks), 50_000);
         assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn fused_positional_results_stay_in_input_order() {
+        let device = Device::with_workers(4);
+        let s = ShardedFilter::<Fp16>::with_capacity(40_000, 4).unwrap();
+        let present = keys(10_000, 3);
+        let mut ins = vec![false; present.len()];
+        assert_eq!(s.insert_batch_map(&device, &present, &mut ins), 10_000);
+        assert!(ins.iter().all(|&b| b));
+
+        // Interleave present and absent keys so positional correctness is
+        // observable: every even slot present, every odd slot absent.
+        let absent = keys(10_000, 4444);
+        let mut probe = Vec::with_capacity(20_000);
+        for i in 0..10_000 {
+            probe.push(present[i]);
+            probe.push(absent[i]);
+        }
+        let mut got = vec![false; probe.len()];
+        let hits = s.contains_batch_map(&device, &probe, &mut got);
+        // Per-position answers must agree with the serial per-key path.
+        for (i, &k) in probe.iter().enumerate() {
+            assert_eq!(got[i], s.contains(k), "positional mismatch at {i}");
+        }
+        assert!(got.iter().step_by(2).all(|&b| b), "lost a present key");
+        assert_eq!(hits, got.iter().filter(|&&b| b).count() as u64);
+
+        // Positional delete over the same interleaving. Absent keys can
+        // false-positively delete (fp16) and steal a present key's slot,
+        // so counts are bounded, not exact — the ledger must stay exact.
+        let mut del = vec![false; probe.len()];
+        let removed = s.remove_batch_map(&device, &probe, &mut del);
+        assert_eq!(removed as usize, del.iter().filter(|&&b| b).count());
+        assert!((9_950..=10_100).contains(&(removed as usize)), "removed = {removed}");
+        assert_eq!(s.len() as u64, 10_000 - removed);
+    }
+
+    #[test]
+    fn fused_counts_match_per_shard_ledgers() {
+        let device = Device::with_workers(4);
+        let s = ShardedFilter::<Fp16>::with_capacity(60_000, 6).unwrap();
+        let ks = keys(50_000, 5);
+        let ok = s.insert_batch(&device, &ks);
+        assert_eq!(ok, 50_000);
+        // Per-shard occupancy counters must sum to the fused tally, and
+        // each must match its shard's actual table occupancy.
+        let total: usize = (0..s.num_shards()).map(|i| s.shard(i).len()).sum();
+        assert_eq!(total as u64, ok);
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! The batch "kernel launch" engine — the CPU stand-in for the CUDA
-//! device (§2.2 / §4.3).
+//! device (§2.2 / §4.3), built around a **persistent worker pool**.
 //!
 //! A [`Device`] owns a logical worker topology shaped like a GPU grid:
 //! a batch of N items is decomposed into *blocks* of `block_size`
@@ -9,13 +9,43 @@
 //! hierarchical occupancy counting (warp shuffle → shared memory →
 //! one global atomic, §4.3 last paragraph).
 //!
-//! The engine is deliberately simple: a launch is synchronous (like a
-//! stream-ordered kernel + sync), work distribution is an atomic block
-//! cursor (the GPU's hardware block scheduler), and scoped threads keep
-//! borrows safe without `Arc` gymnastics.
+//! ## Execution model: launch = enqueue + barrier, not spawn
+//!
+//! Worker threads are spawned **exactly once**, when the [`Device`] is
+//! constructed — the analogue of initialising the GPU and its SMs at
+//! context creation. A [`Device::launch`] does *not* create threads; it
+//!
+//! 1. publishes a type-erased kernel task and bumps the pool **epoch**
+//!    (the stream-ordered launch enqueue),
+//! 2. wakes the parked workers, which pull blocks from an atomic block
+//!    cursor (the hardware block scheduler), and
+//! 3. blocks on an **epoch barrier** until every worker has retired the
+//!    task (kernel + stream synchronise).
+//!
+//! Per-launch cost is therefore a condvar wakeup (~µs), not a round of
+//! OS thread spawns (~tens of µs × workers) — the difference the paper
+//! attributes to cheap stream-ordered launches vs. device reinit, and
+//! the reason small serving batches stay cheap. Launches whose grid fits
+//! a single block (or a single-worker pool) bypass the pool entirely and
+//! run inline on the caller thread, so tiny batches cost no wakeup at
+//! all; the `launch_overhead` section of `benches/micro_hot_paths.rs`
+//! measures both regimes.
+//!
+//! Pool jobs are serialised by an internal launch gate (one kernel in
+//! flight per device, like a single CUDA stream); concurrent `launch`
+//! calls from many threads are safe and simply queue. Kernels must not
+//! launch on their own device recursively — that would self-deadlock,
+//! exactly like a device-side sync inside a CUDA kernel.
+//!
+//! Borrow safety: a launch publishes a reference to the caller's stack
+//! closure to 'static worker threads. The epoch barrier guarantees every
+//! worker is done with the reference before `launch` returns, which is
+//! the same contract scoped threads enforce structurally; the lifetime
+//! erasure is confined to [`Device::run_job`].
 
-use crossbeam_utils::thread as cb;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// GPU-like launch geometry.
 #[derive(Clone, Copy, Debug)]
@@ -65,9 +95,130 @@ impl WarpCtx {
     }
 }
 
-/// The batch execution device.
+/// A type-erased pool task: invoked once per worker with the worker
+/// index. Published by reference for the duration of one job; the epoch
+/// barrier retires the borrow before the launch returns.
+#[derive(Clone, Copy)]
+struct TaskRef(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared invocation from many workers is
+// its contract) and outlives the job — workers only dereference between
+// job publication and their completion decrement, both of which happen
+// while the launching thread is parked inside `run_job`.
+unsafe impl Send for TaskRef {}
+
+struct PoolState {
+    /// Monotone job counter; a bump is the "launch enqueued" signal.
+    epoch: u64,
+    /// The in-flight task, valid while `remaining > 0`.
+    task: Option<TaskRef>,
+    /// Workers that have not yet retired the current task.
+    remaining: usize,
+    /// A worker's kernel panicked during the current job.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between jobs.
+    work_cv: Condvar,
+    /// The launcher parks here for the epoch barrier.
+    done_cv: Condvar,
+    /// One kernel in flight per device (a single CUDA stream).
+    gate: Mutex<()>,
+}
+
+struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+    /// Lifetime total of OS threads spawned (== `size`; the reuse tests
+    /// assert it never grows with launches).
+    spawned: AtomicU64,
+}
+
+impl WorkerPool {
+    fn new(size: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                task: None,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            gate: Mutex::new(()),
+        });
+        let spawned = AtomicU64::new(0);
+        let handles = (0..size)
+            .map(|w| {
+                spawned.fetch_add(1, Ordering::Relaxed);
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("cuckoo-sm-{w}"))
+                    .spawn(move || worker_loop(&shared, w))
+                    .expect("failed to spawn device worker")
+            })
+            .collect();
+        Self {
+            shared,
+            handles,
+            size,
+            spawned,
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared, worker: usize) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let task = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch > seen_epoch {
+                    seen_epoch = st.epoch;
+                    break st.task.expect("pool epoch bumped without a task");
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // SAFETY: see `TaskRef` — the launcher keeps the pointee alive
+        // until every worker has decremented `remaining` below.
+        let kernel: &(dyn Fn(usize) + Sync) = unsafe { &*task.0 };
+        let outcome = catch_unwind(AssertUnwindSafe(|| kernel(worker)));
+        let mut st = shared.state.lock().unwrap();
+        if outcome.is_err() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// The batch execution device: launch geometry + the persistent pool.
 pub struct Device {
     pub cfg: LaunchConfig,
+    pool: WorkerPool,
 }
 
 impl Default for Device {
@@ -78,7 +229,11 @@ impl Default for Device {
 
 impl Device {
     pub fn new(cfg: LaunchConfig) -> Self {
-        Self { cfg }
+        let size = cfg.workers.max(1);
+        Self {
+            cfg,
+            pool: WorkerPool::new(size),
+        }
     }
 
     pub fn with_workers(workers: usize) -> Self {
@@ -86,6 +241,56 @@ impl Device {
             workers: workers.max(1),
             ..LaunchConfig::default()
         })
+    }
+
+    /// Number of persistent worker threads ("SMs") in the pool.
+    pub fn workers(&self) -> usize {
+        self.pool.size
+    }
+
+    /// Lifetime total of worker threads ever spawned by this device.
+    /// Stays equal to [`Self::workers`] no matter how many launches run —
+    /// the observable "spawn once" invariant.
+    pub fn threads_spawned(&self) -> u64 {
+        self.pool.spawned.load(Ordering::Relaxed)
+    }
+
+    /// Number of pool jobs retired (inline fast-path launches excluded).
+    pub fn pool_jobs(&self) -> u64 {
+        self.pool.shared.state.lock().unwrap().epoch
+    }
+
+    /// Publish `task` to the pool, wake the workers and wait for the
+    /// epoch barrier. One job in flight per device at a time.
+    fn run_job(&self, task: &(dyn Fn(usize) + Sync)) {
+        let shared = &*self.pool.shared;
+        // Scope the gate so it is released (unpoisoned) before a kernel
+        // panic propagates — the pool must stay serviceable afterwards.
+        let panicked = {
+            let _gate = shared.gate.lock().unwrap();
+            // Erase the caller-stack lifetime; the barrier below retires
+            // the borrow before this frame returns (see module docs).
+            let task: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(task) };
+            {
+                let mut st = shared.state.lock().unwrap();
+                st.task = Some(TaskRef(task as *const _));
+                st.remaining = self.pool.size;
+                st.panicked = false;
+                st.epoch += 1;
+            }
+            shared.work_cv.notify_all();
+            let mut st = shared.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = shared.done_cv.wait(st).unwrap();
+            }
+            st.task = None;
+            let panicked = st.panicked;
+            drop(st);
+            panicked
+        };
+        if panicked {
+            panic!("device worker panicked");
+        }
     }
 
     /// Launch a "kernel" over `n` items. `kernel` is invoked once per
@@ -99,45 +304,30 @@ impl Device {
         if n == 0 {
             return 0;
         }
-        let bs = self.cfg.block_size;
-        let ws = self.cfg.warp_size;
+        let bs = self.cfg.block_size.max(1);
+        let ws = self.cfg.warp_size.max(1);
         let num_blocks = n.div_ceil(bs);
-        let cursor = AtomicUsize::new(0);
         let global = AtomicU64::new(0);
-        let workers = self.cfg.workers.min(num_blocks).max(1);
 
-        cb::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|_| {
-                    loop {
-                        // The hardware block scheduler: grab the next block.
-                        let block = cursor.fetch_add(1, Ordering::Relaxed);
-                        if block >= num_blocks {
-                            break;
-                        }
-                        let block_start = block * bs;
-                        let block_end = (block_start + bs).min(n);
-                        // Block-level accumulator ("shared memory").
-                        let mut block_successes = 0u64;
-                        let mut w = block_start;
-                        while w < block_end {
-                            let mut ctx = WarpCtx {
-                                range: w..(w + ws).min(block_end),
-                                successes: 0,
-                            };
-                            kernel(&mut ctx);
-                            // Warp reduction joins the block tally.
-                            block_successes += ctx.successes;
-                            w += ws;
-                        }
-                        // One global atomic per block (§4.3).
-                        global.fetch_add(block_successes, Ordering::Relaxed);
-                    }
-                });
+        if num_blocks == 1 || self.pool.size == 1 {
+            // Inline fast path: a one-block grid (or one-worker pool) has
+            // no parallelism to exploit — skip the wakeup entirely.
+            for block in 0..num_blocks {
+                run_block(&kernel, block, bs, ws, n, &global);
             }
-        })
-        .expect("device worker panicked");
+            return global.load(Ordering::Acquire);
+        }
 
+        // The hardware block scheduler: workers race on a shared cursor.
+        let cursor = AtomicUsize::new(0);
+        let task = |_worker: usize| loop {
+            let block = cursor.fetch_add(1, Ordering::Relaxed);
+            if block >= num_blocks {
+                break;
+            }
+            run_block(&kernel, block, bs, ws, n, &global);
+        };
+        self.run_job(&task);
         global.load(Ordering::Acquire)
     }
 
@@ -180,26 +370,60 @@ impl Device {
     where
         F: Fn(usize, std::ops::Range<usize>) + Sync,
     {
-        let workers = self.cfg.workers.max(1);
+        if n == 0 {
+            return;
+        }
+        let workers = self.pool.size;
         let chunk = n.div_ceil(workers).max(1);
-        cb::scope(|scope| {
-            for w in 0..workers {
-                let lo = (w * chunk).min(n);
-                let hi = ((w + 1) * chunk).min(n);
-                if lo >= hi {
-                    break;
-                }
-                let f = &f;
-                scope.spawn(move |_| f(w, lo..hi));
+        if workers == 1 {
+            f(0, 0..n);
+            return;
+        }
+        let task = |w: usize| {
+            let lo = (w * chunk).min(n);
+            let hi = ((w + 1) * chunk).min(n);
+            if lo < hi {
+                f(w, lo..hi);
             }
-        })
-        .expect("device worker panicked");
+        };
+        self.run_job(&task);
     }
 }
 
-/// Raw-pointer wrapper for disjoint parallel writes across the scoped-
-/// thread boundary.
-struct SendMutPtr<T>(*mut T);
+/// One block's warp loop: block-level accumulator ("shared memory"),
+/// one global atomic per block (§4.3).
+#[inline]
+fn run_block<F>(kernel: &F, block: usize, bs: usize, ws: usize, n: usize, global: &AtomicU64)
+where
+    F: Fn(&mut WarpCtx) + Sync,
+{
+    let block_start = block * bs;
+    let block_end = (block_start + bs).min(n);
+    let mut block_successes = 0u64;
+    let mut w = block_start;
+    while w < block_end {
+        let mut ctx = WarpCtx {
+            range: w..(w + ws).min(block_end),
+            successes: 0,
+        };
+        kernel(&mut ctx);
+        // Warp reduction joins the block tally.
+        block_successes += ctx.successes;
+        w += ws;
+    }
+    global.fetch_add(block_successes, Ordering::Relaxed);
+}
+
+/// Raw-pointer wrapper for disjoint parallel writes across the pool
+/// boundary — the crate's single blessed escape hatch for "each logical
+/// thread writes its own slot" kernels (`launch_map`, the filter batch
+/// ops, the fused shard scatter-back).
+///
+/// SAFETY contract for users: every write through the pointer must go to
+/// an index no other concurrent writer of the same launch touches, and
+/// the pointee must outlive the launch (guaranteed by the launch
+/// barrier).
+pub(crate) struct SendMutPtr<T>(pub(crate) *mut T);
 unsafe impl<T> Sync for SendMutPtr<T> {}
 unsafe impl<T> Send for SendMutPtr<T> {}
 
@@ -258,5 +482,35 @@ mod tests {
     fn single_worker_still_works() {
         let d = Device::with_workers(1);
         assert_eq!(d.launch_items(100, |_| true), 100);
+    }
+
+    #[test]
+    fn pool_spawns_threads_exactly_once() {
+        let d = Device::with_workers(4);
+        for round in 0..150u64 {
+            // Multi-block grids so the pool path (not the inline path)
+            // is exercised.
+            let n = 4096;
+            assert_eq!(d.launch_items(n, |i| i as u64 % 2 == round % 2), n as u64 / 2);
+        }
+        assert_eq!(d.threads_spawned(), 4);
+        assert!(d.pool_jobs() >= 150);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let d = Device::with_workers(2);
+        let boom = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            d.launch_items(10_000, |i| {
+                if i == 5_000 {
+                    panic!("kernel fault");
+                }
+                true
+            });
+        }));
+        assert!(boom.is_err());
+        // The pool must still be serviceable after a kernel panic.
+        assert_eq!(d.launch_items(10_000, |_| true), 10_000);
+        assert_eq!(d.threads_spawned(), 2);
     }
 }

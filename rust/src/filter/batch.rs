@@ -9,7 +9,7 @@
 use super::core::CuckooFilter;
 use super::probe::{NoProbe, TraceProbe};
 use super::swar::Layout;
-use crate::device::Device;
+use crate::device::{Device, SendMutPtr};
 
 /// Outcome of a batched insert.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -41,7 +41,7 @@ impl<L: Layout> CuckooFilter<L> {
         // SAFETY-free parallel writes: give each warp a disjoint &mut view
         // via raw parts — ranges from the device are disjoint by
         // construction (verified in device tests).
-        let out_ptr = SendPtr(out.as_mut_ptr());
+        let out_ptr = SendMutPtr(out.as_mut_ptr());
         device.launch(keys.len(), |ctx| {
             let out_ptr = &out_ptr;
             for i in ctx.range.clone() {
@@ -59,6 +59,41 @@ impl<L: Layout> CuckooFilter<L> {
                 ctx.tally(self.contains(keys[i]));
             }
         })
+    }
+
+    /// Insert a batch, writing each key's outcome into `out` (input
+    /// order). Positional sibling of [`Self::insert_batch`]; the serving
+    /// layer needs per-key results, not just the tally.
+    pub fn insert_batch_map(&self, device: &Device, keys: &[u64], out: &mut [bool]) -> u64 {
+        assert_eq!(keys.len(), out.len());
+        let out_ptr = SendMutPtr(out.as_mut_ptr());
+        let inserted = device.launch(keys.len(), |ctx| {
+            let out_ptr = &out_ptr;
+            for i in ctx.range.clone() {
+                let ok = self.insert_probed_raw(keys[i], &mut NoProbe).is_ok();
+                unsafe { *out_ptr.0.add(i) = ok };
+                ctx.tally(ok);
+            }
+        });
+        self.add_count(inserted);
+        inserted
+    }
+
+    /// Delete a batch, writing each key's outcome into `out` (input
+    /// order). Positional sibling of [`Self::remove_batch`].
+    pub fn remove_batch_map(&self, device: &Device, keys: &[u64], out: &mut [bool]) -> u64 {
+        assert_eq!(keys.len(), out.len());
+        let out_ptr = SendMutPtr(out.as_mut_ptr());
+        let removed = device.launch(keys.len(), |ctx| {
+            let out_ptr = &out_ptr;
+            for i in ctx.range.clone() {
+                let ok = self.remove_probed_raw(keys[i], &mut NoProbe);
+                unsafe { *out_ptr.0.add(i) = ok };
+                ctx.tally(ok);
+            }
+        });
+        self.sub_count(removed);
+        removed
     }
 
     /// Delete a batch; returns the number actually removed.
@@ -143,12 +178,6 @@ impl<L: Layout> CuckooFilter<L> {
     }
 }
 
-/// Raw pointer wrapper so disjoint parallel writes can cross the scoped-
-/// thread boundary. The device guarantees warp ranges never overlap.
-struct SendPtr<T>(*mut T);
-unsafe impl<T> Sync for SendPtr<T> {}
-unsafe impl<T> Send for SendPtr<T> {}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,6 +208,32 @@ mod tests {
         let removed = f.remove_batch(&device, &ks);
         assert_eq!(removed, 50_000);
         assert_eq!(f.len(), 0);
+    }
+
+    #[test]
+    fn positional_map_variants_match_input_order() {
+        let device = Device::with_workers(4);
+        let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(20_000)).unwrap();
+        let ks = keys(10_000, 31);
+
+        let mut ins = vec![false; ks.len()];
+        let ok = f.insert_batch_map(&device, &ks, &mut ins);
+        assert_eq!(ok, 10_000);
+        assert!(ins.iter().all(|&b| b));
+        assert_eq!(f.len(), 10_000);
+
+        // Mixed present/absent delete: per-position outcomes must track
+        // each key, not a shuffled order.
+        let mut probe = ks[..5_000].to_vec();
+        probe.extend(keys(5_000, 77));
+        let mut del = vec![false; probe.len()];
+        let removed = f.remove_batch_map(&device, &probe, &mut del);
+        assert_eq!(removed as usize, del.iter().filter(|&&b| b).count());
+        // Absent keys can false-positively delete (fp16) and thereby
+        // steal a present key's fingerprint, so per-half counts are only
+        // approximate — the outcome ledger itself must stay exact.
+        assert!((4_950..=5_100).contains(&(removed as usize)), "removed = {removed}");
+        assert_eq!(f.len() as u64, 10_000 - removed);
     }
 
     #[test]

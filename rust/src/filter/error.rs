@@ -1,15 +1,28 @@
-//! Error types for the filter core.
+//! Error types for the filter core. Hand-rolled `Display`/`Error` impls
+//! keep the crate dependency-free (no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum FilterError {
     /// Invalid configuration (validated at construction).
-    #[error("bad filter configuration: {0}")]
     BadConfig(String),
 
     /// Insertion abandoned after the eviction budget was exhausted —
     /// "Table too full, caller will have to rebuild" (Alg. 1).
-    #[error("filter too full: eviction budget exhausted after {evictions} evictions")]
     TooFull { evictions: usize },
 }
+
+impl fmt::Display for FilterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FilterError::BadConfig(msg) => write!(f, "bad filter configuration: {msg}"),
+            FilterError::TooFull { evictions } => write!(
+                f,
+                "filter too full: eviction budget exhausted after {evictions} evictions"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FilterError {}

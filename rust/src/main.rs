@@ -96,9 +96,11 @@ fn cmd_selftest(args: &Args) {
         out_dir: std::env::temp_dir().join("cuckoo_selftest"),
     };
     bench::fig3::run(&opts);
-    // PJRT path if artifacts exist.
+    // PJRT path if artifacts exist and the backend is compiled in.
     let dir = std::path::Path::new("artifacts");
-    if dir.join("manifest.json").exists() {
+    if !cuckoo_gpu::runtime::QueryRuntime::available() {
+        println!("(built without the `xla` feature; skipping the PJRT path)");
+    } else if dir.join("manifest.json").exists() {
         let engine = Engine::with_pjrt(dir, 4).expect("pjrt engine");
         use cuckoo_gpu::coordinator::{OpKind, Request};
         let keys: Vec<u64> = (0..1000u64).map(|i| i * 7 + 1).collect();

@@ -68,7 +68,7 @@ impl RuntimeHandle {
         let geometry = ready_rx
             .recv()
             .map_err(|_| RuntimeError::MissingArtifact("driver thread died".into()))?
-            .map_err(|e| RuntimeError::Other(anyhow::anyhow!(e)))?;
+            .map_err(RuntimeError::Other)?;
         Ok(Self {
             tx: Arc::new(Mutex::new(tx)),
             geometry,

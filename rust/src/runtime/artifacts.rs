@@ -4,6 +4,7 @@
 //! every artifact was lowered with. The JSON is flat and fixed-schema, so
 //! a small hand-rolled parser keeps the crate dependency-free.
 
+use super::client::RuntimeError;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -33,19 +34,21 @@ pub struct ArtifactManifest {
 
 impl ArtifactManifest {
     /// Load `<dir>/manifest.json`.
-    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, RuntimeError> {
         let dir = dir.as_ref().to_path_buf();
-        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            RuntimeError::Manifest(format!("{}: {e}", dir.join("manifest.json").display()))
+        })?;
         Self::parse(&text, dir)
     }
 
-    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Self> {
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self, RuntimeError> {
         let fields = flat_json_fields(text);
-        let get = |k: &str| -> anyhow::Result<u64> {
+        let get = |k: &str| -> Result<u64, RuntimeError> {
             fields
                 .get(k)
                 .and_then(|v| v.parse::<u64>().ok())
-                .ok_or_else(|| anyhow::anyhow!("manifest missing numeric field '{k}'"))
+                .ok_or_else(|| RuntimeError::Manifest(format!("missing numeric field '{k}'")))
         };
         let geometry = ModelGeometry {
             num_buckets: get("num_buckets")? as usize,
@@ -67,7 +70,10 @@ impl ArtifactManifest {
             }
         }
         if artifacts.is_empty() {
-            anyhow::bail!("no .hlo.txt artifacts found in {}", dir.display());
+            return Err(RuntimeError::Manifest(format!(
+                "no .hlo.txt artifacts found in {}",
+                dir.display()
+            )));
         }
         Ok(Self {
             dir,

@@ -3,37 +3,72 @@
 //!
 //! Mirrors /opt/xla-example/load_hlo.rs: `HloModuleProto::from_text_file`
 //! → `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! The real client needs the (vendored) `xla` crate and is gated behind
+//! the `xla` cargo feature so the default build is dependency-free; the
+//! stub below keeps the API shape and reports itself unavailable, and
+//! the engine falls back to the native query path.
 
 use super::artifacts::ArtifactManifest;
-use std::collections::BTreeMap;
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("artifact '{0}' not found (run `make artifacts`)")]
+    /// Artifact not present in the manifest (run `make artifacts`).
     MissingArtifact(String),
-    #[error("geometry mismatch: {0}")]
+    /// Batch/table shape doesn't match the compiled geometry.
     Geometry(String),
-    #[error(transparent)]
-    Xla(#[from] xla::Error),
-    #[error(transparent)]
-    Other(#[from] anyhow::Error),
+    /// manifest.json missing, unreadable or malformed.
+    Manifest(String),
+    /// PJRT/XLA-side failure (or the backend isn't compiled in).
+    Xla(String),
+    Other(String),
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RuntimeError::MissingArtifact(a) => {
+                write!(f, "artifact '{a}' not found (run `make artifacts`)")
+            }
+            RuntimeError::Geometry(m) => write!(f, "geometry mismatch: {m}"),
+            RuntimeError::Manifest(m) => write!(f, "artifact manifest: {m}"),
+            RuntimeError::Xla(m) => write!(f, "xla: {m}"),
+            RuntimeError::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+#[cfg(feature = "xla")]
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
 }
 
 /// A compiled filter runtime: the PJRT client plus one loaded executable
 /// per AOT graph.
+#[cfg(feature = "xla")]
 pub struct QueryRuntime {
     pub manifest: ArtifactManifest,
     client: xla::PjRtClient,
-    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    executables: std::collections::BTreeMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "xla")]
 impl QueryRuntime {
+    /// True when the PJRT backend is compiled into this binary.
+    pub const fn available() -> bool {
+        true
+    }
+
     /// Compile every artifact in `dir` on the PJRT CPU client.
     pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self, RuntimeError> {
         let manifest = ArtifactManifest::load(dir)?;
         let client = xla::PjRtClient::cpu()?;
-        let mut executables = BTreeMap::new();
+        let mut executables = std::collections::BTreeMap::new();
         for (name, path) in &manifest.artifacts {
             let proto = xla::HloModuleProto::from_text_file(path)?;
             let comp = xla::XlaComputation::from_proto(&proto);
@@ -162,5 +197,63 @@ impl QueryRuntime {
             out.extend(self.query(words, chunk)?);
         }
         Ok(out)
+    }
+}
+
+/// Stub compiled when the `xla` feature is off: same API shape, every
+/// execution entry point reports the backend as unavailable. The engine
+/// treats that as "serve natively".
+#[cfg(not(feature = "xla"))]
+pub struct QueryRuntime {
+    pub manifest: ArtifactManifest,
+}
+
+#[cfg(not(feature = "xla"))]
+impl QueryRuntime {
+    /// True when the PJRT backend is compiled into this binary.
+    pub const fn available() -> bool {
+        false
+    }
+
+    fn unavailable() -> RuntimeError {
+        RuntimeError::Xla("built without the `xla` feature; native query path only".into())
+    }
+
+    /// Validates the manifest, then reports the backend unavailable.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self, RuntimeError> {
+        let _manifest = ArtifactManifest::load(dir)?;
+        Err(Self::unavailable())
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    pub fn has_graph(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn query(&self, _words: &[u64], _keys: &[u64]) -> Result<Vec<bool>, RuntimeError> {
+        Err(Self::unavailable())
+    }
+
+    pub fn query_stats(
+        &self,
+        _words: &[u64],
+        _keys: &[u64],
+    ) -> Result<(Vec<bool>, u64), RuntimeError> {
+        Err(Self::unavailable())
+    }
+
+    pub fn hash(&self, _keys: &[u64]) -> Result<(Vec<u32>, Vec<u32>, Vec<u32>), RuntimeError> {
+        Err(Self::unavailable())
+    }
+
+    pub fn bloom_query(&self, _words: &[u64], _keys: &[u64]) -> Result<Vec<bool>, RuntimeError> {
+        Err(Self::unavailable())
+    }
+
+    pub fn query_all(&self, _words: &[u64], _keys: &[u64]) -> Result<Vec<bool>, RuntimeError> {
+        Err(Self::unavailable())
     }
 }

@@ -1,0 +1,169 @@
+//! Persistent-pool device invariants: spawn-once thread reuse across
+//! many launches, concurrent launches from many threads, disjoint
+//! `launch_map` writes, and the fused multi-shard launch path.
+
+use cuckoo_gpu::coordinator::ShardedFilter;
+use cuckoo_gpu::device::{Device, LaunchConfig};
+use cuckoo_gpu::filter::Fp16;
+use cuckoo_gpu::util::prng::mix64;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+fn keys(n: usize, stream: u64) -> Vec<u64> {
+    (0..n as u64).map(|i| mix64(i ^ (stream << 45))).collect()
+}
+
+#[test]
+fn pool_reuses_threads_across_hundreds_of_launches() {
+    let d = Device::with_workers(6);
+    assert_eq!(d.threads_spawned(), 6, "pool must spawn at construction");
+    for i in 0..250u64 {
+        let n = 3_000 + (i as usize % 7) * 100; // multi-block grids
+        assert_eq!(d.launch_items(n, |_| true), n as u64);
+    }
+    // The observable "launch = enqueue, not spawn" invariant: the spawn
+    // ledger never grows, while the job ledger does.
+    assert_eq!(d.threads_spawned(), 6);
+    assert!(d.pool_jobs() >= 250);
+}
+
+#[test]
+fn concurrent_launches_from_many_threads_are_safe_and_exact() {
+    let d = Arc::new(Device::with_workers(4));
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        let d = d.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut total = 0u64;
+            for round in 0..30u64 {
+                // Mix of pool-path (large) and inline-path (tiny) grids.
+                let n = if (t + round) % 3 == 0 { 37 } else { 2_048 + t as usize };
+                total += d.launch_items(n, |i| (i as u64 + t + round) % 2 == 0);
+            }
+            total
+        }));
+    }
+    let mut grand = 0u64;
+    for h in handles {
+        grand += h.join().unwrap();
+    }
+    assert!(grand > 0);
+    assert_eq!(d.threads_spawned(), 4, "no launch may spawn extra threads");
+}
+
+#[test]
+fn launch_map_ranges_are_disjoint_and_complete() {
+    // Every out slot must be written exactly once per launch, repeatedly,
+    // with odd geometry (non-divisible block/warp sizes).
+    let d = Device::new(LaunchConfig {
+        block_size: 96,
+        warp_size: 16,
+        workers: 5,
+    });
+    let n = 10_007; // prime → ragged final block
+    let writes: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    for _ in 0..20 {
+        let mut out = vec![false; n];
+        let ok = d.launch_map(
+            |i| {
+                writes[i].fetch_add(1, Ordering::Relaxed);
+                i % 2 == 0
+            },
+            &mut out,
+        );
+        assert_eq!(ok as usize, n.div_ceil(2));
+        for (i, &o) in out.iter().enumerate() {
+            assert_eq!(o, i % 2 == 0, "out[{i}] wrong");
+        }
+    }
+    assert!(
+        writes.iter().all(|w| w.load(Ordering::Relaxed) == 20),
+        "some item was visited more or less than once per launch"
+    );
+}
+
+#[test]
+fn launch_sharded_covers_disjoint_worker_ranges() {
+    let d = Device::with_workers(4);
+    let n = 5_555;
+    let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let workers_seen: Vec<AtomicU64> = (0..d.workers()).map(|_| AtomicU64::new(0)).collect();
+    d.launch_sharded(n, |w, range| {
+        workers_seen[w].fetch_add(1, Ordering::Relaxed);
+        for i in range {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        }
+    });
+    assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    // Each worker shard is invoked at most once per launch.
+    assert!(workers_seen.iter().all(|w| w.load(Ordering::Relaxed) <= 1));
+}
+
+#[test]
+fn sharded_roundtrip_through_fused_launches() {
+    // shards >= 4 exercising the scatter + single fused launch path end
+    // to end, with positional results checked against the serial oracle.
+    let device = Device::with_workers(4);
+    let sf = ShardedFilter::<Fp16>::with_capacity(80_000, 4).unwrap();
+    let ks = keys(60_000, 12);
+
+    let mut ins = vec![false; ks.len()];
+    assert_eq!(sf.insert_batch_map(&device, &ks, &mut ins), 60_000);
+    assert!(ins.iter().all(|&b| b));
+    assert_eq!(sf.len(), 60_000);
+
+    // Every shard must actually hold keys (the scatter really fans out).
+    for s in 0..sf.num_shards() {
+        assert!(sf.shard(s).len() > 10_000, "shard {s} is starved");
+    }
+
+    let mut got = vec![false; ks.len()];
+    assert_eq!(sf.contains_batch_map(&device, &ks, &mut got), 60_000);
+    assert!(got.iter().all(|&b| b));
+
+    // Absent probes agree with the per-key oracle at every position.
+    let absent = keys(20_000, 999);
+    let mut neg = vec![true; absent.len()];
+    let hits = sf.contains_batch_map(&device, &absent, &mut neg);
+    for (i, &k) in absent.iter().enumerate() {
+        assert_eq!(neg[i], sf.contains(k), "positional mismatch at {i}");
+    }
+    assert_eq!(hits, neg.iter().filter(|&&b| b).count() as u64);
+
+    assert_eq!(sf.remove_batch(&device, &ks), 60_000);
+    assert_eq!(sf.len(), 0);
+}
+
+#[test]
+fn engine_shared_device_serves_mixed_phases() {
+    // The engine's device pool must survive interleaved mutation/query
+    // phases driven from multiple client threads.
+    use cuckoo_gpu::coordinator::{Engine, EngineConfig, OpKind, Request};
+    let e = Arc::new(
+        Engine::new(EngineConfig {
+            capacity: 120_000,
+            shards: 4,
+            workers: 4,
+            artifacts_dir: None,
+        })
+        .unwrap(),
+    );
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let e = e.clone();
+        handles.push(std::thread::spawn(move || {
+            let ks = keys(10_000, 100 + t);
+            let r = e.execute(&Request::new(OpKind::Insert, ks.clone()));
+            assert_eq!(r.successes, 10_000);
+            let r = e.execute(&Request::new(OpKind::Query, ks.clone()));
+            assert_eq!(r.successes, 10_000);
+            assert!(r.outcomes.iter().all(|&b| b));
+            let r = e.execute(&Request::new(OpKind::Delete, ks));
+            assert_eq!(r.successes, 10_000);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(e.len(), 0);
+}

@@ -19,6 +19,10 @@ fn keys(n: usize, stream: u64) -> Vec<u64> {
 }
 
 fn load() -> Option<QueryRuntime> {
+    if !QueryRuntime::available() {
+        eprintln!("skipping: built without the `xla` feature");
+        return None;
+    }
     let dir = artifacts_dir()?;
     match QueryRuntime::load(&dir) {
         Ok(rt) => Some(rt),
