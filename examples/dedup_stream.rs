@@ -48,7 +48,9 @@ fn main() {
             .collect();
 
         // Seen before? → admit to cache. Else record the first sighting.
-        let seen = batcher.call(Request::new(OpKind::Query, items.clone()));
+        let seen = batcher
+            .call(Request::new(OpKind::Query, items.clone()))
+            .expect("batcher closed");
         let fresh: Vec<u64> = items
             .iter()
             .zip(&seen.outcomes)
@@ -57,13 +59,17 @@ fn main() {
             .collect();
         admitted += seen.successes;
         first_seen += fresh.len() as u64;
-        batcher.call(Request::new(OpKind::Insert, fresh.clone()));
+        batcher
+            .call(Request::new(OpKind::Insert, fresh.clone()))
+            .expect("batcher closed");
         in_window.extend(&fresh);
 
         // Slide the window: forget the oldest sightings (true deletion).
         while in_window.len() > window {
             let drain: Vec<u64> = in_window.drain(..batch.min(in_window.len())).collect();
-            batcher.call(Request::new(OpKind::Delete, drain));
+            batcher
+                .call(Request::new(OpKind::Delete, drain))
+                .expect("batcher closed");
         }
     }
 

@@ -3,11 +3,15 @@
 //! single-threaded op latency, multi-thread scaling.
 //! Run with `cargo bench --bench micro_hot_paths`.
 
-use cuckoo_gpu::coordinator::ShardedFilter;
+use cuckoo_gpu::coordinator::{
+    Batcher, BatcherConfig, Engine, EngineConfig, OpKind, Request, ShardedFilter,
+};
 use cuckoo_gpu::device::Device;
 use cuckoo_gpu::filter::{hash::xxhash64_u64, CuckooConfig, CuckooFilter, Fp16, Layout};
 use cuckoo_gpu::util::Timer;
+use std::collections::VecDeque;
 use std::hint::black_box;
+use std::sync::Arc;
 
 fn bench(name: &str, ops: usize, f: impl FnOnce()) -> f64 {
     let t = Timer::new();
@@ -51,6 +55,22 @@ fn launch_overhead() {
     let ns = t.elapsed_ns() as f64 / iters as f64;
     println!("empty launch, inline path (1 block)        {ns:>10.0} ns/launch");
 
+    // Stream-ordered empty kernels, depth-4 in flight: amortises the
+    // completion round trip across overlapped submissions.
+    let t = Timer::new();
+    let mut tokens = VecDeque::new();
+    for _ in 0..iters {
+        tokens.push_back(d.launch_async(grid, |_| {}));
+        if tokens.len() >= 4 {
+            black_box(tokens.pop_front().unwrap().wait());
+        }
+    }
+    while let Some(tok) = tokens.pop_front() {
+        black_box(tok.wait());
+    }
+    let ns = t.elapsed_ns() as f64 / iters as f64;
+    println!("empty launch_async, depth-4 pipeline       {ns:>10.0} ns/launch");
+
     // Small serving batches: op throughput including launch cost.
     for batch in [1 << 10, 1 << 12] {
         let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(1 << 16)).unwrap();
@@ -77,8 +97,79 @@ fn launch_overhead() {
     });
 }
 
+/// Barrier vs pipelined flusher on a multi-group workload: the same G
+/// query groups executed (a) synchronously one at a time (scatter and
+/// kernel serialized — the pre-async flusher), (b) via depth-2
+/// `execute_async` tickets (scatter of group k+1 under the kernel of
+/// group k — what the flusher does now), and (c) through the batcher
+/// end to end.
+fn batch_pipeline_overlap() {
+    println!("-- batch pipeline (barrier vs overlapped flusher) --");
+    let groups = 64usize;
+    let batch = 1 << 14;
+    let engine = Arc::new(
+        Engine::new(EngineConfig {
+            capacity: groups * batch,
+            shards: 8,
+            workers: cuckoo_gpu::device::default_workers(),
+            artifacts_dir: None,
+        })
+        .unwrap(),
+    );
+    let sets: Vec<Vec<u64>> = (0..groups as u64)
+        .map(|g| {
+            (0..batch as u64)
+                .map(|i| cuckoo_gpu::util::prng::mix64(i ^ (g << 26)))
+                .collect()
+        })
+        .collect();
+    for ks in &sets {
+        engine.execute(&Request::new(OpKind::Insert, ks.clone()));
+    }
+    let reqs: Vec<Request> = sets
+        .iter()
+        .map(|ks| Request::new(OpKind::Query, ks.clone()))
+        .collect();
+
+    bench(&format!("query {groups} groups, barrier execute"), groups * batch, || {
+        for r in &reqs {
+            black_box(engine.execute(r).successes);
+        }
+    });
+
+    bench(&format!("query {groups} groups, async depth-2"), groups * batch, || {
+        let mut pending = VecDeque::new();
+        for r in &reqs {
+            pending.push_back(engine.execute_async(r));
+            if pending.len() >= 2 {
+                black_box(pending.pop_front().unwrap().wait().successes);
+            }
+        }
+        while let Some(t) = pending.pop_front() {
+            black_box(t.wait().successes);
+        }
+    });
+
+    // End to end through the batcher (pipelined flusher): one group per
+    // request (max_keys == batch so requests never coalesce further).
+    let b = Batcher::new(
+        engine.clone(),
+        BatcherConfig {
+            max_keys: batch,
+            max_delay: std::time::Duration::from_millis(2),
+        },
+    );
+    bench(&format!("query {groups} groups, batcher pipeline"), groups * batch, || {
+        let rxs: Vec<_> = reqs.iter().map(|r| b.submit(r.clone())).collect();
+        for rx in rxs {
+            black_box(rx.recv().unwrap().unwrap().successes);
+        }
+    });
+}
+
 fn main() {
     launch_overhead();
+    batch_pipeline_overlap();
     let n = 1 << 22;
     let keys: Vec<u64> = (0..n as u64).map(cuckoo_gpu::util::prng::mix64).collect();
 

@@ -7,9 +7,30 @@
 //! `max_delay`. Mixed kinds flush in arrival order of their groups,
 //! which preserves the epoch guard's query/mutation phase separation and
 //! keeps per-request ordering within a kind.
+//!
+//! ## Pipelined flusher
+//!
+//! The flusher is a two-stage pipeline over [`Engine::execute_async`]:
+//! while group *k*'s fused kernel runs on the device pool, the flusher
+//! thread scatters/permutes group *k+1* and enqueues it stream-ordered
+//! behind it — the CPU-side work of the next batch hides under the
+//! kernel of the current one. In-flight tickets are drained strictly in
+//! submission order, so per-client response order is preserved; and they
+//! are fully drained before a group of the opposite phase (query vs
+//! mutation) is submitted, so the epoch guard's phase separation holds
+//! and `begin_*` never waits on a token only this thread could release
+//! (see [`super::epoch`]).
+//!
+//! Failure handling: clients receive `Result<Response, ServeError>`.
+//! Submissions after shutdown resolve immediately to
+//! [`ServeError::Closed`] instead of hanging, and a panic during a flush
+//! (e.g. a device worker fault) is caught per group — the group's
+//! clients get [`ServeError::Failed`] and the flusher keeps serving.
 
-use super::engine::Engine;
-use super::request::{OpKind, Request, Response};
+use super::engine::{Engine, ExecTicket};
+use super::request::{OpKind, Request, Response, ServeError};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -31,11 +52,13 @@ impl Default for BatcherConfig {
     }
 }
 
+type ClientTx = mpsc::Sender<Result<Response, ServeError>>;
+
 struct PendingGroup {
     op: OpKind,
     keys: Vec<u64>,
     /// (client, range in `keys`) so responses can be scattered back.
-    clients: Vec<(mpsc::Sender<Response>, std::ops::Range<usize>)>,
+    clients: Vec<(ClientTx, std::ops::Range<usize>)>,
     oldest: Instant,
 }
 
@@ -43,6 +66,39 @@ struct PendingGroup {
 struct QueueState {
     groups: Vec<PendingGroup>,
     shutdown: bool,
+}
+
+/// A group whose kernel is in flight on the device pool.
+struct InFlight<'e> {
+    ticket: ExecTicket<'e>,
+    clients: Vec<(ClientTx, std::ops::Range<usize>)>,
+    mutation: bool,
+}
+
+/// Resolve one in-flight group: wait its ticket (blocking if the kernel
+/// is still running) and scatter per-client responses. A panic inside
+/// the wait (device worker fault) turns into [`ServeError::Failed`] for
+/// every client of the group — the flusher survives.
+fn respond(flight: InFlight<'_>) {
+    let InFlight { ticket, clients, .. } = flight;
+    match catch_unwind(AssertUnwindSafe(|| ticket.wait())) {
+        Ok(resp) => {
+            for (tx, range) in clients {
+                let _ = tx.send(Ok(Response {
+                    op: resp.op,
+                    outcomes: resp.outcomes[range.clone()].to_vec(),
+                    successes: resp.outcomes[range].iter().filter(|&&b| b).count() as u64,
+                }));
+            }
+        }
+        Err(_) => {
+            for (tx, _) in clients {
+                let _ = tx.send(Err(ServeError::Failed(
+                    "device execution panicked".to_string(),
+                )));
+            }
+        }
+    }
 }
 
 /// The dynamic batcher. `submit` is thread-safe; a background flusher
@@ -65,13 +121,19 @@ impl Batcher {
         }
     }
 
-    /// Enqueue a request; the returned receiver yields the response after
-    /// the batch it lands in is flushed.
-    pub fn submit(&self, req: Request) -> mpsc::Receiver<Response> {
+    /// Enqueue a request; the returned receiver yields the response (or a
+    /// [`ServeError`]) after the batch it lands in is flushed. Once
+    /// shutdown has begun, the receiver resolves immediately to
+    /// [`ServeError::Closed`] — a late submission never hangs.
+    pub fn submit(&self, req: Request) -> mpsc::Receiver<Result<Response, ServeError>> {
         let (tx, rx) = mpsc::channel();
         let (lock, cv) = &*self.state;
         let mut st = lock.lock().unwrap();
-        debug_assert!(!st.shutdown);
+        if st.shutdown {
+            drop(st);
+            let _ = tx.send(Err(ServeError::Closed));
+            return rx;
+        }
         // Join the newest group of the same kind, else open a new group.
         let join_last = matches!(st.groups.last(), Some(g) if g.op == req.op && g.keys.len() < self.cfg.max_keys);
         if join_last {
@@ -91,27 +153,53 @@ impl Batcher {
         rx
     }
 
+    /// Begin shutdown without consuming the batcher: pending groups still
+    /// flush, new submissions resolve to [`ServeError::Closed`].
+    /// Idempotent; [`Drop`] calls it and then joins the flusher.
+    pub fn close(&self) {
+        let (lock, cv) = &*self.state;
+        lock.lock().unwrap().shutdown = true;
+        cv.notify_all();
+    }
+
     fn run_flusher(
         state: Arc<(Mutex<QueueState>, Condvar)>,
         engine: Arc<Engine>,
         cfg: BatcherConfig,
     ) {
+        /// Stream depth: one kernel running + one enqueued behind it is
+        /// enough to hide the scatter; deeper queues only add latency.
+        const MAX_INFLIGHT: usize = 2;
         let (lock, cv) = &*state;
+        let mut inflight: VecDeque<InFlight<'_>> = VecDeque::new();
         loop {
+            // Stage 0: ship whatever has already completed, in
+            // submission order (per-client response order).
+            while inflight.front().is_some_and(|f| f.ticket.is_done()) {
+                respond(inflight.pop_front().unwrap());
+            }
+
+            // Stage 1: pick up the next flush-ready group. Park on the
+            // condvar only when nothing is in flight — with kernels
+            // running we fall through and drain instead of sleeping.
             let group = {
                 let mut st = lock.lock().unwrap();
                 loop {
                     if st.shutdown && st.groups.is_empty() {
-                        return;
+                        break None;
                     }
-                    // Flush-ready: full group, aged group, or shutdown drain.
+                    // Flush-ready: full group, aged group, a group queued
+                    // behind it, or shutdown drain.
                     let ready = !st.groups.is_empty()
                         && (st.shutdown
                             || st.groups[0].keys.len() >= cfg.max_keys
                             || st.groups[0].oldest.elapsed() >= cfg.max_delay
                             || st.groups.len() > 1);
                     if ready {
-                        break st.groups.remove(0);
+                        break Some(st.groups.remove(0));
+                    }
+                    if !inflight.is_empty() {
+                        break None;
                     }
                     let wait = if st.groups.is_empty() {
                         Duration::from_millis(50)
@@ -124,31 +212,73 @@ impl Batcher {
                 }
             };
 
-            engine.metrics.record_batch();
-            let resp = engine.execute(&Request::new(group.op, group.keys));
-            for (tx, range) in group.clients {
-                let _ = tx.send(Response {
-                    op: resp.op,
-                    outcomes: resp.outcomes[range.clone()].to_vec(),
-                    successes: resp.outcomes[range].iter().filter(|&&b| b).count() as u64,
-                });
+            // Stage 2: submit the group (scatter here, kernel on the
+            // pool) or drain the oldest in-flight kernel.
+            match group {
+                Some(g) => {
+                    let mutation = g.op.is_mutation();
+                    // Phase discipline: our own unresolved tickets pin
+                    // the epoch phase, and only we can release them —
+                    // drain before switching phase (see module docs).
+                    if inflight.back().is_some_and(|f| f.mutation != mutation) {
+                        while let Some(f) = inflight.pop_front() {
+                            respond(f);
+                        }
+                    }
+                    while inflight.len() >= MAX_INFLIGHT {
+                        respond(inflight.pop_front().unwrap());
+                    }
+                    engine.metrics.record_batch();
+                    let clients = g.clients;
+                    let req = Request::new(g.op, g.keys);
+                    // A panic during submission (scatter or fault
+                    // injection) must not kill the flusher: fail the
+                    // group's clients and keep serving.
+                    match catch_unwind(AssertUnwindSafe(|| engine.execute_async(&req))) {
+                        Ok(ticket) => inflight.push_back(InFlight {
+                            ticket,
+                            clients,
+                            mutation,
+                        }),
+                        Err(_) => {
+                            for (tx, _) in clients {
+                                let _ = tx.send(Err(ServeError::Failed(
+                                    "device execution panicked".to_string(),
+                                )));
+                            }
+                        }
+                    }
+                }
+                None => {
+                    if let Some(f) = inflight.pop_front() {
+                        // Blocking wait on the oldest kernel; the next
+                        // loop iteration looks for new groups again.
+                        respond(f);
+                    } else {
+                        // No groups, nothing in flight: shutdown drain
+                        // complete.
+                        return;
+                    }
+                }
             }
         }
     }
 
-    /// Submit and wait (convenience for sync callers).
-    pub fn call(&self, req: Request) -> Response {
-        self.submit(req).recv().expect("batcher dropped response")
+    /// Submit and wait (convenience for sync callers). Surfaces
+    /// [`ServeError::Closed`] if the batcher shut down before answering.
+    pub fn call(&self, req: Request) -> Result<Response, ServeError> {
+        match self.submit(req).recv() {
+            Ok(result) => result,
+            // The flusher dropped the sender without answering (it died
+            // or the batcher was torn down mid-request).
+            Err(_) => Err(ServeError::Closed),
+        }
     }
 }
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        {
-            let (lock, cv) = &*self.state;
-            lock.lock().unwrap().shutdown = true;
-            cv.notify_all();
-        }
+        self.close();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
@@ -160,6 +290,7 @@ mod tests {
     use super::*;
     use crate::coordinator::engine::EngineConfig;
     use crate::util::prng::mix64;
+    use std::sync::atomic::Ordering;
 
     fn engine() -> Arc<Engine> {
         Arc::new(
@@ -186,7 +317,7 @@ mod tests {
                 max_delay: Duration::from_millis(1),
             },
         );
-        let r = b.call(Request::new(OpKind::Insert, keys(100, 1)));
+        let r = b.call(Request::new(OpKind::Insert, keys(100, 1))).unwrap();
         assert_eq!(r.successes, 100);
     }
 
@@ -206,7 +337,7 @@ mod tests {
             .collect();
         let mut total = 0;
         for rx in receivers {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().unwrap();
             assert_eq!(resp.outcomes.len(), 100);
             total += resp.successes;
         }
@@ -225,14 +356,14 @@ mod tests {
         let e = engine();
         let b = Batcher::new(e.clone(), BatcherConfig::default());
         let present = keys(500, 7);
-        b.call(Request::new(OpKind::Insert, present.clone()));
+        b.call(Request::new(OpKind::Insert, present.clone())).unwrap();
 
         // Two clients: one queries present keys, one absent keys; their
         // responses must not be swapped or interleaved.
         let rx1 = b.submit(Request::new(OpKind::Query, present[..100].to_vec()));
         let rx2 = b.submit(Request::new(OpKind::Query, keys(100, 999)));
-        let r1 = rx1.recv().unwrap();
-        let r2 = rx2.recv().unwrap();
+        let r1 = rx1.recv().unwrap().unwrap();
+        let r2 = rx2.recv().unwrap().unwrap();
         assert_eq!(r1.successes, 100);
         assert!(r2.successes < 5);
     }
@@ -244,7 +375,83 @@ mod tests {
         let ks = keys(100, 8);
         let rx_i = b.submit(Request::new(OpKind::Insert, ks.clone()));
         let rx_q = b.submit(Request::new(OpKind::Query, ks.clone()));
-        assert_eq!(rx_i.recv().unwrap().op, OpKind::Insert);
-        assert_eq!(rx_q.recv().unwrap().op, OpKind::Query);
+        assert_eq!(rx_i.recv().unwrap().unwrap().op, OpKind::Insert);
+        assert_eq!(rx_q.recv().unwrap().unwrap().op, OpKind::Query);
+    }
+
+    #[test]
+    fn submit_after_close_resolves_closed_instead_of_hanging() {
+        // Regression: pre-async, a release-build submit after shutdown
+        // was only debug_assert'ed and the client's recv() hung forever.
+        let b = Batcher::new(engine(), BatcherConfig::default());
+        let r = b.call(Request::new(OpKind::Insert, keys(10, 40))).unwrap();
+        assert_eq!(r.successes, 10);
+        b.close();
+        let rx = b.submit(Request::new(OpKind::Query, keys(10, 40)));
+        assert_eq!(rx.recv().unwrap(), Err(ServeError::Closed));
+        assert_eq!(
+            b.call(Request::new(OpKind::Query, keys(10, 40))),
+            Err(ServeError::Closed)
+        );
+    }
+
+    #[test]
+    fn flusher_survives_engine_panic_and_fails_only_that_group() {
+        // Regression: pre-async, a panic escaping Engine::execute killed
+        // the flusher thread and every later client hung forever.
+        let e = engine();
+        let b = Batcher::new(e.clone(), BatcherConfig::default());
+        e.debug_fail_next_execute.store(true, Ordering::Relaxed);
+        assert!(matches!(
+            b.call(Request::new(OpKind::Insert, keys(50, 60))),
+            Err(ServeError::Failed(_))
+        ));
+        // The flusher is still alive and serving.
+        let r = b.call(Request::new(OpKind::Insert, keys(50, 61))).unwrap();
+        assert_eq!(r.successes, 50);
+    }
+
+    #[test]
+    fn empty_batch_flows_through() {
+        let b = Batcher::new(engine(), BatcherConfig::default());
+        let r = b.call(Request::new(OpKind::Insert, vec![])).unwrap();
+        assert_eq!(r.successes, 0);
+        assert!(r.outcomes.is_empty());
+        let r = b.call(Request::new(OpKind::Query, vec![])).unwrap();
+        assert_eq!(r.successes, 0);
+        assert!(r.outcomes.is_empty());
+    }
+
+    #[test]
+    fn pipelined_multi_group_mixed_phases_stay_correct() {
+        // Many groups of alternating phase queued at once: the flusher
+        // must overlap same-phase groups, drain across phase switches,
+        // and keep every client's positional answers exact.
+        let e = engine();
+        let b = Batcher::new(
+            e.clone(),
+            BatcherConfig {
+                max_keys: 1_000, // one group per 1k-key request
+                max_delay: Duration::from_millis(20),
+            },
+        );
+        let sets: Vec<Vec<u64>> = (0..8).map(|i| keys(1_000, 70 + i)).collect();
+        let ins: Vec<_> = sets
+            .iter()
+            .map(|ks| b.submit(Request::new(OpKind::Insert, ks.clone())))
+            .collect();
+        for rx in ins {
+            assert_eq!(rx.recv().unwrap().unwrap().successes, 1_000);
+        }
+        // Interleave queries (present), deletes, and absent queries.
+        let q1 = b.submit(Request::new(OpKind::Query, sets[0].clone()));
+        let d1 = b.submit(Request::new(OpKind::Delete, sets[1].clone()));
+        let q2 = b.submit(Request::new(OpKind::Query, keys(1_000, 999)));
+        let d2 = b.submit(Request::new(OpKind::Delete, sets[2].clone()));
+        assert_eq!(q1.recv().unwrap().unwrap().successes, 1_000);
+        assert_eq!(d1.recv().unwrap().unwrap().successes, 1_000);
+        assert!(q2.recv().unwrap().unwrap().successes < 5);
+        assert_eq!(d2.recv().unwrap().unwrap().successes, 1_000);
+        assert_eq!(e.len(), 6_000);
     }
 }

@@ -6,15 +6,25 @@
 //! order even when the key space is sharded (`shards > 1`) — the
 //! sharded filter scatters the batch shard-contiguously and threads a
 //! permutation index through the kernel (see [`super::shard`]).
+//!
+//! Requests can be executed synchronously ([`Engine::execute`]) or
+//! submitted without a barrier ([`Engine::execute_async`], returning an
+//! [`ExecTicket`]). The async form does the scatter/permute on the
+//! calling thread, enqueues the kernel stream-ordered on the device
+//! pool, and holds the request's epoch-phase token inside the ticket
+//! until `wait()` — so a caller pipelining tickets must drain them
+//! before switching between query and mutation phases (the batcher's
+//! flusher does exactly this; see [`super::batcher`]).
 
-use super::epoch::EpochGuard;
+use super::epoch::{EpochGuard, PhaseToken};
 use super::metrics::Metrics;
 use super::request::{OpKind, Request, Response};
-use super::shard::ShardedFilter;
+use super::shard::{ShardBatchToken, ShardedFilter};
 use crate::device::Device;
 use crate::filter::{FilterError, Fp16};
 use crate::runtime::{RuntimeError, RuntimeHandle};
 use crate::util::Timer;
+use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Construction failure: the filter geometry was rejected or the PJRT
 /// runtime could not come up for a strict (`with_pjrt`) engine.
@@ -75,6 +85,11 @@ pub struct Engine {
     epoch: EpochGuard,
     pub metrics: Metrics,
     runtime: Option<RuntimeHandle>,
+    /// Test-only fault injection: when armed, the next `execute_async`
+    /// panics before touching the filter — exercises the batcher's
+    /// flusher-survival path. Not part of the public API.
+    #[doc(hidden)]
+    pub debug_fail_next_execute: AtomicBool,
 }
 
 impl Engine {
@@ -116,6 +131,7 @@ impl Engine {
             epoch: EpochGuard::new(),
             metrics: Metrics::new(),
             runtime,
+            debug_fail_next_execute: AtomicBool::new(false),
         })
     }
 
@@ -137,6 +153,7 @@ impl Engine {
             epoch: EpochGuard::new(),
             metrics: Metrics::new(),
             runtime: Some(rt),
+            debug_fail_next_execute: AtomicBool::new(false),
         })
     }
 
@@ -152,54 +169,173 @@ impl Engine {
         self.filter.is_empty()
     }
 
-    /// Execute one batched request (the batcher calls this per flush).
-    /// One fused device launch per request; `outcomes` is positional in
-    /// the request's key order regardless of sharding.
+    /// Execute one batched request and wait for it. One fused device
+    /// launch per request; `outcomes` is positional in the request's key
+    /// order regardless of sharding.
     pub fn execute(&self, req: &Request) -> Response {
-        let t = Timer::new();
+        self.execute_async(req).wait()
+    }
+
+    /// Submit one batched request without a barrier: the scatter/permute
+    /// runs on the calling thread, the fused kernel is enqueued stream-
+    /// ordered on the device pool, and the returned [`ExecTicket`]
+    /// resolves to the [`Response`].
+    ///
+    /// The ticket holds the request's epoch-phase token until it is
+    /// waited (or dropped), so the query/mutation phase separation of
+    /// [`EpochGuard`] extends over the in-flight kernel. A caller
+    /// holding unresolved tickets of one phase must drain them before
+    /// submitting the opposite phase — `begin_query`/`begin_mutation`
+    /// would otherwise wait on tokens only that caller can release.
+    pub fn execute_async(&self, req: &Request) -> ExecTicket<'_> {
+        // Read-only fast path: the swap (an unconditional cache-line
+        // write) only runs once a test has armed the hook.
+        if self.debug_fail_next_execute.load(Ordering::Relaxed)
+            && self.debug_fail_next_execute.swap(false, Ordering::Relaxed)
+        {
+            panic!("injected engine failure");
+        }
+        let timer = Timer::new();
         let n = req.keys.len();
-        let mut outcomes = vec![false; n];
-        let successes = match req.op {
+        match req.op {
             OpKind::Insert => {
-                let _tok = self.epoch.begin_mutation();
-                self.filter
-                    .insert_batch_map(&self.device, &req.keys, &mut outcomes)
+                let phase = self.epoch.begin_mutation();
+                let batch = self.filter.insert_batch_map_async(&self.device, &req.keys);
+                self.pending(req.op, n, batch, phase, timer)
             }
             OpKind::Delete => {
-                let _tok = self.epoch.begin_mutation();
-                self.filter
-                    .remove_batch_map(&self.device, &req.keys, &mut outcomes)
+                let phase = self.epoch.begin_mutation();
+                let batch = self.filter.remove_batch_map_async(&self.device, &req.keys);
+                self.pending(req.op, n, batch, phase, timer)
             }
             OpKind::Query => {
-                let _tok = self.epoch.begin_query();
-                match &self.runtime {
-                    Some(rt) => {
-                        // AOT path: snapshot + PJRT batches. Safe inside
-                        // the query phase (no concurrent mutation).
-                        let snapshot = std::sync::Arc::new(self.filter.shard(0).table().snapshot());
+                let phase = self.epoch.begin_query();
+                if let Some(rt) = &self.runtime {
+                    // AOT path: snapshot + PJRT batches, synchronous
+                    // inside the query phase (no concurrent mutation).
+                    let mut outcomes = vec![false; n];
+                    let successes = {
+                        let snapshot =
+                            std::sync::Arc::new(self.filter.shard(0).table().snapshot());
                         match rt.query_all(snapshot, req.keys.clone()) {
                             Ok(flags) => {
                                 outcomes.copy_from_slice(&flags);
                                 flags.iter().filter(|&&b| b).count() as u64
                             }
                             Err(e) => {
-                                eprintln!("[cuckoo-gpu] error: PJRT query failed, native fallback: {e}");
+                                eprintln!(
+                                    "[cuckoo-gpu] error: PJRT query failed, native fallback: {e}"
+                                );
                                 self.filter
                                     .contains_batch_map(&self.device, &req.keys, &mut outcomes)
                             }
                         }
-                    }
-                    None => self
-                        .filter
-                        .contains_batch_map(&self.device, &req.keys, &mut outcomes),
+                    };
+                    drop(phase);
+                    self.metrics.record(req.op, n, successes, timer.elapsed_ns());
+                    return ExecTicket {
+                        inner: Some(TicketInner::Ready(Response {
+                            op: req.op,
+                            outcomes,
+                            successes,
+                        })),
+                    };
+                }
+                let batch = self.filter.contains_batch_map_async(&self.device, &req.keys);
+                self.pending(req.op, n, batch, phase, timer)
+            }
+        }
+    }
+
+    fn pending<'e>(
+        &'e self,
+        op: OpKind,
+        n: usize,
+        batch: ShardBatchToken<Fp16>,
+        phase: PhaseToken<'e>,
+        timer: Timer,
+    ) -> ExecTicket<'e> {
+        ExecTicket {
+            inner: Some(TicketInner::Pending {
+                op,
+                n,
+                batch,
+                _phase: phase,
+                timer,
+                metrics: &self.metrics,
+            }),
+        }
+    }
+}
+
+/// Completion handle for an async request submission
+/// ([`Engine::execute_async`]).
+///
+/// `wait()` blocks until the request's kernel retires and returns the
+/// positional [`Response`]; metrics are recorded with the full
+/// submit-to-completion latency. Dropping the ticket unresolved still
+/// waits for the kernel (the shard token's drop) and only then releases
+/// the epoch-phase token — phase separation is never cut short.
+pub struct ExecTicket<'e> {
+    inner: Option<TicketInner<'e>>,
+}
+
+enum TicketInner<'e> {
+    /// Completed at submit (PJRT query path).
+    Ready(Response),
+    /// Kernel in flight on the device pool. Field order matters: `batch`
+    /// must drop (and thus resolve) before `_phase` releases the
+    /// epoch-phase token.
+    Pending {
+        op: OpKind,
+        n: usize,
+        batch: ShardBatchToken<Fp16>,
+        _phase: PhaseToken<'e>,
+        timer: Timer,
+        metrics: &'e Metrics,
+    },
+}
+
+impl ExecTicket<'_> {
+    /// Block until the request completes; returns the response with
+    /// per-key outcomes in the request's key order. A device-worker
+    /// panic during the kernel re-raises here, not at submit.
+    pub fn wait(mut self) -> Response {
+        match self.inner.take().expect("ticket already resolved") {
+            TicketInner::Ready(resp) => resp,
+            TicketInner::Pending {
+                op,
+                n,
+                batch,
+                _phase,
+                timer,
+                metrics,
+            } => {
+                let (successes, outcomes) = batch.wait();
+                metrics.record(op, n, successes, timer.elapsed_ns());
+                Response {
+                    op,
+                    outcomes,
+                    successes,
                 }
             }
-        };
-        self.metrics.record(req.op, n, successes, t.elapsed_ns());
-        Response {
-            op: req.op,
-            outcomes,
-            successes,
+        }
+    }
+
+    /// Non-blocking completion probe.
+    pub fn is_done(&self) -> bool {
+        match self.inner.as_ref() {
+            None => true,
+            Some(TicketInner::Ready(_)) => true,
+            Some(TicketInner::Pending { batch, .. }) => batch.is_done(),
+        }
+    }
+
+    /// The operation this ticket resolves.
+    pub fn op(&self) -> OpKind {
+        match self.inner.as_ref().expect("ticket already resolved") {
+            TicketInner::Ready(resp) => resp.op,
+            TicketInner::Pending { op, .. } => *op,
         }
     }
 }
@@ -285,5 +421,49 @@ mod tests {
         assert!(r.outcomes.iter().step_by(2).all(|&b| b), "lost a present key");
         let false_pos = r.outcomes.iter().skip(1).step_by(2).filter(|&&b| b).count();
         assert!(false_pos < 40, "absent half should mostly miss, got {false_pos}");
+    }
+
+    #[test]
+    fn empty_request_is_a_noop() {
+        let e = Engine::new(EngineConfig {
+            capacity: 1_000,
+            shards: 2,
+            workers: 2,
+            artifacts_dir: None,
+        })
+        .unwrap();
+        for op in [OpKind::Insert, OpKind::Query, OpKind::Delete] {
+            let r = e.execute(&Request::new(op, vec![]));
+            assert_eq!(r.successes, 0);
+            assert!(r.outcomes.is_empty());
+        }
+        assert_eq!(e.len(), 0);
+        assert_eq!(e.metrics.requests(OpKind::Insert), 1);
+    }
+
+    #[test]
+    fn pipelined_same_phase_tickets_overlap() {
+        // Two query tickets in flight at once, waited out of order —
+        // the engine-level form of the batcher's overlapped flusher.
+        let e = Engine::new(EngineConfig {
+            capacity: 40_000,
+            shards: 4,
+            workers: 4,
+            artifacts_dir: None,
+        })
+        .unwrap();
+        let ks = keys(20_000, 8);
+        e.execute(&Request::new(OpKind::Insert, ks.clone()));
+
+        let q1 = Request::new(OpKind::Query, ks[..10_000].to_vec());
+        let q2 = Request::new(OpKind::Query, ks[10_000..].to_vec());
+        let t1 = e.execute_async(&q1);
+        let t2 = e.execute_async(&q2);
+        let r2 = t2.wait();
+        let r1 = t1.wait();
+        assert_eq!(r1.successes, 10_000);
+        assert_eq!(r2.successes, 10_000);
+        assert!(r1.outcomes.iter().all(|&b| b));
+        assert!(r2.outcomes.iter().all(|&b| b));
     }
 }

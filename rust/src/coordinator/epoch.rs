@@ -7,6 +7,18 @@
 //! effectively a phase-fair reader-writer latch where *both* sides are
 //! multi-entry — serialises query phases against mutation phases while
 //! allowing unlimited concurrency within a phase.
+//!
+//! ## Async pipelining contract
+//!
+//! With stream-ordered submission ([`crate::device::Device::launch_async`])
+//! a phase token may be held across an in-flight kernel (the engine's
+//! `ExecTicket` does this). Same-phase tokens are multi-entry, so any
+//! number of same-phase kernels may overlap; but a thread holding
+//! unresolved tokens of one phase must **drain them before entering the
+//! opposite phase** — `begin_query`/`begin_mutation` block until the
+//! other phase fully exits, and tokens only that thread can release
+//! would deadlock it. The batcher's flusher enforces this by flushing
+//! its in-flight tickets whenever the next group switches phase.
 
 use std::sync::{Condvar, Mutex};
 

@@ -8,7 +8,9 @@
 //!   mutations (the paper's torn-read caveat for non-coherent vectorised
 //!   loads, §4.4);
 //! * [`batcher`] — dynamic batching: requests accumulate until a size or
-//!   deadline trigger, then launch as one device batch;
+//!   deadline trigger, then flush through a two-stage pipeline that
+//!   scatters the next batch while the previous batch's kernel is still
+//!   in flight (stream-ordered async launches);
 //! * [`shard`]   — key-space sharding across multiple filters for
 //!   multi-device topologies; batches scatter once into a flat
 //!   shard-contiguous buffer and execute as a single fused launch on the
@@ -28,7 +30,7 @@ pub mod server;
 pub mod metrics;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use engine::{Engine, EngineConfig, EngineError};
+pub use engine::{Engine, EngineConfig, EngineError, ExecTicket};
 pub use epoch::EpochGuard;
-pub use request::{OpKind, Request, Response};
-pub use shard::ShardedFilter;
+pub use request::{OpKind, Request, Response, ServeError};
+pub use shard::{ShardBatchToken, ShardedFilter};

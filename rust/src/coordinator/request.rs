@@ -54,6 +54,29 @@ pub struct Response {
     pub successes: u64,
 }
 
+/// A serving-layer failure delivered to a client *instead of* a
+/// [`Response`] — the batcher never leaves a client hanging on a
+/// channel nobody will answer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The batcher has shut down; the request was not enqueued.
+    Closed,
+    /// The flush executing this request's group failed (e.g. a device
+    /// worker panicked). The request may have been partially applied.
+    Failed(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Closed => write!(f, "batcher closed"),
+            ServeError::Failed(why) => write!(f, "flush failed: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -10,7 +10,11 @@
 //! PING                    ->  PONG
 //! QUIT                    ->  BYE (closes connection)
 //! ```
-//! Keys are decimal or 0x-hex u64. Errors reply `ERR <message>`.
+//! Keys are decimal or 0x-hex u64. An operation with zero keys is a
+//! valid no-op (`OK 0` with empty bits) and still flows through the
+//! batcher → engine → fused-launch stack. Errors reply `ERR <message>`,
+//! including serving errors surfaced by the batcher (shutdown, failed
+//! flush).
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::engine::Engine;
@@ -129,16 +133,17 @@ fn handle_conn(
                 Some(op) => {
                     let keys: Option<Vec<u64>> = parts.map(parse_key).collect();
                     match keys {
-                        Some(keys) if !keys.is_empty() => {
-                            let resp = batcher.call(Request::new(op, keys));
-                            let bits: String = resp
-                                .outcomes
-                                .iter()
-                                .map(|&b| if b { '1' } else { '0' })
-                                .collect();
-                            format!("OK {} {}", resp.successes, bits)
-                        }
-                        Some(_) => "ERR empty key list".to_string(),
+                        Some(keys) => match batcher.call(Request::new(op, keys)) {
+                            Ok(resp) => {
+                                let bits: String = resp
+                                    .outcomes
+                                    .iter()
+                                    .map(|&b| if b { '1' } else { '0' })
+                                    .collect();
+                                format!("OK {} {}", resp.successes, bits)
+                            }
+                            Err(e) => format!("ERR {e}"),
+                        },
                         None => "ERR bad key".to_string(),
                     }
                 }
@@ -240,6 +245,14 @@ mod tests {
         let (hits, bits) = c.op("QUERY", &[1, 2, 3, 4, 5000]).unwrap();
         assert_eq!(hits, 4);
         assert_eq!(bits[..4], [true; 4]);
+
+        // Empty key list: a valid no-op that still crosses the whole
+        // server → batcher → engine → fused-launch stack.
+        let (hits, bits) = c.op("QUERY", &[]).unwrap();
+        assert_eq!(hits, 0);
+        assert!(bits.is_empty());
+        let (ok, _) = c.op("INSERT", &[]).unwrap();
+        assert_eq!(ok, 0);
 
         let reply = c.call("LEN").unwrap();
         assert_eq!(reply, "OK 4");

@@ -17,14 +17,41 @@
 //! each key lets per-key outcomes scatter back into **input order**, so
 //! the serving layer's positional responses stay correct under
 //! `shards > 1`.
+//!
+//! The permutation index is `u32`, so one fused launch covers at most
+//! `u32::MAX` keys; the synchronous batch entry points transparently
+//! split larger batches into chunk-sized launches (and the scatter hard-
+//! asserts the bound — a silent truncation would scatter outcomes to the
+//! wrong positions).
+//!
+//! ## Async batches
+//!
+//! The `*_batch_map_async` variants submit the fused kernel through
+//! [`Device::launch_async`] and return a [`ShardBatchToken`] instead of
+//! blocking. The scatter buffers, the out vector and the per-shard
+//! tallies move into `Arc`-owned task state, so their lifetime safely
+//! outlives the submitting frame (no caller-stack borrows cross the
+//! async boundary). The token's `wait()` yields `(successes, outcomes)`
+//! with outcomes in input order, and applies the per-shard occupancy
+//! ledger; a token dropped without `wait` still waits for the kernel and
+//! applies the ledger (discarding outcomes), so counters never drift.
 
-use crate::device::{Device, SendMutPtr};
+use crate::device::{Device, LaunchToken, SendMutPtr, WarpCtx};
 use crate::filter::{CuckooConfig, CuckooFilter, FilterError, Layout, NoProbe};
 use crate::util::prng::mix64;
+use std::cell::UnsafeCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Keys per fused launch — the `u32` permutation-index bound. Larger
+/// synchronous batches are transparently split into chunks of this size.
+const FUSED_CHUNK: usize = u32::MAX as usize;
 
 pub struct ShardedFilter<L: Layout> {
-    shards: Vec<CuckooFilter<L>>,
+    /// `Arc` so async batch kernels can co-own the shard array beyond
+    /// the submitting frame.
+    shards: Arc<Vec<CuckooFilter<L>>>,
     route_seed: u64,
 }
 
@@ -36,6 +63,77 @@ struct ShardScatter {
     /// Per-shard ranges into `flat`: shard `s` owns
     /// `flat[offsets[s]..offsets[s + 1]]`.
     offsets: Vec<usize>,
+}
+
+/// Which occupancy-ledger update a batch op owes its shards on
+/// completion.
+#[derive(Clone, Copy)]
+enum LedgerOp {
+    None,
+    Add,
+    Sub,
+}
+
+/// Out vector owned across the async boundary. Workers write disjoint
+/// slots during the launch (same contract as [`SendMutPtr`]); the token
+/// takes the vector only after the job retires.
+struct OutCell(UnsafeCell<Vec<bool>>);
+// SAFETY: writes are per-slot disjoint and confined to the launch; the
+// only post-launch access is the token's exclusive take after the
+// completion barrier.
+unsafe impl Sync for OutCell {}
+unsafe impl Send for OutCell {}
+
+/// `Arc`-owned task state of one in-flight async batch, co-owned by the
+/// kernel closure and the token: the out vector and per-shard tallies.
+/// (The scatter buffers are owned by the closure alone — only the
+/// kernel reads them.)
+struct AsyncBatchState {
+    out: OutCell,
+    per_shard: Vec<AtomicU64>,
+}
+
+/// The per-warp body of the fused kernel, shared by the sync and async
+/// paths: walk the shard-contiguous flat buffer, run `op` against each
+/// item's shard, scatter outcomes back through the permutation index,
+/// and flush warp-local tallies once per shard boundary.
+fn fused_warp<L, F>(
+    shards: &[CuckooFilter<L>],
+    flat: &[(u64, u32)],
+    offsets: &[usize],
+    per_shard: &[AtomicU64],
+    out: Option<*mut bool>,
+    op: &F,
+    ctx: &mut WarpCtx,
+) where
+    L: Layout,
+    F: Fn(&CuckooFilter<L>, u64) -> bool,
+{
+    // Shard of the warp's first item; items are shard-contiguous, so the
+    // kernel only ever steps the shard index forward.
+    let mut s = offsets.partition_point(|&o| o <= ctx.range.start) - 1;
+    let mut local = 0u64;
+    for j in ctx.range.clone() {
+        while j >= offsets[s + 1] {
+            if local > 0 {
+                per_shard[s].fetch_add(local, Ordering::Relaxed);
+                local = 0;
+            }
+            s += 1;
+        }
+        let (key, orig) = flat[j];
+        let ok = op(&shards[s], key);
+        if let Some(p) = out {
+            // SAFETY: `orig` indices are a permutation — each slot is
+            // written by exactly one warp item (see SendMutPtr contract).
+            unsafe { *p.add(orig as usize) = ok };
+        }
+        local += ok as u64;
+        ctx.tally(ok);
+    }
+    if local > 0 {
+        per_shard[s].fetch_add(local, Ordering::Relaxed);
+    }
 }
 
 impl<L: Layout> ShardedFilter<L> {
@@ -52,7 +150,7 @@ impl<L: Layout> ShardedFilter<L> {
             })
             .collect::<Result<Vec<_>, _>>()?;
         Ok(Self {
-            shards,
+            shards: Arc::new(shards),
             route_seed: 0xD15EA5E,
         })
     }
@@ -61,7 +159,7 @@ impl<L: Layout> ShardedFilter<L> {
     /// the shard must match a fixed AOT artifact geometry).
     pub fn from_single(filter: CuckooFilter<L>) -> Self {
         Self {
-            shards: vec![filter],
+            shards: Arc::new(vec![filter]),
             route_seed: 0xD15EA5E,
         }
     }
@@ -106,10 +204,24 @@ impl<L: Layout> ShardedFilter<L> {
     /// flat `(key, original index)` buffer in shard order.
     fn scatter(&self, keys: &[u64]) -> ShardScatter {
         let num_shards = self.shards.len();
-        debug_assert!(
-            keys.len() <= u32::MAX as usize,
-            "batch larger than the u32 permutation index"
+        // Hard bound, release builds included: a batch beyond the u32
+        // permutation index would silently truncate `i as u32` below and
+        // scatter outcomes to wrong positions. The public batch entry
+        // points chunk larger batches before they get here.
+        assert!(
+            keys.len() <= FUSED_CHUNK,
+            "batch of {} keys exceeds the u32 permutation index; chunk the batch",
+            keys.len()
         );
+        if num_shards == 1 {
+            // Single shard: identity permutation, no histogram or route
+            // passes — just the owned flat copy the launch needs.
+            let flat = keys.iter().enumerate().map(|(i, &k)| (k, i as u32)).collect();
+            return ShardScatter {
+                flat,
+                offsets: vec![0, keys.len()],
+            };
+        }
         let mut offsets = vec![0usize; num_shards + 1];
         for &k in keys {
             offsets[self.route(k) + 1] += 1;
@@ -149,36 +261,15 @@ impl<L: Layout> ShardedFilter<L> {
     {
         let flat = &scatter.flat;
         let offsets = &scatter.offsets;
-        let per_shard: Vec<AtomicU64> = (0..self.shards.len()).map(|_| AtomicU64::new(0)).collect();
+        let shards: &[CuckooFilter<L>] = &self.shards;
+        let per_shard: Vec<AtomicU64> = (0..shards.len()).map(|_| AtomicU64::new(0)).collect();
         let out_ptr = out.map(|o| {
             assert_eq!(o.len(), flat.len());
             SendMutPtr(o.as_mut_ptr())
         });
         let total = device.launch(flat.len(), |ctx| {
-            let out_ptr = &out_ptr;
-            // Shard of the warp's first item; items are shard-contiguous,
-            // so the kernel only ever steps the shard index forward.
-            let mut s = offsets.partition_point(|&o| o <= ctx.range.start) - 1;
-            let mut local = 0u64;
-            for j in ctx.range.clone() {
-                while j >= offsets[s + 1] {
-                    if local > 0 {
-                        per_shard[s].fetch_add(local, Ordering::Relaxed);
-                        local = 0;
-                    }
-                    s += 1;
-                }
-                let (key, orig) = flat[j];
-                let ok = op(&self.shards[s], key);
-                if let Some(p) = out_ptr {
-                    unsafe { *p.0.add(orig as usize) = ok };
-                }
-                local += ok as u64;
-                ctx.tally(ok);
-            }
-            if local > 0 {
-                per_shard[s].fetch_add(local, Ordering::Relaxed);
-            }
+            let out = out_ptr.as_ref().map(|p| p.0);
+            fused_warp(shards, flat, offsets, &per_shard, out, &op, ctx)
         });
         (
             total,
@@ -186,19 +277,62 @@ impl<L: Layout> ShardedFilter<L> {
         )
     }
 
-    /// Batch insert through one fused launch; returns the accept count.
+    /// Apply a completed launch's per-shard tallies to the occupancy
+    /// ledgers.
+    fn apply_ledger(shards: &[CuckooFilter<L>], per_shard: &[u64], ledger: LedgerOp) {
+        for (s, &n) in per_shard.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            match ledger {
+                LedgerOp::Add => shards[s].add_count(n),
+                LedgerOp::Sub => shards[s].sub_count(n),
+                LedgerOp::None => {}
+            }
+        }
+    }
+
+    /// Shared body of the chunked synchronous batch ops: one scatter +
+    /// fused launch per `chunk` keys, outcomes (if any) positional per
+    /// chunk, ledger applied after each launch.
+    fn batch_chunked<F>(
+        &self,
+        device: &Device,
+        keys: &[u64],
+        mut out: Option<&mut [bool]>,
+        chunk: usize,
+        ledger: LedgerOp,
+        op: F,
+    ) -> u64
+    where
+        F: Fn(&CuckooFilter<L>, u64) -> bool + Sync,
+    {
+        if let Some(o) = &out {
+            assert_eq!(keys.len(), o.len());
+        }
+        let mut total = 0u64;
+        let mut start = 0usize;
+        for ks in keys.chunks(chunk) {
+            let scatter = self.scatter(ks);
+            let os = out
+                .as_mut()
+                .map(|o| &mut o[start..start + ks.len()]);
+            let (ok, per_shard) = self.fused_launch(device, &scatter, os, &op);
+            Self::apply_ledger(&self.shards, &per_shard, ledger);
+            total += ok;
+            start += ks.len();
+        }
+        total
+    }
+
+    /// Batch insert through fused launches; returns the accept count.
     pub fn insert_batch(&self, device: &Device, keys: &[u64]) -> u64 {
         if self.shards.len() == 1 {
             return self.shards[0].insert_batch(device, keys).inserted;
         }
-        let scatter = self.scatter(keys);
-        let (ok, per_shard) = self.fused_launch(device, &scatter, None, |f, k| {
+        self.batch_chunked(device, keys, None, FUSED_CHUNK, LedgerOp::Add, |f, k| {
             f.insert_probed_raw(k, &mut NoProbe).is_ok()
-        });
-        for (s, &n) in per_shard.iter().enumerate() {
-            self.shards[s].add_count(n);
-        }
-        ok
+        })
     }
 
     /// Batch insert with per-key outcomes in **input order**.
@@ -206,23 +340,19 @@ impl<L: Layout> ShardedFilter<L> {
         if self.shards.len() == 1 {
             return self.shards[0].insert_batch_map(device, keys, out);
         }
-        let scatter = self.scatter(keys);
-        let (ok, per_shard) = self.fused_launch(device, &scatter, Some(out), |f, k| {
+        self.batch_chunked(device, keys, Some(out), FUSED_CHUNK, LedgerOp::Add, |f, k| {
             f.insert_probed_raw(k, &mut NoProbe).is_ok()
-        });
-        for (s, &n) in per_shard.iter().enumerate() {
-            self.shards[s].add_count(n);
-        }
-        ok
+        })
     }
 
-    /// Batch membership count through one fused launch.
+    /// Batch membership count through fused launches.
     pub fn contains_batch(&self, device: &Device, keys: &[u64]) -> u64 {
         if self.shards.len() == 1 {
             return self.shards[0].count_contains_batch(device, keys);
         }
-        let scatter = self.scatter(keys);
-        self.fused_launch(device, &scatter, None, |f, k| f.contains(k)).0
+        self.batch_chunked(device, keys, None, FUSED_CHUNK, LedgerOp::None, |f, k| {
+            f.contains(k)
+        })
     }
 
     /// Batch membership with per-key results in **input order** (the
@@ -231,23 +361,19 @@ impl<L: Layout> ShardedFilter<L> {
         if self.shards.len() == 1 {
             return self.shards[0].contains_batch(device, keys, out);
         }
-        let scatter = self.scatter(keys);
-        self.fused_launch(device, &scatter, Some(out), |f, k| f.contains(k)).0
+        self.batch_chunked(device, keys, Some(out), FUSED_CHUNK, LedgerOp::None, |f, k| {
+            f.contains(k)
+        })
     }
 
-    /// Batch delete through one fused launch; returns the removal count.
+    /// Batch delete through fused launches; returns the removal count.
     pub fn remove_batch(&self, device: &Device, keys: &[u64]) -> u64 {
         if self.shards.len() == 1 {
             return self.shards[0].remove_batch(device, keys);
         }
-        let scatter = self.scatter(keys);
-        let (ok, per_shard) = self.fused_launch(device, &scatter, None, |f, k| {
+        self.batch_chunked(device, keys, None, FUSED_CHUNK, LedgerOp::Sub, |f, k| {
             f.remove_probed_raw(k, &mut NoProbe)
-        });
-        for (s, &n) in per_shard.iter().enumerate() {
-            self.shards[s].sub_count(n);
-        }
-        ok
+        })
     }
 
     /// Batch delete with per-key outcomes in **input order**.
@@ -255,14 +381,174 @@ impl<L: Layout> ShardedFilter<L> {
         if self.shards.len() == 1 {
             return self.shards[0].remove_batch_map(device, keys, out);
         }
-        let scatter = self.scatter(keys);
-        let (ok, per_shard) = self.fused_launch(device, &scatter, Some(out), |f, k| {
+        self.batch_chunked(device, keys, Some(out), FUSED_CHUNK, LedgerOp::Sub, |f, k| {
             f.remove_probed_raw(k, &mut NoProbe)
+        })
+    }
+
+    /// Core of the async batch variants: scatter on the calling thread
+    /// (the overlappable stage), submit the fused kernel without a
+    /// barrier, hand back a token co-owning the task state.
+    fn batch_map_async<F>(
+        &self,
+        device: &Device,
+        keys: &[u64],
+        ledger: LedgerOp,
+        op: F,
+    ) -> ShardBatchToken<L>
+    where
+        F: Fn(&CuckooFilter<L>, u64) -> bool + Send + Sync + 'static,
+    {
+        // Async batches are submitted as one launch (no chunk loop — a
+        // token per chunk would reorder completions); the scatter
+        // hard-asserts the u32 bound. Serving batches are orders of
+        // magnitude below it.
+        let n = keys.len();
+        let state = Arc::new(AsyncBatchState {
+            out: OutCell(UnsafeCell::new(vec![false; n])),
+            per_shard: (0..self.shards.len()).map(|_| AtomicU64::new(0)).collect(),
         });
-        for (s, &n) in per_shard.iter().enumerate() {
-            self.shards[s].sub_count(n);
+        let shards = self.shards.clone();
+        let kstate = state.clone();
+        // Derive the out pointer once, before any worker runs — forming
+        // it inside the kernel would create overlapping `&mut Vec`s
+        // across workers. The pointee is pinned by the Arc'd task state
+        // and the vec is never resized during the launch (SendMutPtr
+        // contract: disjoint per-slot writes only).
+        let out_ptr = SendMutPtr(unsafe { (*state.out.0.get()).as_mut_ptr() });
+        let token = if self.shards.len() == 1 {
+            // Single shard: no permutation needed — own a plain key
+            // vector (half the copy traffic of (key, index) pairs) and
+            // write outcomes straight to their input positions, matching
+            // the sync single-shard delegation's efficiency.
+            assert!(n <= FUSED_CHUNK, "batch exceeds the fused launch bound");
+            let keys: Vec<u64> = keys.to_vec();
+            device.launch_async(n, move |ctx| {
+                let shard = &shards[0];
+                let mut local = 0u64;
+                for i in ctx.range.clone() {
+                    let ok = op(shard, keys[i]);
+                    // SAFETY: slot `i` is written by exactly one warp
+                    // item (SendMutPtr contract).
+                    unsafe { *out_ptr.0.add(i) = ok };
+                    local += ok as u64;
+                    ctx.tally(ok);
+                }
+                if local > 0 {
+                    kstate.per_shard[0].fetch_add(local, Ordering::Relaxed);
+                }
+            })
+        } else {
+            let scatter = self.scatter(keys);
+            let (flat, offsets) = (scatter.flat, scatter.offsets);
+            device.launch_async(n, move |ctx| {
+                fused_warp(
+                    &shards,
+                    &flat,
+                    &offsets,
+                    &kstate.per_shard,
+                    Some(out_ptr.0),
+                    &op,
+                    ctx,
+                );
+            })
+        };
+        ShardBatchToken {
+            inner: Some(TokenInner {
+                token,
+                state,
+                shards: self.shards.clone(),
+                ledger,
+            }),
         }
-        ok
+    }
+
+    /// Async batch insert: outcomes in input order at `wait()`; the
+    /// per-shard occupancy ledger is applied when the token resolves.
+    pub fn insert_batch_map_async(&self, device: &Device, keys: &[u64]) -> ShardBatchToken<L> {
+        self.batch_map_async(device, keys, LedgerOp::Add, |f, k| {
+            f.insert_probed_raw(k, &mut NoProbe).is_ok()
+        })
+    }
+
+    /// Async batch membership: outcomes in input order at `wait()`.
+    pub fn contains_batch_map_async(&self, device: &Device, keys: &[u64]) -> ShardBatchToken<L> {
+        self.batch_map_async(device, keys, LedgerOp::None, |f, k| f.contains(k))
+    }
+
+    /// Async batch delete: outcomes in input order at `wait()`; the
+    /// per-shard occupancy ledger is applied when the token resolves.
+    pub fn remove_batch_map_async(&self, device: &Device, keys: &[u64]) -> ShardBatchToken<L> {
+        self.batch_map_async(device, keys, LedgerOp::Sub, |f, k| {
+            f.remove_probed_raw(k, &mut NoProbe)
+        })
+    }
+}
+
+/// Completion handle for an async fused batch (`*_batch_map_async`).
+///
+/// `wait()` blocks until the kernel retires, applies the per-shard
+/// occupancy ledger, and returns `(successes, outcomes)` with outcomes
+/// positional in the submitted key order. Dropping the token without
+/// waiting still blocks until the kernel retires and applies the ledger
+/// (outcomes are discarded) — occupancy counters never drift. A kernel
+/// panic re-raises at `wait()`; on drop it is swallowed (and the ledger
+/// skipped, matching the sync path's behaviour under a panic).
+pub struct ShardBatchToken<L: Layout> {
+    inner: Option<TokenInner<L>>,
+}
+
+struct TokenInner<L: Layout> {
+    token: LaunchToken,
+    state: Arc<AsyncBatchState>,
+    shards: Arc<Vec<CuckooFilter<L>>>,
+    ledger: LedgerOp,
+}
+
+impl<L: Layout> TokenInner<L> {
+    fn finish(self, want_out: bool) -> (u64, Vec<bool>) {
+        let total = self.token.wait();
+        let per_shard: Vec<u64> = self
+            .state
+            .per_shard
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed))
+            .collect();
+        let shards: &[CuckooFilter<L>] = &self.shards;
+        ShardedFilter::apply_ledger(shards, &per_shard, self.ledger);
+        let out = if want_out {
+            // SAFETY: the launch retired (wait() above), so no worker
+            // touches the cell anymore; this take is exclusive.
+            unsafe { std::mem::take(&mut *self.state.out.0.get()) }
+        } else {
+            Vec::new()
+        };
+        (total, out)
+    }
+}
+
+impl<L: Layout> ShardBatchToken<L> {
+    /// Block until the batch retires; returns the success count and the
+    /// per-key outcomes in input order.
+    pub fn wait(mut self) -> (u64, Vec<bool>) {
+        let inner = self.inner.take().expect("token already resolved");
+        inner.finish(true)
+    }
+
+    /// Non-blocking completion probe.
+    pub fn is_done(&self) -> bool {
+        self.inner.as_ref().map_or(true, |i| i.token.is_done())
+    }
+}
+
+impl<L: Layout> Drop for ShardBatchToken<L> {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.take() {
+            // Unwaited tokens still owe their shards the ledger update.
+            // Drop must not panic, so a kernel fault is swallowed here;
+            // callers that care observe it via wait().
+            let _ = catch_unwind(AssertUnwindSafe(|| inner.finish(false)));
+        }
     }
 }
 
@@ -381,5 +667,86 @@ mod tests {
         assert!(s.contains(42));
         assert!(s.remove(42));
         assert!(!s.contains(42));
+    }
+
+    #[test]
+    fn chunked_batches_agree_with_oracle_across_boundaries() {
+        // Regression for the u32 permutation-index overflow: the public
+        // entry points split oversized batches into per-chunk fused
+        // launches. Exercise the chunk loop with a small prime chunk so
+        // many ragged boundaries occur, and check positional outcomes
+        // and the occupancy ledger stay exact.
+        let device = Device::with_workers(4);
+        let s = ShardedFilter::<Fp16>::with_capacity(30_000, 4).unwrap();
+        let ks = keys(10_000, 21);
+
+        let mut ins = vec![false; ks.len()];
+        let ok = s.batch_chunked(&device, &ks, Some(ins.as_mut_slice()), 997, LedgerOp::Add, |f, k| {
+            f.insert_probed_raw(k, &mut NoProbe).is_ok()
+        });
+        assert_eq!(ok, 10_000);
+        assert!(ins.iter().all(|&b| b));
+        assert_eq!(s.len(), 10_000);
+
+        let mut got = vec![false; ks.len()];
+        let hits = s.batch_chunked(&device, &ks, Some(got.as_mut_slice()), 1_001, LedgerOp::None, |f, k| {
+            f.contains(k)
+        });
+        assert_eq!(hits, 10_000);
+        for (i, &k) in ks.iter().enumerate() {
+            assert_eq!(got[i], s.contains(k), "positional mismatch at {i}");
+        }
+
+        let removed = s.batch_chunked(&device, &ks, None, 503, LedgerOp::Sub, |f, k| {
+            f.remove_probed_raw(k, &mut NoProbe)
+        });
+        assert_eq!(removed, 10_000);
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn async_batch_roundtrip_and_ledger() {
+        let device = Device::with_workers(4);
+        let s = ShardedFilter::<Fp16>::with_capacity(40_000, 4).unwrap();
+        let ks = keys(20_000, 31);
+
+        let tok = s.insert_batch_map_async(&device, &ks);
+        let (ok, ins) = tok.wait();
+        assert_eq!(ok, 20_000);
+        assert_eq!(ins.len(), 20_000);
+        assert!(ins.iter().all(|&b| b));
+        // Ledger applied at wait().
+        assert_eq!(s.len(), 20_000);
+
+        // Two queries in flight at once, waited out of order.
+        let absent = keys(5_000, 4321);
+        let t_pos = s.contains_batch_map_async(&device, &ks);
+        let t_neg = s.contains_batch_map_async(&device, &absent);
+        let (neg_hits, neg) = t_neg.wait();
+        let (pos_hits, pos) = t_pos.wait();
+        assert_eq!(pos_hits, 20_000);
+        assert!(pos.iter().all(|&b| b));
+        assert!(neg_hits < 20, "absent keys should mostly miss");
+        for (i, &k) in absent.iter().enumerate() {
+            assert_eq!(neg[i], s.contains(k), "positional mismatch at {i}");
+        }
+
+        // Dropping a remove token without waiting must still apply the
+        // ledger once the kernel retires.
+        let tok = s.remove_batch_map_async(&device, &ks);
+        drop(tok);
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn async_empty_batch() {
+        let device = Device::with_workers(2);
+        let s = ShardedFilter::<Fp16>::with_capacity(1_000, 2).unwrap();
+        let tok = s.insert_batch_map_async(&device, &[]);
+        assert!(tok.is_done());
+        let (ok, out) = tok.wait();
+        assert_eq!(ok, 0);
+        assert!(out.is_empty());
+        assert_eq!(s.len(), 0);
     }
 }

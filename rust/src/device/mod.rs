@@ -9,40 +9,63 @@
 //! hierarchical occupancy counting (warp shuffle → shared memory →
 //! one global atomic, §4.3 last paragraph).
 //!
-//! ## Execution model: launch = enqueue + barrier, not spawn
+//! ## Execution model: launch = enqueue, not spawn
 //!
 //! Worker threads are spawned **exactly once**, when the [`Device`] is
 //! constructed — the analogue of initialising the GPU and its SMs at
-//! context creation. A [`Device::launch`] does *not* create threads; it
+//! context creation. Submitting work does *not* create threads; it
+//! pushes a type-erased kernel task onto a FIFO job queue (the single
+//! CUDA stream), wakes the parked workers, and hands back a per-job
+//! completion handle. Workers pull blocks from an atomic block cursor
+//! (the hardware block scheduler) and retire jobs strictly in
+//! submission order.
 //!
-//! 1. publishes a type-erased kernel task and bumps the pool **epoch**
-//!    (the stream-ordered launch enqueue),
-//! 2. wakes the parked workers, which pull blocks from an atomic block
-//!    cursor (the hardware block scheduler), and
-//! 3. blocks on an **epoch barrier** until every worker has retired the
-//!    task (kernel + stream synchronise).
+//! Two submission surfaces share that queue:
 //!
-//! Per-launch cost is therefore a condvar wakeup (~µs), not a round of
-//! OS thread spawns (~tens of µs × workers) — the difference the paper
-//! attributes to cheap stream-ordered launches vs. device reinit, and
-//! the reason small serving batches stay cheap. Launches whose grid fits
-//! a single block (or a single-worker pool) bypass the pool entirely and
-//! run inline on the caller thread, so tiny batches cost no wakeup at
-//! all; the `launch_overhead` section of `benches/micro_hot_paths.rs`
-//! measures both regimes.
+//! * [`Device::launch`] — the **synchronous** barrier launch: submit,
+//!   then park on the job's completion (kernel + stream synchronise).
+//!   Per-launch cost is a condvar wakeup (~µs), not a round of OS
+//!   thread spawns (~tens of µs × workers). Launches whose grid fits a
+//!   single block (or a single-worker pool) bypass the queue and run
+//!   inline on the caller thread — but only while the pool is **idle**;
+//!   with jobs in flight even a tiny launch queues behind them, so FIFO
+//!   stream order holds for any single submitter. (Launches racing from
+//!   different threads have no relative order, as with any one stream
+//!   fed by many threads.)
+//! * [`Device::launch_async`] — the **stream-ordered** launch: submit
+//!   and return a [`LaunchToken`] immediately, without any barrier.
+//!   Multiple async jobs may be in flight at once; they run FIFO and
+//!   each token completes independently (condvar per job, no shared
+//!   barrier). This is what lets the serving batcher overlap the
+//!   scatter/permute of batch *k+1* on its own thread with the kernel
+//!   of batch *k* on the pool — the cheap overlappable launches the
+//!   paper's throughput model assumes.
 //!
-//! Pool jobs are serialised by an internal launch gate (one kernel in
-//! flight per device, like a single CUDA stream); concurrent `launch`
-//! calls from many threads are safe and simply queue. Kernels must not
-//! launch on their own device recursively — that would self-deadlock,
-//! exactly like a device-side sync inside a CUDA kernel.
+//! ## Token lifecycle
 //!
-//! Borrow safety: a launch publishes a reference to the caller's stack
-//! closure to 'static worker threads. The epoch barrier guarantees every
-//! worker is done with the reference before `launch` returns, which is
-//! the same contract scoped threads enforce structurally; the lifetime
-//! erasure is confined to [`Device::run_job`].
+//! [`LaunchToken::wait`] blocks until the job retires and returns the
+//! hierarchical success count. Tokens may be waited **out of order**
+//! (completion is per-job); a token that is dropped without `wait` is
+//! fine — the job still runs to completion and its owned task state is
+//! freed when it retires. A panic inside an async kernel is captured
+//! and re-raised at `wait()` (never at submit), and the pool stays
+//! serviceable afterwards. On `Device` drop, queued jobs are drained
+//! before the workers exit, so every outstanding token completes.
+//!
+//! Kernels must not block on work submitted to their own device
+//! (`launch` or `LaunchToken::wait` from inside a kernel) — that
+//! self-deadlocks, exactly like a device-side sync inside a CUDA
+//! kernel. Fire-and-forget `launch_async` from inside a kernel is
+//! harmless but unordered with respect to the enclosing job.
+//!
+//! Borrow safety: a synchronous launch publishes a reference to the
+//! caller's stack closure to 'static worker threads. The submitter
+//! parks on that job's completion before returning, which retires the
+//! borrow — the same contract scoped threads enforce structurally; the
+//! lifetime erasure is confined to [`Device::run_job`]. Async launches
+//! own their task state (`Arc`), so no lifetime erasure is involved.
 
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -95,23 +118,101 @@ impl WarpCtx {
     }
 }
 
-/// A type-erased pool task: invoked once per worker with the worker
-/// index. Published by reference for the duration of one job; the epoch
-/// barrier retires the borrow before the launch returns.
+/// A borrowed, type-erased pool task: invoked once per worker with the
+/// worker index. Published by reference for the duration of one job;
+/// the submitting thread parks on the job's completion, which retires
+/// the borrow before its frame returns.
 #[derive(Clone, Copy)]
 struct TaskRef(*const (dyn Fn(usize) + Sync));
 // SAFETY: the pointee is `Sync` (shared invocation from many workers is
 // its contract) and outlives the job — workers only dereference between
 // job publication and their completion decrement, both of which happen
-// while the launching thread is parked inside `run_job`.
+// while the launching thread is parked on the job's completion.
 unsafe impl Send for TaskRef {}
 
+/// How a job's kernel closure is owned.
+#[derive(Clone)]
+enum TaskKind {
+    /// Synchronous launch: caller-stack borrow (see [`TaskRef`]).
+    Borrowed(TaskRef),
+    /// Async launch: heap-owned closure that outlives the submitting
+    /// frame — no lifetime erasure, the job owns its captures.
+    Owned(Arc<dyn Fn(usize) + Send + Sync>),
+}
+
+/// Per-job completion state: the token side of an async launch, and the
+/// barrier the synchronous path parks on.
+struct Completion {
+    state: Mutex<CompletionState>,
+    cv: Condvar,
+    /// The job's hierarchical success count ("one global atomic per
+    /// block" commits land here for async jobs).
+    successes: AtomicU64,
+}
+
+#[derive(Default)]
+struct CompletionState {
+    done: bool,
+    panicked: bool,
+}
+
+impl Completion {
+    fn new() -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new(CompletionState::default()),
+            cv: Condvar::new(),
+            successes: AtomicU64::new(0),
+        })
+    }
+
+    /// An already-retired completion (empty or inline-executed jobs).
+    fn completed(successes: u64, panicked: bool) -> Arc<Self> {
+        let c = Self::new();
+        c.successes.store(successes, Ordering::Relaxed);
+        let mut st = c.state.lock().unwrap();
+        st.done = true;
+        st.panicked = panicked;
+        drop(st);
+        c
+    }
+
+    fn finish(&self, panicked: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.done = true;
+        st.panicked = panicked;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Park until the job retires; returns whether a worker panicked.
+    fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while !st.done {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.panicked
+    }
+
+    fn is_done(&self) -> bool {
+        self.state.lock().unwrap().done
+    }
+}
+
+/// One queued unit of device work.
+struct Job {
+    task: TaskKind,
+    completion: Arc<Completion>,
+}
+
 struct PoolState {
-    /// Monotone job counter; a bump is the "launch enqueued" signal.
+    /// Monotone publication counter; a bump tells workers a new job is
+    /// current. Doubles as the jobs-started ledger for [`Device::pool_jobs`].
     epoch: u64,
-    /// The in-flight task, valid while `remaining > 0`.
-    task: Option<TaskRef>,
-    /// Workers that have not yet retired the current task.
+    /// The job the workers are executing, if any.
+    current: Option<Job>,
+    /// Jobs submitted behind `current`, FIFO (the single CUDA stream).
+    queue: VecDeque<Job>,
+    /// Workers that have not yet retired the current job.
     remaining: usize,
     /// A worker's kernel panicked during the current job.
     panicked: bool,
@@ -122,10 +223,12 @@ struct PoolShared {
     state: Mutex<PoolState>,
     /// Workers park here between jobs.
     work_cv: Condvar,
-    /// The launcher parks here for the epoch barrier.
-    done_cv: Condvar,
-    /// One kernel in flight per device (a single CUDA stream).
-    gate: Mutex<()>,
+    /// Pool width, needed by the last-finishing worker to arm the next job.
+    size: usize,
+    /// Jobs submitted but not yet retired. The inline fast paths consult
+    /// this so a small launch never jumps ahead of queued jobs — FIFO
+    /// stream order holds for any single submitter.
+    inflight: AtomicU64,
 }
 
 struct WorkerPool {
@@ -142,14 +245,15 @@ impl WorkerPool {
         let shared = Arc::new(PoolShared {
             state: Mutex::new(PoolState {
                 epoch: 0,
-                task: None,
+                current: None,
+                queue: VecDeque::new(),
                 remaining: 0,
                 panicked: false,
                 shutdown: false,
             }),
             work_cv: Condvar::new(),
-            done_cv: Condvar::new(),
-            gate: Mutex::new(()),
+            size,
+            inflight: AtomicU64::new(0),
         });
         let spawned = AtomicU64::new(0);
         let handles = (0..size)
@@ -178,6 +282,8 @@ impl Drop for WorkerPool {
             st.shutdown = true;
         }
         self.shared.work_cv.notify_all();
+        // Workers drain the queue before exiting, so every outstanding
+        // LaunchToken still completes.
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -190,28 +296,76 @@ fn worker_loop(shared: &PoolShared, worker: usize) {
         let task = {
             let mut st = shared.state.lock().unwrap();
             loop {
-                if st.shutdown {
-                    return;
-                }
                 if st.epoch > seen_epoch {
                     seen_epoch = st.epoch;
-                    break st.task.expect("pool epoch bumped without a task");
+                    let cur = st.current.as_ref().expect("epoch bumped without a job");
+                    break cur.task.clone();
+                }
+                if st.shutdown && st.current.is_none() && st.queue.is_empty() {
+                    return;
                 }
                 st = shared.work_cv.wait(st).unwrap();
             }
         };
-        // SAFETY: see `TaskRef` — the launcher keeps the pointee alive
-        // until every worker has decremented `remaining` below.
-        let kernel: &(dyn Fn(usize) + Sync) = unsafe { &*task.0 };
-        let outcome = catch_unwind(AssertUnwindSafe(|| kernel(worker)));
+        let outcome = match &task {
+            TaskKind::Borrowed(r) => {
+                // SAFETY: see `TaskRef` — the submitter keeps the pointee
+                // alive until every worker has retired the job below.
+                let kernel: &(dyn Fn(usize) + Sync) = unsafe { &*r.0 };
+                catch_unwind(AssertUnwindSafe(|| kernel(worker)))
+            }
+            TaskKind::Owned(f) => catch_unwind(AssertUnwindSafe(|| f(worker))),
+        };
+        // Release this worker's task handle before retiring the job, so a
+        // completed job holds no stray clones of its owned state.
+        drop(task);
         let mut st = shared.state.lock().unwrap();
         if outcome.is_err() {
             st.panicked = true;
         }
         st.remaining -= 1;
         if st.remaining == 0 {
-            shared.done_cv.notify_all();
+            let job = st.current.take().expect("job retired with no current");
+            let panicked = st.panicked;
+            // Release pairs with the inline paths' Acquire: a submitter
+            // that observes the count hit zero also sees this job's
+            // effects.
+            shared.inflight.fetch_sub(1, Ordering::Release);
+            // FIFO hand-over: the last worker out arms the next job.
+            if let Some(next) = st.queue.pop_front() {
+                st.current = Some(next);
+                st.remaining = shared.size;
+                st.panicked = false;
+                st.epoch += 1;
+            }
+            drop(st);
+            // Wake peers for the next job, or (on shutdown) to exit.
+            shared.work_cv.notify_all();
+            job.completion.finish(panicked);
         }
+    }
+}
+
+/// Completion handle for an async launch (see the module docs for the
+/// token lifecycle). Obtained from [`Device::launch_async`].
+pub struct LaunchToken {
+    completion: Arc<Completion>,
+}
+
+impl LaunchToken {
+    /// Block until the job retires; returns the hierarchical success
+    /// count. Panics with "device worker panicked" if the kernel
+    /// panicked — the panic surfaces here, never at submit.
+    pub fn wait(self) -> u64 {
+        if self.completion.wait() {
+            panic!("device worker panicked");
+        }
+        self.completion.successes.load(Ordering::Acquire)
+    }
+
+    /// Non-blocking completion probe.
+    pub fn is_done(&self) -> bool {
+        self.completion.is_done()
     }
 }
 
@@ -255,48 +409,59 @@ impl Device {
         self.pool.spawned.load(Ordering::Relaxed)
     }
 
-    /// Number of pool jobs retired (inline fast-path launches excluded).
+    /// Number of pool jobs started (inline fast-path launches excluded).
     pub fn pool_jobs(&self) -> u64 {
         self.pool.shared.state.lock().unwrap().epoch
     }
 
-    /// Publish `task` to the pool, wake the workers and wait for the
-    /// epoch barrier. One job in flight per device at a time.
-    fn run_job(&self, task: &(dyn Fn(usize) + Sync)) {
+    /// Whether no job is submitted-but-unretired. Gates the inline fast
+    /// paths: running a small launch on the caller thread is only legal
+    /// when nothing is queued ahead of it, otherwise it would overtake
+    /// the FIFO stream. The Acquire load pairs with the retiring
+    /// worker's Release so an idle observation also sees the retired
+    /// jobs' effects.
+    #[inline]
+    fn pool_idle(&self) -> bool {
+        self.pool.shared.inflight.load(Ordering::Acquire) == 0
+    }
+
+    /// Enqueue a job (FIFO). If the pool is idle the job is published to
+    /// the workers immediately; otherwise it waits behind `current`.
+    fn submit(&self, task: TaskKind, completion: Arc<Completion>) {
         let shared = &*self.pool.shared;
-        // Scope the gate so it is released (unpoisoned) before a kernel
-        // panic propagates — the pool must stay serviceable afterwards.
-        let panicked = {
-            let _gate = shared.gate.lock().unwrap();
-            // Erase the caller-stack lifetime; the barrier below retires
-            // the borrow before this frame returns (see module docs).
-            let task: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(task) };
-            {
-                let mut st = shared.state.lock().unwrap();
-                st.task = Some(TaskRef(task as *const _));
-                st.remaining = self.pool.size;
-                st.panicked = false;
-                st.epoch += 1;
-            }
-            shared.work_cv.notify_all();
-            let mut st = shared.state.lock().unwrap();
-            while st.remaining > 0 {
-                st = shared.done_cv.wait(st).unwrap();
-            }
-            st.task = None;
-            let panicked = st.panicked;
+        let job = Job { task, completion };
+        let mut st = shared.state.lock().unwrap();
+        shared.inflight.fetch_add(1, Ordering::Relaxed);
+        if st.current.is_none() {
+            debug_assert!(st.queue.is_empty(), "queued jobs with an idle pool");
+            st.current = Some(job);
+            st.remaining = shared.size;
+            st.panicked = false;
+            st.epoch += 1;
             drop(st);
-            panicked
-        };
-        if panicked {
+            shared.work_cv.notify_all();
+        } else {
+            st.queue.push_back(job);
+        }
+    }
+
+    /// Synchronous pool job: publish `task`, park on its completion.
+    fn run_job(&self, task: &(dyn Fn(usize) + Sync)) {
+        // Erase the caller-stack lifetime; the completion wait below
+        // retires the borrow before this frame returns (see module docs).
+        let task: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(task) };
+        let completion = Completion::new();
+        self.submit(TaskKind::Borrowed(TaskRef(task as *const _)), completion.clone());
+        if completion.wait() {
             panic!("device worker panicked");
         }
     }
 
-    /// Launch a "kernel" over `n` items. `kernel` is invoked once per
-    /// *warp* with a [`WarpCtx`]; it processes `ctx.range` and tallies
-    /// successes. Returns the total success count, committed with one
-    /// atomic addition per block (hierarchical reduction).
+    /// Launch a "kernel" over `n` items and wait for it. `kernel` is
+    /// invoked once per *warp* with a [`WarpCtx`]; it processes
+    /// `ctx.range` and tallies successes. Returns the total success
+    /// count, committed with one atomic addition per block (hierarchical
+    /// reduction).
     pub fn launch<F>(&self, n: usize, kernel: F) -> u64
     where
         F: Fn(&mut WarpCtx) + Sync,
@@ -309,9 +474,11 @@ impl Device {
         let num_blocks = n.div_ceil(bs);
         let global = AtomicU64::new(0);
 
-        if num_blocks == 1 || self.pool.size == 1 {
+        if (num_blocks == 1 || self.pool.size == 1) && self.pool_idle() {
             // Inline fast path: a one-block grid (or one-worker pool) has
-            // no parallelism to exploit — skip the wakeup entirely.
+            // no parallelism to exploit — skip the wakeup entirely. Only
+            // legal on an idle pool: with jobs in flight the launch must
+            // queue behind them (FIFO stream order).
             for block in 0..num_blocks {
                 run_block(&kernel, block, bs, ws, n, &global);
             }
@@ -329,6 +496,58 @@ impl Device {
         };
         self.run_job(&task);
         global.load(Ordering::Acquire)
+    }
+
+    /// Stream-ordered launch: submit a kernel over `n` items and return
+    /// a [`LaunchToken`] without waiting. Jobs run FIFO behind whatever
+    /// is already queued; the token's [`LaunchToken::wait`] yields the
+    /// hierarchical success count. The kernel must own its captures
+    /// (`'static`) — buffer lifetimes may not lean on the caller's
+    /// frame, which returns immediately.
+    ///
+    /// On an idle pool, single-block grids (and one-worker pools)
+    /// execute inline at submit and hand back an already-completed
+    /// token — a kernel panic is still deferred to `wait()`. With jobs
+    /// in flight the launch always queues, preserving FIFO order.
+    pub fn launch_async<F>(&self, n: usize, kernel: F) -> LaunchToken
+    where
+        F: Fn(&mut WarpCtx) + Send + Sync + 'static,
+    {
+        if n == 0 {
+            return LaunchToken {
+                completion: Completion::completed(0, false),
+            };
+        }
+        let bs = self.cfg.block_size.max(1);
+        let ws = self.cfg.warp_size.max(1);
+        let num_blocks = n.div_ceil(bs);
+
+        if (num_blocks == 1 || self.pool.size == 1) && self.pool_idle() {
+            let global = AtomicU64::new(0);
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                for block in 0..num_blocks {
+                    run_block(&kernel, block, bs, ws, n, &global);
+                }
+            }));
+            return LaunchToken {
+                completion: Completion::completed(global.load(Ordering::Acquire), outcome.is_err()),
+            };
+        }
+
+        let completion = Completion::new();
+        let task: Arc<dyn Fn(usize) + Send + Sync> = {
+            let completion = completion.clone();
+            let cursor = AtomicUsize::new(0);
+            Arc::new(move |_worker: usize| loop {
+                let block = cursor.fetch_add(1, Ordering::Relaxed);
+                if block >= num_blocks {
+                    break;
+                }
+                run_block(&kernel, block, bs, ws, n, &completion.successes);
+            })
+        };
+        self.submit(TaskKind::Owned(task), completion.clone());
+        LaunchToken { completion }
     }
 
     /// Convenience: launch over items with a per-item closure returning
@@ -375,7 +594,7 @@ impl Device {
         }
         let workers = self.pool.size;
         let chunk = n.div_ceil(workers).max(1);
-        if workers == 1 {
+        if workers == 1 && self.pool_idle() {
             f(0, 0..n);
             return;
         }
@@ -422,7 +641,7 @@ where
 /// SAFETY contract for users: every write through the pointer must go to
 /// an index no other concurrent writer of the same launch touches, and
 /// the pointee must outlive the launch (guaranteed by the launch
-/// barrier).
+/// barrier, or by `Arc`-owning the pointee in async task state).
 pub(crate) struct SendMutPtr<T>(pub(crate) *mut T);
 unsafe impl<T> Sync for SendMutPtr<T> {}
 unsafe impl<T> Send for SendMutPtr<T> {}
@@ -466,6 +685,14 @@ mod tests {
     }
 
     #[test]
+    fn empty_async_launch_is_immediately_done() {
+        let d = Device::default();
+        let tok = d.launch_async(0, |_| {});
+        assert!(tok.is_done());
+        assert_eq!(tok.wait(), 0);
+    }
+
+    #[test]
     fn sharded_partitions() {
         let d = Device::with_workers(3);
         let n = 1000;
@@ -482,6 +709,14 @@ mod tests {
     fn single_worker_still_works() {
         let d = Device::with_workers(1);
         assert_eq!(d.launch_items(100, |_| true), 100);
+        // Async on a one-worker pool runs inline and completes at submit.
+        let tok = d.launch_async(10_000, |ctx| {
+            for i in ctx.range.clone() {
+                ctx.tally(i % 2 == 0);
+            }
+        });
+        assert!(tok.is_done());
+        assert_eq!(tok.wait(), 5_000);
     }
 
     #[test]
@@ -512,5 +747,59 @@ mod tests {
         // The pool must still be serviceable after a kernel panic.
         assert_eq!(d.launch_items(10_000, |_| true), 10_000);
         assert_eq!(d.threads_spawned(), 2);
+    }
+
+    #[test]
+    fn small_launches_do_not_overtake_queued_jobs() {
+        // Regression: the inline fast path must not run a 1-block launch
+        // ahead of jobs already in the FIFO queue.
+        let d = Device::with_workers(4);
+        let n1 = 1 << 15;
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = counter.clone();
+        let big = d.launch_async(n1, move |ctx| {
+            for _ in ctx.range.clone() {
+                c.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        // 1-block async launch: must queue behind `big`, so every item
+        // observes the fully-incremented counter.
+        let c = counter.clone();
+        let small = d.launch_async(64, move |ctx| {
+            let seen = c.load(Ordering::Relaxed);
+            for _ in ctx.range.clone() {
+                ctx.tally(seen == n1 as u64);
+            }
+        });
+        assert_eq!(small.wait(), 64, "small launch overtook the queue");
+        assert_eq!(big.wait(), 0);
+        // 1-block sync launch behind a queued job: same guarantee.
+        counter.store(0, Ordering::Relaxed);
+        let c = counter.clone();
+        let big = d.launch_async(n1, move |ctx| {
+            for _ in ctx.range.clone() {
+                c.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        let seen = d.launch_items(64, |_| counter.load(Ordering::Relaxed) == n1 as u64);
+        assert_eq!(seen, 64, "sync inline launch overtook the queue");
+        big.wait();
+    }
+
+    #[test]
+    fn async_launch_fifo_with_sync_launches() {
+        let d = Device::with_workers(4);
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        let tok = d.launch_async(8_192, move |ctx| {
+            for _ in ctx.range.clone() {
+                h.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        // A sync launch submitted behind the async job completes only
+        // after it (FIFO), so the async side effects are fully visible.
+        assert_eq!(d.launch_items(4_096, |_| true), 4_096);
+        assert_eq!(hits.load(Ordering::Relaxed), 8_192);
+        assert_eq!(tok.wait(), 0); // kernel tallied nothing
     }
 }

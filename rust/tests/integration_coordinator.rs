@@ -77,7 +77,7 @@ fn batcher_coalesces_and_scatters_correctly() {
         .map(|ks| b.submit(Request::new(OpKind::Insert, ks.clone())))
         .collect();
     for rx in rxs {
-        assert_eq!(rx.recv().unwrap().successes, 500);
+        assert_eq!(rx.recv().unwrap().unwrap().successes, 500);
     }
     // Queries: half the clients ask for present keys, half for absent.
     let present_rx: Vec<_> = sets[..10]
@@ -92,10 +92,10 @@ fn batcher_coalesces_and_scatters_correctly() {
         .map(|ks| b.submit(Request::new(OpKind::Query, ks.clone())))
         .collect();
     for rx in present_rx {
-        assert_eq!(rx.recv().unwrap().successes, 500);
+        assert_eq!(rx.recv().unwrap().unwrap().successes, 500);
     }
     for rx in absent_rx {
-        assert!(rx.recv().unwrap().successes < 5);
+        assert!(rx.recv().unwrap().unwrap().successes < 5);
     }
     // Coalescing happened.
     assert!(e.metrics.batches() < 40, "batches = {}", e.metrics.batches());
@@ -115,6 +115,33 @@ fn sharded_engine_balances_and_agrees() {
 }
 
 #[test]
+fn batcher_close_and_flush_failure_never_hang_clients() {
+    use cuckoo_gpu::coordinator::ServeError;
+    let e = engine(10_000, 2);
+    let b = Batcher::new(e.clone(), BatcherConfig::default());
+    let ks = workload::distinct_insert_keys(1_000, 31);
+
+    // A failed flush reaches that group's clients as an error, and the
+    // flusher keeps serving afterwards.
+    e.debug_fail_next_execute
+        .store(true, Ordering::Relaxed);
+    assert!(matches!(
+        b.call(Request::new(OpKind::Insert, ks.clone())),
+        Err(ServeError::Failed(_))
+    ));
+    let r = b.call(Request::new(OpKind::Insert, ks.clone())).unwrap();
+    assert_eq!(r.successes, 1_000);
+
+    // After close(), pending work drains but new submissions resolve to
+    // Closed immediately instead of hanging forever.
+    b.close();
+    assert_eq!(
+        b.call(Request::new(OpKind::Query, ks)),
+        Err(ServeError::Closed)
+    );
+}
+
+#[test]
 fn server_protocol_edge_cases() {
     let e = engine(1_000, 1);
     let server = Arc::new(Server::new(e, BatcherConfig::default()));
@@ -127,7 +154,9 @@ fn server_protocol_edge_cases() {
     let addr = rx.recv().unwrap();
     let mut c = Client::connect(addr).unwrap();
 
-    assert!(c.call("INSERT").unwrap().starts_with("ERR")); // no keys
+    // Zero keys: a valid no-op that crosses the whole serving stack.
+    assert!(c.call("INSERT").unwrap().starts_with("OK 0"));
+    assert!(c.call("QUERY").unwrap().starts_with("OK 0"));
     assert!(c.call("INSERT 1 2 bogus").unwrap().starts_with("ERR")); // bad key
     assert!(c.call("FLY me to the moon").unwrap().starts_with("ERR"));
     assert_eq!(c.call("insert 0xFF 255").unwrap().split(' ').next(), Some("OK")); // hex + case

@@ -1,11 +1,14 @@
 //! Persistent-pool device invariants: spawn-once thread reuse across
 //! many launches, concurrent launches from many threads, disjoint
-//! `launch_map` writes, and the fused multi-shard launch path.
+//! `launch_map` writes, the fused multi-shard launch path, and the
+//! stream-ordered async launch API (token lifecycle, FIFO completion,
+//! panic routing).
 
 use cuckoo_gpu::coordinator::ShardedFilter;
 use cuckoo_gpu::device::{Device, LaunchConfig};
 use cuckoo_gpu::filter::Fp16;
 use cuckoo_gpu::util::prng::mix64;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -131,6 +134,139 @@ fn sharded_roundtrip_through_fused_launches() {
     assert_eq!(hits, neg.iter().filter(|&&b| b).count() as u64);
 
     assert_eq!(sf.remove_batch(&device, &ks), 60_000);
+    assert_eq!(sf.len(), 0);
+}
+
+#[test]
+fn async_tokens_wait_out_of_order() {
+    let d = Device::with_workers(4);
+    // Three jobs in flight at once; waited newest-first. Completion is
+    // per-job, so out-of-order waits must all resolve with their own
+    // success counts.
+    let t1 = d.launch_async(8_192, |ctx| {
+        for _ in ctx.range.clone() {
+            ctx.tally(true);
+        }
+    });
+    let t2 = d.launch_async(4_096, |ctx| {
+        for i in ctx.range.clone() {
+            ctx.tally(i % 2 == 0);
+        }
+    });
+    let t3 = d.launch_async(6_000, |ctx| {
+        for i in ctx.range.clone() {
+            ctx.tally(i % 3 == 0);
+        }
+    });
+    assert_eq!(t3.wait(), 2_000);
+    assert_eq!(t2.wait(), 2_048);
+    assert_eq!(t1.wait(), 8_192);
+    assert_eq!(d.threads_spawned(), 4);
+}
+
+#[test]
+fn async_drop_without_wait_still_executes() {
+    let d = Device::with_workers(4);
+    let hits = Arc::new(AtomicU64::new(0));
+    for _ in 0..8 {
+        let h = hits.clone();
+        let tok = d.launch_async(4_096, move |ctx| {
+            for _ in ctx.range.clone() {
+                h.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        drop(tok); // fire-and-forget: the job must still run
+    }
+    // A sync launch queued behind the dropped jobs: FIFO means every
+    // prior job has retired by the time it returns.
+    assert_eq!(d.launch_items(4_096, |_| true), 4_096);
+    assert_eq!(hits.load(Ordering::Relaxed), 8 * 4_096);
+    assert_eq!(d.threads_spawned(), 4);
+}
+
+#[test]
+fn concurrent_launch_async_from_many_threads() {
+    let d = Arc::new(Device::with_workers(4));
+    let mut handles = Vec::new();
+    for t in 0..6u64 {
+        let d = d.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut total = 0u64;
+            for round in 0..15u64 {
+                // Two jobs in flight per thread, waited out of order.
+                let a = d.launch_async(2_048, move |ctx| {
+                    for i in ctx.range.clone() {
+                        ctx.tally((i as u64 + t + round) % 2 == 0);
+                    }
+                });
+                let b = d.launch_async(1_024, |ctx| {
+                    for _ in ctx.range.clone() {
+                        ctx.tally(true);
+                    }
+                });
+                total += b.wait();
+                total += a.wait();
+            }
+            total
+        }));
+    }
+    let mut grand = 0u64;
+    for h in handles {
+        grand += h.join().unwrap();
+    }
+    assert_eq!(grand, 6 * 15 * (1_024 + 1_024));
+    assert_eq!(d.threads_spawned(), 4, "async launches must not spawn");
+}
+
+#[test]
+fn async_panic_surfaces_at_wait_not_submit() {
+    let d = Device::with_workers(2);
+    // Submission must hand back a token without panicking…
+    let tok = d.launch_async(8_192, |ctx| {
+        if ctx.range.start == 0 {
+            panic!("async kernel fault");
+        }
+    });
+    // …and the fault re-raises only at wait().
+    let boom = catch_unwind(AssertUnwindSafe(|| tok.wait()));
+    assert!(boom.is_err());
+    // The pool stays serviceable, sync and async alike.
+    assert_eq!(d.launch_items(10_000, |_| true), 10_000);
+    let tok = d.launch_async(8_192, |ctx| {
+        for _ in ctx.range.clone() {
+            ctx.tally(true);
+        }
+    });
+    assert_eq!(tok.wait(), 8_192);
+    assert_eq!(d.threads_spawned(), 2);
+}
+
+#[test]
+fn sharded_async_batches_overlap_and_stay_positional() {
+    // The serving path's async form: two fused query batches in flight
+    // on one device, outcomes positional, ledger exact.
+    let device = Device::with_workers(4);
+    let sf = ShardedFilter::<Fp16>::with_capacity(80_000, 4).unwrap();
+    let ks = keys(40_000, 71);
+    let (ok, ins) = sf.insert_batch_map_async(&device, &ks).wait();
+    assert_eq!(ok, 40_000);
+    assert!(ins.iter().all(|&b| b));
+    assert_eq!(sf.len(), 40_000);
+
+    let absent = keys(10_000, 72_000);
+    let t_pos = sf.contains_batch_map_async(&device, &ks);
+    let t_neg = sf.contains_batch_map_async(&device, &absent);
+    let (neg_hits, neg) = t_neg.wait();
+    let (pos_hits, pos) = t_pos.wait();
+    assert_eq!(pos_hits, 40_000);
+    assert!(pos.iter().all(|&b| b));
+    assert_eq!(neg_hits, neg.iter().filter(|&&b| b).count() as u64);
+    for (i, &k) in absent.iter().enumerate() {
+        assert_eq!(neg[i], sf.contains(k), "positional mismatch at {i}");
+    }
+
+    let (removed, _) = sf.remove_batch_map_async(&device, &ks).wait();
+    assert_eq!(removed, 40_000);
     assert_eq!(sf.len(), 0);
 }
 
