@@ -22,6 +22,9 @@ fn main() {
             capacity: window * 2,
             shards: 4,
             workers: cuckoo_gpu::device::default_workers(),
+            // Two device pools: shards {0,2} and {1,3} run their fused
+            // kernels concurrently (the multi-GPU topology analogue).
+            pools: 2,
             artifacts_dir: None,
         })
         .unwrap(),

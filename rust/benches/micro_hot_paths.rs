@@ -6,7 +6,7 @@
 use cuckoo_gpu::coordinator::{
     Batcher, BatcherConfig, Engine, EngineConfig, OpKind, Request, ShardedFilter,
 };
-use cuckoo_gpu::device::Device;
+use cuckoo_gpu::device::{Device, DeviceTopology, TopologyConfig};
 use cuckoo_gpu::filter::{hash::xxhash64_u64, CuckooConfig, CuckooFilter, Fp16, Layout};
 use cuckoo_gpu::util::Timer;
 use std::collections::VecDeque;
@@ -97,6 +97,55 @@ fn launch_overhead() {
     });
 }
 
+/// Multi-pool scaling at a **fixed total worker budget**: the same
+/// shards and the same batches, with the workers re-partitioned into
+/// 1, 2 or 4 independent pools. With one pool every fused launch
+/// serialises behind one FIFO queue; with N pools the per-pool segments
+/// of in-flight batches overlap. Run at the pre/post commits on real
+/// hardware to record before/after numbers (this container has no Rust
+/// toolchain).
+fn topology_scaling() {
+    println!("-- topology_scaling (fixed total workers) --");
+    let total = cuckoo_gpu::device::default_workers();
+    let shards = 8usize;
+    let groups = 64usize;
+    let batch = 1 << 14;
+    let sets: Vec<Vec<u64>> = (0..groups as u64)
+        .map(|g| {
+            (0..batch as u64)
+                .map(|i| cuckoo_gpu::util::prng::mix64(i ^ (g << 27)))
+                .collect()
+        })
+        .collect();
+    for pools in [1usize, 2, 4] {
+        let topo = DeviceTopology::new(TopologyConfig {
+            pools,
+            total_workers: total,
+            ..TopologyConfig::default()
+        });
+        let sf = ShardedFilter::<Fp16>::with_capacity(groups * batch, shards).unwrap();
+        for ks in &sets {
+            sf.insert_batch_map_async_topo(&topo, ks).wait();
+        }
+        bench(
+            &format!("query {groups} groups, {pools} pool(s) x{total}w"),
+            groups * batch,
+            || {
+                let mut pending = VecDeque::new();
+                for ks in &sets {
+                    pending.push_back(sf.contains_batch_map_async_topo(&topo, ks));
+                    if pending.len() >= 4 {
+                        black_box(pending.pop_front().unwrap().wait().0);
+                    }
+                }
+                while let Some(t) = pending.pop_front() {
+                    black_box(t.wait().0);
+                }
+            },
+        );
+    }
+}
+
 /// Barrier vs pipelined flusher on a multi-group workload: the same G
 /// query groups executed (a) synchronously one at a time (scatter and
 /// kernel serialized — the pre-async flusher), (b) via depth-2
@@ -112,6 +161,7 @@ fn batch_pipeline_overlap() {
             capacity: groups * batch,
             shards: 8,
             workers: cuckoo_gpu::device::default_workers(),
+            pools: 1,
             artifacts_dir: None,
         })
         .unwrap(),
@@ -169,6 +219,7 @@ fn batch_pipeline_overlap() {
 
 fn main() {
     launch_overhead();
+    topology_scaling();
     batch_pipeline_overlap();
     let n = 1 << 22;
     let keys: Vec<u64> = (0..n as u64).map(cuckoo_gpu::util::prng::mix64).collect();

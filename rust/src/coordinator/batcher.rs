@@ -21,6 +21,12 @@
 //! and `begin_*` never waits on a token only this thread could release
 //! (see [`super::epoch`]).
 //!
+//! The flusher is **pool-agnostic**: under a multi-pool engine
+//! (`EngineConfig::pools > 1`) each ticket's kernels fan out across the
+//! device topology, but the `ExecTicket` contract — drain in submission
+//! order, full drain before a phase switch — is unchanged, because a
+//! ticket resolves only when every pool's segment has retired.
+//!
 //! Failure handling: clients receive `Result<Response, ServeError>`.
 //! Submissions after shutdown resolve immediately to
 //! [`ServeError::Closed`] instead of hanging, and a panic during a flush
@@ -298,6 +304,7 @@ mod tests {
                 capacity: 100_000,
                 shards: 1,
                 workers: 2,
+                pools: 1,
                 artifacts_dir: None,
             })
             .unwrap(),
@@ -420,6 +427,41 @@ mod tests {
         let r = b.call(Request::new(OpKind::Query, vec![])).unwrap();
         assert_eq!(r.successes, 0);
         assert!(r.outcomes.is_empty());
+    }
+
+    #[test]
+    fn flusher_is_pool_agnostic_over_multi_pool_engine() {
+        // The same pipelined flusher, unchanged, over a 2-pool 4-shard
+        // engine: per-client scatter/merge and phase discipline must
+        // hold while each group's kernels fan out across pools.
+        let e = Arc::new(
+            Engine::new(EngineConfig {
+                capacity: 100_000,
+                shards: 4,
+                workers: 4,
+                pools: 2,
+                artifacts_dir: None,
+            })
+            .unwrap(),
+        );
+        let b = Batcher::new(e.clone(), BatcherConfig::default());
+        let present = keys(2_000, 90);
+        assert_eq!(
+            b.call(Request::new(OpKind::Insert, present.clone()))
+                .unwrap()
+                .successes,
+            2_000
+        );
+        let rx_pos = b.submit(Request::new(OpKind::Query, present[..500].to_vec()));
+        let rx_neg = b.submit(Request::new(OpKind::Query, keys(500, 91)));
+        let rx_del = b.submit(Request::new(OpKind::Delete, present.clone()));
+        assert_eq!(rx_pos.recv().unwrap().unwrap().successes, 500);
+        assert!(rx_neg.recv().unwrap().unwrap().successes < 5);
+        assert_eq!(rx_del.recv().unwrap().unwrap().successes, 2_000);
+        assert_eq!(e.len(), 0);
+        // Both pools served fused segments for these groups.
+        let stats = e.pool_stats();
+        assert!(stats.iter().all(|s| s.launches > 0), "{stats:?}");
     }
 
     #[test]

@@ -1,11 +1,15 @@
-//! The servable engine: sharded filter + batch device + epoch guard +
-//! metrics (+ optional PJRT runtime on the query path).
+//! The servable engine: sharded filter + device topology + epoch guard
+//! + metrics (+ optional PJRT runtime on the query path).
 //!
-//! Every batched request executes as **one** fused device launch over
-//! the persistent worker pool, with per-key outcomes returned in input
-//! order even when the key space is sharded (`shards > 1`) — the
-//! sharded filter scatters the batch shard-contiguously and threads a
-//! permutation index through the kernel (see [`super::shard`]).
+//! Every batched request executes as fused device launches over the
+//! engine's [`DeviceTopology`] — one kernel per pool owning shards of
+//! the batch (one pool ⇒ exactly one launch, as before) — with per-key
+//! outcomes returned in input order even when the key space is sharded
+//! (`shards > 1`): the sharded filter scatters the batch
+//! shard-contiguously, splits it into per-pool segments and threads a
+//! global permutation index through every kernel (see [`super::shard`]).
+//! The `pools` knob in [`EngineConfig`] sizes the topology; the batcher
+//! and `ExecTicket` contract are pool-agnostic.
 //!
 //! Requests can be executed synchronously ([`Engine::execute`]) or
 //! submitted without a barrier ([`Engine::execute_async`], returning an
@@ -17,10 +21,10 @@
 //! flusher does exactly this; see [`super::batcher`]).
 
 use super::epoch::{EpochGuard, PhaseToken};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, PoolStat};
 use super::request::{OpKind, Request, Response};
-use super::shard::{ShardBatchToken, ShardedFilter};
-use crate::device::Device;
+use super::shard::{ShardedFilter, TopologyToken};
+use crate::device::{Device, DeviceTopology, TopologyConfig};
 use crate::filter::{FilterError, Fp16};
 use crate::runtime::{RuntimeError, RuntimeHandle};
 use crate::util::Timer;
@@ -62,7 +66,12 @@ pub struct EngineConfig {
     /// Total key capacity across shards.
     pub capacity: usize,
     pub shards: usize,
+    /// Worker threads, divided across all device pools.
     pub workers: usize,
+    /// Independent device pools; shards are assigned round-robin, so a
+    /// multi-shard engine with `pools > 1` runs per-pool fused kernels
+    /// that genuinely overlap (see [`DeviceTopology`]).
+    pub pools: usize,
     /// Artifacts directory for the PJRT query path (None = native only).
     pub artifacts_dir: Option<std::path::PathBuf>,
 }
@@ -73,6 +82,7 @@ impl Default for EngineConfig {
             capacity: 1 << 20,
             shards: 1,
             workers: crate::device::default_workers(),
+            pools: 1,
             artifacts_dir: None,
         }
     }
@@ -81,7 +91,7 @@ impl Default for EngineConfig {
 /// The engine serves batched requests over an fp16 sharded filter.
 pub struct Engine {
     filter: ShardedFilter<Fp16>,
-    device: Device,
+    topology: DeviceTopology,
     epoch: EpochGuard,
     pub metrics: Metrics,
     runtime: Option<RuntimeHandle>,
@@ -127,7 +137,11 @@ impl Engine {
         };
         Ok(Self {
             filter,
-            device: Device::with_workers(cfg.workers),
+            topology: DeviceTopology::new(TopologyConfig {
+                pools: cfg.pools,
+                total_workers: cfg.workers,
+                ..TopologyConfig::default()
+            }),
             epoch: EpochGuard::new(),
             metrics: Metrics::new(),
             runtime,
@@ -149,7 +163,7 @@ impl Engine {
         let filter = ShardedFilter::from_single(filter_inner);
         Ok(Self {
             filter,
-            device: Device::with_workers(workers),
+            topology: DeviceTopology::single(Device::with_workers(workers)),
             epoch: EpochGuard::new(),
             metrics: Metrics::new(),
             runtime: Some(rt),
@@ -159,6 +173,33 @@ impl Engine {
 
     pub fn pjrt_active(&self) -> bool {
         self.runtime.is_some()
+    }
+
+    /// Number of independent device pools serving this engine.
+    pub fn pools(&self) -> usize {
+        self.topology.num_pools()
+    }
+
+    /// The engine's device topology (per-pool launch surfaces).
+    pub fn topology(&self) -> &DeviceTopology {
+        &self.topology
+    }
+
+    /// Point-in-time per-pool stats: worker count, lifetime launch count
+    /// and live queue depth — the counters that prove a `pools = N` run
+    /// actually distributes fused launches.
+    pub fn pool_stats(&self) -> Vec<PoolStat> {
+        self.topology
+            .pools()
+            .iter()
+            .enumerate()
+            .map(|(i, d)| PoolStat {
+                pool: i,
+                workers: d.workers(),
+                launches: d.launches(),
+                queue_depth: d.queue_depth(),
+            })
+            .collect()
     }
 
     pub fn len(&self) -> usize {
@@ -200,12 +241,12 @@ impl Engine {
         match req.op {
             OpKind::Insert => {
                 let phase = self.epoch.begin_mutation();
-                let batch = self.filter.insert_batch_map_async(&self.device, &req.keys);
+                let batch = self.filter.insert_batch_map_async_topo(&self.topology, &req.keys);
                 self.pending(req.op, n, batch, phase, timer)
             }
             OpKind::Delete => {
                 let phase = self.epoch.begin_mutation();
-                let batch = self.filter.remove_batch_map_async(&self.device, &req.keys);
+                let batch = self.filter.remove_batch_map_async_topo(&self.topology, &req.keys);
                 self.pending(req.op, n, batch, phase, timer)
             }
             OpKind::Query => {
@@ -226,8 +267,13 @@ impl Engine {
                                 eprintln!(
                                     "[cuckoo-gpu] error: PJRT query failed, native fallback: {e}"
                                 );
-                                self.filter
-                                    .contains_batch_map(&self.device, &req.keys, &mut outcomes)
+                                // PJRT engines are single-shard; the shard's
+                                // owning pool serves the fallback.
+                                self.filter.contains_batch_map(
+                                    self.topology.pool(self.topology.pool_for_shard(0)),
+                                    &req.keys,
+                                    &mut outcomes,
+                                )
                             }
                         }
                     };
@@ -241,7 +287,7 @@ impl Engine {
                         })),
                     };
                 }
-                let batch = self.filter.contains_batch_map_async(&self.device, &req.keys);
+                let batch = self.filter.contains_batch_map_async_topo(&self.topology, &req.keys);
                 self.pending(req.op, n, batch, phase, timer)
             }
         }
@@ -251,7 +297,7 @@ impl Engine {
         &'e self,
         op: OpKind,
         n: usize,
-        batch: ShardBatchToken<Fp16>,
+        batch: TopologyToken<Fp16>,
         phase: PhaseToken<'e>,
         timer: Timer,
     ) -> ExecTicket<'e> {
@@ -283,13 +329,13 @@ pub struct ExecTicket<'e> {
 enum TicketInner<'e> {
     /// Completed at submit (PJRT query path).
     Ready(Response),
-    /// Kernel in flight on the device pool. Field order matters: `batch`
-    /// must drop (and thus resolve) before `_phase` releases the
-    /// epoch-phase token.
+    /// Kernels in flight on the device topology (one per pool segment).
+    /// Field order matters: `batch` must drop (and thus resolve on every
+    /// pool) before `_phase` releases the epoch-phase token.
     Pending {
         op: OpKind,
         n: usize,
-        batch: ShardBatchToken<Fp16>,
+        batch: TopologyToken<Fp16>,
         _phase: PhaseToken<'e>,
         timer: Timer,
         metrics: &'e Metrics,
@@ -355,6 +401,7 @@ mod tests {
             capacity: 10_000,
             shards: 2,
             workers: 4,
+            pools: 1,
             artifacts_dir: None,
         })
         .unwrap();
@@ -382,6 +429,7 @@ mod tests {
             capacity: 1_000,
             shards: 1,
             workers: 2,
+            pools: 1,
             artifacts_dir: None,
         })
         .unwrap();
@@ -406,6 +454,7 @@ mod tests {
             capacity: 40_000,
             shards: 5,
             workers: 4,
+            pools: 1,
             artifacts_dir: None,
         })
         .unwrap();
@@ -429,6 +478,7 @@ mod tests {
             capacity: 1_000,
             shards: 2,
             workers: 2,
+            pools: 1,
             artifacts_dir: None,
         })
         .unwrap();
@@ -442,6 +492,49 @@ mod tests {
     }
 
     #[test]
+    fn multi_pool_engine_distributes_launches_and_stays_positional() {
+        // Acceptance: a 4-pool engine must actually spread fused
+        // launches across all pools (per-pool launch counters) while
+        // keeping positional outcomes and the occupancy ledger exact.
+        let e = Engine::new(EngineConfig {
+            capacity: 100_000,
+            shards: 8,
+            workers: 4,
+            pools: 4,
+            artifacts_dir: None,
+        })
+        .unwrap();
+        assert_eq!(e.pools(), 4);
+        let present = keys(20_000, 11);
+        let r = e.execute(&Request::new(OpKind::Insert, present.clone()));
+        assert_eq!(r.successes, 20_000);
+        assert_eq!(e.len(), 20_000);
+
+        let absent = keys(20_000, 1_111);
+        let mut probe = Vec::with_capacity(40_000);
+        for i in 0..20_000 {
+            probe.push(present[i]);
+            probe.push(absent[i]);
+        }
+        let r = e.execute(&Request::new(OpKind::Query, probe));
+        assert!(r.outcomes.iter().step_by(2).all(|&b| b), "lost a present key");
+        let false_pos = r.outcomes.iter().skip(1).step_by(2).filter(|&&b| b).count();
+        assert!(false_pos < 60, "absent half should mostly miss, got {false_pos}");
+
+        let stats = e.pool_stats();
+        assert_eq!(stats.len(), 4);
+        for s in &stats {
+            assert!(s.launches > 0, "pool {} never launched: {stats:?}", s.pool);
+        }
+        let workers: usize = stats.iter().map(|s| s.workers).sum();
+        assert_eq!(workers, 4, "total workers re-partitioned, not multiplied");
+
+        let r = e.execute(&Request::new(OpKind::Delete, present));
+        assert_eq!(r.successes, 20_000);
+        assert_eq!(e.len(), 0);
+    }
+
+    #[test]
     fn pipelined_same_phase_tickets_overlap() {
         // Two query tickets in flight at once, waited out of order —
         // the engine-level form of the batcher's overlapped flusher.
@@ -449,6 +542,7 @@ mod tests {
             capacity: 40_000,
             shards: 4,
             workers: 4,
+            pools: 1,
             artifacts_dir: None,
         })
         .unwrap();

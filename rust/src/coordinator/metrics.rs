@@ -1,9 +1,23 @@
-//! Serving metrics: per-op counters and latency histograms.
+//! Serving metrics: per-op counters, latency histograms, and per-pool
+//! device stats for multi-pool topologies.
 
 use crate::coordinator::request::OpKind;
 use crate::util::stats::Histogram;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// Point-in-time stats of one device pool: lifetime fused-launch count
+/// and live queue depth (submitted-but-unretired jobs). Built by
+/// `Engine::pool_stats` from the topology's per-device counters; the
+/// launch distribution across pools is the observable proof that a
+/// `pools = N` engine actually fans fused kernels out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolStat {
+    pub pool: usize,
+    pub workers: usize,
+    pub launches: u64,
+    pub queue_depth: u64,
+}
 
 #[derive(Default)]
 struct OpMetrics {
@@ -67,6 +81,19 @@ impl Metrics {
         self.op(op).latency.lock().unwrap().percentile_bound(99.0)
     }
 
+    /// Per-pool section of the STATS reply:
+    /// `pools: 0[w=2 launches=12 depth=0] 1[...]`.
+    pub fn pools_summary(stats: &[PoolStat]) -> String {
+        let mut line = String::from("pools:");
+        for s in stats {
+            line.push_str(&format!(
+                " {}[w={} launches={} depth={}]",
+                s.pool, s.workers, s.launches, s.queue_depth
+            ));
+        }
+        line
+    }
+
     /// One-line human-readable summary (the server's STATS reply).
     pub fn summary(&self) -> String {
         let line = |name: &str, m: &OpMetrics| {
@@ -106,5 +133,16 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("keys=100"));
         assert!(m.latency_p99_bound_ns(OpKind::Insert) >= 5_000);
+    }
+
+    #[test]
+    fn pools_summary_formats_every_pool() {
+        let stats = [
+            PoolStat { pool: 0, workers: 2, launches: 12, queue_depth: 1 },
+            PoolStat { pool: 1, workers: 2, launches: 9, queue_depth: 0 },
+        ];
+        let line = Metrics::pools_summary(&stats);
+        assert_eq!(line, "pools: 0[w=2 launches=12 depth=1] 1[w=2 launches=9 depth=0]");
+        assert_eq!(Metrics::pools_summary(&[]), "pools:");
     }
 }

@@ -13,9 +13,10 @@
 //!   in flight (stream-ordered async launches);
 //! * [`shard`]   — key-space sharding across multiple filters for
 //!   multi-device topologies; batches scatter once into a flat
-//!   shard-contiguous buffer and execute as a single fused launch on the
-//!   persistent device pool, with per-key results permuted back to input
-//!   order;
+//!   shard-contiguous buffer, split into per-pool segments of the
+//!   engine's device topology, and execute as fused launches that
+//!   overlap across pools, with per-key results permuted back to input
+//!   order and the per-pool completions joined by a `TopologyToken`;
 //! * [`engine`]  — ties filter + device + epoch + (optional) PJRT runtime
 //!   into a servable engine;
 //! * [`server`]  — a line-protocol TCP front end;
@@ -32,5 +33,6 @@ pub mod metrics;
 pub use batcher::{Batcher, BatcherConfig};
 pub use engine::{Engine, EngineConfig, EngineError, ExecTicket};
 pub use epoch::EpochGuard;
+pub use metrics::PoolStat;
 pub use request::{OpKind, Request, Response, ServeError};
-pub use shard::{ShardBatchToken, ShardedFilter};
+pub use shard::{ShardBatchToken, ShardedFilter, TopologyToken};

@@ -128,7 +128,11 @@ fn handle_conn(
                 return Ok(());
             }
             "LEN" => format!("OK {}", engine.len()),
-            "STATS" => format!("OK {}", engine.metrics.summary()),
+            "STATS" => format!(
+                "OK {} | {}",
+                engine.metrics.summary(),
+                crate::coordinator::metrics::Metrics::pools_summary(&engine.pool_stats())
+            ),
             op_str => match OpKind::parse(&op_str.to_ascii_lowercase()) {
                 Some(op) => {
                     let keys: Option<Vec<u64>> = parts.map(parse_key).collect();
@@ -219,6 +223,7 @@ mod tests {
                 capacity: 10_000,
                 shards: 1,
                 workers: 2,
+                pools: 1,
                 artifacts_dir: None,
             })
             .unwrap(),
@@ -260,7 +265,9 @@ mod tests {
         let (removed, _) = c.op("DELETE", &[1, 2]).unwrap();
         assert_eq!(removed, 2);
 
-        assert!(c.call("STATS").unwrap().starts_with("OK insert:"));
+        let stats = c.call("STATS").unwrap();
+        assert!(stats.starts_with("OK insert:"));
+        assert!(stats.contains("pools: 0[w="), "per-pool stats missing: {stats}");
         assert!(c.call("BOGUS 1").unwrap().starts_with("ERR"));
         assert_eq!(c.call("QUIT").unwrap(), "BYE");
 

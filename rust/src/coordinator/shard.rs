@@ -35,8 +35,34 @@
 //! with outcomes in input order, and applies the per-shard occupancy
 //! ledger; a token dropped without `wait` still waits for the kernel and
 //! applies the ledger (discarding outcomes), so counters never drift.
+//!
+//! ## Multi-pool topology
+//!
+//! The `*_batch_map_async_topo` variants run the same fused pipeline
+//! over a [`DeviceTopology`] — N independent device pools with a stable
+//! shard → pool assignment. The scatter is split once more into
+//! **per-pool segments** (each pool gets the shard-contiguous slices of
+//! the shards it owns, plus a local → global shard index table), one
+//! kernel is submitted per non-empty segment with `launch_async`, and a
+//! [`TopologyToken`] joins the per-pool launches: its `wait()` drains
+//! every pool (even if one panicked), merges the shared per-shard
+//! tallies into the occupancy ledger exactly once, and returns outcomes
+//! **positional across pools** — every segment kernel scatters through
+//! the same global permutation index into one shared out vector, so the
+//! answer at position `i` is for key `i` no matter which pool ran it.
+//! Because the shard → pool map is stable, one shard's batches always
+//! land on one pool's FIFO queue — mutation order per shard is the
+//! submission order, exactly as with a single pool — while batches whose
+//! shards live on different pools genuinely overlap.
+//!
+//! Token-join semantics mirror [`ShardBatchToken`]: a kernel panic on
+//! any pool re-raises at `wait()` *after* all pools drained (so the
+//! shared task state is quiescent), the ledger is skipped for a
+//! panicked batch, and dropping the token without waiting drains all
+//! pools and swallows the panic — never aborts, even when the drop
+//! happens during another unwind.
 
-use crate::device::{Device, LaunchToken, SendMutPtr, WarpCtx};
+use crate::device::{Device, DeviceTopology, LaunchToken, SendMutPtr, WarpCtx};
 use crate::filter::{CuckooConfig, CuckooFilter, FilterError, Layout, NoProbe};
 use crate::util::prng::mix64;
 use std::cell::UnsafeCell;
@@ -62,6 +88,20 @@ struct ShardScatter {
     flat: Vec<(u64, u32)>,
     /// Per-shard ranges into `flat`: shard `s` owns
     /// `flat[offsets[s]..offsets[s + 1]]`.
+    offsets: Vec<usize>,
+}
+
+/// One pool's slice of a scattered batch: the shard-contiguous items of
+/// the shards this pool owns, with local offsets and the local → global
+/// shard index table the fused kernel routes through.
+struct PoolSegment {
+    /// Global indices of the shards in this segment, ascending.
+    shard_ids: Vec<usize>,
+    /// `(key, original index)` pairs of those shards, shard-contiguous.
+    /// The original indices stay **global**, so every pool scatters its
+    /// outcomes into the one shared out vector at the right positions.
+    flat: Vec<(u64, u32)>,
+    /// Local ranges: segment shard `s` owns `flat[offsets[s]..offsets[s+1]]`.
     offsets: Vec<usize>,
 }
 
@@ -93,12 +133,19 @@ struct AsyncBatchState {
     per_shard: Vec<AtomicU64>,
 }
 
-/// The per-warp body of the fused kernel, shared by the sync and async
-/// paths: walk the shard-contiguous flat buffer, run `op` against each
-/// item's shard, scatter outcomes back through the permutation index,
-/// and flush warp-local tallies once per shard boundary.
+/// The per-warp body of the fused kernel, shared by the sync, async and
+/// multi-pool paths: walk the shard-contiguous flat buffer, run `op`
+/// against each item's shard, scatter outcomes back through the
+/// permutation index, and flush warp-local tallies once per shard
+/// boundary. `shard_ids` maps a segment-local shard index to the global
+/// one (`flat[offsets[s]..offsets[s+1]]` belongs to global shard
+/// `shard_ids[s]`) — the identity for single-pool launches, a pool's
+/// shard subset for topology segments. `per_shard` is always indexed
+/// globally, so segments on different pools tally into disjoint slots of
+/// one shared table.
 fn fused_warp<L, F>(
     shards: &[CuckooFilter<L>],
+    shard_ids: &[usize],
     flat: &[(u64, u32)],
     offsets: &[usize],
     per_shard: &[AtomicU64],
@@ -116,13 +163,13 @@ fn fused_warp<L, F>(
     for j in ctx.range.clone() {
         while j >= offsets[s + 1] {
             if local > 0 {
-                per_shard[s].fetch_add(local, Ordering::Relaxed);
+                per_shard[shard_ids[s]].fetch_add(local, Ordering::Relaxed);
                 local = 0;
             }
             s += 1;
         }
         let (key, orig) = flat[j];
-        let ok = op(&shards[s], key);
+        let ok = op(&shards[shard_ids[s]], key);
         if let Some(p) = out {
             // SAFETY: `orig` indices are a permutation — each slot is
             // written by exactly one warp item (see SendMutPtr contract).
@@ -132,7 +179,7 @@ fn fused_warp<L, F>(
         ctx.tally(ok);
     }
     if local > 0 {
-        per_shard[s].fetch_add(local, Ordering::Relaxed);
+        per_shard[shard_ids[s]].fetch_add(local, Ordering::Relaxed);
     }
 }
 
@@ -262,6 +309,7 @@ impl<L: Layout> ShardedFilter<L> {
         let flat = &scatter.flat;
         let offsets = &scatter.offsets;
         let shards: &[CuckooFilter<L>] = &self.shards;
+        let ids: Vec<usize> = (0..shards.len()).collect();
         let per_shard: Vec<AtomicU64> = (0..shards.len()).map(|_| AtomicU64::new(0)).collect();
         let out_ptr = out.map(|o| {
             assert_eq!(o.len(), flat.len());
@@ -269,7 +317,7 @@ impl<L: Layout> ShardedFilter<L> {
         });
         let total = device.launch(flat.len(), |ctx| {
             let out = out_ptr.as_ref().map(|p| p.0);
-            fused_warp(shards, flat, offsets, &per_shard, out, &op, ctx)
+            fused_warp(shards, &ids, flat, offsets, &per_shard, out, &op, ctx)
         });
         (
             total,
@@ -441,9 +489,11 @@ impl<L: Layout> ShardedFilter<L> {
         } else {
             let scatter = self.scatter(keys);
             let (flat, offsets) = (scatter.flat, scatter.offsets);
+            let ids: Vec<usize> = (0..shards.len()).collect();
             device.launch_async(n, move |ctx| {
                 fused_warp(
                     &shards,
+                    &ids,
                     &flat,
                     &offsets,
                     &kstate.per_shard,
@@ -480,6 +530,140 @@ impl<L: Layout> ShardedFilter<L> {
     /// per-shard occupancy ledger is applied when the token resolves.
     pub fn remove_batch_map_async(&self, device: &Device, keys: &[u64]) -> ShardBatchToken<L> {
         self.batch_map_async(device, keys, LedgerOp::Sub, |f, k| {
+            f.remove_probed_raw(k, &mut NoProbe)
+        })
+    }
+
+    /// Split a scattered batch into per-pool segments: pool `p` receives
+    /// the contiguous slices of every shard it owns, concatenated in
+    /// shard order, plus the local → global shard table. Original
+    /// indices are left global (the shared out vector is positional
+    /// across pools).
+    fn split_by_pool(&self, scatter: &ShardScatter, topo: &DeviceTopology) -> Vec<PoolSegment> {
+        let num_shards = self.shards.len();
+        let mut segments: Vec<PoolSegment> = (0..topo.num_pools())
+            .map(|_| PoolSegment {
+                shard_ids: Vec::new(),
+                flat: Vec::new(),
+                offsets: vec![0],
+            })
+            .collect();
+        for s in 0..num_shards {
+            let seg = &mut segments[topo.pool_for_shard(s)];
+            seg.shard_ids.push(s);
+            seg.flat.extend_from_slice(&scatter.flat[scatter.offsets[s]..scatter.offsets[s + 1]]);
+            seg.offsets.push(seg.flat.len());
+        }
+        segments
+    }
+
+    /// Core of the multi-pool batch variants: one scatter on the calling
+    /// thread, split into per-pool segments, one `launch_async` per
+    /// non-empty segment — kernels on different pools overlap — joined
+    /// by a [`TopologyToken`]. Single-pool topologies (and single-shard
+    /// filters, whose one shard lives on one pool) delegate to the
+    /// single-pool async path, keeping its no-permutation fast path.
+    fn batch_map_topo_async<F>(
+        &self,
+        topo: &DeviceTopology,
+        keys: &[u64],
+        ledger: LedgerOp,
+        op: F,
+    ) -> TopologyToken<L>
+    where
+        F: Fn(&CuckooFilter<L>, u64) -> bool + Send + Sync + 'static,
+    {
+        if topo.num_pools() == 1 || self.shards.len() == 1 {
+            let pool = topo.pool(if self.shards.len() == 1 {
+                topo.pool_for_shard(0)
+            } else {
+                0
+            });
+            return TopologyToken {
+                inner: Some(TopologyInner::Delegated(
+                    self.batch_map_async(pool, keys, ledger, op),
+                )),
+            };
+        }
+        let n = keys.len();
+        let state = Arc::new(AsyncBatchState {
+            out: OutCell(UnsafeCell::new(vec![false; n])),
+            per_shard: (0..self.shards.len()).map(|_| AtomicU64::new(0)).collect(),
+        });
+        let scatter = self.scatter(keys);
+        let segments = self.split_by_pool(&scatter, topo);
+        let op = Arc::new(op);
+        let mut tokens = Vec::with_capacity(segments.len());
+        // Derive the shared out pointer ONCE, before any segment's
+        // kernel can run — re-forming it per segment would create a
+        // fresh `&mut Vec` while earlier pools may already be writing
+        // through the previous derivation (the same rule the
+        // single-pool path documents). Writes stay disjoint across
+        // pools because `orig` indices are a global permutation, and
+        // the pointee is pinned by the Arc'd task state each kernel
+        // co-owns (SendMutPtr contract).
+        let out_raw = unsafe { (*state.out.0.get()).as_mut_ptr() };
+        for (p, seg) in segments.into_iter().enumerate() {
+            if seg.flat.is_empty() {
+                continue;
+            }
+            let shards = self.shards.clone();
+            let kstate = state.clone();
+            let op = op.clone();
+            let out_ptr = SendMutPtr(out_raw);
+            tokens.push(topo.pool(p).launch_async(seg.flat.len(), move |ctx| {
+                fused_warp(
+                    &shards,
+                    &seg.shard_ids,
+                    &seg.flat,
+                    &seg.offsets,
+                    &kstate.per_shard,
+                    Some(out_ptr.0),
+                    &*op,
+                    ctx,
+                );
+            }));
+        }
+        TopologyToken {
+            inner: Some(TopologyInner::Pools(TopoInner {
+                tokens,
+                state,
+                shards: self.shards.clone(),
+                ledger,
+            })),
+        }
+    }
+
+    /// Multi-pool async batch insert: per-pool fused kernels overlap
+    /// across the topology, outcomes are positional at `wait()`, and the
+    /// occupancy ledger is applied exactly once when the token resolves.
+    pub fn insert_batch_map_async_topo(
+        &self,
+        topo: &DeviceTopology,
+        keys: &[u64],
+    ) -> TopologyToken<L> {
+        self.batch_map_topo_async(topo, keys, LedgerOp::Add, |f, k| {
+            f.insert_probed_raw(k, &mut NoProbe).is_ok()
+        })
+    }
+
+    /// Multi-pool async batch membership: outcomes positional at `wait()`.
+    pub fn contains_batch_map_async_topo(
+        &self,
+        topo: &DeviceTopology,
+        keys: &[u64],
+    ) -> TopologyToken<L> {
+        self.batch_map_topo_async(topo, keys, LedgerOp::None, |f, k| f.contains(k))
+    }
+
+    /// Multi-pool async batch delete: outcomes positional at `wait()`;
+    /// ledger applied when the token resolves.
+    pub fn remove_batch_map_async_topo(
+        &self,
+        topo: &DeviceTopology,
+        keys: &[u64],
+    ) -> TopologyToken<L> {
+        self.batch_map_topo_async(topo, keys, LedgerOp::Sub, |f, k| {
             f.remove_probed_raw(k, &mut NoProbe)
         })
     }
@@ -548,6 +732,110 @@ impl<L: Layout> Drop for ShardBatchToken<L> {
             // Drop must not panic, so a kernel fault is swallowed here;
             // callers that care observe it via wait().
             let _ = catch_unwind(AssertUnwindSafe(|| inner.finish(false)));
+        }
+    }
+}
+
+/// Completion handle for a multi-pool async fused batch
+/// (`*_batch_map_async_topo`): the join of one [`LaunchToken`] per pool
+/// segment over shared task state.
+///
+/// `wait()` drains **every** pool's kernel (panicked ones included — the
+/// shared out vector and tally table must be quiescent before they are
+/// touched), then applies the per-shard occupancy ledger once and
+/// returns `(successes, outcomes)` with outcomes positional in the
+/// submitted key order across all pools. A kernel panic on any pool
+/// re-raises here after the drain; the ledger is skipped for the whole
+/// batch, matching [`ShardBatchToken`] under a panic. Dropping the token
+/// unwaited drains all pools, applies the ledger (or swallows the panic)
+/// and never panics itself — safe even while another panic is unwinding,
+/// so a faulted pool cannot escalate into a process abort.
+pub struct TopologyToken<L: Layout> {
+    inner: Option<TopologyInner<L>>,
+}
+
+enum TopologyInner<L: Layout> {
+    /// Single pool (or single shard): the plain async path, unchanged.
+    Delegated(ShardBatchToken<L>),
+    /// One launch per non-empty pool segment, joined at wait.
+    Pools(TopoInner<L>),
+}
+
+struct TopoInner<L: Layout> {
+    tokens: Vec<LaunchToken>,
+    state: Arc<AsyncBatchState>,
+    shards: Arc<Vec<CuckooFilter<L>>>,
+    ledger: LedgerOp,
+}
+
+impl<L: Layout> TopoInner<L> {
+    fn finish(self, want_out: bool) -> (u64, Vec<bool>) {
+        // Drain every pool before touching shared state: a pool that
+        // panicked must not leave sibling kernels writing into the out
+        // vector we are about to hand back.
+        let mut total = 0u64;
+        let mut panicked = false;
+        for tok in self.tokens {
+            match catch_unwind(AssertUnwindSafe(|| tok.wait())) {
+                Ok(n) => total += n,
+                Err(_) => panicked = true,
+            }
+        }
+        if panicked {
+            // Re-raise only after the full drain; the ledger is skipped,
+            // as on the single-pool path.
+            panic!("device worker panicked");
+        }
+        let per_shard: Vec<u64> = self
+            .state
+            .per_shard
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed))
+            .collect();
+        let shards: &[CuckooFilter<L>] = &self.shards;
+        ShardedFilter::apply_ledger(shards, &per_shard, self.ledger);
+        let out = if want_out {
+            // SAFETY: every launch retired above, so no worker touches
+            // the cell anymore; this take is exclusive.
+            unsafe { std::mem::take(&mut *self.state.out.0.get()) }
+        } else {
+            Vec::new()
+        };
+        (total, out)
+    }
+}
+
+impl<L: Layout> TopologyToken<L> {
+    /// Block until every pool's kernel retires; returns the merged
+    /// success count and the per-key outcomes in input order.
+    pub fn wait(mut self) -> (u64, Vec<bool>) {
+        match self.inner.take().expect("token already resolved") {
+            TopologyInner::Delegated(tok) => tok.wait(),
+            TopologyInner::Pools(inner) => inner.finish(true),
+        }
+    }
+
+    /// Non-blocking completion probe: done once every pool's launch is.
+    pub fn is_done(&self) -> bool {
+        match self.inner.as_ref() {
+            None => true,
+            Some(TopologyInner::Delegated(tok)) => tok.is_done(),
+            Some(TopologyInner::Pools(inner)) => inner.tokens.iter().all(LaunchToken::is_done),
+        }
+    }
+}
+
+impl<L: Layout> Drop for TopologyToken<L> {
+    fn drop(&mut self) {
+        match self.inner.take() {
+            // The delegated token's own Drop drains and swallows panics.
+            Some(TopologyInner::Delegated(_)) | None => {}
+            Some(TopologyInner::Pools(inner)) => {
+                // Same contract as ShardBatchToken: drain + ledger on
+                // drop, a pool fault is swallowed (never a double-panic
+                // abort when dropped during an unwind).
+                let _ = catch_unwind(AssertUnwindSafe(|| inner.finish(false)));
+            }
         }
     }
 }
@@ -748,5 +1036,153 @@ mod tests {
         assert_eq!(ok, 0);
         assert!(out.is_empty());
         assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn topo_roundtrip_positional_across_pools() {
+        use crate::device::DeviceTopology;
+        let topo = DeviceTopology::with_pools(2, 4);
+        let s = ShardedFilter::<Fp16>::with_capacity(60_000, 4).unwrap();
+        let present = keys(15_000, 91);
+        let (ok, ins) = s.insert_batch_map_async_topo(&topo, &present).wait();
+        assert_eq!(ok, 15_000);
+        assert!(ins.iter().all(|&b| b));
+        assert_eq!(s.len(), 15_000, "ledger applied once across pools");
+
+        // Interleaved present/absent probe: positional answers must
+        // survive the per-pool split and merge.
+        let absent = keys(15_000, 9_100);
+        let mut probe = Vec::with_capacity(30_000);
+        for i in 0..15_000 {
+            probe.push(present[i]);
+            probe.push(absent[i]);
+        }
+        let (hits, got) = s.contains_batch_map_async_topo(&topo, &probe).wait();
+        assert_eq!(hits, got.iter().filter(|&&b| b).count() as u64);
+        for (i, &k) in probe.iter().enumerate() {
+            assert_eq!(got[i], s.contains(k), "positional mismatch at {i}");
+        }
+        assert!(got.iter().step_by(2).all(|&b| b), "lost a present key");
+
+        // Both pools actually ran fused segments.
+        assert!(topo.pool(0).launches() >= 2);
+        assert!(topo.pool(1).launches() >= 2);
+
+        let (removed, del) = s.remove_batch_map_async_topo(&topo, &present).wait();
+        assert_eq!(removed, 15_000);
+        assert!(del.iter().all(|&b| b));
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn topo_tokens_waited_out_of_order_across_pools() {
+        use crate::device::DeviceTopology;
+        let topo = DeviceTopology::with_pools(4, 4);
+        let s = ShardedFilter::<Fp16>::with_capacity(80_000, 8).unwrap();
+        let a = keys(20_000, 93);
+        let b = keys(20_000, 94);
+        let ta = s.insert_batch_map_async_topo(&topo, &a);
+        let tb = s.insert_batch_map_async_topo(&topo, &b);
+        // Out-of-order waits; FIFO per pool keeps each shard's batches in
+        // submission order regardless.
+        let (ok_b, _) = tb.wait();
+        let (ok_a, _) = ta.wait();
+        assert_eq!(ok_a + ok_b, 40_000);
+        assert_eq!(s.len(), 40_000);
+        // Dropping a remove token without waiting still applies the
+        // ledger on every pool.
+        drop(s.remove_batch_map_async_topo(&topo, &a));
+        drop(s.remove_batch_map_async_topo(&topo, &b));
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn topo_empty_batch_and_single_shard_delegation() {
+        use crate::device::DeviceTopology;
+        let topo = DeviceTopology::with_pools(4, 4);
+        let s = ShardedFilter::<Fp16>::with_capacity(2_000, 2).unwrap();
+        let tok = s.insert_batch_map_async_topo(&topo, &[]);
+        assert!(tok.is_done());
+        let (ok, out) = tok.wait();
+        assert_eq!(ok, 0);
+        assert!(out.is_empty());
+
+        // A single-shard filter delegates to its owning pool.
+        let s1 = ShardedFilter::<Fp16>::with_capacity(2_000, 1).unwrap();
+        let ks = keys(1_000, 95);
+        let (ok, ins) = s1.insert_batch_map_async_topo(&topo, &ks).wait();
+        assert_eq!(ok, 1_000);
+        assert!(ins.iter().all(|&b| b));
+        assert_eq!(s1.len(), 1_000);
+    }
+
+    #[test]
+    fn topo_explicit_pinning_is_honoured() {
+        use crate::device::{DeviceTopology, Pinning, TopologyConfig};
+        // Pin every shard to pool 1; pool 0 must stay untouched.
+        let topo = DeviceTopology::new(TopologyConfig {
+            pools: 2,
+            total_workers: 4,
+            pinning: Pinning::Explicit(vec![1]),
+            ..TopologyConfig::default()
+        });
+        let s = ShardedFilter::<Fp16>::with_capacity(20_000, 4).unwrap();
+        let ks = keys(8_000, 96);
+        let (ok, _) = s.insert_batch_map_async_topo(&topo, &ks).wait();
+        assert_eq!(ok, 8_000);
+        assert_eq!(s.len(), 8_000);
+        assert_eq!(topo.pool(0).launches(), 0, "pool 0 should be idle");
+        assert!(topo.pool(1).launches() >= 1);
+    }
+
+    #[test]
+    fn topology_token_panicked_pool_never_aborts() {
+        // Satellite regression (PR 2 panic-at-wait battery, two pools):
+        // a kernel fault on one pool must re-raise at wait() after both
+        // pools drained, and a token dropped without wait — including
+        // during another unwind — must never abort the process.
+        use crate::device::DeviceTopology;
+        use std::collections::HashSet;
+        let topo = DeviceTopology::with_pools(2, 4);
+        let s = ShardedFilter::<Fp16>::with_capacity(60_000, 4).unwrap();
+        let ks = keys(20_000, 97);
+        // Keys whose shard lives on pool 1 (round-robin: odd shards).
+        let poisoned: HashSet<u64> = ks
+            .iter()
+            .copied()
+            .filter(|&k| s.route(k) % 2 == 1)
+            .collect();
+        assert!(!poisoned.is_empty());
+        let poison_op = |set: HashSet<u64>| {
+            move |_f: &CuckooFilter<Fp16>, k: u64| {
+                if set.contains(&k) {
+                    panic!("injected pool fault");
+                }
+                true
+            }
+        };
+
+        // 1) wait() re-raises the pool's fault after draining all pools.
+        let tok = s.batch_map_topo_async(&topo, &ks, LedgerOp::None, poison_op(poisoned.clone()));
+        let boom = catch_unwind(AssertUnwindSafe(|| tok.wait()));
+        assert!(boom.is_err(), "pool fault must surface at wait()");
+
+        // 2) drop-without-wait swallows the fault (no panic, no abort).
+        let tok = s.batch_map_topo_async(&topo, &ks, LedgerOp::None, poison_op(poisoned.clone()));
+        drop(tok);
+
+        // 3) drop during an unwind must not double-panic into an abort.
+        let boom = catch_unwind(AssertUnwindSafe(|| {
+            let _tok =
+                s.batch_map_topo_async(&topo, &ks, LedgerOp::None, poison_op(poisoned.clone()));
+            panic!("caller unwind");
+        }));
+        assert!(boom.is_err());
+
+        // Both pools stay serviceable and the ledger is exact afterwards.
+        let (ok, ins) = s.insert_batch_map_async_topo(&topo, &ks).wait();
+        assert_eq!(ok, 20_000);
+        assert!(ins.iter().all(|&b| b));
+        assert_eq!(s.len(), 20_000);
     }
 }

@@ -64,6 +64,23 @@
 //! borrow — the same contract scoped threads enforce structurally; the
 //! lifetime erasure is confined to [`Device::run_job`]. Async launches
 //! own their task state (`Arc`), so no lifetime erasure is involved.
+//!
+//! ## One device vs a topology of devices
+//!
+//! A single `Device` is one GPU: one FIFO stream, one pool of SMs —
+//! every launch submitted to it serialises behind the queue. The level
+//! above is [`DeviceTopology`] (see [`topology`]): N independent pools
+//! with a stable shard → pool assignment, so fused batches split into
+//! per-pool segments and run concurrently across pools while each
+//! pool's own stream order is preserved. Observability for that layer
+//! lives here: [`Device::launches`] counts every non-empty launch
+//! (inline fast paths included, unlike [`Device::pool_jobs`]) and
+//! [`Device::queue_depth`] reports the submitted-but-unretired job
+//! count — the per-pool counters `coordinator::metrics` reports.
+
+pub mod topology;
+
+pub use topology::{DeviceTopology, Pinning, TopologyConfig};
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -373,6 +390,9 @@ impl LaunchToken {
 pub struct Device {
     pub cfg: LaunchConfig,
     pool: WorkerPool,
+    /// Lifetime count of non-empty launches through any entry point
+    /// (inline fast paths included, unlike the pool job ledger).
+    launches: AtomicU64,
 }
 
 impl Default for Device {
@@ -387,6 +407,7 @@ impl Device {
         Self {
             cfg,
             pool: WorkerPool::new(size),
+            launches: AtomicU64::new(0),
         }
     }
 
@@ -412,6 +433,20 @@ impl Device {
     /// Number of pool jobs started (inline fast-path launches excluded).
     pub fn pool_jobs(&self) -> u64 {
         self.pool.shared.state.lock().unwrap().epoch
+    }
+
+    /// Lifetime count of non-empty launches through any entry point —
+    /// unlike [`Self::pool_jobs`], inline fast-path launches count too.
+    /// The per-pool launch counter the serving metrics report.
+    pub fn launches(&self) -> u64 {
+        self.launches.load(Ordering::Relaxed)
+    }
+
+    /// Jobs submitted but not yet retired (the live stream depth this
+    /// pool's metrics report). Inline fast-path launches never appear
+    /// here — they only run on an idle pool.
+    pub fn queue_depth(&self) -> u64 {
+        self.pool.shared.inflight.load(Ordering::Relaxed)
     }
 
     /// Whether no job is submitted-but-unretired. Gates the inline fast
@@ -469,6 +504,7 @@ impl Device {
         if n == 0 {
             return 0;
         }
+        self.launches.fetch_add(1, Ordering::Relaxed);
         let bs = self.cfg.block_size.max(1);
         let ws = self.cfg.warp_size.max(1);
         let num_blocks = n.div_ceil(bs);
@@ -518,6 +554,7 @@ impl Device {
                 completion: Completion::completed(0, false),
             };
         }
+        self.launches.fetch_add(1, Ordering::Relaxed);
         let bs = self.cfg.block_size.max(1);
         let ws = self.cfg.warp_size.max(1);
         let num_blocks = n.div_ceil(bs);
@@ -592,6 +629,7 @@ impl Device {
         if n == 0 {
             return;
         }
+        self.launches.fetch_add(1, Ordering::Relaxed);
         let workers = self.pool.size;
         let chunk = n.div_ceil(workers).max(1);
         if workers == 1 && self.pool_idle() {

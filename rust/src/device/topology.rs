@@ -1,0 +1,207 @@
+//! Multi-pool device topology: N independent persistent worker pools
+//! with a stable shard → pool assignment.
+//!
+//! One [`super::Device`] is the CPU analogue of a single GPU: one FIFO
+//! stream, one set of SMs. A [`DeviceTopology`] is the level above — the
+//! multi-GPU (or NUMA-node) box. Each pool owns its own worker threads
+//! and its own job queue, so fused kernels submitted to *different*
+//! pools genuinely overlap instead of serialising behind one stream;
+//! kernels submitted to the *same* pool keep the FIFO stream order that
+//! the async batch pipeline relies on.
+//!
+//! The assignment is per **shard group**: every shard of a
+//! `ShardedFilter` maps to exactly one pool ([`DeviceTopology::pool_for_shard`]),
+//! either round-robin or via an explicit pinning table
+//! ([`Pinning::Explicit`], the hook for real NUMA placement). Because the
+//! mapping is stable, all operations touching one shard land on one
+//! pool, and that pool's FIFO queue serialises the shard's mutation
+//! batches in submission order — the cross-pool analogue of the
+//! single-stream ordering guarantee.
+//!
+//! Worker budget: [`TopologyConfig::total_workers`] is divided across
+//! pools (earlier pools take the remainder), so `pools = N` re-partitions
+//! a fixed set of "SMs" instead of multiplying threads — the
+//! fixed-hardware comparison the `topology_scaling` bench runs.
+
+use super::{default_workers, Device, LaunchConfig};
+
+/// Shard → pool assignment policy.
+#[derive(Clone, Debug)]
+pub enum Pinning {
+    /// Shard `s` runs on pool `s % pools`.
+    RoundRobin,
+    /// Shard `s` runs on pool `map[s % map.len()] % pools` — an explicit
+    /// placement table (the NUMA-pinning hook). An empty table falls
+    /// back to round-robin.
+    Explicit(Vec<usize>),
+}
+
+/// Geometry of a multi-pool topology.
+#[derive(Clone, Debug)]
+pub struct TopologyConfig {
+    /// Number of independent device pools. Clamped to `total_workers`:
+    /// a topology re-partitions a fixed worker budget, it never
+    /// multiplies it.
+    pub pools: usize,
+    /// Worker threads divided across all pools (earlier pools absorb
+    /// the remainder; the per-pool sum is exactly this budget).
+    pub total_workers: usize,
+    /// Per-pool launch geometry (see [`LaunchConfig`]).
+    pub block_size: usize,
+    pub warp_size: usize,
+    pub pinning: Pinning,
+}
+
+impl Default for TopologyConfig {
+    fn default() -> Self {
+        let lc = LaunchConfig::default();
+        Self {
+            pools: 1,
+            total_workers: default_workers(),
+            block_size: lc.block_size,
+            warp_size: lc.warp_size,
+            pinning: Pinning::RoundRobin,
+        }
+    }
+}
+
+/// N independent device pools plus the shard → pool assignment.
+pub struct DeviceTopology {
+    pools: Vec<Device>,
+    pinning: Pinning,
+}
+
+impl DeviceTopology {
+    pub fn new(cfg: TopologyConfig) -> Self {
+        let total = cfg.total_workers.max(1);
+        // Never oversubscribe: more pools than workers would silently
+        // spawn threads beyond the configured budget, so the pool count
+        // clamps to it and the per-pool sum is always exactly `total`.
+        let n = cfg.pools.clamp(1, total);
+        let base = total / n;
+        let rem = total % n;
+        let pools = (0..n)
+            .map(|i| {
+                let workers = base + usize::from(i < rem);
+                Device::new(LaunchConfig {
+                    block_size: cfg.block_size,
+                    warp_size: cfg.warp_size,
+                    workers,
+                })
+            })
+            .collect();
+        Self {
+            pools,
+            pinning: cfg.pinning,
+        }
+    }
+
+    /// `pools` equal pools splitting `total_workers` round-robin.
+    pub fn with_pools(pools: usize, total_workers: usize) -> Self {
+        Self::new(TopologyConfig {
+            pools,
+            total_workers,
+            ..TopologyConfig::default()
+        })
+    }
+
+    /// Wrap one existing device as a single-pool topology.
+    pub fn single(device: Device) -> Self {
+        Self {
+            pools: vec![device],
+            pinning: Pinning::RoundRobin,
+        }
+    }
+
+    pub fn num_pools(&self) -> usize {
+        self.pools.len()
+    }
+
+    pub fn pool(&self, i: usize) -> &Device {
+        &self.pools[i]
+    }
+
+    /// All pools, in pool-index order.
+    pub fn pools(&self) -> &[Device] {
+        &self.pools
+    }
+
+    /// The pool that owns shard `shard`. Stable for the topology's
+    /// lifetime: all batches touching one shard serialise on one pool's
+    /// FIFO queue.
+    pub fn pool_for_shard(&self, shard: usize) -> usize {
+        let n = self.pools.len();
+        match &self.pinning {
+            Pinning::Explicit(map) if !map.is_empty() => map[shard % map.len()] % n,
+            _ => shard % n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workers_split_across_pools_with_remainder() {
+        let t = DeviceTopology::new(TopologyConfig {
+            pools: 3,
+            total_workers: 7,
+            ..TopologyConfig::default()
+        });
+        assert_eq!(t.num_pools(), 3);
+        let w: Vec<usize> = t.pools().iter().map(|d| d.workers()).collect();
+        assert_eq!(w, vec![3, 2, 2]);
+        assert_eq!(w.iter().sum::<usize>(), 7);
+    }
+
+    #[test]
+    fn pool_count_clamps_to_the_worker_budget() {
+        // 4 pools over 2 workers would oversubscribe the budget; the
+        // topology clamps to 2 pools of 1 worker each instead.
+        let t = DeviceTopology::with_pools(4, 2);
+        assert_eq!(t.num_pools(), 2);
+        assert!(t.pools().iter().all(|d| d.workers() == 1));
+        let total: usize = t.pools().iter().map(|d| d.workers()).sum();
+        assert_eq!(total, 2, "budget re-partitioned, never multiplied");
+    }
+
+    #[test]
+    fn round_robin_and_explicit_pinning() {
+        let t = DeviceTopology::with_pools(2, 4);
+        assert_eq!(t.pool_for_shard(0), 0);
+        assert_eq!(t.pool_for_shard(1), 1);
+        assert_eq!(t.pool_for_shard(2), 0);
+
+        let t = DeviceTopology::new(TopologyConfig {
+            pools: 2,
+            total_workers: 4,
+            pinning: Pinning::Explicit(vec![1, 1, 0]),
+            ..TopologyConfig::default()
+        });
+        assert_eq!(t.pool_for_shard(0), 1);
+        assert_eq!(t.pool_for_shard(1), 1);
+        assert_eq!(t.pool_for_shard(2), 0);
+        assert_eq!(t.pool_for_shard(3), 1); // wraps: map[3 % 3]
+    }
+
+    #[test]
+    fn pools_run_independent_launches() {
+        let t = DeviceTopology::with_pools(2, 4);
+        let a = t.pool(0).launch_async(8_192, |ctx| {
+            for _ in ctx.range.clone() {
+                ctx.tally(true);
+            }
+        });
+        let b = t.pool(1).launch_async(4_096, |ctx| {
+            for _ in ctx.range.clone() {
+                ctx.tally(true);
+            }
+        });
+        // Waited out of order across pools.
+        assert_eq!(b.wait(), 4_096);
+        assert_eq!(a.wait(), 8_192);
+        assert!(t.pool(0).launches() >= 1);
+        assert!(t.pool(1).launches() >= 1);
+    }
+}

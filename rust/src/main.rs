@@ -6,6 +6,7 @@
 //!       [--l2-slots N] [--dram-slots N] [--runs N] [--workers N]
 //!       [--out-dir DIR]
 //! repro serve [--addr HOST:PORT] [--capacity N] [--shards N]
+//!       [--pools N] [--workers N]  # N independent device pools
 //!       [--artifacts DIR]          # line-protocol filter server
 //! repro selftest                   # quick end-to-end sanity check
 //! repro info                       # build/config/device info
@@ -69,15 +70,17 @@ fn cmd_serve(args: &Args) {
                 capacity: args.get_usize("capacity", 1 << 20),
                 shards: args.get_usize("shards", 1),
                 workers: args.get_usize("workers", cuckoo_gpu::device::default_workers()),
+                pools: args.get_usize("pools", 1),
                 artifacts_dir: None,
             })
             .expect("engine"),
         )
     };
     println!(
-        "serving on {addr} (pjrt={}, workers={})",
+        "serving on {addr} (pjrt={}, workers={}, pools={})",
         engine.pjrt_active(),
-        args.get_usize("workers", cuckoo_gpu::device::default_workers())
+        args.get_usize("workers", cuckoo_gpu::device::default_workers()),
+        engine.pools()
     );
     let server = cuckoo_gpu::coordinator::server::Server::new(engine, BatcherConfig::default());
     server

@@ -174,6 +174,7 @@ fn epoch_guard_under_engine_load() {
             capacity: 100_000,
             shards: 2,
             workers: 4,
+            pools: 1,
             artifacts_dir: None,
         })
         .unwrap(),

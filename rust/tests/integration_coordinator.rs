@@ -15,6 +15,7 @@ fn engine(capacity: usize, shards: usize) -> Arc<Engine> {
             capacity,
             shards,
             workers: 4,
+            pools: 1,
             artifacts_dir: None,
         })
         .unwrap(),
@@ -112,6 +113,65 @@ fn sharded_engine_balances_and_agrees() {
         let r = e.execute(&Request::new(OpKind::Query, keys.clone()));
         assert_eq!(r.successes, 40_000);
     }
+}
+
+#[test]
+fn tcp_server_over_multi_pool_engine() {
+    // Full stack over a 4-pool 8-shard engine: concurrent TCP clients,
+    // positional bits per client, and STATS reporting per-pool launch
+    // counters that prove the fan-out actually happened.
+    let e = Arc::new(
+        Engine::new(EngineConfig {
+            capacity: 200_000,
+            shards: 8,
+            workers: 4,
+            pools: 4,
+            artifacts_dir: None,
+        })
+        .unwrap(),
+    );
+    let server = Arc::new(Server::new(e.clone(), BatcherConfig::default()));
+    let shutdown = server.shutdown_handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || {
+        srv.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+
+    let mut clients = Vec::new();
+    for c in 0..4u64 {
+        clients.push(std::thread::spawn(move || {
+            let mut cl = Client::connect(addr).unwrap();
+            let keys = workload::distinct_insert_keys(4_000, 900 + c);
+            let (ok, bits) = cl.op("INSERT", &keys).unwrap();
+            assert_eq!(ok, 4_000);
+            assert!(bits.iter().all(|&b| b));
+            let (hits, bits) = cl.op("QUERY", &keys).unwrap();
+            assert_eq!(hits, 4_000);
+            assert!(bits.iter().all(|&b| b));
+            let (removed, _) = cl.op("DELETE", &keys).unwrap();
+            assert_eq!(removed, 4_000);
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    assert_eq!(e.len(), 0);
+
+    let mut cl = Client::connect(addr).unwrap();
+    let stats = cl.call("STATS").unwrap();
+    assert!(stats.contains("pools: 0[w="), "missing pool stats: {stats}");
+    assert!(stats.contains("3[w="), "missing pool 3: {stats}");
+    let pool_stats = e.pool_stats();
+    assert_eq!(pool_stats.len(), 4);
+    assert!(
+        pool_stats.iter().all(|s| s.launches > 0),
+        "a pool never launched: {pool_stats:?}"
+    );
+
+    shutdown.store(true, Ordering::Release);
+    handle.join().unwrap();
 }
 
 #[test]

@@ -280,6 +280,7 @@ fn engine_shared_device_serves_mixed_phases() {
             capacity: 120_000,
             shards: 4,
             workers: 4,
+            pools: 1,
             artifacts_dir: None,
         })
         .unwrap(),

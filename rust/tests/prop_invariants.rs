@@ -1,6 +1,9 @@
 //! Property-based tests (mini-framework in `util::prop`) for the filter
-//! core's invariants across randomly generated configurations.
+//! core's invariants across randomly generated configurations, and for
+//! the multi-pool topology's occupancy-ledger accounting.
 
+use cuckoo_gpu::coordinator::{ShardedFilter, TopologyToken};
+use cuckoo_gpu::device::{DeviceTopology, Pinning, TopologyConfig};
 use cuckoo_gpu::filter::{
     BucketPolicy, CuckooConfig, CuckooFilter, EvictionPolicy, Fp16, Fp8, Layout,
 };
@@ -115,6 +118,85 @@ fn prop_insert_delete_returns_to_empty() {
             f.table().count_occupied::<Fp8>() == 0,
             "table residue after deleting all"
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topology_ledger_balances_under_out_of_order_token_waits() {
+    // Across any pools × shards shape, any pinning, and any interleaving
+    // of async mutation tokens — waited out of order or dropped without
+    // waiting — the occupancy ledger must end at exactly
+    // (successful inserts − successful removes), and must agree with a
+    // physical scan of every shard's table.
+    run_property("topology ledger balance", 24, |g| {
+        let shards = g.usize_in(1, 8);
+        let pools = [1, 2, 4][g.usize_in(0, 2)];
+        let pins = g.usize_in(1, 4);
+        let pinning = if g.bool() {
+            Pinning::RoundRobin
+        } else {
+            Pinning::Explicit((0..pins).map(|_| g.usize_in(0, pools - 1)).collect())
+        };
+        let topo = DeviceTopology::new(TopologyConfig {
+            pools,
+            total_workers: 4,
+            pinning,
+            ..TopologyConfig::default()
+        });
+        let sf = ShardedFilter::<Fp16>::with_capacity(60_000, shards)
+            .map_err(|e| e.to_string())?;
+
+        // Rounds of insert batches plus removes of previously-submitted
+        // keys. Per-pool FIFO order makes every remove land after its
+        // keys' insert, so all batches fully succeed at this load and
+        // the expected ledger total is exact.
+        let mut tokens: Vec<(TopologyToken<Fp16>, u64)> = Vec::new();
+        let mut submitted: Vec<Vec<u64>> = Vec::new();
+        let (mut expect_ins, mut expect_rem) = (0u64, 0u64);
+        for _ in 0..g.usize_in(2, 5) {
+            let ks = g.distinct_keys(g.usize_in(1, 4_000));
+            expect_ins += ks.len() as u64;
+            tokens.push((sf.insert_batch_map_async_topo(&topo, &ks), ks.len() as u64));
+            // Sometimes remove an earlier batch (each at most once).
+            if !submitted.is_empty() && g.bool() {
+                let victim: Vec<u64> = submitted.remove(g.usize_in(0, submitted.len() - 1));
+                expect_rem += victim.len() as u64;
+                tokens.push((
+                    sf.remove_batch_map_async_topo(&topo, &victim),
+                    victim.len() as u64,
+                ));
+            } else {
+                submitted.push(ks);
+            }
+        }
+
+        // Resolve in random order; some tokens are dropped unwaited (the
+        // ledger must still be applied by Drop).
+        let mut successes = 0u64;
+        while !tokens.is_empty() {
+            let (tok, n) = tokens.remove(g.usize_in(0, tokens.len() - 1));
+            if g.bool() {
+                let (ok, out) = tok.wait();
+                prop_assert!(ok == n, "batch of {n} resolved {ok} successes");
+                prop_assert!(out.len() == n as usize, "outcome length mismatch");
+                successes += ok;
+            } else {
+                drop(tok);
+                successes += n; // all ops succeed at this load
+            }
+        }
+        prop_assert!(
+            successes == expect_ins + expect_rem,
+            "successes {successes} != submitted {}",
+            expect_ins + expect_rem
+        );
+        let expected = (expect_ins - expect_rem) as usize;
+        prop_assert!(sf.len() == expected, "ledger {} != expected {expected}", sf.len());
+        let scan: usize = (0..sf.num_shards())
+            .map(|i| sf.shard(i).table().count_occupied::<Fp16>())
+            .sum();
+        prop_assert!(scan == expected, "table scan {scan} != ledger {expected}");
         Ok(())
     });
 }
