@@ -12,6 +12,7 @@ use cuckoo_gpu::kmer::{distinct_kmers, SynthConfig, SyntheticGenome};
 use cuckoo_gpu::kmer::dna::{canonical_kmer, for_each_kmer};
 use cuckoo_gpu::util::cli::Args;
 use cuckoo_gpu::util::Timer;
+use cuckoo_gpu::OpKind;
 
 fn main() {
     let args = Args::from_env();
@@ -37,12 +38,12 @@ fn main() {
     let filter = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(kmers.len())).unwrap();
     let device = Device::default();
     let t = Timer::new();
-    let r = filter.insert_batch(&device, &kmers);
+    let indexed = filter.execute_batch(&device, OpKind::Insert, &kmers, None);
     println!(
         "indexed {} 31-mers in {:.2}s ({:.1} M/s), filter = {} MiB at α={:.1}%",
-        r.inserted,
+        indexed,
         t.elapsed_secs(),
-        r.inserted as f64 / t.elapsed_secs() / 1e6,
+        indexed as f64 / t.elapsed_secs() / 1e6,
         filter.bytes() >> 20,
         filter.load_factor() * 100.0
     );
@@ -53,7 +54,7 @@ fn main() {
     let screen = |label: &str, seq: &[u8]| {
         let mut probes = Vec::new();
         for_each_kmer(seq, 31, |v| probes.push(canonical_kmer(v, 31)));
-        let hits = filter.count_contains_batch(&device, &probes);
+        let hits = filter.execute_batch(&device, OpKind::Query, &probes, None);
         println!(
             "  {label}: {}/{} 31-mers matched ({:.1}%)",
             hits,

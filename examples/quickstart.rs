@@ -6,6 +6,7 @@
 use cuckoo_gpu::device::Device;
 use cuckoo_gpu::filter::{CuckooConfig, CuckooFilter, Fp16};
 use cuckoo_gpu::workload;
+use cuckoo_gpu::OpKind;
 
 fn main() {
     // A filter sized for 1M keys at the design load factor (95%).
@@ -15,28 +16,29 @@ fn main() {
     let device = Device::default();
 
     // Batched operations — each logical "CUDA thread" handles one key.
+    // One entry point serves all three ops, picked by `OpKind`.
     let keys = workload::insert_keys(1_000_000, 42);
-    let r = filter.insert_batch(&device, &keys);
+    let inserted = filter.execute_batch(&device, OpKind::Insert, &keys, None);
     println!(
         "inserted {} / {} keys  (load factor {:.1}%)",
-        r.inserted,
+        inserted,
         keys.len(),
         filter.load_factor() * 100.0
     );
 
-    let hits = filter.count_contains_batch(&device, &keys);
-    println!("positive queries: {hits} hits (no false negatives: {})", hits == r.inserted);
+    let hits = filter.execute_batch(&device, OpKind::Query, &keys, None);
+    println!("positive queries: {hits} hits (no false negatives: {})", hits == inserted);
 
     // Empirical FPR with guaranteed-absent probes.
     let negatives = workload::negative_probes(1_000_000, 7);
-    let fp = filter.count_contains_batch(&device, &negatives);
+    let fp = filter.execute_batch(&device, OpKind::Query, &negatives, None);
     println!(
         "negative queries: {fp} false positives ({:.4}% FPR; fp16 theory ≈0.046%)",
         fp as f64 / negatives.len() as f64 * 100.0
     );
 
     // True deletion — the feature Bloom filters lack.
-    let removed = filter.remove_batch(&device, &keys[..500_000]);
+    let removed = filter.execute_batch(&device, OpKind::Delete, &keys[..500_000], None);
     println!("deleted {removed} keys; {} remain", filter.len());
 
     // Single-key API.

@@ -6,7 +6,7 @@
 use cuckoo_gpu::coordinator::{
     Batcher, BatcherConfig, Engine, EngineConfig, OpKind, Request, ShardedFilter,
 };
-use cuckoo_gpu::device::{Device, DeviceTopology, TopologyConfig};
+use cuckoo_gpu::device::{build_backend, Backend, Device};
 use cuckoo_gpu::filter::{hash::xxhash64_u64, CuckooConfig, CuckooFilter, Fp16, Layout};
 use cuckoo_gpu::util::Timer;
 use std::collections::VecDeque;
@@ -75,10 +75,10 @@ fn launch_overhead() {
     for batch in [1 << 10, 1 << 12] {
         let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(1 << 16)).unwrap();
         let keys: Vec<u64> = (0..batch as u64).map(cuckoo_gpu::util::prng::mix64).collect();
-        f.insert_batch(&d, &keys);
+        f.execute_batch(&d, OpKind::Insert, &keys, None);
         bench(&format!("query+ batch={batch} (launch incl.)"), batch * 2_000, || {
             for _ in 0..2_000 {
-                black_box(f.count_contains_batch(&d, &keys));
+                black_box(f.execute_batch(&d, OpKind::Query, &keys, None));
             }
         });
     }
@@ -89,10 +89,10 @@ fn launch_overhead() {
     let sf = ShardedFilter::<Fp16>::with_capacity(1 << 16, shards).unwrap();
     let batch = 1 << 12;
     let keys: Vec<u64> = (0..batch as u64).map(cuckoo_gpu::util::prng::mix64).collect();
-    sf.insert_batch(&d, &keys);
+    sf.submit(&d, OpKind::Insert, &keys).wait();
     bench(&format!("sharded query+ batch={batch} x{shards} shards"), batch * 1_000, || {
         for _ in 0..1_000 {
-            black_box(sf.contains_batch(&d, &keys));
+            black_box(sf.submit(&d, OpKind::Query, &keys).wait().0);
         }
     });
 }
@@ -118,14 +118,13 @@ fn topology_scaling() {
         })
         .collect();
     for pools in [1usize, 2, 4] {
-        let topo = DeviceTopology::new(TopologyConfig {
-            pools,
-            total_workers: total,
-            ..TopologyConfig::default()
-        });
+        // The bench never names a device type: the pools knob resolves
+        // to a backend and everything below is `submit` on `&dyn Backend`.
+        let backend: Box<dyn Backend> = build_backend(pools, total);
+        let backend = backend.as_ref();
         let sf = ShardedFilter::<Fp16>::with_capacity(groups * batch, shards).unwrap();
         for ks in &sets {
-            sf.insert_batch_map_async_topo(&topo, ks).wait();
+            sf.submit(backend, OpKind::Insert, ks).wait();
         }
         bench(
             &format!("query {groups} groups, {pools} pool(s) x{total}w"),
@@ -133,7 +132,7 @@ fn topology_scaling() {
             || {
                 let mut pending = VecDeque::new();
                 for ks in &sets {
-                    pending.push_back(sf.contains_batch_map_async_topo(&topo, ks));
+                    pending.push_back(sf.submit(backend, OpKind::Query, ks));
                     if pending.len() >= 4 {
                         black_box(pending.pop_front().unwrap().wait().0);
                     }
@@ -272,10 +271,10 @@ fn main() {
         let d = Device::with_workers(workers);
         let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(n)).unwrap();
         bench(&format!("insert batch x{workers} workers"), n, || {
-            f.insert_batch(&d, &keys);
+            f.execute_batch(&d, OpKind::Insert, &keys, None);
         });
         bench(&format!("query+ batch x{workers} workers"), n, || {
-            f.count_contains_batch(&d, &keys);
+            f.execute_batch(&d, OpKind::Query, &keys, None);
         });
     }
 }

@@ -210,7 +210,7 @@ mod tests {
         let f = BlockedBloomFilter::with_capacity(50_000, 16.0);
         let ks = keys(50_000, 3);
         let d = Device::with_workers(8);
-        super::super::common::insert_batch(&f, &d, &ks);
+        super::super::common::run_batch(&f, &d, crate::op::OpKind::Insert, &ks);
         for &k in &ks {
             assert!(f.contains(k));
         }

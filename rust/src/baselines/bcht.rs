@@ -220,8 +220,8 @@ mod tests {
         let t = BuckCuckooHashTable::with_capacity(50_000);
         let d = Device::with_workers(8);
         let ks = keys(50_000, 3);
-        let ok = super::super::common::insert_batch(&t, &d, &ks);
+        let ok = super::super::common::run_batch(&t, &d, crate::op::OpKind::Insert, &ks);
         assert_eq!(ok, 50_000);
-        assert_eq!(super::super::common::contains_batch(&t, &d, &ks), 50_000);
+        assert_eq!(super::super::common::run_batch(&t, &d, crate::op::OpKind::Query, &ks), 50_000);
     }
 }

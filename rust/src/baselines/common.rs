@@ -1,8 +1,11 @@
 //! The uniform AMQ interface all filters (ours and the baselines)
-//! implement, plus batched helpers that run any of them through the
-//! [`crate::device::Device`] launch engine.
+//! implement, plus the one batched driver ([`run_batch`]) that runs any
+//! of them, for any [`OpKind`], on any [`Backend`] — the comparison
+//! figures (fig3/4/8) all measure through this single entry point, so a
+//! new baseline or a new backend never grows a per-op helper family.
 
-use crate::device::Device;
+use crate::device::{Backend, WarpCtx};
+use crate::op::OpKind;
 
 /// An approximate-membership-query structure with (optional) deletion.
 /// All methods take `&self`: implementations are internally synchronised
@@ -35,35 +38,38 @@ pub trait AmqFilter: Sync {
     fn bits_per_entry(&self) -> f64;
 }
 
-/// Batched operations over any [`AmqFilter`] via the device engine.
-pub fn insert_batch(f: &dyn AmqFilter, device: &Device, keys: &[u64]) -> u64 {
-    device.launch(keys.len(), |ctx| {
+/// Run one batched operation over any [`AmqFilter`] on any [`Backend`]
+/// (stream 0), returning the hierarchical success count. The single
+/// batched driver behind every comparison figure: the op is picked by
+/// [`OpKind`], so insert/query/delete share one launch body instead of
+/// three hand-copied free functions.
+pub fn run_batch<B: Backend + ?Sized>(
+    f: &dyn AmqFilter,
+    backend: &B,
+    op: OpKind,
+    keys: &[u64],
+) -> u64 {
+    // Resolve the op once per batch (fn pointer), not once per item.
+    let call: fn(&dyn AmqFilter, u64) -> bool = match op {
+        OpKind::Insert => |f, k| f.insert(k),
+        OpKind::Query => |f, k| f.contains(k),
+        OpKind::Delete => |f, k| f.remove(k),
+    };
+    backend.run(0, keys.len(), &|ctx: &mut WarpCtx| {
         for i in ctx.range.clone() {
-            ctx.tally(f.insert(keys[i]));
-        }
-    })
-}
-
-pub fn contains_batch(f: &dyn AmqFilter, device: &Device, keys: &[u64]) -> u64 {
-    device.launch(keys.len(), |ctx| {
-        for i in ctx.range.clone() {
-            ctx.tally(f.contains(keys[i]));
-        }
-    })
-}
-
-pub fn remove_batch(f: &dyn AmqFilter, device: &Device, keys: &[u64]) -> u64 {
-    device.launch(keys.len(), |ctx| {
-        for i in ctx.range.clone() {
-            ctx.tally(f.remove(keys[i]));
+            ctx.tally(call(f, keys[i]));
         }
     })
 }
 
 /// Empirical FPR measurement (§5.3 protocol): query `probes` keys known
 /// to be absent; the hit fraction is the false-positive rate.
-pub fn empirical_fpr(f: &dyn AmqFilter, device: &Device, negative_probes: &[u64]) -> f64 {
-    let fp = contains_batch(f, device, negative_probes);
+pub fn empirical_fpr<B: Backend + ?Sized>(
+    f: &dyn AmqFilter,
+    backend: &B,
+    negative_probes: &[u64],
+) -> f64 {
+    let fp = run_batch(f, backend, OpKind::Query, negative_probes);
     fp as f64 / negative_probes.len() as f64
 }
 
@@ -125,16 +131,27 @@ mod tests {
 
     #[test]
     fn batched_trait_ops() {
-        let device = Device::with_workers(2);
+        let device = crate::device::Device::with_workers(2);
         let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(10_000)).unwrap();
-        let keys: Vec<u64> = (0..10_000u64).map(|i| crate::util::prng::mix64(i)).collect();
-        assert_eq!(insert_batch(&f, &device, &keys), 10_000);
-        assert_eq!(contains_batch(&f, &device, &keys), 10_000);
+        let keys: Vec<u64> = (0..10_000u64).map(crate::util::prng::mix64).collect();
+        assert_eq!(run_batch(&f, &device, OpKind::Insert, &keys), 10_000);
+        assert_eq!(run_batch(&f, &device, OpKind::Query, &keys), 10_000);
         let negatives: Vec<u64> = (0..10_000u64)
             .map(|i| crate::util::prng::mix64(i + (1 << 40)))
             .collect();
         let fpr = empirical_fpr(&f, &device, &negatives);
         assert!(fpr < 0.02, "fp16 FPR should be tiny, got {fpr}");
-        assert_eq!(remove_batch(&f, &device, &keys), 10_000);
+        assert_eq!(run_batch(&f, &device, OpKind::Delete, &keys), 10_000);
+    }
+
+    #[test]
+    fn run_batch_is_backend_generic() {
+        // The same driver over a multi-pool topology backend.
+        let topo = crate::device::DeviceTopology::with_pools(2, 2);
+        let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(5_000)).unwrap();
+        let keys: Vec<u64> = (0..5_000u64).map(crate::util::prng::mix64).collect();
+        assert_eq!(run_batch(&f, &topo, OpKind::Insert, &keys), 5_000);
+        assert_eq!(run_batch(&f, &topo, OpKind::Query, &keys), 5_000);
+        assert_eq!(run_batch(&f, &topo, OpKind::Delete, &keys), 5_000);
     }
 }

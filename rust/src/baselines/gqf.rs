@@ -468,10 +468,11 @@ mod tests {
         let f = QuotientFilter::with_capacity(100_000);
         let d = Device::with_workers(8);
         let ks = keys(100_000, 3);
-        let ok = super::super::common::insert_batch(&f, &d, &ks);
+        let ok = super::super::common::run_batch(&f, &d, crate::op::OpKind::Insert, &ks);
         assert_eq!(ok, 100_000);
-        assert_eq!(super::super::common::contains_batch(&f, &d, &ks), 100_000);
-        assert_eq!(super::super::common::remove_batch(&f, &d, &ks), 100_000);
+        assert_eq!(super::super::common::run_batch(&f, &d, crate::op::OpKind::Query, &ks), 100_000);
+        let removed = super::super::common::run_batch(&f, &d, crate::op::OpKind::Delete, &ks);
+        assert_eq!(removed, 100_000);
     }
 
     #[test]

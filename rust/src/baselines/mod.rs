@@ -20,7 +20,7 @@ pub mod pcf;
 
 pub use bbf::BlockedBloomFilter;
 pub use bcht::BuckCuckooHashTable;
-pub use common::AmqFilter;
+pub use common::{empirical_fpr, run_batch, AmqFilter};
 pub use gqf::QuotientFilter;
 pub use pcf::PartitionedCuckooFilter;
 pub use tcf::TwoChoiceFilter;

@@ -252,9 +252,9 @@ mod tests {
         let f = PartitionedCuckooFilter::with_capacity(50_000);
         let d = Device::with_workers(8);
         let ks = keys(50_000, 4);
-        let ok = super::super::common::insert_batch(&f, &d, &ks);
+        let ok = super::super::common::run_batch(&f, &d, crate::op::OpKind::Insert, &ks);
         assert!(ok > 49_900);
-        let hits = super::super::common::contains_batch(&f, &d, &ks);
+        let hits = super::super::common::run_batch(&f, &d, crate::op::OpKind::Query, &ks);
         assert!(hits >= ok);
     }
 }

@@ -284,8 +284,8 @@ mod tests {
         let f = TwoChoiceFilter::with_capacity(50_000);
         let d = Device::with_workers(8);
         let ks = keys(50_000, 5);
-        let ok = super::super::common::insert_batch(&f, &d, &ks);
+        let ok = super::super::common::run_batch(&f, &d, crate::op::OpKind::Insert, &ks);
         assert_eq!(ok, 50_000);
-        assert_eq!(super::super::common::contains_batch(&f, &d, &ks), 50_000);
+        assert_eq!(super::super::common::run_batch(&f, &d, crate::op::OpKind::Query, &ks), 50_000);
     }
 }

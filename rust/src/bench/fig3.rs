@@ -23,6 +23,7 @@ use crate::device::Device;
 use crate::filter::{CuckooConfig, CuckooFilter, Fp16};
 use crate::gpusim::filters as fmodels;
 use crate::gpusim::{estimate, OpClass, OpStats, Residency, GH200, RTX_PRO_6000, XEON_W9_DDR5};
+use crate::op::OpKind;
 use crate::workload;
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -131,15 +132,16 @@ pub fn run(opts: &BenchOpts) {
                 opts.runs,
                 || *filter.borrow_mut() = kind.build(capacity),
                 || {
-                    common::insert_batch(filter.borrow().as_ref(), &device, &insert_keys);
+                    let f = filter.borrow();
+                    common::run_batch(f.as_ref(), &device, OpKind::Insert, &insert_keys);
                 },
             );
             // positive / negative queries over the filled filter
             let t_qpos = super::measure_throughput(n_probe, opts.runs, || {}, || {
-                common::contains_batch(filter.borrow().as_ref(), &device, &pos);
+                common::run_batch(filter.borrow().as_ref(), &device, OpKind::Query, &pos);
             });
             let t_qneg = super::measure_throughput(n_probe, opts.runs, || {}, || {
-                common::contains_batch(filter.borrow().as_ref(), &device, &neg);
+                common::run_batch(filter.borrow().as_ref(), &device, OpKind::Query, &neg);
             });
             // delete (refill between runs)
             let t_del = if filter.borrow().supports_delete() {
@@ -148,7 +150,8 @@ pub fn run(opts: &BenchOpts) {
                     1,
                     || {},
                     || {
-                        common::remove_batch(filter.borrow().as_ref(), &device, &insert_keys);
+                        let f = filter.borrow();
+                        common::run_batch(f.as_ref(), &device, OpKind::Delete, &insert_keys);
                     },
                 )
             } else {
@@ -279,18 +282,18 @@ fn trace_cuckoo(
     let keys = workload::insert_keys(t_cap, 0x7A3);
     let mut out = std::collections::HashMap::new();
 
-    let (_, tr) = f.insert_batch_traced(device, &keys);
+    let (_, tr) = f.execute_batch_traced(device, OpKind::Insert, &keys);
     out.insert(OpClass::Insert, OpStats::from_trace(&tr, t_cap));
 
     let pos = workload::positive_probes(&keys, t_cap, 21);
-    let (_, tr) = f.contains_batch_traced(device, &pos);
+    let (_, tr) = f.execute_batch_traced(device, OpKind::Query, &pos);
     out.insert(OpClass::QueryPositive, OpStats::from_trace(&tr, t_cap));
 
     let neg = workload::negative_probes(t_cap, 22);
-    let (_, tr) = f.contains_batch_traced(device, &neg);
+    let (_, tr) = f.execute_batch_traced(device, OpKind::Query, &neg);
     out.insert(OpClass::QueryNegative, OpStats::from_trace(&tr, t_cap));
 
-    let (_, tr) = f.remove_batch_traced(device, &keys);
+    let (_, tr) = f.execute_batch_traced(device, OpKind::Delete, &keys);
     out.insert(OpClass::Delete, OpStats::from_trace(&tr, t_cap));
     out
 }

@@ -13,6 +13,7 @@ use crate::baselines::{
 };
 use crate::device::Device;
 use crate::filter::{CuckooConfig, CuckooFilter, Fp16};
+use crate::op::OpKind;
 use crate::workload;
 
 /// Filters under FPR test: (name, build from byte budget).
@@ -85,7 +86,7 @@ pub fn run(opts: &BenchOpts) {
         for (name, build) in FILTERS {
             let (filter, cap) = build(bytes);
             let keys = workload::insert_keys(cap, 0xF16_4 ^ pow as u64);
-            common::insert_batch(filter.as_ref(), &device, &keys);
+            common::run_batch(filter.as_ref(), &device, OpKind::Insert, &keys);
             let negatives = workload::negative_probes(probes_n, 0xBAD ^ pow as u64);
             let fpr = common::empirical_fpr(filter.as_ref(), &device, &negatives);
             table.print_row(&[
@@ -120,7 +121,7 @@ mod tests {
         for (name, build) in FILTERS {
             let (filter, cap) = build(bytes);
             let keys = workload::insert_keys(cap, 42);
-            common::insert_batch(filter.as_ref(), &device, &keys);
+            common::run_batch(filter.as_ref(), &device, OpKind::Insert, &keys);
             let negatives = workload::negative_probes(1 << 18, 77);
             fprs.insert(name, common::empirical_fpr(filter.as_ref(), &device, &negatives));
         }
@@ -137,7 +138,7 @@ mod tests {
         let device = Device::with_workers(4);
         let (filter, cap) = build_cuckoo_b16(1 << 20);
         let keys = workload::insert_keys(cap, 5);
-        common::insert_batch(filter.as_ref(), &device, &keys);
+        common::run_batch(filter.as_ref(), &device, OpKind::Insert, &keys);
         let negatives = workload::negative_probes(1 << 19, 6);
         let fpr = common::empirical_fpr(filter.as_ref(), &device, &negatives);
         let theory = 1.0 - (1.0 - 2f64.powi(-16)).powf(2.0 * 16.0 * 0.95);
@@ -159,7 +160,7 @@ mod debug_tests {
         for (name, build) in FILTERS {
             let (filter, cap) = build(bytes);
             let keys = workload::insert_keys(cap, 42);
-            common::insert_batch(filter.as_ref(), &device, &keys);
+            common::run_batch(filter.as_ref(), &device, OpKind::Insert, &keys);
             let negatives = workload::negative_probes(1 << 18, 77);
             let fpr = common::empirical_fpr(filter.as_ref(), &device, &negatives);
             println!("{name}: cap={cap} fpr={:.5}%", fpr * 100.0);

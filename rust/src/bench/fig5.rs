@@ -8,6 +8,7 @@
 use super::{BenchOpts, Csv, Table};
 use crate::device::Device;
 use crate::filter::{CuckooConfig, CuckooFilter, EvictionPolicy, Fp16};
+use crate::op::OpKind;
 use crate::util::stats::percentile_u32;
 use crate::workload;
 
@@ -35,9 +36,10 @@ pub fn collect(opts: &BenchOpts) -> Vec<TailRow> {
             let prefill = target * 3 / 4;
             let keys = workload::insert_keys(target, 0xF16_5 ^ (alpha * 1000.0) as u64);
             // Pre-fill (untraced — not measured).
-            f.insert_batch(&device, &keys[..prefill]);
+            f.execute_batch(&device, OpKind::Insert, &keys[..prefill], None);
             // Measure the last quarter.
-            let (res, trace) = f.insert_batch_traced(&device, &keys[prefill..]);
+            let (inserted, trace) =
+                f.execute_batch_traced(&device, OpKind::Insert, &keys[prefill..]);
             let mut samples = trace.eviction_samples.clone();
             samples.sort_unstable();
             rows.push(TailRow {
@@ -46,7 +48,7 @@ pub fn collect(opts: &BenchOpts) -> Vec<TailRow> {
                 p90: percentile_u32(&samples, 90.0),
                 p95: percentile_u32(&samples, 95.0),
                 p99: percentile_u32(&samples, 99.0),
-                failures: res.failed,
+                failures: (target - prefill) as u64 - inserted,
             });
         }
     }

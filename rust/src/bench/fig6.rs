@@ -13,6 +13,7 @@ use crate::device::Device;
 use crate::filter::{CuckooConfig, CuckooFilter, EvictionPolicy, Fp16};
 use crate::gpusim::filters as fmodels;
 use crate::gpusim::{estimate, OpClass, OpStats, Residency, GH200};
+use crate::op::OpKind;
 use crate::workload;
 
 pub const LOADS: [f64; 6] = [0.70, 0.80, 0.85, 0.90, 0.95, 0.97];
@@ -51,7 +52,7 @@ pub fn collect(opts: &BenchOpts) -> Vec<Row> {
                 || {
                     let cfg = CuckooConfig::new(buckets).eviction(policy);
                     let f = CuckooFilter::<Fp16>::new(cfg).unwrap();
-                    f.insert_batch(&device, &keys[..prefill]);
+                    f.execute_batch(&device, OpKind::Insert, &keys[..prefill], None);
                     *filter.borrow_mut() = Some(f);
                 },
                 || {
@@ -59,7 +60,7 @@ pub fn collect(opts: &BenchOpts) -> Vec<Row> {
                         .borrow()
                         .as_ref()
                         .unwrap()
-                        .insert_batch(&device, &keys[prefill..]);
+                        .execute_batch(&device, OpKind::Insert, &keys[prefill..], None);
                 },
             );
 
@@ -67,8 +68,8 @@ pub fn collect(opts: &BenchOpts) -> Vec<Row> {
             // the GH200 model.
             let cfg = CuckooConfig::new(buckets).eviction(policy);
             let f = CuckooFilter::<Fp16>::new(cfg).unwrap();
-            f.insert_batch(&device, &keys[..prefill]);
-            let (_, trace) = f.insert_batch_traced(&device, &keys[prefill..]);
+            f.execute_batch(&device, OpKind::Insert, &keys[..prefill], None);
+            let (_, trace) = f.execute_batch_traced(&device, OpKind::Insert, &keys[prefill..]);
             let stats = OpStats::from_trace(&trace, measure_n);
             let est_traced = estimate(&GH200, Residency::Dram, &stats).b_ops;
 

@@ -11,6 +11,7 @@ use super::{fmt_tput, BenchOpts, Csv, Table};
 use crate::device::Device;
 use crate::filter::{BucketPolicy, CuckooConfig, CuckooFilter, Fp16};
 use crate::gpusim::{estimate, OpStats, Residency, GH200};
+use crate::op::OpKind;
 use crate::workload;
 
 const ALPHA: f64 = 0.95;
@@ -49,26 +50,26 @@ pub fn collect(opts: &BenchOpts) -> Vec<Row> {
                 opts.runs,
                 || *f.borrow_mut() = build(),
                 || {
-                    f.borrow().insert_batch(&device, &keys);
+                    f.borrow().execute_batch(&device, OpKind::Insert, &keys, None);
                 },
             );
             let t_qpos = super::measure_throughput(n_probe, opts.runs, || {}, || {
-                f.borrow().count_contains_batch(&device, &pos);
+                f.borrow().execute_batch(&device, OpKind::Query, &pos, None);
             });
             let t_qneg = super::measure_throughput(n_probe, opts.runs, || {}, || {
-                f.borrow().count_contains_batch(&device, &neg);
+                f.borrow().execute_batch(&device, OpKind::Query, &neg, None);
             });
             let t_del = super::measure_throughput(capacity, 1, || {}, || {
-                f.borrow().remove_batch(&device, &keys);
+                f.borrow().execute_batch(&device, OpKind::Delete, &keys, None);
             });
 
             // gpusim: trace each op and charge the offset policy its extra
             // modulo arithmetic in the compute term.
             let f2 = build();
-            let (_, tri) = f2.insert_batch_traced(&device, &keys);
-            let (_, trp) = f2.contains_batch_traced(&device, &pos);
-            let (_, trn) = f2.contains_batch_traced(&device, &neg);
-            let (_, trd) = f2.remove_batch_traced(&device, &keys);
+            let (_, tri) = f2.execute_batch_traced(&device, OpKind::Insert, &keys);
+            let (_, trp) = f2.execute_batch_traced(&device, OpKind::Query, &pos);
+            let (_, trn) = f2.execute_batch_traced(&device, OpKind::Query, &neg);
+            let (_, trd) = f2.execute_batch_traced(&device, OpKind::Delete, &keys);
             let compute_penalty = if policy == BucketPolicy::Offset { 1.34 } else { 1.0 };
             let adj = |mut s: OpStats| {
                 s.compute_ops *= compute_penalty;

@@ -14,6 +14,7 @@ use crate::baselines::common;
 use crate::bench::fig3::{Kind, ALL_KINDS};
 use crate::device::Device;
 use crate::kmer::{distinct_kmers, SynthConfig, SyntheticGenome};
+use crate::op::OpKind;
 use crate::workload;
 
 pub struct Row {
@@ -45,15 +46,15 @@ pub fn collect(opts: &BenchOpts, genome_len: usize) -> (Vec<Row>, usize) {
             opts.runs,
             || *filter.borrow_mut() = kind.build(kmers.len()),
             || {
-                common::insert_batch(filter.borrow().as_ref(), &device, &kmers);
+                common::run_batch(filter.borrow().as_ref(), &device, OpKind::Insert, &kmers);
             },
         );
         let t_q = super::measure_throughput(probes.len(), opts.runs, || {}, || {
-            common::contains_batch(filter.borrow().as_ref(), &device, &probes);
+            common::run_batch(filter.borrow().as_ref(), &device, OpKind::Query, &probes);
         });
         let t_d = if filter.borrow().supports_delete() {
             super::measure_throughput(kmers.len(), 1, || {}, || {
-                common::remove_batch(filter.borrow().as_ref(), &device, &kmers);
+                common::run_batch(filter.borrow().as_ref(), &device, OpKind::Delete, &kmers);
             })
         } else {
             f64::NAN

@@ -1,30 +1,32 @@
-//! The servable engine: sharded filter + device topology + epoch guard
+//! The servable engine: sharded filter + device backend + epoch guard
 //! + metrics (+ optional PJRT runtime on the query path).
 //!
-//! Every batched request executes as fused device launches over the
-//! engine's [`DeviceTopology`] — one kernel per pool owning shards of
-//! the batch (one pool ⇒ exactly one launch, as before) — with per-key
-//! outcomes returned in input order even when the key space is sharded
-//! (`shards > 1`): the sharded filter scatters the batch
-//! shard-contiguously, splits it into per-pool segments and threads a
-//! global permutation index through every kernel (see [`super::shard`]).
-//! The `pools` knob in [`EngineConfig`] sizes the topology; the batcher
-//! and `ExecTicket` contract are pool-agnostic.
+//! The engine is written against the backend-agnostic launch surface
+//! ([`Backend`]): it holds a `Box<dyn Backend>` built from the
+//! `pools`/`workers` knobs ([`crate::device::build_backend`]) and never
+//! names a concrete device type. Every batched request executes through
+//! the sharded filter's single submission entry point
+//! ([`ShardedFilter::submit`]) — one fused kernel per backend stream
+//! owning shards of the batch — with per-key outcomes returned in input
+//! order even when the key space is sharded (`shards > 1`); see
+//! [`super::shard`]. The batcher and `ExecTicket` contract are
+//! backend-agnostic.
 //!
-//! Requests can be executed synchronously ([`Engine::execute`]) or
-//! submitted without a barrier ([`Engine::execute_async`], returning an
-//! [`ExecTicket`]). The async form does the scatter/permute on the
-//! calling thread, enqueues the kernel stream-ordered on the device
-//! pool, and holds the request's epoch-phase token inside the ticket
-//! until `wait()` — so a caller pipelining tickets must drain them
-//! before switching between query and mutation phases (the batcher's
-//! flusher does exactly this; see [`super::batcher`]).
+//! Requests can be executed synchronously ([`Engine::execute`] /
+//! [`Engine::execute_op`]) or submitted without a barrier
+//! ([`Engine::execute_async`], returning an [`ExecTicket`]). The async
+//! form does the scatter/permute on the calling thread, enqueues the
+//! kernels stream-ordered on the backend, and holds the request's
+//! epoch-phase token inside the ticket until `wait()` — so a caller
+//! pipelining tickets must drain them before switching between query and
+//! mutation phases (the batcher's flusher does exactly this; see
+//! [`super::batcher`]).
 
 use super::epoch::{EpochGuard, PhaseToken};
 use super::metrics::{Metrics, PoolStat};
 use super::request::{OpKind, Request, Response};
-use super::shard::{ShardedFilter, TopologyToken};
-use crate::device::{Device, DeviceTopology, TopologyConfig};
+use super::shard::{BatchTicket, ShardedFilter};
+use crate::device::{build_backend, Backend};
 use crate::filter::{FilterError, Fp16};
 use crate::runtime::{RuntimeError, RuntimeHandle};
 use crate::util::Timer;
@@ -66,11 +68,12 @@ pub struct EngineConfig {
     /// Total key capacity across shards.
     pub capacity: usize,
     pub shards: usize,
-    /// Worker threads, divided across all device pools.
+    /// Worker threads, divided across all backend streams.
     pub workers: usize,
-    /// Independent device pools; shards are assigned round-robin, so a
-    /// multi-shard engine with `pools > 1` runs per-pool fused kernels
-    /// that genuinely overlap (see [`DeviceTopology`]).
+    /// Independent device pools (backend streams); shards are assigned
+    /// round-robin, so a multi-shard engine with `pools > 1` runs
+    /// per-stream fused kernels that genuinely overlap (see
+    /// [`crate::device::DeviceTopology`]).
     pub pools: usize,
     /// Artifacts directory for the PJRT query path (None = native only).
     pub artifacts_dir: Option<std::path::PathBuf>,
@@ -91,7 +94,7 @@ impl Default for EngineConfig {
 /// The engine serves batched requests over an fp16 sharded filter.
 pub struct Engine {
     filter: ShardedFilter<Fp16>,
-    topology: DeviceTopology,
+    backend: Box<dyn Backend>,
     epoch: EpochGuard,
     pub metrics: Metrics,
     runtime: Option<RuntimeHandle>,
@@ -137,11 +140,7 @@ impl Engine {
         };
         Ok(Self {
             filter,
-            topology: DeviceTopology::new(TopologyConfig {
-                pools: cfg.pools,
-                total_workers: cfg.workers,
-                ..TopologyConfig::default()
-            }),
+            backend: build_backend(cfg.pools, cfg.workers),
             epoch: EpochGuard::new(),
             metrics: Metrics::new(),
             runtime,
@@ -163,7 +162,7 @@ impl Engine {
         let filter = ShardedFilter::from_single(filter_inner);
         Ok(Self {
             filter,
-            topology: DeviceTopology::single(Device::with_workers(workers)),
+            backend: build_backend(1, workers),
             epoch: EpochGuard::new(),
             metrics: Metrics::new(),
             runtime: Some(rt),
@@ -175,30 +174,25 @@ impl Engine {
         self.runtime.is_some()
     }
 
-    /// Number of independent device pools serving this engine.
+    /// Number of independent submission streams (device pools) serving
+    /// this engine.
     pub fn pools(&self) -> usize {
-        self.topology.num_pools()
+        self.backend.streams()
     }
 
-    /// The engine's device topology (per-pool launch surfaces).
-    pub fn topology(&self) -> &DeviceTopology {
-        &self.topology
+    /// The engine's launch backend (the unified submission surface).
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
     }
 
-    /// Point-in-time per-pool stats: worker count, lifetime launch count
-    /// and live queue depth — the counters that prove a `pools = N` run
-    /// actually distributes fused launches.
+    /// Point-in-time per-stream stats: worker count, lifetime launch
+    /// count and live queue depth — the counters that prove a
+    /// `pools = N` run actually distributes fused launches.
     pub fn pool_stats(&self) -> Vec<PoolStat> {
-        self.topology
-            .pools()
-            .iter()
-            .enumerate()
-            .map(|(i, d)| PoolStat {
-                pool: i,
-                workers: d.workers(),
-                launches: d.launches(),
-                queue_depth: d.queue_depth(),
-            })
+        self.backend
+            .stream_stats()
+            .into_iter()
+            .map(PoolStat::from)
             .collect()
     }
 
@@ -210,21 +204,31 @@ impl Engine {
         self.filter.is_empty()
     }
 
-    /// Execute one batched request and wait for it. One fused device
-    /// launch per request; `outcomes` is positional in the request's key
+    /// Execute one batched request and wait for it. One fused launch per
+    /// backend stream; `outcomes` is positional in the request's key
     /// order regardless of sharding.
     pub fn execute(&self, req: &Request) -> Response {
         self.execute_async(req).wait()
     }
 
+    /// Op-first convenience form of [`Engine::execute`]: run `op` over
+    /// `keys` synchronously. `execute(&Request::new(op, keys))` without
+    /// the request scaffolding.
+    pub fn execute_op(&self, op: OpKind, keys: Vec<u64>) -> Response {
+        self.execute(&Request::new(op, keys))
+    }
+
     /// Submit one batched request without a barrier: the scatter/permute
-    /// runs on the calling thread, the fused kernel is enqueued stream-
-    /// ordered on the device pool, and the returned [`ExecTicket`]
-    /// resolves to the [`Response`].
+    /// runs on the calling thread, the fused kernels are enqueued
+    /// stream-ordered on the backend, and the returned [`ExecTicket`]
+    /// resolves to the [`Response`]. The whole request path is one
+    /// `OpKind` dispatch: phase selection (`is_mutation`), the filter
+    /// submission and the ledger all key off the enum — there is no
+    /// per-op code here to keep in sync.
     ///
     /// The ticket holds the request's epoch-phase token until it is
     /// waited (or dropped), so the query/mutation phase separation of
-    /// [`EpochGuard`] extends over the in-flight kernel. A caller
+    /// [`EpochGuard`] extends over the in-flight kernels. A caller
     /// holding unresolved tickets of one phase must drain them before
     /// submitting the opposite phase — `begin_query`/`begin_mutation`
     /// would otherwise wait on tokens only that caller can release.
@@ -238,72 +242,53 @@ impl Engine {
         }
         let timer = Timer::new();
         let n = req.keys.len();
-        match req.op {
-            OpKind::Insert => {
-                let phase = self.epoch.begin_mutation();
-                let batch = self.filter.insert_batch_map_async_topo(&self.topology, &req.keys);
-                self.pending(req.op, n, batch, phase, timer)
-            }
-            OpKind::Delete => {
-                let phase = self.epoch.begin_mutation();
-                let batch = self.filter.remove_batch_map_async_topo(&self.topology, &req.keys);
-                self.pending(req.op, n, batch, phase, timer)
-            }
-            OpKind::Query => {
-                let phase = self.epoch.begin_query();
-                if let Some(rt) = &self.runtime {
-                    // AOT path: snapshot + PJRT batches, synchronous
-                    // inside the query phase (no concurrent mutation).
-                    let mut outcomes = vec![false; n];
-                    let successes = {
-                        let snapshot =
-                            std::sync::Arc::new(self.filter.shard(0).table().snapshot());
-                        match rt.query_all(snapshot, req.keys.clone()) {
-                            Ok(flags) => {
-                                outcomes.copy_from_slice(&flags);
-                                flags.iter().filter(|&&b| b).count() as u64
-                            }
-                            Err(e) => {
-                                eprintln!(
-                                    "[cuckoo-gpu] error: PJRT query failed, native fallback: {e}"
-                                );
-                                // PJRT engines are single-shard; the shard's
-                                // owning pool serves the fallback.
-                                self.filter.contains_batch_map(
-                                    self.topology.pool(self.topology.pool_for_shard(0)),
-                                    &req.keys,
-                                    &mut outcomes,
-                                )
-                            }
+        let phase = if req.op.is_mutation() {
+            self.epoch.begin_mutation()
+        } else {
+            self.epoch.begin_query()
+        };
+        if req.op == OpKind::Query {
+            if let Some(rt) = &self.runtime {
+                // AOT path: snapshot + PJRT batches, synchronous inside
+                // the query phase (no concurrent mutation).
+                let mut outcomes = vec![false; n];
+                let successes = {
+                    let snapshot = std::sync::Arc::new(self.filter.shard(0).table().snapshot());
+                    match rt.query_all(snapshot, req.keys.clone()) {
+                        Ok(flags) => {
+                            outcomes.copy_from_slice(&flags);
+                            flags.iter().filter(|&&b| b).count() as u64
                         }
-                    };
-                    drop(phase);
-                    self.metrics.record(req.op, n, successes, timer.elapsed_ns());
-                    return ExecTicket {
-                        inner: Some(TicketInner::Ready(Response {
-                            op: req.op,
-                            outcomes,
-                            successes,
-                        })),
-                    };
-                }
-                let batch = self.filter.contains_batch_map_async_topo(&self.topology, &req.keys);
-                self.pending(req.op, n, batch, phase, timer)
+                        Err(e) => {
+                            eprintln!(
+                                "[cuckoo-gpu] error: PJRT query failed, native fallback: {e}"
+                            );
+                            // Same unified path, degraded to sync: submit
+                            // + wait inside the held query phase.
+                            let (successes, flags) = self
+                                .filter
+                                .submit(self.backend.as_ref(), OpKind::Query, &req.keys)
+                                .wait();
+                            outcomes = flags;
+                            successes
+                        }
+                    }
+                };
+                drop(phase);
+                self.metrics.record(req.op, n, successes, timer.elapsed_ns());
+                return ExecTicket {
+                    inner: Some(TicketInner::Ready(Response {
+                        op: req.op,
+                        outcomes,
+                        successes,
+                    })),
+                };
             }
         }
-    }
-
-    fn pending<'e>(
-        &'e self,
-        op: OpKind,
-        n: usize,
-        batch: TopologyToken<Fp16>,
-        phase: PhaseToken<'e>,
-        timer: Timer,
-    ) -> ExecTicket<'e> {
+        let batch = self.filter.submit(self.backend.as_ref(), req.op, &req.keys);
         ExecTicket {
             inner: Some(TicketInner::Pending {
-                op,
+                op: req.op,
                 n,
                 batch,
                 _phase: phase,
@@ -317,11 +302,11 @@ impl Engine {
 /// Completion handle for an async request submission
 /// ([`Engine::execute_async`]).
 ///
-/// `wait()` blocks until the request's kernel retires and returns the
+/// `wait()` blocks until the request's kernels retire and returns the
 /// positional [`Response`]; metrics are recorded with the full
 /// submit-to-completion latency. Dropping the ticket unresolved still
-/// waits for the kernel (the shard token's drop) and only then releases
-/// the epoch-phase token — phase separation is never cut short.
+/// waits for the kernels (the batch ticket's drop) and only then
+/// releases the epoch-phase token — phase separation is never cut short.
 pub struct ExecTicket<'e> {
     inner: Option<TicketInner<'e>>,
 }
@@ -329,13 +314,13 @@ pub struct ExecTicket<'e> {
 enum TicketInner<'e> {
     /// Completed at submit (PJRT query path).
     Ready(Response),
-    /// Kernels in flight on the device topology (one per pool segment).
+    /// Kernels in flight on the backend (one per stream segment).
     /// Field order matters: `batch` must drop (and thus resolve on every
-    /// pool) before `_phase` releases the epoch-phase token.
+    /// stream) before `_phase` releases the epoch-phase token.
     Pending {
         op: OpKind,
         n: usize,
-        batch: TopologyToken<Fp16>,
+        batch: BatchTicket<Fp16>,
         _phase: PhaseToken<'e>,
         timer: Timer,
         metrics: &'e Metrics,
@@ -407,15 +392,15 @@ mod tests {
         .unwrap();
         let ks = keys(10_000, 1);
 
-        let r = e.execute(&Request::new(OpKind::Insert, ks.clone()));
+        let r = e.execute_op(OpKind::Insert, ks.clone());
         assert_eq!(r.successes, 10_000);
         assert!(r.outcomes.iter().all(|&b| b));
         assert_eq!(e.len(), 10_000);
 
-        let r = e.execute(&Request::new(OpKind::Query, ks.clone()));
+        let r = e.execute_op(OpKind::Query, ks.clone());
         assert_eq!(r.successes, 10_000);
 
-        let r = e.execute(&Request::new(OpKind::Delete, ks.clone()));
+        let r = e.execute_op(OpKind::Delete, ks.clone());
         assert_eq!(r.successes, 10_000);
         assert_eq!(e.len(), 0);
 
@@ -482,8 +467,8 @@ mod tests {
             artifacts_dir: None,
         })
         .unwrap();
-        for op in [OpKind::Insert, OpKind::Query, OpKind::Delete] {
-            let r = e.execute(&Request::new(op, vec![]));
+        for op in OpKind::ALL {
+            let r = e.execute_op(op, vec![]);
             assert_eq!(r.successes, 0);
             assert!(r.outcomes.is_empty());
         }
@@ -494,7 +479,7 @@ mod tests {
     #[test]
     fn multi_pool_engine_distributes_launches_and_stays_positional() {
         // Acceptance: a 4-pool engine must actually spread fused
-        // launches across all pools (per-pool launch counters) while
+        // launches across all streams (per-stream launch counters) while
         // keeping positional outcomes and the occupancy ledger exact.
         let e = Engine::new(EngineConfig {
             capacity: 100_000,
@@ -528,6 +513,7 @@ mod tests {
         }
         let workers: usize = stats.iter().map(|s| s.workers).sum();
         assert_eq!(workers, 4, "total workers re-partitioned, not multiplied");
+        assert_eq!(e.backend().workers(), 4);
 
         let r = e.execute(&Request::new(OpKind::Delete, present));
         assert_eq!(r.successes, 20_000);

@@ -6,17 +6,32 @@ use crate::util::stats::Histogram;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-/// Point-in-time stats of one device pool: lifetime fused-launch count
-/// and live queue depth (submitted-but-unretired jobs). Built by
-/// `Engine::pool_stats` from the topology's per-device counters; the
-/// launch distribution across pools is the observable proof that a
-/// `pools = N` engine actually fans fused kernels out.
+/// Point-in-time stats of one device pool (backend stream): lifetime
+/// fused-launch count and live queue depth (submitted-but-unretired
+/// jobs). Built by `Engine::pool_stats` from the backend's per-stream
+/// counters (`Backend::stream_stats`); the launch distribution across
+/// pools is the observable proof that a `pools = N` engine actually
+/// fans fused kernels out.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PoolStat {
     pub pool: usize,
     pub workers: usize,
     pub launches: u64,
     pub queue_depth: u64,
+}
+
+impl From<crate::device::StreamStat> for PoolStat {
+    /// The serving layer's name for a backend stream is "pool"; the
+    /// fields map one-to-one so `Engine::pool_stats` cannot silently
+    /// drop a counter when `StreamStat` grows one.
+    fn from(s: crate::device::StreamStat) -> Self {
+        Self {
+            pool: s.stream,
+            workers: s.workers,
+            launches: s.launches,
+            queue_depth: s.queue_depth,
+        }
+    }
 }
 
 #[derive(Default)]

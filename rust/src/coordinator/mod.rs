@@ -12,13 +12,16 @@
 //!   scatters the next batch while the previous batch's kernel is still
 //!   in flight (stream-ordered async launches);
 //! * [`shard`]   — key-space sharding across multiple filters for
-//!   multi-device topologies; batches scatter once into a flat
-//!   shard-contiguous buffer, split into per-pool segments of the
-//!   engine's device topology, and execute as fused launches that
-//!   overlap across pools, with per-key results permuted back to input
-//!   order and the per-pool completions joined by a `TopologyToken`;
-//! * [`engine`]  — ties filter + device + epoch + (optional) PJRT runtime
-//!   into a servable engine;
+//!   multi-device topologies, behind **one** submission entry point:
+//!   `ShardedFilter::submit(backend, OpKind, keys) -> BatchTicket`.
+//!   Batches scatter once into a flat shard-contiguous buffer, split
+//!   into per-stream segments of the engine's backend, and execute as
+//!   fused launches that overlap across streams, with per-key results
+//!   permuted back to input order and the per-stream completions joined
+//!   by the ticket;
+//! * [`engine`]  — ties filter + backend + epoch + (optional) PJRT
+//!   runtime into a servable engine (`execute`/`execute_op`/
+//!   `execute_async`, all one `OpKind` dispatch);
 //! * [`server`]  — a line-protocol TCP front end;
 //! * [`metrics`] — op counters and latency histograms.
 
@@ -35,4 +38,4 @@ pub use engine::{Engine, EngineConfig, EngineError, ExecTicket};
 pub use epoch::EpochGuard;
 pub use metrics::PoolStat;
 pub use request::{OpKind, Request, Response, ServeError};
-pub use shard::{ShardBatchToken, ShardedFilter, TopologyToken};
+pub use shard::{BatchTicket, ShardedFilter};

@@ -1,35 +1,10 @@
 //! Request/response types for the serving layer.
+//!
+//! The operation enum itself lives in [`crate::op`] — it is shared by
+//! every execution surface, not just the coordinator — and is re-exported
+//! here for the serving-layer callers that always used this path.
 
-/// The three filter operations (plus a ping for health checks).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum OpKind {
-    Insert,
-    Query,
-    Delete,
-}
-
-impl OpKind {
-    pub fn name(self) -> &'static str {
-        match self {
-            OpKind::Insert => "insert",
-            OpKind::Query => "query",
-            OpKind::Delete => "delete",
-        }
-    }
-
-    pub fn is_mutation(self) -> bool {
-        !matches!(self, OpKind::Query)
-    }
-
-    pub fn parse(s: &str) -> Option<Self> {
-        match s {
-            "insert" | "INSERT" | "i" => Some(OpKind::Insert),
-            "query" | "QUERY" | "q" | "contains" => Some(OpKind::Query),
-            "delete" | "DELETE" | "d" | "remove" => Some(OpKind::Delete),
-            _ => None,
-        }
-    }
-}
+pub use crate::op::OpKind;
 
 /// A batch request: one operation over a vector of keys.
 #[derive(Clone, Debug)]
@@ -82,17 +57,10 @@ mod tests {
     use super::*;
 
     #[test]
-    fn parse_ops() {
-        assert_eq!(OpKind::parse("insert"), Some(OpKind::Insert));
-        assert_eq!(OpKind::parse("q"), Some(OpKind::Query));
-        assert_eq!(OpKind::parse("remove"), Some(OpKind::Delete));
-        assert_eq!(OpKind::parse("nope"), None);
-    }
-
-    #[test]
-    fn mutation_classes() {
-        assert!(OpKind::Insert.is_mutation());
-        assert!(OpKind::Delete.is_mutation());
-        assert!(!OpKind::Query.is_mutation());
+    fn op_kind_reexport_is_the_shared_enum() {
+        // Parse tests live in `crate::op`; this pins the re-export so
+        // serving-layer callers keep resolving the same type.
+        let op: crate::op::OpKind = OpKind::Insert;
+        assert!(op.is_mutation());
     }
 }

@@ -10,8 +10,10 @@
 //! PING                    ->  PONG
 //! QUIT                    ->  BYE (closes connection)
 //! ```
-//! Keys are decimal or 0x-hex u64. An operation with zero keys is a
-//! valid no-op (`OK 0` with empty bits) and still flows through the
+//! Keys are decimal or 0x-hex u64. Operation tokens accept the aliases
+//! of [`OpKind::parse`]: full names, `contains`/`remove`, and the
+//! single-letter forms `i`/`q`/`c`/`d`. An operation with zero keys is
+//! a valid no-op (`OK 0` with empty bits) and still flows through the
 //! batcher → engine → fused-launch stack. Errors reply `ERR <message>`,
 //! including serving errors surfaced by the batcher (shutdown, failed
 //! flush).
@@ -250,6 +252,16 @@ mod tests {
         let (hits, bits) = c.op("QUERY", &[1, 2, 3, 4, 5000]).unwrap();
         assert_eq!(hits, 4);
         assert_eq!(bits[..4], [true; 4]);
+
+        // Single-letter aliases, including the `c` (contains) form.
+        let (hits, _) = c.op("c", &[1, 2]).unwrap();
+        assert_eq!(hits, 2);
+        let (hits, _) = c.op("C", &[1, 2]).unwrap();
+        assert_eq!(hits, 2);
+        let (ok, _) = c.op("i", &[77]).unwrap();
+        assert_eq!(ok, 1);
+        let (removed, _) = c.op("d", &[77]).unwrap();
+        assert_eq!(removed, 1);
 
         // Empty key list: a valid no-op that still crosses the whole
         // server → batcher → engine → fused-launch stack.

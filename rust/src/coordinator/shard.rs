@@ -3,67 +3,79 @@
 //! GPU owns a shard; here each shard is an independent lock-free filter,
 //! which also reduces epoch-guard scope in mixed workloads).
 //!
+//! ## One submission surface
+//!
+//! The sharded filter exposes exactly **one** batch entry point,
+//! [`ShardedFilter::submit`]: pick the operation with
+//! [`OpKind`](crate::op::OpKind), hand over any
+//! [`Backend`](crate::device::Backend) — a single
+//! [`Device`](crate::device::Device), a multi-pool
+//! [`DeviceTopology`](crate::device::DeviceTopology), or any
+//! future backend — and get a [`BatchTicket`] back without a barrier.
+//! Synchronous execution is not a separate API: sync = `submit` +
+//! [`BatchTicket::wait`]. The per-op
+//! `{insert,contains,remove}_batch{,_map,_map_async,_map_async_topo}`
+//! method family this replaces (12 entry points × hand-copied bodies) is
+//! gone; see ROADMAP's migration table.
+//!
 //! ## Fused batch pipeline
 //!
-//! Batch operations run as **one** device launch per call, not one per
-//! shard. A batch is first scattered shard-contiguously with a two-pass
-//! counting scatter (per-shard histogram → prefix offsets → one flat
-//! `(key, original index)` buffer — a single allocation, no per-shard
-//! `Vec<Vec<_>>`), then a single fused kernel walks the flat buffer and
-//! routes each warp's items to their shard via the offset table. All
-//! shards therefore execute concurrently inside one launch — the
-//! multi-device parallelism the GPU analogue gets from one kernel over
-//! partitioned device memory — and the permutation index carried next to
-//! each key lets per-key outcomes scatter back into **input order**, so
-//! the serving layer's positional responses stay correct under
-//! `shards > 1`.
+//! A submitted batch runs as **one fused launch per backend stream**,
+//! not one per shard. The batch is first scattered shard-contiguously
+//! with a two-pass counting scatter (per-shard histogram → prefix
+//! offsets → one flat `(key, original index)` buffer — a single
+//! allocation, no per-shard `Vec<Vec<_>>`) on the calling thread (the
+//! overlappable stage), then split into per-stream segments: each stream
+//! receives the contiguous slices of the shards it owns
+//! ([`Backend::stream_for_shard`]) plus a local → global shard table,
+//! and one kernel is submitted per non-empty segment. All shards of a
+//! segment execute concurrently inside its launch — the multi-device
+//! parallelism the GPU analogue gets from one kernel over partitioned
+//! device memory — and segments on *different* streams genuinely
+//! overlap, while each shard's batches stay FIFO on its owning stream
+//! (mutation order per shard = submission order). Single-stream
+//! backends skip the split; single-shard filters skip the scatter and
+//! permutation entirely (owned key vector, direct positional writes).
+//!
+//! Every segment kernel scatters outcomes through the **global**
+//! permutation index into one shared out vector, so the answer at
+//! position `i` is for key `i` no matter which stream ran it — the
+//! serving layer's positional responses stay correct under `shards > 1`
+//! and `streams > 1` alike.
 //!
 //! The permutation index is `u32`, so one fused launch covers at most
-//! `u32::MAX` keys; the synchronous batch entry points transparently
-//! split larger batches into chunk-sized launches (and the scatter hard-
-//! asserts the bound — a silent truncation would scatter outcomes to the
-//! wrong positions).
+//! `u32::MAX` keys; `submit` transparently splits larger batches into
+//! chunk-sized launches whose outcomes concatenate back in input order
+//! (and the scatter hard-asserts the bound — a silent truncation would
+//! scatter outcomes to the wrong positions).
 //!
-//! ## Async batches
+//! ## Ticket lifecycle
 //!
-//! The `*_batch_map_async` variants submit the fused kernel through
-//! [`Device::launch_async`] and return a [`ShardBatchToken`] instead of
-//! blocking. The scatter buffers, the out vector and the per-shard
-//! tallies move into `Arc`-owned task state, so their lifetime safely
-//! outlives the submitting frame (no caller-stack borrows cross the
-//! async boundary). The token's `wait()` yields `(successes, outcomes)`
-//! with outcomes in input order, and applies the per-shard occupancy
-//! ledger; a token dropped without `wait` still waits for the kernel and
-//! applies the ledger (discarding outcomes), so counters never drift.
+//! The scatter buffers, the shared out vector and the per-shard tallies
+//! move into `Arc`-owned task state co-owned by the kernels and the
+//! ticket, so nothing borrows the submitting frame across the async
+//! boundary. [`BatchTicket::wait`] drains **every** launch of the batch
+//! (all streams, all chunks — even if one panicked, so the shared state
+//! is quiescent before it is touched), merges the per-shard tallies into
+//! the occupancy ledger exactly once, and returns
+//! `(successes, outcomes)` with outcomes positional in the submitted key
+//! order. A kernel panic on any stream re-raises at `wait()` *after*
+//! the full drain, and the ledger is skipped for the whole batch.
+//! Dropping a ticket unwaited still drains every launch and applies the
+//! ledger (outcomes are discarded, a panic is swallowed — never a
+//! double-panic abort, even when the drop happens during another
+//! unwind), so occupancy counters never drift.
 //!
-//! ## Multi-pool topology
-//!
-//! The `*_batch_map_async_topo` variants run the same fused pipeline
-//! over a [`DeviceTopology`] — N independent device pools with a stable
-//! shard → pool assignment. The scatter is split once more into
-//! **per-pool segments** (each pool gets the shard-contiguous slices of
-//! the shards it owns, plus a local → global shard index table), one
-//! kernel is submitted per non-empty segment with `launch_async`, and a
-//! [`TopologyToken`] joins the per-pool launches: its `wait()` drains
-//! every pool (even if one panicked), merges the shared per-shard
-//! tallies into the occupancy ledger exactly once, and returns outcomes
-//! **positional across pools** — every segment kernel scatters through
-//! the same global permutation index into one shared out vector, so the
-//! answer at position `i` is for key `i` no matter which pool ran it.
-//! Because the shard → pool map is stable, one shard's batches always
-//! land on one pool's FIFO queue — mutation order per shard is the
-//! submission order, exactly as with a single pool — while batches whose
-//! shards live on different pools genuinely overlap.
-//!
-//! Token-join semantics mirror [`ShardBatchToken`]: a kernel panic on
-//! any pool re-raises at `wait()` *after* all pools drained (so the
-//! shared task state is quiescent), the ledger is skipped for a
-//! panicked batch, and dropping the token without waiting drains all
-//! pools and swallows the panic — never aborts, even when the drop
-//! happens during another unwind.
+//! Phase interaction: the ticket itself knows nothing about the epoch
+//! guard — `Engine::execute_async` pins the request's phase token for
+//! the lifetime of the ticket, which is why a caller pipelining tickets
+//! must drain them before switching between query and mutation phases
+//! (see [`super::engine`] and [`super::epoch`]).
 
-use crate::device::{Device, DeviceTopology, LaunchToken, SendMutPtr, WarpCtx};
-use crate::filter::{CuckooConfig, CuckooFilter, FilterError, Layout, NoProbe};
+use crate::device::{Backend, LaunchToken, SendMutPtr, WarpCtx};
+use crate::filter::batch::op_fn;
+use crate::filter::{CuckooConfig, CuckooFilter, FilterError, Layout};
+use crate::op::OpKind;
 use crate::util::prng::mix64;
 use std::cell::UnsafeCell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -71,12 +83,16 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Keys per fused launch — the `u32` permutation-index bound. Larger
-/// synchronous batches are transparently split into chunks of this size.
+/// batches are transparently split into chunks of this size.
 const FUSED_CHUNK: usize = u32::MAX as usize;
 
+/// The per-key primitive a batch runs, type-erased so one submission
+/// path serves every op (and the tests can inject faulting ops).
+type OpFn<L> = Arc<dyn Fn(&CuckooFilter<L>, u64) -> bool + Send + Sync>;
+
 pub struct ShardedFilter<L: Layout> {
-    /// `Arc` so async batch kernels can co-own the shard array beyond
-    /// the submitting frame.
+    /// `Arc` so batch kernels can co-own the shard array beyond the
+    /// submitting frame.
     shards: Arc<Vec<CuckooFilter<L>>>,
     route_seed: u64,
 }
@@ -91,15 +107,16 @@ struct ShardScatter {
     offsets: Vec<usize>,
 }
 
-/// One pool's slice of a scattered batch: the shard-contiguous items of
-/// the shards this pool owns, with local offsets and the local → global
-/// shard index table the fused kernel routes through.
-struct PoolSegment {
+/// One stream's slice of a scattered batch: the shard-contiguous items
+/// of the shards this stream owns, with local offsets and the local →
+/// global shard index table the fused kernel routes through.
+struct StreamSegment {
     /// Global indices of the shards in this segment, ascending.
     shard_ids: Vec<usize>,
     /// `(key, original index)` pairs of those shards, shard-contiguous.
-    /// The original indices stay **global**, so every pool scatters its
-    /// outcomes into the one shared out vector at the right positions.
+    /// The original indices stay **global**, so every stream scatters
+    /// its outcomes into the one shared out vector at the right
+    /// positions.
     flat: Vec<(u64, u32)>,
     /// Local ranges: segment shard `s` owns `flat[offsets[s]..offsets[s+1]]`.
     offsets: Vec<usize>,
@@ -114,47 +131,56 @@ enum LedgerOp {
     Sub,
 }
 
+impl LedgerOp {
+    fn for_op(op: OpKind) -> Self {
+        match op {
+            OpKind::Insert => LedgerOp::Add,
+            OpKind::Query => LedgerOp::None,
+            OpKind::Delete => LedgerOp::Sub,
+        }
+    }
+}
+
 /// Out vector owned across the async boundary. Workers write disjoint
-/// slots during the launch (same contract as [`SendMutPtr`]); the token
-/// takes the vector only after the job retires.
+/// slots during the launch (same contract as [`SendMutPtr`]); the ticket
+/// takes the vector only after every launch retires.
 struct OutCell(UnsafeCell<Vec<bool>>);
-// SAFETY: writes are per-slot disjoint and confined to the launch; the
-// only post-launch access is the token's exclusive take after the
-// completion barrier.
+// SAFETY: writes are per-slot disjoint and confined to the launches; the
+// only post-launch access is the ticket's exclusive take after the full
+// drain.
 unsafe impl Sync for OutCell {}
 unsafe impl Send for OutCell {}
 
-/// `Arc`-owned task state of one in-flight async batch, co-owned by the
-/// kernel closure and the token: the out vector and per-shard tallies.
-/// (The scatter buffers are owned by the closure alone — only the
-/// kernel reads them.)
+/// `Arc`-owned task state of one in-flight chunk, co-owned by its
+/// kernel closures and the ticket: the shared out vector and per-shard
+/// tallies. (The scatter segments are owned by their kernel closures
+/// alone — only the kernels read them.)
 struct AsyncBatchState {
     out: OutCell,
     per_shard: Vec<AtomicU64>,
 }
 
-/// The per-warp body of the fused kernel, shared by the sync, async and
-/// multi-pool paths: walk the shard-contiguous flat buffer, run `op`
-/// against each item's shard, scatter outcomes back through the
-/// permutation index, and flush warp-local tallies once per shard
-/// boundary. `shard_ids` maps a segment-local shard index to the global
-/// one (`flat[offsets[s]..offsets[s+1]]` belongs to global shard
-/// `shard_ids[s]`) — the identity for single-pool launches, a pool's
-/// shard subset for topology segments. `per_shard` is always indexed
-/// globally, so segments on different pools tally into disjoint slots of
-/// one shared table.
-fn fused_warp<L, F>(
+/// The per-warp body of the fused kernel, shared by every stream
+/// segment: walk the shard-contiguous flat buffer, run `op` against
+/// each item's shard, scatter outcomes back through the permutation
+/// index, and flush warp-local tallies once per shard boundary.
+/// `shard_ids` maps a segment-local shard index to the global one
+/// (`flat[offsets[s]..offsets[s+1]]` belongs to global shard
+/// `shard_ids[s]`) — the identity for single-stream launches, a
+/// stream's shard subset for topology segments. `per_shard` is always
+/// indexed globally, so segments on different streams tally into
+/// disjoint slots of one shared table.
+fn fused_warp<L>(
     shards: &[CuckooFilter<L>],
     shard_ids: &[usize],
     flat: &[(u64, u32)],
     offsets: &[usize],
     per_shard: &[AtomicU64],
-    out: Option<*mut bool>,
-    op: &F,
+    out: *mut bool,
+    op: &dyn Fn(&CuckooFilter<L>, u64) -> bool,
     ctx: &mut WarpCtx,
 ) where
     L: Layout,
-    F: Fn(&CuckooFilter<L>, u64) -> bool,
 {
     // Shard of the warp's first item; items are shard-contiguous, so the
     // kernel only ever steps the shard index forward.
@@ -170,11 +196,9 @@ fn fused_warp<L, F>(
         }
         let (key, orig) = flat[j];
         let ok = op(&shards[shard_ids[s]], key);
-        if let Some(p) = out {
-            // SAFETY: `orig` indices are a permutation — each slot is
-            // written by exactly one warp item (see SendMutPtr contract).
-            unsafe { *p.add(orig as usize) = ok };
-        }
+        // SAFETY: `orig` indices are a permutation — each slot is
+        // written by exactly one warp item (see SendMutPtr contract).
+        unsafe { *out.add(orig as usize) = ok };
         local += ok as u64;
         ctx.tally(ok);
     }
@@ -247,28 +271,46 @@ impl<L: Layout> ShardedFilter<L> {
         self.shards[self.route(key)].remove(key)
     }
 
+    /// Submit one batched operation to `backend` without a barrier: the
+    /// scatter/permute runs on the calling thread, one fused kernel is
+    /// enqueued stream-ordered per backend stream owning shards of the
+    /// batch, and the returned [`BatchTicket`] resolves to
+    /// `(successes, outcomes)` with outcomes positional in `keys` order.
+    /// Synchronous callers chain `.wait()`.
+    ///
+    /// The occupancy ledger for mutations is applied when the ticket
+    /// resolves (wait *or* drop), never at submit.
+    pub fn submit<B: Backend + ?Sized>(
+        &self,
+        backend: &B,
+        op: OpKind,
+        keys: &[u64],
+    ) -> BatchTicket<L> {
+        self.submit_with(
+            backend,
+            LedgerOp::for_op(op),
+            Arc::new(op_fn::<L>(op)),
+            keys,
+            FUSED_CHUNK,
+        )
+    }
+
     /// Two-pass counting scatter: histogram → exclusive prefix → one
     /// flat `(key, original index)` buffer in shard order.
     fn scatter(&self, keys: &[u64]) -> ShardScatter {
         let num_shards = self.shards.len();
         // Hard bound, release builds included: a batch beyond the u32
         // permutation index would silently truncate `i as u32` below and
-        // scatter outcomes to wrong positions. The public batch entry
-        // points chunk larger batches before they get here.
+        // scatter outcomes to wrong positions. `submit` chunks larger
+        // batches before they get here.
         assert!(
             keys.len() <= FUSED_CHUNK,
             "batch of {} keys exceeds the u32 permutation index; chunk the batch",
             keys.len()
         );
-        if num_shards == 1 {
-            // Single shard: identity permutation, no histogram or route
-            // passes — just the owned flat copy the launch needs.
-            let flat = keys.iter().enumerate().map(|(i, &k)| (k, i as u32)).collect();
-            return ShardScatter {
-                flat,
-                offsets: vec![0, keys.len()],
-            };
-        }
+        // (No num_shards == 1 special case here: single-shard filters
+        // never reach the scatter — `submit_chunk` takes its owned-keys
+        // fast path first — and `route` degenerates to 0 anyway.)
         let mut offsets = vec![0usize; num_shards + 1];
         for &k in keys {
             offsets[self.route(k) + 1] += 1;
@@ -290,42 +332,34 @@ impl<L: Layout> ShardedFilter<L> {
         ShardScatter { flat, offsets }
     }
 
-    /// One fused launch over a scattered batch: each item runs `op`
-    /// against its shard, per-key outcomes scatter back to input order
-    /// through `out` (when given), and per-shard success tallies are
-    /// committed with a few atomics per warp (a warp flushes its local
-    /// tally only when it crosses a shard boundary). Returns the global
-    /// success count and the per-shard tallies.
-    fn fused_launch<F>(
+    /// Split a scattered batch into per-stream segments: stream `p`
+    /// receives the contiguous slices of every shard it owns,
+    /// concatenated in shard order, plus the local → global shard table.
+    /// Original indices are left global (the shared out vector is
+    /// positional across streams).
+    fn split_by_stream<B: Backend + ?Sized>(
         &self,
-        device: &Device,
         scatter: &ShardScatter,
-        out: Option<&mut [bool]>,
-        op: F,
-    ) -> (u64, Vec<u64>)
-    where
-        F: Fn(&CuckooFilter<L>, u64) -> bool + Sync,
-    {
-        let flat = &scatter.flat;
-        let offsets = &scatter.offsets;
-        let shards: &[CuckooFilter<L>] = &self.shards;
-        let ids: Vec<usize> = (0..shards.len()).collect();
-        let per_shard: Vec<AtomicU64> = (0..shards.len()).map(|_| AtomicU64::new(0)).collect();
-        let out_ptr = out.map(|o| {
-            assert_eq!(o.len(), flat.len());
-            SendMutPtr(o.as_mut_ptr())
-        });
-        let total = device.launch(flat.len(), |ctx| {
-            let out = out_ptr.as_ref().map(|p| p.0);
-            fused_warp(shards, &ids, flat, offsets, &per_shard, out, &op, ctx)
-        });
-        (
-            total,
-            per_shard.into_iter().map(AtomicU64::into_inner).collect(),
-        )
+        backend: &B,
+    ) -> Vec<StreamSegment> {
+        let num_shards = self.shards.len();
+        let mut segments: Vec<StreamSegment> = (0..backend.streams())
+            .map(|_| StreamSegment {
+                shard_ids: Vec::new(),
+                flat: Vec::new(),
+                offsets: vec![0],
+            })
+            .collect();
+        for s in 0..num_shards {
+            let seg = &mut segments[backend.stream_for_shard(s)];
+            seg.shard_ids.push(s);
+            seg.flat.extend_from_slice(&scatter.flat[scatter.offsets[s]..scatter.offsets[s + 1]]);
+            seg.offsets.push(seg.flat.len());
+        }
+        segments
     }
 
-    /// Apply a completed launch's per-shard tallies to the occupancy
+    /// Apply a completed batch's per-shard tallies to the occupancy
     /// ledgers.
     fn apply_ledger(shards: &[CuckooFilter<L>], per_shard: &[u64], ledger: LedgerOp) {
         for (s, &n) in per_shard.iter().enumerate() {
@@ -340,270 +374,117 @@ impl<L: Layout> ShardedFilter<L> {
         }
     }
 
-    /// Shared body of the chunked synchronous batch ops: one scatter +
-    /// fused launch per `chunk` keys, outcomes (if any) positional per
-    /// chunk, ledger applied after each launch.
-    fn batch_chunked<F>(
+    /// Core of `submit`, parameterised over the per-key op (so tests can
+    /// inject faulting kernels) and the chunk size (so the chunk loop is
+    /// testable at small primes). One [`ChunkInFlight`] per `chunk` keys,
+    /// each scattered and fanned out across the backend's streams.
+    fn submit_with<B: Backend + ?Sized>(
         &self,
-        device: &Device,
+        backend: &B,
+        ledger: LedgerOp,
+        op: OpFn<L>,
         keys: &[u64],
-        mut out: Option<&mut [bool]>,
         chunk: usize,
-        ledger: LedgerOp,
-        op: F,
-    ) -> u64
-    where
-        F: Fn(&CuckooFilter<L>, u64) -> bool + Sync,
-    {
-        if let Some(o) = &out {
-            assert_eq!(keys.len(), o.len());
-        }
-        let mut total = 0u64;
-        let mut start = 0usize;
-        for ks in keys.chunks(chunk) {
-            let scatter = self.scatter(ks);
-            let os = out
-                .as_mut()
-                .map(|o| &mut o[start..start + ks.len()]);
-            let (ok, per_shard) = self.fused_launch(device, &scatter, os, &op);
-            Self::apply_ledger(&self.shards, &per_shard, ledger);
-            total += ok;
-            start += ks.len();
-        }
-        total
-    }
-
-    /// Batch insert through fused launches; returns the accept count.
-    pub fn insert_batch(&self, device: &Device, keys: &[u64]) -> u64 {
-        if self.shards.len() == 1 {
-            return self.shards[0].insert_batch(device, keys).inserted;
-        }
-        self.batch_chunked(device, keys, None, FUSED_CHUNK, LedgerOp::Add, |f, k| {
-            f.insert_probed_raw(k, &mut NoProbe).is_ok()
-        })
-    }
-
-    /// Batch insert with per-key outcomes in **input order**.
-    pub fn insert_batch_map(&self, device: &Device, keys: &[u64], out: &mut [bool]) -> u64 {
-        if self.shards.len() == 1 {
-            return self.shards[0].insert_batch_map(device, keys, out);
-        }
-        self.batch_chunked(device, keys, Some(out), FUSED_CHUNK, LedgerOp::Add, |f, k| {
-            f.insert_probed_raw(k, &mut NoProbe).is_ok()
-        })
-    }
-
-    /// Batch membership count through fused launches.
-    pub fn contains_batch(&self, device: &Device, keys: &[u64]) -> u64 {
-        if self.shards.len() == 1 {
-            return self.shards[0].count_contains_batch(device, keys);
-        }
-        self.batch_chunked(device, keys, None, FUSED_CHUNK, LedgerOp::None, |f, k| {
-            f.contains(k)
-        })
-    }
-
-    /// Batch membership with per-key results in **input order** (the
-    /// serving layer's query path).
-    pub fn contains_batch_map(&self, device: &Device, keys: &[u64], out: &mut [bool]) -> u64 {
-        if self.shards.len() == 1 {
-            return self.shards[0].contains_batch(device, keys, out);
-        }
-        self.batch_chunked(device, keys, Some(out), FUSED_CHUNK, LedgerOp::None, |f, k| {
-            f.contains(k)
-        })
-    }
-
-    /// Batch delete through fused launches; returns the removal count.
-    pub fn remove_batch(&self, device: &Device, keys: &[u64]) -> u64 {
-        if self.shards.len() == 1 {
-            return self.shards[0].remove_batch(device, keys);
-        }
-        self.batch_chunked(device, keys, None, FUSED_CHUNK, LedgerOp::Sub, |f, k| {
-            f.remove_probed_raw(k, &mut NoProbe)
-        })
-    }
-
-    /// Batch delete with per-key outcomes in **input order**.
-    pub fn remove_batch_map(&self, device: &Device, keys: &[u64], out: &mut [bool]) -> u64 {
-        if self.shards.len() == 1 {
-            return self.shards[0].remove_batch_map(device, keys, out);
-        }
-        self.batch_chunked(device, keys, Some(out), FUSED_CHUNK, LedgerOp::Sub, |f, k| {
-            f.remove_probed_raw(k, &mut NoProbe)
-        })
-    }
-
-    /// Core of the async batch variants: scatter on the calling thread
-    /// (the overlappable stage), submit the fused kernel without a
-    /// barrier, hand back a token co-owning the task state.
-    fn batch_map_async<F>(
-        &self,
-        device: &Device,
-        keys: &[u64],
-        ledger: LedgerOp,
-        op: F,
-    ) -> ShardBatchToken<L>
-    where
-        F: Fn(&CuckooFilter<L>, u64) -> bool + Send + Sync + 'static,
-    {
-        // Async batches are submitted as one launch (no chunk loop — a
-        // token per chunk would reorder completions); the scatter
-        // hard-asserts the u32 bound. Serving batches are orders of
-        // magnitude below it.
-        let n = keys.len();
-        let state = Arc::new(AsyncBatchState {
-            out: OutCell(UnsafeCell::new(vec![false; n])),
-            per_shard: (0..self.shards.len()).map(|_| AtomicU64::new(0)).collect(),
-        });
-        let shards = self.shards.clone();
-        let kstate = state.clone();
-        // Derive the out pointer once, before any worker runs — forming
-        // it inside the kernel would create overlapping `&mut Vec`s
-        // across workers. The pointee is pinned by the Arc'd task state
-        // and the vec is never resized during the launch (SendMutPtr
-        // contract: disjoint per-slot writes only).
-        let out_ptr = SendMutPtr(unsafe { (*state.out.0.get()).as_mut_ptr() });
-        let token = if self.shards.len() == 1 {
-            // Single shard: no permutation needed — own a plain key
-            // vector (half the copy traffic of (key, index) pairs) and
-            // write outcomes straight to their input positions, matching
-            // the sync single-shard delegation's efficiency.
-            assert!(n <= FUSED_CHUNK, "batch exceeds the fused launch bound");
-            let keys: Vec<u64> = keys.to_vec();
-            device.launch_async(n, move |ctx| {
-                let shard = &shards[0];
-                let mut local = 0u64;
-                for i in ctx.range.clone() {
-                    let ok = op(shard, keys[i]);
-                    // SAFETY: slot `i` is written by exactly one warp
-                    // item (SendMutPtr contract).
-                    unsafe { *out_ptr.0.add(i) = ok };
-                    local += ok as u64;
-                    ctx.tally(ok);
-                }
-                if local > 0 {
-                    kstate.per_shard[0].fetch_add(local, Ordering::Relaxed);
-                }
-            })
-        } else {
-            let scatter = self.scatter(keys);
-            let (flat, offsets) = (scatter.flat, scatter.offsets);
-            let ids: Vec<usize> = (0..shards.len()).collect();
-            device.launch_async(n, move |ctx| {
-                fused_warp(
-                    &shards,
-                    &ids,
-                    &flat,
-                    &offsets,
-                    &kstate.per_shard,
-                    Some(out_ptr.0),
-                    &op,
-                    ctx,
-                );
-            })
-        };
-        ShardBatchToken {
-            inner: Some(TokenInner {
-                token,
-                state,
+    ) -> BatchTicket<L> {
+        let chunks = keys
+            .chunks(chunk.max(1))
+            .map(|ks| self.submit_chunk(backend, &op, ks))
+            .collect();
+        BatchTicket {
+            inner: Some(TicketState {
+                chunks,
                 shards: self.shards.clone(),
                 ledger,
             }),
         }
     }
 
-    /// Async batch insert: outcomes in input order at `wait()`; the
-    /// per-shard occupancy ledger is applied when the token resolves.
-    pub fn insert_batch_map_async(&self, device: &Device, keys: &[u64]) -> ShardBatchToken<L> {
-        self.batch_map_async(device, keys, LedgerOp::Add, |f, k| {
-            f.insert_probed_raw(k, &mut NoProbe).is_ok()
-        })
-    }
-
-    /// Async batch membership: outcomes in input order at `wait()`.
-    pub fn contains_batch_map_async(&self, device: &Device, keys: &[u64]) -> ShardBatchToken<L> {
-        self.batch_map_async(device, keys, LedgerOp::None, |f, k| f.contains(k))
-    }
-
-    /// Async batch delete: outcomes in input order at `wait()`; the
-    /// per-shard occupancy ledger is applied when the token resolves.
-    pub fn remove_batch_map_async(&self, device: &Device, keys: &[u64]) -> ShardBatchToken<L> {
-        self.batch_map_async(device, keys, LedgerOp::Sub, |f, k| {
-            f.remove_probed_raw(k, &mut NoProbe)
-        })
-    }
-
-    /// Split a scattered batch into per-pool segments: pool `p` receives
-    /// the contiguous slices of every shard it owns, concatenated in
-    /// shard order, plus the local → global shard table. Original
-    /// indices are left global (the shared out vector is positional
-    /// across pools).
-    fn split_by_pool(&self, scatter: &ShardScatter, topo: &DeviceTopology) -> Vec<PoolSegment> {
-        let num_shards = self.shards.len();
-        let mut segments: Vec<PoolSegment> = (0..topo.num_pools())
-            .map(|_| PoolSegment {
-                shard_ids: Vec::new(),
-                flat: Vec::new(),
-                offsets: vec![0],
-            })
-            .collect();
-        for s in 0..num_shards {
-            let seg = &mut segments[topo.pool_for_shard(s)];
-            seg.shard_ids.push(s);
-            seg.flat.extend_from_slice(&scatter.flat[scatter.offsets[s]..scatter.offsets[s + 1]]);
-            seg.offsets.push(seg.flat.len());
-        }
-        segments
-    }
-
-    /// Core of the multi-pool batch variants: one scatter on the calling
-    /// thread, split into per-pool segments, one `launch_async` per
-    /// non-empty segment — kernels on different pools overlap — joined
-    /// by a [`TopologyToken`]. Single-pool topologies (and single-shard
-    /// filters, whose one shard lives on one pool) delegate to the
-    /// single-pool async path, keeping its no-permutation fast path.
-    fn batch_map_topo_async<F>(
+    /// Scatter one chunk and submit its fused kernels: one launch on a
+    /// single-stream backend (or a single-shard filter, which also skips
+    /// the permutation), one launch per non-empty stream segment
+    /// otherwise.
+    fn submit_chunk<B: Backend + ?Sized>(
         &self,
-        topo: &DeviceTopology,
+        backend: &B,
+        op: &OpFn<L>,
         keys: &[u64],
-        ledger: LedgerOp,
-        op: F,
-    ) -> TopologyToken<L>
-    where
-        F: Fn(&CuckooFilter<L>, u64) -> bool + Send + Sync + 'static,
-    {
-        if topo.num_pools() == 1 || self.shards.len() == 1 {
-            let pool = topo.pool(if self.shards.len() == 1 {
-                topo.pool_for_shard(0)
-            } else {
-                0
-            });
-            return TopologyToken {
-                inner: Some(TopologyInner::Delegated(
-                    self.batch_map_async(pool, keys, ledger, op),
-                )),
-            };
-        }
+    ) -> ChunkInFlight {
         let n = keys.len();
         let state = Arc::new(AsyncBatchState {
             out: OutCell(UnsafeCell::new(vec![false; n])),
             per_shard: (0..self.shards.len()).map(|_| AtomicU64::new(0)).collect(),
         });
-        let scatter = self.scatter(keys);
-        let segments = self.split_by_pool(&scatter, topo);
-        let op = Arc::new(op);
-        let mut tokens = Vec::with_capacity(segments.len());
-        // Derive the shared out pointer ONCE, before any segment's
-        // kernel can run — re-forming it per segment would create a
-        // fresh `&mut Vec` while earlier pools may already be writing
-        // through the previous derivation (the same rule the
-        // single-pool path documents). Writes stay disjoint across
-        // pools because `orig` indices are a global permutation, and
-        // the pointee is pinned by the Arc'd task state each kernel
-        // co-owns (SendMutPtr contract).
+        // Derive the out pointer ONCE, before any kernel can run —
+        // re-forming it per segment would create a fresh `&mut Vec`
+        // while earlier streams may already be writing through the
+        // previous derivation. Writes stay disjoint across streams
+        // because `orig` indices are a global permutation, and the
+        // pointee is pinned by the Arc'd task state each kernel co-owns
+        // (SendMutPtr contract).
         let out_raw = unsafe { (*state.out.0.get()).as_mut_ptr() };
-        for (p, seg) in segments.into_iter().enumerate() {
+        let mut tokens = Vec::new();
+        if self.shards.len() == 1 {
+            // Single shard: no permutation needed — own a plain key
+            // vector (half the copy traffic of (key, index) pairs) and
+            // write outcomes straight to their input positions. The one
+            // shard lives on one stream either way.
+            assert!(n <= FUSED_CHUNK, "chunk exceeds the fused launch bound");
+            let shards = self.shards.clone();
+            let kstate = state.clone();
+            let keys: Vec<u64> = keys.to_vec();
+            let op = op.clone();
+            let out_ptr = SendMutPtr(out_raw);
+            let stream = backend.stream_for_shard(0);
+            tokens.push(backend.submit(
+                stream,
+                n,
+                Arc::new(move |ctx: &mut WarpCtx| {
+                    let shard = &shards[0];
+                    let mut local = 0u64;
+                    for i in ctx.range.clone() {
+                        let ok = (*op)(shard, keys[i]);
+                        // SAFETY: slot `i` is written by exactly one warp
+                        // item (SendMutPtr contract).
+                        unsafe { *out_ptr.0.add(i) = ok };
+                        local += ok as u64;
+                        ctx.tally(ok);
+                    }
+                    if local > 0 {
+                        kstate.per_shard[0].fetch_add(local, Ordering::Relaxed);
+                    }
+                }),
+            ));
+            return ChunkInFlight { tokens, state };
+        }
+        let scatter = self.scatter(keys);
+        if backend.streams() == 1 {
+            // Single stream: the whole scatter is one segment with the
+            // identity shard table — skip the split copy.
+            let shards = self.shards.clone();
+            let kstate = state.clone();
+            let op = op.clone();
+            let ids: Vec<usize> = (0..self.shards.len()).collect();
+            let ShardScatter { flat, offsets } = scatter;
+            let out_ptr = SendMutPtr(out_raw);
+            tokens.push(backend.submit(
+                0,
+                n,
+                Arc::new(move |ctx: &mut WarpCtx| {
+                    fused_warp(
+                        &shards,
+                        &ids,
+                        &flat,
+                        &offsets,
+                        &kstate.per_shard,
+                        out_ptr.0,
+                        &*op,
+                        ctx,
+                    )
+                }),
+            ));
+            return ChunkInFlight { tokens, state };
+        }
+        for (stream, seg) in self.split_by_stream(&scatter, backend).into_iter().enumerate() {
             if seg.flat.is_empty() {
                 continue;
             }
@@ -611,124 +492,123 @@ impl<L: Layout> ShardedFilter<L> {
             let kstate = state.clone();
             let op = op.clone();
             let out_ptr = SendMutPtr(out_raw);
-            tokens.push(topo.pool(p).launch_async(seg.flat.len(), move |ctx| {
-                fused_warp(
-                    &shards,
-                    &seg.shard_ids,
-                    &seg.flat,
-                    &seg.offsets,
-                    &kstate.per_shard,
-                    Some(out_ptr.0),
-                    &*op,
-                    ctx,
-                );
-            }));
+            let len = seg.flat.len();
+            tokens.push(backend.submit(
+                stream,
+                len,
+                Arc::new(move |ctx: &mut WarpCtx| {
+                    fused_warp(
+                        &shards,
+                        &seg.shard_ids,
+                        &seg.flat,
+                        &seg.offsets,
+                        &kstate.per_shard,
+                        out_ptr.0,
+                        &*op,
+                        ctx,
+                    )
+                }),
+            ));
         }
-        TopologyToken {
-            inner: Some(TopologyInner::Pools(TopoInner {
-                tokens,
-                state,
-                shards: self.shards.clone(),
-                ledger,
-            })),
-        }
-    }
-
-    /// Multi-pool async batch insert: per-pool fused kernels overlap
-    /// across the topology, outcomes are positional at `wait()`, and the
-    /// occupancy ledger is applied exactly once when the token resolves.
-    pub fn insert_batch_map_async_topo(
-        &self,
-        topo: &DeviceTopology,
-        keys: &[u64],
-    ) -> TopologyToken<L> {
-        self.batch_map_topo_async(topo, keys, LedgerOp::Add, |f, k| {
-            f.insert_probed_raw(k, &mut NoProbe).is_ok()
-        })
-    }
-
-    /// Multi-pool async batch membership: outcomes positional at `wait()`.
-    pub fn contains_batch_map_async_topo(
-        &self,
-        topo: &DeviceTopology,
-        keys: &[u64],
-    ) -> TopologyToken<L> {
-        self.batch_map_topo_async(topo, keys, LedgerOp::None, |f, k| f.contains(k))
-    }
-
-    /// Multi-pool async batch delete: outcomes positional at `wait()`;
-    /// ledger applied when the token resolves.
-    pub fn remove_batch_map_async_topo(
-        &self,
-        topo: &DeviceTopology,
-        keys: &[u64],
-    ) -> TopologyToken<L> {
-        self.batch_map_topo_async(topo, keys, LedgerOp::Sub, |f, k| {
-            f.remove_probed_raw(k, &mut NoProbe)
-        })
+        ChunkInFlight { tokens, state }
     }
 }
 
-/// Completion handle for an async fused batch (`*_batch_map_async`).
-///
-/// `wait()` blocks until the kernel retires, applies the per-shard
-/// occupancy ledger, and returns `(successes, outcomes)` with outcomes
-/// positional in the submitted key order. Dropping the token without
-/// waiting still blocks until the kernel retires and applies the ledger
-/// (outcomes are discarded) — occupancy counters never drift. A kernel
-/// panic re-raises at `wait()`; on drop it is swallowed (and the ledger
-/// skipped, matching the sync path's behaviour under a panic).
-pub struct ShardBatchToken<L: Layout> {
-    inner: Option<TokenInner<L>>,
-}
-
-struct TokenInner<L: Layout> {
-    token: LaunchToken,
+/// One chunk's in-flight launches (one per stream segment) plus the
+/// shared task state their outcomes land in.
+struct ChunkInFlight {
+    tokens: Vec<LaunchToken>,
     state: Arc<AsyncBatchState>,
+}
+
+/// Completion handle for a submitted batch ([`ShardedFilter::submit`]):
+/// the join of every fused launch the batch fanned out into (one per
+/// stream segment, per chunk), over shared task state. See the module
+/// docs for the full lifecycle (drain-before-touch, ledger exactly
+/// once, panic at `wait()` only, drop never aborts).
+pub struct BatchTicket<L: Layout> {
+    inner: Option<TicketState<L>>,
+}
+
+struct TicketState<L: Layout> {
+    /// In submission order; outcomes concatenate chunk by chunk.
+    chunks: Vec<ChunkInFlight>,
     shards: Arc<Vec<CuckooFilter<L>>>,
     ledger: LedgerOp,
 }
 
-impl<L: Layout> TokenInner<L> {
+impl<L: Layout> TicketState<L> {
     fn finish(self, want_out: bool) -> (u64, Vec<bool>) {
-        let total = self.token.wait();
-        let per_shard: Vec<u64> = self
-            .state
-            .per_shard
-            .iter()
-            .map(|a| a.load(Ordering::Relaxed))
-            .collect();
+        // Drain EVERY launch before touching shared state: a stream that
+        // panicked must not leave sibling kernels writing into the out
+        // vectors we are about to hand back.
+        let mut total = 0u64;
+        let mut panicked = false;
+        let mut drained: Vec<Arc<AsyncBatchState>> = Vec::with_capacity(self.chunks.len());
+        for chunk in self.chunks {
+            for tok in chunk.tokens {
+                match catch_unwind(AssertUnwindSafe(|| tok.wait())) {
+                    Ok(n) => total += n,
+                    Err(_) => panicked = true,
+                }
+            }
+            drained.push(chunk.state);
+        }
+        if panicked {
+            // Re-raise only after the full drain; the ledger is skipped
+            // for the whole batch, as a sync launch's panic would skip
+            // its counter update.
+            panic!("device worker panicked");
+        }
         let shards: &[CuckooFilter<L>] = &self.shards;
-        ShardedFilter::apply_ledger(shards, &per_shard, self.ledger);
-        let out = if want_out {
-            // SAFETY: the launch retired (wait() above), so no worker
-            // touches the cell anymore; this take is exclusive.
-            unsafe { std::mem::take(&mut *self.state.out.0.get()) }
-        } else {
-            Vec::new()
-        };
+        let mut out = Vec::new();
+        let single = drained.len() == 1;
+        for state in drained {
+            let per_shard: Vec<u64> = state
+                .per_shard
+                .iter()
+                .map(|a| a.load(Ordering::Relaxed))
+                .collect();
+            ShardedFilter::apply_ledger(shards, &per_shard, self.ledger);
+            if want_out {
+                // SAFETY: every launch retired above, so no worker
+                // touches the cell anymore; this take is exclusive.
+                let chunk_out = unsafe { std::mem::take(&mut *state.out.0.get()) };
+                if single {
+                    out = chunk_out;
+                } else {
+                    out.extend(chunk_out);
+                }
+            }
+        }
         (total, out)
+    }
+
+    fn is_done(&self) -> bool {
+        self.chunks
+            .iter()
+            .all(|c| c.tokens.iter().all(LaunchToken::is_done))
     }
 }
 
-impl<L: Layout> ShardBatchToken<L> {
-    /// Block until the batch retires; returns the success count and the
-    /// per-key outcomes in input order.
+impl<L: Layout> BatchTicket<L> {
+    /// Block until every launch of the batch retires; returns the merged
+    /// success count and the per-key outcomes in submitted key order.
     pub fn wait(mut self) -> (u64, Vec<bool>) {
-        let inner = self.inner.take().expect("token already resolved");
+        let inner = self.inner.take().expect("ticket already resolved");
         inner.finish(true)
     }
 
-    /// Non-blocking completion probe.
+    /// Non-blocking completion probe: done once every launch is.
     pub fn is_done(&self) -> bool {
-        self.inner.as_ref().map_or(true, |i| i.token.is_done())
+        self.inner.as_ref().map_or(true, TicketState::is_done)
     }
 }
 
-impl<L: Layout> Drop for ShardBatchToken<L> {
+impl<L: Layout> Drop for BatchTicket<L> {
     fn drop(&mut self) {
         if let Some(inner) = self.inner.take() {
-            // Unwaited tokens still owe their shards the ledger update.
+            // Unwaited tickets still owe their shards the ledger update.
             // Drop must not panic, so a kernel fault is swallowed here;
             // callers that care observe it via wait().
             let _ = catch_unwind(AssertUnwindSafe(|| inner.finish(false)));
@@ -736,113 +616,10 @@ impl<L: Layout> Drop for ShardBatchToken<L> {
     }
 }
 
-/// Completion handle for a multi-pool async fused batch
-/// (`*_batch_map_async_topo`): the join of one [`LaunchToken`] per pool
-/// segment over shared task state.
-///
-/// `wait()` drains **every** pool's kernel (panicked ones included — the
-/// shared out vector and tally table must be quiescent before they are
-/// touched), then applies the per-shard occupancy ledger once and
-/// returns `(successes, outcomes)` with outcomes positional in the
-/// submitted key order across all pools. A kernel panic on any pool
-/// re-raises here after the drain; the ledger is skipped for the whole
-/// batch, matching [`ShardBatchToken`] under a panic. Dropping the token
-/// unwaited drains all pools, applies the ledger (or swallows the panic)
-/// and never panics itself — safe even while another panic is unwinding,
-/// so a faulted pool cannot escalate into a process abort.
-pub struct TopologyToken<L: Layout> {
-    inner: Option<TopologyInner<L>>,
-}
-
-enum TopologyInner<L: Layout> {
-    /// Single pool (or single shard): the plain async path, unchanged.
-    Delegated(ShardBatchToken<L>),
-    /// One launch per non-empty pool segment, joined at wait.
-    Pools(TopoInner<L>),
-}
-
-struct TopoInner<L: Layout> {
-    tokens: Vec<LaunchToken>,
-    state: Arc<AsyncBatchState>,
-    shards: Arc<Vec<CuckooFilter<L>>>,
-    ledger: LedgerOp,
-}
-
-impl<L: Layout> TopoInner<L> {
-    fn finish(self, want_out: bool) -> (u64, Vec<bool>) {
-        // Drain every pool before touching shared state: a pool that
-        // panicked must not leave sibling kernels writing into the out
-        // vector we are about to hand back.
-        let mut total = 0u64;
-        let mut panicked = false;
-        for tok in self.tokens {
-            match catch_unwind(AssertUnwindSafe(|| tok.wait())) {
-                Ok(n) => total += n,
-                Err(_) => panicked = true,
-            }
-        }
-        if panicked {
-            // Re-raise only after the full drain; the ledger is skipped,
-            // as on the single-pool path.
-            panic!("device worker panicked");
-        }
-        let per_shard: Vec<u64> = self
-            .state
-            .per_shard
-            .iter()
-            .map(|a| a.load(Ordering::Relaxed))
-            .collect();
-        let shards: &[CuckooFilter<L>] = &self.shards;
-        ShardedFilter::apply_ledger(shards, &per_shard, self.ledger);
-        let out = if want_out {
-            // SAFETY: every launch retired above, so no worker touches
-            // the cell anymore; this take is exclusive.
-            unsafe { std::mem::take(&mut *self.state.out.0.get()) }
-        } else {
-            Vec::new()
-        };
-        (total, out)
-    }
-}
-
-impl<L: Layout> TopologyToken<L> {
-    /// Block until every pool's kernel retires; returns the merged
-    /// success count and the per-key outcomes in input order.
-    pub fn wait(mut self) -> (u64, Vec<bool>) {
-        match self.inner.take().expect("token already resolved") {
-            TopologyInner::Delegated(tok) => tok.wait(),
-            TopologyInner::Pools(inner) => inner.finish(true),
-        }
-    }
-
-    /// Non-blocking completion probe: done once every pool's launch is.
-    pub fn is_done(&self) -> bool {
-        match self.inner.as_ref() {
-            None => true,
-            Some(TopologyInner::Delegated(tok)) => tok.is_done(),
-            Some(TopologyInner::Pools(inner)) => inner.tokens.iter().all(LaunchToken::is_done),
-        }
-    }
-}
-
-impl<L: Layout> Drop for TopologyToken<L> {
-    fn drop(&mut self) {
-        match self.inner.take() {
-            // The delegated token's own Drop drains and swallows panics.
-            Some(TopologyInner::Delegated(_)) | None => {}
-            Some(TopologyInner::Pools(inner)) => {
-                // Same contract as ShardBatchToken: drain + ledger on
-                // drop, a pool fault is swallowed (never a double-panic
-                // abort when dropped during an unwind).
-                let _ = catch_unwind(AssertUnwindSafe(|| inner.finish(false)));
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::{Device, DeviceTopology};
     use crate::filter::Fp16;
 
     fn keys(n: usize, stream: u64) -> Vec<u64> {
@@ -892,10 +669,10 @@ mod tests {
         let device = Device::with_workers(4);
         let s = ShardedFilter::<Fp16>::with_capacity(50_000, 4).unwrap();
         let ks = keys(50_000, 2);
-        assert_eq!(s.insert_batch(&device, &ks), 50_000);
+        assert_eq!(s.submit(&device, OpKind::Insert, &ks).wait().0, 50_000);
         assert_eq!(s.len(), 50_000);
-        assert_eq!(s.contains_batch(&device, &ks), 50_000);
-        assert_eq!(s.remove_batch(&device, &ks), 50_000);
+        assert_eq!(s.submit(&device, OpKind::Query, &ks).wait().0, 50_000);
+        assert_eq!(s.submit(&device, OpKind::Delete, &ks).wait().0, 50_000);
         assert_eq!(s.len(), 0);
     }
 
@@ -904,8 +681,8 @@ mod tests {
         let device = Device::with_workers(4);
         let s = ShardedFilter::<Fp16>::with_capacity(40_000, 4).unwrap();
         let present = keys(10_000, 3);
-        let mut ins = vec![false; present.len()];
-        assert_eq!(s.insert_batch_map(&device, &present, &mut ins), 10_000);
+        let (ok, ins) = s.submit(&device, OpKind::Insert, &present).wait();
+        assert_eq!(ok, 10_000);
         assert!(ins.iter().all(|&b| b));
 
         // Interleave present and absent keys so positional correctness is
@@ -916,8 +693,7 @@ mod tests {
             probe.push(present[i]);
             probe.push(absent[i]);
         }
-        let mut got = vec![false; probe.len()];
-        let hits = s.contains_batch_map(&device, &probe, &mut got);
+        let (hits, got) = s.submit(&device, OpKind::Query, &probe).wait();
         // Per-position answers must agree with the serial per-key path.
         for (i, &k) in probe.iter().enumerate() {
             assert_eq!(got[i], s.contains(k), "positional mismatch at {i}");
@@ -928,8 +704,7 @@ mod tests {
         // Positional delete over the same interleaving. Absent keys can
         // false-positively delete (fp16) and steal a present key's slot,
         // so counts are bounded, not exact — the ledger must stay exact.
-        let mut del = vec![false; probe.len()];
-        let removed = s.remove_batch_map(&device, &probe, &mut del);
+        let (removed, del) = s.submit(&device, OpKind::Delete, &probe).wait();
         assert_eq!(removed as usize, del.iter().filter(|&&b| b).count());
         assert!((9_950..=10_100).contains(&(removed as usize)), "removed = {removed}");
         assert_eq!(s.len() as u64, 10_000 - removed);
@@ -940,7 +715,7 @@ mod tests {
         let device = Device::with_workers(4);
         let s = ShardedFilter::<Fp16>::with_capacity(60_000, 6).unwrap();
         let ks = keys(50_000, 5);
-        let ok = s.insert_batch(&device, &ks);
+        let (ok, _) = s.submit(&device, OpKind::Insert, &ks).wait();
         assert_eq!(ok, 50_000);
         // Per-shard occupancy counters must sum to the fused tally, and
         // each must match its shard's actual table occupancy.
@@ -959,35 +734,33 @@ mod tests {
 
     #[test]
     fn chunked_batches_agree_with_oracle_across_boundaries() {
-        // Regression for the u32 permutation-index overflow: the public
-        // entry points split oversized batches into per-chunk fused
-        // launches. Exercise the chunk loop with a small prime chunk so
-        // many ragged boundaries occur, and check positional outcomes
-        // and the occupancy ledger stay exact.
+        // Regression for the u32 permutation-index overflow: `submit`
+        // splits oversized batches into per-chunk fused launches whose
+        // outcomes concatenate back in input order. Exercise the chunk
+        // loop with small primes so many ragged boundaries occur, and
+        // check positional outcomes and the occupancy ledger stay exact.
         let device = Device::with_workers(4);
         let s = ShardedFilter::<Fp16>::with_capacity(30_000, 4).unwrap();
         let ks = keys(10_000, 21);
 
-        let mut ins = vec![false; ks.len()];
-        let ok = s.batch_chunked(&device, &ks, Some(ins.as_mut_slice()), 997, LedgerOp::Add, |f, k| {
-            f.insert_probed_raw(k, &mut NoProbe).is_ok()
-        });
+        let (ok, ins) = s
+            .submit_with(&device, LedgerOp::Add, Arc::new(op_fn::<Fp16>(OpKind::Insert)), &ks, 997)
+            .wait();
         assert_eq!(ok, 10_000);
+        assert_eq!(ins.len(), 10_000);
         assert!(ins.iter().all(|&b| b));
         assert_eq!(s.len(), 10_000);
 
-        let mut got = vec![false; ks.len()];
-        let hits = s.batch_chunked(&device, &ks, Some(got.as_mut_slice()), 1_001, LedgerOp::None, |f, k| {
-            f.contains(k)
-        });
+        let query_op: OpFn<Fp16> = Arc::new(op_fn::<Fp16>(OpKind::Query));
+        let (hits, got) = s.submit_with(&device, LedgerOp::None, query_op, &ks, 1_001).wait();
         assert_eq!(hits, 10_000);
         for (i, &k) in ks.iter().enumerate() {
             assert_eq!(got[i], s.contains(k), "positional mismatch at {i}");
         }
 
-        let removed = s.batch_chunked(&device, &ks, None, 503, LedgerOp::Sub, |f, k| {
-            f.remove_probed_raw(k, &mut NoProbe)
-        });
+        let (removed, _) = s
+            .submit_with(&device, LedgerOp::Sub, Arc::new(op_fn::<Fp16>(OpKind::Delete)), &ks, 503)
+            .wait();
         assert_eq!(removed, 10_000);
         assert_eq!(s.len(), 0);
     }
@@ -998,7 +771,7 @@ mod tests {
         let s = ShardedFilter::<Fp16>::with_capacity(40_000, 4).unwrap();
         let ks = keys(20_000, 31);
 
-        let tok = s.insert_batch_map_async(&device, &ks);
+        let tok = s.submit(&device, OpKind::Insert, &ks);
         let (ok, ins) = tok.wait();
         assert_eq!(ok, 20_000);
         assert_eq!(ins.len(), 20_000);
@@ -1008,8 +781,8 @@ mod tests {
 
         // Two queries in flight at once, waited out of order.
         let absent = keys(5_000, 4321);
-        let t_pos = s.contains_batch_map_async(&device, &ks);
-        let t_neg = s.contains_batch_map_async(&device, &absent);
+        let t_pos = s.submit(&device, OpKind::Query, &ks);
+        let t_neg = s.submit(&device, OpKind::Query, &absent);
         let (neg_hits, neg) = t_neg.wait();
         let (pos_hits, pos) = t_pos.wait();
         assert_eq!(pos_hits, 20_000);
@@ -1019,18 +792,18 @@ mod tests {
             assert_eq!(neg[i], s.contains(k), "positional mismatch at {i}");
         }
 
-        // Dropping a remove token without waiting must still apply the
-        // ledger once the kernel retires.
-        let tok = s.remove_batch_map_async(&device, &ks);
+        // Dropping a delete ticket without waiting must still apply the
+        // ledger once the kernels retire.
+        let tok = s.submit(&device, OpKind::Delete, &ks);
         drop(tok);
         assert_eq!(s.len(), 0);
     }
 
     #[test]
-    fn async_empty_batch() {
+    fn empty_batch_is_a_noop_ticket() {
         let device = Device::with_workers(2);
         let s = ShardedFilter::<Fp16>::with_capacity(1_000, 2).unwrap();
-        let tok = s.insert_batch_map_async(&device, &[]);
+        let tok = s.submit(&device, OpKind::Insert, &[]);
         assert!(tok.is_done());
         let (ok, out) = tok.wait();
         assert_eq!(ok, 0);
@@ -1040,24 +813,23 @@ mod tests {
 
     #[test]
     fn topo_roundtrip_positional_across_pools() {
-        use crate::device::DeviceTopology;
         let topo = DeviceTopology::with_pools(2, 4);
         let s = ShardedFilter::<Fp16>::with_capacity(60_000, 4).unwrap();
         let present = keys(15_000, 91);
-        let (ok, ins) = s.insert_batch_map_async_topo(&topo, &present).wait();
+        let (ok, ins) = s.submit(&topo, OpKind::Insert, &present).wait();
         assert_eq!(ok, 15_000);
         assert!(ins.iter().all(|&b| b));
         assert_eq!(s.len(), 15_000, "ledger applied once across pools");
 
         // Interleaved present/absent probe: positional answers must
-        // survive the per-pool split and merge.
+        // survive the per-stream split and merge.
         let absent = keys(15_000, 9_100);
         let mut probe = Vec::with_capacity(30_000);
         for i in 0..15_000 {
             probe.push(present[i]);
             probe.push(absent[i]);
         }
-        let (hits, got) = s.contains_batch_map_async_topo(&topo, &probe).wait();
+        let (hits, got) = s.submit(&topo, OpKind::Query, &probe).wait();
         assert_eq!(hits, got.iter().filter(|&&b| b).count() as u64);
         for (i, &k) in probe.iter().enumerate() {
             assert_eq!(got[i], s.contains(k), "positional mismatch at {i}");
@@ -1068,49 +840,48 @@ mod tests {
         assert!(topo.pool(0).launches() >= 2);
         assert!(topo.pool(1).launches() >= 2);
 
-        let (removed, del) = s.remove_batch_map_async_topo(&topo, &present).wait();
+        let (removed, del) = s.submit(&topo, OpKind::Delete, &present).wait();
         assert_eq!(removed, 15_000);
         assert!(del.iter().all(|&b| b));
         assert_eq!(s.len(), 0);
     }
 
     #[test]
-    fn topo_tokens_waited_out_of_order_across_pools() {
-        use crate::device::DeviceTopology;
+    fn topo_tickets_waited_out_of_order_across_pools() {
         let topo = DeviceTopology::with_pools(4, 4);
         let s = ShardedFilter::<Fp16>::with_capacity(80_000, 8).unwrap();
         let a = keys(20_000, 93);
         let b = keys(20_000, 94);
-        let ta = s.insert_batch_map_async_topo(&topo, &a);
-        let tb = s.insert_batch_map_async_topo(&topo, &b);
-        // Out-of-order waits; FIFO per pool keeps each shard's batches in
-        // submission order regardless.
+        let ta = s.submit(&topo, OpKind::Insert, &a);
+        let tb = s.submit(&topo, OpKind::Insert, &b);
+        // Out-of-order waits; FIFO per stream keeps each shard's batches
+        // in submission order regardless.
         let (ok_b, _) = tb.wait();
         let (ok_a, _) = ta.wait();
         assert_eq!(ok_a + ok_b, 40_000);
         assert_eq!(s.len(), 40_000);
-        // Dropping a remove token without waiting still applies the
+        // Dropping a delete ticket without waiting still applies the
         // ledger on every pool.
-        drop(s.remove_batch_map_async_topo(&topo, &a));
-        drop(s.remove_batch_map_async_topo(&topo, &b));
+        drop(s.submit(&topo, OpKind::Delete, &a));
+        drop(s.submit(&topo, OpKind::Delete, &b));
         assert_eq!(s.len(), 0);
     }
 
     #[test]
-    fn topo_empty_batch_and_single_shard_delegation() {
-        use crate::device::DeviceTopology;
+    fn topo_empty_batch_and_single_shard_fast_path() {
         let topo = DeviceTopology::with_pools(4, 4);
         let s = ShardedFilter::<Fp16>::with_capacity(2_000, 2).unwrap();
-        let tok = s.insert_batch_map_async_topo(&topo, &[]);
+        let tok = s.submit(&topo, OpKind::Insert, &[]);
         assert!(tok.is_done());
         let (ok, out) = tok.wait();
         assert_eq!(ok, 0);
         assert!(out.is_empty());
 
-        // A single-shard filter delegates to its owning pool.
+        // A single-shard filter runs on its owning pool without any
+        // scatter/permutation.
         let s1 = ShardedFilter::<Fp16>::with_capacity(2_000, 1).unwrap();
         let ks = keys(1_000, 95);
-        let (ok, ins) = s1.insert_batch_map_async_topo(&topo, &ks).wait();
+        let (ok, ins) = s1.submit(&topo, OpKind::Insert, &ks).wait();
         assert_eq!(ok, 1_000);
         assert!(ins.iter().all(|&b| b));
         assert_eq!(s1.len(), 1_000);
@@ -1118,7 +889,7 @@ mod tests {
 
     #[test]
     fn topo_explicit_pinning_is_honoured() {
-        use crate::device::{DeviceTopology, Pinning, TopologyConfig};
+        use crate::device::{Pinning, TopologyConfig};
         // Pin every shard to pool 1; pool 0 must stay untouched.
         let topo = DeviceTopology::new(TopologyConfig {
             pools: 2,
@@ -1128,7 +899,7 @@ mod tests {
         });
         let s = ShardedFilter::<Fp16>::with_capacity(20_000, 4).unwrap();
         let ks = keys(8_000, 96);
-        let (ok, _) = s.insert_batch_map_async_topo(&topo, &ks).wait();
+        let (ok, _) = s.submit(&topo, OpKind::Insert, &ks).wait();
         assert_eq!(ok, 8_000);
         assert_eq!(s.len(), 8_000);
         assert_eq!(topo.pool(0).launches(), 0, "pool 0 should be idle");
@@ -1136,12 +907,11 @@ mod tests {
     }
 
     #[test]
-    fn topology_token_panicked_pool_never_aborts() {
-        // Satellite regression (PR 2 panic-at-wait battery, two pools):
-        // a kernel fault on one pool must re-raise at wait() after both
-        // pools drained, and a token dropped without wait — including
-        // during another unwind — must never abort the process.
-        use crate::device::DeviceTopology;
+    fn ticket_with_panicked_stream_never_aborts() {
+        // Satellite regression (PR 2/3 panic-at-wait battery): a kernel
+        // fault on one stream must re-raise at wait() after every stream
+        // drained, and a ticket dropped without wait — including during
+        // another unwind — must never abort the process.
         use std::collections::HashSet;
         let topo = DeviceTopology::with_pools(2, 4);
         let s = ShardedFilter::<Fp16>::with_capacity(60_000, 4).unwrap();
@@ -1153,34 +923,36 @@ mod tests {
             .filter(|&k| s.route(k) % 2 == 1)
             .collect();
         assert!(!poisoned.is_empty());
-        let poison_op = |set: HashSet<u64>| {
-            move |_f: &CuckooFilter<Fp16>, k: u64| {
+        let poison_op = |set: HashSet<u64>| -> OpFn<Fp16> {
+            Arc::new(move |_f: &CuckooFilter<Fp16>, k: u64| {
                 if set.contains(&k) {
-                    panic!("injected pool fault");
+                    panic!("injected stream fault");
                 }
                 true
-            }
+            })
         };
 
-        // 1) wait() re-raises the pool's fault after draining all pools.
-        let tok = s.batch_map_topo_async(&topo, &ks, LedgerOp::None, poison_op(poisoned.clone()));
+        // 1) wait() re-raises the stream's fault after the full drain.
+        let tok =
+            s.submit_with(&topo, LedgerOp::None, poison_op(poisoned.clone()), &ks, FUSED_CHUNK);
         let boom = catch_unwind(AssertUnwindSafe(|| tok.wait()));
-        assert!(boom.is_err(), "pool fault must surface at wait()");
+        assert!(boom.is_err(), "stream fault must surface at wait()");
 
         // 2) drop-without-wait swallows the fault (no panic, no abort).
-        let tok = s.batch_map_topo_async(&topo, &ks, LedgerOp::None, poison_op(poisoned.clone()));
+        let tok =
+            s.submit_with(&topo, LedgerOp::None, poison_op(poisoned.clone()), &ks, FUSED_CHUNK);
         drop(tok);
 
         // 3) drop during an unwind must not double-panic into an abort.
         let boom = catch_unwind(AssertUnwindSafe(|| {
             let _tok =
-                s.batch_map_topo_async(&topo, &ks, LedgerOp::None, poison_op(poisoned.clone()));
+                s.submit_with(&topo, LedgerOp::None, poison_op(poisoned.clone()), &ks, FUSED_CHUNK);
             panic!("caller unwind");
         }));
         assert!(boom.is_err());
 
         // Both pools stay serviceable and the ledger is exact afterwards.
-        let (ok, ins) = s.insert_batch_map_async_topo(&topo, &ks).wait();
+        let (ok, ins) = s.submit(&topo, OpKind::Insert, &ks).wait();
         assert_eq!(ok, 20_000);
         assert!(ins.iter().all(|&b| b));
         assert_eq!(s.len(), 20_000);

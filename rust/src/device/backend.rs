@@ -1,0 +1,238 @@
+//! The unified launch surface: one stream-ordered submission trait over
+//! every device shape.
+//!
+//! A [`Backend`] is *anything that can run kernels*: a single [`Device`]
+//! (one FIFO stream, one pool of SMs), a [`DeviceTopology`] (N
+//! independent streams with a stable shard → stream assignment), and —
+//! the reason the trait exists — whatever comes next (a real GPU behind
+//! PJRT, a remote device). Execution-layer code (`ShardedFilter`,
+//! `Engine`, the benches) takes `&B: Backend` or `&dyn Backend` and
+//! never names a concrete device type, so a new backend is one `impl`,
+//! not a fourth copy of every batch path.
+//!
+//! ## The contract
+//!
+//! * [`Backend::streams`] — how many independent FIFO submission streams
+//!   the backend exposes. Kernels submitted to the *same* stream run in
+//!   submission order; kernels on *different* streams may overlap.
+//! * [`Backend::stream_for_shard`] — the stable stream that owns a shard.
+//!   All batches touching one shard serialise on one stream's queue,
+//!   which is what makes per-shard mutation order equal submission order
+//!   (the cross-stream analogue of single-stream FIFO).
+//! * [`Backend::submit`] — the stream-ordered async launch: enqueue an
+//!   owned kernel, get a [`LaunchToken`] back immediately. Token
+//!   lifecycle is uniform across backends (wait out of order, drop
+//!   without wait, panic re-raised at `wait()` — see the [`super`]
+//!   module docs). Synchronous execution is not a separate surface:
+//!   sync = `submit` + `wait`.
+//! * [`Backend::run`] — the borrowed-kernel barrier launch for callers
+//!   whose closures cannot be `'static` (the baselines' trait-object
+//!   batches). Equivalent to submit + wait on one stream.
+//! * [`Backend::stream_stats`] — per-stream observability (workers,
+//!   lifetime launches, live queue depth); the aggregate accessors
+//!   default to summing it.
+
+use super::{Device, DeviceTopology, LaunchToken, WarpCtx};
+use std::sync::Arc;
+
+/// An owned, type-erased kernel: invoked once per warp with a
+/// [`WarpCtx`], shared by every worker of the launch.
+pub type Kernel = Arc<dyn Fn(&mut WarpCtx) + Send + Sync>;
+
+/// Point-in-time stats of one submission stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamStat {
+    pub stream: usize,
+    /// Persistent worker threads serving this stream.
+    pub workers: usize,
+    /// Lifetime count of non-empty launches (inline fast paths included).
+    pub launches: u64,
+    /// Jobs submitted but not yet retired.
+    pub queue_depth: u64,
+}
+
+/// The backend-agnostic launch surface (see the module docs).
+pub trait Backend: Send + Sync {
+    /// Number of independent FIFO submission streams (≥ 1).
+    fn streams(&self) -> usize;
+
+    /// The stream that owns shard `shard`; stable for the backend's
+    /// lifetime.
+    fn stream_for_shard(&self, shard: usize) -> usize;
+
+    /// Stream-ordered launch of `kernel` over `n` items on `stream`;
+    /// returns immediately with the job's completion token.
+    fn submit(&self, stream: usize, n: usize, kernel: Kernel) -> LaunchToken;
+
+    /// Synchronous barrier launch of a borrowed kernel on `stream`;
+    /// returns the hierarchical success count. For owned kernels prefer
+    /// [`Backend::submit`] + `wait`.
+    fn run(&self, stream: usize, n: usize, kernel: &(dyn Fn(&mut WarpCtx) + Sync)) -> u64;
+
+    /// Per-stream worker/launch/queue counters, in stream order.
+    fn stream_stats(&self) -> Vec<StreamStat>;
+
+    /// Total persistent workers across all streams.
+    fn workers(&self) -> usize {
+        self.stream_stats().iter().map(|s| s.workers).sum()
+    }
+
+    /// Lifetime non-empty launches across all streams.
+    fn launches(&self) -> u64 {
+        self.stream_stats().iter().map(|s| s.launches).sum()
+    }
+
+    /// Live submitted-but-unretired jobs across all streams.
+    fn queue_depth(&self) -> u64 {
+        self.stream_stats().iter().map(|s| s.queue_depth).sum()
+    }
+}
+
+/// One device = one stream.
+impl Backend for Device {
+    fn streams(&self) -> usize {
+        1
+    }
+
+    fn stream_for_shard(&self, _shard: usize) -> usize {
+        0
+    }
+
+    fn submit(&self, stream: usize, n: usize, kernel: Kernel) -> LaunchToken {
+        // Same out-of-range contract as a topology (which would panic on
+        // pool indexing): a wrong stream id must not silently "work"
+        // here and abort only on multi-pool deployments.
+        debug_assert!(stream == 0, "stream {stream} out of range for a single-stream Device");
+        self.launch_async(n, move |ctx| (*kernel)(ctx))
+    }
+
+    fn run(&self, stream: usize, n: usize, kernel: &(dyn Fn(&mut WarpCtx) + Sync)) -> u64 {
+        debug_assert!(stream == 0, "stream {stream} out of range for a single-stream Device");
+        self.launch(n, kernel)
+    }
+
+    fn stream_stats(&self) -> Vec<StreamStat> {
+        vec![StreamStat {
+            stream: 0,
+            workers: self.workers(),
+            launches: self.launches(),
+            queue_depth: self.queue_depth(),
+        }]
+    }
+}
+
+/// One stream per pool; shard assignment is the topology's pinning.
+impl Backend for DeviceTopology {
+    fn streams(&self) -> usize {
+        self.num_pools()
+    }
+
+    fn stream_for_shard(&self, shard: usize) -> usize {
+        self.pool_for_shard(shard)
+    }
+
+    fn submit(&self, stream: usize, n: usize, kernel: Kernel) -> LaunchToken {
+        self.pool(stream).launch_async(n, move |ctx| (*kernel)(ctx))
+    }
+
+    fn run(&self, stream: usize, n: usize, kernel: &(dyn Fn(&mut WarpCtx) + Sync)) -> u64 {
+        self.pool(stream).launch(n, kernel)
+    }
+
+    fn stream_stats(&self) -> Vec<StreamStat> {
+        self.pools()
+            .iter()
+            .enumerate()
+            .map(|(i, d)| StreamStat {
+                stream: i,
+                workers: d.workers(),
+                launches: d.launches(),
+                queue_depth: d.queue_depth(),
+            })
+            .collect()
+    }
+}
+
+/// Build the backend for a `pools`/`total_workers` knob pair: one plain
+/// [`Device`] for a single pool, a [`DeviceTopology`] re-partitioning
+/// the same worker budget otherwise. The two are observably equivalent
+/// at `pools = 1` (enforced by the backend-equivalence battery in
+/// `tests/stress_topology.rs`); callers hold a `Box<dyn Backend>` and
+/// never learn which they got.
+pub fn build_backend(pools: usize, total_workers: usize) -> Box<dyn Backend> {
+    if pools <= 1 {
+        Box::new(Device::with_workers(total_workers))
+    } else {
+        Box::new(DeviceTopology::with_pools(pools, total_workers))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn count_evens(backend: &dyn Backend, stream: usize, n: usize) -> u64 {
+        backend
+            .submit(
+                stream,
+                n,
+                Arc::new(|ctx: &mut WarpCtx| {
+                    for i in ctx.range.clone() {
+                        ctx.tally(i % 2 == 0);
+                    }
+                }),
+            )
+            .wait()
+    }
+
+    #[test]
+    fn device_and_topology_share_the_submit_surface() {
+        let backends: Vec<Box<dyn Backend>> = vec![
+            Box::new(Device::with_workers(2)),
+            Box::new(DeviceTopology::with_pools(2, 2)),
+        ];
+        for b in &backends {
+            for stream in 0..b.streams() {
+                assert_eq!(count_evens(b.as_ref(), stream, 10_000), 5_000);
+            }
+            assert_eq!(b.workers(), 2, "budget re-partitioned, never multiplied");
+            assert!(b.launches() >= b.streams() as u64);
+            let stats = b.stream_stats();
+            assert_eq!(stats.len(), b.streams());
+            assert_eq!(b.queue_depth(), 0, "all launches drained");
+        }
+    }
+
+    #[test]
+    fn run_executes_borrowed_kernels_synchronously() {
+        let topo = DeviceTopology::with_pools(2, 4);
+        let hits = AtomicU64::new(0);
+        let n = 8_192;
+        let ok = Backend::run(&topo, 1, n, &|ctx: &mut WarpCtx| {
+            for _ in ctx.range.clone() {
+                hits.fetch_add(1, Ordering::Relaxed);
+                ctx.tally(true);
+            }
+        });
+        // Barrier semantics: every side effect visible at return.
+        assert_eq!(ok, n as u64);
+        assert_eq!(hits.load(Ordering::Relaxed), n as u64);
+    }
+
+    #[test]
+    fn build_backend_honours_the_pools_knob() {
+        assert_eq!(build_backend(1, 4).streams(), 1);
+        let b = build_backend(3, 6);
+        assert_eq!(b.streams(), 3);
+        assert_eq!(b.workers(), 6);
+        // Shard → stream assignment is stable and covers every stream.
+        let mut seen = vec![false; b.streams()];
+        for s in 0..16 {
+            let st = b.stream_for_shard(s);
+            assert_eq!(st, b.stream_for_shard(s));
+            seen[st] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -62,10 +62,10 @@
 //! caller's stack closure to 'static worker threads. The submitter
 //! parks on that job's completion before returning, which retires the
 //! borrow — the same contract scoped threads enforce structurally; the
-//! lifetime erasure is confined to [`Device::run_job`]. Async launches
+//! lifetime erasure is confined to `Device::run_job`. Async launches
 //! own their task state (`Arc`), so no lifetime erasure is involved.
 //!
-//! ## One device vs a topology of devices
+//! ## One device vs a topology of devices vs *any* backend
 //!
 //! A single `Device` is one GPU: one FIFO stream, one pool of SMs —
 //! every launch submitted to it serialises behind the queue. The level
@@ -76,10 +76,20 @@
 //! lives here: [`Device::launches`] counts every non-empty launch
 //! (inline fast paths included, unlike [`Device::pool_jobs`]) and
 //! [`Device::queue_depth`] reports the submitted-but-unretired job
-//! count — the per-pool counters `coordinator::metrics` reports.
+//! count — the per-stream counters `coordinator::metrics` reports.
+//!
+//! Both shapes sit behind **one** execution-layer surface, the
+//! [`Backend`] trait (see [`backend`]): `streams()` submission streams,
+//! `stream_for_shard()` placement, stream-ordered `submit()` returning
+//! the same [`LaunchToken`] either way, and `stream_stats()`
+//! introspection. `ShardedFilter`, `Engine` and the benches are written
+//! against `&dyn Backend` / `&B: Backend` — a future real-GPU or PJRT
+//! backend slots in as one more `impl`, not another set of batch paths.
 
+pub mod backend;
 pub mod topology;
 
+pub use backend::{build_backend, Backend, Kernel, StreamStat};
 pub use topology::{DeviceTopology, Pinning, TopologyConfig};
 
 use std::collections::VecDeque;
@@ -462,7 +472,9 @@ impl Device {
 
     /// Enqueue a job (FIFO). If the pool is idle the job is published to
     /// the workers immediately; otherwise it waits behind `current`.
-    fn submit(&self, task: TaskKind, completion: Arc<Completion>) {
+    /// (Internal queue step — the public submission surfaces are
+    /// [`Self::launch`], [`Self::launch_async`] and [`Backend::submit`].)
+    fn enqueue(&self, task: TaskKind, completion: Arc<Completion>) {
         let shared = &*self.pool.shared;
         let job = Job { task, completion };
         let mut st = shared.state.lock().unwrap();
@@ -486,7 +498,7 @@ impl Device {
         // retires the borrow before this frame returns (see module docs).
         let task: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(task) };
         let completion = Completion::new();
-        self.submit(TaskKind::Borrowed(TaskRef(task as *const _)), completion.clone());
+        self.enqueue(TaskKind::Borrowed(TaskRef(task as *const _)), completion.clone());
         if completion.wait() {
             panic!("device worker panicked");
         }
@@ -583,7 +595,7 @@ impl Device {
                 run_block(&kernel, block, bs, ws, n, &completion.successes);
             })
         };
-        self.submit(TaskKind::Owned(task), completion.clone());
+        self.enqueue(TaskKind::Owned(task), completion.clone());
         LaunchToken { completion }
     }
 

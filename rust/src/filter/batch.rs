@@ -1,180 +1,131 @@
 //! Batched (device-wide) filter operations — the host-callable "kernels".
 //!
 //! Each CUDA thread in the paper handles one item; here each logical
-//! thread of the [`crate::device::Device`] does. Success counts are
+//! thread of a [`crate::device::Backend`] does. Success counts are
 //! reduced hierarchically (warp → block → one global atomic), which is
 //! how the filter's occupancy counter stays exact without a per-item
 //! atomic (§4.3).
+//!
+//! The paper's core claim is that **one** lock-free kernel design serves
+//! all three dynamic operations; the API mirrors that: there is exactly
+//! one batch entry point per surface, dispatched on [`OpKind`]:
+//!
+//! * [`CuckooFilter::execute_batch`] — run one op over a batch on any
+//!   backend, optionally writing per-key outcomes in input order, with
+//!   the occupancy ledger applied for mutations;
+//! * [`CuckooFilter::execute_batch_traced`] — the same dispatch with
+//!   memory-access tracing (gpusim and the Figure 5–7 experiments; one
+//!   probe per worker shard, merged at the end — not the hot path).
+//!
+//! The per-op `{insert,contains,remove}_batch*` method family this
+//! replaces is gone; see ROADMAP's migration table.
 
 use super::core::CuckooFilter;
-use super::probe::{NoProbe, TraceProbe};
+use super::probe::{NoProbe, Probe, TraceProbe};
 use super::swar::Layout;
-use crate::device::{Device, SendMutPtr};
+use crate::device::{Backend, Device, SendMutPtr, WarpCtx};
+use crate::op::OpKind;
 
-/// Outcome of a batched insert.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct BatchInsertResult {
-    pub inserted: u64,
-    pub failed: u64,
+/// Resolve an [`OpKind`] to the filter's per-key primitive once per
+/// batch (a fn pointer, so the per-item dispatch is one indirect call,
+/// not a per-item match). Shared by the single-filter and sharded
+/// submission surfaces.
+pub(crate) fn op_fn<L: Layout>(op: OpKind) -> fn(&CuckooFilter<L>, u64) -> bool {
+    match op {
+        OpKind::Insert => |f, k| f.insert_probed_raw(k, &mut NoProbe).is_ok(),
+        OpKind::Query => |f, k| f.contains(k),
+        OpKind::Delete => |f, k| f.remove_probed_raw(k, &mut NoProbe),
+    }
 }
 
 impl<L: Layout> CuckooFilter<L> {
-    /// Insert a batch; returns success/failure tallies. The occupancy
-    /// counter is updated once per block, not per item.
-    pub fn insert_batch(&self, device: &Device, keys: &[u64]) -> BatchInsertResult {
-        let inserted = device.launch(keys.len(), |ctx| {
-            let mut probe = NoProbe;
-            for i in ctx.range.clone() {
-                ctx.tally(self.insert_probed_raw(keys[i], &mut probe).is_ok());
-            }
-        });
-        self.add_count(inserted);
-        BatchInsertResult {
-            inserted,
-            failed: keys.len() as u64 - inserted,
+    /// Apply a completed batch's success tally to the occupancy ledger
+    /// (queries owe nothing).
+    pub(crate) fn apply_op_ledger(&self, op: OpKind, successes: u64) {
+        match op {
+            OpKind::Insert => self.add_count(successes),
+            OpKind::Delete => self.sub_count(successes),
+            OpKind::Query => {}
         }
     }
 
-    /// Query a batch into a caller-provided result buffer.
-    pub fn contains_batch(&self, device: &Device, keys: &[u64], out: &mut [bool]) -> u64 {
-        assert_eq!(keys.len(), out.len());
-        // SAFETY-free parallel writes: give each warp a disjoint &mut view
-        // via raw parts — ranges from the device are disjoint by
-        // construction (verified in device tests).
-        let out_ptr = SendMutPtr(out.as_mut_ptr());
-        device.launch(keys.len(), |ctx| {
-            let out_ptr = &out_ptr;
-            for i in ctx.range.clone() {
-                let hit = self.contains(keys[i]);
-                unsafe { *out_ptr.0.add(i) = hit };
-                ctx.tally(hit);
+    /// Execute one batched operation on `backend` (stream 0) and wait
+    /// for it. Returns the hierarchical success count — insert →
+    /// accepted, query → present, delete → removed — and, when `out` is
+    /// given, writes each key's outcome to its input position (disjoint
+    /// per-slot writes, the `SendMutPtr` contract). The occupancy
+    /// counter is updated once per batch for mutations.
+    pub fn execute_batch<B: Backend + ?Sized>(
+        &self,
+        backend: &B,
+        op: OpKind,
+        keys: &[u64],
+        out: Option<&mut [bool]>,
+    ) -> u64 {
+        let call = op_fn::<L>(op);
+        let successes = match out {
+            Some(out) => {
+                assert_eq!(keys.len(), out.len());
+                let out_ptr = SendMutPtr(out.as_mut_ptr());
+                backend.run(0, keys.len(), &|ctx: &mut WarpCtx| {
+                    let out_ptr = &out_ptr;
+                    for i in ctx.range.clone() {
+                        let ok = call(self, keys[i]);
+                        // SAFETY: warp ranges are disjoint, so slot `i`
+                        // has exactly one writer (SendMutPtr contract).
+                        unsafe { *out_ptr.0.add(i) = ok };
+                        ctx.tally(ok);
+                    }
+                })
             }
-        })
+            None => backend.run(0, keys.len(), &|ctx: &mut WarpCtx| {
+                for i in ctx.range.clone() {
+                    ctx.tally(call(self, keys[i]));
+                }
+            }),
+        };
+        self.apply_op_ledger(op, successes);
+        successes
     }
 
-    /// Count-only batch query (positive hits), avoiding the result buffer.
-    pub fn count_contains_batch(&self, device: &Device, keys: &[u64]) -> u64 {
-        device.launch(keys.len(), |ctx| {
-            for i in ctx.range.clone() {
-                ctx.tally(self.contains(keys[i]));
-            }
-        })
-    }
-
-    /// Insert a batch, writing each key's outcome into `out` (input
-    /// order). Positional sibling of [`Self::insert_batch`]; the serving
-    /// layer needs per-key results, not just the tally.
-    pub fn insert_batch_map(&self, device: &Device, keys: &[u64], out: &mut [bool]) -> u64 {
-        assert_eq!(keys.len(), out.len());
-        let out_ptr = SendMutPtr(out.as_mut_ptr());
-        let inserted = device.launch(keys.len(), |ctx| {
-            let out_ptr = &out_ptr;
-            for i in ctx.range.clone() {
-                let ok = self.insert_probed_raw(keys[i], &mut NoProbe).is_ok();
-                unsafe { *out_ptr.0.add(i) = ok };
-                ctx.tally(ok);
-            }
-        });
-        self.add_count(inserted);
-        inserted
-    }
-
-    /// Delete a batch, writing each key's outcome into `out` (input
-    /// order). Positional sibling of [`Self::remove_batch`].
-    pub fn remove_batch_map(&self, device: &Device, keys: &[u64], out: &mut [bool]) -> u64 {
-        assert_eq!(keys.len(), out.len());
-        let out_ptr = SendMutPtr(out.as_mut_ptr());
-        let removed = device.launch(keys.len(), |ctx| {
-            let out_ptr = &out_ptr;
-            for i in ctx.range.clone() {
-                let ok = self.remove_probed_raw(keys[i], &mut NoProbe);
-                unsafe { *out_ptr.0.add(i) = ok };
-                ctx.tally(ok);
-            }
-        });
-        self.sub_count(removed);
-        removed
-    }
-
-    /// Delete a batch; returns the number actually removed.
-    pub fn remove_batch(&self, device: &Device, keys: &[u64]) -> u64 {
-        let removed = device.launch(keys.len(), |ctx| {
-            let mut probe = NoProbe;
-            for i in ctx.range.clone() {
-                ctx.tally(self.remove_probed_raw(keys[i], &mut probe));
-            }
-        });
-        self.sub_count(removed);
-        removed
-    }
-
-    /// Insert a batch while tracing memory accesses and eviction chains;
-    /// one probe per worker shard, merged at the end. Slower — used by
-    /// gpusim and the Figure 5/6 experiments, not the hot path.
-    pub fn insert_batch_traced(&self, device: &Device, keys: &[u64]) -> (BatchInsertResult, TraceProbe) {
+    /// Execute one batched operation while tracing memory accesses and
+    /// eviction chains; one probe per worker shard, merged at the end.
+    /// Slower — used by gpusim and the Figure 5/6/7 experiments, not the
+    /// hot path, which is why it keeps a concrete [`Device`]: the trace
+    /// shard count is the device's worker count.
+    pub fn execute_batch_traced(
+        &self,
+        device: &Device,
+        op: OpKind,
+        keys: &[u64],
+    ) -> (u64, TraceProbe) {
         use std::sync::Mutex;
+        fn call_probed<L: Layout, P: Probe>(
+            f: &CuckooFilter<L>,
+            op: OpKind,
+            key: u64,
+            probe: &mut P,
+        ) -> bool {
+            match op {
+                OpKind::Insert => f.insert_probed_raw(key, probe).is_ok(),
+                OpKind::Query => f.contains_probed(key, probe),
+                OpKind::Delete => f.remove_probed_raw(key, probe),
+            }
+        }
         let merged = Mutex::new(TraceProbe::new());
-        let inserted = std::sync::atomic::AtomicU64::new(0);
+        let successes = std::sync::atomic::AtomicU64::new(0);
         device.launch_sharded(keys.len(), |_w, range| {
             let mut probe = TraceProbe::new();
             let mut ok = 0u64;
             for i in range {
-                if self.insert_probed_raw(keys[i], &mut probe).is_ok() {
-                    ok += 1;
-                }
+                ok += call_probed(self, op, keys[i], &mut probe) as u64;
             }
-            inserted.fetch_add(ok, std::sync::atomic::Ordering::Relaxed);
+            successes.fetch_add(ok, std::sync::atomic::Ordering::Relaxed);
             merged.lock().unwrap().merge(&probe);
         });
-        let inserted = inserted.into_inner();
-        self.add_count(inserted);
-        (
-            BatchInsertResult {
-                inserted,
-                failed: keys.len() as u64 - inserted,
-            },
-            merged.into_inner().unwrap(),
-        )
-    }
-
-    /// Traced batch query (for gpusim access statistics).
-    pub fn contains_batch_traced(&self, device: &Device, keys: &[u64]) -> (u64, TraceProbe) {
-        use std::sync::Mutex;
-        let merged = Mutex::new(TraceProbe::new());
-        let hits = std::sync::atomic::AtomicU64::new(0);
-        device.launch_sharded(keys.len(), |_w, range| {
-            let mut probe = TraceProbe::new();
-            let mut h = 0u64;
-            for i in range {
-                if self.contains_probed(keys[i], &mut probe) {
-                    h += 1;
-                }
-            }
-            hits.fetch_add(h, std::sync::atomic::Ordering::Relaxed);
-            merged.lock().unwrap().merge(&probe);
-        });
-        (hits.into_inner(), merged.into_inner().unwrap())
-    }
-
-    /// Traced batch delete.
-    pub fn remove_batch_traced(&self, device: &Device, keys: &[u64]) -> (u64, TraceProbe) {
-        use std::sync::Mutex;
-        let merged = Mutex::new(TraceProbe::new());
-        let removed = std::sync::atomic::AtomicU64::new(0);
-        device.launch_sharded(keys.len(), |_w, range| {
-            let mut probe = TraceProbe::new();
-            let mut r = 0u64;
-            for i in range {
-                if self.remove_probed_raw(keys[i], &mut probe) {
-                    r += 1;
-                }
-            }
-            removed.fetch_add(r, std::sync::atomic::Ordering::Relaxed);
-            merged.lock().unwrap().merge(&probe);
-        });
-        let removed = removed.into_inner();
-        self.sub_count(removed);
-        (removed, merged.into_inner().unwrap())
+        let successes = successes.into_inner();
+        self.apply_op_ledger(op, successes);
+        (successes, merged.into_inner().unwrap())
     }
 }
 
@@ -195,29 +146,28 @@ mod tests {
         let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(50_000)).unwrap();
         let ks = keys(50_000, 21);
 
-        let r = f.insert_batch(&device, &ks);
-        assert_eq!(r.inserted, 50_000);
-        assert_eq!(r.failed, 0);
+        let inserted = f.execute_batch(&device, OpKind::Insert, &ks, None);
+        assert_eq!(inserted, 50_000);
         assert_eq!(f.len(), 50_000);
 
         let mut out = vec![false; ks.len()];
-        let hits = f.contains_batch(&device, &ks, &mut out);
+        let hits = f.execute_batch(&device, OpKind::Query, &ks, Some(&mut out));
         assert_eq!(hits, 50_000);
         assert!(out.iter().all(|&b| b));
 
-        let removed = f.remove_batch(&device, &ks);
+        let removed = f.execute_batch(&device, OpKind::Delete, &ks, None);
         assert_eq!(removed, 50_000);
         assert_eq!(f.len(), 0);
     }
 
     #[test]
-    fn positional_map_variants_match_input_order() {
+    fn positional_outcomes_match_input_order() {
         let device = Device::with_workers(4);
         let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(20_000)).unwrap();
         let ks = keys(10_000, 31);
 
         let mut ins = vec![false; ks.len()];
-        let ok = f.insert_batch_map(&device, &ks, &mut ins);
+        let ok = f.execute_batch(&device, OpKind::Insert, &ks, Some(&mut ins));
         assert_eq!(ok, 10_000);
         assert!(ins.iter().all(|&b| b));
         assert_eq!(f.len(), 10_000);
@@ -227,7 +177,7 @@ mod tests {
         let mut probe = ks[..5_000].to_vec();
         probe.extend(keys(5_000, 77));
         let mut del = vec![false; probe.len()];
-        let removed = f.remove_batch_map(&device, &probe, &mut del);
+        let removed = f.execute_batch(&device, OpKind::Delete, &probe, Some(&mut del));
         assert_eq!(removed as usize, del.iter().filter(|&&b| b).count());
         // Absent keys can false-positively delete (fp16) and thereby
         // steal a present key's fingerprint, so per-half counts are only
@@ -241,12 +191,26 @@ mod tests {
         let device = Device::with_workers(3);
         let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(10_000)).unwrap();
         let ks = keys(10_000, 22);
-        f.insert_batch(&device, &ks);
+        f.execute_batch(&device, OpKind::Insert, &ks, None);
         // Negative probes: serial and batch answers must agree.
         let probes = keys(20_000, 77);
-        let serial: u64 = probes.iter().map(|&k| f.contains(k) as u64).collect::<Vec<_>>().iter().sum();
-        let batched = f.count_contains_batch(&device, &probes);
+        let serial: u64 = probes.iter().map(|&k| f.contains(k) as u64).sum();
+        let batched = f.execute_batch(&device, OpKind::Query, &probes, None);
         assert_eq!(serial, batched);
+    }
+
+    #[test]
+    fn same_entry_point_runs_on_a_topology_backend() {
+        // The single-filter surface is backend-generic: a multi-pool
+        // topology serves it through the same execute_batch call.
+        use crate::device::DeviceTopology;
+        let topo = DeviceTopology::with_pools(2, 4);
+        let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(20_000)).unwrap();
+        let ks = keys(20_000, 23);
+        assert_eq!(f.execute_batch(&topo, OpKind::Insert, &ks, None), 20_000);
+        assert_eq!(f.execute_batch(&topo, OpKind::Query, &ks, None), 20_000);
+        assert_eq!(f.execute_batch(&topo, OpKind::Delete, &ks, None), 20_000);
+        assert_eq!(f.len(), 0);
     }
 
     #[test]
@@ -254,10 +218,19 @@ mod tests {
         let device = Device::with_workers(2);
         let f = CuckooFilter::<Fp16>::new(CuckooConfig::new(1 << 8)).unwrap();
         let n = (f.config().total_slots() as f64 * 0.9) as usize;
-        let (r, probe) = f.insert_batch_traced(&device, &keys(n, 23));
-        assert_eq!(r.inserted as usize, n);
+        let (inserted, probe) = f.execute_batch_traced(&device, OpKind::Insert, &keys(n, 23));
+        assert_eq!(inserted as usize, n);
         assert_eq!(probe.eviction_samples.len(), n);
         assert!(probe.reads > 0);
+        // Traced queries and deletes flow through the same entry point
+        // and keep the ledger exact.
+        let ks = keys(n, 23);
+        let (hits, tr) = f.execute_batch_traced(&device, OpKind::Query, &ks);
+        assert_eq!(hits as usize, n);
+        assert!(tr.reads > 0);
+        let (removed, _) = f.execute_batch_traced(&device, OpKind::Delete, &ks);
+        assert_eq!(removed as usize, n);
+        assert_eq!(f.len(), 0);
     }
 
     #[test]
@@ -267,7 +240,7 @@ mod tests {
         let device = Device::with_workers(8);
         let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(100_000)).unwrap();
         let ks = keys(100_000, 24);
-        f.insert_batch(&device, &ks);
+        f.execute_batch(&device, OpKind::Insert, &ks, None);
         assert_eq!(f.len(), f.table().count_occupied::<Fp16>());
     }
 }

@@ -7,7 +7,9 @@
 //! * [`policy`] — partial-key hashing, XOR and offset/choice-bit (§2.1, §4.6.2);
 //! * [`table`] — the atomic word array (§4.2, Fig. 2);
 //! * [`core`] — Algorithms 1–3 + BFS eviction (§4.3–§4.6.1);
-//! * [`batch`] — device-wide batched operations (§4.3 "parallel insertion");
+//! * [`batch`] — the device-wide batch entry point (§4.3 "parallel
+//!   insertion"): one `execute_batch(backend, OpKind, keys, out)` for
+//!   all three ops;
 //! * [`sorted`] — the pre-sorted insertion variant (§4.6.3);
 //! * [`persist`] — save/load filter images (rebuild-free index reuse);
 //! * [`probe`] — memory-access tracing for gpusim and Figure 5.

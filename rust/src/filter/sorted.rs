@@ -8,6 +8,7 @@
 use super::core::CuckooFilter;
 use super::swar::Layout;
 use crate::device::Device;
+use crate::op::OpKind;
 
 /// LSD radix sort of `(bucket, key)` pairs by bucket index, 8 bits per
 /// pass — the CPU stand-in for CUB's `DeviceRadixSort`.
@@ -51,14 +52,13 @@ pub fn radix_sort_by_bucket(pairs: &mut Vec<(u32, u64)>) {
 
 impl<L: Layout> CuckooFilter<L> {
     /// Sorted-insertion variant: radix-sort the batch by primary bucket
-    /// index, then insert in that order. Returns the same tallies as
-    /// [`CuckooFilter::insert_batch`] plus the sort time share, so benches
-    /// can report the amortisation trade-off the paper discusses.
-    pub fn insert_batch_sorted(
-        &self,
-        device: &Device,
-        keys: &[u64],
-    ) -> (super::batch::BatchInsertResult, f64) {
+    /// index, then insert in that order. Returns the same accept tally
+    /// as `execute_batch(.., OpKind::Insert, ..)` plus the sort time
+    /// share, so benches can report the amortisation trade-off the paper
+    /// discusses. (An insert-ordering ablation, not an execution surface
+    /// — ordering is meaningless for queries and deletes, so this stays
+    /// a named variant outside the `OpKind` dispatch.)
+    pub fn insert_batch_sorted(&self, device: &Device, keys: &[u64]) -> (u64, f64) {
         let t = crate::util::Timer::new();
         let mut pairs: Vec<(u32, u64)> = keys
             .iter()
@@ -67,8 +67,8 @@ impl<L: Layout> CuckooFilter<L> {
         radix_sort_by_bucket(&mut pairs);
         let sorted_keys: Vec<u64> = pairs.into_iter().map(|(_, k)| k).collect();
         let sort_secs = t.elapsed_secs();
-        let r = self.insert_batch(device, &sorted_keys);
-        (r, sort_secs)
+        let inserted = self.execute_batch(device, OpKind::Insert, &sorted_keys, None);
+        (inserted, sort_secs)
     }
 }
 
@@ -113,14 +113,14 @@ mod tests {
     #[test]
     fn sorted_insert_equivalent_results() {
         let device = Device::with_workers(4);
-        let keys: Vec<u64> = (0..20_000u64).map(|i| mix64(i)).collect();
+        let keys: Vec<u64> = (0..20_000u64).map(mix64).collect();
 
         let plain = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(20_000)).unwrap();
-        plain.insert_batch(&device, &keys);
+        plain.execute_batch(&device, crate::op::OpKind::Insert, &keys, None);
 
         let sorted = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(20_000)).unwrap();
-        let (r, sort_secs) = sorted.insert_batch_sorted(&device, &keys);
-        assert_eq!(r.inserted, 20_000);
+        let (inserted, sort_secs) = sorted.insert_batch_sorted(&device, &keys);
+        assert_eq!(inserted, 20_000);
         assert!(sort_secs >= 0.0);
 
         // Same membership answers afterwards.

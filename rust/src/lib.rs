@@ -33,6 +33,7 @@
 //! ```
 
 pub mod util;
+pub mod op;
 pub mod filter;
 pub mod device;
 pub mod baselines;
@@ -44,3 +45,4 @@ pub mod coordinator;
 pub mod bench;
 
 pub use filter::{CuckooConfig, CuckooFilter, Fp16, Fp32, Fp8};
+pub use op::OpKind;

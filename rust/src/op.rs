@@ -1,0 +1,94 @@
+//! The shared operation vocabulary of every execution surface.
+//!
+//! One [`OpKind`] value drives the whole stack: the single-filter batch
+//! entry point ([`crate::filter::CuckooFilter::execute_batch`]), the
+//! sharded submission API ([`crate::coordinator::ShardedFilter::submit`]),
+//! the engine's request loop, the baselines' batched driver
+//! ([`crate::baselines::run_batch`]) and the server's line protocol all
+//! dispatch on this enum instead of carrying per-op method variants.
+//! Adding an execution mode therefore means adding **one** function that
+//! matches on `OpKind`, not three.
+
+/// The three dynamic filter operations the paper's kernel serves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Insert,
+    Query,
+    Delete,
+}
+
+impl OpKind {
+    /// All operations, in protocol order.
+    pub const ALL: [OpKind; 3] = [OpKind::Insert, OpKind::Query, OpKind::Delete];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Insert => "insert",
+            OpKind::Query => "query",
+            OpKind::Delete => "delete",
+        }
+    }
+
+    /// Whether the op mutates the table (drives the epoch-guard phase).
+    pub fn is_mutation(self) -> bool {
+        !matches!(self, OpKind::Query)
+    }
+
+    /// Parse a protocol token: the full name, its upper-case form, an
+    /// alias (`contains`, `remove`) or the single-letter short form
+    /// (`i`/`q`/`c`/`d`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "insert" | "INSERT" | "i" => Some(OpKind::Insert),
+            "query" | "QUERY" | "q" | "c" | "contains" => Some(OpKind::Query),
+            "delete" | "DELETE" | "d" | "remove" => Some(OpKind::Delete),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_ops() {
+        assert_eq!(OpKind::parse("insert"), Some(OpKind::Insert));
+        assert_eq!(OpKind::parse("q"), Some(OpKind::Query));
+        assert_eq!(OpKind::parse("remove"), Some(OpKind::Delete));
+        assert_eq!(OpKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn parse_single_letter_forms_cover_every_op() {
+        // `c` is the contains/query short form the server protocol
+        // accepts alongside `i`/`q`/`d`.
+        assert_eq!(OpKind::parse("c"), Some(OpKind::Query));
+        assert_eq!(OpKind::parse("i"), Some(OpKind::Insert));
+        assert_eq!(OpKind::parse("d"), Some(OpKind::Delete));
+    }
+
+    #[test]
+    fn parse_roundtrips_through_name() {
+        for op in OpKind::ALL {
+            assert_eq!(OpKind::parse(op.name()), Some(op), "{op:?}");
+            assert_eq!(
+                OpKind::parse(&op.name().to_ascii_uppercase()),
+                Some(op),
+                "{op:?} upper-case"
+            );
+            // The first letter is the accepted short form for every op
+            // except query, which also accepts `c` (contains).
+            let letter = &op.name()[..1];
+            assert_eq!(OpKind::parse(letter), Some(op), "{op:?} short form");
+        }
+        assert_eq!(OpKind::parse("contains"), OpKind::parse("c"));
+    }
+
+    #[test]
+    fn mutation_classes() {
+        assert!(OpKind::Insert.is_mutation());
+        assert!(OpKind::Delete.is_mutation());
+        assert!(!OpKind::Query.is_mutation());
+    }
+}

@@ -8,6 +8,7 @@ use cuckoo_gpu::baselines::{
 use cuckoo_gpu::device::Device;
 use cuckoo_gpu::filter::{CuckooConfig, CuckooFilter, Fp16};
 use cuckoo_gpu::workload;
+use cuckoo_gpu::OpKind;
 
 fn all_filters(capacity: usize) -> Vec<Box<dyn AmqFilter>> {
     vec![
@@ -25,13 +26,13 @@ fn amq_contract_no_false_negatives() {
     let device = Device::with_workers(4);
     let keys = workload::distinct_insert_keys(20_000, 1);
     for f in all_filters(20_000) {
-        let inserted = common::insert_batch(f.as_ref(), &device, &keys);
+        let inserted = common::run_batch(f.as_ref(), &device, OpKind::Insert, &keys);
         assert!(
             inserted as f64 >= keys.len() as f64 * 0.999,
             "{}: inserted only {inserted}",
             f.name()
         );
-        let hits = common::contains_batch(f.as_ref(), &device, &keys);
+        let hits = common::run_batch(f.as_ref(), &device, OpKind::Query, &keys);
         assert!(
             hits >= inserted,
             "{}: {hits} hits < {inserted} inserted (false negative)",
@@ -45,19 +46,19 @@ fn amq_contract_delete_where_supported() {
     let device = Device::with_workers(4);
     let keys = workload::distinct_insert_keys(10_000, 2);
     for f in all_filters(10_000) {
-        common::insert_batch(f.as_ref(), &device, &keys);
+        common::run_batch(f.as_ref(), &device, OpKind::Insert, &keys);
         if !f.supports_delete() {
-            assert_eq!(common::remove_batch(f.as_ref(), &device, &keys), 0);
+            assert_eq!(common::run_batch(f.as_ref(), &device, OpKind::Delete, &keys), 0);
             continue;
         }
-        let removed = common::remove_batch(f.as_ref(), &device, &keys);
+        let removed = common::run_batch(f.as_ref(), &device, OpKind::Delete, &keys);
         assert!(
             removed as f64 >= keys.len() as f64 * 0.995,
             "{}: removed only {removed}",
             f.name()
         );
         // After deleting everything, almost nothing should be found.
-        let residue = common::contains_batch(f.as_ref(), &device, &keys);
+        let residue = common::run_batch(f.as_ref(), &device, OpKind::Query, &keys);
         assert!(
             residue as f64 <= keys.len() as f64 * 0.01,
             "{}: residue {residue}",
@@ -106,9 +107,9 @@ fn bcht_is_exact() {
     let device = Device::with_workers(4);
     let t = BuckCuckooHashTable::with_capacity(50_000);
     let keys = workload::distinct_insert_keys(50_000, 3);
-    common::insert_batch(&t, &device, &keys);
+    common::run_batch(&t, &device, OpKind::Insert, &keys);
     let negatives = workload::negative_probes(100_000, 4);
-    let fp = common::contains_batch(&t, &device, &negatives);
+    let fp = common::run_batch(&t, &device, OpKind::Query, &negatives);
     assert_eq!(fp, 0, "a hash table must have zero false positives");
 }
 
@@ -120,7 +121,7 @@ fn fpr_bands_at_reference_size() {
 
     let check = |f: &dyn AmqFilter, cap: usize, lo: f64, hi: f64| {
         let keys = workload::insert_keys(cap, 6);
-        common::insert_batch(f, &device, &keys);
+        common::run_batch(f, &device, OpKind::Insert, &keys);
         let fpr = common::empirical_fpr(f, &device, &negatives);
         assert!(
             (lo..hi).contains(&fpr),

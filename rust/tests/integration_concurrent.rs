@@ -4,6 +4,7 @@
 
 use cuckoo_gpu::device::{Device, LaunchConfig};
 use cuckoo_gpu::filter::{CuckooConfig, CuckooFilter, EvictionPolicy, Fp16};
+use cuckoo_gpu::OpKind;
 use cuckoo_gpu::workload;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -19,12 +20,9 @@ fn no_lost_inserts_under_contention() {
         workers: 16,
     });
     let keys = workload::distinct_insert_keys(900, 1);
-    let r = f.insert_batch(&device, &keys);
-    assert_eq!(f.len() as u64, r.inserted);
-    assert_eq!(
-        f.table().count_occupied::<Fp16>() as u64,
-        r.inserted
-    );
+    let inserted = f.execute_batch(&device, OpKind::Insert, &keys, None);
+    assert_eq!(f.len() as u64, inserted);
+    assert_eq!(f.table().count_occupied::<Fp16>() as u64, inserted);
 }
 
 #[test]
@@ -159,16 +157,16 @@ fn device_worker_counts_equivalent_results() {
     for workers in [1, 2, 8, 32] {
         let device = Device::with_workers(workers);
         let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(30_000)).unwrap();
-        let r = f.insert_batch(&device, &keys);
-        assert_eq!(r.inserted, 30_000, "workers={workers}");
-        let hits = f.count_contains_batch(&device, &keys);
+        let inserted = f.execute_batch(&device, OpKind::Insert, &keys, None);
+        assert_eq!(inserted, 30_000, "workers={workers}");
+        let hits = f.execute_batch(&device, OpKind::Query, &keys, None);
         assert_eq!(hits, 30_000, "workers={workers}");
     }
 }
 
 #[test]
 fn epoch_guard_under_engine_load() {
-    use cuckoo_gpu::coordinator::{Engine, EngineConfig, OpKind, Request};
+    use cuckoo_gpu::coordinator::{Engine, EngineConfig, Request};
     let engine = Arc::new(
         Engine::new(EngineConfig {
             capacity: 100_000,

@@ -7,6 +7,7 @@
 use cuckoo_gpu::coordinator::ShardedFilter;
 use cuckoo_gpu::device::{Device, LaunchConfig};
 use cuckoo_gpu::filter::Fp16;
+use cuckoo_gpu::OpKind;
 use cuckoo_gpu::util::prng::mix64;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -110,8 +111,8 @@ fn sharded_roundtrip_through_fused_launches() {
     let sf = ShardedFilter::<Fp16>::with_capacity(80_000, 4).unwrap();
     let ks = keys(60_000, 12);
 
-    let mut ins = vec![false; ks.len()];
-    assert_eq!(sf.insert_batch_map(&device, &ks, &mut ins), 60_000);
+    let (ok, ins) = sf.submit(&device, OpKind::Insert, &ks).wait();
+    assert_eq!(ok, 60_000);
     assert!(ins.iter().all(|&b| b));
     assert_eq!(sf.len(), 60_000);
 
@@ -120,20 +121,19 @@ fn sharded_roundtrip_through_fused_launches() {
         assert!(sf.shard(s).len() > 10_000, "shard {s} is starved");
     }
 
-    let mut got = vec![false; ks.len()];
-    assert_eq!(sf.contains_batch_map(&device, &ks, &mut got), 60_000);
+    let (hits, got) = sf.submit(&device, OpKind::Query, &ks).wait();
+    assert_eq!(hits, 60_000);
     assert!(got.iter().all(|&b| b));
 
     // Absent probes agree with the per-key oracle at every position.
     let absent = keys(20_000, 999);
-    let mut neg = vec![true; absent.len()];
-    let hits = sf.contains_batch_map(&device, &absent, &mut neg);
+    let (hits, neg) = sf.submit(&device, OpKind::Query, &absent).wait();
     for (i, &k) in absent.iter().enumerate() {
         assert_eq!(neg[i], sf.contains(k), "positional mismatch at {i}");
     }
     assert_eq!(hits, neg.iter().filter(|&&b| b).count() as u64);
 
-    assert_eq!(sf.remove_batch(&device, &ks), 60_000);
+    assert_eq!(sf.submit(&device, OpKind::Delete, &ks).wait().0, 60_000);
     assert_eq!(sf.len(), 0);
 }
 
@@ -248,14 +248,14 @@ fn sharded_async_batches_overlap_and_stay_positional() {
     let device = Device::with_workers(4);
     let sf = ShardedFilter::<Fp16>::with_capacity(80_000, 4).unwrap();
     let ks = keys(40_000, 71);
-    let (ok, ins) = sf.insert_batch_map_async(&device, &ks).wait();
+    let (ok, ins) = sf.submit(&device, OpKind::Insert, &ks).wait();
     assert_eq!(ok, 40_000);
     assert!(ins.iter().all(|&b| b));
     assert_eq!(sf.len(), 40_000);
 
     let absent = keys(10_000, 72_000);
-    let t_pos = sf.contains_batch_map_async(&device, &ks);
-    let t_neg = sf.contains_batch_map_async(&device, &absent);
+    let t_pos = sf.submit(&device, OpKind::Query, &ks);
+    let t_neg = sf.submit(&device, OpKind::Query, &absent);
     let (neg_hits, neg) = t_neg.wait();
     let (pos_hits, pos) = t_pos.wait();
     assert_eq!(pos_hits, 40_000);
@@ -265,7 +265,7 @@ fn sharded_async_batches_overlap_and_stay_positional() {
         assert_eq!(neg[i], sf.contains(k), "positional mismatch at {i}");
     }
 
-    let (removed, _) = sf.remove_batch_map_async(&device, &ks).wait();
+    let (removed, _) = sf.submit(&device, OpKind::Delete, &ks).wait();
     assert_eq!(removed, 40_000);
     assert_eq!(sf.len(), 0);
 }
@@ -274,7 +274,7 @@ fn sharded_async_batches_overlap_and_stay_positional() {
 fn engine_shared_device_serves_mixed_phases() {
     // The engine's device pool must survive interleaved mutation/query
     // phases driven from multiple client threads.
-    use cuckoo_gpu::coordinator::{Engine, EngineConfig, OpKind, Request};
+    use cuckoo_gpu::coordinator::{Engine, EngineConfig, Request};
     let e = Arc::new(
         Engine::new(EngineConfig {
             capacity: 120_000,

@@ -87,7 +87,7 @@ fn batch_and_serial_agree() {
     let f1 = CuckooFilter::<Fp16>::new(CuckooConfig::new(1 << 10)).unwrap();
     let f2 = CuckooFilter::<Fp16>::new(CuckooConfig::new(1 << 10)).unwrap();
     let keys = workload::distinct_insert_keys(10_000, 5);
-    f1.insert_batch(&device, &keys);
+    f1.execute_batch(&device, cuckoo_gpu::OpKind::Insert, &keys, None);
     for &k in &keys {
         f2.insert(k).unwrap();
     }
@@ -156,8 +156,8 @@ fn sorted_insertion_matches_unsorted() {
     let a = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(30_000)).unwrap();
     let (ra, _sort_secs) = a.insert_batch_sorted(&device, &keys);
     let b = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(30_000)).unwrap();
-    let rb = b.insert_batch(&device, &keys);
-    assert_eq!(ra.inserted, rb.inserted);
+    let rb = b.execute_batch(&device, cuckoo_gpu::OpKind::Insert, &keys, None);
+    assert_eq!(ra, rb);
     for &k in &keys {
         assert!(a.contains(k) && b.contains(k));
     }

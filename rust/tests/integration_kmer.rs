@@ -6,6 +6,7 @@ use cuckoo_gpu::filter::{CuckooConfig, CuckooFilter, Fp16};
 use cuckoo_gpu::kmer::dna::{canonical_kmer, for_each_kmer};
 use cuckoo_gpu::kmer::fasta::{read_fasta, write_fasta};
 use cuckoo_gpu::kmer::{distinct_kmers, KmerCounts, SynthConfig, SyntheticGenome};
+use cuckoo_gpu::OpKind;
 
 #[test]
 fn genome_to_filter_pipeline() {
@@ -27,14 +28,14 @@ fn genome_to_filter_pipeline() {
     // Index and screen.
     let filter = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(kmers.len())).unwrap();
     let device = Device::with_workers(4);
-    let r = filter.insert_batch(&device, &kmers);
-    assert_eq!(r.inserted as usize, kmers.len());
+    let inserted = filter.execute_batch(&device, OpKind::Insert, &kmers, None);
+    assert_eq!(inserted as usize, kmers.len());
 
     // Every k-mer window of the genome must hit (no false negatives
     // through the whole pipeline, both strands).
     let mut probes = Vec::new();
     for_each_kmer(&genome.seq[..100_000], 31, |v| probes.push(canonical_kmer(v, 31)));
-    let hits = filter.count_contains_batch(&device, &probes);
+    let hits = filter.execute_batch(&device, OpKind::Query, &probes, None);
     assert_eq!(hits as usize, probes.len());
 
     // Reverse-complement reads must hit as well (canonicalisation).
@@ -51,7 +52,7 @@ fn genome_to_filter_pipeline() {
         .collect();
     let mut rc_probes = Vec::new();
     for_each_kmer(&rc, 31, |v| rc_probes.push(canonical_kmer(v, 31)));
-    let rc_hits = filter.count_contains_batch(&device, &rc_probes);
+    let rc_hits = filter.execute_batch(&device, OpKind::Query, &rc_probes, None);
     assert_eq!(rc_hits as usize, rc_probes.len(), "reverse strand must match");
 }
 
@@ -89,15 +90,15 @@ fn deletion_supports_kmer_turnover() {
     let device = Device::with_workers(4);
     let filter =
         CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(ka.len() + kb.len())).unwrap();
-    filter.insert_batch(&device, &ka);
-    filter.insert_batch(&device, &kb);
+    filter.execute_batch(&device, OpKind::Insert, &ka, None);
+    filter.execute_batch(&device, OpKind::Insert, &kb, None);
 
     // Remove sample A entirely.
-    let removed = filter.remove_batch(&device, &ka);
+    let removed = filter.execute_batch(&device, OpKind::Delete, &ka, None);
     assert_eq!(removed as usize, ka.len());
 
     // Sample B must remain fully queryable (keys shared between A and B
     // were inserted twice, so one copy survives A's deletion).
-    let hits = filter.count_contains_batch(&device, &kb);
+    let hits = filter.execute_batch(&device, OpKind::Query, &kb, None);
     assert_eq!(hits as usize, kb.len(), "sample B lost k-mers");
 }

@@ -2,8 +2,9 @@
 //! core's invariants across randomly generated configurations, and for
 //! the multi-pool topology's occupancy-ledger accounting.
 
-use cuckoo_gpu::coordinator::{ShardedFilter, TopologyToken};
+use cuckoo_gpu::coordinator::{BatchTicket, ShardedFilter};
 use cuckoo_gpu::device::{DeviceTopology, Pinning, TopologyConfig};
+use cuckoo_gpu::OpKind;
 use cuckoo_gpu::filter::{
     BucketPolicy, CuckooConfig, CuckooFilter, EvictionPolicy, Fp16, Fp8, Layout,
 };
@@ -125,8 +126,8 @@ fn prop_insert_delete_returns_to_empty() {
 #[test]
 fn prop_topology_ledger_balances_under_out_of_order_token_waits() {
     // Across any pools × shards shape, any pinning, and any interleaving
-    // of async mutation tokens — waited out of order or dropped without
-    // waiting — the occupancy ledger must end at exactly
+    // of submitted mutation tickets — waited out of order or dropped
+    // without waiting — the occupancy ledger must end at exactly
     // (successful inserts − successful removes), and must agree with a
     // physical scan of every shard's table.
     run_property("topology ledger balance", 24, |g| {
@@ -151,19 +152,19 @@ fn prop_topology_ledger_balances_under_out_of_order_token_waits() {
         // keys. Per-pool FIFO order makes every remove land after its
         // keys' insert, so all batches fully succeed at this load and
         // the expected ledger total is exact.
-        let mut tokens: Vec<(TopologyToken<Fp16>, u64)> = Vec::new();
+        let mut tokens: Vec<(BatchTicket<Fp16>, u64)> = Vec::new();
         let mut submitted: Vec<Vec<u64>> = Vec::new();
         let (mut expect_ins, mut expect_rem) = (0u64, 0u64);
         for _ in 0..g.usize_in(2, 5) {
             let ks = g.distinct_keys(g.usize_in(1, 4_000));
             expect_ins += ks.len() as u64;
-            tokens.push((sf.insert_batch_map_async_topo(&topo, &ks), ks.len() as u64));
+            tokens.push((sf.submit(&topo, OpKind::Insert, &ks), ks.len() as u64));
             // Sometimes remove an earlier batch (each at most once).
             if !submitted.is_empty() && g.bool() {
                 let victim: Vec<u64> = submitted.remove(g.usize_in(0, submitted.len() - 1));
                 expect_rem += victim.len() as u64;
                 tokens.push((
-                    sf.remove_batch_map_async_topo(&topo, &victim),
+                    sf.submit(&topo, OpKind::Delete, &victim),
                     victim.len() as u64,
                 ));
             } else {

@@ -1,12 +1,16 @@
-//! Deterministic multi-pool concurrency battery: seeded randomized
-//! insert/query/remove schedules replayed against a 1-pool oracle.
+//! Deterministic multi-backend concurrency battery: seeded randomized
+//! insert/query/remove schedules replayed against a 1-stream oracle,
+//! driven exclusively through the unified submission API
+//! (`ShardedFilter::submit(backend, OpKind, keys)`).
 //!
-//! For every `pools × shards` combination the same schedule must produce
-//! **byte-identical positional outputs**: the shard seeds are fixed, all
-//! inserted keys are globally distinct, removes only target keys whose
-//! insert batch was submitted earlier, and the filter's batch semantics
-//! are multiset-order-independent — so any divergence is a real routing,
-//! permutation, token-join or ledger bug, not scheduling noise.
+//! For every backend shape (a plain `Device`, `DeviceTopology` at
+//! pools {1, 2, 4}, explicit pinning) the same schedule must produce
+//! **byte-identical positional outputs** and identical occupancy
+//! ledgers: the shard seeds are fixed, all inserted keys are globally
+//! distinct, removes only target keys whose insert batch was submitted
+//! earlier, and the filter's batch semantics are
+//! multiset-order-independent — so any divergence is a real routing,
+//! permutation, ticket-join or ledger bug, not scheduling noise.
 //!
 //! Schedules include empty batches and sizes straddling the device's
 //! warp (32) and block (256) boundaries. The seed comes from
@@ -15,9 +19,12 @@
 //! failure message prints.
 
 use cuckoo_gpu::coordinator::ShardedFilter;
-use cuckoo_gpu::device::{DeviceTopology, Pinning, TopologyConfig};
+use cuckoo_gpu::device::{
+    Backend, Device, DeviceTopology, LaunchConfig, Pinning, TopologyConfig,
+};
 use cuckoo_gpu::filter::Fp16;
 use cuckoo_gpu::util::prng::{mix64, SplitMix64};
+use cuckoo_gpu::OpKind;
 use std::collections::VecDeque;
 
 fn stress_seed() -> u64 {
@@ -27,8 +34,8 @@ fn stress_seed() -> u64 {
         .unwrap_or(0xC0FFEE)
 }
 
-/// One round of the schedule: three batches submitted as insert+remove
-/// async tokens (waited out of order) followed by a query batch.
+/// One round of the schedule: insert and remove batches submitted as
+/// concurrent tickets (waited out of order) followed by a query batch.
 struct Round {
     insert: Vec<u64>,
     remove: Vec<u64>,
@@ -36,7 +43,7 @@ struct Round {
 }
 
 /// Sizes that cross the warp (32) and block (256) boundaries of the
-/// topology's launch geometry, plus empties.
+/// backend's launch geometry, plus empties.
 const SIZES: &[usize] = &[0, 1, 31, 32, 33, 127, 255, 256, 257, 512, 1000, 2048];
 
 /// Build a deterministic schedule. Every inserted key is globally
@@ -62,7 +69,7 @@ fn build_schedule(seed: u64, rounds: usize) -> Vec<Round> {
         let insert = fresh(SIZES[rng.next_below(SIZES.len() as u64) as usize], &mut counter);
         // Remove up to half the currently live keys, oldest first —
         // their insert batches were submitted in earlier rounds, so
-        // per-pool FIFO order guarantees the inserts land first.
+        // per-stream FIFO order guarantees the inserts land first.
         let rem_n = rng.next_below(live.len() as u64 / 2 + 1) as usize;
         let remove: Vec<u64> = live.drain(..rem_n).collect();
         removed.extend(&remove);
@@ -100,38 +107,50 @@ struct RoundLog {
     qry: (u64, Vec<bool>),
 }
 
-/// Replay `schedule` on a fresh filter over a fresh topology; returns
-/// the full outcome log, the final ledger total, and per-pool launch
-/// counts.
-fn run_schedule(
-    pools: usize,
-    shards: usize,
-    pinning: Pinning,
-    schedule: &[Round],
-) -> (Vec<RoundLog>, usize, Vec<u64>) {
-    let topo = DeviceTopology::new(TopologyConfig {
+fn topology(pools: usize, pinning: Pinning) -> DeviceTopology {
+    DeviceTopology::new(TopologyConfig {
         pools,
         total_workers: 8,
         block_size: 256,
         warp_size: 32,
         pinning,
-    });
+    })
+}
+
+/// The oracle backend: one plain device, same geometry.
+fn oracle_device() -> Device {
+    Device::new(LaunchConfig {
+        block_size: 256,
+        warp_size: 32,
+        workers: 8,
+    })
+}
+
+/// Replay `schedule` on a fresh filter over `backend` — every batch
+/// through the one unified entry point, `submit(backend, OpKind, keys)`
+/// — and return the full outcome log, the final ledger total, and
+/// per-stream launch counts.
+fn run_schedule(
+    backend: &dyn Backend,
+    shards: usize,
+    schedule: &[Round],
+) -> (Vec<RoundLog>, usize, Vec<u64>) {
     let sf = ShardedFilter::<Fp16>::with_capacity(100_000, shards).unwrap();
     let mut log = Vec::with_capacity(schedule.len());
     for r in schedule {
         // Mutations in flight together, waited out of order: remove
         // targets keys from earlier rounds only, and each shard's
-        // batches serialise on its owning pool's FIFO queue.
-        let t_ins = sf.insert_batch_map_async_topo(&topo, &r.insert);
-        let t_rem = sf.remove_batch_map_async_topo(&topo, &r.remove);
+        // batches serialise on its owning stream's FIFO queue.
+        let t_ins = sf.submit(backend, OpKind::Insert, &r.insert);
+        let t_rem = sf.submit(backend, OpKind::Delete, &r.remove);
         let rem = t_rem.wait();
         let ins = t_ins.wait();
         // Queries only after mutations resolved (the engine's epoch
         // separation), so answers are a pure function of filter state.
-        let qry = sf.contains_batch_map_async_topo(&topo, &r.query).wait();
+        let qry = sf.submit(backend, OpKind::Query, &r.query).wait();
         log.push(RoundLog { ins, rem, qry });
     }
-    let launches = topo.pools().iter().map(|d| d.launches()).collect();
+    let launches = backend.stream_stats().iter().map(|s| s.launches).collect();
     (log, sf.len(), launches)
 }
 
@@ -151,17 +170,42 @@ fn multi_pool_matches_single_pool_oracle_across_matrix() {
     let seed = stress_seed();
     let schedule = build_schedule(seed, 14);
     for &shards in &[1usize, 3, 8] {
-        let (oracle_log, oracle_len, _) = run_schedule(1, shards, Pinning::RoundRobin, &schedule);
+        let (oracle_log, oracle_len, _) =
+            run_schedule(&topology(1, Pinning::RoundRobin), shards, &schedule);
         for &pools in &[2usize, 4] {
-            let (log, len, launches) = run_schedule(pools, shards, Pinning::RoundRobin, &schedule);
+            let topo = topology(pools, Pinning::RoundRobin);
+            let (log, len, launches) = run_schedule(&topo, shards, &schedule);
             let what = format!("pools={pools} shards={shards}");
             assert_logs_equal(&log, &oracle_log, &what, seed);
             assert_eq!(len, oracle_len, "ledger drift at {what} (seed {seed})");
-            // Every pool that owns a shard must have actually launched.
+            // Every stream that owns a shard must have actually launched.
             let active = pools.min(shards);
             for (p, &l) in launches.iter().take(active).enumerate() {
-                assert!(l > 0, "pool {p} of {pools} idle at {what}: {launches:?}");
+                assert!(l > 0, "stream {p} of {pools} idle at {what}: {launches:?}");
             }
+        }
+    }
+}
+
+#[test]
+fn backend_trait_equivalence_device_vs_topologies() {
+    // Satellite battery: the SAME schedule submitted through the SAME
+    // API to a plain `Device`, a 1-pool `DeviceTopology` and a 4-pool
+    // `DeviceTopology` must produce byte-identical positional outcomes
+    // and identical occupancy ledgers — the Backend trait's contract
+    // is that callers cannot tell the shapes apart.
+    let seed = stress_seed().wrapping_add(3);
+    let schedule = build_schedule(seed, 12);
+    for &shards in &[1usize, 4, 8] {
+        let device = oracle_device();
+        let (dev_log, dev_len, dev_launches) = run_schedule(&device, shards, &schedule);
+        assert!(dev_launches.iter().sum::<u64>() > 0);
+        for &pools in &[1usize, 4] {
+            let topo = topology(pools, Pinning::RoundRobin);
+            let (log, len, _) = run_schedule(&topo, shards, &schedule);
+            let what = format!("Device vs DeviceTopology{{pools: {pools}}} shards={shards}");
+            assert_logs_equal(&log, &dev_log, &what, seed);
+            assert_eq!(len, dev_len, "ledger drift at {what} (seed {seed})");
         }
     }
 }
@@ -170,9 +214,11 @@ fn multi_pool_matches_single_pool_oracle_across_matrix() {
 fn explicit_pinning_matches_oracle() {
     let seed = stress_seed().wrapping_add(1);
     let schedule = build_schedule(seed, 10);
-    let (oracle_log, oracle_len, _) = run_schedule(1, 8, Pinning::RoundRobin, &schedule);
+    let (oracle_log, oracle_len, _) =
+        run_schedule(&topology(1, Pinning::RoundRobin), 8, &schedule);
     // Skewed placement: shards {0,1,3,4,6,7} on pool 0, {2,5} on pool 1.
-    let (log, len, launches) = run_schedule(2, 8, Pinning::Explicit(vec![0, 0, 1]), &schedule);
+    let topo = topology(2, Pinning::Explicit(vec![0, 0, 1]));
+    let (log, len, launches) = run_schedule(&topo, 8, &schedule);
     assert_logs_equal(&log, &oracle_log, "explicit pinning", seed);
     assert_eq!(len, oracle_len);
     assert!(launches.iter().all(|&l| l > 0), "{launches:?}");
@@ -181,12 +227,12 @@ fn explicit_pinning_matches_oracle() {
 #[test]
 fn repeated_replay_is_deterministic() {
     // The battery's own foundation: replaying one schedule twice on the
-    // same topology shape yields identical logs (no hidden dependence on
+    // same backend shape yields identical logs (no hidden dependence on
     // worker scheduling).
     let seed = stress_seed().wrapping_add(2);
     let schedule = build_schedule(seed, 8);
-    let (a, len_a, _) = run_schedule(4, 8, Pinning::RoundRobin, &schedule);
-    let (b, len_b, _) = run_schedule(4, 8, Pinning::RoundRobin, &schedule);
+    let (a, len_a, _) = run_schedule(&topology(4, Pinning::RoundRobin), 8, &schedule);
+    let (b, len_b, _) = run_schedule(&topology(4, Pinning::RoundRobin), 8, &schedule);
     assert_logs_equal(&a, &b, "replay", seed);
     assert_eq!(len_a, len_b);
 }

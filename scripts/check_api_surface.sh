@@ -1,0 +1,54 @@
+#!/usr/bin/env bash
+# Public-API snapshot check for the unified op-submission surface.
+#
+# PR 4 collapsed the per-op batch method families into single
+# OpKind-dispatched entry points:
+#   ShardedFilter::submit(backend, OpKind, keys) -> BatchTicket
+#   CuckooFilter::execute_batch(backend, OpKind, keys, out)
+#   CuckooFilter::execute_batch_traced(device, OpKind, keys)
+#   baselines::run_batch(f, backend, OpKind, keys)
+# This script fails CI if a per-op `*_batch*` variant (e.g.
+# `insert_batch_map_async_topo`) reappears as a `pub fn` in those
+# surfaces, so the next execution mode cannot quietly re-triple the API.
+#
+# Uses ripgrep when available, plain grep -E otherwise.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+SURFACES=(
+  rust/src/coordinator/shard.rs
+  rust/src/filter/batch.rs
+  rust/src/baselines/common.rs
+)
+
+# A renamed/moved surface file must fail loudly, not make the grep pass
+# vacuously (file-not-found exits would be masked by `|| true` below).
+for f in "${SURFACES[@]}"; do
+  if [ ! -f "$f" ]; then
+    echo "error: surface file missing: $f (update SURFACES in $0)" >&2
+    exit 1
+  fi
+done
+
+# pub fn {insert,contains,remove,count_contains}_batch<anything>(…
+PATTERN='pub fn (insert|contains|remove|count_contains)_batch[a-z_]*\('
+
+search() {
+  if command -v rg >/dev/null 2>&1; then
+    rg -n "$PATTERN" "${SURFACES[@]}" || true
+  else
+    grep -nE "$PATTERN" "${SURFACES[@]}" || true
+  fi
+}
+
+matches="$(search)"
+if [ -n "$matches" ]; then
+  echo "error: per-op batch variant re-introduced on a unified surface:" >&2
+  echo "$matches" >&2
+  echo >&2
+  echo "Route new execution modes through submit/execute_batch/run_batch" >&2
+  echo "with an OpKind argument instead (see ROADMAP migration table)." >&2
+  exit 1
+fi
+
+echo "API surface OK: no per-op *_batch* pub fn variants in ${SURFACES[*]}"
