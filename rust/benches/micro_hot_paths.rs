@@ -1,7 +1,7 @@
 //! Micro-benchmarks of the hot paths (the §Perf profiling harness):
-//! launch overhead of the persistent pool, hash, SWAR scan,
-//! single-threaded op latency, multi-thread scaling.
-//! Run with `cargo bench --bench micro_hot_paths`.
+//! launch overhead of the persistent pool, arena vs fresh-alloc submit
+//! scratch, hash, SWAR scan, single-threaded op latency, multi-thread
+//! scaling. Run with `cargo bench --bench micro_hot_paths`.
 
 use cuckoo_gpu::coordinator::{
     Batcher, BatcherConfig, Engine, EngineConfig, OpKind, Request, ShardedFilter,
@@ -95,6 +95,53 @@ fn launch_overhead() {
             black_box(sf.submit(&d, OpKind::Query, &keys).wait().0);
         }
     });
+}
+
+/// Arena vs fresh-alloc submit: the same fused query batches with the
+/// scratch arena warm (every lease a free-list hit; outcomes donated
+/// back each wait, as the batcher does) against the pre-PR-5 regime
+/// (arena cleared before every submit, so every lease allocates fresh —
+/// scatter pairs, index tables, out vector, tallies all hit the global
+/// allocator). Run at the pre/post commits on real hardware to record
+/// before/after numbers (this container has no Rust toolchain).
+fn scatter_reuse() {
+    println!("-- scatter_reuse (warm arena vs fresh-alloc submit) --");
+    let total = cuckoo_gpu::device::default_workers();
+    let shards = 8usize;
+    for pools in [1usize, 4] {
+        let backend: Box<dyn Backend> = build_backend(pools, total);
+        let backend = backend.as_ref();
+        for batch in [1usize << 10, 1 << 16] {
+            let sf = ShardedFilter::<Fp16>::with_capacity(2 * batch, shards).unwrap();
+            let ks: Vec<u64> = (0..batch as u64)
+                .map(|i| cuckoo_gpu::util::prng::mix64(i ^ 0xA11C))
+                .collect();
+            sf.submit(backend, OpKind::Insert, &ks).wait();
+            let iters = (1 << 22) / batch;
+
+            bench(&format!("query arena-warm  batch={batch} {pools}p"), batch * iters, || {
+                for _ in 0..iters {
+                    let (_, out) = sf.submit(backend, OpKind::Query, &ks).wait();
+                    sf.arena().flags().donate(out);
+                }
+            });
+            // Same formatter as the server's STATS reply — one source
+            // of truth for the counter line.
+            println!(
+                "    ({})",
+                cuckoo_gpu::coordinator::metrics::Metrics::arena_summary(&sf.arena().stats())
+            );
+
+            bench(&format!("query fresh-alloc batch={batch} {pools}p"), batch * iters, || {
+                for _ in 0..iters {
+                    // Empty the free lists so every lease below misses:
+                    // the allocator is back on the hot path.
+                    sf.arena().clear();
+                    black_box(sf.submit(backend, OpKind::Query, &ks).wait().0);
+                }
+            });
+        }
+    }
 }
 
 /// Multi-pool scaling at a **fixed total worker budget**: the same
@@ -218,6 +265,7 @@ fn batch_pipeline_overlap() {
 
 fn main() {
     launch_overhead();
+    scatter_reuse();
     topology_scaling();
     batch_pipeline_overlap();
     let n = 1 << 22;

@@ -32,9 +32,32 @@
 //! [`ServeError::Closed`] instead of hanging, and a panic during a flush
 //! (e.g. a device worker fault) is caught per group — the group's
 //! clients get [`ServeError::Failed`] and the flusher keeps serving.
+//!
+//! ## Zero-allocation steady state
+//!
+//! The batcher is one loop of the pipeline-wide scratch cycle (see
+//! [`crate::mem`] and [`super::shard`]'s lease-lifecycle docs). Group
+//! key buffers are **leased** from the engine's arena when a group
+//! opens (sized to `max_keys` up front, so coalescing appends never
+//! reallocate) and dropped back the moment `execute_async_op` has
+//! staged the keys into the filter's own leased scatter — the next
+//! group's lease is a free-list hit, not an allocation. On the response
+//! side, the flusher scatters per-client slices out of the group's
+//! outcome vector and then **donates** that vector back to the arena,
+//! which is where the next batch's out vector comes from. After warmup
+//! a sustained mixed workload therefore allocates **no batch scratch**
+//! anywhere on the server → batcher → engine → shard → device path —
+//! enforced by `tests/alloc_reuse.rs` via the arena's miss counter,
+//! across pool/shard topologies. (Fixed-size control blocks — kernel
+//! closure `Arc`s, per-request channels, the per-client response
+//! slices that leave the server — are deliberately outside that
+//! guarantee, as is the PJRT/AOT query branch, which exchanges owned
+//! buffers with the runtime; see [`super::shard`]'s scoping note and
+//! the engine's AOT-path comment.)
 
 use super::engine::{Engine, ExecTicket};
 use super::request::{OpKind, Request, Response, ServeError};
+use crate::mem::{BufferArena, Lease};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
@@ -62,7 +85,9 @@ type ClientTx = mpsc::Sender<Result<Response, ServeError>>;
 
 struct PendingGroup {
     op: OpKind,
-    keys: Vec<u64>,
+    /// Leased from the engine's arena (capacity `max_keys` up front);
+    /// recycled by the flusher as soon as the group is staged.
+    keys: Lease<u64>,
     /// (client, range in `keys`) so responses can be scattered back.
     clients: Vec<(ClientTx, std::ops::Range<usize>)>,
     oldest: Instant,
@@ -82,10 +107,13 @@ struct InFlight<'e> {
 }
 
 /// Resolve one in-flight group: wait its ticket (blocking if the kernel
-/// is still running) and scatter per-client responses. A panic inside
+/// is still running), scatter per-client responses, and donate the
+/// group's outcome buffer back to the arena — the next batch's out
+/// vector is this buffer again, so the response path allocates only the
+/// per-client slices that genuinely leave the server. A panic inside
 /// the wait (device worker fault) turns into [`ServeError::Failed`] for
 /// every client of the group — the flusher survives.
-fn respond(flight: InFlight<'_>) {
+fn respond(flight: InFlight<'_>, arena: &BufferArena) {
     let InFlight { ticket, clients, .. } = flight;
     match catch_unwind(AssertUnwindSafe(|| ticket.wait())) {
         Ok(resp) => {
@@ -96,6 +124,7 @@ fn respond(flight: InFlight<'_>) {
                     successes: resp.outcomes[range].iter().filter(|&&b| b).count() as u64,
                 }));
             }
+            arena.flags().donate(resp.outcomes);
         }
         Err(_) => {
             for (tx, _) in clients {
@@ -112,17 +141,22 @@ fn respond(flight: InFlight<'_>) {
 pub struct Batcher {
     state: Arc<(Mutex<QueueState>, Condvar)>,
     cfg: BatcherConfig,
+    /// The engine's arena — group key buffers are leased here at
+    /// `submit` and recycled by the flusher once staged.
+    arena: Arc<BufferArena>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Batcher {
     pub fn new(engine: Arc<Engine>, cfg: BatcherConfig) -> Self {
         let state = Arc::new((Mutex::new(QueueState::default()), Condvar::new()));
+        let arena = engine.arena().clone();
         let worker_state = state.clone();
         let worker = std::thread::spawn(move || Self::run_flusher(worker_state, engine, cfg));
         Self {
             state,
             cfg,
+            arena,
             worker: Some(worker),
         }
     }
@@ -148,9 +182,16 @@ impl Batcher {
             g.keys.extend_from_slice(&req.keys);
             g.clients.push((tx, start..g.keys.len()));
         } else {
+            // Lease the group buffer at full flush size up front so
+            // coalescing appends stay within capacity; a join that
+            // overflows it (one oversized last request) just grows the
+            // buffer, which the arena's upward class search still
+            // reuses afterwards.
+            let mut keys = self.arena.keys().lease(req.keys.len().max(self.cfg.max_keys));
+            keys.extend_from_slice(&req.keys);
             st.groups.push(PendingGroup {
                 op: req.op,
-                keys: req.keys.clone(),
+                keys,
                 clients: vec![(tx, 0..req.keys.len())],
                 oldest: Instant::now(),
             });
@@ -177,12 +218,13 @@ impl Batcher {
         /// enough to hide the scatter; deeper queues only add latency.
         const MAX_INFLIGHT: usize = 2;
         let (lock, cv) = &*state;
+        let arena = engine.arena().clone();
         let mut inflight: VecDeque<InFlight<'_>> = VecDeque::new();
         loop {
             // Stage 0: ship whatever has already completed, in
             // submission order (per-client response order).
             while inflight.front().is_some_and(|f| f.ticket.is_done()) {
-                respond(inflight.pop_front().unwrap());
+                respond(inflight.pop_front().unwrap(), &arena);
             }
 
             // Stage 1: pick up the next flush-ready group. Park on the
@@ -228,19 +270,25 @@ impl Batcher {
                     // drain before switching phase (see module docs).
                     if inflight.back().is_some_and(|f| f.mutation != mutation) {
                         while let Some(f) = inflight.pop_front() {
-                            respond(f);
+                            respond(f, &arena);
                         }
                     }
                     while inflight.len() >= MAX_INFLIGHT {
-                        respond(inflight.pop_front().unwrap());
+                        respond(inflight.pop_front().unwrap(), &arena);
                     }
                     engine.metrics.record_batch();
-                    let clients = g.clients;
-                    let req = Request::new(g.op, g.keys);
+                    let PendingGroup { op, keys, clients, .. } = g;
                     // A panic during submission (scatter or fault
                     // injection) must not kill the flusher: fail the
                     // group's clients and keep serving.
-                    match catch_unwind(AssertUnwindSafe(|| engine.execute_async(&req))) {
+                    let staged =
+                        catch_unwind(AssertUnwindSafe(|| engine.execute_async_op(op, &keys)));
+                    // The keys are fully staged into the filter's own
+                    // leased scatter (or the submit panicked) — recycle
+                    // the group buffer now so the NEXT group's lease
+                    // reuses it while this group's kernel runs.
+                    drop(keys);
+                    match staged {
                         Ok(ticket) => inflight.push_back(InFlight {
                             ticket,
                             clients,
@@ -259,7 +307,7 @@ impl Batcher {
                     if let Some(f) = inflight.pop_front() {
                         // Blocking wait on the oldest kernel; the next
                         // loop iteration looks for new groups again.
-                        respond(f);
+                        respond(f, &arena);
                     } else {
                         // No groups, nothing in flight: shutdown drain
                         // complete.
@@ -462,6 +510,35 @@ mod tests {
         // Both pools served fused segments for these groups.
         let stats = e.pool_stats();
         assert!(stats.iter().all(|s| s.launches > 0), "{stats:?}");
+    }
+
+    #[test]
+    fn flusher_recycles_group_and_outcome_buffers() {
+        // The batcher's half of the zero-allocation loop: group key
+        // buffers lease/recycle around each flush and outcome buffers
+        // donate back after the per-client scatter, so warmed-up flush
+        // cycles never miss the arena. (The full matrix battery lives
+        // in tests/alloc_reuse.rs.)
+        let e = engine();
+        let b = Batcher::new(e.clone(), BatcherConfig::default());
+        let run = |i: u64| {
+            let ks = keys(512, 200 + i);
+            assert_eq!(b.call(Request::new(OpKind::Insert, ks.clone())).unwrap().successes, 512);
+            assert_eq!(b.call(Request::new(OpKind::Query, ks.clone())).unwrap().successes, 512);
+            // fp16 collisions inside a delete batch can very rarely trade
+            // a removal; the allocation property is what's under test.
+            assert!(b.call(Request::new(OpKind::Delete, ks)).unwrap().successes >= 510);
+        };
+        for i in 0..3 {
+            run(i);
+        }
+        let before = e.arena_stats();
+        for i in 3..13 {
+            run(i);
+        }
+        let after = e.arena_stats();
+        assert_eq!(after.misses, before.misses, "warmed-up flush cycle allocated scratch");
+        assert!(after.hits > before.hits);
     }
 
     #[test]

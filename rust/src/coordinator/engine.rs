@@ -14,13 +14,20 @@
 //!
 //! Requests can be executed synchronously ([`Engine::execute`] /
 //! [`Engine::execute_op`]) or submitted without a barrier
-//! ([`Engine::execute_async`], returning an [`ExecTicket`]). The async
-//! form does the scatter/permute on the calling thread, enqueues the
-//! kernels stream-ordered on the backend, and holds the request's
-//! epoch-phase token inside the ticket until `wait()` — so a caller
-//! pipelining tickets must drain them before switching between query and
-//! mutation phases (the batcher's flusher does exactly this; see
-//! [`super::batcher`]).
+//! ([`Engine::execute_async`] / [`Engine::execute_async_op`], returning
+//! an [`ExecTicket`]). The async form does the scatter/permute on the
+//! calling thread, enqueues the kernels stream-ordered on the backend,
+//! and holds the request's epoch-phase token inside the ticket until
+//! `wait()` — so a caller pipelining tickets must drain them before
+//! switching between query and mutation phases (the batcher's flusher
+//! does exactly this; see [`super::batcher`]).
+//!
+//! The engine also owns the pipeline's shared batch-scratch
+//! [`BufferArena`]: the sharded filter leases all submit scratch from
+//! it, the batcher leases its group key buffers and donates response
+//! outcome buffers back, and [`Engine::arena_stats`] feeds the server's
+//! STATS reply — so "zero allocations after warmup" is an observable
+//! serving property, not an implementation hope.
 
 use super::epoch::{EpochGuard, PhaseToken};
 use super::metrics::{Metrics, PoolStat};
@@ -28,6 +35,7 @@ use super::request::{OpKind, Request, Response};
 use super::shard::{BatchTicket, ShardedFilter};
 use crate::device::{build_backend, Backend};
 use crate::filter::{FilterError, Fp16};
+use crate::mem::{ArenaStats, BufferArena};
 use crate::runtime::{RuntimeError, RuntimeHandle};
 use crate::util::Timer;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -98,6 +106,11 @@ pub struct Engine {
     epoch: EpochGuard,
     pub metrics: Metrics,
     runtime: Option<RuntimeHandle>,
+    /// The one batch-scratch arena shared by every layer of this
+    /// engine's pipeline: the filter leases its submit scratch from it,
+    /// the batcher leases group key buffers and donates response
+    /// outcome buffers back, and the server reports its counters.
+    arena: std::sync::Arc<BufferArena>,
     /// Test-only fault injection: when armed, the next `execute_async`
     /// panics before touching the filter — exercises the batcher's
     /// flusher-survival path. Not part of the public API.
@@ -107,7 +120,9 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(cfg: EngineConfig) -> Result<Self, EngineError> {
-        let filter = ShardedFilter::with_capacity(cfg.capacity, cfg.shards)?;
+        let arena = std::sync::Arc::new(BufferArena::new());
+        let filter =
+            ShardedFilter::with_capacity(cfg.capacity, cfg.shards)?.with_arena(arena.clone());
         let runtime = match &cfg.artifacts_dir {
             Some(dir) => match RuntimeHandle::spawn(dir) {
                 Ok(rt) => {
@@ -144,6 +159,7 @@ impl Engine {
             epoch: EpochGuard::new(),
             metrics: Metrics::new(),
             runtime,
+            arena,
             debug_fail_next_execute: AtomicBool::new(false),
         })
     }
@@ -159,13 +175,15 @@ impl Engine {
             .bucket_slots(g.bucket_slots)
             .seed(g.seed);
         let filter_inner = crate::filter::CuckooFilter::<Fp16>::new(cfg)?;
-        let filter = ShardedFilter::from_single(filter_inner);
+        let arena = std::sync::Arc::new(BufferArena::new());
+        let filter = ShardedFilter::from_single(filter_inner).with_arena(arena.clone());
         Ok(Self {
             filter,
             backend: build_backend(1, workers),
             epoch: EpochGuard::new(),
             metrics: Metrics::new(),
             runtime: Some(rt),
+            arena,
             debug_fail_next_execute: AtomicBool::new(false),
         })
     }
@@ -183,6 +201,22 @@ impl Engine {
     /// The engine's launch backend (the unified submission surface).
     pub fn backend(&self) -> &dyn Backend {
         self.backend.as_ref()
+    }
+
+    /// The engine's shared batch-scratch arena (see [`crate::mem`]).
+    /// The batcher leases group key buffers from it and donates
+    /// response outcome buffers back; external callers that pipeline
+    /// directly against the engine can do the same to stay
+    /// allocation-free.
+    pub fn arena(&self) -> &std::sync::Arc<BufferArena> {
+        &self.arena
+    }
+
+    /// Point-in-time arena counters (the `arena:` section of STATS):
+    /// hit/miss lease counts and bytes resident in the free lists. A
+    /// steady-state workload holds `misses` constant.
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arena.stats()
     }
 
     /// Point-in-time per-stream stats: worker count, lifetime launch
@@ -233,6 +267,16 @@ impl Engine {
     /// submitting the opposite phase — `begin_query`/`begin_mutation`
     /// would otherwise wait on tokens only that caller can release.
     pub fn execute_async(&self, req: &Request) -> ExecTicket<'_> {
+        self.execute_async_op(req.op, &req.keys)
+    }
+
+    /// Slice-taking form of [`Engine::execute_async`]: submit `op` over
+    /// borrowed `keys` without building a [`Request`]. The keys are
+    /// fully staged (scattered into leased scratch) before this
+    /// returns, so the caller may recycle its key buffer immediately —
+    /// the batcher drops its leased group buffer right here, which is
+    /// what lets consecutive flush groups share one set of buffers.
+    pub fn execute_async_op(&self, op: OpKind, keys: &[u64]) -> ExecTicket<'_> {
         // Read-only fast path: the swap (an unconditional cache-line
         // write) only runs once a test has armed the hook.
         if self.debug_fail_next_execute.load(Ordering::Relaxed)
@@ -241,23 +285,37 @@ impl Engine {
             panic!("injected engine failure");
         }
         let timer = Timer::new();
-        let n = req.keys.len();
-        let phase = if req.op.is_mutation() {
+        let n = keys.len();
+        let phase = if op.is_mutation() {
             self.epoch.begin_mutation()
         } else {
             self.epoch.begin_query()
         };
-        if req.op == OpKind::Query {
+        if op == OpKind::Query {
             if let Some(rt) = &self.runtime {
                 // AOT path: snapshot + PJRT batches, synchronous inside
-                // the query phase (no concurrent mutation).
-                let mut outcomes = vec![false; n];
-                let successes = {
+                // the query phase (no concurrent mutation). This branch
+                // exchanges owned buffers with the runtime (a staged key
+                // copy in, the flag vector out), so it sits OUTSIDE the
+                // arena's zero-allocation cycle — the steady-state
+                // guarantee is scoped to the native path, which is the
+                // only one tests/alloc_reuse.rs runs.
+                let (successes, outcomes) = {
                     let snapshot = std::sync::Arc::new(self.filter.shard(0).table().snapshot());
-                    match rt.query_all(snapshot, req.keys.clone()) {
+                    match rt.query_all(snapshot, keys.to_vec()) {
                         Ok(flags) => {
-                            outcomes.copy_from_slice(&flags);
-                            flags.iter().filter(|&&b| b).count() as u64
+                            // The runtime's flags ARE the positional
+                            // outcomes — hold it to the same length
+                            // contract the old copy_from_slice enforced.
+                            assert_eq!(
+                                flags.len(),
+                                n,
+                                "PJRT runtime returned {} flags for {} keys",
+                                flags.len(),
+                                n
+                            );
+                            let successes = flags.iter().filter(|&&b| b).count() as u64;
+                            (successes, flags)
                         }
                         Err(e) => {
                             eprintln!(
@@ -265,30 +323,27 @@ impl Engine {
                             );
                             // Same unified path, degraded to sync: submit
                             // + wait inside the held query phase.
-                            let (successes, flags) = self
-                                .filter
-                                .submit(self.backend.as_ref(), OpKind::Query, &req.keys)
-                                .wait();
-                            outcomes = flags;
-                            successes
+                            self.filter
+                                .submit(self.backend.as_ref(), OpKind::Query, keys)
+                                .wait()
                         }
                     }
                 };
                 drop(phase);
-                self.metrics.record(req.op, n, successes, timer.elapsed_ns());
+                self.metrics.record(op, n, successes, timer.elapsed_ns());
                 return ExecTicket {
                     inner: Some(TicketInner::Ready(Response {
-                        op: req.op,
+                        op,
                         outcomes,
                         successes,
                     })),
                 };
             }
         }
-        let batch = self.filter.submit(self.backend.as_ref(), req.op, &req.keys);
+        let batch = self.filter.submit(self.backend.as_ref(), op, keys);
         ExecTicket {
             inner: Some(TicketInner::Pending {
-                op: req.op,
+                op,
                 n,
                 batch,
                 _phase: phase,
@@ -545,5 +600,59 @@ mod tests {
         assert_eq!(r2.successes, 10_000);
         assert!(r1.outcomes.iter().all(|&b| b));
         assert!(r2.outcomes.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn execute_async_op_matches_request_form_and_shares_the_arena() {
+        let e = Engine::new(EngineConfig {
+            capacity: 20_000,
+            shards: 3,
+            workers: 4,
+            pools: 2,
+            artifacts_dir: None,
+        })
+        .unwrap();
+        let ks = keys(6_000, 9);
+        let r1 = e.execute_async_op(OpKind::Insert, &ks).wait();
+        assert_eq!(r1.successes, 6_000);
+        let r2 = e.execute_async(&Request::new(OpKind::Query, ks.clone())).wait();
+        assert_eq!(r2.outcomes, vec![true; 6_000]);
+        // The filter leases from the engine's arena — one counter story.
+        assert!(e.arena_stats().acquires() > 0);
+        assert!(std::sync::Arc::ptr_eq(e.arena(), e.filter.arena()));
+    }
+
+    #[test]
+    fn engine_steady_state_holds_arena_misses_constant() {
+        // Engine-level form of the zero-allocation acceptance: warmed-up
+        // execute_async_op cycles (with the outcomes donated back, as
+        // the batcher does) never miss the arena.
+        let e = Engine::new(EngineConfig {
+            capacity: 40_000,
+            shards: 4,
+            workers: 4,
+            pools: 2,
+            artifacts_dir: None,
+        })
+        .unwrap();
+        let ks = keys(4_000, 12);
+        let mut cycle = |op| {
+            let r = e.execute_async_op(op, &ks).wait();
+            e.arena().flags().donate(r.outcomes);
+        };
+        for _ in 0..3 {
+            cycle(OpKind::Insert);
+            cycle(OpKind::Query);
+            cycle(OpKind::Delete);
+        }
+        let before = e.arena_stats();
+        for _ in 0..15 {
+            cycle(OpKind::Insert);
+            cycle(OpKind::Query);
+            cycle(OpKind::Delete);
+        }
+        let after = e.arena_stats();
+        assert_eq!(after.misses, before.misses, "steady-state engine allocated scratch");
+        assert!(after.hits > before.hits);
     }
 }

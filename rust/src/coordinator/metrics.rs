@@ -1,7 +1,9 @@
-//! Serving metrics: per-op counters, latency histograms, and per-pool
-//! device stats for multi-pool topologies.
+//! Serving metrics: per-op counters, latency histograms, per-pool
+//! device stats for multi-pool topologies, and the batch-scratch
+//! arena's hit/miss/resident counters.
 
 use crate::coordinator::request::OpKind;
+use crate::mem::ArenaStats;
 use crate::util::stats::Histogram;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -109,6 +111,20 @@ impl Metrics {
         line
     }
 
+    /// Arena section of the STATS reply:
+    /// `arena: hits=H misses=M hit_rate=99.9% resident=NB`. A steady
+    /// server holds `misses` constant — the observable "zero scratch
+    /// allocations after warmup" property.
+    pub fn arena_summary(stats: &ArenaStats) -> String {
+        format!(
+            "arena: hits={} misses={} hit_rate={:.1}% resident={}B",
+            stats.hits,
+            stats.misses,
+            stats.hit_rate() * 100.0,
+            stats.resident_bytes
+        )
+    }
+
     /// One-line human-readable summary (the server's STATS reply).
     pub fn summary(&self) -> String {
         let line = |name: &str, m: &OpMetrics| {
@@ -159,5 +175,27 @@ mod tests {
         let line = Metrics::pools_summary(&stats);
         assert_eq!(line, "pools: 0[w=2 launches=12 depth=1] 1[w=2 launches=9 depth=0]");
         assert_eq!(Metrics::pools_summary(&[]), "pools:");
+    }
+
+    #[test]
+    fn arena_summary_reports_every_counter() {
+        let s = ArenaStats {
+            hits: 99,
+            misses: 1,
+            resident_bytes: 4096,
+        };
+        assert_eq!(
+            Metrics::arena_summary(&s),
+            "arena: hits=99 misses=1 hit_rate=99.0% resident=4096B"
+        );
+        let idle = ArenaStats {
+            hits: 0,
+            misses: 0,
+            resident_bytes: 0,
+        };
+        assert_eq!(
+            Metrics::arena_summary(&idle),
+            "arena: hits=0 misses=0 hit_rate=100.0% resident=0B"
+        );
     }
 }

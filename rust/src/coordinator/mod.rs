@@ -14,11 +14,13 @@
 //! * [`shard`]   — key-space sharding across multiple filters for
 //!   multi-device topologies, behind **one** submission entry point:
 //!   `ShardedFilter::submit(backend, OpKind, keys) -> BatchTicket`.
-//!   Batches scatter once into a flat shard-contiguous buffer, split
-//!   into per-stream segments of the engine's backend, and execute as
-//!   fused launches that overlap across streams, with per-key results
-//!   permuted back to input order and the per-stream completions joined
-//!   by the ticket;
+//!   Batches scatter once into a flat shard-contiguous buffer **leased
+//!   from the pipeline's shared [`crate::mem::BufferArena`]**; each
+//!   backend stream's fused kernel reads a slice view of that one
+//!   buffer (no per-segment copies), launches overlap across streams,
+//!   per-key results permute back to input order, and the ticket — the
+//!   join of all per-stream completions — recycles the leases when it
+//!   resolves, so a warmed-up pipeline allocates no batch scratch;
 //! * [`engine`]  — ties filter + backend + epoch + (optional) PJRT
 //!   runtime into a servable engine (`execute`/`execute_op`/
 //!   `execute_async`, all one `OpKind` dispatch);

@@ -131,9 +131,10 @@ fn handle_conn(
             }
             "LEN" => format!("OK {}", engine.len()),
             "STATS" => format!(
-                "OK {} | {}",
+                "OK {} | {} | {}",
                 engine.metrics.summary(),
-                crate::coordinator::metrics::Metrics::pools_summary(&engine.pool_stats())
+                crate::coordinator::metrics::Metrics::pools_summary(&engine.pool_stats()),
+                crate::coordinator::metrics::Metrics::arena_summary(&engine.arena_stats())
             ),
             op_str => match OpKind::parse(&op_str.to_ascii_lowercase()) {
                 Some(op) => {
@@ -280,6 +281,8 @@ mod tests {
         let stats = c.call("STATS").unwrap();
         assert!(stats.starts_with("OK insert:"));
         assert!(stats.contains("pools: 0[w="), "per-pool stats missing: {stats}");
+        assert!(stats.contains("arena: hits="), "arena counters missing: {stats}");
+        assert!(stats.contains("resident="), "arena residency missing: {stats}");
         assert!(c.call("BOGUS 1").unwrap().starts_with("ERR"));
         assert_eq!(c.call("QUIT").unwrap(), "BYE");
 

@@ -13,58 +13,73 @@
 //! [`DeviceTopology`](crate::device::DeviceTopology), or any
 //! future backend — and get a [`BatchTicket`] back without a barrier.
 //! Synchronous execution is not a separate API: sync = `submit` +
-//! [`BatchTicket::wait`]. The per-op
-//! `{insert,contains,remove}_batch{,_map,_map_async,_map_async_topo}`
-//! method family this replaces (12 entry points × hand-copied bodies) is
-//! gone; see ROADMAP's migration table.
+//! [`BatchTicket::wait`].
 //!
-//! ## Fused batch pipeline
+//! ## Fused batch pipeline over leased scratch
 //!
 //! A submitted batch runs as **one fused launch per backend stream**,
-//! not one per shard. The batch is first scattered shard-contiguously
-//! with a two-pass counting scatter (per-shard histogram → prefix
-//! offsets → one flat `(key, original index)` buffer — a single
-//! allocation, no per-shard `Vec<Vec<_>>`) on the calling thread (the
-//! overlappable stage), then split into per-stream segments: each stream
-//! receives the contiguous slices of the shards it owns
-//! ([`Backend::stream_for_shard`]) plus a local → global shard table,
-//! and one kernel is submitted per non-empty segment. All shards of a
-//! segment execute concurrently inside its launch — the multi-device
-//! parallelism the GPU analogue gets from one kernel over partitioned
-//! device memory — and segments on *different* streams genuinely
-//! overlap, while each shard's batches stay FIFO on its owning stream
-//! (mutation order per shard = submission order). Single-stream
-//! backends skip the split; single-shard filters skip the scatter and
-//! permutation entirely (owned key vector, direct positional writes).
+//! not one per shard — and, after warmup, **without touching the global
+//! allocator**. Every piece of batch scratch is a capacity-retaining
+//! [`Lease`] from the filter's [`BufferArena`] (shared with the engine
+//! and batcher above it; see [`crate::mem`]):
+//!
+//! * the single flat `(key, original index)` buffer the two-pass
+//!   counting scatter fills shard-contiguously,
+//! * one index buffer holding, back to back, the per-shard offset
+//!   table, the scatter cursors, the per-stream item counts and every
+//!   stream segment's shard table,
+//! * the shared out vector outcomes scatter into, and
+//! * the per-shard success tallies.
+//!
+//! Each backend stream's fused kernel receives a **slice view** of the
+//! one flat buffer — the contiguous slabs of the shards that stream
+//! owns, addressed through its segment table — instead of an owned
+//! per-segment copy. The old path copied the full batch a second time,
+//! once per stream segment; now the scatter's single staging copy is
+//! the only per-key copy on any path, streams or not. A batch whose
+//! shards all land on **one** stream (a 1-stream backend, a single-shard
+//! filter, or a topology whose pinning concentrates the batch) skips
+//! segment construction entirely and submits the whole scatter as one
+//! identity-mapped segment; streams that own none of the batch get no
+//! setup work at all — not even a clone of the op or shard `Arc`s.
 //!
 //! Every segment kernel scatters outcomes through the **global**
-//! permutation index into one shared out vector, so the answer at
-//! position `i` is for key `i` no matter which stream ran it — the
-//! serving layer's positional responses stay correct under `shards > 1`
-//! and `streams > 1` alike.
+//! permutation index into the one shared out vector, so the answer at
+//! position `i` is for key `i` no matter which stream ran it, and the
+//! permutation index is `u32`: one fused launch covers at most
+//! `u32::MAX` keys, and `submit` transparently splits larger batches
+//! into chunks whose outcomes concatenate back in input order (the
+//! scatter hard-asserts the bound).
 //!
-//! The permutation index is `u32`, so one fused launch covers at most
-//! `u32::MAX` keys; `submit` transparently splits larger batches into
-//! chunk-sized launches whose outcomes concatenate back in input order
-//! (and the scatter hard-asserts the bound — a silent truncation would
-//! scatter outcomes to the wrong positions).
+//! ## Lease lifecycle: who allocates, who recycles
 //!
-//! ## Ticket lifecycle
+//! `submit` **leases** all scratch on the calling thread (the
+//! overlappable stage). The leases move into the chunk's shared task
+//! state, co-owned by the kernels and the ticket, so nothing borrows
+//! the submitting frame across the async boundary. **Recycling is tied
+//! to [`BatchTicket`] resolution** — wait *or* drop, the PR 2/3/4
+//! contract: the ticket first drains *every* launch of the batch (all
+//! streams, all chunks, even past a panicked sibling), and only then
+//! takes the scratch out of the shared state and drops the leases back
+//! into the arena. A buffer therefore can never return to the pool —
+//! and be handed to a concurrent submit — while a kernel can still
+//! touch it. The out vector is the one exception to "drop recycles":
+//! `wait` *detaches* it and returns it to the caller as the outcomes
+//! vector; the batcher donates it back to the arena once per-client
+//! responses are scattered (see [`super::batcher`]), closing the cycle.
+//! Ticket semantics are otherwise unchanged: the per-shard tallies
+//! merge into the occupancy ledger exactly once at resolution, a kernel
+//! panic re-raises at `wait()` *after* the full drain (ledger skipped
+//! for the whole batch), and dropping a ticket unwaited — even during
+//! another unwind — never aborts.
 //!
-//! The scatter buffers, the shared out vector and the per-shard tallies
-//! move into `Arc`-owned task state co-owned by the kernels and the
-//! ticket, so nothing borrows the submitting frame across the async
-//! boundary. [`BatchTicket::wait`] drains **every** launch of the batch
-//! (all streams, all chunks — even if one panicked, so the shared state
-//! is quiescent before it is touched), merges the per-shard tallies into
-//! the occupancy ledger exactly once, and returns
-//! `(successes, outcomes)` with outcomes positional in the submitted key
-//! order. A kernel panic on any stream re-raises at `wait()` *after*
-//! the full drain, and the ledger is skipped for the whole batch.
-//! Dropping a ticket unwaited still drains every launch and applies the
-//! ledger (outcomes are discarded, a panic is swallowed — never a
-//! double-panic abort, even when the drop happens during another
-//! unwind), so occupancy counters never drift.
+//! The steady-state zero-allocation property is enforced, not assumed:
+//! the region between the `ARENA_HOT_PATH` markers below is checked by
+//! `scripts/check_api_surface.sh` for reintroduced ad-hoc allocations,
+//! and `tests/alloc_reuse.rs` asserts a 100% arena hit rate over a
+//! sustained mixed workload. (Fixed-size control blocks — the `Arc`ed
+//! kernel closures, the O(streams) token list — are not batch scratch
+//! and are deliberately out of scope.)
 //!
 //! Phase interaction: the ticket itself knows nothing about the epoch
 //! guard — `Engine::execute_async` pins the request's phase token for
@@ -75,6 +90,7 @@
 use crate::device::{Backend, LaunchToken, SendMutPtr, WarpCtx};
 use crate::filter::batch::op_fn;
 use crate::filter::{CuckooConfig, CuckooFilter, FilterError, Layout};
+use crate::mem::{BufferArena, Lease};
 use crate::op::OpKind;
 use crate::util::prng::mix64;
 use std::cell::UnsafeCell;
@@ -95,31 +111,12 @@ pub struct ShardedFilter<L: Layout> {
     /// submitting frame.
     shards: Arc<Vec<CuckooFilter<L>>>,
     route_seed: u64,
-}
-
-/// A batch scattered into shard-contiguous order: the single flat
-/// per-batch allocation plus the O(#shards) offset table.
-struct ShardScatter {
-    /// `(key, original index)` pairs grouped by shard.
-    flat: Vec<(u64, u32)>,
-    /// Per-shard ranges into `flat`: shard `s` owns
-    /// `flat[offsets[s]..offsets[s + 1]]`.
-    offsets: Vec<usize>,
-}
-
-/// One stream's slice of a scattered batch: the shard-contiguous items
-/// of the shards this stream owns, with local offsets and the local →
-/// global shard index table the fused kernel routes through.
-struct StreamSegment {
-    /// Global indices of the shards in this segment, ascending.
-    shard_ids: Vec<usize>,
-    /// `(key, original index)` pairs of those shards, shard-contiguous.
-    /// The original indices stay **global**, so every stream scatters
-    /// its outcomes into the one shared out vector at the right
-    /// positions.
-    flat: Vec<(u64, u32)>,
-    /// Local ranges: segment shard `s` owns `flat[offsets[s]..offsets[s+1]]`.
-    offsets: Vec<usize>,
+    /// Scratch pool every `submit` leases from; shared with the layers
+    /// above via [`ShardedFilter::with_arena`].
+    arena: Arc<BufferArena>,
+    /// The three per-key primitives, wrapped once at construction so
+    /// `submit` clones an `Arc` instead of allocating one per call.
+    ops: [OpFn<L>; 3],
 }
 
 /// Which occupancy-ledger update a batch op owes its shards on
@@ -141,40 +138,100 @@ impl LedgerOp {
     }
 }
 
-/// Out vector owned across the async boundary. Workers write disjoint
-/// slots during the launch (same contract as [`SendMutPtr`]); the ticket
-/// takes the vector only after every launch retires.
-struct OutCell(UnsafeCell<Vec<bool>>);
-// SAFETY: writes are per-slot disjoint and confined to the launches; the
-// only post-launch access is the ticket's exclusive take after the full
-// drain.
-unsafe impl Sync for OutCell {}
-unsafe impl Send for OutCell {}
+/// One chunk's leased scratch, owned by the shared task state for the
+/// duration of the in-flight launches. Paths that skip a buffer hold a
+/// [`Lease::detached`] placeholder (no pool traffic).
+struct Scratch {
+    /// Shared out vector; kernels write disjoint slots through a raw
+    /// pointer derived once at submit. `wait` detaches it as the
+    /// outcomes vector; drop-without-wait recycles it.
+    out: Lease<bool>,
+    /// Per-shard success tallies, indexed globally on every stream.
+    per_shard: Lease<AtomicU64>,
+    /// The one flat `(key, original index)` scatter buffer every stream
+    /// segment views slices of.
+    flat: Lease<(u64, u32)>,
+    /// Offsets + cursors + per-stream counts + segment tables, packed
+    /// back to back (see `submit_chunk` for the layout).
+    tables: Lease<usize>,
+    /// Single-shard fast path only: the staged key copy (the one
+    /// unavoidable copy — an async launch cannot borrow the caller's
+    /// slice).
+    keys: Lease<u64>,
+}
 
 /// `Arc`-owned task state of one in-flight chunk, co-owned by its
-/// kernel closures and the ticket: the shared out vector and per-shard
-/// tallies. (The scatter segments are owned by their kernel closures
-/// alone — only the kernels read them.)
+/// kernel closures and the ticket.
+///
+/// SAFETY model (the same contract the PR-2 `OutCell` carried): kernels
+/// take *shared* references to the scratch for the duration of their
+/// launch (all reads, except the disjoint-slot writes through the
+/// pre-derived out pointer). The only exclusive access is the ticket's
+/// `take_scratch`, which runs strictly after every launch of the chunk
+/// has been drained — so it can never overlap a kernel's shared borrow.
 struct AsyncBatchState {
-    out: OutCell,
-    per_shard: Vec<AtomicU64>,
+    scratch: UnsafeCell<Option<Scratch>>,
+}
+
+unsafe impl Send for AsyncBatchState {}
+unsafe impl Sync for AsyncBatchState {}
+
+impl AsyncBatchState {
+    fn new(scratch: Scratch) -> Self {
+        Self {
+            scratch: UnsafeCell::new(Some(scratch)),
+        }
+    }
+
+    /// Shared view of the scratch.
+    ///
+    /// SAFETY: callers must hold the reference only while no exclusive
+    /// take can run — i.e. from a kernel of this chunk (the ticket
+    /// drains all launches before taking) or from the submitting thread
+    /// before the ticket is returned.
+    unsafe fn scratch_ref(&self) -> &Scratch {
+        (*self.scratch.get())
+            .as_ref()
+            .expect("batch scratch taken while launches in flight")
+    }
+
+    /// Take the scratch for recycling.
+    ///
+    /// SAFETY: callers must guarantee every launch of the chunk has
+    /// retired (the ticket's full drain), making this access exclusive.
+    unsafe fn take_scratch(&self) -> Option<Scratch> {
+        (*self.scratch.get()).take()
+    }
+}
+
+/// One stream segment's view into the shared scratch: the global ids of
+/// the shards it owns, each slab's start in the global flat buffer, and
+/// the segment-local cumulative bounds the kernel walks.
+struct SegView<'a> {
+    /// Segment-local shard index → global shard id, ascending.
+    ids: &'a [usize],
+    /// Global flat-buffer start of each segment shard's slab (len = m).
+    starts: &'a [usize],
+    /// Segment-local cumulative item bounds (len = m + 1): segment
+    /// shard `s` owns local items `bounds[s]..bounds[s + 1]`.
+    bounds: &'a [usize],
 }
 
 /// The per-warp body of the fused kernel, shared by every stream
-/// segment: walk the shard-contiguous flat buffer, run `op` against
-/// each item's shard, scatter outcomes back through the permutation
-/// index, and flush warp-local tallies once per shard boundary.
-/// `shard_ids` maps a segment-local shard index to the global one
-/// (`flat[offsets[s]..offsets[s+1]]` belongs to global shard
-/// `shard_ids[s]`) — the identity for single-stream launches, a
-/// stream's shard subset for topology segments. `per_shard` is always
-/// indexed globally, so segments on different streams tally into
-/// disjoint slots of one shared table.
+/// segment: walk the segment's items in shard-contiguous order, run
+/// `op` against each item's shard, scatter outcomes back through the
+/// **global** permutation index, and flush warp-local tallies once per
+/// shard boundary. Item `j` of the segment lives at
+/// `flat[seg.starts[s] + (j - seg.bounds[s])]` — a slice view of the
+/// one shared scatter buffer, not a per-segment copy. For a segment
+/// covering the whole batch, `starts == bounds[..m]` makes that
+/// degenerate to `flat[j]`. `per_shard` is always indexed globally, so
+/// segments on different streams tally into disjoint slots of one
+/// shared table.
 fn fused_warp<L>(
     shards: &[CuckooFilter<L>],
-    shard_ids: &[usize],
+    seg: SegView<'_>,
     flat: &[(u64, u32)],
-    offsets: &[usize],
     per_shard: &[AtomicU64],
     out: *mut bool,
     op: &dyn Fn(&CuckooFilter<L>, u64) -> bool,
@@ -183,19 +240,29 @@ fn fused_warp<L>(
     L: Layout,
 {
     // Shard of the warp's first item; items are shard-contiguous, so the
-    // kernel only ever steps the shard index forward.
-    let mut s = offsets.partition_point(|&o| o <= ctx.range.start) - 1;
+    // kernel only ever steps the shard index forward. The view fields
+    // only change at shard boundaries — hoist them into locals so the
+    // per-key loop does one flat load, not three table reads.
+    let mut s = seg.bounds.partition_point(|&o| o <= ctx.range.start) - 1;
+    let mut base = seg.bounds[s];
+    let mut limit = seg.bounds[s + 1];
+    let mut start = seg.starts[s];
+    let mut shard_id = seg.ids[s];
     let mut local = 0u64;
     for j in ctx.range.clone() {
-        while j >= offsets[s + 1] {
+        while j >= limit {
             if local > 0 {
-                per_shard[shard_ids[s]].fetch_add(local, Ordering::Relaxed);
+                per_shard[shard_id].fetch_add(local, Ordering::Relaxed);
                 local = 0;
             }
             s += 1;
+            base = seg.bounds[s];
+            limit = seg.bounds[s + 1];
+            start = seg.starts[s];
+            shard_id = seg.ids[s];
         }
-        let (key, orig) = flat[j];
-        let ok = op(&shards[shard_ids[s]], key);
+        let (key, orig) = flat[start + (j - base)];
+        let ok = op(&shards[shard_id], key);
         // SAFETY: `orig` indices are a permutation — each slot is
         // written by exactly one warp item (see SendMutPtr contract).
         unsafe { *out.add(orig as usize) = ok };
@@ -203,11 +270,19 @@ fn fused_warp<L>(
         ctx.tally(ok);
     }
     if local > 0 {
-        per_shard[shard_ids[s]].fetch_add(local, Ordering::Relaxed);
+        per_shard[shard_id].fetch_add(local, Ordering::Relaxed);
     }
 }
 
 impl<L: Layout> ShardedFilter<L> {
+    fn cached_ops() -> [OpFn<L>; 3] {
+        [
+            Arc::new(op_fn::<L>(OpKind::Insert)),
+            Arc::new(op_fn::<L>(OpKind::Query)),
+            Arc::new(op_fn::<L>(OpKind::Delete)),
+        ]
+    }
+
     /// `capacity` total keys across `num_shards` shards.
     pub fn with_capacity(capacity: usize, num_shards: usize) -> Result<Self, FilterError> {
         let num_shards = num_shards.max(1);
@@ -223,6 +298,8 @@ impl<L: Layout> ShardedFilter<L> {
         Ok(Self {
             shards: Arc::new(shards),
             route_seed: 0xD15EA5E,
+            arena: Arc::new(BufferArena::new()),
+            ops: Self::cached_ops(),
         })
     }
 
@@ -232,7 +309,22 @@ impl<L: Layout> ShardedFilter<L> {
         Self {
             shards: Arc::new(vec![filter]),
             route_seed: 0xD15EA5E,
+            arena: Arc::new(BufferArena::new()),
+            ops: Self::cached_ops(),
         }
+    }
+
+    /// Replace the scratch arena (builder form). The engine threads its
+    /// own arena through here so filter, batcher and server share one
+    /// set of free lists and one counter story.
+    pub fn with_arena(mut self, arena: Arc<BufferArena>) -> Self {
+        self.arena = arena;
+        self
+    }
+
+    /// The arena `submit` leases its batch scratch from.
+    pub fn arena(&self) -> &Arc<BufferArena> {
+        &self.arena
     }
 
     #[inline]
@@ -271,33 +363,58 @@ impl<L: Layout> ShardedFilter<L> {
         self.shards[self.route(key)].remove(key)
     }
 
+    /// Apply a completed batch's per-shard tallies to the occupancy
+    /// ledgers.
+    fn apply_ledger(shards: &[CuckooFilter<L>], per_shard: &[AtomicU64], ledger: LedgerOp) {
+        for (s, tally) in per_shard.iter().enumerate() {
+            let n = tally.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            match ledger {
+                LedgerOp::Add => shards[s].add_count(n),
+                LedgerOp::Sub => shards[s].sub_count(n),
+                LedgerOp::None => {}
+            }
+        }
+    }
+
+    // ARENA_HOT_PATH_BEGIN — steady-state allocation-free zone: no
+    // ad-hoc Vec growth in here; all batch scratch comes from the
+    // arena. Checked by scripts/check_api_surface.sh.
+
     /// Submit one batched operation to `backend` without a barrier: the
-    /// scatter/permute runs on the calling thread, one fused kernel is
-    /// enqueued stream-ordered per backend stream owning shards of the
-    /// batch, and the returned [`BatchTicket`] resolves to
-    /// `(successes, outcomes)` with outcomes positional in `keys` order.
-    /// Synchronous callers chain `.wait()`.
+    /// scatter/permute runs on the calling thread over leased scratch,
+    /// one fused kernel is enqueued stream-ordered per backend stream
+    /// owning shards of the batch, and the returned [`BatchTicket`]
+    /// resolves to `(successes, outcomes)` with outcomes positional in
+    /// `keys` order. Synchronous callers chain `.wait()`.
     ///
-    /// The occupancy ledger for mutations is applied when the ticket
-    /// resolves (wait *or* drop), never at submit.
+    /// The occupancy ledger for mutations is applied — and the leased
+    /// scratch recycled — when the ticket resolves (wait *or* drop),
+    /// never at submit.
     pub fn submit<B: Backend + ?Sized>(
         &self,
         backend: &B,
         op: OpKind,
         keys: &[u64],
     ) -> BatchTicket<L> {
-        self.submit_with(
-            backend,
-            LedgerOp::for_op(op),
-            Arc::new(op_fn::<L>(op)),
-            keys,
-            FUSED_CHUNK,
-        )
+        let idx = match op {
+            OpKind::Insert => 0,
+            OpKind::Query => 1,
+            OpKind::Delete => 2,
+        };
+        self.submit_with(backend, LedgerOp::for_op(op), self.ops[idx].clone(), keys, FUSED_CHUNK)
     }
 
-    /// Two-pass counting scatter: histogram → exclusive prefix → one
-    /// flat `(key, original index)` buffer in shard order.
-    fn scatter(&self, keys: &[u64]) -> ShardScatter {
+    /// Two-pass counting scatter into leased scratch: on return,
+    /// `tables[0..=S]` is the per-shard offset table into `flat`, and
+    /// `flat` holds the `(key, original index)` pairs shard-contiguously
+    /// (shard `s` owns `flat[tables[s]..tables[s + 1]]`). The fill-pass
+    /// cursors are left at `tables[S + 1..2S + 1]` (dead afterwards).
+    /// Both buffers must arrive with enough capacity — the lease
+    /// guarantees it, so neither `resize` reallocates.
+    fn scatter_into(&self, keys: &[u64], tables: &mut Vec<usize>, flat: &mut Vec<(u64, u32)>) {
         let num_shards = self.shards.len();
         // Hard bound, release builds included: a batch beyond the u32
         // permutation index would silently truncate `i as u32` below and
@@ -308,69 +425,26 @@ impl<L: Layout> ShardedFilter<L> {
             "batch of {} keys exceeds the u32 permutation index; chunk the batch",
             keys.len()
         );
-        // (No num_shards == 1 special case here: single-shard filters
-        // never reach the scatter — `submit_chunk` takes its owned-keys
-        // fast path first — and `route` degenerates to 0 anyway.)
-        let mut offsets = vec![0usize; num_shards + 1];
+        tables.clear();
+        tables.resize(num_shards + 1, 0);
         for &k in keys {
-            offsets[self.route(k) + 1] += 1;
+            tables[self.route(k) + 1] += 1;
         }
         for s in 0..num_shards {
-            offsets[s + 1] += offsets[s];
+            tables[s + 1] += tables[s];
         }
-        let mut cursor: Vec<usize> = offsets[..num_shards].to_vec();
-        let mut flat = vec![(0u64, 0u32); keys.len()];
+        // Cursors start as a copy of the offsets, appended in place.
+        tables.extend_from_within(0..num_shards);
+        flat.clear();
+        flat.resize(keys.len(), (0, 0));
         // The route hash is deliberately recomputed in the fill pass
         // (GPU-style: one mix64 is cheaper than materialising and
         // re-reading an O(n) route array, and it keeps the scatter at a
-        // single flat allocation).
+        // single flat staging copy).
         for (i, &k) in keys.iter().enumerate() {
-            let s = self.route(k);
-            flat[cursor[s]] = (k, i as u32);
-            cursor[s] += 1;
-        }
-        ShardScatter { flat, offsets }
-    }
-
-    /// Split a scattered batch into per-stream segments: stream `p`
-    /// receives the contiguous slices of every shard it owns,
-    /// concatenated in shard order, plus the local → global shard table.
-    /// Original indices are left global (the shared out vector is
-    /// positional across streams).
-    fn split_by_stream<B: Backend + ?Sized>(
-        &self,
-        scatter: &ShardScatter,
-        backend: &B,
-    ) -> Vec<StreamSegment> {
-        let num_shards = self.shards.len();
-        let mut segments: Vec<StreamSegment> = (0..backend.streams())
-            .map(|_| StreamSegment {
-                shard_ids: Vec::new(),
-                flat: Vec::new(),
-                offsets: vec![0],
-            })
-            .collect();
-        for s in 0..num_shards {
-            let seg = &mut segments[backend.stream_for_shard(s)];
-            seg.shard_ids.push(s);
-            seg.flat.extend_from_slice(&scatter.flat[scatter.offsets[s]..scatter.offsets[s + 1]]);
-            seg.offsets.push(seg.flat.len());
-        }
-        segments
-    }
-
-    /// Apply a completed batch's per-shard tallies to the occupancy
-    /// ledgers.
-    fn apply_ledger(shards: &[CuckooFilter<L>], per_shard: &[u64], ledger: LedgerOp) {
-        for (s, &n) in per_shard.iter().enumerate() {
-            if n == 0 {
-                continue;
-            }
-            match ledger {
-                LedgerOp::Add => shards[s].add_count(n),
-                LedgerOp::Sub => shards[s].sub_count(n),
-                LedgerOp::None => {}
-            }
+            let cursor = num_shards + 1 + self.route(k);
+            flat[tables[cursor]] = (k, i as u32);
+            tables[cursor] += 1;
         }
     }
 
@@ -394,15 +468,19 @@ impl<L: Layout> ShardedFilter<L> {
             inner: Some(TicketState {
                 chunks,
                 shards: self.shards.clone(),
+                arena: self.arena.clone(),
                 ledger,
             }),
         }
     }
 
-    /// Scatter one chunk and submit its fused kernels: one launch on a
-    /// single-stream backend (or a single-shard filter, which also skips
-    /// the permutation), one launch per non-empty stream segment
-    /// otherwise.
+    /// Scatter one chunk into leased scratch and submit its fused
+    /// kernels: one identity-mapped launch when a single stream owns
+    /// the whole chunk (1-stream backends, single-shard filters, and
+    /// topologies whose pinning concentrates the batch — no segment
+    /// tables, no per-segment copies), one launch per non-empty stream
+    /// segment otherwise. Streams owning none of the chunk get no setup
+    /// work at all.
     fn submit_chunk<B: Backend + ?Sized>(
         &self,
         backend: &B,
@@ -410,28 +488,37 @@ impl<L: Layout> ShardedFilter<L> {
         keys: &[u64],
     ) -> ChunkInFlight {
         let n = keys.len();
-        let state = Arc::new(AsyncBatchState {
-            out: OutCell(UnsafeCell::new(vec![false; n])),
-            per_shard: (0..self.shards.len()).map(|_| AtomicU64::new(0)).collect(),
-        });
+        let num_shards = self.shards.len();
+        let mut scratch = Scratch {
+            out: self.arena.flags().lease(n),
+            per_shard: self.arena.tallies().lease(num_shards),
+            flat: Lease::detached(),
+            tables: Lease::detached(),
+            keys: Lease::detached(),
+        };
+        scratch.out.resize(n, false);
+        scratch.per_shard.resize_with(num_shards, || AtomicU64::new(0));
         // Derive the out pointer ONCE, before any kernel can run —
         // re-forming it per segment would create a fresh `&mut Vec`
         // while earlier streams may already be writing through the
         // previous derivation. Writes stay disjoint across streams
         // because `orig` indices are a global permutation, and the
-        // pointee is pinned by the Arc'd task state each kernel co-owns
-        // (SendMutPtr contract).
-        let out_raw = unsafe { (*state.out.0.get()).as_mut_ptr() };
-        let mut tokens = Vec::new();
-        if self.shards.len() == 1 {
-            // Single shard: no permutation needed — own a plain key
-            // vector (half the copy traffic of (key, index) pairs) and
-            // write outcomes straight to their input positions. The one
-            // shard lives on one stream either way.
+        // pointee is pinned by the scratch the task state owns until
+        // the ticket's post-drain take (SendMutPtr contract). The heap
+        // buffer does not move when the lease moves into the state.
+        let out_raw = scratch.out.as_mut_ptr();
+        let mut tokens = Vec::new(); // alloc-ok: O(streams) control block, not key-scaled scratch
+        if num_shards == 1 {
+            // Single shard: no scatter, no permutation — stage the keys
+            // into a leased buffer (the one unavoidable copy: an async
+            // launch cannot borrow the caller's slice) and write
+            // outcomes straight to their input positions.
             assert!(n <= FUSED_CHUNK, "chunk exceeds the fused launch bound");
+            scratch.keys = self.arena.keys().lease(n);
+            scratch.keys.extend_from_slice(keys);
+            let state = Arc::new(AsyncBatchState::new(scratch));
             let shards = self.shards.clone();
             let kstate = state.clone();
-            let keys: Vec<u64> = keys.to_vec();
             let op = op.clone();
             let out_ptr = SendMutPtr(out_raw);
             let stream = backend.stream_for_shard(0);
@@ -439,10 +526,13 @@ impl<L: Layout> ShardedFilter<L> {
                 stream,
                 n,
                 Arc::new(move |ctx: &mut WarpCtx| {
+                    // SAFETY: shared borrow from a live kernel; the
+                    // exclusive take happens only after the drain.
+                    let scratch = unsafe { kstate.scratch_ref() };
                     let shard = &shards[0];
                     let mut local = 0u64;
                     for i in ctx.range.clone() {
-                        let ok = (*op)(shard, keys[i]);
+                        let ok = (*op)(shard, scratch.keys[i]);
                         // SAFETY: slot `i` is written by exactly one warp
                         // item (SendMutPtr contract).
                         unsafe { *out_ptr.0.add(i) = ok };
@@ -450,32 +540,75 @@ impl<L: Layout> ShardedFilter<L> {
                         ctx.tally(ok);
                     }
                     if local > 0 {
-                        kstate.per_shard[0].fetch_add(local, Ordering::Relaxed);
+                        scratch.per_shard[0].fetch_add(local, Ordering::Relaxed);
                     }
                 }),
             ));
             return ChunkInFlight { tokens, state };
         }
-        let scatter = self.scatter(keys);
-        if backend.streams() == 1 {
-            // Single stream: the whole scatter is one segment with the
-            // identity shard table — skip the split copy.
+
+        // Scatter, then lay the per-stream bookkeeping out back to back
+        // in the same leased index buffer:
+        //   [0 ..= S]               per-shard offsets into `flat`
+        //   [S+1 .. 2S+1]           scatter cursors, reused after the
+        //                           fill as the shard → stream cache
+        //   [counts_at ..][streams] per-stream item counts
+        //   [desc_at ..][2·streams] per-stream (table start, shard count)
+        //   then each non-empty stream's segment table:
+        //     ids (m) · starts (m) · bounds (m+1)
+        // Worst case ≈ 5S + 5·streams + 4 entries, leased once.
+        let streams = backend.streams();
+        scratch.flat = self.arena.pairs().lease(n);
+        scratch.tables = self.arena.indices().lease(5 * num_shards + 5 * streams + 4);
+        self.scatter_into(keys, &mut scratch.tables, &mut scratch.flat);
+        let tables = &mut scratch.tables;
+        let counts_at = tables.len();
+        tables.resize(counts_at + streams, 0);
+        // One stream_for_shard call per shard: cache the assignment in
+        // the dead cursor slots ([S+1..2S+1]) so the segment build below
+        // reads it back instead of repeating the virtual call per
+        // (stream, shard) pair.
+        for s in 0..num_shards {
+            let stream = backend.stream_for_shard(s);
+            tables[num_shards + 1 + s] = stream;
+            let len = tables[s + 1] - tables[s];
+            tables[counts_at + stream] += len;
+        }
+        let active = tables[counts_at..counts_at + streams].iter().filter(|&&c| c > 0).count();
+
+        if active <= 1 {
+            // One stream owns the whole chunk: submit the scatter as a
+            // single identity-mapped segment — `starts == bounds[..S]`
+            // collapses the view to `flat[j]` — with no per-stream
+            // segment construction and no second copy.
+            let stream = (0..streams)
+                .find(|&p| tables[counts_at + p] > 0)
+                .unwrap_or_else(|| backend.stream_for_shard(0));
+            let ids_at = tables.len();
+            tables.extend(0..num_shards);
+            let ids_r = ids_at..ids_at + num_shards;
+            let starts_r = 0..num_shards;
+            let bounds_r = 0..num_shards + 1;
+            let state = Arc::new(AsyncBatchState::new(scratch));
             let shards = self.shards.clone();
             let kstate = state.clone();
             let op = op.clone();
-            let ids: Vec<usize> = (0..self.shards.len()).collect();
-            let ShardScatter { flat, offsets } = scatter;
             let out_ptr = SendMutPtr(out_raw);
             tokens.push(backend.submit(
-                0,
+                stream,
                 n,
                 Arc::new(move |ctx: &mut WarpCtx| {
+                    // SAFETY: shared borrow from a live kernel (see above).
+                    let scratch = unsafe { kstate.scratch_ref() };
                     fused_warp(
                         &shards,
-                        &ids,
-                        &flat,
-                        &offsets,
-                        &kstate.per_shard,
+                        SegView {
+                            ids: &scratch.tables[ids_r.clone()],
+                            starts: &scratch.tables[starts_r.clone()],
+                            bounds: &scratch.tables[bounds_r.clone()],
+                        },
+                        &scratch.flat,
+                        &scratch.per_shard,
                         out_ptr.0,
                         &*op,
                         ctx,
@@ -484,25 +617,72 @@ impl<L: Layout> ShardedFilter<L> {
             ));
             return ChunkInFlight { tokens, state };
         }
-        for (stream, seg) in self.split_by_stream(&scatter, backend).into_iter().enumerate() {
-            if seg.flat.is_empty() {
+
+        // General multi-stream case. Build EVERY segment table before
+        // submitting ANY kernel: once the first kernel is in flight it
+        // reads the index buffer concurrently, so the buffer must be
+        // fully laid out (and never reallocated) by then.
+        let desc_at = tables.len();
+        tables.resize(desc_at + 2 * streams, 0);
+        for stream in 0..streams {
+            if tables[counts_at + stream] == 0 {
+                continue; // idle stream: no table, no kernel, no clones
+            }
+            let ids_at = tables.len();
+            for s in 0..num_shards {
+                if tables[num_shards + 1 + s] == stream {
+                    tables.push(s);
+                }
+            }
+            let m = tables.len() - ids_at;
+            for i in 0..m {
+                let s = tables[ids_at + i];
+                let start = tables[s];
+                tables.push(start);
+            }
+            tables.push(0);
+            for i in 0..m {
+                let s = tables[ids_at + i];
+                let len = tables[s + 1] - tables[s];
+                let prev = tables[tables.len() - 1];
+                tables.push(prev + len);
+            }
+            tables[desc_at + 2 * stream] = ids_at;
+            tables[desc_at + 2 * stream + 1] = m;
+        }
+        let state = Arc::new(AsyncBatchState::new(scratch));
+        // SAFETY: shared borrow before any take can run; kernels
+        // submitted below only ever read the same finalized layout.
+        let view = unsafe { state.scratch_ref() };
+        for stream in 0..streams {
+            let seg_n = view.tables[counts_at + stream];
+            if seg_n == 0 {
                 continue;
             }
+            let ids_at = view.tables[desc_at + 2 * stream];
+            let m = view.tables[desc_at + 2 * stream + 1];
+            let ids_r = ids_at..ids_at + m;
+            let starts_r = ids_at + m..ids_at + 2 * m;
+            let bounds_r = ids_at + 2 * m..ids_at + 3 * m + 1;
             let shards = self.shards.clone();
             let kstate = state.clone();
             let op = op.clone();
             let out_ptr = SendMutPtr(out_raw);
-            let len = seg.flat.len();
             tokens.push(backend.submit(
                 stream,
-                len,
+                seg_n,
                 Arc::new(move |ctx: &mut WarpCtx| {
+                    // SAFETY: shared borrow from a live kernel (see above).
+                    let scratch = unsafe { kstate.scratch_ref() };
                     fused_warp(
                         &shards,
-                        &seg.shard_ids,
-                        &seg.flat,
-                        &seg.offsets,
-                        &kstate.per_shard,
+                        SegView {
+                            ids: &scratch.tables[ids_r.clone()],
+                            starts: &scratch.tables[starts_r.clone()],
+                            bounds: &scratch.tables[bounds_r.clone()],
+                        },
+                        &scratch.flat,
+                        &scratch.per_shard,
                         out_ptr.0,
                         &*op,
                         ctx,
@@ -512,10 +692,12 @@ impl<L: Layout> ShardedFilter<L> {
         }
         ChunkInFlight { tokens, state }
     }
+
+    // ARENA_HOT_PATH_END
 }
 
 /// One chunk's in-flight launches (one per stream segment) plus the
-/// shared task state their outcomes land in.
+/// shared task state their leased scratch lives in.
 struct ChunkInFlight {
     tokens: Vec<LaunchToken>,
     state: Arc<AsyncBatchState>,
@@ -525,7 +707,8 @@ struct ChunkInFlight {
 /// the join of every fused launch the batch fanned out into (one per
 /// stream segment, per chunk), over shared task state. See the module
 /// docs for the full lifecycle (drain-before-touch, ledger exactly
-/// once, panic at `wait()` only, drop never aborts).
+/// once, scratch recycled at resolution, panic at `wait()` only, drop
+/// never aborts).
 pub struct BatchTicket<L: Layout> {
     inner: Option<TicketState<L>>,
 }
@@ -534,52 +717,58 @@ struct TicketState<L: Layout> {
     /// In submission order; outcomes concatenate chunk by chunk.
     chunks: Vec<ChunkInFlight>,
     shards: Arc<Vec<CuckooFilter<L>>>,
+    arena: Arc<BufferArena>,
     ledger: LedgerOp,
 }
 
 impl<L: Layout> TicketState<L> {
-    fn finish(self, want_out: bool) -> (u64, Vec<bool>) {
+    fn finish(mut self, want_out: bool) -> (u64, Vec<bool>) {
         // Drain EVERY launch before touching shared state: a stream that
-        // panicked must not leave sibling kernels writing into the out
-        // vectors we are about to hand back.
+        // panicked must not leave sibling kernels writing into scratch
+        // we are about to recycle or hand back.
         let mut total = 0u64;
         let mut panicked = false;
-        let mut drained: Vec<Arc<AsyncBatchState>> = Vec::with_capacity(self.chunks.len());
-        for chunk in self.chunks {
-            for tok in chunk.tokens {
+        for chunk in &mut self.chunks {
+            for tok in chunk.tokens.drain(..) {
                 match catch_unwind(AssertUnwindSafe(|| tok.wait())) {
                     Ok(n) => total += n,
                     Err(_) => panicked = true,
                 }
             }
-            drained.push(chunk.state);
         }
         if panicked {
             // Re-raise only after the full drain; the ledger is skipped
             // for the whole batch, as a sync launch's panic would skip
-            // its counter update.
+            // its counter update. The leased scratch recycles on the
+            // unwind (every launch is already drained).
             panic!("device worker panicked");
         }
         let shards: &[CuckooFilter<L>] = &self.shards;
         let mut out = Vec::new();
-        let single = drained.len() == 1;
-        for state in drained {
-            let per_shard: Vec<u64> = state
-                .per_shard
-                .iter()
-                .map(|a| a.load(Ordering::Relaxed))
-                .collect();
-            ShardedFilter::apply_ledger(shards, &per_shard, self.ledger);
+        let single = self.chunks.len() == 1;
+        for chunk in &self.chunks {
+            // SAFETY: every launch retired above, so no kernel holds a
+            // borrow anymore; this take is exclusive.
+            let Some(scratch) = (unsafe { chunk.state.take_scratch() }) else {
+                continue;
+            };
+            ShardedFilter::apply_ledger(shards, &scratch.per_shard, self.ledger);
             if want_out {
-                // SAFETY: every launch retired above, so no worker
-                // touches the cell anymore; this take is exclusive.
-                let chunk_out = unsafe { std::mem::take(&mut *state.out.0.get()) };
+                let chunk_out = scratch.out.detach();
                 if single {
                     out = chunk_out;
                 } else {
-                    out.extend(chunk_out);
+                    out.extend_from_slice(&chunk_out);
+                    // Multi-chunk concatenation (cold: > u32::MAX keys
+                    // or test-sized chunks): recycle the per-chunk
+                    // buffer after copying it out.
+                    self.arena.flags().donate(chunk_out);
                 }
             }
+            // Remaining leases (flat, tables, tallies, staged keys — and
+            // the out vector on the drop-without-wait path) return to
+            // the arena here, after the drain: recycling is tied to
+            // ticket resolution by construction.
         }
         (total, out)
     }
@@ -594,6 +783,9 @@ impl<L: Layout> TicketState<L> {
 impl<L: Layout> BatchTicket<L> {
     /// Block until every launch of the batch retires; returns the merged
     /// success count and the per-key outcomes in submitted key order.
+    /// The outcomes vector is detached arena scratch — long-running
+    /// callers can donate it back (`arena.flags().donate(out)`) to keep
+    /// the steady state allocation-free, as the batcher does.
     pub fn wait(mut self) -> (u64, Vec<bool>) {
         let inner = self.inner.take().expect("ticket already resolved");
         inner.finish(true)
@@ -608,9 +800,10 @@ impl<L: Layout> BatchTicket<L> {
 impl<L: Layout> Drop for BatchTicket<L> {
     fn drop(&mut self) {
         if let Some(inner) = self.inner.take() {
-            // Unwaited tickets still owe their shards the ledger update.
-            // Drop must not panic, so a kernel fault is swallowed here;
-            // callers that care observe it via wait().
+            // Unwaited tickets still owe their shards the ledger update
+            // (and the arena its leases). Drop must not panic, so a
+            // kernel fault is swallowed here; callers that care observe
+            // it via wait().
             let _ = catch_unwind(AssertUnwindSafe(|| inner.finish(false)));
         }
     }
@@ -619,7 +812,7 @@ impl<L: Layout> Drop for BatchTicket<L> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::device::{Device, DeviceTopology};
+    use crate::device::{Device, DeviceTopology, Pinning, TopologyConfig};
     use crate::filter::Fp16;
 
     fn keys(n: usize, stream: u64) -> Vec<u64> {
@@ -646,15 +839,19 @@ mod tests {
     fn scatter_is_shard_contiguous_and_a_permutation() {
         let s = ShardedFilter::<Fp16>::with_capacity(10_000, 5).unwrap();
         let ks = keys(10_000, 9);
-        let sc = s.scatter(&ks);
-        assert_eq!(sc.flat.len(), ks.len());
-        assert_eq!(sc.offsets.len(), 6);
-        assert_eq!(sc.offsets[0], 0);
-        assert_eq!(sc.offsets[5], ks.len());
+        let mut tables = Vec::new();
+        let mut flat = Vec::new();
+        s.scatter_into(&ks, &mut tables, &mut flat);
+        let offsets = &tables[..6];
+        assert_eq!(flat.len(), ks.len());
+        assert_eq!(offsets[0], 0);
+        assert_eq!(offsets[5], ks.len());
+        // The fill cursors end at the next shard's start.
+        assert_eq!(&tables[6..11], &offsets[1..6]);
         let mut seen = vec![false; ks.len()];
         for shard in 0..5 {
-            for j in sc.offsets[shard]..sc.offsets[shard + 1] {
-                let (k, orig) = sc.flat[j];
+            for j in offsets[shard]..offsets[shard + 1] {
+                let (k, orig) = flat[j];
                 assert_eq!(s.route(k), shard, "key routed to wrong shard segment");
                 assert_eq!(ks[orig as usize], k, "permutation index broken");
                 assert!(!seen[orig as usize], "duplicate permutation index");
@@ -809,6 +1006,8 @@ mod tests {
         assert_eq!(ok, 0);
         assert!(out.is_empty());
         assert_eq!(s.len(), 0);
+        // An empty batch leases nothing.
+        assert_eq!(s.arena().stats().acquires(), 0);
     }
 
     #[test]
@@ -889,7 +1088,6 @@ mod tests {
 
     #[test]
     fn topo_explicit_pinning_is_honoured() {
-        use crate::device::{Pinning, TopologyConfig};
         // Pin every shard to pool 1; pool 0 must stay untouched.
         let topo = DeviceTopology::new(TopologyConfig {
             pools: 2,
@@ -904,6 +1102,88 @@ mod tests {
         assert_eq!(s.len(), 8_000);
         assert_eq!(topo.pool(0).launches(), 0, "pool 0 should be idle");
         assert!(topo.pool(1).launches() >= 1);
+    }
+
+    #[test]
+    fn arena_steady_state_submit_has_no_misses_after_warmup() {
+        // The tentpole acceptance at the filter level: once the arena is
+        // warm, a sustained mixed workload leases every piece of batch
+        // scratch from the free lists — zero new allocations, proven by
+        // the miss counter standing still.
+        let device = Device::with_workers(4);
+        let s = ShardedFilter::<Fp16>::with_capacity(20_000, 4).unwrap();
+        let ks = keys(4_096, 50);
+        let mut cycle = |op| {
+            let (_, out) = s.submit(&device, op, &ks).wait();
+            // Close the loop the way the batcher does: give the detached
+            // outcomes buffer back.
+            s.arena().flags().donate(out);
+        };
+        for _ in 0..3 {
+            cycle(OpKind::Insert);
+            cycle(OpKind::Query);
+            cycle(OpKind::Delete);
+        }
+        let before = s.arena().stats();
+        for _ in 0..20 {
+            cycle(OpKind::Insert);
+            cycle(OpKind::Query);
+            cycle(OpKind::Delete);
+        }
+        let after = s.arena().stats();
+        assert_eq!(after.misses, before.misses, "steady-state submit allocated scratch");
+        assert!(after.hits > before.hits, "arena not exercised");
+    }
+
+    #[test]
+    fn one_owning_stream_fast_path_matches_single_stream_lease_pattern() {
+        // Satellite regressions: (1) a topology whose pinning lands the
+        // whole batch on one stream must take the same no-segment-copy
+        // fast path as a 1-stream device — one launch, nothing on the
+        // idle pools; (2) idle streams must cost no per-stream setup,
+        // observable as an identical arena acquire pattern per submit
+        // regardless of how many idle streams surround the active one.
+        let pinned = DeviceTopology::new(TopologyConfig {
+            pools: 4,
+            total_workers: 4,
+            pinning: Pinning::Explicit(vec![1]),
+            ..TopologyConfig::default()
+        });
+        let device = Device::with_workers(4);
+        let sp = ShardedFilter::<Fp16>::with_capacity(40_000, 4).unwrap();
+        let sd = ShardedFilter::<Fp16>::with_capacity(40_000, 4).unwrap();
+        let ks = keys(8_000, 97);
+
+        let acquires_per_submit = |s: &ShardedFilter<Fp16>, backend: &dyn Backend| {
+            // Warm, then measure one steady-state submit.
+            let (_, out) = s.submit(backend, OpKind::Query, &ks).wait();
+            s.arena().flags().donate(out);
+            let before = s.arena().stats();
+            let (_, out) = s.submit(backend, OpKind::Query, &ks).wait();
+            s.arena().flags().donate(out);
+            let after = s.arena().stats();
+            assert_eq!(after.misses, before.misses, "warm submit missed");
+            after.acquires() - before.acquires()
+        };
+
+        assert_eq!(sp.submit(&pinned, OpKind::Insert, &ks).wait().0, 8_000);
+        assert_eq!(sd.submit(&device, OpKind::Insert, &ks).wait().0, 8_000);
+        let launches_before = pinned.pool(1).launches();
+        let on_pinned = acquires_per_submit(&sp, &pinned);
+        let on_device = acquires_per_submit(&sd, &device);
+        assert_eq!(
+            on_pinned, on_device,
+            "idle streams added per-stream lease work to the fast path"
+        );
+        // Exactly one fused launch per submit, all on the owning pool.
+        assert_eq!(pinned.pool(1).launches(), launches_before + 2);
+        for idle in [0, 2, 3] {
+            assert_eq!(pinned.pool(idle).launches(), 0, "pool {idle} should be idle");
+        }
+        // And positional outcomes survive the fast path.
+        let (hits, got) = sp.submit(&pinned, OpKind::Query, &ks).wait();
+        assert_eq!(hits, 8_000);
+        assert!(got.iter().all(|&b| b));
     }
 
     #[test]

@@ -34,6 +34,7 @@
 
 pub mod util;
 pub mod op;
+pub mod mem;
 pub mod filter;
 pub mod device;
 pub mod baselines;

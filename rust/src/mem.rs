@@ -1,0 +1,461 @@
+//! Pooled batch-buffer arena: typed, capacity-retaining leases over
+//! per-size-class free lists, so the serving stack's steady state puts
+//! **zero** batch scratch on the global allocator.
+//!
+//! The paper's throughput argument is that a Cuckoo filter can saturate
+//! memory bandwidth by embracing random access; the serving layers above
+//! the kernel must therefore keep their own hot path equally lean. A
+//! [`BufferArena`] holds one [`Pool`] per scratch element type the batch
+//! pipeline needs (scatter pairs, index tables, outcome flags, tally
+//! atomics, staged keys). [`Pool::lease`] hands out a [`Lease`] — a
+//! cleared `Vec<T>` with at least the requested capacity — and dropping
+//! the lease returns the buffer (capacity intact, elements dropped) to
+//! the pool's free list for the next batch.
+//!
+//! ## Size classes and the hit/miss contract
+//!
+//! Free buffers are bucketed by the power of two at or below their
+//! capacity; a lease request for `n` elements rounds up to the class
+//! that guarantees capacity ≥ `n` and takes the first buffer found in
+//! that class **or any larger one** (so a buffer that grew past its
+//! original class — e.g. a batcher group that overflowed `max_keys` —
+//! keeps getting reused instead of stranding). A satisfied request is a
+//! *hit*; an empty scan allocates fresh (capacity rounded up to the
+//! class size so the buffer re-enters its own class) and counts a
+//! *miss*. After warmup a fixed workload must therefore run at a 100%
+//! hit rate — `tests/alloc_reuse.rs` enforces exactly that, which is
+//! how "steady-state zero-allocation" is a tested property rather than
+//! a hope.
+//!
+//! ## Lifecycle and ownership
+//!
+//! Leases are plain owned values (`Deref`/`DerefMut` to `Vec<T>`): they
+//! may move across threads and return to the pool from wherever they are
+//! dropped. Two escape hatches close the serving loop:
+//!
+//! * [`Lease::detach`] — take the `Vec` out of the lease *without*
+//!   returning it to the pool (used when a buffer is handed to a caller,
+//!   e.g. a response's outcome bits).
+//! * [`Pool::donate`] — push any `Vec` into the matching free list
+//!   (used by the batcher to recycle a response's outcome buffer after
+//!   the per-client replies are scattered, so the next batch's out
+//!   vector is a hit again).
+//!
+//! Who recycles *when* is a correctness question one layer up: the
+//! sharded filter ties lease recycling to `BatchTicket` resolution so a
+//! buffer can never return to the pool while a device kernel may still
+//! read or write it (see `coordinator::shard`).
+//!
+//! Each free list is capped (`PER_CLASS_CAP` buffers per class); a
+//! return beyond the cap simply drops the buffer, bounding resident
+//! memory under bursty workloads. [`BufferArena::stats`] exposes the
+//! aggregate hit/miss/resident-bytes counters the server's STATS reply
+//! reports.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One bucket per possible power-of-two capacity class.
+const NUM_CLASSES: usize = usize::BITS as usize;
+
+/// Free buffers retained per class; returns beyond this are dropped so
+/// resident memory stays bounded.
+const PER_CLASS_CAP: usize = 32;
+
+/// Smallest class whose buffers are guaranteed to hold `n` elements.
+fn class_for_request(n: usize) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as usize
+    }
+}
+
+/// The class a buffer of `cap > 0` belongs to (largest power of two at
+/// or below `cap`, so membership implies capacity ≥ the class size).
+fn class_for_capacity(cap: usize) -> usize {
+    debug_assert!(cap > 0);
+    (usize::BITS - 1 - cap.leading_zeros()) as usize
+}
+
+/// Arena-wide counters, shared by every pool of the arena.
+#[derive(Default)]
+struct Counters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    resident_bytes: AtomicU64,
+}
+
+/// Point-in-time arena counters: lease requests served from a free list
+/// (`hits`) vs freshly allocated (`misses`), and the bytes currently
+/// parked in free lists (`resident_bytes`). A steady-state workload
+/// holds `misses` constant — the observable form of "zero new scratch
+/// allocations".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArenaStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub resident_bytes: u64,
+}
+
+impl ArenaStats {
+    /// Total lease requests.
+    pub fn acquires(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of requests served without allocating (1.0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.acquires();
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+type FreeLists<T> = Vec<Vec<Vec<T>>>;
+
+struct PoolInner<T> {
+    classes: Mutex<FreeLists<T>>,
+    counters: Arc<Counters>,
+}
+
+impl<T> PoolInner<T> {
+    /// Return a buffer to its capacity class (elements dropped, capacity
+    /// kept). Zero-capacity and over-cap returns are silently dropped.
+    fn put(&self, mut buf: Vec<T>) {
+        buf.clear();
+        if buf.capacity() == 0 {
+            return;
+        }
+        let class = class_for_capacity(buf.capacity());
+        let bytes = (buf.capacity() * std::mem::size_of::<T>()) as u64;
+        let mut classes = self.classes.lock().unwrap();
+        if classes[class].len() >= PER_CLASS_CAP {
+            return; // dropped: bounds resident memory under bursts
+        }
+        self.counters.resident_bytes.fetch_add(bytes, Ordering::Relaxed);
+        classes[class].push(buf);
+    }
+}
+
+/// A typed free-list pool of one arena (see the module docs).
+pub struct Pool<T> {
+    inner: Arc<PoolInner<T>>,
+}
+
+impl<T> Pool<T> {
+    fn new(counters: Arc<Counters>) -> Self {
+        Self {
+            inner: Arc::new(PoolInner {
+                classes: Mutex::new((0..NUM_CLASSES).map(|_| Vec::new()).collect()),
+                counters,
+            }),
+        }
+    }
+
+    /// Lease a cleared buffer with capacity ≥ `min_capacity`. Served
+    /// from the smallest adequate class with a free buffer (a *hit*),
+    /// else freshly allocated at the class-rounded capacity (a *miss*).
+    pub fn lease(&self, min_capacity: usize) -> Lease<T> {
+        let class = class_for_request(min_capacity);
+        {
+            let mut classes = self.inner.classes.lock().unwrap();
+            for bucket in classes[class..].iter_mut() {
+                if let Some(buf) = bucket.pop() {
+                    let bytes = (buf.capacity() * std::mem::size_of::<T>()) as u64;
+                    self.inner.counters.hits.fetch_add(1, Ordering::Relaxed);
+                    self.inner.counters.resident_bytes.fetch_sub(bytes, Ordering::Relaxed);
+                    return Lease {
+                        buf,
+                        pool: Some(self.inner.clone()),
+                    };
+                }
+            }
+        }
+        self.inner.counters.misses.fetch_add(1, Ordering::Relaxed);
+        let capacity = min_capacity.max(1).next_power_of_two();
+        Lease {
+            buf: Vec::with_capacity(capacity),
+            pool: Some(self.inner.clone()),
+        }
+    }
+
+    /// Push an arbitrary `Vec` into the matching free list — the return
+    /// half of [`Lease::detach`], used to recycle buffers that left the
+    /// arena (e.g. response outcome vectors) once their consumer is done.
+    pub fn donate(&self, buf: Vec<T>) {
+        self.inner.put(buf);
+    }
+
+    /// Drop every pooled buffer (counters other than resident bytes are
+    /// preserved). Subsequent leases miss — the "fresh allocation"
+    /// baseline the `scatter_reuse` bench compares against.
+    pub fn clear(&self) {
+        let mut classes = self.inner.classes.lock().unwrap();
+        for bucket in classes.iter_mut() {
+            for buf in bucket.drain(..) {
+                let bytes = (buf.capacity() * std::mem::size_of::<T>()) as u64;
+                self.inner.counters.resident_bytes.fetch_sub(bytes, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// A pooled buffer on loan: behaves as a `Vec<T>`, returns to its free
+/// list (capacity intact) on drop. [`Lease::detach`] opts out of the
+/// return; [`Lease::detached`] is an empty, pool-less lease for paths
+/// that don't use a given buffer.
+pub struct Lease<T> {
+    buf: Vec<T>,
+    pool: Option<Arc<PoolInner<T>>>,
+}
+
+impl<T> Lease<T> {
+    /// An empty lease bound to no pool (dropping it is a no-op and
+    /// counts nothing).
+    pub fn detached() -> Self {
+        Self {
+            buf: Vec::new(),
+            pool: None,
+        }
+    }
+
+    /// Take the buffer out of the lease without returning it to the
+    /// pool. Pair with [`Pool::donate`] to close the cycle later.
+    pub fn detach(mut self) -> Vec<T> {
+        self.pool = None;
+        std::mem::take(&mut self.buf)
+    }
+}
+
+impl<T> Deref for Lease<T> {
+    type Target = Vec<T>;
+
+    fn deref(&self) -> &Vec<T> {
+        &self.buf
+    }
+}
+
+impl<T> DerefMut for Lease<T> {
+    fn deref_mut(&mut self) -> &mut Vec<T> {
+        &mut self.buf
+    }
+}
+
+impl<T> Drop for Lease<T> {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.put(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+/// The batch pipeline's shared scratch arena: one typed pool per
+/// scratch shape the submit path leases (see the module docs). One
+/// arena is shared by engine, batcher and sharded filter so every layer
+/// recycles into the same free lists and the aggregate counters tell
+/// the whole story.
+pub struct BufferArena {
+    counters: Arc<Counters>,
+    pairs: Pool<(u64, u32)>,
+    indices: Pool<usize>,
+    flags: Pool<bool>,
+    tallies: Pool<AtomicU64>,
+    keys: Pool<u64>,
+}
+
+impl Default for BufferArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BufferArena {
+    pub fn new() -> Self {
+        let counters = Arc::new(Counters::default());
+        Self {
+            pairs: Pool::new(counters.clone()),
+            indices: Pool::new(counters.clone()),
+            flags: Pool::new(counters.clone()),
+            tallies: Pool::new(counters.clone()),
+            keys: Pool::new(counters.clone()),
+            counters,
+        }
+    }
+
+    /// `(key, original index)` scatter pairs — the one flat batch buffer.
+    pub fn pairs(&self) -> &Pool<(u64, u32)> {
+        &self.pairs
+    }
+
+    /// Offset/cursor/segment-table indices.
+    pub fn indices(&self) -> &Pool<usize> {
+        &self.indices
+    }
+
+    /// Per-key outcome flags (the out vector / response outcomes).
+    pub fn flags(&self) -> &Pool<bool> {
+        &self.flags
+    }
+
+    /// Per-shard success tallies.
+    pub fn tallies(&self) -> &Pool<AtomicU64> {
+        &self.tallies
+    }
+
+    /// Staged key buffers (single-shard fast path, batcher groups).
+    pub fn keys(&self) -> &Pool<u64> {
+        &self.keys
+    }
+
+    /// Aggregate counters across every pool of this arena.
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            hits: self.counters.hits.load(Ordering::Relaxed),
+            misses: self.counters.misses.load(Ordering::Relaxed),
+            resident_bytes: self.counters.resident_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drop every pooled buffer in every pool (hit/miss history is
+    /// preserved; resident bytes drop to zero).
+    pub fn clear(&self) {
+        self.pairs.clear();
+        self.indices.clear();
+        self.flags.clear();
+        self.tallies.clear();
+        self.keys.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_rounding_guarantees_capacity() {
+        assert_eq!(class_for_request(0), 0);
+        assert_eq!(class_for_request(1), 0);
+        assert_eq!(class_for_request(2), 1);
+        assert_eq!(class_for_request(3), 2);
+        assert_eq!(class_for_request(1024), 10);
+        assert_eq!(class_for_request(1025), 11);
+        assert_eq!(class_for_capacity(1), 0);
+        assert_eq!(class_for_capacity(1024), 10);
+        assert_eq!(class_for_capacity(1536), 10);
+        // Membership invariant: any buffer in the class a request rounds
+        // to has enough capacity for the request.
+        for n in 1..=4096usize {
+            assert!(1usize << class_for_request(n) >= n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn lease_miss_then_hit_reuses_the_same_buffer() {
+        let arena = BufferArena::new();
+        let mut a = arena.keys().lease(1000);
+        a.extend(0..1000u64);
+        let ptr = a.as_ptr();
+        assert_eq!(arena.stats().misses, 1);
+        drop(a);
+        assert!(arena.stats().resident_bytes >= 1000 * 8);
+
+        let b = arena.keys().lease(900); // same class (1024)
+        assert_eq!(b.as_ptr(), ptr, "free-listed buffer not reused");
+        assert!(b.is_empty(), "leases arrive cleared");
+        assert!(b.capacity() >= 1024);
+        let s = arena.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.resident_bytes, 0);
+    }
+
+    #[test]
+    fn upward_search_reuses_grown_buffers() {
+        let arena = BufferArena::new();
+        let mut a = arena.keys().lease(100);
+        // Outgrow the leased class (the batcher's join-overflow case).
+        a.extend(0..5000u64);
+        drop(a);
+        // A class-7 request is served by the class-12 buffer upstairs.
+        let b = arena.keys().lease(100);
+        assert!(b.capacity() >= 5000);
+        assert_eq!(arena.stats().hits, 1);
+        assert_eq!(arena.stats().misses, 1);
+    }
+
+    #[test]
+    fn detach_and_donate_close_the_cycle() {
+        let arena = BufferArena::new();
+        let mut l = arena.flags().lease(64);
+        l.resize(64, true);
+        let v = l.detach();
+        assert_eq!(arena.stats().resident_bytes, 0, "detached buffers leave the arena");
+        let ptr = v.as_ptr();
+        arena.flags().donate(v);
+        let back = arena.flags().lease(64);
+        assert_eq!(back.as_ptr(), ptr);
+        assert!(back.iter().all(|&b| !b) || back.is_empty(), "donated buffers are cleared");
+        assert_eq!(arena.stats().hits, 1);
+    }
+
+    #[test]
+    fn detached_lease_is_inert() {
+        let l: Lease<u64> = Lease::detached();
+        assert!(l.is_empty());
+        drop(l); // no pool, no counters, no panic
+    }
+
+    #[test]
+    fn per_class_cap_bounds_resident_memory() {
+        let arena = BufferArena::new();
+        let leases: Vec<_> = (0..PER_CLASS_CAP + 8).map(|_| arena.keys().lease(64)).collect();
+        drop(leases);
+        let s = arena.stats();
+        assert_eq!(s.misses as usize, PER_CLASS_CAP + 8);
+        // Only PER_CLASS_CAP buffers were retained.
+        assert_eq!(s.resident_bytes as usize, PER_CLASS_CAP * 64 * 8);
+    }
+
+    #[test]
+    fn clear_resets_residency_but_not_history() {
+        let arena = BufferArena::new();
+        drop(arena.pairs().lease(256));
+        drop(arena.indices().lease(256));
+        assert!(arena.stats().resident_bytes > 0);
+        arena.clear();
+        let s = arena.stats();
+        assert_eq!(s.resident_bytes, 0);
+        assert_eq!(s.misses, 2, "clear keeps the hit/miss history");
+        // Next lease misses again — the fresh-alloc bench baseline.
+        drop(arena.pairs().lease(256));
+        assert_eq!(arena.stats().misses, 3);
+    }
+
+    #[test]
+    fn leases_return_from_other_threads() {
+        let arena = Arc::new(BufferArena::new());
+        let lease = arena.keys().lease(512);
+        let a = arena.clone();
+        std::thread::spawn(move || drop(lease)).join().unwrap();
+        assert_eq!(a.keys().lease(512).capacity(), 512);
+        let s = a.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn tallies_pool_recycles_atomics() {
+        let arena = BufferArena::new();
+        let mut t = arena.tallies().lease(8);
+        t.resize_with(8, || AtomicU64::new(7));
+        drop(t);
+        let mut t = arena.tallies().lease(8);
+        assert!(t.is_empty(), "elements are dropped on return");
+        t.resize_with(8, || AtomicU64::new(0));
+        assert!(t.iter().all(|a| a.load(Ordering::Relaxed) == 0));
+        assert_eq!(arena.stats().hits, 1);
+    }
+}

@@ -1,0 +1,110 @@
+//! Allocation-reuse regression battery (the PR-5 acceptance bar): after
+//! warmup, a sustained mixed insert/query/delete workload through the
+//! full server-side pipeline — batcher group staging, engine
+//! submission, fused scatter, out vector, per-shard tallies — performs
+//! **zero new scratch allocations**, enforced by the arena's miss
+//! counter standing perfectly still over 100 consecutive flush groups.
+//! The matrix covers single- and multi-stream backends and the
+//! single-shard no-scatter fast path: pools {1, 4} × shards {1, 8}.
+//!
+//! Runs inside the seeded `stress` CI matrix (the whole test suite,
+//! single-threaded, under fixed `CUCKOO_STRESS_SEED`s); the seed varies
+//! the key material but not the allocation shape, so a failure here is
+//! a real hot-path allocation, never scheduling noise.
+
+use cuckoo_gpu::coordinator::{Batcher, BatcherConfig, Engine, EngineConfig, OpKind, Request};
+use cuckoo_gpu::util::prng::mix64;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn stress_seed() -> u64 {
+    std::env::var("CUCKOO_STRESS_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Keys per flush group; `max_keys` is pinned to this so every request
+/// below is exactly one flush group.
+const GROUP: usize = 1024;
+
+fn block(triple: u64, seed: u64) -> Vec<u64> {
+    (0..GROUP as u64)
+        .map(|i| mix64(i ^ (triple << 24) ^ mix64(seed)))
+        .collect()
+}
+
+#[test]
+fn steady_state_batcher_runs_at_100_percent_arena_hit_rate() {
+    let seed = stress_seed();
+    for &(pools, shards) in &[(1usize, 1usize), (1, 8), (4, 1), (4, 8)] {
+        let engine = Arc::new(
+            Engine::new(EngineConfig {
+                capacity: 1 << 18,
+                shards,
+                workers: 4,
+                pools,
+                artifacts_dir: None,
+            })
+            .unwrap(),
+        );
+        let batcher = Batcher::new(
+            engine.clone(),
+            BatcherConfig {
+                max_keys: GROUP,
+                max_delay: Duration::from_millis(1),
+            },
+        );
+
+        // One flush group per call: insert a fresh block, query it,
+        // delete it — all three op kinds, with phase switches between
+        // every group, exactly the mixed regime the flusher pipelines.
+        // Every 4th triple also pushes an empty query group (a valid
+        // no-op that must not perturb the lease pattern).
+        let mut run_triple = |t: u64| {
+            let ks = block(t, seed);
+            let ins = batcher.call(Request::new(OpKind::Insert, ks.clone())).unwrap();
+            assert_eq!(ins.successes as usize, GROUP, "pools={pools} shards={shards}");
+            let qry = batcher.call(Request::new(OpKind::Query, ks.clone())).unwrap();
+            assert_eq!(qry.successes as usize, GROUP, "pools={pools} shards={shards}");
+            if t % 4 == 3 {
+                let empty = batcher.call(Request::new(OpKind::Query, vec![])).unwrap();
+                assert_eq!(empty.successes, 0);
+            }
+            // fp16 collisions inside a delete batch can very rarely
+            // trade a removal; the allocation property is the test.
+            let del = batcher.call(Request::new(OpKind::Delete, ks)).unwrap();
+            assert!(del.successes as usize >= GROUP - 8, "pools={pools} shards={shards}");
+        };
+
+        // Warmup: populate every size class the measured phase uses
+        // (group key buffers, scatter pairs, index tables, out vectors,
+        // tallies) and let the donation cycle reach steady state.
+        for t in 0..4 {
+            run_triple(t);
+        }
+
+        let before = engine.arena_stats();
+        // 100+ mixed flush groups: 34 triples ≥ 102 non-empty groups.
+        for t in 4..38 {
+            run_triple(t);
+        }
+        let after = engine.arena_stats();
+
+        assert_eq!(
+            after.misses, before.misses,
+            "pools={pools} shards={shards}: steady-state flush groups allocated new scratch \
+             (hit rate must be 100% after warmup; seed {seed})"
+        );
+        let window_acquires = after.acquires() - before.acquires();
+        assert!(
+            window_acquires >= 100,
+            "pools={pools} shards={shards}: expected ≥100 leases over the window, \
+             saw {window_acquires}"
+        );
+        assert!(
+            after.resident_bytes > 0,
+            "pools={pools} shards={shards}: free lists empty at steady state"
+        );
+    }
+}

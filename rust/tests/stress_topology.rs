@@ -126,16 +126,14 @@ fn oracle_device() -> Device {
     })
 }
 
-/// Replay `schedule` on a fresh filter over `backend` — every batch
-/// through the one unified entry point, `submit(backend, OpKind, keys)`
-/// — and return the full outcome log, the final ledger total, and
-/// per-stream launch counts.
-fn run_schedule(
+/// Replay `schedule` on `sf` over `backend` — every batch through the
+/// one unified entry point, `submit(backend, OpKind, keys)` — and
+/// return the full outcome log and the final ledger total.
+fn run_schedule_on(
+    sf: &ShardedFilter<Fp16>,
     backend: &dyn Backend,
-    shards: usize,
     schedule: &[Round],
-) -> (Vec<RoundLog>, usize, Vec<u64>) {
-    let sf = ShardedFilter::<Fp16>::with_capacity(100_000, shards).unwrap();
+) -> (Vec<RoundLog>, usize) {
     let mut log = Vec::with_capacity(schedule.len());
     for r in schedule {
         // Mutations in flight together, waited out of order: remove
@@ -150,8 +148,20 @@ fn run_schedule(
         let qry = sf.submit(backend, OpKind::Query, &r.query).wait();
         log.push(RoundLog { ins, rem, qry });
     }
+    (log, sf.len())
+}
+
+/// `run_schedule_on` over a fresh filter (its own arena); also returns
+/// per-stream launch counts.
+fn run_schedule(
+    backend: &dyn Backend,
+    shards: usize,
+    schedule: &[Round],
+) -> (Vec<RoundLog>, usize, Vec<u64>) {
+    let sf = ShardedFilter::<Fp16>::with_capacity(100_000, shards).unwrap();
+    let (log, len) = run_schedule_on(&sf, backend, schedule);
     let launches = backend.stream_stats().iter().map(|s| s.launches).collect();
-    (log, sf.len(), launches)
+    (log, len, launches)
 }
 
 fn assert_logs_equal(a: &[RoundLog], b: &[RoundLog], what: &str, seed: u64) {
@@ -222,6 +232,37 @@ fn explicit_pinning_matches_oracle() {
     assert_logs_equal(&log, &oracle_log, "explicit pinning", seed);
     assert_eq!(len, oracle_len);
     assert!(launches.iter().all(|&l| l > 0), "{launches:?}");
+}
+
+#[test]
+fn warm_arena_replay_matches_fresh_arena_oracle() {
+    // The PR-5 acceptance angle on this battery: recycled arena buffers
+    // must be observably indistinguishable from fresh allocations. The
+    // same schedule runs twice against the same backend shape — first
+    // on a cold arena (every lease is a miss: the pre-arena oracle's
+    // allocation pattern), then on a second filter sharing the now-warm
+    // arena (leases are free-list hits carrying whatever bytes the
+    // first run left behind). Outcome logs and ledgers must be
+    // byte-identical, proving cleared-on-reuse scratch leaks no state
+    // between batches.
+    let seed = stress_seed().wrapping_add(4);
+    let schedule = build_schedule(seed, 10);
+    let arena = std::sync::Arc::new(cuckoo_gpu::mem::BufferArena::new());
+    let topo = topology(2, Pinning::RoundRobin);
+    let cold = ShardedFilter::<Fp16>::with_capacity(100_000, 8)
+        .unwrap()
+        .with_arena(arena.clone());
+    let (cold_log, cold_len) = run_schedule_on(&cold, &topo, &schedule);
+    assert!(arena.stats().misses > 0, "cold run should populate the arena");
+
+    let warm = ShardedFilter::<Fp16>::with_capacity(100_000, 8)
+        .unwrap()
+        .with_arena(arena.clone());
+    let hits_before = arena.stats().hits;
+    let (warm_log, warm_len) = run_schedule_on(&warm, &topo, &schedule);
+    assert_logs_equal(&warm_log, &cold_log, "warm-arena replay", seed);
+    assert_eq!(warm_len, cold_len, "ledger drift on recycled scratch (seed {seed})");
+    assert!(arena.stats().hits > hits_before, "warm run never reused a buffer");
 }
 
 #[test]

@@ -52,3 +52,40 @@ if [ -n "$matches" ]; then
 fi
 
 echo "API surface OK: no per-op *_batch* pub fn variants in ${SURFACES[*]}"
+
+# ---------------------------------------------------------------------
+# Hot-path allocation guard (PR 5).
+#
+# The submit hot path of the sharded filter (everything between the
+# ARENA_HOT_PATH_BEGIN / ARENA_HOT_PATH_END markers in shard.rs) leases
+# all batch scratch from mem::BufferArena; steady-state zero-allocation
+# is an acceptance-tested property (tests/alloc_reuse.rs). Fail CI if an
+# ad-hoc allocation (vec![…], Vec::new(), .to_vec(), Vec::with_capacity)
+# reappears inside the region. Cold/setup code stays outside the
+# markers; a deliberate fixed-size control block inside the region is
+# allowlisted with a trailing `alloc-ok` comment stating why.
+
+HOT_FILE=rust/src/coordinator/shard.rs
+hot_region="$(sed -n '/ARENA_HOT_PATH_BEGIN/,/ARENA_HOT_PATH_END/p' "$HOT_FILE")"
+if [ -z "$hot_region" ]; then
+  echo "error: ARENA_HOT_PATH markers missing from $HOT_FILE" >&2
+  echo "(the submit hot path must stay inside the checked region)" >&2
+  exit 1
+fi
+
+ALLOC_PATTERN='vec!|Vec::new\(|\.to_vec\(|Vec::with_capacity\('
+violations="$(printf '%s\n' "$hot_region" | grep -nE "$ALLOC_PATTERN" \
+  | grep -v 'alloc-ok' \
+  | grep -vE '^[0-9]+:[[:space:]]*//' || true)"
+if [ -n "$violations" ]; then
+  echo "error: ad-hoc allocation in the shard.rs submit hot path" >&2
+  echo "(line numbers relative to the ARENA_HOT_PATH region):" >&2
+  echo "$violations" >&2
+  echo >&2
+  echo "Lease batch scratch from the filter's BufferArena instead; if" >&2
+  echo "this is genuinely a fixed-size control block, annotate the line" >&2
+  echo "with an 'alloc-ok: <reason>' comment." >&2
+  exit 1
+fi
+
+echo "Hot path OK: no ad-hoc allocations in the $HOT_FILE submit region"
