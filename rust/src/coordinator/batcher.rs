@@ -27,6 +27,20 @@
 //! order, full drain before a phase switch — is unchanged, because a
 //! ticket resolves only when every pool's segment has retired.
 //!
+//! ## Durability (WAL group commit)
+//!
+//! On a durable engine ([`Engine::wal`] attached), every mutation flush
+//! group is appended to the write-ahead log — one checksummed record,
+//! one fsync per *group* — before its kernel launches, and the group is
+//! submitted while the commit guard is still held so checkpoints order
+//! cleanly against it (see [`super::wal`]'s capture logic). The record
+//! is serialized from leased arena bytes, so the hot path stays
+//! allocation-free. If the append fails, the group's clients receive
+//! [`ServeError::Failed`] and the kernel is never launched. Lock
+//! ordering: the flusher only *blocks* on the commit lock after
+//! draining its in-flight tickets — a checkpoint holding that lock may
+//! be waiting on exactly those phase tokens.
+//!
 //! Failure handling: clients receive `Result<Response, ServeError>`.
 //! Submissions after shutdown resolve immediately to
 //! [`ServeError::Closed`] instead of hanging, and a panic during a flush
@@ -144,7 +158,7 @@ pub struct Batcher {
     /// The engine's arena — group key buffers are leased here at
     /// `submit` and recycled by the flusher once staged.
     arena: Arc<BufferArena>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl Batcher {
@@ -157,7 +171,7 @@ impl Batcher {
             state,
             cfg,
             arena,
-            worker: Some(worker),
+            worker: Mutex::new(Some(worker)),
         }
     }
 
@@ -207,6 +221,17 @@ impl Batcher {
         let (lock, cv) = &*self.state;
         lock.lock().unwrap().shutdown = true;
         cv.notify_all();
+    }
+
+    /// Close and block until the flusher has drained every pending group
+    /// and in-flight kernel. Idempotent. The server's graceful-shutdown
+    /// path runs this before the final checkpoint, so a clean restart
+    /// replays zero WAL records.
+    pub fn close_and_join(&self) {
+        self.close();
+        if let Some(w) = self.worker.lock().unwrap().take() {
+            let _ = w.join();
+        }
     }
 
     fn run_flusher(
@@ -278,6 +303,42 @@ impl Batcher {
                     }
                     engine.metrics.record_batch();
                     let PendingGroup { op, keys, clients, .. } = g;
+                    // Durability: a mutation group's record must be on
+                    // disk before its kernel launches. One record per
+                    // flush group = group commit. On a durable engine an
+                    // append failure fails the group's clients and the
+                    // kernel is never launched.
+                    let commit = match (engine.wal(), mutation) {
+                        (Some(wal), true) => {
+                            let acquired = match wal.try_begin_commit() {
+                                Ok(Some(c)) => Ok(c),
+                                Ok(None) => {
+                                    // A checkpoint holds the commit lock
+                                    // and may be quiescing on OUR phase
+                                    // tokens: drain them before blocking
+                                    // (lock-ordering contract, wal.rs).
+                                    while let Some(f) = inflight.pop_front() {
+                                        respond(f, &arena);
+                                    }
+                                    wal.begin_commit()
+                                }
+                                Err(e) => Err(e),
+                            };
+                            match acquired.and_then(|mut c| c.append_group(op, &keys).map(|()| c)) {
+                                Ok(c) => Some(c),
+                                Err(e) => {
+                                    drop(keys);
+                                    for (tx, _) in clients {
+                                        let _ = tx.send(Err(ServeError::Failed(format!(
+                                            "wal append failed: {e}"
+                                        ))));
+                                    }
+                                    continue;
+                                }
+                            }
+                        }
+                        _ => None,
+                    };
                     // A panic during submission (scatter or fault
                     // injection) must not kill the flusher: fail the
                     // group's clients and keep serving.
@@ -288,6 +349,11 @@ impl Batcher {
                     // the group buffer now so the NEXT group's lease
                     // reuses it while this group's kernel runs.
                     drop(keys);
+                    // The ticket's phase token now pins the mutation, so
+                    // a checkpoint ordering after this commit window also
+                    // orders after the group's execution — release the
+                    // commit lock only here (see wal.rs's capture logic).
+                    drop(commit);
                     match staged {
                         Ok(ticket) => inflight.push_back(InFlight {
                             ticket,
@@ -332,10 +398,7 @@ impl Batcher {
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        self.close();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.close_and_join();
     }
 }
 

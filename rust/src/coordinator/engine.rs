@@ -33,6 +33,7 @@ use super::epoch::{EpochGuard, PhaseToken};
 use super::metrics::{Metrics, PoolStat};
 use super::request::{OpKind, Request, Response};
 use super::shard::{BatchTicket, ShardedFilter};
+use super::wal::{CheckpointStats, Wal, WalStats};
 use crate::device::{build_backend, Backend};
 use crate::filter::{FilterError, Fp16};
 use crate::mem::{ArenaStats, BufferArena};
@@ -111,6 +112,11 @@ pub struct Engine {
     /// the batcher leases group key buffers and donates response
     /// outcome buffers back, and the server reports its counters.
     arena: std::sync::Arc<BufferArena>,
+    /// The durability layer, attached once by [`Wal::open_and_recover`]
+    /// before serving starts (None = volatile engine). The batcher
+    /// group-commits every mutation flush group through it, and
+    /// [`Engine::checkpoint`] snapshots against it.
+    wal: std::sync::OnceLock<std::sync::Arc<Wal>>,
     /// Test-only fault injection: when armed, the next `execute_async`
     /// panics before touching the filter — exercises the batcher's
     /// flusher-survival path. Not part of the public API.
@@ -160,6 +166,7 @@ impl Engine {
             metrics: Metrics::new(),
             runtime,
             arena,
+            wal: std::sync::OnceLock::new(),
             debug_fail_next_execute: AtomicBool::new(false),
         })
     }
@@ -184,6 +191,7 @@ impl Engine {
             metrics: Metrics::new(),
             runtime: Some(rt),
             arena,
+            wal: std::sync::OnceLock::new(),
             debug_fail_next_execute: AtomicBool::new(false),
         })
     }
@@ -228,6 +236,45 @@ impl Engine {
             .into_iter()
             .map(PoolStat::from)
             .collect()
+    }
+
+    /// The engine's sharded filter (recovery restores checkpoint images
+    /// into it shard by shard; see [`super::wal`]).
+    pub fn filter(&self) -> &ShardedFilter<Fp16> {
+        &self.filter
+    }
+
+    /// The phase guard — the WAL's checkpointer quiesces in-flight
+    /// mutations through it.
+    pub(crate) fn epoch(&self) -> &EpochGuard {
+        &self.epoch
+    }
+
+    /// Attach the durability layer (once; later calls are ignored).
+    /// Done by [`Wal::open_and_recover`] before serving starts.
+    pub fn attach_wal(&self, wal: std::sync::Arc<Wal>) {
+        let _ = self.wal.set(wal);
+    }
+
+    /// The attached WAL, if this engine is durable.
+    pub fn wal(&self) -> Option<&std::sync::Arc<Wal>> {
+        self.wal.get()
+    }
+
+    /// WAL counters for the STATS reply (None = volatile engine).
+    pub fn wal_stats(&self) -> Option<WalStats> {
+        self.wal.get().map(|w| w.stats())
+    }
+
+    /// Take a consistent checkpoint of every shard and truncate the WAL
+    /// behind it. `Ok(None)` on a volatile engine (no WAL attached).
+    /// Safe concurrently with serving: appends stall for the in-memory
+    /// capture only, never for the file writes.
+    pub fn checkpoint(&self) -> std::io::Result<Option<CheckpointStats>> {
+        match self.wal.get() {
+            Some(w) => w.checkpoint(self).map(Some),
+            None => Ok(None),
+        }
     }
 
     pub fn len(&self) -> usize {

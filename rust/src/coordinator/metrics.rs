@@ -3,6 +3,7 @@
 //! arena's hit/miss/resident counters.
 
 use crate::coordinator::request::OpKind;
+use crate::coordinator::wal::WalStats;
 use crate::mem::ArenaStats;
 use crate::util::stats::Histogram;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -125,6 +126,25 @@ impl Metrics {
         )
     }
 
+    /// WAL section of the STATS reply:
+    /// `wal: segments=S appended=A replayed=R last_ckpt=C` (`C` is `-`
+    /// before the first checkpoint), or `wal: off` on a volatile engine.
+    pub fn wal_summary(stats: Option<&WalStats>) -> String {
+        match stats {
+            None => "wal: off".to_string(),
+            Some(s) => format!(
+                "wal: segments={} appended={} replayed={} last_ckpt={}",
+                s.segments,
+                s.appended,
+                s.replayed,
+                match s.last_ckpt {
+                    Some(id) => id.to_string(),
+                    None => "-".to_string(),
+                }
+            ),
+        }
+    }
+
     /// One-line human-readable summary (the server's STATS reply).
     pub fn summary(&self) -> String {
         let line = |name: &str, m: &OpMetrics| {
@@ -196,6 +216,31 @@ mod tests {
         assert_eq!(
             Metrics::arena_summary(&idle),
             "arena: hits=0 misses=0 hit_rate=100.0% resident=0B"
+        );
+    }
+
+    #[test]
+    fn wal_summary_covers_off_fresh_and_checkpointed() {
+        assert_eq!(Metrics::wal_summary(None), "wal: off");
+        let fresh = WalStats {
+            segments: 1,
+            appended: 0,
+            replayed: 0,
+            last_ckpt: None,
+        };
+        assert_eq!(
+            Metrics::wal_summary(Some(&fresh)),
+            "wal: segments=1 appended=0 replayed=0 last_ckpt=-"
+        );
+        let warm = WalStats {
+            segments: 2,
+            appended: 17,
+            replayed: 5,
+            last_ckpt: Some(3),
+        };
+        assert_eq!(
+            Metrics::wal_summary(Some(&warm)),
+            "wal: segments=2 appended=17 replayed=5 last_ckpt=3"
         );
     }
 }

@@ -25,7 +25,12 @@
 //!   runtime into a servable engine (`execute`/`execute_op`/
 //!   `execute_async`, all one `OpKind` dispatch);
 //! * [`server`]  — a line-protocol TCP front end;
-//! * [`metrics`] — op counters and latency histograms.
+//! * [`metrics`] — op counters and latency histograms;
+//! * [`wal`]     — durability: a group-committed, checksummed,
+//!   segmented write-ahead log fed by the batcher's flush groups, plus
+//!   consistent background checkpoints (epoch-quiesced per-shard
+//!   images) and crash recovery (`Wal::open_and_recover` — load last
+//!   checkpoint, replay the tail, truncate a torn final record).
 
 pub mod request;
 pub mod epoch;
@@ -34,6 +39,7 @@ pub mod shard;
 pub mod engine;
 pub mod server;
 pub mod metrics;
+pub mod wal;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use engine::{Engine, EngineConfig, EngineError, ExecTicket};
@@ -41,3 +47,6 @@ pub use epoch::EpochGuard;
 pub use metrics::PoolStat;
 pub use request::{OpKind, Request, Response, ServeError};
 pub use shard::{BatchTicket, ShardedFilter};
+pub use wal::{
+    CheckpointStats, Checkpointer, KillPoint, RecoveryStats, Wal, WalConfig, WalStats,
+};

@@ -49,6 +49,12 @@ impl Server {
     /// Serve until the shutdown flag is set. Binds `addr` and returns the
     /// local address through `on_bound` before accepting (lets tests grab
     /// the ephemeral port).
+    ///
+    /// Shutdown is graceful: after the last connection worker exits, the
+    /// batcher drains every pending flush group and in-flight kernel,
+    /// then a final checkpoint is written (durable engines only) — so a
+    /// clean restart recovers from the checkpoint alone and replays zero
+    /// WAL records.
     pub fn serve(&self, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> std::io::Result<()> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
@@ -72,6 +78,10 @@ impl Server {
         }
         for w in workers {
             let _ = w.join();
+        }
+        self.batcher.close_and_join();
+        if let Err(e) = self.engine.checkpoint() {
+            eprintln!("[cuckoo-gpu] warn: final checkpoint failed: {e}");
         }
         Ok(())
     }
@@ -131,10 +141,11 @@ fn handle_conn(
             }
             "LEN" => format!("OK {}", engine.len()),
             "STATS" => format!(
-                "OK {} | {} | {}",
+                "OK {} | {} | {} | {}",
                 engine.metrics.summary(),
                 crate::coordinator::metrics::Metrics::pools_summary(&engine.pool_stats()),
-                crate::coordinator::metrics::Metrics::arena_summary(&engine.arena_stats())
+                crate::coordinator::metrics::Metrics::arena_summary(&engine.arena_stats()),
+                crate::coordinator::metrics::Metrics::wal_summary(engine.wal_stats().as_ref())
             ),
             op_str => match OpKind::parse(&op_str.to_ascii_lowercase()) {
                 Some(op) => {
@@ -283,6 +294,7 @@ mod tests {
         assert!(stats.contains("pools: 0[w="), "per-pool stats missing: {stats}");
         assert!(stats.contains("arena: hits="), "arena counters missing: {stats}");
         assert!(stats.contains("resident="), "arena residency missing: {stats}");
+        assert!(stats.contains("wal: off"), "volatile engine must report wal off: {stats}");
         assert!(c.call("BOGUS 1").unwrap().starts_with("ERR"));
         assert_eq!(c.call("QUIT").unwrap(), "BYE");
 

@@ -8,12 +8,14 @@
 //! repro serve [--addr HOST:PORT] [--capacity N] [--shards N]
 //!       [--pools N] [--workers N]  # N independent device pools
 //!       [--artifacts DIR]          # line-protocol filter server
+//!       [--wal-dir DIR]            # durable serving: WAL + checkpoints
+//!       [--ckpt-secs N]            # background checkpoint period (30)
 //! repro selftest                   # quick end-to-end sanity check
 //! repro info                       # build/config/device info
 //! ```
 
 use cuckoo_gpu::bench::{self, BenchOpts};
-use cuckoo_gpu::coordinator::{BatcherConfig, Engine, EngineConfig};
+use cuckoo_gpu::coordinator::{BatcherConfig, Checkpointer, Engine, EngineConfig, Wal, WalConfig};
 use cuckoo_gpu::util::cli::Args;
 use std::sync::Arc;
 
@@ -82,6 +84,23 @@ fn cmd_serve(args: &Args) {
         args.get_usize("workers", cuckoo_gpu::device::default_workers()),
         engine.pools()
     );
+    // Durable serving: recover from the last checkpoint + WAL tail, then
+    // keep checkpointing in the background until shutdown. The engine
+    // must be recovered BEFORE the server (and its batcher) is built.
+    let _checkpointer = args.get("wal-dir").map(|dir| {
+        let stats = Wal::open_and_recover(&engine, WalConfig::new(dir)).expect("wal recovery");
+        let ckpt = stats.checkpoint.map_or("none".to_string(), |id| id.to_string());
+        let mut line = format!(
+            "wal: dir={dir} checkpoint={ckpt} segments={} replayed={} records ({} keys)",
+            stats.segments_scanned, stats.records_replayed, stats.keys_replayed
+        );
+        if stats.torn_tail_truncated {
+            line.push_str(" [torn tail truncated]");
+        }
+        println!("{line}");
+        let every = std::time::Duration::from_secs(args.get_usize("ckpt-secs", 30) as u64);
+        Checkpointer::spawn(engine.clone(), every)
+    });
     let server = cuckoo_gpu::coordinator::server::Server::new(engine, BatcherConfig::default());
     server
         .serve(&addr, |a| println!("listening on {a}"))

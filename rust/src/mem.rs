@@ -266,6 +266,7 @@ pub struct BufferArena {
     flags: Pool<bool>,
     tallies: Pool<AtomicU64>,
     keys: Pool<u64>,
+    bytes: Pool<u8>,
 }
 
 impl Default for BufferArena {
@@ -283,6 +284,7 @@ impl BufferArena {
             flags: Pool::new(counters.clone()),
             tallies: Pool::new(counters.clone()),
             keys: Pool::new(counters.clone()),
+            bytes: Pool::new(counters.clone()),
             counters,
         }
     }
@@ -312,6 +314,14 @@ impl BufferArena {
         &self.keys
     }
 
+    /// Serialized-record staging (the write-ahead log's append path
+    /// builds each flush group's record here, so WAL-enabled serving
+    /// keeps the zero-allocation steady state; see
+    /// `coordinator::wal`).
+    pub fn bytes(&self) -> &Pool<u8> {
+        &self.bytes
+    }
+
     /// Aggregate counters across every pool of this arena.
     pub fn stats(&self) -> ArenaStats {
         ArenaStats {
@@ -329,6 +339,7 @@ impl BufferArena {
         self.flags.clear();
         self.tallies.clear();
         self.keys.clear();
+        self.bytes.clear();
     }
 }
 

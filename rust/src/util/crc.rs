@@ -1,0 +1,181 @@
+//! CRC-32 (IEEE 802.3, polynomial 0xEDB88320): the integrity checksum
+//! shared by the persist image format (v2 trailer) and the write-ahead
+//! log's per-record checksums. Hand-rolled because the crate builds
+//! offline with no dependencies; the table is computed at compile time.
+
+/// Byte-at-a-time lookup table for the reflected IEEE polynomial.
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = make_table();
+
+/// Streaming CRC-32 state: feed bytes with [`Crc32::update`], read the
+/// checksum with [`Crc32::finalize`] (the state stays usable, so a
+/// writer can checkpoint intermediate values).
+#[derive(Clone, Copy, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Self { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        let mut s = self.state;
+        for &b in data {
+            s = TABLE[((s ^ b as u32) & 0xFF) as usize] ^ (s >> 8);
+        }
+        self.state = s;
+    }
+
+    pub fn finalize(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+/// One-shot CRC-32 of a byte slice.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(data);
+    c.finalize()
+}
+
+/// A [`std::io::Write`] adapter that checksums everything written
+/// through it (used by the persist v2 writer to stream the body while
+/// computing the trailer).
+pub struct CrcWriter<W> {
+    inner: W,
+    crc: Crc32,
+}
+
+impl<W: std::io::Write> CrcWriter<W> {
+    pub fn new(inner: W) -> Self {
+        Self {
+            inner,
+            crc: Crc32::new(),
+        }
+    }
+
+    /// Checksum of everything written so far.
+    pub fn crc(&self) -> u32 {
+        self.crc.finalize()
+    }
+
+    pub fn into_inner(self) -> W {
+        self.inner
+    }
+}
+
+impl<W: std::io::Write> std::io::Write for CrcWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.crc.update(&buf[..n]);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// A [`std::io::Read`] adapter that checksums everything read through
+/// it (the persist v2 loader streams the body, then compares against
+/// the stored trailer).
+pub struct CrcReader<R> {
+    inner: R,
+    crc: Crc32,
+}
+
+impl<R: std::io::Read> CrcReader<R> {
+    pub fn new(inner: R) -> Self {
+        Self {
+            inner,
+            crc: Crc32::new(),
+        }
+    }
+
+    /// Checksum of everything read so far.
+    pub fn crc(&self) -> u32 {
+        self.crc.finalize()
+    }
+
+    pub fn into_inner(self) -> R {
+        self.inner
+    }
+}
+
+impl<R: std::io::Read> std::io::Read for CrcReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.crc.update(&buf[..n]);
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    #[test]
+    fn matches_the_ieee_check_value() {
+        // The canonical CRC-32 test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let mut c = Crc32::new();
+        for chunk in data.chunks(7) {
+            c.update(chunk);
+        }
+        assert_eq!(c.finalize(), crc32(&data));
+    }
+
+    #[test]
+    fn writer_and_reader_adapters_agree() {
+        let mut sink = Vec::new();
+        let mut w = CrcWriter::new(&mut sink);
+        w.write_all(b"hello durable world").unwrap();
+        let wc = w.crc();
+        assert_eq!(wc, crc32(b"hello durable world"));
+
+        let mut r = CrcReader::new(&sink[..]);
+        let mut out = Vec::new();
+        r.read_to_end(&mut out).unwrap();
+        assert_eq!(r.crc(), wc);
+        assert_eq!(out, sink);
+    }
+
+    #[test]
+    fn single_bit_flip_changes_the_checksum() {
+        let mut data = vec![0u8; 512];
+        data[300] = 0x40;
+        let base = crc32(&data);
+        data[300] = 0x41;
+        assert_ne!(crc32(&data), base);
+    }
+}

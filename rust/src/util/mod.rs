@@ -1,13 +1,15 @@
-//! Small self-contained utilities: PRNGs, statistics, timing and a
-//! mini CLI parser. The build environment is fully offline, so these
-//! replace the usual `rand`/`clap`/`criterion` dependencies.
+//! Small self-contained utilities: PRNGs, statistics, timing, CRC-32
+//! and a mini CLI parser. The build environment is fully offline, so
+//! these replace the usual `rand`/`clap`/`criterion`/`crc` dependencies.
 
 pub mod prng;
 pub mod stats;
 pub mod timer;
 pub mod cli;
+pub mod crc;
 pub mod prop;
 
+pub use crc::{crc32, Crc32};
 pub use prng::{SplitMix64, Xoshiro256};
 pub use stats::{median, percentile, Summary};
 pub use timer::Timer;

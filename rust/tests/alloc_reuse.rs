@@ -12,7 +12,9 @@
 //! the key material but not the allocation shape, so a failure here is
 //! a real hot-path allocation, never scheduling noise.
 
-use cuckoo_gpu::coordinator::{Batcher, BatcherConfig, Engine, EngineConfig, OpKind, Request};
+use cuckoo_gpu::coordinator::{
+    Batcher, BatcherConfig, Engine, EngineConfig, OpKind, Request, Wal, WalConfig,
+};
 use cuckoo_gpu::util::prng::mix64;
 use std::sync::Arc;
 use std::time::Duration;
@@ -107,4 +109,64 @@ fn steady_state_batcher_runs_at_100_percent_arena_hit_rate() {
             "pools={pools} shards={shards}: free lists empty at steady state"
         );
     }
+}
+
+#[test]
+fn wal_group_commit_preserves_the_zero_allocation_steady_state() {
+    // PR-6 acceptance: durability must not cost the PR-5 property. Each
+    // mutation group's WAL record is serialized into a lease from the
+    // arena's byte pool, so a warmed-up durable server still holds the
+    // miss counter perfectly still — the fsyncs are the only addition.
+    let seed = stress_seed();
+    let pid = std::process::id();
+    let dir = std::env::temp_dir().join(format!("cuckoo_wal_alloc_{pid}_{seed:x}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let engine = Arc::new(
+        Engine::new(EngineConfig {
+            capacity: 1 << 18,
+            shards: 4,
+            workers: 4,
+            pools: 1,
+            artifacts_dir: None,
+        })
+        .unwrap(),
+    );
+    Wal::open_and_recover(&engine, WalConfig::new(&dir)).unwrap();
+    let batcher = Batcher::new(
+        engine.clone(),
+        BatcherConfig {
+            max_keys: GROUP,
+            max_delay: Duration::from_millis(1),
+        },
+    );
+
+    let run_triple = |t: u64| {
+        let ks = block(t, seed);
+        let ins = batcher.call(Request::new(OpKind::Insert, ks.clone())).unwrap();
+        assert_eq!(ins.successes as usize, GROUP);
+        let qry = batcher.call(Request::new(OpKind::Query, ks.clone())).unwrap();
+        assert_eq!(qry.successes as usize, GROUP);
+        let del = batcher.call(Request::new(OpKind::Delete, ks)).unwrap();
+        assert!(del.successes as usize >= GROUP - 8);
+    };
+
+    for t in 0..4 {
+        run_triple(t);
+    }
+    let before = engine.arena_stats();
+    for t in 4..38 {
+        run_triple(t);
+    }
+    let after = engine.arena_stats();
+
+    assert_eq!(
+        after.misses, before.misses,
+        "durable flush groups allocated new scratch \
+         (wal staging must lease from the arena; seed {seed})"
+    );
+    // The log really took the writes: two mutation groups per triple.
+    let wal = engine.wal_stats().expect("wal attached");
+    assert!(wal.appended >= 68, "expected ≥68 group commits, saw {}", wal.appended);
+    drop(batcher);
+    let _ = std::fs::remove_dir_all(&dir);
 }

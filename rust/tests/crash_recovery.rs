@@ -1,0 +1,394 @@
+//! Crash-injection recovery battery (the PR-6 acceptance bar): for
+//! every kill point — mid-record-write before the fsync, after the
+//! fsync but before the kernel launch, and mid-checkpoint — a restarted
+//! engine must match an uninterrupted stress oracle that applied
+//! exactly the durable prefix: same occupancy ledger (`len`), same
+//! positional query outcomes over present, deleted and absent keys.
+//! Torn final records (simulated crashes and hand-written garbage
+//! tails) must truncate away, never crash recovery, and the truncated
+//! segment must be appendable again. A clean shutdown (drain + final
+//! checkpoint) must replay zero records on restart.
+//!
+//! Crashes are injected through `Wal::debug_kill_at`, which performs
+//! exactly the writes a kill -9 at that point would leave behind and
+//! then fails every later durability call. Runs inside the seeded
+//! `stress` CI matrix (fixed `CUCKOO_STRESS_SEED`s, single-threaded);
+//! the seed varies the key material, and every assertion is relative to
+//! the oracle, so the battery is deterministic under any seed.
+
+use cuckoo_gpu::coordinator::server::{Client, Server};
+use cuckoo_gpu::coordinator::{
+    BatcherConfig, Engine, EngineConfig, KillPoint, OpKind, Response, Wal, WalConfig,
+};
+use cuckoo_gpu::util::prng::mix64;
+use std::fs;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+fn stress_seed() -> u64 {
+    std::env::var("CUCKOO_STRESS_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Keys per mutation group. 64 keys = 528-byte records, so the small
+/// `segment_bytes` below forces rolling and multi-segment replay.
+const GROUP: usize = 64;
+
+fn block(g: u64, seed: u64) -> Vec<u64> {
+    (0..GROUP as u64)
+        .map(|i| mix64(i ^ (g << 32) ^ mix64(seed)))
+        .collect()
+}
+
+fn engine(shards: usize) -> Arc<Engine> {
+    Arc::new(
+        Engine::new(EngineConfig {
+            capacity: 1 << 16,
+            shards,
+            workers: 2,
+            pools: 1,
+            artifacts_dir: None,
+        })
+        .unwrap(),
+    )
+}
+
+/// Fresh per-test log directory (the stress matrix runs each seed in
+/// its own process, so pid + seed + name never collides).
+fn wal_dir(name: &str, seed: u64) -> PathBuf {
+    let pid = std::process::id();
+    let dir = std::env::temp_dir().join(format!("cuckoo_crash_{name}_{pid}_{seed:x}"));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Apply one mutation group the way the batcher's flusher does: append
+/// the record under the commit guard, submit while the guard is still
+/// held. An append failure means the group was never executed.
+fn durable_apply(engine: &Engine, op: OpKind, keys: &[u64]) -> std::io::Result<Response> {
+    let wal = engine.wal().expect("wal attached");
+    let mut commit = wal.begin_commit()?;
+    commit.append_group(op, keys)?;
+    let resp = engine.execute_op(op, keys.to_vec());
+    drop(commit);
+    Ok(resp)
+}
+
+/// The acceptance comparison: recovered state must be indistinguishable
+/// from the oracle's — occupancy ledger and positional query outcomes
+/// (including shared false positives; both filters went through the
+/// same deterministic op sequence, so even those must agree).
+fn assert_same_state(recovered: &Engine, oracle: &Engine, probes: &[Vec<u64>]) {
+    assert_eq!(recovered.len(), oracle.len(), "occupancy ledger diverged");
+    for ks in probes {
+        let r = recovered.execute_op(OpKind::Query, ks.clone());
+        let o = oracle.execute_op(OpKind::Query, ks.clone());
+        assert_eq!(r.outcomes, o.outcomes, "positional query outcomes diverged");
+        assert_eq!(r.successes, o.successes);
+    }
+}
+
+/// Probe sets covering present, durable-but-late, and absent keys.
+fn probes(seed: u64) -> Vec<Vec<u64>> {
+    (0..8).map(|g| block(g, seed)).chain([block(1000, seed)]).collect()
+}
+
+#[test]
+fn pre_fsync_kill_recovers_exactly_the_durable_prefix() {
+    let seed = stress_seed();
+    // (groups before the kill, torn bytes reaching the disk): 0 torn
+    // bytes = crash between records; 1 byte tears the length field;
+    // 300 bytes tear mid-payload with a valid length + crc prefix.
+    for &(n, torn) in &[(0u64, 0usize), (2, 1), (5, 300)] {
+        let dir = wal_dir(&format!("prefsync_{n}_{torn}"), seed);
+        let cfg = WalConfig::new(&dir).segment_bytes(2048);
+        let a = engine(4);
+        Wal::open_and_recover(&a, cfg.clone()).unwrap();
+        a.wal().unwrap().debug_kill_at(KillPoint::PreWalFsync, n, torn);
+
+        let mut applied = 0u64;
+        for g in 0..8u64 {
+            match durable_apply(&a, OpKind::Insert, &block(g, seed)) {
+                Ok(r) => {
+                    assert_eq!(r.successes as usize, GROUP);
+                    applied += 1;
+                }
+                Err(_) => break,
+            }
+        }
+        assert_eq!(applied, n, "kill must fire on group {n}");
+        assert!(a.wal().unwrap().is_dead());
+        assert!(
+            durable_apply(&a, OpKind::Insert, &block(99, seed)).is_err(),
+            "a dead wal must refuse every later append"
+        );
+
+        // Restart: replay must surface exactly the durable prefix.
+        let b = engine(4);
+        let stats = Wal::open_and_recover(&b, cfg.clone()).unwrap();
+        assert_eq!(stats.checkpoint, None);
+        assert_eq!(stats.records_replayed, n);
+        assert_eq!(stats.keys_replayed, n * GROUP as u64);
+        assert_eq!(
+            stats.torn_tail_truncated,
+            torn > 0,
+            "torn={torn}: truncation flag disagrees: {stats:?}"
+        );
+        assert_eq!(b.wal_stats().unwrap().replayed, n);
+
+        let oracle = engine(4);
+        for g in 0..n {
+            oracle.execute_op(OpKind::Insert, block(g, seed));
+        }
+        assert_same_state(&b, &oracle, &probes(seed));
+
+        // The truncated log is appendable again, and a second restart
+        // sees the post-truncation append.
+        durable_apply(&b, OpKind::Insert, &block(50, seed)).unwrap();
+        let c = engine(4);
+        let stats2 = Wal::open_and_recover(&c, cfg).unwrap();
+        assert_eq!(stats2.records_replayed, n + 1);
+        assert!(!stats2.torn_tail_truncated);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn post_fsync_kill_replays_the_durable_but_unexecuted_group() {
+    let seed = stress_seed();
+    for &n in &[0u64, 3, 6] {
+        let dir = wal_dir(&format!("postfsync_{n}"), seed);
+        let cfg = WalConfig::new(&dir).segment_bytes(2048);
+        let a = engine(4);
+        Wal::open_and_recover(&a, cfg.clone()).unwrap();
+        a.wal().unwrap().debug_kill_at(KillPoint::PostFsyncPreKernel, n, 0);
+
+        let mut applied = 0u64;
+        for g in 0..8u64 {
+            match durable_apply(&a, OpKind::Insert, &block(g, seed)) {
+                Ok(_) => applied += 1,
+                Err(_) => break,
+            }
+        }
+        // Group n's record is durable but its kernel never launched in
+        // the crashed process — the at-least-once side of the contract.
+        assert_eq!(applied, n);
+        assert_eq!(a.len(), (n as usize) * GROUP, "killed group must not execute");
+
+        let b = engine(4);
+        let stats = Wal::open_and_recover(&b, cfg).unwrap();
+        assert_eq!(stats.records_replayed, n + 1, "durable group must replay");
+        assert!(!stats.torn_tail_truncated, "post-fsync record is whole");
+
+        let oracle = engine(4);
+        for g in 0..=n {
+            oracle.execute_op(OpKind::Insert, block(g, seed));
+        }
+        assert_same_state(&b, &oracle, &probes(seed));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn mid_checkpoint_kill_falls_back_to_previous_checkpoint_plus_full_log() {
+    let seed = stress_seed();
+    let dir = wal_dir("midckpt", seed);
+    let cfg = WalConfig::new(&dir).segment_bytes(2048);
+    let a = engine(4);
+    Wal::open_and_recover(&a, cfg.clone()).unwrap();
+    for g in 0..5 {
+        durable_apply(&a, OpKind::Insert, &block(g, seed)).unwrap();
+    }
+    // A delete group, so replay covers both mutation kinds.
+    durable_apply(&a, OpKind::Delete, &block(0, seed)).unwrap();
+    let ck = a.checkpoint().unwrap().expect("durable engine");
+    assert_eq!((ck.id, ck.shards), (1, 4));
+    for g in 5..8 {
+        durable_apply(&a, OpKind::Insert, &block(g, seed)).unwrap();
+    }
+    // Die after the first shard image of checkpoint 2, before its
+    // manifest: checkpoint 1 and the full log must stay authoritative.
+    a.wal().unwrap().debug_kill_at(KillPoint::MidCheckpoint, 0, 0);
+    assert!(a.checkpoint().is_err(), "armed checkpoint must die");
+
+    let oracle = engine(4);
+    for g in 0..5 {
+        oracle.execute_op(OpKind::Insert, block(g, seed));
+    }
+    oracle.execute_op(OpKind::Delete, block(0, seed));
+    for g in 5..8 {
+        oracle.execute_op(OpKind::Insert, block(g, seed));
+    }
+
+    let b = engine(4);
+    let stats = Wal::open_and_recover(&b, cfg.clone()).unwrap();
+    assert_eq!(stats.checkpoint, Some(1), "crashed checkpoint must not win");
+    assert_eq!(stats.records_replayed, 3, "exactly the post-checkpoint tail");
+    assert_same_state(&b, &oracle, &probes(seed));
+
+    // A later checkpoint on the recovered engine supersedes the crashed
+    // attempt's leftover image files, and a clean restart from it
+    // replays nothing.
+    let ck2 = b.checkpoint().unwrap().unwrap();
+    assert_eq!(ck2.id, 2);
+    let c = engine(4);
+    let stats2 = Wal::open_and_recover(&c, cfg).unwrap();
+    assert_eq!(stats2.checkpoint, Some(2));
+    assert_eq!(stats2.records_replayed, 0);
+    assert_same_state(&c, &oracle, &probes(seed));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn hand_torn_tails_truncate_and_the_segment_stays_appendable() {
+    let seed = stress_seed();
+    // Three shapes of on-disk residue after a crash mid-append: a
+    // nonsense length field, a valid length with the record cut short,
+    // and a whole-looking record whose checksum is wrong.
+    let garbage_len: &[u8] = &[0xFF; 7];
+    let cut_short: &[u8] = &[16, 0, 0, 0, 1, 2, 3];
+    // len=16, garbage crc, then a plausible 16-byte payload
+    // (op=insert, nkeys=1, key=0x0707...07).
+    let bad_crc: &[u8] = &[
+        16, 0, 0, 0, 0xAA, 0xAA, 0xAA, 0xAA, 0, 0, 0, 0, 1, 0, 0, 0, 7, 7, 7, 7, 7, 7, 7, 7,
+    ];
+    for &(name, tail) in &[("len", garbage_len), ("cut", cut_short), ("crc", bad_crc)] {
+        let dir = wal_dir(&format!("torn_{name}"), seed);
+        let cfg = WalConfig::new(&dir).segment_bytes(2048);
+        let a = engine(2);
+        Wal::open_and_recover(&a, cfg.clone()).unwrap();
+        for g in 0..3 {
+            durable_apply(&a, OpKind::Insert, &block(g, seed)).unwrap();
+        }
+        // An empty mutation group: a valid zero-key record must survive
+        // the round trip too.
+        durable_apply(&a, OpKind::Insert, &[]).unwrap();
+        drop(a);
+
+        // 3 × 528-byte records + one 16-byte empty record after the
+        // 16-byte header = everything in segment 0, ending at 1616.
+        let seg = dir.join(format!("wal-{:016x}.seg", 0));
+        let clean_len = fs::metadata(&seg).unwrap().len();
+        assert_eq!(clean_len, 1616);
+        let mut f = fs::OpenOptions::new().append(true).open(&seg).unwrap();
+        std::io::Write::write_all(&mut f, tail).unwrap();
+        drop(f);
+
+        let b = engine(2);
+        let stats = Wal::open_and_recover(&b, cfg.clone()).unwrap();
+        assert_eq!(stats.records_replayed, 4, "tail '{name}'");
+        assert_eq!(stats.keys_replayed, 3 * GROUP as u64);
+        assert!(stats.torn_tail_truncated, "tail '{name}' must be cut");
+        assert_eq!(
+            fs::metadata(&seg).unwrap().len(),
+            clean_len,
+            "file must be back at the last good record boundary"
+        );
+
+        let oracle = engine(2);
+        for g in 0..3 {
+            oracle.execute_op(OpKind::Insert, block(g, seed));
+        }
+        assert_same_state(&b, &oracle, &probes(seed));
+
+        // Appendable after truncation; a second restart is torn-free.
+        durable_apply(&b, OpKind::Insert, &block(40, seed)).unwrap();
+        let c = engine(2);
+        let stats2 = Wal::open_and_recover(&c, cfg).unwrap();
+        assert_eq!(stats2.records_replayed, 5);
+        assert!(!stats2.torn_tail_truncated);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn clean_shutdown_checkpoints_so_restart_replays_zero_records() {
+    let seed = stress_seed();
+    let dir = wal_dir("shutdown", seed);
+    let e = engine(2);
+    Wal::open_and_recover(&e, WalConfig::new(&dir)).unwrap();
+    let server = Arc::new(Server::new(e.clone(), BatcherConfig::default()));
+    let shutdown = server.shutdown_handle();
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || {
+        srv.serve("127.0.0.1:0", move |a| addr_tx.send(a).unwrap()).unwrap();
+    });
+    let addr = addr_rx.recv().unwrap();
+
+    let mut c = Client::connect(addr).unwrap();
+    let ks0 = block(0, seed);
+    let ks1 = block(1, seed);
+    assert_eq!(c.op("INSERT", &ks0).unwrap().0 as usize, GROUP);
+    assert_eq!(c.op("INSERT", &ks1).unwrap().0 as usize, GROUP);
+    // fp16 collisions inside a delete batch can very rarely trade a
+    // removal; the durability property is what's under test.
+    let (removed, _) = c.op("DELETE", &ks1[..GROUP / 2]).unwrap();
+    assert!(removed as usize >= GROUP / 2 - 2, "deletes: {removed}");
+    let stats = c.call("STATS").unwrap();
+    assert!(stats.contains("wal: segments="), "durable STATS missing: {stats}");
+    assert!(!stats.contains("wal: off"), "durable engine reported off: {stats}");
+    assert_eq!(c.call("QUIT").unwrap(), "BYE");
+
+    // Graceful shutdown: drain every flush group, then a final
+    // checkpoint — the restart below must replay nothing.
+    shutdown.store(true, Ordering::Release);
+    handle.join().unwrap();
+    let live_len = e.len();
+
+    let b = engine(2);
+    let rs = Wal::open_and_recover(&b, WalConfig::new(&dir)).unwrap();
+    assert!(rs.checkpoint.is_some(), "shutdown must have checkpointed");
+    assert_eq!(rs.records_replayed, 0, "clean restart must replay zero records");
+    assert_eq!(b.len(), live_len);
+    let q = b.execute_op(OpKind::Query, ks0.clone());
+    assert!(q.outcomes.iter().all(|&x| x), "restored keys must answer present");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn recovery_rejects_a_shard_count_mismatch() {
+    let seed = stress_seed();
+    let dir = wal_dir("shards", seed);
+    let cfg = WalConfig::new(&dir);
+    let a = engine(4);
+    Wal::open_and_recover(&a, cfg.clone()).unwrap();
+    durable_apply(&a, OpKind::Insert, &block(0, seed)).unwrap();
+    a.checkpoint().unwrap().unwrap();
+    drop(a);
+
+    // Restarting with a different shard topology must fail loudly, not
+    // load a 4-shard image into 2 shards.
+    let b = engine(2);
+    let err = Wal::open_and_recover(&b, cfg).unwrap_err();
+    assert!(err.to_string().contains("config mismatch"), "{err}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn recovery_rejects_a_corrupt_manifest() {
+    let seed = stress_seed();
+    let dir = wal_dir("manifest", seed);
+    let cfg = WalConfig::new(&dir);
+    let a = engine(2);
+    Wal::open_and_recover(&a, cfg.clone()).unwrap();
+    durable_apply(&a, OpKind::Insert, &block(0, seed)).unwrap();
+    a.checkpoint().unwrap().unwrap();
+    drop(a);
+
+    // Flip one digit of the recorded offset: the manifest checksum must
+    // catch it (a wrong replay position corrupts silently otherwise).
+    let path = dir.join("MANIFEST");
+    let text = fs::read_to_string(&path).unwrap();
+    let broken = text.replacen("offset ", "offset 9", 1);
+    assert_ne!(text, broken);
+    fs::write(&path, broken).unwrap();
+
+    let b = engine(2);
+    let err = Wal::open_and_recover(&b, cfg).unwrap_err();
+    assert!(err.to_string().contains("checksum"), "{err}");
+    let _ = fs::remove_dir_all(&dir);
+}

@@ -89,3 +89,50 @@ if [ -n "$violations" ]; then
 fi
 
 echo "Hot path OK: no ad-hoc allocations in the $HOT_FILE submit region"
+
+# ---------------------------------------------------------------------
+# WAL group-commit guard (PR 6).
+#
+# Every write-ahead-log append must flow through the single group-commit
+# entry point, CommitGuard::append_group — one checksummed record plus
+# one fsync per batcher flush group, ordered under the commit lock that
+# checkpoints capture against. Fail CI if the underlying Wal::write_record
+# gains visibility, or if an append_group call site appears in src/
+# outside the wal module itself and the batcher's flusher: any other
+# caller would bypass the flush-group discipline and break the
+# checkpoint's nothing-lost/nothing-doubled capture ordering. (Tests
+# under rust/tests may drive append_group directly — the crash battery's
+# durable_apply helper mirrors the flusher on purpose.)
+
+WAL_FILE=rust/src/coordinator/wal.rs
+if [ ! -f "$WAL_FILE" ]; then
+  echo "error: $WAL_FILE missing (update the WAL guard in $0)" >&2
+  exit 1
+fi
+if ! grep -q 'fn write_record' "$WAL_FILE"; then
+  echo "error: write_record not found in $WAL_FILE — this guard checks a" >&2
+  echo "stale entry point; update it alongside the wal module." >&2
+  exit 1
+fi
+if grep -nE 'pub(\(crate\))?[[:space:]]+fn[[:space:]]+write_record' "$WAL_FILE"; then
+  echo "error: Wal::write_record must stay private — appends go through" >&2
+  echo "CommitGuard::append_group (group commit under the commit lock)." >&2
+  exit 1
+fi
+
+stray_appends="$(grep -rnE 'append_group[[:space:]]*\(' rust/src \
+  | grep -vE '^rust/src/coordinator/(wal|batcher)\.rs:' || true)"
+stray_writes="$(grep -rn 'write_record' rust/src \
+  | grep -v '^rust/src/coordinator/wal.rs:' || true)"
+if [ -n "$stray_appends$stray_writes" ]; then
+  echo "error: WAL append outside the group-commit discipline:" >&2
+  printf '%s\n' "$stray_appends" "$stray_writes" | sed '/^$/d' >&2
+  echo >&2
+  echo "Mutations reach the log only as batcher flush groups via" >&2
+  echo "CommitGuard::append_group; route new write paths through the" >&2
+  echo "batcher (or extend coordinator/wal.rs) instead of appending" >&2
+  echo "directly." >&2
+  exit 1
+fi
+
+echo "WAL surface OK: appends confined to the group-commit entry point"
