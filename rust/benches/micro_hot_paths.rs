@@ -263,11 +263,74 @@ fn batch_pipeline_overlap() {
     });
 }
 
+/// Tenant-mix overhead: the same total key volume served from one
+/// namespace vs fanned across 8, round-robin so consecutive flush
+/// groups alternate tenants (groups are keyed `(namespace, OpKind)`,
+/// so one fused kernel never mixes tenants). Measures the cost of
+/// per-namespace routing — resolve + inflight pinning + LRU stamp —
+/// at fixed total work. Run at the pre/post commits on real hardware
+/// to record before/after numbers (this container has no Rust
+/// toolchain).
+fn tenant_mix() {
+    println!("-- tenant_mix (1 vs 8 namespaces, fixed total keys) --");
+    let groups = 64usize;
+    let batch = 1 << 14;
+    let sets: Vec<Vec<u64>> = (0..groups as u64)
+        .map(|g| {
+            (0..batch as u64)
+                .map(|i| cuckoo_gpu::util::prng::mix64(i ^ (g << 25)))
+                .collect()
+        })
+        .collect();
+    for tenants in [1usize, 8] {
+        let engine = Engine::new(EngineConfig {
+            capacity: groups * batch,
+            shards: 4,
+            workers: cuckoo_gpu::device::default_workers(),
+            pools: 1,
+            artifacts_dir: None,
+        })
+        .unwrap();
+        let names: Vec<String> = (0..tenants).map(|t| format!("tenant{t}")).collect();
+        for name in &names {
+            engine
+                .create_namespace_with(name, groups * batch / tenants, 4)
+                .unwrap();
+        }
+        for (g, ks) in sets.iter().enumerate() {
+            engine
+                .execute_op_in(&names[g % tenants], OpKind::Insert, ks.clone())
+                .unwrap();
+        }
+        bench(
+            &format!("query {groups} groups across {tenants} ns"),
+            groups * batch,
+            || {
+                let mut pending = VecDeque::new();
+                for (g, ks) in sets.iter().enumerate() {
+                    pending.push_back(
+                        engine
+                            .execute_async_in(&names[g % tenants], OpKind::Query, ks)
+                            .unwrap(),
+                    );
+                    if pending.len() >= 2 {
+                        black_box(pending.pop_front().unwrap().wait().successes);
+                    }
+                }
+                while let Some(t) = pending.pop_front() {
+                    black_box(t.wait().successes);
+                }
+            },
+        );
+    }
+}
+
 fn main() {
     launch_overhead();
     scatter_reuse();
     topology_scaling();
     batch_pipeline_overlap();
+    tenant_mix();
     let n = 1 << 22;
     let keys: Vec<u64> = (0..n as u64).map(cuckoo_gpu::util::prng::mix64).collect();
 

@@ -2,11 +2,13 @@
 //! launches (the GPU analogue: kernel launches amortise over batches, so
 //! the serving layer must aggregate).
 //!
-//! Requests of the *same* operation kind coalesce; a flush triggers when
+//! Flush groups are keyed by `(namespace, OpKind)`: requests coalesce
+//! only when both match, so one fused kernel never mixes tenants — a
+//! group targets exactly one namespace's filter. A flush triggers when
 //! the pending batch reaches `max_keys` or the oldest request exceeds
-//! `max_delay`. Mixed kinds flush in arrival order of their groups,
-//! which preserves the epoch guard's query/mutation phase separation and
-//! keeps per-request ordering within a kind.
+//! `max_delay`. Mixed groups flush in arrival order, which preserves
+//! the epoch guard's query/mutation phase separation and keeps
+//! per-request ordering within a `(namespace, kind)`.
 //!
 //! ## Pipelined flusher
 //!
@@ -70,6 +72,7 @@
 //! the engine's AOT-path comment.)
 
 use super::engine::{Engine, ExecTicket};
+use super::registry::DEFAULT_NS;
 use super::request::{OpKind, Request, Response, ServeError};
 use crate::mem::{BufferArena, Lease};
 use std::collections::VecDeque;
@@ -99,6 +102,9 @@ type ClientTx = mpsc::Sender<Result<Response, ServeError>>;
 
 struct PendingGroup {
     op: OpKind,
+    /// Target namespace (`None` = default); part of the group key, so a
+    /// fused kernel never mixes tenants.
+    ns: Option<Arc<str>>,
     /// Leased from the engine's arena (capacity `max_keys` up front);
     /// recycled by the flusher as soon as the group is staged.
     keys: Lease<u64>,
@@ -188,8 +194,9 @@ impl Batcher {
             let _ = tx.send(Err(ServeError::Closed));
             return rx;
         }
-        // Join the newest group of the same kind, else open a new group.
-        let join_last = matches!(st.groups.last(), Some(g) if g.op == req.op && g.keys.len() < self.cfg.max_keys);
+        // Join the newest group of the same (namespace, kind), else
+        // open a new group.
+        let join_last = matches!(st.groups.last(), Some(g) if g.op == req.op && g.ns == req.ns && g.keys.len() < self.cfg.max_keys);
         if join_last {
             let g = st.groups.last_mut().unwrap();
             let start = g.keys.len();
@@ -205,6 +212,7 @@ impl Batcher {
             keys.extend_from_slice(&req.keys);
             st.groups.push(PendingGroup {
                 op: req.op,
+                ns: req.ns,
                 keys,
                 clients: vec![(tx, 0..req.keys.len())],
                 oldest: Instant::now(),
@@ -302,7 +310,22 @@ impl Batcher {
                         respond(inflight.pop_front().unwrap(), &arena);
                     }
                     engine.metrics.record_batch();
-                    let PendingGroup { op, keys, clients, .. } = g;
+                    let PendingGroup { op, ns, keys, clients, .. } = g;
+                    let ns_ref: &str = ns.as_deref().unwrap_or(DEFAULT_NS);
+                    // Fail fast if the namespace vanished between
+                    // enqueue and flush — before the WAL sees a record
+                    // for it. (A drop racing past this check is still
+                    // benign: recovery skips groups whose namespace no
+                    // longer exists at that log position.)
+                    if !engine.namespace_exists(ns_ref) {
+                        drop(keys);
+                        for (tx, _) in clients {
+                            let _ = tx.send(Err(ServeError::Failed(format!(
+                                "unknown namespace '{ns_ref}'"
+                            ))));
+                        }
+                        continue;
+                    }
                     // Durability: a mutation group's record must be on
                     // disk before its kernel launches. One record per
                     // flush group = group commit. On a durable engine an
@@ -324,7 +347,9 @@ impl Batcher {
                                 }
                                 Err(e) => Err(e),
                             };
-                            match acquired.and_then(|mut c| c.append_group(op, &keys).map(|()| c)) {
+                            match acquired
+                                .and_then(|mut c| c.append_group(ns_ref, op, &keys).map(|()| c))
+                            {
                                 Ok(c) => Some(c),
                                 Err(e) => {
                                     drop(keys);
@@ -342,12 +367,13 @@ impl Batcher {
                     // A panic during submission (scatter or fault
                     // injection) must not kill the flusher: fail the
                     // group's clients and keep serving.
-                    let staged =
-                        catch_unwind(AssertUnwindSafe(|| engine.execute_async_op(op, &keys)));
+                    let staged = catch_unwind(AssertUnwindSafe(|| {
+                        engine.execute_async_in(ns_ref, op, &keys)
+                    }));
                     // The keys are fully staged into the filter's own
-                    // leased scatter (or the submit panicked) — recycle
-                    // the group buffer now so the NEXT group's lease
-                    // reuses it while this group's kernel runs.
+                    // leased scatter (or the submit panicked/failed) —
+                    // recycle the group buffer now so the NEXT group's
+                    // lease reuses it while this group's kernel runs.
                     drop(keys);
                     // The ticket's phase token now pins the mutation, so
                     // a checkpoint ordering after this commit window also
@@ -355,11 +381,19 @@ impl Batcher {
                     // commit lock only here (see wal.rs's capture logic).
                     drop(commit);
                     match staged {
-                        Ok(ticket) => inflight.push_back(InFlight {
+                        Ok(Ok(ticket)) => inflight.push_back(InFlight {
                             ticket,
                             clients,
                             mutation,
                         }),
+                        // A namespace-level refusal (dropped or evicted
+                        // under an unconfigured tier mid-flight) fails
+                        // this group's clients with the named token.
+                        Ok(Err(e)) => {
+                            for (tx, _) in clients {
+                                let _ = tx.send(Err(ServeError::Failed(e.to_string())));
+                            }
+                        }
                         Err(_) => {
                             for (tx, _) in clients {
                                 let _ = tx.send(Err(ServeError::Failed(
@@ -495,6 +529,32 @@ mod tests {
         let rx_q = b.submit(Request::new(OpKind::Query, ks.clone()));
         assert_eq!(rx_i.recv().unwrap().unwrap().op, OpKind::Insert);
         assert_eq!(rx_q.recv().unwrap().unwrap().op, OpKind::Query);
+    }
+
+    #[test]
+    fn groups_are_keyed_by_namespace_and_kind() {
+        let e = engine();
+        e.create_namespace("t", Some(50_000)).unwrap();
+        let b = Batcher::new(e.clone(), BatcherConfig::default());
+        let ks = keys(500, 300);
+        // Same op, different tenants, enqueued back to back: the groups
+        // must not merge — isolation is observable through per-tenant
+        // query answers afterwards.
+        let rx_d = b.submit(Request::new(OpKind::Insert, ks.clone()));
+        let rx_t = b.submit(Request::in_ns("t", OpKind::Insert, ks[..100].to_vec()));
+        assert_eq!(rx_d.recv().unwrap().unwrap().successes, 500);
+        assert_eq!(rx_t.recv().unwrap().unwrap().successes, 100);
+        let hits_t = b.call(Request::in_ns("t", OpKind::Query, ks.clone())).unwrap().successes;
+        assert!((100..110).contains(&hits_t), "tenant saw {hits_t} of its 100 keys");
+        assert_eq!(b.call(Request::new(OpKind::Query, ks.clone())).unwrap().successes, 500);
+        // A request for a namespace that never existed fails its own
+        // group with the named token; the flusher keeps serving.
+        let err = b.call(Request::in_ns("ghost", OpKind::Query, ks.clone())).unwrap_err();
+        assert!(
+            err.to_string().contains("unknown namespace 'ghost'"),
+            "got: {err}"
+        );
+        assert_eq!(b.call(Request::new(OpKind::Query, ks)).unwrap().successes, 500);
     }
 
     #[test]

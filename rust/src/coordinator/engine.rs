@@ -31,15 +31,19 @@
 
 use super::epoch::{EpochGuard, PhaseToken};
 use super::metrics::{Metrics, PoolStat};
+use super::registry::{
+    valid_ns_name, InflightGuard, NamespaceRegistry, NamespaceStat, NsError, NsImage, DEFAULT_NS,
+};
 use super::request::{OpKind, Request, Response};
 use super::shard::{BatchTicket, ShardedFilter};
-use super::wal::{CheckpointStats, Wal, WalStats};
+use super::wal::{CheckpointStats, Wal, WalRecord, WalStats};
 use crate::device::{build_backend, Backend};
 use crate::filter::{FilterError, Fp16};
 use crate::mem::{ArenaStats, BufferArena};
 use crate::runtime::{RuntimeError, RuntimeHandle};
 use crate::util::Timer;
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 /// Construction failure: the filter geometry was rejected or the PJRT
 /// runtime could not come up for a strict (`with_pjrt`) engine.
@@ -100,9 +104,22 @@ impl Default for EngineConfig {
     }
 }
 
-/// The engine serves batched requests over an fp16 sharded filter.
+/// The engine serves batched requests over a registry of fp16 sharded
+/// filters — one independent filter per tenant namespace, all sharing
+/// this engine's one backend, one arena and one epoch/batcher pipeline.
+/// Bare (un-namespaced) operations hit the pinned `default` namespace,
+/// so the single-filter API surface is unchanged.
 pub struct Engine {
-    filter: ShardedFilter<Fp16>,
+    /// Tenant name → filter registry. The implicit [`DEFAULT_NS`] entry
+    /// is installed pinned (never dropped, never evicted) at
+    /// construction; `CREATE`/`DROP` manage the rest at runtime.
+    registry: NamespaceRegistry,
+    /// The pinned default filter, held directly so the bare-op hot path
+    /// and the recovery surface skip a registry lookup.
+    default_filter: Arc<ShardedFilter<Fp16>>,
+    /// `(capacity, shards)` for `CREATE` without an explicit capacity,
+    /// taken from the engine config.
+    ns_defaults: (usize, usize),
     backend: Box<dyn Backend>,
     epoch: EpochGuard,
     pub metrics: Metrics,
@@ -126,9 +143,10 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(cfg: EngineConfig) -> Result<Self, EngineError> {
-        let arena = std::sync::Arc::new(BufferArena::new());
-        let filter =
-            ShardedFilter::with_capacity(cfg.capacity, cfg.shards)?.with_arena(arena.clone());
+        let arena = Arc::new(BufferArena::new());
+        let filter = Arc::new(
+            ShardedFilter::with_capacity(cfg.capacity, cfg.shards)?.with_arena(arena.clone()),
+        );
         let runtime = match &cfg.artifacts_dir {
             Some(dir) => match RuntimeHandle::spawn(dir) {
                 Ok(rt) => {
@@ -159,8 +177,12 @@ impl Engine {
             },
             None => None,
         };
+        let registry = NamespaceRegistry::new(arena.clone());
+        registry.install_pinned(DEFAULT_NS, filter.clone(), cfg.capacity);
         Ok(Self {
-            filter,
+            registry,
+            default_filter: filter,
+            ns_defaults: (cfg.capacity, cfg.shards),
             backend: build_backend(cfg.pools, cfg.workers),
             epoch: EpochGuard::new(),
             metrics: Metrics::new(),
@@ -182,10 +204,16 @@ impl Engine {
             .bucket_slots(g.bucket_slots)
             .seed(g.seed);
         let filter_inner = crate::filter::CuckooFilter::<Fp16>::new(cfg)?;
-        let arena = std::sync::Arc::new(BufferArena::new());
-        let filter = ShardedFilter::from_single(filter_inner).with_arena(arena.clone());
+        let arena = Arc::new(BufferArena::new());
+        let filter =
+            Arc::new(ShardedFilter::from_single(filter_inner).with_arena(arena.clone()));
+        let capacity = g.num_buckets * g.bucket_slots;
+        let registry = NamespaceRegistry::new(arena.clone());
+        registry.install_pinned(DEFAULT_NS, filter.clone(), capacity);
         Ok(Self {
-            filter,
+            registry,
+            default_filter: filter,
+            ns_defaults: (capacity, 1),
             backend: build_backend(1, workers),
             epoch: EpochGuard::new(),
             metrics: Metrics::new(),
@@ -238,16 +266,11 @@ impl Engine {
             .collect()
     }
 
-    /// The engine's sharded filter (recovery restores checkpoint images
-    /// into it shard by shard; see [`super::wal`]).
+    /// The pinned `default` namespace's sharded filter (recovery
+    /// restores the default checkpoint images into it shard by shard;
+    /// see [`super::wal`]).
     pub fn filter(&self) -> &ShardedFilter<Fp16> {
-        &self.filter
-    }
-
-    /// The phase guard — the WAL's checkpointer quiesces in-flight
-    /// mutations through it.
-    pub(crate) fn epoch(&self) -> &EpochGuard {
-        &self.epoch
+        &self.default_filter
     }
 
     /// Attach the durability layer (once; later calls are ignored).
@@ -277,12 +300,172 @@ impl Engine {
         }
     }
 
+    /// Total stored fingerprints across every namespace (evicted
+    /// tenants report the count frozen into their spill images).
     pub fn len(&self) -> usize {
-        self.filter.len()
+        self.registry.total_len() as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.filter.is_empty()
+        self.len() == 0
+    }
+
+    // ---- namespace management -------------------------------------
+
+    /// Create a tenant namespace with the engine's default shard count,
+    /// at `capacity` keys (engine default when `None`). On a durable
+    /// engine the create is group-committed to the WAL before the
+    /// registry mutates, so recovery replays it in log order.
+    pub fn create_namespace(&self, name: &str, capacity: Option<usize>) -> Result<(), NsError> {
+        self.create_namespace_with(name, capacity.unwrap_or(self.ns_defaults.0), self.ns_defaults.1)
+    }
+
+    /// Fully explicit form of [`Engine::create_namespace`].
+    pub fn create_namespace_with(
+        &self,
+        name: &str,
+        capacity: usize,
+        shards: usize,
+    ) -> Result<(), NsError> {
+        if !valid_ns_name(name) {
+            return Err(NsError::BadName(name.to_string()));
+        }
+        match self.wal.get() {
+            Some(w) => {
+                // Registry changes happen under the commit lock, so a
+                // concurrent checkpoint's capture sees the namespace
+                // set exactly as of its captured log position.
+                let mut c = w.begin_commit().map_err(|e| NsError::Io(e.to_string()))?;
+                if self.registry.exists(name) {
+                    return Err(NsError::Exists(name.to_string()));
+                }
+                c.append_create(name, capacity, shards)
+                    .map_err(|e| NsError::Io(e.to_string()))?;
+                self.registry.create(name, capacity, shards).map(|_| ())
+            }
+            None => self.registry.create(name, capacity, shards).map(|_| ()),
+        }
+    }
+
+    /// Drop a tenant namespace: WAL-logged (durable engines), waits for
+    /// its in-flight tickets, deletes its spill images. The pinned
+    /// `default` namespace cannot be dropped.
+    pub fn drop_namespace(&self, name: &str) -> Result<(), NsError> {
+        if name == DEFAULT_NS {
+            return Err(NsError::Pinned(name.to_string()));
+        }
+        match self.wal.get() {
+            Some(w) => {
+                let mut c = w.begin_commit().map_err(|e| NsError::Io(e.to_string()))?;
+                if !self.registry.exists(name) {
+                    return Err(NsError::Unknown(name.to_string()));
+                }
+                c.append_drop(name).map_err(|e| NsError::Io(e.to_string()))?;
+                self.registry.remove(name)
+            }
+            None => self.registry.remove(name),
+        }
+    }
+
+    /// Explicitly evict a namespace to its spill images (tests/admin;
+    /// the LRU budget path evicts automatically). `Ok(false)` if it was
+    /// already evicted or stayed busy.
+    pub fn evict_namespace(&self, name: &str) -> Result<bool, NsError> {
+        self.registry.evict(name)
+    }
+
+    /// Configure tiering: cold namespaces are evicted to v2 persist
+    /// images under `dir` whenever total resident table bytes exceed
+    /// `max_resident_bytes`, and fault back in on next access.
+    pub fn enable_tiering(
+        &self,
+        dir: impl Into<std::path::PathBuf>,
+        max_resident_bytes: u64,
+    ) -> std::io::Result<()> {
+        self.registry.enable_tiering(dir.into(), max_resident_bytes)
+    }
+
+    pub fn namespace_exists(&self, name: &str) -> bool {
+        self.registry.exists(name)
+    }
+
+    /// Per-namespace rows for STATS, in name order.
+    pub fn namespaces(&self) -> Vec<NamespaceStat> {
+        self.registry.stats()
+    }
+
+    // ---- WAL integration surface (pub(crate): wal.rs goes through
+    // the engine so namespace resolution stays confined here) --------
+
+    /// Capture every namespace for a checkpoint, under a query phase
+    /// (mutations quiesced). The caller must hold the WAL commit lock
+    /// so the captured registry matches the captured log position.
+    pub(crate) fn capture_namespaces(&self) -> std::io::Result<Vec<NsImage>> {
+        let _quiesce = self.epoch.begin_query();
+        self.registry.capture()
+    }
+
+    /// Recovery: restore one namespace from its checkpoint images —
+    /// the default loads into the engine's own filter, any other
+    /// namespace is (re)created with the manifest's geometry first.
+    pub(crate) fn recover_namespace(
+        &self,
+        name: &str,
+        capacity: usize,
+        shards: usize,
+        images: &[std::path::PathBuf],
+    ) -> std::io::Result<()> {
+        let to_io =
+            |e: NsError| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string());
+        let filter = if name == DEFAULT_NS {
+            self.default_filter.clone()
+        } else {
+            self.registry.create(name, capacity, shards).map_err(to_io)?
+        };
+        if filter.num_shards() != images.len() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!(
+                    "config mismatch: namespace '{name}' has {} shard images, filter has {} shards",
+                    images.len(),
+                    filter.num_shards()
+                ),
+            ));
+        }
+        for (i, path) in images.iter().enumerate() {
+            filter
+                .shard(i)
+                .load_into(std::io::BufReader::new(std::fs::File::open(path)?))?;
+        }
+        Ok(())
+    }
+
+    /// Recovery: apply one replayed WAL record. Creates are idempotent
+    /// (the checkpoint may already have restored the namespace), drops
+    /// of missing namespaces are ignored, and a group whose namespace
+    /// no longer exists is skipped — the live system shows the same
+    /// outcome when a drop races an in-flight group's execution.
+    pub(crate) fn replay_record(&self, rec: WalRecord) {
+        match rec {
+            WalRecord::Create {
+                ns,
+                capacity,
+                shards,
+            } => {
+                if !self.registry.exists(&ns) {
+                    if let Err(e) = self.registry.create(&ns, capacity, shards) {
+                        eprintln!("[cuckoo-gpu] warn: replayed CREATE '{ns}' failed: {e}");
+                    }
+                }
+            }
+            WalRecord::Drop { ns } => {
+                let _ = self.registry.remove(&ns);
+            }
+            WalRecord::Group { ns, op, keys } => match self.execute_op_in(&ns, op, keys) {
+                Ok(_) | Err(NsError::Unknown(_)) => {}
+                Err(e) => eprintln!("[cuckoo-gpu] warn: replayed {op:?} in '{ns}' failed: {e}"),
+            },
+        }
     }
 
     /// Execute one batched request and wait for it. One fused launch per
@@ -299,6 +482,12 @@ impl Engine {
         self.execute(&Request::new(op, keys))
     }
 
+    /// Namespace-aware synchronous form: run `op` over `keys` in
+    /// namespace `ns`, faulting an evicted tenant back in first.
+    pub fn execute_op_in(&self, ns: &str, op: OpKind, keys: Vec<u64>) -> Result<Response, NsError> {
+        Ok(self.execute_async_in(ns, op, &keys)?.wait())
+    }
+
     /// Submit one batched request without a barrier: the scatter/permute
     /// runs on the calling thread, the fused kernels are enqueued
     /// stream-ordered on the backend, and the returned [`ExecTicket`]
@@ -313,8 +502,13 @@ impl Engine {
     /// holding unresolved tickets of one phase must drain them before
     /// submitting the opposite phase — `begin_query`/`begin_mutation`
     /// would otherwise wait on tokens only that caller can release.
+    /// The request's namespace must exist (bare requests hit the
+    /// pinned default); namespace-checked callers use
+    /// [`Engine::execute_async_in`] / [`Engine::execute_op_in`].
     pub fn execute_async(&self, req: &Request) -> ExecTicket<'_> {
-        self.execute_async_op(req.op, &req.keys)
+        let ns = req.ns.as_deref().unwrap_or(DEFAULT_NS);
+        self.execute_async_in(ns, req.op, &req.keys)
+            .unwrap_or_else(|e| panic!("execute_async: {e}"))
     }
 
     /// Slice-taking form of [`Engine::execute_async`]: submit `op` over
@@ -324,6 +518,21 @@ impl Engine {
     /// the batcher drops its leased group buffer right here, which is
     /// what lets consecutive flush groups share one set of buffers.
     pub fn execute_async_op(&self, op: OpKind, keys: &[u64]) -> ExecTicket<'_> {
+        self.execute_async_in(DEFAULT_NS, op, keys)
+            .expect("default namespace is pinned and always resident")
+    }
+
+    /// Namespace-aware form of [`Engine::execute_async_op`]: resolve
+    /// `ns` through the registry (faulting an evicted tenant back in),
+    /// pin it against eviction for the lifetime of the ticket, then
+    /// submit exactly as the bare path does. Errors name the offending
+    /// namespace so the server can echo them verbatim.
+    pub fn execute_async_in(
+        &self,
+        ns: &str,
+        op: OpKind,
+        keys: &[u64],
+    ) -> Result<ExecTicket<'_>, NsError> {
         // Read-only fast path: the swap (an unconditional cache-line
         // write) only runs once a test has armed the hook.
         if self.debug_fail_next_execute.load(Ordering::Relaxed)
@@ -331,6 +540,12 @@ impl Engine {
         {
             panic!("injected engine failure");
         }
+        let namespace = self.registry.resolve(ns)?;
+        let (filter, guard) = self.registry.acquire(&namespace)?;
+        // Admitting this tenant may push total resident bytes over the
+        // budget; page out the coldest idle tenant (never this one —
+        // its inflight guard is held).
+        self.registry.enforce_budget(&namespace);
         let timer = Timer::new();
         let n = keys.len();
         let phase = if op.is_mutation() {
@@ -338,7 +553,7 @@ impl Engine {
         } else {
             self.epoch.begin_query()
         };
-        if op == OpKind::Query {
+        if op == OpKind::Query && ns == DEFAULT_NS {
             if let Some(rt) = &self.runtime {
                 // AOT path: snapshot + PJRT batches, synchronous inside
                 // the query phase (no concurrent mutation). This branch
@@ -348,7 +563,7 @@ impl Engine {
                 // guarantee is scoped to the native path, which is the
                 // only one tests/alloc_reuse.rs runs.
                 let (successes, outcomes) = {
-                    let snapshot = std::sync::Arc::new(self.filter.shard(0).table().snapshot());
+                    let snapshot = Arc::new(filter.shard(0).table().snapshot());
                     match rt.query_all(snapshot, keys.to_vec()) {
                         Ok(flags) => {
                             // The runtime's flags ARE the positional
@@ -370,34 +585,34 @@ impl Engine {
                             );
                             // Same unified path, degraded to sync: submit
                             // + wait inside the held query phase.
-                            self.filter
-                                .submit(self.backend.as_ref(), OpKind::Query, keys)
-                                .wait()
+                            filter.submit(self.backend.as_ref(), OpKind::Query, keys).wait()
                         }
                     }
                 };
                 drop(phase);
+                drop(guard);
                 self.metrics.record(op, n, successes, timer.elapsed_ns());
-                return ExecTicket {
+                return Ok(ExecTicket {
                     inner: Some(TicketInner::Ready(Response {
                         op,
                         outcomes,
                         successes,
                     })),
-                };
+                });
             }
         }
-        let batch = self.filter.submit(self.backend.as_ref(), op, keys);
-        ExecTicket {
+        let batch = filter.submit(self.backend.as_ref(), op, keys);
+        Ok(ExecTicket {
             inner: Some(TicketInner::Pending {
                 op,
                 n,
                 batch,
                 _phase: phase,
+                _ns: Some(guard),
                 timer,
                 metrics: &self.metrics,
             }),
-        }
+        })
     }
 }
 
@@ -424,6 +639,9 @@ enum TicketInner<'e> {
         n: usize,
         batch: BatchTicket<Fp16>,
         _phase: PhaseToken<'e>,
+        /// Holds the namespace's inflight count up (blocking eviction)
+        /// until after `batch` resolves — declared after it on purpose.
+        _ns: Option<InflightGuard>,
         timer: Timer,
         metrics: &'e Metrics,
     },
@@ -441,6 +659,7 @@ impl ExecTicket<'_> {
                 n,
                 batch,
                 _phase,
+                _ns,
                 timer,
                 metrics,
             } => {
@@ -666,7 +885,54 @@ mod tests {
         assert_eq!(r2.outcomes, vec![true; 6_000]);
         // The filter leases from the engine's arena — one counter story.
         assert!(e.arena_stats().acquires() > 0);
-        assert!(std::sync::Arc::ptr_eq(e.arena(), e.filter.arena()));
+        assert!(std::sync::Arc::ptr_eq(e.arena(), e.filter().arena()));
+    }
+
+    #[test]
+    fn namespaced_ops_are_isolated_and_share_the_arena() {
+        let e = Engine::new(EngineConfig {
+            capacity: 20_000,
+            shards: 2,
+            workers: 4,
+            pools: 1,
+            artifacts_dir: None,
+        })
+        .unwrap();
+        e.create_namespace("t1", Some(10_000)).unwrap();
+        e.create_namespace_with("t2", 10_000, 4).unwrap();
+        assert!(matches!(
+            e.create_namespace("t1", None),
+            Err(NsError::Exists(_))
+        ));
+        let ks = keys(4_000, 77);
+        // Same keys into default and t1; t2 stays empty — queries must
+        // answer per-tenant, not globally.
+        assert_eq!(e.execute_op(OpKind::Insert, ks.clone()).successes, 4_000);
+        assert_eq!(
+            e.execute_op_in("t1", OpKind::Insert, ks.clone()).unwrap().successes,
+            4_000
+        );
+        let hits_t2 = e.execute_op_in("t2", OpKind::Query, ks.clone()).unwrap().successes;
+        assert!(hits_t2 < 10, "t2 never saw these keys");
+        assert_eq!(
+            e.execute_op_in("t1", OpKind::Query, ks.clone()).unwrap().successes,
+            4_000
+        );
+        assert_eq!(e.len(), 8_000, "len sums every namespace");
+        assert!(matches!(
+            e.execute_op_in("ghost", OpKind::Query, ks.clone()),
+            Err(NsError::Unknown(_))
+        ));
+        // Every tenant leases from the one engine arena.
+        let stats = e.namespaces();
+        assert_eq!(
+            stats.iter().map(|s| s.name.as_str()).collect::<Vec<_>>(),
+            vec!["default", "t1", "t2"]
+        );
+        assert!(stats.iter().all(|s| s.resident && s.resident_bytes > 0));
+        e.drop_namespace("t1").unwrap();
+        assert_eq!(e.len(), 4_000);
+        assert!(matches!(e.drop_namespace("default"), Err(NsError::Pinned(_))));
     }
 
     #[test]

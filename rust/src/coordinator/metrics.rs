@@ -145,6 +145,22 @@ impl Metrics {
         }
     }
 
+    /// Namespace section of the STATS reply, one bracket per tenant in
+    /// name order: `ns: default[n=4 resident=65536B] cold[n=9 evicted]`.
+    /// Resident namespaces report their in-memory table bytes; evicted
+    /// ones report the count frozen into their spill images.
+    pub fn ns_summary(stats: &[crate::coordinator::registry::NamespaceStat]) -> String {
+        let mut line = String::from("ns:");
+        for s in stats {
+            if s.resident {
+                line.push_str(&format!(" {}[n={} resident={}B]", s.name, s.len, s.resident_bytes));
+            } else {
+                line.push_str(&format!(" {}[n={} evicted]", s.name, s.len));
+            }
+        }
+        line
+    }
+
     /// One-line human-readable summary (the server's STATS reply).
     pub fn summary(&self) -> String {
         let line = |name: &str, m: &OpMetrics| {
@@ -217,6 +233,38 @@ mod tests {
             Metrics::arena_summary(&idle),
             "arena: hits=0 misses=0 hit_rate=100.0% resident=0B"
         );
+    }
+
+    #[test]
+    fn ns_summary_reports_resident_and_evicted_rows() {
+        use crate::coordinator::registry::NamespaceStat;
+        let stats = [
+            NamespaceStat {
+                name: "default".into(),
+                len: 4,
+                resident: true,
+                resident_bytes: 65536,
+                capacity: 1024,
+                shards: 2,
+                evictions: 0,
+                faults: 0,
+            },
+            NamespaceStat {
+                name: "cold".into(),
+                len: 9,
+                resident: false,
+                resident_bytes: 0,
+                capacity: 512,
+                shards: 1,
+                evictions: 1,
+                faults: 0,
+            },
+        ];
+        assert_eq!(
+            Metrics::ns_summary(&stats),
+            "ns: default[n=4 resident=65536B] cold[n=9 evicted]"
+        );
+        assert_eq!(Metrics::ns_summary(&[]), "ns:");
     }
 
     #[test]

@@ -1,16 +1,38 @@
-//! The L3 serving coordinator: batched AMQ requests over the filter.
+//! The L3 serving coordinator: a multi-tenant filter service over the
+//! batched AMQ engine.
 //!
 //! The paper ships a *library*; a production deployment wraps it in a
-//! serving layer, which is what this module provides (vLLM-router-style):
+//! serving layer, which is what this module provides (vLLM-router-style).
+//! One process now serves many independent filters — tenant
+//! **namespaces** — that share a single backend, buffer arena, and
+//! batching pipeline:
 //!
-//! * [`request`] — the operation/request/response types;
+//! * [`request`] — the operation/request/response types; every request
+//!   carries an optional namespace (`None` = the implicit `default`
+//!   namespace, so pre-namespace clients keep working unchanged);
+//! * [`registry`] — the namespace registry: tenant name →
+//!   [`shard::ShardedFilter`], all sharing the engine's one backend and
+//!   one [`crate::mem::BufferArena`]. Owns the namespace lifecycle
+//!   (create/drop), per-tenant stats, and the tiering policy: when a
+//!   resident-bytes budget is configured, least-recently-used
+//!   namespaces are evicted to versioned spill images on disk and
+//!   faulted back in on next access. Eviction never races device work —
+//!   a namespace with in-flight batches (tracked by an inflight
+//!   counter taken under the namespace state lock) is skipped, and
+//!   fault-in rebuilds shards deterministically so spill images always
+//!   match the reconstructed configs. All lookups go through
+//!   `NamespaceRegistry::resolve`/`acquire`, confined to this module
+//!   and [`engine`] (enforced by `scripts/check_api_surface.sh`);
 //! * [`epoch`]   — the phase guard that keeps queries from overlapping
 //!   mutations (the paper's torn-read caveat for non-coherent vectorised
-//!   loads, §4.4);
+//!   loads, §4.4); shared by every namespace, so one quiesce point
+//!   covers the whole registry (checkpoint capture uses this);
 //! * [`batcher`] — dynamic batching: requests accumulate until a size or
 //!   deadline trigger, then flush through a two-stage pipeline that
 //!   scatters the next batch while the previous batch's kernel is still
-//!   in flight (stream-ordered async launches);
+//!   in flight (stream-ordered async launches). Flush groups are keyed
+//!   by `(namespace, OpKind)`: one fused kernel never mixes tenants,
+//!   while different tenants' groups still overlap in the pipeline;
 //! * [`shard`]   — key-space sharding across multiple filters for
 //!   multi-device topologies, behind **one** submission entry point:
 //!   `ShardedFilter::submit(backend, OpKind, keys) -> BatchTicket`.
@@ -21,20 +43,26 @@
 //!   per-key results permute back to input order, and the ticket — the
 //!   join of all per-stream completions — recycles the leases when it
 //!   resolves, so a warmed-up pipeline allocates no batch scratch;
-//! * [`engine`]  — ties filter + backend + epoch + (optional) PJRT
+//! * [`engine`]  — ties registry + backend + epoch + (optional) PJRT
 //!   runtime into a servable engine (`execute`/`execute_op`/
-//!   `execute_async`, all one `OpKind` dispatch);
-//! * [`server`]  — a line-protocol TCP front end;
-//! * [`metrics`] — op counters and latency histograms;
+//!   `execute_async`, all one `OpKind` dispatch, each resolvable into
+//!   any namespace via `execute_async_in`);
+//! * [`server`]  — a line-protocol TCP front end (`CREATE`/`DROP`/`NS`
+//!   plus the original bare ops);
+//! * [`metrics`] — op counters, latency histograms, and per-namespace
+//!   STATS rows;
 //! * [`wal`]     — durability: a group-committed, checksummed,
 //!   segmented write-ahead log fed by the batcher's flush groups, plus
-//!   consistent background checkpoints (epoch-quiesced per-shard
-//!   images) and crash recovery (`Wal::open_and_recover` — load last
-//!   checkpoint, replay the tail, truncate a torn final record).
+//!   consistent background checkpoints (epoch-quiesced per-namespace,
+//!   per-shard images) and crash recovery (`Wal::open_and_recover` —
+//!   load last checkpoint, restore every namespace, replay the tail,
+//!   truncate a torn final record). v2 records carry the namespace and
+//!   record kind (group/create/drop); v1 logs replay into `default`.
 
 pub mod request;
 pub mod epoch;
 pub mod batcher;
+pub mod registry;
 pub mod shard;
 pub mod engine;
 pub mod server;
@@ -45,6 +73,7 @@ pub use batcher::{Batcher, BatcherConfig};
 pub use engine::{Engine, EngineConfig, EngineError, ExecTicket};
 pub use epoch::EpochGuard;
 pub use metrics::PoolStat;
+pub use registry::{NamespaceStat, NsError, DEFAULT_NS};
 pub use request::{OpKind, Request, Response, ServeError};
 pub use shard::{BatchTicket, ShardedFilter};
 pub use wal::{

@@ -1,0 +1,678 @@
+//! Multi-tenant namespaces: the registry that turns the engine from a
+//! one-filter process into a filter *service*.
+//!
+//! A [`NamespaceRegistry`] maps tenant names to independent
+//! [`ShardedFilter`]s that **share** the engine's one backend, one
+//! [`BufferArena`] and one epoch/batcher pipeline — tenants get
+//! isolation of state and accounting without duplicating workers or
+//! scratch pools. The implicit [`DEFAULT_NS`] namespace is created with
+//! the engine and pinned: it can never be dropped or evicted, so every
+//! pre-namespace client and test keeps working unchanged.
+//!
+//! ## Namespace lifecycle
+//!
+//! `create → (resident ⇄ evicted) → drop`. A namespace is created with
+//! a capacity quota and shard count (its own filter geometry, which may
+//! differ per tenant), serves batches while *resident*, and — once the
+//! registry's shared residency budget is exceeded — may be *evicted*:
+//! its shard tables are written to v2 persist images
+//! (`spill-<ns>-shard-<i>.ckgf`, see [`crate::filter::persist`]) and
+//! the in-memory filter is dropped. The next access *faults it back
+//! in* from those images. Admission is LRU: the least-recently-accessed
+//! resident, unpinned, idle namespace is evicted first.
+//!
+//! ## Safety of eviction against in-flight kernels
+//!
+//! Every engine submission holds an [`InflightGuard`] on its namespace
+//! for the lifetime of its ticket; eviction only proceeds when the
+//! namespace's inflight count is zero, checked under the namespace's
+//! residency lock (the same lock every acquire takes before
+//! incrementing), so a snapshot can never observe a table mid-kernel.
+//! Queries and mutations already in flight keep the old shard array
+//! alive through the batch ticket's `Arc` — eviction is never a
+//! use-after-free, only a handoff of the *next* access to the image.
+//! Residency changes thus ride behind the existing epoch/ticket
+//! machinery instead of adding a third phase to the guard.
+//!
+//! ## One resolution entry point
+//!
+//! Name → namespace lookup happens exactly once, in
+//! [`NamespaceRegistry::resolve`]; everything outside this module and
+//! the engine goes through `Engine`'s namespace API
+//! (`scripts/check_api_surface.sh` greps that no other layer resolves
+//! names itself).
+
+use super::shard::ShardedFilter;
+use crate::filter::persist::{read_image, save_image, write_atomic};
+use crate::filter::Fp16;
+use crate::mem::BufferArena;
+use std::collections::BTreeMap;
+use std::fs::{self, File};
+use std::io::{self, BufReader};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// The implicit namespace bare (un-prefixed) operations hit. Created
+/// with the engine, pinned: never dropped, never evicted.
+pub const DEFAULT_NS: &str = "default";
+
+/// Namespace names are path-safe identifiers: they appear in spill and
+/// checkpoint file names and in WAL records.
+pub fn valid_ns_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 64
+        && name.chars().next().is_some_and(|c| c.is_ascii_alphanumeric())
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.')
+}
+
+/// A namespace-level serving failure. `Display` names the offending
+/// token, so the server can echo it verbatim in `ERR` replies.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NsError {
+    /// No namespace of this name exists.
+    Unknown(String),
+    /// `CREATE` of a name that already exists.
+    Exists(String),
+    /// The name is not a valid identifier (see [`valid_ns_name`]).
+    BadName(String),
+    /// Drop/evict of a pinned namespace (the default).
+    Pinned(String),
+    /// Eviction or fault-in requested without tiering configured.
+    NoSpill,
+    /// Filter construction or image IO failed.
+    Io(String),
+}
+
+impl std::fmt::Display for NsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NsError::Unknown(n) => write!(f, "unknown namespace '{n}'"),
+            NsError::Exists(n) => write!(f, "namespace exists '{n}'"),
+            NsError::BadName(n) => write!(f, "bad namespace '{n}'"),
+            NsError::Pinned(n) => write!(f, "namespace '{n}' is pinned"),
+            NsError::NoSpill => write!(f, "tiering is not configured (no spill dir)"),
+            NsError::Io(e) => write!(f, "namespace io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for NsError {}
+
+/// One row of the STATS reply's `ns:` section.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NamespaceStat {
+    pub name: String,
+    /// Stored fingerprints (for an evicted namespace: the count frozen
+    /// into its spill images).
+    pub len: u64,
+    pub resident: bool,
+    /// Table bytes held in memory; 0 while evicted.
+    pub resident_bytes: u64,
+    pub capacity: usize,
+    pub shards: usize,
+    pub evictions: u64,
+    pub faults: u64,
+}
+
+/// Where a namespace's state lives right now.
+enum Residency {
+    Resident(Arc<ShardedFilter<Fp16>>),
+    /// Paged out to spill images; `len` is the occupancy frozen into
+    /// them (reported by STATS/LEN without faulting the tenant in).
+    Evicted { len: u64 },
+}
+
+/// One tenant: a filter geometry plus residency state and accounting.
+pub(crate) struct Namespace {
+    name: String,
+    capacity: usize,
+    shards: usize,
+    /// Pinned namespaces (the default) are never evicted or dropped.
+    pinned: bool,
+    /// Table bytes when resident — fixed by the geometry at create.
+    table_bytes: u64,
+    state: Mutex<Residency>,
+    /// Unresolved engine tickets on this namespace. Incremented under
+    /// the `state` lock (see the eviction-safety note in the module
+    /// docs); decremented lock-free when a ticket resolves.
+    inflight: AtomicU64,
+    /// LRU stamp from the registry clock, updated on every acquire.
+    last_access: AtomicU64,
+    evictions: AtomicU64,
+    faults: AtomicU64,
+}
+
+impl Namespace {
+    pub(crate) fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Decrement-on-drop handle for a namespace's inflight count; held by
+/// the engine's `ExecTicket` so eviction can only observe quiescent
+/// tables.
+pub(crate) struct InflightGuard {
+    ns: Arc<Namespace>,
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.ns.inflight.fetch_sub(1, Ordering::Release);
+    }
+}
+
+/// A consistent capture of one namespace for a checkpoint: per-shard
+/// `(config, count, table words)` images plus the geometry needed to
+/// rebuild the namespace at recovery.
+pub(crate) struct NsImage {
+    pub name: String,
+    pub capacity: usize,
+    pub shards: usize,
+    pub count: u64,
+    pub images: Vec<(crate::filter::CuckooConfig, u64, Vec<u64>)>,
+}
+
+#[derive(Clone)]
+struct TierConfig {
+    spill_dir: PathBuf,
+    /// Shared residency budget (bytes of resident table) across all
+    /// namespaces; LRU eviction brings the total back under it.
+    max_resident_bytes: u64,
+}
+
+fn spill_path(dir: &Path, name: &str, shard: usize) -> PathBuf {
+    dir.join(format!("spill-{name}-shard-{shard}.ckgf"))
+}
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Tenant name → filter registry. Lock order (shared with the engine
+/// and WAL): `wal commit → registry map → namespace state`; no lock
+/// here is ever taken while holding a namespace state lock.
+pub(crate) struct NamespaceRegistry {
+    /// The engine's shared batch-scratch arena, threaded into every
+    /// namespace's filter so all tenants run one zero-allocation cycle.
+    arena: Arc<BufferArena>,
+    map: Mutex<BTreeMap<String, Arc<Namespace>>>,
+    /// LRU clock: monotonically increasing acquire stamp.
+    clock: AtomicU64,
+    tier: Mutex<Option<TierConfig>>,
+}
+
+impl NamespaceRegistry {
+    pub(crate) fn new(arena: Arc<BufferArena>) -> Self {
+        Self {
+            arena,
+            map: Mutex::new(BTreeMap::new()),
+            clock: AtomicU64::new(0),
+            tier: Mutex::new(None),
+        }
+    }
+
+    /// Install a pre-built filter under `name`, pinned (never evicted
+    /// or dropped). The engine installs its default filter here at
+    /// construction.
+    pub(crate) fn install_pinned(
+        &self,
+        name: &str,
+        filter: Arc<ShardedFilter<Fp16>>,
+        capacity: usize,
+    ) {
+        let ns = Arc::new(Self::namespace(name, capacity, true, filter));
+        self.map.lock().unwrap().insert(name.to_string(), ns);
+    }
+
+    fn namespace(
+        name: &str,
+        capacity: usize,
+        pinned: bool,
+        filter: Arc<ShardedFilter<Fp16>>,
+    ) -> Namespace {
+        let table_bytes: u64 = (0..filter.num_shards())
+            .map(|i| filter.shard(i).table().num_words() as u64 * 8)
+            .sum();
+        Namespace {
+            name: name.to_string(),
+            capacity,
+            shards: filter.num_shards(),
+            pinned,
+            table_bytes,
+            state: Mutex::new(Residency::Resident(filter)),
+            inflight: AtomicU64::new(0),
+            last_access: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            faults: AtomicU64::new(0),
+        }
+    }
+
+    /// Create a namespace with its own filter geometry, sharing the
+    /// registry's arena. Errors if the name is invalid or taken.
+    pub(crate) fn create(
+        &self,
+        name: &str,
+        capacity: usize,
+        shards: usize,
+    ) -> Result<Arc<ShardedFilter<Fp16>>, NsError> {
+        if !valid_ns_name(name) {
+            return Err(NsError::BadName(name.to_string()));
+        }
+        let mut map = self.map.lock().unwrap();
+        if map.contains_key(name) {
+            return Err(NsError::Exists(name.to_string()));
+        }
+        let filter = Arc::new(
+            ShardedFilter::with_capacity(capacity, shards)
+                .map_err(|e| NsError::Io(e.to_string()))?
+                .with_arena(self.arena.clone()),
+        );
+        let ns = Arc::new(Self::namespace(name, capacity, false, filter.clone()));
+        map.insert(name.to_string(), ns);
+        Ok(filter)
+    }
+
+    pub(crate) fn exists(&self, name: &str) -> bool {
+        self.map.lock().unwrap().contains_key(name)
+    }
+
+    /// THE name → namespace lookup. Every other layer reaches
+    /// namespaces through the engine wrappers over this.
+    pub(crate) fn resolve(&self, name: &str) -> Result<Arc<Namespace>, NsError> {
+        self.map
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| NsError::Unknown(name.to_string()))
+    }
+
+    /// Pin a namespace's filter for one submission: stamp the LRU
+    /// clock, fault the tenant in if it is evicted, and take an
+    /// inflight guard (released when the ticket resolves). The
+    /// increment happens under the residency lock, so eviction's
+    /// zero-inflight check cannot race a concurrent acquire.
+    pub(crate) fn acquire(
+        &self,
+        ns: &Arc<Namespace>,
+    ) -> Result<(Arc<ShardedFilter<Fp16>>, InflightGuard), NsError> {
+        ns.last_access
+            .store(self.clock.fetch_add(1, Ordering::Relaxed) + 1, Ordering::Relaxed);
+        let mut st = ns.state.lock().unwrap();
+        let filter = match &*st {
+            Residency::Resident(f) => f.clone(),
+            Residency::Evicted { .. } => {
+                let tier = self.tier_config().ok_or(NsError::NoSpill)?;
+                let f = self.fault_in(ns, &tier.spill_dir).map_err(|e| {
+                    NsError::Io(format!("fault-in of namespace '{}' failed: {e}", ns.name))
+                })?;
+                *st = Residency::Resident(f.clone());
+                ns.faults.fetch_add(1, Ordering::Relaxed);
+                f
+            }
+        };
+        ns.inflight.fetch_add(1, Ordering::AcqRel);
+        drop(st);
+        Ok((filter, InflightGuard { ns: ns.clone() }))
+    }
+
+    /// Rebuild an evicted namespace's filter from its spill images.
+    /// The geometry derivation matches `create`, so the per-shard
+    /// config check in `load_into` proves the images belong here.
+    fn fault_in(&self, ns: &Namespace, dir: &Path) -> io::Result<Arc<ShardedFilter<Fp16>>> {
+        let filter = Arc::new(
+            ShardedFilter::with_capacity(ns.capacity, ns.shards)
+                .map_err(|e| bad(e.to_string()))?
+                .with_arena(self.arena.clone()),
+        );
+        for i in 0..filter.num_shards() {
+            let path = spill_path(dir, &ns.name, i);
+            filter.shard(i).load_into(BufReader::new(File::open(&path)?))?;
+        }
+        Ok(filter)
+    }
+
+    /// Configure tiering: evictions write spill images under `dir`,
+    /// and total resident table bytes are held under `max_resident`.
+    pub(crate) fn enable_tiering(&self, dir: PathBuf, max_resident: u64) -> io::Result<()> {
+        fs::create_dir_all(&dir)?;
+        *self.tier.lock().unwrap() = Some(TierConfig {
+            spill_dir: dir,
+            max_resident_bytes: max_resident,
+        });
+        Ok(())
+    }
+
+    fn tier_config(&self) -> Option<TierConfig> {
+        self.tier.lock().unwrap().clone()
+    }
+
+    pub(crate) fn spill_dir(&self) -> Option<PathBuf> {
+        self.tier_config().map(|t| t.spill_dir)
+    }
+
+    /// LRU admission: while total resident bytes exceed the budget,
+    /// evict the least-recently-used resident namespace that is
+    /// unpinned, idle and not `keep` (the tenant being admitted).
+    /// Best-effort — a busy candidate set just leaves the total over
+    /// budget until the next access.
+    pub(crate) fn enforce_budget(&self, keep: &Namespace) {
+        let Some(tier) = self.tier_config() else { return };
+        loop {
+            let entries: Vec<Arc<Namespace>> =
+                self.map.lock().unwrap().values().cloned().collect();
+            let mut total = 0u64;
+            let mut lru: Option<(Arc<Namespace>, u64)> = None;
+            for ns in &entries {
+                let resident = matches!(&*ns.state.lock().unwrap(), Residency::Resident(_));
+                if !resident {
+                    continue;
+                }
+                total += ns.table_bytes;
+                if ns.pinned
+                    || std::ptr::eq(ns.as_ref(), keep)
+                    || ns.inflight.load(Ordering::Acquire) != 0
+                {
+                    continue;
+                }
+                let stamp = ns.last_access.load(Ordering::Relaxed);
+                if lru.as_ref().map_or(true, |(_, s)| stamp < *s) {
+                    lru = Some((ns.clone(), stamp));
+                }
+            }
+            if total <= tier.max_resident_bytes {
+                return;
+            }
+            let Some((victim, _)) = lru else { return };
+            match self.evict_inner(&victim, &tier.spill_dir) {
+                Ok(true) => continue,
+                Ok(false) => return,
+                Err(e) => {
+                    eprintln!(
+                        "[cuckoo-gpu] warn: eviction of namespace '{}' failed: {e}",
+                        victim.name
+                    );
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Evict one namespace if it is resident, unpinned and idle:
+    /// snapshot every shard under the residency lock, write the spill
+    /// images atomically, then drop the in-memory filter. `Ok(false)` =
+    /// already evicted or busy.
+    fn evict_inner(&self, ns: &Namespace, dir: &Path) -> io::Result<bool> {
+        let mut st = ns.state.lock().unwrap();
+        let filter = match &*st {
+            Residency::Resident(f) if !ns.pinned => f.clone(),
+            _ => return Ok(false),
+        };
+        if ns.inflight.load(Ordering::Acquire) != 0 {
+            return Ok(false);
+        }
+        for i in 0..filter.num_shards() {
+            let s = filter.shard(i);
+            let (cfg, count, words) = (*s.config(), s.len() as u64, s.table().snapshot());
+            write_atomic(&spill_path(dir, &ns.name, i), |w| {
+                save_image::<Fp16, _>(&cfg, count, &words, w)
+            })?;
+        }
+        let len = filter.len() as u64;
+        *st = Residency::Evicted { len };
+        ns.evictions.fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    /// Explicitly evict `name` (tests and admin use). Waits briefly for
+    /// in-flight tickets to drain; `Ok(false)` if it stayed busy or was
+    /// already evicted.
+    pub(crate) fn evict(&self, name: &str) -> Result<bool, NsError> {
+        let ns = self.resolve(name)?;
+        if ns.pinned {
+            return Err(NsError::Pinned(name.to_string()));
+        }
+        let tier = self.tier_config().ok_or(NsError::NoSpill)?;
+        for _ in 0..2000 {
+            match self
+                .evict_inner(&ns, &tier.spill_dir)
+                .map_err(|e| NsError::Io(e.to_string()))?
+            {
+                true => return Ok(true),
+                false => {
+                    if matches!(&*ns.state.lock().unwrap(), Residency::Evicted { .. }) {
+                        return Ok(false);
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            }
+        }
+        Ok(false)
+    }
+
+    /// Remove a namespace. Waits for its in-flight tickets to drain
+    /// (the flusher always drains its deque before blocking, so this
+    /// terminates), then deletes its spill images best-effort.
+    pub(crate) fn remove(&self, name: &str) -> Result<(), NsError> {
+        loop {
+            let mut map = self.map.lock().unwrap();
+            let ns = map
+                .get(name)
+                .cloned()
+                .ok_or_else(|| NsError::Unknown(name.to_string()))?;
+            if ns.pinned {
+                return Err(NsError::Pinned(name.to_string()));
+            }
+            let st = ns.state.lock().unwrap();
+            if ns.inflight.load(Ordering::Acquire) == 0 {
+                drop(st);
+                map.remove(name);
+                drop(map);
+                if let Some(dir) = self.spill_dir() {
+                    for i in 0..ns.shards {
+                        let _ = fs::remove_file(spill_path(&dir, name, i));
+                    }
+                }
+                return Ok(());
+            }
+            drop(st);
+            drop(map);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    /// Total stored fingerprints across every namespace (evicted ones
+    /// report the count frozen into their images).
+    pub(crate) fn total_len(&self) -> u64 {
+        let entries: Vec<Arc<Namespace>> = self.map.lock().unwrap().values().cloned().collect();
+        entries
+            .iter()
+            .map(|ns| match &*ns.state.lock().unwrap() {
+                Residency::Resident(f) => f.len() as u64,
+                Residency::Evicted { len } => *len,
+            })
+            .sum()
+    }
+
+    /// Per-namespace rows for STATS, in name order.
+    pub(crate) fn stats(&self) -> Vec<NamespaceStat> {
+        let entries: Vec<Arc<Namespace>> = self.map.lock().unwrap().values().cloned().collect();
+        entries
+            .iter()
+            .map(|ns| {
+                let (len, resident) = match &*ns.state.lock().unwrap() {
+                    Residency::Resident(f) => (f.len() as u64, true),
+                    Residency::Evicted { len } => (*len, false),
+                };
+                NamespaceStat {
+                    name: ns.name.clone(),
+                    len,
+                    resident,
+                    resident_bytes: if resident { ns.table_bytes } else { 0 },
+                    capacity: ns.capacity,
+                    shards: ns.shards,
+                    evictions: ns.evictions.load(Ordering::Relaxed),
+                    faults: ns.faults.load(Ordering::Relaxed),
+                }
+            })
+            .collect()
+    }
+
+    /// Capture every namespace for a checkpoint. Must run under the
+    /// WAL commit lock and an engine query phase (the caller's job) so
+    /// the captured state matches the captured log position. Resident
+    /// namespaces snapshot in memory; evicted ones read their spill
+    /// images back — their state cannot move while mutations are
+    /// quiesced and the commit lock blocks create/drop.
+    pub(crate) fn capture(&self) -> io::Result<Vec<NsImage>> {
+        let entries: Vec<Arc<Namespace>> = self.map.lock().unwrap().values().cloned().collect();
+        let tier = self.tier_config();
+        entries
+            .iter()
+            .map(|ns| {
+                let st = ns.state.lock().unwrap();
+                let (count, images) = match &*st {
+                    Residency::Resident(f) => {
+                        let images = (0..f.num_shards())
+                            .map(|i| {
+                                let s = f.shard(i);
+                                (*s.config(), s.len() as u64, s.table().snapshot())
+                            })
+                            .collect();
+                        (f.len() as u64, images)
+                    }
+                    Residency::Evicted { len } => {
+                        let dir = tier
+                            .as_ref()
+                            .map(|t| t.spill_dir.as_path())
+                            .ok_or_else(|| bad("evicted namespace without a spill dir"))?;
+                        let images = (0..ns.shards)
+                            .map(|i| {
+                                let path = spill_path(dir, &ns.name, i);
+                                read_image::<Fp16>(BufReader::new(File::open(&path)?))
+                            })
+                            .collect::<io::Result<Vec<_>>>()?;
+                        (*len, images)
+                    }
+                };
+                Ok(NsImage {
+                    name: ns.name.clone(),
+                    capacity: ns.capacity,
+                    shards: ns.shards,
+                    count,
+                    images,
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> NamespaceRegistry {
+        let arena = Arc::new(BufferArena::new());
+        let reg = NamespaceRegistry::new(arena);
+        let filter = Arc::new(ShardedFilter::with_capacity(1 << 12, 2).unwrap());
+        reg.install_pinned(DEFAULT_NS, filter, 1 << 12);
+        reg
+    }
+
+    #[test]
+    fn name_validation() {
+        assert!(valid_ns_name("default"));
+        assert!(valid_ns_name("tenant-1.prod_x"));
+        assert!(!valid_ns_name(""));
+        assert!(!valid_ns_name(".."));
+        assert!(!valid_ns_name("-leading-dash"));
+        assert!(!valid_ns_name("has space"));
+        assert!(!valid_ns_name(&"x".repeat(65)));
+    }
+
+    #[test]
+    fn create_resolve_drop_roundtrip() {
+        let reg = registry();
+        assert!(reg.exists(DEFAULT_NS));
+        reg.create("a", 4096, 1).unwrap();
+        assert!(matches!(reg.create("a", 4096, 1), Err(NsError::Exists(_))));
+        assert!(matches!(reg.resolve("a"), Ok(_)));
+        assert!(matches!(reg.resolve("ghost"), Err(NsError::Unknown(_))));
+        assert!(matches!(reg.create("bad name", 64, 1), Err(NsError::BadName(_))));
+        reg.remove("a").unwrap();
+        assert!(!reg.exists("a"));
+        assert!(matches!(reg.remove(DEFAULT_NS), Err(NsError::Pinned(_))));
+    }
+
+    #[test]
+    fn evict_and_fault_in_preserve_state() {
+        let dir = std::env::temp_dir().join(format!("cuckoo_reg_evict_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let reg = registry();
+        reg.enable_tiering(dir.clone(), u64::MAX).unwrap();
+        reg.create("t", 4096, 2).unwrap();
+        let ns = reg.resolve("t").unwrap();
+        {
+            let (filter, _g) = reg.acquire(&ns).unwrap();
+            for k in 0..1000u64 {
+                filter.insert(k).unwrap();
+            }
+        }
+        assert!(reg.evict("t").unwrap());
+        let stat = reg.stats().into_iter().find(|s| s.name == "t").unwrap();
+        assert!(!stat.resident);
+        assert_eq!(stat.len, 1000);
+        assert_eq!(stat.resident_bytes, 0);
+        // Fault back in: every key still answers.
+        let (filter, _g) = reg.acquire(&ns).unwrap();
+        assert_eq!(filter.len(), 1000);
+        assert!((0..1000u64).all(|k| filter.contains(k)));
+        let stat = reg.stats().into_iter().find(|s| s.name == "t").unwrap();
+        assert!(stat.resident);
+        assert_eq!(stat.evictions, 1);
+        assert_eq!(stat.faults, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eviction_requires_tiering_and_skips_pinned_and_busy() {
+        let reg = registry();
+        reg.create("t", 1024, 1).unwrap();
+        assert_eq!(reg.evict("t"), Err(NsError::NoSpill));
+        let dir = std::env::temp_dir().join(format!("cuckoo_reg_busy_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        reg.enable_tiering(dir.clone(), u64::MAX).unwrap();
+        assert!(matches!(reg.evict(DEFAULT_NS), Err(NsError::Pinned(_))));
+        // A held inflight guard blocks eviction (budget path skips it).
+        let ns = reg.resolve("t").unwrap();
+        let (_f, guard) = reg.acquire(&ns).unwrap();
+        reg.enforce_budget(reg.resolve(DEFAULT_NS).unwrap().as_ref());
+        assert!(reg.stats().iter().find(|s| s.name == "t").unwrap().resident);
+        drop(guard);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_budget_evicts_the_coldest_namespace() {
+        let dir = std::env::temp_dir().join(format!("cuckoo_reg_lru_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let reg = registry();
+        reg.create("cold", 4096, 1).unwrap();
+        reg.create("warm", 4096, 1).unwrap();
+        let cold = reg.resolve("cold").unwrap();
+        let warm = reg.resolve("warm").unwrap();
+        drop(reg.acquire(&cold).unwrap());
+        drop(reg.acquire(&warm).unwrap());
+        // Budget of zero forces every unpinned idle namespace out,
+        // coldest first; the pinned default stays.
+        reg.enable_tiering(dir.clone(), 0).unwrap();
+        reg.enforce_budget(warm.as_ref()); // admitting `warm`: evicts cold, then warm stays last
+        let stats = reg.stats();
+        assert!(!stats.iter().find(|s| s.name == "cold").unwrap().resident);
+        assert!(stats.iter().find(|s| s.name == "default").unwrap().resident);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -6,16 +6,32 @@
 
 pub use crate::op::OpKind;
 
-/// A batch request: one operation over a vector of keys.
+/// A batch request: one operation over a vector of keys, addressed to
+/// one tenant namespace (`None` = the implicit `default` namespace, so
+/// every pre-namespace caller keeps working unchanged).
 #[derive(Clone, Debug)]
 pub struct Request {
     pub op: OpKind,
     pub keys: Vec<u64>,
+    /// Target namespace; `None` routes to
+    /// [`super::registry::DEFAULT_NS`]. `Arc<str>` because the batcher
+    /// clones it into the flush group's key.
+    pub ns: Option<std::sync::Arc<str>>,
 }
 
 impl Request {
     pub fn new(op: OpKind, keys: Vec<u64>) -> Self {
-        Self { op, keys }
+        Self { op, keys, ns: None }
+    }
+
+    /// Address the request to a named tenant namespace (`NS <ns> ...`
+    /// on the wire).
+    pub fn in_ns(ns: impl Into<std::sync::Arc<str>>, op: OpKind, keys: Vec<u64>) -> Self {
+        Self {
+            op,
+            keys,
+            ns: Some(ns.into()),
+        }
     }
 }
 

@@ -2,21 +2,27 @@
 //!
 //! Protocol (one request per line, space-separated):
 //! ```text
-//! INSERT <k1> <k2> ...    ->  OK <successes> <outcome bits 0/1...>
-//! QUERY  <k1> <k2> ...    ->  OK <hits> <bits>
-//! DELETE <k1> <k2> ...    ->  OK <removed> <bits>
-//! LEN                     ->  OK <stored fingerprints>
-//! STATS                   ->  OK <metrics summary>
-//! PING                    ->  PONG
-//! QUIT                    ->  BYE (closes connection)
+//! INSERT <k1> <k2> ...      ->  OK <successes> <outcome bits 0/1...>
+//! QUERY  <k1> <k2> ...      ->  OK <hits> <bits>
+//! DELETE <k1> <k2> ...      ->  OK <removed> <bits>
+//! NS <ns> <op> <k1> ...     ->  same, in tenant namespace <ns>
+//! CREATE <ns> [capacity]    ->  OK (new tenant namespace)
+//! DROP <ns>                 ->  OK (delete tenant namespace)
+//! LEN                       ->  OK <stored fingerprints, all tenants>
+//! STATS                     ->  OK <metrics summary incl. ns: rows>
+//! PING                      ->  PONG
+//! QUIT                      ->  BYE (closes connection)
 //! ```
-//! Keys are decimal or 0x-hex u64. Operation tokens accept the aliases
-//! of [`OpKind::parse`]: full names, `contains`/`remove`, and the
+//! Bare operations route to the implicit `default` namespace, so every
+//! pre-namespace client keeps working unchanged. Keys are decimal or
+//! 0x-hex u64. Operation tokens accept the aliases of
+//! [`OpKind::parse`]: full names, `contains`/`remove`, and the
 //! single-letter forms `i`/`q`/`c`/`d`. An operation with zero keys is
 //! a valid no-op (`OK 0` with empty bits) and still flows through the
-//! batcher → engine → fused-launch stack. Errors reply `ERR <message>`,
-//! including serving errors surfaced by the batcher (shutdown, failed
-//! flush).
+//! batcher → engine → fused-launch stack. Errors reply `ERR <message>`
+//! and always name the offending token (`ERR bad key 'zap'`, `ERR
+//! unknown namespace 'x'`, `ERR bad op 'fnord'`), including serving
+//! errors surfaced by the batcher (shutdown, failed flush).
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::engine::Engine;
@@ -95,6 +101,34 @@ fn parse_key(tok: &str) -> Option<u64> {
     }
 }
 
+/// Parse every remaining token as a key; `Err` carries the first
+/// offending token so the `ERR` reply can name it.
+fn parse_keys<'a>(parts: impl Iterator<Item = &'a str>) -> Result<Vec<u64>, String> {
+    let mut keys = Vec::new();
+    for tok in parts {
+        match parse_key(tok) {
+            Some(k) => keys.push(k),
+            None => return Err(tok.to_string()),
+        }
+    }
+    Ok(keys)
+}
+
+/// Run one op request through the batcher and format the wire reply.
+fn run_op(batcher: &Batcher, req: Request) -> String {
+    match batcher.call(req) {
+        Ok(resp) => {
+            let bits: String = resp
+                .outcomes
+                .iter()
+                .map(|&b| if b { '1' } else { '0' })
+                .collect();
+            format!("OK {} {}", resp.successes, bits)
+        }
+        Err(e) => format!("ERR {e}"),
+    }
+}
+
 fn handle_conn(
     stream: TcpStream,
     engine: Arc<Engine>,
@@ -141,30 +175,61 @@ fn handle_conn(
             }
             "LEN" => format!("OK {}", engine.len()),
             "STATS" => format!(
-                "OK {} | {} | {} | {}",
+                "OK {} | {} | {} | {} | {}",
                 engine.metrics.summary(),
                 crate::coordinator::metrics::Metrics::pools_summary(&engine.pool_stats()),
                 crate::coordinator::metrics::Metrics::arena_summary(&engine.arena_stats()),
-                crate::coordinator::metrics::Metrics::wal_summary(engine.wal_stats().as_ref())
+                crate::coordinator::metrics::Metrics::wal_summary(engine.wal_stats().as_ref()),
+                crate::coordinator::metrics::Metrics::ns_summary(&engine.namespaces())
             ),
-            op_str => match OpKind::parse(&op_str.to_ascii_lowercase()) {
-                Some(op) => {
-                    let keys: Option<Vec<u64>> = parts.map(parse_key).collect();
-                    match keys {
-                        Some(keys) => match batcher.call(Request::new(op, keys)) {
-                            Ok(resp) => {
-                                let bits: String = resp
-                                    .outcomes
-                                    .iter()
-                                    .map(|&b| if b { '1' } else { '0' })
-                                    .collect();
-                                format!("OK {} {}", resp.successes, bits)
+            "CREATE" => match parts.next() {
+                None => "ERR missing namespace".to_string(),
+                Some(ns) => {
+                    let mut bad_cap = None;
+                    let capacity = match parts.next() {
+                        None => None,
+                        Some(tok) => match tok.parse::<usize>() {
+                            Ok(c) if c > 0 => Some(c),
+                            _ => {
+                                bad_cap = Some(format!("ERR bad capacity '{tok}'"));
+                                None
                             }
-                            Err(e) => format!("ERR {e}"),
                         },
-                        None => "ERR bad key".to_string(),
-                    }
+                    };
+                    bad_cap.unwrap_or_else(|| match engine.create_namespace(ns, capacity) {
+                        Ok(()) => "OK".to_string(),
+                        Err(e) => format!("ERR {e}"),
+                    })
                 }
+            },
+            "DROP" => match parts.next() {
+                None => "ERR missing namespace".to_string(),
+                Some(ns) => match engine.drop_namespace(ns) {
+                    Ok(()) => "OK".to_string(),
+                    Err(e) => format!("ERR {e}"),
+                },
+            },
+            "NS" => match parts.next() {
+                None => "ERR missing namespace".to_string(),
+                Some(ns) if !engine.namespace_exists(ns) => {
+                    format!("ERR unknown namespace '{ns}'")
+                }
+                Some(ns) => match parts.next() {
+                    None => "ERR missing op".to_string(),
+                    Some(op_tok) => match OpKind::parse(&op_tok.to_ascii_lowercase()) {
+                        None => format!("ERR bad op '{op_tok}'"),
+                        Some(op) => match parse_keys(parts) {
+                            Err(tok) => format!("ERR bad key '{tok}'"),
+                            Ok(keys) => run_op(&batcher, Request::in_ns(ns, op, keys)),
+                        },
+                    },
+                },
+            },
+            op_str => match OpKind::parse(&op_str.to_ascii_lowercase()) {
+                Some(op) => match parse_keys(parts) {
+                    Err(tok) => format!("ERR bad key '{tok}'"),
+                    Ok(keys) => run_op(&batcher, Request::new(op, keys)),
+                },
                 None => format!("ERR unknown command '{cmd}'"),
             },
         };
@@ -295,7 +360,23 @@ mod tests {
         assert!(stats.contains("arena: hits="), "arena counters missing: {stats}");
         assert!(stats.contains("resident="), "arena residency missing: {stats}");
         assert!(stats.contains("wal: off"), "volatile engine must report wal off: {stats}");
+        assert!(stats.contains("| ns: default[n="), "per-namespace stats missing: {stats}");
         assert!(c.call("BOGUS 1").unwrap().starts_with("ERR"));
+
+        // Namespace lifecycle over the wire; every error names its token.
+        assert_eq!(c.call("CREATE t9").unwrap(), "OK");
+        assert_eq!(c.call("CREATE t9").unwrap(), "ERR namespace exists 't9'");
+        assert_eq!(c.call("CREATE t10 zero").unwrap(), "ERR bad capacity 'zero'");
+        assert_eq!(c.call("NS t9 INSERT 10 11").unwrap(), "OK 2 11");
+        assert_eq!(c.call("NS t9 QUERY 10 11").unwrap(), "OK 2 11");
+        assert_eq!(c.call("NS ghost QUERY 1").unwrap(), "ERR unknown namespace 'ghost'");
+        assert_eq!(c.call("NS t9 FNORD 1").unwrap(), "ERR bad op 'FNORD'");
+        assert_eq!(c.call("NS t9 INSERT 1 zap").unwrap(), "ERR bad key 'zap'");
+        assert_eq!(c.call("INSERT 1 zap").unwrap(), "ERR bad key 'zap'");
+        assert_eq!(c.call("DROP t9").unwrap(), "OK");
+        assert_eq!(c.call("DROP t9").unwrap(), "ERR unknown namespace 't9'");
+        assert_eq!(c.call("DROP default").unwrap(), "ERR namespace 'default' is pinned");
+
         assert_eq!(c.call("QUIT").unwrap(), "BYE");
 
         shutdown.store(true, Ordering::Release);

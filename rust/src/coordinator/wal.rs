@@ -9,15 +9,23 @@
 //!
 //! Segment files are `wal-<seq:016x>.seg`, opened append-only:
 //! ```text
-//! header = magic "CKWS" | version u32 = 1 | seq u64          (16 bytes)
-//! record = len u32 | crc u32 | payload                       (len = payload bytes)
-//! payload = op u8 | pad u8×3 | nkeys u32 | key u64 × nkeys
+//! header  = magic "CKWS" | version u32 = 2 | seq u64         (16 bytes)
+//! record  = len u32 | crc u32 | payload                      (len = payload bytes)
+//! payload = kind u8 | pad u8 | ns_len u16 | nkeys u32
+//!         | ns byte × ns_len | pad to 8 | key u64 × nkeys
 //! ```
-//! `crc` is the CRC-32 (IEEE, [`crate::util::crc`]) of the payload.
-//! Records never span segments; an append that would cross
-//! `segment_bytes` rolls to a new segment first. One record is one
-//! batcher flush group — **group commit**: a single `write_all` +
-//! `sync_data` per group, not per client request.
+//! `kind` is the mutation op byte (0 insert, 2 delete) for a flush
+//! group, or a namespace-lifecycle record: 3 CREATE (`keys` =
+//! `[capacity, shards]`), 4 DROP (no keys). `ns` is the tenant
+//! namespace the record applies to. Version-1 segments (payload
+//! `op u8 | pad u8×3 | nkeys u32 | keys`, no namespace field) still
+//! replay — every v1 record applies to the implicit `default`
+//! namespace — and recovery then rolls the log to a fresh v2 segment,
+//! so one file never mixes record formats. `crc` is the CRC-32 (IEEE,
+//! [`crate::util::crc`]) of the payload. Records never span segments;
+//! an append that would cross `segment_bytes` rolls to a new segment
+//! first. One record is one batcher flush group — **group commit**: a
+//! single `write_all` + `sync_data` per group, not per client request.
 //!
 //! ## Durability contract
 //!
@@ -35,16 +43,22 @@
 //!
 //! ## Checkpoints
 //!
-//! [`Engine::checkpoint`] snapshots every shard consistently: it takes
-//! the WAL commit lock, enters a *query* phase (quiescing in-flight
-//! mutations), captures the WAL position plus each shard's table words
-//! and count in memory, then releases both and writes the shard images
-//! (`ckpt-<id:016x>-shard-<i>.ckgf`, the [`crate::filter::persist`] v2
-//! format) and a crc-tailed `MANIFEST` — each via atomic
-//! temp-file + fsync + rename. Only after the manifest is durable are
-//! WAL segments below the captured position (and stale checkpoint
-//! images) deleted. A crash mid-checkpoint therefore leaves the
-//! previous checkpoint + full log intact.
+//! [`Engine::checkpoint`] snapshots the whole namespace registry
+//! consistently: it takes the WAL commit lock, enters a *query* phase
+//! (quiescing in-flight mutations), captures the WAL position plus
+//! every namespace's per-shard table words and counts in memory
+//! (evicted namespaces contribute their spill images, re-read under
+//! the same capture), then releases both and writes the images
+//! (`ckpt-<id:016x>-ns-<name>-shard-<i>.ckgf`, the
+//! [`crate::filter::persist`] v2 format) and a crc-tailed `MANIFEST`
+//! listing every namespace's geometry and count — each via atomic
+//! temp-file + fsync + rename. Namespace creates and drops also
+//! mutate the registry under the commit lock, so the captured
+//! namespace set always matches the captured log position. Only after
+//! the manifest is durable are WAL segments below the captured
+//! position (and stale checkpoint images) deleted. A crash
+//! mid-checkpoint therefore leaves the previous checkpoint + full log
+//! intact.
 //!
 //! ### Lock ordering (deadlock contract)
 //!
@@ -59,14 +73,21 @@
 //!
 //! ## Recovery
 //!
-//! [`Wal::open_and_recover`] loads the manifest's checkpoint images
-//! into the engine's shards, replays every record at or after the
-//! captured position through [`Engine::execute_op`], and reports
-//! [`RecoveryStats`]. A torn *final* record (crash mid-append) is
-//! truncated away, not fatal; corruption anywhere earlier is an error.
-//! Replay never re-logs (only the batcher appends), and a clean
-//! shutdown (drain + final checkpoint, see [`super::server`]) replays
-//! zero records.
+//! [`Wal::open_and_recover`] first cross-checks the manifest's
+//! namespace list against the image files on disk — a missing or
+//! extra namespace, or a shard-count mismatch, fails with an error
+//! naming the offending namespace — then restores every namespace
+//! (recreating non-default ones with their manifest geometry) and
+//! replays every record at or after the captured position through
+//! `Engine::replay_record`: groups re-execute in their namespace
+//! (skipped if a later DROP already removed it), CREATE/DROP rebuild
+//! namespaces born or dropped mid-log, and [`RecoveryStats`] reports
+//! what happened. v1 manifests (`CKWM 1`) restore the single
+//! `default` namespace from the old image names. A torn *final*
+//! record (crash mid-append) is truncated away, not fatal; corruption
+//! anywhere earlier is an error. Replay never re-logs (only the
+//! batcher appends), and a clean shutdown (drain + final checkpoint,
+//! see [`super::server`]) replays zero records.
 //!
 //! ## Fault injection
 //!
@@ -78,11 +99,13 @@
 //! against a stress oracle through these hooks.
 
 use super::engine::Engine;
+use super::registry::DEFAULT_NS;
 use super::request::OpKind;
 use crate::filter::persist::{save_image, sync_dir, write_atomic};
 use crate::filter::Fp16;
 use crate::mem::BufferArena;
 use crate::util::crc::crc32;
+use std::collections::BTreeMap;
 use std::fs::{self, File, OpenOptions};
 use std::io::{self, BufReader, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
@@ -91,12 +114,17 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard, TryLockError};
 use std::time::Duration;
 
 const SEG_MAGIC: &[u8; 4] = b"CKWS";
-const SEG_VERSION: u32 = 1;
+/// Current segment format; version-1 segments are still replayed.
+const SEG_VERSION: u32 = 2;
 /// Segment header: magic + version + seq.
 const SEG_HEADER: u64 = 16;
 /// Sanity cap on a record's payload length during replay, so a
 /// corrupted length field cannot drive a giant allocation.
 const MAX_RECORD_BYTES: u32 = 1 << 30;
+
+/// Record kinds beyond the mutation op bytes (0 insert, 2 delete).
+const REC_CREATE: u8 = 3;
+const REC_DROP: u8 = 4;
 
 const MANIFEST: &str = "MANIFEST";
 
@@ -185,6 +213,9 @@ pub struct RecoveryStats {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CheckpointStats {
     pub id: u64,
+    /// Namespaces captured.
+    pub namespaces: usize,
+    /// Total shard images written across all namespaces.
     pub shards: usize,
     /// WAL position captured with the snapshot: replay resumes here.
     pub segment: u64,
@@ -251,6 +282,42 @@ fn byte_to_op(b: u8) -> Option<OpKind> {
     }
 }
 
+/// v2 checkpoint image filename for one namespace shard.
+fn ckpt_image_name(id: u64, ns: &str, shard: usize) -> String {
+    format!("ckpt-{id:016x}-ns-{ns}-shard-{shard}.ckgf")
+}
+
+/// Parse a v2 image filename for checkpoint `id` back to
+/// `(namespace, shard)`. Namespace names may themselves contain `-`,
+/// so the split is on the *last* `-shard-`.
+fn parse_ckpt_image_name(name: &str, id: u64) -> Option<(String, usize)> {
+    let rest = name
+        .strip_prefix(&format!("ckpt-{id:016x}-ns-"))?
+        .strip_suffix(".ckgf")?;
+    let cut = rest.rfind("-shard-")?;
+    let shard = rest[cut + 7..].parse().ok()?;
+    Some((rest[..cut].to_string(), shard))
+}
+
+/// A decoded WAL record, as handed to `Engine::replay_record`. v1
+/// records decode as [`WalRecord::Group`] in the `default` namespace.
+pub(crate) enum WalRecord {
+    /// One batcher flush group: a mutation over `keys` in `ns`.
+    Group {
+        ns: String,
+        op: OpKind,
+        keys: Vec<u64>,
+    },
+    /// `CREATE <ns>`: the namespace was born at this log position.
+    Create {
+        ns: String,
+        capacity: usize,
+        shards: usize,
+    },
+    /// `DROP <ns>`: the namespace died at this log position.
+    Drop { ns: String },
+}
+
 impl Wal {
     // ------------------------------------------------------------------
     // Group commit
@@ -281,22 +348,34 @@ impl Wal {
         }
     }
 
-    /// Serialize + append + fsync one record. Private: reachable only
-    /// through [`CommitGuard::append_group`], so every append is a group
-    /// commit under the lock (`scripts/check_api_surface.sh` enforces
-    /// the call-site discipline).
-    fn write_record(&self, inner: &mut WalInner, op: OpKind, keys: &[u64]) -> io::Result<()> {
-        debug_assert!(op.is_mutation(), "query groups are not logged");
+    /// Serialize + append + fsync one v2 record. Private: reachable
+    /// only through the [`CommitGuard`] append methods, so every append
+    /// is a group commit under the lock (`scripts/check_api_surface.sh`
+    /// enforces the call-site discipline). `kind` is a mutation op byte
+    /// or `REC_CREATE`/`REC_DROP`; `ns` is the target namespace.
+    fn write_record(
+        &self,
+        inner: &mut WalInner,
+        kind: u8,
+        ns: &str,
+        keys: &[u64],
+    ) -> io::Result<()> {
+        debug_assert!(ns.len() <= u16::MAX as usize, "namespace name too long");
         if self.dead.load(Ordering::Relaxed) {
             return Err(dead_err());
         }
-        let payload_len = 8 + keys.len() * 8;
+        let ns_len = ns.len();
+        let ns_pad = (8 - ns_len % 8) % 8;
+        let payload_len = 8 + ns_len + ns_pad + keys.len() * 8;
         let mut buf = self.arena.bytes().lease(8 + payload_len);
         buf.extend_from_slice(&(payload_len as u32).to_le_bytes());
         buf.extend_from_slice(&[0u8; 4]); // crc, patched below
-        buf.push(op_to_byte(op));
-        buf.extend_from_slice(&[0u8; 3]);
+        buf.push(kind);
+        buf.push(0);
+        buf.extend_from_slice(&(ns_len as u16).to_le_bytes());
         buf.extend_from_slice(&(keys.len() as u32).to_le_bytes());
+        buf.extend_from_slice(ns.as_bytes());
+        buf.extend_from_slice(&[0u8; 8][..ns_pad]);
         for &k in keys {
             buf.extend_from_slice(&k.to_le_bytes());
         }
@@ -307,7 +386,7 @@ impl Wal {
         // mid-record; an oversized record gets a fresh segment to itself).
         if inner.offset > SEG_HEADER && inner.offset + buf.len() as u64 > self.cfg.segment_bytes {
             let seq = inner.segment + 1;
-            inner.file = self.create_segment(seq)?;
+            inner.file = create_segment_file(&self.cfg.dir, seq)?;
             inner.segment = seq;
             inner.offset = SEG_HEADER;
             self.segments.fetch_add(1, Ordering::Relaxed);
@@ -336,21 +415,6 @@ impl Wal {
         Ok(())
     }
 
-    fn create_segment(&self, seq: u64) -> io::Result<File> {
-        let path = segment_path(&self.cfg.dir, seq);
-        let mut file = OpenOptions::new()
-            .create(true)
-            .write(true)
-            .truncate(true)
-            .open(&path)?;
-        file.write_all(SEG_MAGIC)?;
-        file.write_all(&SEG_VERSION.to_le_bytes())?;
-        file.write_all(&seq.to_le_bytes())?;
-        file.sync_all()?;
-        sync_dir(&self.cfg.dir)?;
-        Ok(file)
-    }
-
     // ------------------------------------------------------------------
     // Checkpoint
 
@@ -360,35 +424,44 @@ impl Wal {
             return Err(dead_err());
         }
         let _ckpt = self.ckpt.lock().unwrap();
-        // Consistent capture: commit lock stops new appends, the query
-        // phase quiesces in-flight mutations (whose records are already
-        // durable and positioned — the flusher submits inside its commit
-        // guard). Position + snapshots are taken under both, so replay
-        // from `position` applies exactly the records missing from the
-        // images: nothing lost, nothing doubled.
-        let (segment, offset, snaps) = {
+        // Consistent capture: commit lock stops new appends AND new
+        // namespace creates/drops (both mutate the registry under a
+        // commit guard on durable engines); the query phase inside
+        // `capture_namespaces` quiesces in-flight mutations (whose
+        // records are already durable and positioned — the flusher
+        // submits inside its commit guard). Position + snapshots are
+        // taken under both, so replay from `position` applies exactly
+        // the records missing from the images: nothing lost, nothing
+        // doubled, no namespace half-captured.
+        let (segment, offset, namespaces) = {
             let inner = self.inner.lock().unwrap();
-            let _phase = engine.epoch().begin_query();
-            let filter = engine.filter();
-            let snaps: Vec<_> = (0..filter.num_shards())
-                .map(|i| {
-                    let s = filter.shard(i);
-                    (*s.config(), s.len() as u64, s.table().snapshot())
-                })
-                .collect();
-            (inner.segment, inner.offset, snaps)
+            let namespaces = engine.capture_namespaces()?;
+            (inner.segment, inner.offset, namespaces)
         };
         // File IO outside every lock but `ckpt`.
         let id = self.last_ckpt.load(Ordering::Relaxed) + 1;
-        let shards = snaps.len();
-        for (i, (cfg, count, words)) in snaps.iter().enumerate() {
-            let path = self.cfg.dir.join(format!("ckpt-{id:016x}-shard-{i}.ckgf"));
-            write_atomic(&path, |w| save_image::<Fp16, _>(cfg, *count, words, w))?;
-            if i == 0 && self.take_kill(KillPoint::MidCheckpoint).is_some() {
-                return Err(dead_err());
+        let shards: usize = namespaces.iter().map(|ns| ns.images.len()).sum();
+        let mut first = true;
+        for ns in &namespaces {
+            for (i, (cfg, count, words)) in ns.images.iter().enumerate() {
+                let path = self.cfg.dir.join(ckpt_image_name(id, &ns.name, i));
+                write_atomic(&path, |w| save_image::<Fp16, _>(cfg, *count, words, w))?;
+                if first && self.take_kill(KillPoint::MidCheckpoint).is_some() {
+                    return Err(dead_err());
+                }
+                first = false;
             }
         }
-        let body = format!("CKWM 1\nid {id}\nshards {shards}\nsegment {segment}\noffset {offset}\n");
+        let mut body = format!(
+            "CKWM 2\nid {id}\nsegment {segment}\noffset {offset}\nnamespaces {}\n",
+            namespaces.len()
+        );
+        for ns in &namespaces {
+            body.push_str(&format!(
+                "ns {} {} {} {}\n",
+                ns.name, ns.capacity, ns.shards, ns.count
+            ));
+        }
         let crc = crc32(body.as_bytes());
         write_atomic(&self.cfg.dir.join(MANIFEST), |w| {
             w.write_all(body.as_bytes())?;
@@ -415,6 +488,7 @@ impl Wal {
         self.segments.store(live_segments, Ordering::Relaxed);
         Ok(CheckpointStats {
             id,
+            namespaces: namespaces.len(),
             shards,
             segment,
             offset,
@@ -435,19 +509,60 @@ impl Wal {
 
         let manifest = read_manifest(&cfg.dir)?;
         if let Some(m) = &manifest {
-            let filter = engine.filter();
-            if m.shards != filter.num_shards() {
-                return Err(bad(format!(
-                    "checkpoint has {} shards, engine has {} — config mismatch",
-                    m.shards,
-                    filter.num_shards()
-                )));
-            }
-            for i in 0..m.shards {
-                let path = cfg.dir.join(format!("ckpt-{:016x}-shard-{i}.ckgf", m.id));
-                filter
-                    .shard(i)
-                    .load_into(BufReader::new(File::open(&path)?))?;
+            match &m.shape {
+                ManifestShape::V1 { shards } => {
+                    if *shards != engine.filter().num_shards() {
+                        return Err(bad(format!(
+                            "checkpoint has {} shards, engine has {} — config mismatch",
+                            shards,
+                            engine.filter().num_shards()
+                        )));
+                    }
+                    let images: Vec<PathBuf> = (0..*shards)
+                        .map(|i| cfg.dir.join(format!("ckpt-{:016x}-shard-{i}.ckgf", m.id)))
+                        .collect();
+                    engine.recover_namespace(DEFAULT_NS, 0, *shards, &images)?;
+                }
+                ManifestShape::V2 { namespaces } => {
+                    // Cross-check the manifest's namespace set against
+                    // the image files actually on disk before loading
+                    // anything, so a missing or extra namespace fails
+                    // with an error naming it instead of a bare
+                    // file-not-found (or a silently ignored orphan).
+                    let mut on_disk: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+                    for entry in fs::read_dir(&cfg.dir)? {
+                        let name = entry?.file_name().to_string_lossy().into_owned();
+                        if let Some((ns, shard)) = parse_ckpt_image_name(&name, m.id) {
+                            on_disk.entry(ns).or_default().push(shard);
+                        }
+                    }
+                    for e in namespaces {
+                        let mut got = on_disk.remove(&e.name).unwrap_or_default();
+                        got.sort_unstable();
+                        if got.len() != e.shards || got.iter().enumerate().any(|(i, &s)| s != i) {
+                            return Err(bad(format!(
+                                "checkpoint namespace mismatch: manifest lists namespace \
+                                 '{}' with {} shards but {} shard images exist",
+                                e.name,
+                                e.shards,
+                                got.len()
+                            )));
+                        }
+                    }
+                    if let Some((extra, imgs)) = on_disk.into_iter().next() {
+                        return Err(bad(format!(
+                            "checkpoint namespace mismatch: {} shard images exist for \
+                             namespace '{extra}' that the manifest does not list",
+                            imgs.len()
+                        )));
+                    }
+                    for e in namespaces {
+                        let images: Vec<PathBuf> = (0..e.shards)
+                            .map(|i| cfg.dir.join(ckpt_image_name(m.id, &e.name, i)))
+                            .collect();
+                        engine.recover_namespace(&e.name, e.capacity, e.shards, &images)?;
+                    }
+                }
             }
             stats.checkpoint = Some(m.id);
         }
@@ -482,7 +597,7 @@ impl Wal {
         }
 
         // Replay each segment; only the final one may be torn.
-        let mut active: Option<(u64, u64)> = None; // (seq, end offset)
+        let mut active: Option<(u64, u64, u32)> = None; // (seq, end offset, version)
         let last = seqs.last().copied();
         for &seq in &seqs {
             let is_final = Some(seq) == last;
@@ -492,8 +607,8 @@ impl Wal {
             };
             let path = segment_path(&cfg.dir, seq);
             match replay_segment(engine, &path, seq, start, is_final, &mut stats)? {
-                SegmentEnd::Clean(end) => active = Some((seq, end)),
-                SegmentEnd::Truncated(end) => {
+                (SegmentEnd::Clean(end), ver) => active = Some((seq, end, ver)),
+                (SegmentEnd::Truncated(end), ver) => {
                     // Torn tail: cut the file back to the last good
                     // record boundary so the segment is appendable again.
                     let f = OpenOptions::new().write(true).open(&path)?;
@@ -501,9 +616,9 @@ impl Wal {
                     f.sync_all()?;
                     sync_dir(&cfg.dir)?;
                     stats.torn_tail_truncated = true;
-                    active = Some((seq, end));
+                    active = Some((seq, end, ver));
                 }
-                SegmentEnd::HeaderTorn => {
+                (SegmentEnd::HeaderTorn, _) => {
                     // Crash during segment creation: no record ever made
                     // it in. Drop the file and recreate the seq fresh.
                     fs::remove_file(&path)?;
@@ -516,29 +631,24 @@ impl Wal {
         }
 
         // Open the active segment for appending (continue the last one,
-        // or start fresh).
+        // or start fresh). A v1 tail replays fine but cannot take v2
+        // appends — roll it forward to a fresh v2 segment; the old one
+        // stays read-only until the next checkpoint garbage-collects it.
         let (file, segment, offset) = match active {
-            Some((seq, end)) => {
+            Some((seq, end, SEG_VERSION)) => {
                 let mut file = OpenOptions::new()
                     .write(true)
                     .open(segment_path(&cfg.dir, seq))?;
                 file.seek(SeekFrom::Start(end))?;
                 (file, seq, end)
             }
+            Some((seq, _, _)) => {
+                let seq = seq + 1;
+                (create_segment_file(&cfg.dir, seq)?, seq, SEG_HEADER)
+            }
             None => {
                 let seq = last.or_else(|| manifest.as_ref().map(|m| m.segment)).unwrap_or(0);
-                let path = segment_path(&cfg.dir, seq);
-                let mut file = OpenOptions::new()
-                    .create(true)
-                    .write(true)
-                    .truncate(true)
-                    .open(&path)?;
-                file.write_all(SEG_MAGIC)?;
-                file.write_all(&SEG_VERSION.to_le_bytes())?;
-                file.write_all(&seq.to_le_bytes())?;
-                file.sync_all()?;
-                sync_dir(&cfg.dir)?;
-                (file, seq, SEG_HEADER)
+                (create_segment_file(&cfg.dir, seq)?, seq, SEG_HEADER)
             }
         };
 
@@ -625,21 +735,74 @@ pub struct CommitGuard<'a> {
 }
 
 impl CommitGuard<'_> {
-    /// Group-commit one mutation flush group: serialize (from leased
-    /// arena bytes), append, fsync. THE single WAL append entry point.
-    pub fn append_group(&mut self, op: OpKind, keys: &[u64]) -> io::Result<()> {
-        self.wal.write_record(&mut self.inner, op, keys)
+    /// Group-commit one mutation flush group in namespace `ns`:
+    /// serialize (from leased arena bytes), append, fsync. THE WAL
+    /// append entry point for data records.
+    pub fn append_group(&mut self, ns: &str, op: OpKind, keys: &[u64]) -> io::Result<()> {
+        debug_assert!(op.is_mutation(), "query groups are not logged");
+        self.wal.write_record(&mut self.inner, op_to_byte(op), ns, keys)
+    }
+
+    /// Log a namespace create (`keys` carry its geometry) so recovery
+    /// rebuilds namespaces born after the last checkpoint.
+    pub fn append_create(&mut self, ns: &str, capacity: usize, shards: usize) -> io::Result<()> {
+        self.wal
+            .write_record(&mut self.inner, REC_CREATE, ns, &[capacity as u64, shards as u64])
+    }
+
+    /// Log a namespace drop.
+    pub fn append_drop(&mut self, ns: &str) -> io::Result<()> {
+        self.wal.write_record(&mut self.inner, REC_DROP, ns, &[])
     }
 }
 
 // ----------------------------------------------------------------------
 // Manifest + replay internals
 
+fn create_segment_file(dir: &Path, seq: u64) -> io::Result<File> {
+    let path = segment_path(dir, seq);
+    let mut file = OpenOptions::new()
+        .create(true)
+        .write(true)
+        .truncate(true)
+        .open(&path)?;
+    file.write_all(SEG_MAGIC)?;
+    file.write_all(&SEG_VERSION.to_le_bytes())?;
+    file.write_all(&seq.to_le_bytes())?;
+    file.sync_all()?;
+    sync_dir(dir)?;
+    Ok(file)
+}
+
+/// One namespace's row in a v2 manifest.
+struct NsEntry {
+    name: String,
+    capacity: usize,
+    shards: usize,
+}
+
+enum ManifestShape {
+    /// `CKWM 1`: the single implicit `default` namespace, `shards`
+    /// images named `ckpt-<id>-shard-<i>.ckgf`.
+    V1 { shards: usize },
+    /// `CKWM 2`: explicit namespace list, images named
+    /// `ckpt-<id>-ns-<name>-shard-<i>.ckgf`.
+    V2 { namespaces: Vec<NsEntry> },
+}
+
 struct Manifest {
     id: u64,
-    shards: usize,
     segment: u64,
     offset: u64,
+    shape: ManifestShape,
+}
+
+fn manifest_field(lines: &mut std::str::Lines<'_>, name: &str) -> io::Result<u64> {
+    lines
+        .next()
+        .and_then(|l| l.strip_prefix(name))
+        .and_then(|v| v.trim().parse().ok())
+        .ok_or_else(|| bad(format!("manifest missing field '{name}'")))
 }
 
 fn read_manifest(dir: &Path) -> io::Result<Option<Manifest>> {
@@ -667,22 +830,60 @@ fn read_manifest(dir: &Path) -> io::Result<Option<Manifest>> {
         )));
     }
     let mut lines = body.lines();
-    if lines.next() != Some("CKWM 1") {
-        return Err(bad("bad manifest header"));
+    match lines.next() {
+        Some("CKWM 1") => {
+            let id = manifest_field(&mut lines, "id ")?;
+            let shards = manifest_field(&mut lines, "shards ")? as usize;
+            Ok(Some(Manifest {
+                id,
+                segment: manifest_field(&mut lines, "segment ")?,
+                offset: manifest_field(&mut lines, "offset ")?,
+                shape: ManifestShape::V1 { shards },
+            }))
+        }
+        Some("CKWM 2") => {
+            let id = manifest_field(&mut lines, "id ")?;
+            let segment = manifest_field(&mut lines, "segment ")?;
+            let offset = manifest_field(&mut lines, "offset ")?;
+            let n = manifest_field(&mut lines, "namespaces ")? as usize;
+            let mut namespaces = Vec::with_capacity(n);
+            for _ in 0..n {
+                // `ns <name> <capacity> <shards> <count>`; names cannot
+                // contain spaces (`valid_ns_name`), so a plain split works.
+                let line = lines
+                    .next()
+                    .and_then(|l| l.strip_prefix("ns "))
+                    .ok_or_else(|| bad("manifest truncated: missing 'ns' row"))?;
+                let mut toks = line.split_whitespace();
+                let parse_err = || bad(format!("bad manifest 'ns' row: {line}"));
+                let name = toks.next().ok_or_else(parse_err)?.to_string();
+                let capacity = toks
+                    .next()
+                    .and_then(|t| t.parse().ok())
+                    .ok_or_else(parse_err)?;
+                let shards = toks
+                    .next()
+                    .and_then(|t| t.parse().ok())
+                    .ok_or_else(parse_err)?;
+                let _count: u64 = toks
+                    .next()
+                    .and_then(|t| t.parse().ok())
+                    .ok_or_else(parse_err)?;
+                namespaces.push(NsEntry {
+                    name,
+                    capacity,
+                    shards,
+                });
+            }
+            Ok(Some(Manifest {
+                id,
+                segment,
+                offset,
+                shape: ManifestShape::V2 { namespaces },
+            }))
+        }
+        _ => Err(bad("bad manifest header")),
     }
-    let mut field = |name: &str| -> io::Result<u64> {
-        lines
-            .next()
-            .and_then(|l| l.strip_prefix(name))
-            .and_then(|v| v.trim().parse().ok())
-            .ok_or_else(|| bad(format!("manifest missing field '{name}'")))
-    };
-    Ok(Some(Manifest {
-        id: field("id ")?,
-        shards: field("shards ")? as usize,
-        segment: field("segment ")?,
-        offset: field("offset ")?,
-    }))
 }
 
 enum SegmentEnd {
@@ -715,8 +916,10 @@ fn read_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> io::Result<bool> {
     Ok(true)
 }
 
-/// Read + verify one record. `Ok(None)` at a clean record boundary.
-fn read_record<R: Read>(r: &mut R) -> io::Result<Option<(OpKind, Vec<u64>, u64)>> {
+/// Read + verify one record; `version` selects the payload layout.
+/// `Ok(None)` at a clean record boundary; the `u64` is the record's
+/// total on-disk length.
+fn read_record<R: Read>(r: &mut R, version: u32) -> io::Result<Option<(WalRecord, u64)>> {
     let mut lenb = [0u8; 4];
     if !read_or_eof(r, &mut lenb)? {
         return Ok(None);
@@ -746,16 +949,63 @@ fn read_record<R: Read>(r: &mut R) -> io::Result<Option<(OpKind, Vec<u64>, u64)>
             "record checksum mismatch: stored {stored:#010x}, computed {computed:#010x}"
         )));
     }
-    let op = byte_to_op(payload[0]).ok_or_else(|| bad(format!("bad op byte {}", payload[0])))?;
     let nkeys = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
-    if len as usize != 8 + nkeys * 8 {
-        return Err(bad(format!("record length {len} disagrees with nkeys {nkeys}")));
-    }
-    let keys = payload[8..]
-        .chunks_exact(8)
-        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-        .collect();
-    Ok(Some((op, keys, 8 + len as u64)))
+    let rec = if version == 1 {
+        // v1: `op | pad×3 | nkeys | keys`, implicitly the default ns.
+        let op =
+            byte_to_op(payload[0]).ok_or_else(|| bad(format!("bad op byte {}", payload[0])))?;
+        if len as usize != 8 + nkeys * 8 {
+            return Err(bad(format!("record length {len} disagrees with nkeys {nkeys}")));
+        }
+        let keys = payload[8..]
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        WalRecord::Group {
+            ns: DEFAULT_NS.to_string(),
+            op,
+            keys,
+        }
+    } else {
+        let kind = payload[0];
+        let ns_len = u16::from_le_bytes(payload[2..4].try_into().unwrap()) as usize;
+        let ns_pad = (8 - ns_len % 8) % 8;
+        if len as usize != 8 + ns_len + ns_pad + nkeys * 8 {
+            return Err(bad(format!(
+                "record length {len} disagrees with ns_len {ns_len} + nkeys {nkeys}"
+            )));
+        }
+        let ns = std::str::from_utf8(&payload[8..8 + ns_len])
+            .map_err(|_| bad("record namespace is not utf-8"))?
+            .to_string();
+        let keys: Vec<u64> = payload[8 + ns_len + ns_pad..]
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        match kind {
+            REC_CREATE => {
+                if keys.len() != 2 {
+                    return Err(bad(format!("CREATE record with {} geometry words", keys.len())));
+                }
+                WalRecord::Create {
+                    ns,
+                    capacity: keys[0] as usize,
+                    shards: keys[1] as usize,
+                }
+            }
+            REC_DROP => {
+                if !keys.is_empty() {
+                    return Err(bad("DROP record with keys"));
+                }
+                WalRecord::Drop { ns }
+            }
+            b => match byte_to_op(b) {
+                Some(op) if op.is_mutation() => WalRecord::Group { ns, op, keys },
+                _ => return Err(bad(format!("bad record kind {b}"))),
+            },
+        }
+    };
+    Ok(Some((rec, 8 + len as u64)))
 }
 
 fn replay_segment(
@@ -765,21 +1015,22 @@ fn replay_segment(
     start: u64,
     is_final: bool,
     stats: &mut RecoveryStats,
-) -> io::Result<SegmentEnd> {
+) -> io::Result<(SegmentEnd, u32)> {
     let file = File::open(path)?;
     let file_len = file.metadata()?.len();
     let mut r = BufReader::new(file);
     if file_len < SEG_HEADER {
         return if is_final && start <= SEG_HEADER {
-            Ok(SegmentEnd::HeaderTorn)
+            Ok((SegmentEnd::HeaderTorn, SEG_VERSION))
         } else {
             Err(bad(format!("segment {seq}: truncated header")))
         };
     }
     let mut header = [0u8; SEG_HEADER as usize];
     r.read_exact(&mut header)?;
+    let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
     if &header[..4] != SEG_MAGIC
-        || u32::from_le_bytes(header[4..8].try_into().unwrap()) != SEG_VERSION
+        || !(1..=SEG_VERSION).contains(&version)
         || u64::from_le_bytes(header[8..16].try_into().unwrap()) != seq
     {
         return Err(bad(format!("segment {seq}: bad header")));
@@ -794,15 +1045,17 @@ fn replay_segment(
     }
     let mut good = start;
     loop {
-        match read_record(&mut r) {
-            Ok(None) => return Ok(SegmentEnd::Clean(good)),
-            Ok(Some((op, keys, rec_len))) => {
+        match read_record(&mut r, version) {
+            Ok(None) => return Ok((SegmentEnd::Clean(good), version)),
+            Ok(Some((rec, rec_len))) => {
                 stats.records_replayed += 1;
-                stats.keys_replayed += keys.len() as u64;
+                if let WalRecord::Group { keys, .. } = &rec {
+                    stats.keys_replayed += keys.len() as u64;
+                }
                 // Replay through the same submission surface live
                 // traffic uses; outcomes are discarded (clients are
-                // long gone), only table state matters.
-                engine.execute_op(op, keys);
+                // long gone), only table + registry state matters.
+                engine.replay_record(rec);
                 good += rec_len;
             }
             Err(e)
@@ -815,7 +1068,7 @@ fn replay_segment(
                 // A torn or half-written final record — the expected
                 // residue of a crash mid-append. Everything before it is
                 // verified; cut here.
-                return Ok(SegmentEnd::Truncated(good));
+                return Ok((SegmentEnd::Truncated(good), version));
             }
             Err(e) => {
                 return Err(io::Error::new(
@@ -875,5 +1128,101 @@ impl Drop for Checkpointer {
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{Engine, EngineConfig};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "cuckoo-wal-{tag}-{}-{:x}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn mk_engine() -> Engine {
+        Engine::new(EngineConfig {
+            capacity: 4096,
+            shards: 2,
+            workers: 1,
+            pools: 1,
+            artifacts_dir: None,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn image_name_roundtrip_handles_dashed_namespaces() {
+        let name = ckpt_image_name(7, "team-a.cache", 3);
+        assert_eq!(name, "ckpt-0000000000000007-ns-team-a.cache-shard-3.ckgf");
+        assert_eq!(
+            parse_ckpt_image_name(&name, 7),
+            Some(("team-a.cache".to_string(), 3))
+        );
+        assert_eq!(parse_ckpt_image_name(&name, 8), None);
+        assert_eq!(parse_ckpt_image_name("ckpt-0000000000000007-shard-0.ckgf", 7), None);
+    }
+
+    #[test]
+    fn manifest_rejects_missing_and_extra_namespaces() {
+        let dir = tmp_dir("nsmanifest");
+
+        // Build a durable engine with one extra namespace, checkpoint it.
+        let id = {
+            let engine = mk_engine();
+            Wal::open_and_recover(&engine, WalConfig::new(&dir)).unwrap();
+            engine.create_namespace_with("tenant-a", 2048, 1).unwrap();
+            engine
+                .execute_op_in("tenant-a", OpKind::Insert, (0..100).collect())
+                .unwrap();
+            let ck = engine.checkpoint().unwrap().expect("durable engine");
+            assert_eq!(ck.namespaces, 2, "default + tenant-a");
+            ck.id
+        };
+
+        // Clean reopen restores both namespaces from the manifest.
+        {
+            let engine = mk_engine();
+            let stats = Wal::open_and_recover(&engine, WalConfig::new(&dir)).unwrap();
+            assert_eq!(stats.checkpoint, Some(id));
+            let r = engine
+                .execute_op_in("tenant-a", OpKind::Query, (0..100).collect())
+                .unwrap();
+            assert_eq!(r.successes, 100);
+        }
+
+        // An image file for a namespace the manifest does not list.
+        let ghost = dir.join(ckpt_image_name(id, "ghost", 0));
+        fs::copy(dir.join(ckpt_image_name(id, "default", 0)), &ghost).unwrap();
+        let err = Wal::open_and_recover(&mk_engine(), WalConfig::new(&dir)).unwrap_err();
+        assert!(
+            err.to_string().contains("'ghost'") && err.to_string().contains("does not list"),
+            "extra namespace must be named: {err}"
+        );
+        fs::remove_file(&ghost).unwrap();
+
+        // A manifest-listed namespace whose images are gone.
+        for entry in fs::read_dir(&dir).unwrap() {
+            let p = entry.unwrap().path();
+            if p.file_name().unwrap().to_string_lossy().contains("-ns-tenant-a-") {
+                fs::remove_file(p).unwrap();
+            }
+        }
+        let err = Wal::open_and_recover(&mk_engine(), WalConfig::new(&dir)).unwrap_err();
+        assert!(
+            err.to_string().contains("'tenant-a'"),
+            "missing namespace must be named: {err}"
+        );
+
+        fs::remove_dir_all(&dir).ok();
     }
 }

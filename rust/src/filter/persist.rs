@@ -192,6 +192,23 @@ fn read_versioned<R: Read, T>(
     }
 }
 
+/// Read a complete image back as a raw `(config, count, table words)`
+/// snapshot without materialising a filter. The checkpointer uses this
+/// to fold an evicted namespace's spill image into a checkpoint capture
+/// verbatim; integrity checks (version dispatch, v2 crc) match the
+/// loaders above, and the occupancy rescan is deferred to whoever
+/// eventually loads the words into a live table.
+pub(crate) fn read_image<L: Layout>(r: impl Read) -> io::Result<(CuckooConfig, u64, Vec<u64>)> {
+    read_versioned(r, |r| {
+        let h = read_header::<L, _>(r)?;
+        let mut words = vec![0u64; h.num_words];
+        for w in words.iter_mut() {
+            *w = r_u64(r)?;
+        }
+        Ok((h.cfg, h.count, words))
+    })
+}
+
 /// Write `f`'s output to `path` atomically: temp sibling, flush,
 /// `sync_all`, rename, parent-dir fsync. The temp file is removed on
 /// failure, so a crashed or failed save never clobbers an existing good

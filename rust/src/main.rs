@@ -10,6 +10,8 @@
 //!       [--artifacts DIR]          # line-protocol filter server
 //!       [--wal-dir DIR]            # durable serving: WAL + checkpoints
 //!       [--ckpt-secs N]            # background checkpoint period (30)
+//!       [--spill-dir DIR]          # tiering: evict cold namespaces here
+//!       [--max-resident N]         # resident table-bytes budget (tiering)
 //! repro selftest                   # quick end-to-end sanity check
 //! repro info                       # build/config/device info
 //! ```
@@ -84,6 +86,13 @@ fn cmd_serve(args: &Args) {
         args.get_usize("workers", cuckoo_gpu::device::default_workers()),
         engine.pools()
     );
+    // Tiering: enabled before recovery so namespaces restored from a
+    // checkpoint are immediately evictable under the budget.
+    if let Some(dir) = args.get("spill-dir") {
+        let max = args.get_usize("max-resident", usize::MAX) as u64;
+        engine.enable_tiering(dir, max).expect("tiering");
+        println!("tiering: spill-dir={dir} max-resident={max}B");
+    }
     // Durable serving: recover from the last checkpoint + WAL tail, then
     // keep checkpointing in the background until shutdown. The engine
     // must be recovered BEFORE the server (and its batcher) is built.

@@ -170,3 +170,77 @@ fn wal_group_commit_preserves_the_zero_allocation_steady_state() {
     drop(batcher);
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn multi_tenant_flush_groups_keep_the_arena_miss_count_constant() {
+    // PR-7 acceptance: namespace fan-out must not cost the PR-5
+    // property. Every tenant's filter is built over the ONE engine
+    // arena, and flush groups are keyed `(namespace, OpKind)` — so a
+    // steady mixed workload across four tenants with four different
+    // shard counts still holds the miss counter perfectly still once
+    // every size class (scatter pairs and tallies scale with the shard
+    // count) has been populated during warmup.
+    let seed = stress_seed();
+    let engine = Arc::new(
+        Engine::new(EngineConfig {
+            capacity: 1 << 18,
+            shards: 4,
+            workers: 4,
+            pools: 1,
+            artifacts_dir: None,
+        })
+        .unwrap(),
+    );
+    engine.create_namespace_with("t1", 1 << 16, 1).unwrap();
+    engine.create_namespace_with("t2", 1 << 16, 2).unwrap();
+    engine.create_namespace_with("t8", 1 << 16, 8).unwrap();
+    let batcher = Batcher::new(
+        engine.clone(),
+        BatcherConfig {
+            max_keys: GROUP,
+            max_delay: Duration::from_millis(1),
+        },
+    );
+
+    // One round = the insert/query/delete triple in every tenant, each
+    // call exactly one flush group (max_keys = GROUP), with phase and
+    // namespace switches between consecutive groups.
+    let tenants: [Option<&str>; 4] = [None, Some("t1"), Some("t2"), Some("t8")];
+    let run_round = |round: u64| {
+        for (i, ns) in tenants.iter().enumerate() {
+            let ks = block(round * tenants.len() as u64 + i as u64, seed);
+            let req = |op: OpKind, keys: Vec<u64>| match ns {
+                Some(n) => Request::in_ns(*n, op, keys),
+                None => Request::new(op, keys),
+            };
+            let ins = batcher.call(req(OpKind::Insert, ks.clone())).unwrap();
+            assert_eq!(ins.successes as usize, GROUP, "tenant {ns:?}");
+            let qry = batcher.call(req(OpKind::Query, ks.clone())).unwrap();
+            assert_eq!(qry.successes as usize, GROUP, "tenant {ns:?}");
+            let del = batcher.call(req(OpKind::Delete, ks)).unwrap();
+            assert!(del.successes as usize >= GROUP - 8, "tenant {ns:?}");
+        }
+    };
+
+    // Warmup: two rounds touch every (tenant, op, size-class) combo.
+    for round in 0..2 {
+        run_round(round);
+    }
+    let before = engine.arena_stats();
+    // 9 rounds × 4 tenants × 3 ops = 108 mixed flush groups.
+    for round in 2..11 {
+        run_round(round);
+    }
+    let after = engine.arena_stats();
+
+    assert_eq!(
+        after.misses, before.misses,
+        "multi-tenant flush groups allocated new scratch \
+         (tenant filters must share the engine arena; seed {seed})"
+    );
+    let window_acquires = after.acquires() - before.acquires();
+    assert!(
+        window_acquires >= 100,
+        "expected ≥100 leases over the multi-tenant window, saw {window_acquires}"
+    );
+}

@@ -9,6 +9,11 @@
 //! segment must be appendable again. A clean shutdown (drain + final
 //! checkpoint) must replay zero records on restart.
 //!
+//! PR 7 adds the multi-tenant legs: kills around namespace lifecycle
+//! (CREATE / DROP / evict) must restart byte-identical to a
+//! per-namespace oracle, and pre-namespace version-1 WAL segments must
+//! replay into the `default` namespace.
+//!
 //! Crashes are injected through `Wal::debug_kill_at`, which performs
 //! exactly the writes a kill -9 at that point would leave behind and
 //! then fails every later durability call. Runs inside the seeded
@@ -18,8 +23,9 @@
 
 use cuckoo_gpu::coordinator::server::{Client, Server};
 use cuckoo_gpu::coordinator::{
-    BatcherConfig, Engine, EngineConfig, KillPoint, OpKind, Response, Wal, WalConfig,
+    BatcherConfig, Engine, EngineConfig, KillPoint, OpKind, Response, Wal, WalConfig, DEFAULT_NS,
 };
+use cuckoo_gpu::util::crc::crc32;
 use cuckoo_gpu::util::prng::mix64;
 use std::fs;
 use std::path::PathBuf;
@@ -33,8 +39,9 @@ fn stress_seed() -> u64 {
         .unwrap_or(0xC0FFEE)
 }
 
-/// Keys per mutation group. 64 keys = 528-byte records, so the small
-/// `segment_bytes` below forces rolling and multi-segment replay.
+/// Keys per mutation group. 64 keys in the `default` namespace =
+/// 536-byte v2 records, so the small `segment_bytes` below forces
+/// rolling and multi-segment replay.
 const GROUP: usize = 64;
 
 fn block(g: u64, seed: u64) -> Vec<u64> {
@@ -69,10 +76,22 @@ fn wal_dir(name: &str, seed: u64) -> PathBuf {
 /// the record under the commit guard, submit while the guard is still
 /// held. An append failure means the group was never executed.
 fn durable_apply(engine: &Engine, op: OpKind, keys: &[u64]) -> std::io::Result<Response> {
+    durable_apply_in(engine, DEFAULT_NS, op, keys)
+}
+
+/// Namespace-aware form of [`durable_apply`].
+fn durable_apply_in(
+    engine: &Engine,
+    ns: &str,
+    op: OpKind,
+    keys: &[u64],
+) -> std::io::Result<Response> {
     let wal = engine.wal().expect("wal attached");
     let mut commit = wal.begin_commit()?;
-    commit.append_group(op, keys)?;
-    let resp = engine.execute_op(op, keys.to_vec());
+    commit.append_group(ns, op, keys)?;
+    let resp = engine
+        .execute_op_in(ns, op, keys.to_vec())
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::NotFound, e.to_string()))?;
     drop(commit);
     Ok(resp)
 }
@@ -268,11 +287,13 @@ fn hand_torn_tails_truncate_and_the_segment_stays_appendable() {
         durable_apply(&a, OpKind::Insert, &[]).unwrap();
         drop(a);
 
-        // 3 × 528-byte records + one 16-byte empty record after the
-        // 16-byte header = everything in segment 0, ending at 1616.
+        // 3 × 536-byte records + one 24-byte empty record after the
+        // 16-byte header = everything in segment 0, ending at 1648
+        // (v2 records carry the namespace: 8-byte head + "default"
+        // padded to 8 + the keys).
         let seg = dir.join(format!("wal-{:016x}.seg", 0));
         let clean_len = fs::metadata(&seg).unwrap().len();
-        assert_eq!(clean_len, 1616);
+        assert_eq!(clean_len, 1648);
         let mut f = fs::OpenOptions::new().append(true).open(&seg).unwrap();
         std::io::Write::write_all(&mut f, tail).unwrap();
         drop(f);
@@ -346,6 +367,129 @@ fn clean_shutdown_checkpoints_so_restart_replays_zero_records() {
     assert_eq!(b.len(), live_len);
     let q = b.execute_op(OpKind::Query, ks0.clone());
     assert!(q.outcomes.iter().all(|&x| x), "restored keys must answer present");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn namespaced_lifecycle_and_groups_recover_byte_identically() {
+    let seed = stress_seed();
+    let dir = wal_dir("nslife", seed);
+    let spill = wal_dir("nslife_spill", seed);
+    let cfg = WalConfig::new(&dir).segment_bytes(2048);
+    let a = engine(2);
+    a.enable_tiering(&spill, u64::MAX).unwrap();
+    Wal::open_and_recover(&a, cfg.clone()).unwrap();
+
+    // Lifecycle + groups across three tenants, then a checkpoint that
+    // must capture one namespace while it is EVICTED (its shard images
+    // re-read from the spill files, not resident memory).
+    a.create_namespace_with("t1", 1 << 14, 2).unwrap();
+    a.create_namespace_with("t2", 1 << 14, 1).unwrap();
+    durable_apply(&a, OpKind::Insert, &block(0, seed)).unwrap();
+    durable_apply_in(&a, "t1", OpKind::Insert, &block(1, seed)).unwrap();
+    durable_apply_in(&a, "t2", OpKind::Insert, &block(2, seed)).unwrap();
+    assert!(a.evict_namespace("t2").unwrap(), "t2 must evict");
+    let ck = a.checkpoint().unwrap().expect("durable engine");
+    assert_eq!((ck.id, ck.namespaces, ck.shards), (1, 3, 5));
+
+    // Post-checkpoint lifecycle must come back from the log, not the
+    // manifest: a drop, a late create, and mixed mutation groups.
+    a.drop_namespace("t2").unwrap();
+    a.create_namespace_with("t3", 1 << 14, 1).unwrap();
+    durable_apply_in(&a, "t3", OpKind::Insert, &block(3, seed)).unwrap();
+    durable_apply_in(&a, "t1", OpKind::Delete, &block(1, seed)[..GROUP / 2]).unwrap();
+    // Kill after the fsync: the final group is durable but never
+    // executed in the crashed process — replay must land it in t1.
+    a.wal().unwrap().debug_kill_at(KillPoint::PostFsyncPreKernel, 0, 0);
+    assert!(durable_apply_in(&a, "t1", OpKind::Insert, &block(4, seed)).is_err());
+    drop(a);
+
+    // Per-namespace oracle: the same sequence, uninterrupted.
+    let oracle = engine(2);
+    oracle.create_namespace_with("t1", 1 << 14, 2).unwrap();
+    oracle.create_namespace_with("t2", 1 << 14, 1).unwrap();
+    oracle.execute_op(OpKind::Insert, block(0, seed));
+    oracle.execute_op_in("t1", OpKind::Insert, block(1, seed)).unwrap();
+    oracle.execute_op_in("t2", OpKind::Insert, block(2, seed)).unwrap();
+    oracle.drop_namespace("t2").unwrap();
+    oracle.create_namespace_with("t3", 1 << 14, 1).unwrap();
+    oracle.execute_op_in("t3", OpKind::Insert, block(3, seed)).unwrap();
+    oracle
+        .execute_op_in("t1", OpKind::Delete, block(1, seed)[..GROUP / 2].to_vec())
+        .unwrap();
+    oracle.execute_op_in("t1", OpKind::Insert, block(4, seed)).unwrap();
+
+    let b = engine(2);
+    let stats = Wal::open_and_recover(&b, cfg).unwrap();
+    assert_eq!(stats.checkpoint, Some(1));
+    // DROP t2 + CREATE t3 + three groups after the checkpoint.
+    assert_eq!(stats.records_replayed, 5);
+    assert_eq!(stats.keys_replayed, (2 * GROUP + GROUP / 2) as u64);
+    assert!(!b.namespace_exists("t2"), "dropped namespace must stay dropped");
+    assert!(b.namespace_exists("t3"), "mid-log namespace must be reborn");
+    assert_eq!(b.len(), oracle.len(), "total occupancy ledger diverged");
+    for ns in [DEFAULT_NS, "t1", "t3"] {
+        for ks in probes(seed) {
+            let r = b.execute_op_in(ns, OpKind::Query, ks.clone()).unwrap();
+            let o = oracle.execute_op_in(ns, OpKind::Query, ks).unwrap();
+            assert_eq!(r.outcomes, o.outcomes, "ns '{ns}': positional outcomes diverged");
+        }
+    }
+    let _ = fs::remove_dir_all(&dir);
+    let _ = fs::remove_dir_all(&spill);
+}
+
+#[test]
+fn v1_wal_segments_replay_into_the_default_namespace() {
+    let seed = stress_seed();
+    let dir = wal_dir("v1compat", seed);
+    fs::create_dir_all(&dir).unwrap();
+    // Hand-write a version-1 segment exactly as a pre-namespace binary
+    // left it: `CKWS | version=1 | seq` header, then
+    // `len | crc | (op u8 | pad×3 | nkeys u32 | keys)` records.
+    let mut seg: Vec<u8> = Vec::new();
+    seg.extend_from_slice(b"CKWS");
+    seg.extend_from_slice(&1u32.to_le_bytes());
+    seg.extend_from_slice(&0u64.to_le_bytes());
+    for g in 0..2u64 {
+        let keys = block(g, seed);
+        let mut payload = vec![0u8, 0, 0, 0]; // op=insert | pad×3
+        payload.extend_from_slice(&(keys.len() as u32).to_le_bytes());
+        for k in &keys {
+            payload.extend_from_slice(&k.to_le_bytes());
+        }
+        seg.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        seg.extend_from_slice(&crc32(&payload).to_le_bytes());
+        seg.extend_from_slice(&payload);
+    }
+    fs::write(dir.join(format!("wal-{:016x}.seg", 0)), &seg).unwrap();
+
+    let b = engine(2);
+    let stats = Wal::open_and_recover(&b, WalConfig::new(&dir)).unwrap();
+    assert_eq!(stats.checkpoint, None);
+    assert_eq!(stats.records_replayed, 2);
+    assert_eq!(stats.keys_replayed, 2 * GROUP as u64);
+    assert!(!stats.torn_tail_truncated);
+    let q = b.execute_op(OpKind::Query, block(0, seed));
+    assert!(q.outcomes.iter().all(|&x| x), "v1 records must land in the default ns");
+
+    // A v1 tail cannot take v2 appends: recovery must have rolled the
+    // log forward to a fresh v2 segment, and appends go there.
+    assert!(
+        dir.join(format!("wal-{:016x}.seg", 1)).exists(),
+        "recovery must roll a v1 tail to a v2 segment"
+    );
+    durable_apply(&b, OpKind::Insert, &block(5, seed)).unwrap();
+    drop(b);
+
+    let oracle = engine(2);
+    for g in [0, 1, 5] {
+        oracle.execute_op(OpKind::Insert, block(g, seed));
+    }
+    let c = engine(2);
+    let stats2 = Wal::open_and_recover(&c, WalConfig::new(&dir)).unwrap();
+    assert_eq!(stats2.records_replayed, 3, "v1 + v2 segments must both replay");
+    assert_same_state(&c, &oracle, &probes(seed));
     let _ = fs::remove_dir_all(&dir);
 }
 

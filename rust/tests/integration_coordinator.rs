@@ -175,6 +175,90 @@ fn tcp_server_over_multi_pool_engine() {
 }
 
 #[test]
+fn tcp_namespaces_isolate_tenants_and_errors_name_the_token() {
+    // PR-7 e2e: CREATE/DROP/NS over real TCP, concurrent clients each
+    // in their own namespace, the same keys living independently per
+    // tenant, and every ERR reply naming the offending token verbatim.
+    let e = engine(100_000, 2);
+    let server = Arc::new(Server::new(e.clone(), BatcherConfig::default()));
+    let shutdown = server.shutdown_handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || {
+        srv.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+
+    let mut c = Client::connect(addr).unwrap();
+    assert_eq!(c.call("CREATE tenant-a").unwrap(), "OK");
+    assert_eq!(c.call("CREATE tenant-b 4096").unwrap(), "OK");
+
+    // Concurrent clients, one per tenant, SAME key material: the keys
+    // must live independently in every namespace.
+    let shared = workload::distinct_insert_keys(1_500, 404);
+    let mut clients = Vec::new();
+    for ns in ["tenant-a", "tenant-b"] {
+        let keys = shared.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut cl = Client::connect(addr).unwrap();
+            let keys_str: Vec<String> = keys.iter().map(|k| k.to_string()).collect();
+            let reply =
+                cl.call(&format!("NS {ns} INSERT {}", keys_str.join(" "))).unwrap();
+            assert!(reply.starts_with("OK 1500 "), "{ns}: {reply}");
+            let reply = cl.call(&format!("NS {ns} QUERY {}", keys_str.join(" "))).unwrap();
+            assert!(reply.starts_with("OK 1500 "), "{ns}: {reply}");
+        }));
+    }
+    for cl in clients {
+        cl.join().unwrap();
+    }
+
+    // Bare ops still hit the implicit default — which saw none of the
+    // tenant traffic.
+    let (hits, _) = c.op("QUERY", &shared[..64]).unwrap();
+    assert!(hits < 5, "tenant keys bled into the default namespace: {hits}");
+    assert_eq!(c.call("LEN").unwrap(), "OK 3000", "LEN must span all tenants");
+
+    // Deleting in one tenant must not touch the other.
+    let keys_str: Vec<String> = shared[..500].iter().map(|k| k.to_string()).collect();
+    let reply = c.call(&format!("NS tenant-a DELETE {}", keys_str.join(" "))).unwrap();
+    assert!(reply.starts_with("OK "), "{reply}");
+    let reply = c.call(&format!("NS tenant-b QUERY {}", keys_str.join(" "))).unwrap();
+    assert!(reply.starts_with("OK 500 "), "delete bled across tenants: {reply}");
+
+    // Per-namespace STATS rows: both tenants resident with their live
+    // fingerprint counts.
+    let stats = c.call("STATS").unwrap();
+    assert!(stats.contains("ns: default[n="), "default row missing: {stats}");
+    assert!(stats.contains("tenant-a[n="), "tenant-a row missing: {stats}");
+    assert!(stats.contains("tenant-b[n=1500 resident="), "tenant-b row wrong: {stats}");
+
+    // Every ERR names the offending token — the e2e contract, asserted
+    // over the wire (not against internal error types).
+    assert_eq!(c.call("NS ghost QUERY 1").unwrap(), "ERR unknown namespace 'ghost'");
+    assert_eq!(c.call("NS tenant-a fnord 1").unwrap(), "ERR bad op 'fnord'");
+    assert_eq!(c.call("NS tenant-a INSERT 7 banana").unwrap(), "ERR bad key 'banana'");
+    assert_eq!(c.call("DELETE banana").unwrap(), "ERR bad key 'banana'");
+    assert_eq!(c.call("FLY me to the moon").unwrap(), "ERR unknown command 'FLY'");
+    assert_eq!(c.call("CREATE tenant-a").unwrap(), "ERR namespace exists 'tenant-a'");
+    assert_eq!(c.call("CREATE tenant-c -3").unwrap(), "ERR bad capacity '-3'");
+    assert_eq!(c.call("CREATE bad!name").unwrap(), "ERR bad namespace 'bad!name'");
+    assert_eq!(c.call("DROP ghost").unwrap(), "ERR unknown namespace 'ghost'");
+    assert_eq!(c.call("DROP default").unwrap(), "ERR namespace 'default' is pinned");
+
+    // DROP frees the name for reuse, empty.
+    assert_eq!(c.call("DROP tenant-b").unwrap(), "OK");
+    assert_eq!(c.call("NS tenant-b QUERY 1").unwrap(), "ERR unknown namespace 'tenant-b'");
+    assert_eq!(c.call("CREATE tenant-b").unwrap(), "OK");
+    let reply = c.call(&format!("NS tenant-b QUERY {}", keys_str.join(" "))).unwrap();
+    assert!(reply.starts_with("OK 0 "), "recreated tenant must start empty: {reply}");
+
+    assert_eq!(c.call("QUIT").unwrap(), "BYE");
+    shutdown.store(true, Ordering::Release);
+    handle.join().unwrap();
+}
+
+#[test]
 fn batcher_close_and_flush_failure_never_hang_clients() {
     use cuckoo_gpu::coordinator::ServeError;
     let e = engine(10_000, 2);

@@ -1,0 +1,255 @@
+//! Multi-tenant acceptance battery (the PR-7 bar): a seeded,
+//! interleaved schedule across four namespaces must be byte-identical
+//! — positional outcomes and occupancy ledgers — to per-namespace
+//! single-filter oracles that each applied only their tenant's
+//! subsequence. Tenants share one backend, one arena and one epoch
+//! pipeline, so any cross-tenant bleed (a key scattered into the wrong
+//! registry entry, a flush group merged across namespaces) shows up as
+//! a positional diff against an oracle that cannot bleed by
+//! construction.
+//!
+//! The tiering legs: an evicted-then-faulted namespace must answer
+//! queries positionally identical to a never-evicted oracle, and the
+//! LRU budget must page out the coldest idle tenant — never the pinned
+//! default, never the tenant being admitted.
+//!
+//! Runs inside the seeded `stress` CI matrix (the whole test suite is
+//! in the matrix); every assertion is relative to an oracle fed the
+//! same seed-derived keys, so the battery is deterministic under any
+//! `CUCKOO_STRESS_SEED`.
+
+use cuckoo_gpu::coordinator::{Engine, EngineConfig, NamespaceStat, OpKind, DEFAULT_NS};
+use cuckoo_gpu::util::prng::mix64;
+use std::fs;
+use std::path::PathBuf;
+
+fn stress_seed() -> u64 {
+    std::env::var("CUCKOO_STRESS_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+const GROUP: usize = 64;
+
+fn block(g: u64, seed: u64) -> Vec<u64> {
+    (0..GROUP as u64)
+        .map(|i| mix64(i ^ (g << 32) ^ mix64(seed)))
+        .collect()
+}
+
+fn engine(capacity: usize, shards: usize) -> Engine {
+    Engine::new(EngineConfig {
+        capacity,
+        shards,
+        workers: 2,
+        pools: 1,
+        artifacts_dir: None,
+    })
+    .unwrap()
+}
+
+fn spill_dir(name: &str, seed: u64) -> PathBuf {
+    let pid = std::process::id();
+    let dir = std::env::temp_dir().join(format!("cuckoo_tenant_{name}_{pid}_{seed:x}"));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The per-namespace STATS row (the rows are in name order; pick by
+/// name so the tests read like the STATS output does).
+fn row(e: &Engine, name: &str) -> NamespaceStat {
+    e.namespaces()
+        .into_iter()
+        .find(|s| s.name == name)
+        .unwrap_or_else(|| panic!("no STATS row for namespace '{name}'"))
+}
+
+#[test]
+fn interleaved_tenants_match_single_filter_oracles() {
+    let seed = stress_seed();
+    let e = engine(1 << 16, 2);
+    // Three tenants with deliberately different geometry (capacity AND
+    // shard count) next to the pinned default, so group scatter cannot
+    // accidentally agree across namespaces.
+    let shapes: [(&str, usize, usize); 3] = [
+        ("team-a", 1 << 14, 1),
+        ("team-b", 1 << 14, 2),
+        ("team-c.cache", 1 << 15, 3),
+    ];
+    for &(name, cap, shards) in &shapes {
+        e.create_namespace_with(name, cap, shards).unwrap();
+    }
+    // Oracle t: a lone engine with tenant t's exact geometry, fed only
+    // tenant t's subsequence. Same config + same op order ⇒ the shared
+    // deterministic hashing makes even false positives identical.
+    let names: Vec<&str> =
+        std::iter::once(DEFAULT_NS).chain(shapes.iter().map(|&(n, _, _)| n)).collect();
+    let oracles: Vec<Engine> = std::iter::once(engine(1 << 16, 2))
+        .chain(shapes.iter().map(|&(_, c, s)| engine(c, s)))
+        .collect();
+
+    // Seeded interleaved schedule: each step picks a tenant and one of
+    // insert-fresh-group / query / delete-oldest-group, applied to the
+    // shared engine and that tenant's oracle in lockstep.
+    let mut live_groups: Vec<Vec<u64>> = vec![Vec::new(); names.len()];
+    for step in 0..240u64 {
+        let r = mix64(step ^ mix64(seed ^ 0xA5A5_5A5A));
+        let t = (r % names.len() as u64) as usize;
+        let (ns, oracle) = (names[t], &oracles[t]);
+        match (r >> 8) % 3 {
+            0 => {
+                let ks = block(step, seed);
+                let got = e.execute_op_in(ns, OpKind::Insert, ks.clone()).unwrap();
+                let want = oracle.execute_op(OpKind::Insert, ks);
+                assert_eq!(got.outcomes, want.outcomes, "step {step}: insert into '{ns}'");
+                assert_eq!(got.successes, want.successes);
+                live_groups[t].push(step);
+            }
+            1 => {
+                // A present group when the tenant has one, a fresh
+                // absent block otherwise — both must agree positionally
+                // (including shared false positives).
+                let g = live_groups[t].last().copied().unwrap_or(100_000 + step);
+                let ks = block(g, seed);
+                let got = e.execute_op_in(ns, OpKind::Query, ks.clone()).unwrap();
+                let want = oracle.execute_op(OpKind::Query, ks);
+                assert_eq!(got.outcomes, want.outcomes, "step {step}: query in '{ns}'");
+                assert_eq!(got.successes, want.successes);
+            }
+            _ => {
+                if !live_groups[t].is_empty() {
+                    let g = live_groups[t].remove(0);
+                    let ks = block(g, seed);
+                    let got = e.execute_op_in(ns, OpKind::Delete, ks.clone()).unwrap();
+                    let want = oracle.execute_op(OpKind::Delete, ks);
+                    assert_eq!(got.outcomes, want.outcomes, "step {step}: delete in '{ns}'");
+                    assert_eq!(got.successes, want.successes);
+                }
+            }
+        }
+    }
+
+    // Ledgers: per-tenant rows and the engine-wide total must both
+    // match the oracles' ledgers exactly.
+    let mut total = 0u64;
+    for (t, ns) in names.iter().enumerate() {
+        let want = oracles[t].len() as u64;
+        assert_eq!(row(&e, ns).len, want, "ledger diverged for '{ns}'");
+        total += want;
+    }
+    assert_eq!(e.len() as u64, total, "engine-wide ledger diverged");
+
+    // Final positional sweep: every group ever touched, per tenant.
+    for (t, ns) in names.iter().enumerate() {
+        for g in (0..240u64).chain([100_123]) {
+            let ks = block(g, seed);
+            let got = e.execute_op_in(ns, OpKind::Query, ks.clone()).unwrap();
+            let want = oracles[t].execute_op(OpKind::Query, ks);
+            assert_eq!(got.outcomes, want.outcomes, "final sweep: group {g} in '{ns}'");
+        }
+    }
+}
+
+#[test]
+fn evicted_then_faulted_tenant_answers_byte_identically() {
+    let seed = stress_seed();
+    let spill = spill_dir("roundtrip", seed);
+    let e = engine(1 << 16, 2);
+    e.enable_tiering(&spill, u64::MAX).unwrap();
+    e.create_namespace_with("cold", 1 << 14, 2).unwrap();
+    let oracle = engine(1 << 14, 2);
+
+    for g in 0..4u64 {
+        let ks = block(g, seed);
+        e.execute_op_in("cold", OpKind::Insert, ks.clone()).unwrap();
+        oracle.execute_op(OpKind::Insert, ks);
+    }
+    let half = block(0, seed)[..GROUP / 2].to_vec();
+    e.execute_op_in("cold", OpKind::Delete, half.clone()).unwrap();
+    oracle.execute_op(OpKind::Delete, half);
+
+    // Evict: the row flips to non-resident, charges zero resident
+    // bytes, and the frozen ledger still matches the oracle.
+    assert!(e.evict_namespace("cold").unwrap(), "idle tenant must evict");
+    let st = row(&e, "cold");
+    assert!(!st.resident);
+    assert_eq!(st.resident_bytes, 0);
+    assert_eq!(st.len, oracle.len() as u64, "frozen ledger diverged");
+    // The default ns is empty here, so the engine-wide total IS the
+    // frozen tenant's ledger.
+    assert_eq!(e.len(), oracle.len(), "total must count the frozen tenant");
+
+    // First access faults the tenant back in; every probe — present,
+    // half-deleted and absent groups — must be positionally identical
+    // to the never-evicted oracle.
+    for g in 0..6u64 {
+        let ks = block(g, seed);
+        let got = e.execute_op_in("cold", OpKind::Query, ks.clone()).unwrap();
+        let want = oracle.execute_op(OpKind::Query, ks);
+        assert_eq!(got.outcomes, want.outcomes, "post-fault-in: group {g}");
+        assert_eq!(got.successes, want.successes);
+    }
+    let st = row(&e, "cold");
+    assert!(st.resident, "query must fault the tenant in");
+    assert_eq!((st.evictions, st.faults), (1, 1));
+
+    // The roundtrip composes: mutate, evict again (overwriting the
+    // spill images), fault in again — still byte-identical.
+    let ks = block(10, seed);
+    e.execute_op_in("cold", OpKind::Insert, ks.clone()).unwrap();
+    oracle.execute_op(OpKind::Insert, ks);
+    assert!(e.evict_namespace("cold").unwrap());
+    for g in [0u64, 3, 10, 77] {
+        let ks = block(g, seed);
+        let got = e.execute_op_in("cold", OpKind::Query, ks.clone()).unwrap();
+        let want = oracle.execute_op(OpKind::Query, ks);
+        assert_eq!(got.outcomes, want.outcomes, "second roundtrip: group {g}");
+    }
+    assert_eq!((row(&e, "cold").evictions, row(&e, "cold").faults), (2, 2));
+    let _ = fs::remove_dir_all(&spill);
+}
+
+#[test]
+fn lru_budget_pages_out_the_coldest_idle_tenant() {
+    let seed = stress_seed();
+    let spill = spill_dir("budget", seed);
+    let e = engine(1 << 14, 1);
+    e.create_namespace_with("a", 1 << 14, 1).unwrap();
+    e.create_namespace_with("b", 1 << 14, 1).unwrap();
+    let oracle_a = engine(1 << 14, 1);
+    for g in 0..2u64 {
+        let ks = block(g, seed);
+        e.execute_op_in("a", OpKind::Insert, ks.clone()).unwrap();
+        oracle_a.execute_op(OpKind::Insert, ks);
+        e.execute_op_in("b", OpKind::Insert, block(g ^ 0xBB, seed)).unwrap();
+    }
+
+    // Budget = the pinned default plus exactly one tenant: admitting
+    // either tenant must page the other out.
+    let budget = row(&e, DEFAULT_NS).resident_bytes + row(&e, "a").resident_bytes;
+    e.enable_tiering(&spill, budget).unwrap();
+
+    e.execute_op_in("a", OpKind::Query, block(0, seed)).unwrap();
+    let (ra, rb) = (row(&e, "a"), row(&e, "b"));
+    assert!(ra.resident, "the admitted tenant must stay resident");
+    assert!(!rb.resident, "the cold tenant must page out");
+    assert!(row(&e, DEFAULT_NS).resident, "the pinned default never pages out");
+
+    // Touch b: it faults in and a — now the coldest — pages out.
+    e.execute_op_in("b", OpKind::Query, block(0 ^ 0xBB, seed)).unwrap();
+    assert!(!row(&e, "a").resident);
+    assert!(row(&e, "b").resident);
+
+    // And the paging was lossless: a faults back in byte-identical to
+    // an oracle that was never evicted.
+    for g in [0u64, 1, 55] {
+        let ks = block(g, seed);
+        let got = e.execute_op_in("a", OpKind::Query, ks.clone()).unwrap();
+        let want = oracle_a.execute_op(OpKind::Query, ks);
+        assert_eq!(got.outcomes, want.outcomes, "after LRU paging: group {g}");
+    }
+    assert!(row(&e, "a").faults >= 1);
+    assert!(row(&e, "b").evictions >= 1);
+    let _ = fs::remove_dir_all(&spill);
+}

@@ -136,3 +136,40 @@ if [ -n "$stray_appends$stray_writes" ]; then
 fi
 
 echo "WAL surface OK: appends confined to the group-commit entry point"
+
+# ---------------------------------------------------------------------
+# Namespace-lookup confinement (PR 7).
+#
+# Tenant routing has exactly one entry point: NamespaceRegistry::resolve
+# (+ acquire) in coordinator/registry.rs, called only by the engine.
+# Fail CI if a registry lookup/mutation call site appears anywhere else
+# in src/ — the batcher, server and WAL must route through the Engine's
+# namespace API (create_namespace/drop_namespace/execute_async_in/
+# recover_namespace/…) so quota, LRU and inflight accounting cannot be
+# bypassed by a new caller.
+
+REG_FILE=rust/src/coordinator/registry.rs
+if [ ! -f "$REG_FILE" ]; then
+  echo "error: $REG_FILE missing (update the namespace guard in $0)" >&2
+  exit 1
+fi
+if ! grep -q 'fn resolve' "$REG_FILE"; then
+  echo "error: NamespaceRegistry::resolve not found in $REG_FILE — this" >&2
+  echo "guard checks a stale entry point; update it with the registry." >&2
+  exit 1
+fi
+
+NS_PATTERN='registry\.(resolve|acquire|create|remove|exists|evict|capture|stats|total_len|install_pinned|enable_tiering|enforce_budget)[[:space:]]*\('
+stray_ns="$(grep -rnE "$NS_PATTERN" rust/src \
+  | grep -vE '^rust/src/coordinator/(registry|engine)\.rs:' || true)"
+if [ -n "$stray_ns" ]; then
+  echo "error: namespace registry accessed outside registry.rs/engine.rs:" >&2
+  echo "$stray_ns" >&2
+  echo >&2
+  echo "Route tenant lookups through the Engine's namespace API instead" >&2
+  echo "(execute_async_in, create_namespace, drop_namespace, …) so the" >&2
+  echo "quota/LRU/inflight accounting stays on the single resolve path." >&2
+  exit 1
+fi
+
+echo "Namespace surface OK: registry lookups confined to registry.rs + engine.rs"
