@@ -7,7 +7,7 @@ use cuckoo_gpu::coordinator::{
     Batcher, BatcherConfig, Engine, EngineConfig, OpKind, Request, ShardedFilter,
 };
 use cuckoo_gpu::device::{build_backend, Backend, Device};
-use cuckoo_gpu::filter::{hash::xxhash64_u64, CuckooConfig, CuckooFilter, Fp16, Layout};
+use cuckoo_gpu::filter::{hash::xxhash64_u64, CuckooConfig, CuckooFilter, Fp16, GrowthConfig, Layout};
 use cuckoo_gpu::util::Timer;
 use std::collections::VecDeque;
 use std::hint::black_box;
@@ -325,12 +325,98 @@ fn tenant_mix() {
     }
 }
 
+/// Elastic-growth costs (PR 8): (a) raw migration rate of one
+/// `grow_one_level` doubling at increasing table sizes — every stored
+/// tag re-slotted into the fresh generation; (b) query throughput on a
+/// twice-grown filter vs a filter born at the same final geometry —
+/// post-growth serving must not pay a generation tax; (c) the amortised
+/// end-to-end overhead of growing online: the same insert stream into a
+/// tenant born at 1% of its final size (doubling as it fills, the
+/// engine's proactive pre-batch check mirrored here) vs one pre-sized
+/// for the whole stream. Run at the pre/post commits on real hardware
+/// to record before/after numbers (this container has no Rust
+/// toolchain).
+fn growth_migration() {
+    println!("-- growth_migration (online doubling) --");
+    let d = Device::default();
+
+    // (a) Migration rate: fill to ~85% of the boot geometry, then time
+    // the doubling. Reported ops are tags migrated.
+    for cap_pow in [14usize, 17, 20] {
+        let cap = 1usize << cap_pow;
+        let f = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(cap)).unwrap();
+        let keys: Vec<u64> = (0..(cap as u64 * 85 / 100))
+            .map(|i| cuckoo_gpu::util::prng::mix64(i ^ 0x6809))
+            .collect();
+        f.execute_batch(&d, OpKind::Insert, &keys, None);
+        let moved = f.len();
+        bench(&format!("grow_one_level migrate   2^{cap_pow} cap"), moved, || {
+            f.grow_one_level().unwrap();
+        });
+    }
+
+    // (b) Serving parity after growth: identical contents and final
+    // geometry, reached by two doublings vs born pre-sized.
+    let cap = 1usize << 18;
+    let grown = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(cap / 4)).unwrap();
+    let sized = CuckooFilter::<Fp16>::new(CuckooConfig::with_capacity(cap)).unwrap();
+    let keys: Vec<u64> = (0..(cap as u64 / 2))
+        .map(|i| cuckoo_gpu::util::prng::mix64(i ^ 0x6810))
+        .collect();
+    sized.execute_batch(&d, OpKind::Insert, &keys, None);
+    for chunk in keys.chunks(cap / 8) {
+        // Engine-style proactive doubling keeps every chunk landing.
+        while grown.len() + chunk.len() > grown.config().total_slots() * 9 / 10 {
+            grown.grow_one_level().unwrap();
+        }
+        grown.execute_batch(&d, OpKind::Insert, chunk, None);
+    }
+    let iters = 200;
+    for (name, f) in [("twice-grown", &grown), ("pre-sized", &sized)] {
+        bench(&format!("query+ after growth, {name:<11}"), keys.len() * iters, || {
+            for _ in 0..iters {
+                black_box(f.execute_batch(&d, OpKind::Query, &keys, None));
+            }
+        });
+    }
+
+    // (c) Amortised online-growth overhead on the sharded submit path.
+    let shards = 4usize;
+    let stream: Vec<Vec<u64>> = (0..64u64)
+        .map(|g| {
+            (0..(1u64 << 12))
+                .map(|i| cuckoo_gpu::util::prng::mix64(i ^ (g << 24) ^ 0x6811))
+                .collect()
+        })
+        .collect();
+    let total: usize = stream.iter().map(Vec::len).sum();
+    for (name, boot) in [("born at 1%", total / 100), ("pre-sized", total)] {
+        let sf = ShardedFilter::<Fp16>::with_capacity(boot, shards)
+            .unwrap()
+            .with_growth(GrowthConfig::default());
+        bench(&format!("insert stream, {name:<10} x{shards} shards"), total, || {
+            for ks in &stream {
+                if sf.needs_growth(ks.len()) {
+                    sf.grow_where_needed(ks.len());
+                }
+                sf.submit(&d, OpKind::Insert, ks).wait();
+            }
+        });
+        println!(
+            "    (ended at {} slots after {} growth steps)",
+            sf.total_slots(),
+            sf.growth_levels()
+        );
+    }
+}
+
 fn main() {
     launch_overhead();
     scatter_reuse();
     topology_scaling();
     batch_pipeline_overlap();
     tenant_mix();
+    growth_migration();
     let n = 1 << 22;
     let keys: Vec<u64> = (0..n as u64).map(cuckoo_gpu::util::prng::mix64).collect();
 

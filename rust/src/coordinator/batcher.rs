@@ -43,6 +43,19 @@
 //! draining its in-flight tickets — a checkpoint holding that lock may
 //! be waiting on exactly those phase tokens.
 //!
+//! ## Elastic capacity (drain-then-grow)
+//!
+//! Shard growth (see [`super::shard`]'s elastic-capacity docs) executes
+//! under a non-blocking query-phase token inside the engine's
+//! pre-submit check — it can never run while this thread's unresolved
+//! mutation tickets pin the mutation phase. So before submitting a
+//! mutation group to a tenant whose `due` flag is set
+//! ([`Engine::growth_due_in`]), the flusher drains its in-flight deque:
+//! the pipeline empties at exactly the point it would have for a phase
+//! switch, the next submit grows the tenant from an idle epoch, and the
+//! group lands in the resized table. Queries keep flowing throughout —
+//! growth publishes a new generation and never takes a mutation phase.
+//!
 //! Failure handling: clients receive `Result<Response, ServeError>`.
 //! Submissions after shutdown resolve immediately to
 //! [`ServeError::Closed`] instead of hanging, and a panic during a flush
@@ -325,6 +338,21 @@ impl Batcher {
                             ))));
                         }
                         continue;
+                    }
+                    // Elastic capacity at the pipeline boundary: a
+                    // resolved insert group may have left this tenant
+                    // flagged as due for growth. The growth itself runs
+                    // inside the next submit's proactive check, but only
+                    // from an Idle/Query epoch — our own unresolved
+                    // mutation tickets would make its non-blocking
+                    // `try_begin_query` skip. Drain them here (they are
+                    // the tickets we would drain moments later anyway)
+                    // so the submit below can grow before staging and
+                    // the group lands in the resized table.
+                    if mutation && engine.growth_due_in(ns_ref) {
+                        while let Some(f) = inflight.pop_front() {
+                            respond(f, &arena);
+                        }
                     }
                     // Durability: a mutation group's record must be on
                     // disk before its kernel launches. One record per
@@ -662,6 +690,42 @@ mod tests {
         let after = e.arena_stats();
         assert_eq!(after.misses, before.misses, "warmed-up flush cycle allocated scratch");
         assert!(after.hits > before.hits);
+    }
+
+    #[test]
+    fn flusher_grows_tenant_mid_stream_without_rejections() {
+        // Drain-then-grow through the batched path: a tenant sized for
+        // 1k keys takes 10k across many pipelined insert groups. Every
+        // group lands (growth runs at the drained pipeline boundary,
+        // never mid-flight) and interleaved queries keep answering.
+        let e = engine();
+        e.create_namespace("tiny", Some(1_000)).unwrap();
+        let b = Batcher::new(
+            e.clone(),
+            BatcherConfig {
+                max_keys: 1_000,
+                max_delay: Duration::from_millis(20),
+            },
+        );
+        let ks = keys(10_000, 400);
+        for (i, chunk) in ks.chunks(1_000).enumerate() {
+            assert_eq!(
+                b.call(Request::in_ns("tiny", OpKind::Insert, chunk.to_vec()))
+                    .unwrap()
+                    .successes,
+                1_000,
+                "group {i} hit saturation instead of growing"
+            );
+            // Queries serve against whatever geometry is current.
+            let seen = b
+                .call(Request::in_ns("tiny", OpKind::Query, ks[..(i + 1) * 1_000].to_vec()))
+                .unwrap()
+                .successes;
+            assert_eq!(seen, (i + 1) as u64 * 1_000, "lost keys after group {i}");
+        }
+        let tiny = e.namespaces().into_iter().find(|s| s.name == "tiny").unwrap();
+        assert!(tiny.grows > 0, "10x overfill never grew");
+        assert_eq!(e.metrics.too_full(), 0);
     }
 
     #[test]

@@ -38,7 +38,7 @@ use super::request::{OpKind, Request, Response};
 use super::shard::{BatchTicket, ShardedFilter};
 use super::wal::{CheckpointStats, Wal, WalRecord, WalStats};
 use crate::device::{build_backend, Backend};
-use crate::filter::{FilterError, Fp16};
+use crate::filter::{FilterError, Fp16, GrowthConfig};
 use crate::mem::{ArenaStats, BufferArena};
 use crate::runtime::{RuntimeError, RuntimeHandle};
 use crate::util::Timer;
@@ -320,16 +320,35 @@ impl Engine {
         self.create_namespace_with(name, capacity.unwrap_or(self.ns_defaults.0), self.ns_defaults.1)
     }
 
-    /// Fully explicit form of [`Engine::create_namespace`].
+    /// Fully explicit form of [`Engine::create_namespace`] (default
+    /// elastic-growth policy: ON at α = 0.9).
     pub fn create_namespace_with(
         &self,
         name: &str,
         capacity: usize,
         shards: usize,
     ) -> Result<(), NsError> {
+        self.create_namespace_with_growth(name, capacity, shards, GrowthConfig::default())
+    }
+
+    /// Create a namespace with an explicit elastic-growth policy. The
+    /// policy is WAL-logged with the create (durable engines) and
+    /// recorded in checkpoint manifests, so recovery and fault-in
+    /// rebuild the namespace with identical growth behaviour — which is
+    /// what keeps replayed growth decisions bit-identical to the live
+    /// run's. Pass [`GrowthConfig::disabled`] to pin the create-time
+    /// geometry (saturating inserts then fail with `TooFull`).
+    pub fn create_namespace_with_growth(
+        &self,
+        name: &str,
+        capacity: usize,
+        shards: usize,
+        growth: GrowthConfig,
+    ) -> Result<(), NsError> {
         if !valid_ns_name(name) {
             return Err(NsError::BadName(name.to_string()));
         }
+        growth.validate().map_err(|e| NsError::Io(e.to_string()))?;
         match self.wal.get() {
             Some(w) => {
                 // Registry changes happen under the commit lock, so a
@@ -339,11 +358,11 @@ impl Engine {
                 if self.registry.exists(name) {
                     return Err(NsError::Exists(name.to_string()));
                 }
-                c.append_create(name, capacity, shards)
+                c.append_create(name, capacity, shards, growth)
                     .map_err(|e| NsError::Io(e.to_string()))?;
-                self.registry.create(name, capacity, shards).map(|_| ())
+                self.registry.create_with(name, capacity, shards, growth).map(|_| ())
             }
-            None => self.registry.create(name, capacity, shards).map(|_| ()),
+            None => self.registry.create_with(name, capacity, shards, growth).map(|_| ()),
         }
     }
 
@@ -397,6 +416,19 @@ impl Engine {
     // ---- WAL integration surface (pub(crate): wal.rs goes through
     // the engine so namespace resolution stays confined here) --------
 
+    /// True when a resolved insert batch left namespace `ns` over its
+    /// growth threshold and the growth itself has not run yet. A
+    /// peek — no fault-in, no LRU stamp: an evicted tenant reports
+    /// `false` (its next fault-in rebuilds at recorded geometry and the
+    /// next insert re-detects). The batcher polls this between flush
+    /// groups so it can drain its pipeline and let the following
+    /// submit's proactive check grow at an epoch boundary.
+    pub fn growth_due_in(&self, ns: &str) -> bool {
+        self.registry
+            .peek_resident(ns)
+            .is_some_and(|f| f.growth_due())
+    }
+
     /// Capture every namespace for a checkpoint, under a query phase
     /// (mutations quiesced). The caller must hold the WAL commit lock
     /// so the captured registry matches the captured log position.
@@ -413,6 +445,7 @@ impl Engine {
         name: &str,
         capacity: usize,
         shards: usize,
+        growth: GrowthConfig,
         images: &[std::path::PathBuf],
     ) -> std::io::Result<()> {
         let to_io =
@@ -420,7 +453,9 @@ impl Engine {
         let filter = if name == DEFAULT_NS {
             self.default_filter.clone()
         } else {
-            self.registry.create(name, capacity, shards).map_err(to_io)?
+            self.registry
+                .create_with(name, capacity, shards, growth)
+                .map_err(to_io)?
         };
         if filter.num_shards() != images.len() {
             return Err(std::io::Error::new(
@@ -451,9 +486,10 @@ impl Engine {
                 ns,
                 capacity,
                 shards,
+                growth,
             } => {
                 if !self.registry.exists(&ns) {
-                    if let Err(e) = self.registry.create(&ns, capacity, shards) {
+                    if let Err(e) = self.registry.create_with(&ns, capacity, shards, growth) {
                         eprintln!("[cuckoo-gpu] warn: replayed CREATE '{ns}' failed: {e}");
                     }
                 }
@@ -548,14 +584,38 @@ impl Engine {
         self.registry.enforce_budget(&namespace);
         let timer = Timer::new();
         let n = keys.len();
+        // Elastic capacity: if this insert batch would push any shard of
+        // the tenant past its growth threshold, grow NOW, before taking
+        // the batch's phase token. Growth runs under a query-phase token
+        // acquired with `try_begin_query` — it never blocks: if a
+        // mutation phase is in flight (pipelined batcher, sibling
+        // tickets) we skip and rely on the post-resolution `due` flag,
+        // which the batcher drains at the next phase boundary. Queries
+        // keep serving throughout (growth publishes a new generation;
+        // it never takes a mutation phase), and because the check is a
+        // pure function of the shard ledgers and the batch size, WAL
+        // replay of the same insert stream grows at exactly the same
+        // points.
+        if op == OpKind::Insert && filter.needs_growth(n) {
+            if let Some(_grow_phase) = self.epoch.try_begin_query() {
+                let steps = filter.grow_where_needed(n);
+                if steps > 0 {
+                    self.metrics.record_grows(steps as u64);
+                }
+            }
+        }
         let phase = if op.is_mutation() {
             self.epoch.begin_mutation()
         } else {
             self.epoch.begin_query()
         };
-        if op == OpKind::Query && ns == DEFAULT_NS {
+        if op == OpKind::Query && ns == DEFAULT_NS && !filter.has_grown() {
             if let Some(rt) = &self.runtime {
-                // AOT path: snapshot + PJRT batches, synchronous inside
+                // AOT path only while the filter still has its boot
+                // geometry: the compiled artifact bakes in bucket
+                // count/snapshot layout, so a grown filter falls through
+                // to the native path (which reads the live generation).
+                // Snapshot + PJRT batches, synchronous inside
                 // the query phase (no concurrent mutation). This branch
                 // exchanges owned buffers with the runtime (a staged key
                 // copy in, the flag vector out), so it sits OUTSIDE the
@@ -665,11 +725,19 @@ impl ExecTicket<'_> {
             } => {
                 let (successes, outcomes) = batch.wait();
                 metrics.record(op, n, successes, timer.elapsed_ns());
-                Response {
+                let resp = Response {
                     op,
                     outcomes,
                     successes,
+                };
+                // Saturation tally: rejected insert keys (TooFull) feed
+                // the global `too_full=` STATS counter at resolution —
+                // the same point the shard ledger is applied.
+                let rejected = resp.too_full();
+                if rejected > 0 {
+                    metrics.record_too_full(rejected);
                 }
+                resp
             }
         }
     }
@@ -967,5 +1035,87 @@ mod tests {
         let after = e.arena_stats();
         assert_eq!(after.misses, before.misses, "steady-state engine allocated scratch");
         assert!(after.hits > before.hits);
+    }
+
+    #[test]
+    fn engine_grows_tenant_under_live_inserts_without_rejections() {
+        // Elastic capacity through the full engine path: a tenant sized
+        // for 1k keys absorbs 8k because the proactive pre-batch check
+        // doubles its shard ahead of every threshold crossing. No insert
+        // is ever rejected and every key stays queryable afterwards.
+        let e = Engine::new(EngineConfig {
+            capacity: 4_000,
+            shards: 1,
+            workers: 2,
+            pools: 1,
+            artifacts_dir: None,
+        })
+        .unwrap();
+        e.create_namespace_with("tiny", 1_000, 1).unwrap();
+        let slots0 = e
+            .namespaces()
+            .iter()
+            .find(|s| s.name == "tiny")
+            .map(|s| s.slots)
+            .unwrap();
+
+        let ks = keys(8_000, 21);
+        for chunk in ks.chunks(500) {
+            let r = e.execute_op_in("tiny", OpKind::Insert, chunk.to_vec()).unwrap();
+            assert_eq!(r.successes, chunk.len() as u64, "growth lagged an insert batch");
+            assert_eq!(r.too_full(), 0);
+        }
+        let r = e.execute_op_in("tiny", OpKind::Query, ks.clone()).unwrap();
+        assert_eq!(r.successes, 8_000, "a key was lost across growth migrations");
+
+        let stats = e.namespaces();
+        let tiny = stats.iter().find(|s| s.name == "tiny").unwrap();
+        assert!(tiny.grows >= 2, "8x overfill needs several doublings, saw {}", tiny.grows);
+        assert!(tiny.slots > slots0);
+        assert!(8_000.0 <= 0.9 * tiny.slots as f64 + 500.0, "stopped above threshold");
+        let default = stats.iter().find(|s| s.name == "default").unwrap();
+        assert_eq!(default.grows, 0, "growth leaked across tenants");
+        assert!(e.metrics.grows() >= tiny.grows);
+        assert_eq!(e.metrics.too_full(), 0);
+    }
+
+    #[test]
+    fn pinned_tenant_saturates_with_distinct_reply_not_growth() {
+        // GrowthConfig::disabled() pins create-time geometry: overfill
+        // is answered with per-key rejections (Response::too_full) and
+        // the global saturation counter, never a resize.
+        use crate::filter::GrowthConfig;
+        let e = Engine::new(EngineConfig {
+            capacity: 4_000,
+            shards: 1,
+            workers: 2,
+            pools: 1,
+            artifacts_dir: None,
+        })
+        .unwrap();
+        e.create_namespace_with_growth("pinned", 1_000, 1, GrowthConfig::disabled())
+            .unwrap();
+        let slots0 = e
+            .namespaces()
+            .iter()
+            .find(|s| s.name == "pinned")
+            .map(|s| s.slots)
+            .unwrap();
+
+        let ks = keys(3 * slots0, 22);
+        let r = e.execute_op_in("pinned", OpKind::Insert, ks.clone()).unwrap();
+        assert!(r.too_full() > 0, "3x overfill must reject");
+        assert_eq!(r.too_full(), ks.len() as u64 - r.successes);
+        assert!(e.metrics.too_full() >= r.too_full());
+        assert_eq!(e.metrics.grows(), 0);
+
+        let pinned = e
+            .namespaces()
+            .into_iter()
+            .find(|s| s.name == "pinned")
+            .unwrap();
+        assert_eq!(pinned.slots, slots0, "disabled growth resized the table");
+        assert_eq!(pinned.grows, 0);
+        assert!(!e.growth_due_in("pinned"));
     }
 }

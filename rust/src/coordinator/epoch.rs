@@ -71,6 +71,25 @@ impl EpochGuard {
         }
     }
 
+    /// Try to enter a query phase without blocking: succeeds while Idle
+    /// or already in a query phase, returns `None` during a mutation
+    /// phase. The growth path uses this — a thread that may hold
+    /// unresolved mutation tickets must never *block* on the opposite
+    /// phase (see the pipelining contract above), but it can safely
+    /// *opportunistically* take a query token when the guard is free.
+    pub fn try_begin_query(&self) -> Option<PhaseToken<'_>> {
+        let mut st = self.state.lock().unwrap();
+        match *st {
+            Phase::Idle => *st = Phase::Query(1),
+            Phase::Query(n) => *st = Phase::Query(n + 1),
+            Phase::Mutate(_) => return None,
+        }
+        Some(PhaseToken {
+            guard: self,
+            mutation: false,
+        })
+    }
+
     /// Enter a mutation phase (blocks while a query phase is active).
     pub fn begin_mutation(&self) -> PhaseToken<'_> {
         let mut st = self.state.lock().unwrap();
@@ -136,6 +155,20 @@ mod tests {
         let b = g.begin_mutation();
         drop(a);
         drop(b);
+    }
+
+    #[test]
+    fn try_begin_query_never_blocks() {
+        let g = EpochGuard::new();
+        // Idle and query phases admit it; a mutation phase refuses it.
+        let tok = g.try_begin_query().expect("idle guard must admit a query token");
+        let tok2 = g.try_begin_query().expect("query phase is multi-entry");
+        drop(tok);
+        drop(tok2);
+        let m = g.begin_mutation();
+        assert!(g.try_begin_query().is_none(), "mutation phase must refuse");
+        drop(m);
+        assert!(g.try_begin_query().is_some());
     }
 
     #[test]

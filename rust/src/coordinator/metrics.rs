@@ -52,6 +52,14 @@ pub struct Metrics {
     query: OpMetrics,
     delete: OpMetrics,
     batches: AtomicU64,
+    /// Elastic-capacity growth steps executed (one per doubled shard
+    /// level), across every namespace since engine start.
+    grows: AtomicU64,
+    /// Insert keys rejected with `TooFull` — the filter was saturated
+    /// and growth was disabled, capped at `max_levels`, or raced the
+    /// batch. Steady non-zero growth here is the operator's signal to
+    /// raise the cap or pre-size the tenant.
+    too_full: AtomicU64,
 }
 
 impl Metrics {
@@ -79,6 +87,14 @@ impl Metrics {
         self.batches.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_grows(&self, steps: u64) {
+        self.grows.fetch_add(steps, Ordering::Relaxed);
+    }
+
+    pub fn record_too_full(&self, keys: u64) {
+        self.too_full.fetch_add(keys, Ordering::Relaxed);
+    }
+
     pub fn requests(&self, op: OpKind) -> u64 {
         self.op(op).requests.load(Ordering::Relaxed)
     }
@@ -93,6 +109,14 @@ impl Metrics {
 
     pub fn batches(&self) -> u64 {
         self.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn grows(&self) -> u64 {
+        self.grows.load(Ordering::Relaxed)
+    }
+
+    pub fn too_full(&self) -> u64 {
+        self.too_full.load(Ordering::Relaxed)
     }
 
     pub fn latency_p99_bound_ns(&self, op: OpKind) -> u64 {
@@ -146,14 +170,21 @@ impl Metrics {
     }
 
     /// Namespace section of the STATS reply, one bracket per tenant in
-    /// name order: `ns: default[n=4 resident=65536B] cold[n=9 evicted]`.
-    /// Resident namespaces report their in-memory table bytes; evicted
-    /// ones report the count frozen into their spill images.
+    /// name order:
+    /// `ns: default[n=4 resident=65536B slots=4096 grows=0] cold[n=9 evicted]`.
+    /// Resident namespaces report their in-memory table bytes plus
+    /// current geometry — `slots` is live capacity, `grows` the growth
+    /// levels above create-time, so a grown tenant is visible at a
+    /// glance. Evicted ones report the count frozen into their spill
+    /// images (geometry is restored verbatim at fault-in).
     pub fn ns_summary(stats: &[crate::coordinator::registry::NamespaceStat]) -> String {
         let mut line = String::from("ns:");
         for s in stats {
             if s.resident {
-                line.push_str(&format!(" {}[n={} resident={}B]", s.name, s.len, s.resident_bytes));
+                line.push_str(&format!(
+                    " {}[n={} resident={}B slots={} grows={}]",
+                    s.name, s.len, s.resident_bytes, s.slots, s.grows
+                ));
             } else {
                 line.push_str(&format!(" {}[n={} evicted]", s.name, s.len));
             }
@@ -173,11 +204,13 @@ impl Metrics {
             )
         };
         format!(
-            "{} | {} | {} | batches={}",
+            "{} | {} | {} | batches={} grows={} too_full={}",
             line("insert", &self.insert),
             line("query", &self.query),
             line("delete", &self.delete),
-            self.batches.load(Ordering::Relaxed)
+            self.batches.load(Ordering::Relaxed),
+            self.grows.load(Ordering::Relaxed),
+            self.too_full.load(Ordering::Relaxed)
         )
     }
 }
@@ -192,13 +225,19 @@ mod tests {
         m.record(OpKind::Insert, 100, 99, 5_000);
         m.record(OpKind::Query, 50, 25, 2_000);
         m.record_batch();
+        m.record_grows(2);
+        m.record_too_full(1);
         assert_eq!(m.requests(OpKind::Insert), 1);
         assert_eq!(m.keys(OpKind::Insert), 100);
         assert_eq!(m.successes(OpKind::Insert), 99);
         assert_eq!(m.requests(OpKind::Delete), 0);
         assert_eq!(m.batches(), 1);
+        assert_eq!(m.grows(), 2);
+        assert_eq!(m.too_full(), 1);
         let s = m.summary();
         assert!(s.contains("keys=100"));
+        assert!(s.contains("grows=2"));
+        assert!(s.contains("too_full=1"));
         assert!(m.latency_p99_bound_ns(OpKind::Insert) >= 5_000);
     }
 
@@ -246,6 +285,8 @@ mod tests {
                 resident_bytes: 65536,
                 capacity: 1024,
                 shards: 2,
+                slots: 2048,
+                grows: 1,
                 evictions: 0,
                 faults: 0,
             },
@@ -256,13 +297,15 @@ mod tests {
                 resident_bytes: 0,
                 capacity: 512,
                 shards: 1,
+                slots: 512,
+                grows: 0,
                 evictions: 1,
                 faults: 0,
             },
         ];
         assert_eq!(
             Metrics::ns_summary(&stats),
-            "ns: default[n=4 resident=65536B] cold[n=9 evicted]"
+            "ns: default[n=4 resident=65536B slots=2048 grows=1] cold[n=9 evicted]"
         );
         assert_eq!(Metrics::ns_summary(&[]), "ns:");
     }

@@ -44,7 +44,7 @@
 
 use super::shard::ShardedFilter;
 use crate::filter::persist::{read_image, save_image, write_atomic};
-use crate::filter::Fp16;
+use crate::filter::{Fp16, GrowthConfig};
 use crate::mem::BufferArena;
 use std::collections::BTreeMap;
 use std::fs::{self, File};
@@ -109,10 +109,18 @@ pub struct NamespaceStat {
     /// into its spill images).
     pub len: u64,
     pub resident: bool,
-    /// Table bytes held in memory; 0 while evicted.
+    /// Table bytes held in memory (retired growth generations
+    /// included); 0 while evicted. Recomputed live from the filter, so
+    /// elastic growth is reflected immediately.
     pub resident_bytes: u64,
     pub capacity: usize,
     pub shards: usize,
+    /// Total slots at the *current* (possibly grown) geometry.
+    pub slots: usize,
+    /// Growth levels above the create-time geometry, summed over
+    /// shards. Derived from geometry, so it survives spill/fault-in
+    /// and crash recovery.
+    pub grows: u64,
     pub evictions: u64,
     pub faults: u64,
 }
@@ -120,20 +128,29 @@ pub struct NamespaceStat {
 /// Where a namespace's state lives right now.
 enum Residency {
     Resident(Arc<ShardedFilter<Fp16>>),
-    /// Paged out to spill images; `len` is the occupancy frozen into
-    /// them (reported by STATS/LEN without faulting the tenant in).
-    Evicted { len: u64 },
+    /// Paged out to spill images; `len`/`slots`/`levels` are the
+    /// occupancy and (post-growth) geometry frozen into them, reported
+    /// by STATS/LEN without faulting the tenant in.
+    Evicted { len: u64, slots: usize, levels: u64 },
 }
 
 /// One tenant: a filter geometry plus residency state and accounting.
+///
+/// There is deliberately **no** cached resident-byte figure here: a
+/// filter's footprint changes when it grows (PR 8), so the tiering
+/// budget and STATS always recompute from the live filter
+/// ([`ShardedFilter::table_bytes`], retired generations included) —
+/// growth re-accounts itself.
 pub(crate) struct Namespace {
     name: String,
     capacity: usize,
     shards: usize,
+    /// Elastic-growth policy the namespace was created with; fault-in
+    /// rebuilds the filter with the same policy so an evicted tenant
+    /// keeps growing (or staying fixed) exactly as configured.
+    growth: GrowthConfig,
     /// Pinned namespaces (the default) are never evicted or dropped.
     pinned: bool,
-    /// Table bytes when resident — fixed by the geometry at create.
-    table_bytes: u64,
     state: Mutex<Residency>,
     /// Unresolved engine tickets on this namespace. Incremented under
     /// the `state` lock (see the eviction-safety note in the module
@@ -171,6 +188,10 @@ pub(crate) struct NsImage {
     pub name: String,
     pub capacity: usize,
     pub shards: usize,
+    /// The namespace's growth policy, carried in the checkpoint
+    /// manifest so recovery recreates the namespace with it (the
+    /// post-growth *geometry* is in the per-shard images themselves).
+    pub growth: GrowthConfig,
     pub count: u64,
     pub images: Vec<(crate::filter::CuckooConfig, u64, Vec<u64>)>,
 }
@@ -233,15 +254,12 @@ impl NamespaceRegistry {
         pinned: bool,
         filter: Arc<ShardedFilter<Fp16>>,
     ) -> Namespace {
-        let table_bytes: u64 = (0..filter.num_shards())
-            .map(|i| filter.shard(i).table().num_words() as u64 * 8)
-            .sum();
         Namespace {
             name: name.to_string(),
             capacity,
             shards: filter.num_shards(),
+            growth: *filter.growth(),
             pinned,
-            table_bytes,
             state: Mutex::new(Residency::Resident(filter)),
             inflight: AtomicU64::new(0),
             last_access: AtomicU64::new(0),
@@ -250,17 +268,32 @@ impl NamespaceRegistry {
         }
     }
 
-    /// Create a namespace with its own filter geometry, sharing the
-    /// registry's arena. Errors if the name is invalid or taken.
+    /// Create a namespace with its own filter geometry and the default
+    /// elastic-growth policy, sharing the registry's arena. Errors if
+    /// the name is invalid or taken.
     pub(crate) fn create(
         &self,
         name: &str,
         capacity: usize,
         shards: usize,
     ) -> Result<Arc<ShardedFilter<Fp16>>, NsError> {
+        self.create_with(name, capacity, shards, GrowthConfig::default())
+    }
+
+    /// Fully explicit create: a per-namespace growth policy rides along
+    /// (recorded on the namespace so fault-in and recovery rebuild the
+    /// filter with the same behaviour).
+    pub(crate) fn create_with(
+        &self,
+        name: &str,
+        capacity: usize,
+        shards: usize,
+        growth: GrowthConfig,
+    ) -> Result<Arc<ShardedFilter<Fp16>>, NsError> {
         if !valid_ns_name(name) {
             return Err(NsError::BadName(name.to_string()));
         }
+        growth.validate().map_err(|e| NsError::Io(e.to_string()))?;
         let mut map = self.map.lock().unwrap();
         if map.contains_key(name) {
             return Err(NsError::Exists(name.to_string()));
@@ -268,11 +301,25 @@ impl NamespaceRegistry {
         let filter = Arc::new(
             ShardedFilter::with_capacity(capacity, shards)
                 .map_err(|e| NsError::Io(e.to_string()))?
-                .with_arena(self.arena.clone()),
+                .with_arena(self.arena.clone())
+                .with_growth(growth),
         );
         let ns = Arc::new(Self::namespace(name, capacity, false, filter.clone()));
         map.insert(name.to_string(), ns);
         Ok(filter)
+    }
+
+    /// Peek a namespace's filter without faulting it in, stamping the
+    /// LRU clock or taking an inflight guard: `None` if unknown or
+    /// evicted. The batcher's drain-then-grow poll goes through this —
+    /// a growth check must never page a cold tenant back in.
+    pub(crate) fn peek_resident(&self, name: &str) -> Option<Arc<ShardedFilter<Fp16>>> {
+        let ns = self.map.lock().unwrap().get(name).cloned()?;
+        let st = ns.state.lock().unwrap();
+        match &*st {
+            Residency::Resident(f) => Some(f.clone()),
+            Residency::Evicted { .. } => None,
+        }
     }
 
     pub(crate) fn exists(&self, name: &str) -> bool {
@@ -326,8 +373,12 @@ impl NamespaceRegistry {
         let filter = Arc::new(
             ShardedFilter::with_capacity(ns.capacity, ns.shards)
                 .map_err(|e| bad(e.to_string()))?
-                .with_arena(self.arena.clone()),
+                .with_arena(self.arena.clone())
+                .with_growth(ns.growth),
         );
+        // A grown tenant's spill images carry their growth level;
+        // `load_into` installs the image's generation over the
+        // create-time base geometry (see the filter's persist layer).
         for i in 0..filter.num_shards() {
             let path = spill_path(dir, &ns.name, i);
             filter.shard(i).load_into(BufReader::new(File::open(&path)?))?;
@@ -367,11 +418,14 @@ impl NamespaceRegistry {
             let mut total = 0u64;
             let mut lru: Option<(Arc<Namespace>, u64)> = None;
             for ns in &entries {
-                let resident = matches!(&*ns.state.lock().unwrap(), Residency::Resident(_));
-                if !resident {
-                    continue;
-                }
-                total += ns.table_bytes;
+                // Live footprint, not a create-time figure: a grown
+                // tenant charges its current tables (retired
+                // generations included) against the budget.
+                let resident_bytes = match &*ns.state.lock().unwrap() {
+                    Residency::Resident(f) => f.table_bytes(),
+                    Residency::Evicted { .. } => continue,
+                };
+                total += resident_bytes;
                 if ns.pinned
                     || std::ptr::eq(ns.as_ref(), keep)
                     || ns.inflight.load(Ordering::Acquire) != 0
@@ -422,7 +476,11 @@ impl NamespaceRegistry {
             })?;
         }
         let len = filter.len() as u64;
-        *st = Residency::Evicted { len };
+        *st = Residency::Evicted {
+            len,
+            slots: filter.total_slots(),
+            levels: filter.growth_levels(),
+        };
         ns.evictions.fetch_add(1, Ordering::Relaxed);
         Ok(true)
     }
@@ -492,7 +550,7 @@ impl NamespaceRegistry {
             .iter()
             .map(|ns| match &*ns.state.lock().unwrap() {
                 Residency::Resident(f) => f.len() as u64,
-                Residency::Evicted { len } => *len,
+                Residency::Evicted { len, .. } => *len,
             })
             .sum()
     }
@@ -503,17 +561,28 @@ impl NamespaceRegistry {
         entries
             .iter()
             .map(|ns| {
-                let (len, resident) = match &*ns.state.lock().unwrap() {
-                    Residency::Resident(f) => (f.len() as u64, true),
-                    Residency::Evicted { len } => (*len, false),
-                };
+                let (len, resident, resident_bytes, slots, grows) =
+                    match &*ns.state.lock().unwrap() {
+                        Residency::Resident(f) => (
+                            f.len() as u64,
+                            true,
+                            f.table_bytes(),
+                            f.total_slots(),
+                            f.growth_levels(),
+                        ),
+                        Residency::Evicted { len, slots, levels } => {
+                            (*len, false, 0, *slots, *levels)
+                        }
+                    };
                 NamespaceStat {
                     name: ns.name.clone(),
                     len,
                     resident,
-                    resident_bytes: if resident { ns.table_bytes } else { 0 },
+                    resident_bytes,
                     capacity: ns.capacity,
                     shards: ns.shards,
+                    slots,
+                    grows,
                     evictions: ns.evictions.load(Ordering::Relaxed),
                     faults: ns.faults.load(Ordering::Relaxed),
                 }
@@ -544,7 +613,7 @@ impl NamespaceRegistry {
                             .collect();
                         (f.len() as u64, images)
                     }
-                    Residency::Evicted { len } => {
+                    Residency::Evicted { len, .. } => {
                         let dir = tier
                             .as_ref()
                             .map(|t| t.spill_dir.as_path())
@@ -562,6 +631,7 @@ impl NamespaceRegistry {
                     name: ns.name.clone(),
                     capacity: ns.capacity,
                     shards: ns.shards,
+                    growth: ns.growth,
                     count,
                     images,
                 })

@@ -45,6 +45,23 @@ pub struct Response {
     pub successes: u64,
 }
 
+impl Response {
+    /// Insert keys this response rejected because the tenant was
+    /// saturated. An insert outcome is `false` exactly when the filter
+    /// exhausted its eviction budget (`TooFull`) — growth disabled,
+    /// capped at `max_levels`, or racing the batch — so the count is
+    /// derived, not stored: `outcomes` stays the single source of truth
+    /// and every existing positional-outcome test is untouched. Zero
+    /// for queries and deletes (a `false` there is an absent key, not
+    /// saturation).
+    pub fn too_full(&self) -> u64 {
+        match self.op {
+            OpKind::Insert => self.outcomes.len() as u64 - self.successes,
+            _ => 0,
+        }
+    }
+}
+
 /// A serving-layer failure delivered to a client *instead of* a
 /// [`Response`] — the batcher never leaves a client hanging on a
 /// channel nobody will answer.
@@ -71,6 +88,28 @@ impl std::error::Error for ServeError {}
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn too_full_is_derived_from_insert_outcomes_only() {
+        let rejected = Response {
+            op: OpKind::Insert,
+            outcomes: vec![true, false, true, false],
+            successes: 2,
+        };
+        assert_eq!(rejected.too_full(), 2);
+        let misses = Response {
+            op: OpKind::Query,
+            outcomes: vec![false, false],
+            successes: 0,
+        };
+        assert_eq!(misses.too_full(), 0, "query misses are not saturation");
+        let absent = Response {
+            op: OpKind::Delete,
+            outcomes: vec![false],
+            successes: 0,
+        };
+        assert_eq!(absent.too_full(), 0);
+    }
 
     #[test]
     fn op_kind_reexport_is_the_shared_enum() {

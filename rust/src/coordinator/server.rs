@@ -3,6 +3,8 @@
 //! Protocol (one request per line, space-separated):
 //! ```text
 //! INSERT <k1> <k2> ...      ->  OK <successes> <outcome bits 0/1...>
+//!                               (+ ` too_full=<n>` iff n keys were
+//!                                rejected by a saturated tenant)
 //! QUERY  <k1> <k2> ...      ->  OK <hits> <bits>
 //! DELETE <k1> <k2> ...      ->  OK <removed> <bits>
 //! NS <ns> <op> <k1> ...     ->  same, in tenant namespace <ns>
@@ -115,6 +117,12 @@ fn parse_keys<'a>(parts: impl Iterator<Item = &'a str>) -> Result<Vec<u64>, Stri
 }
 
 /// Run one op request through the batcher and format the wire reply.
+/// A saturated insert (rejected keys, i.e. the tenant was full and not
+/// allowed to grow) is still `OK` — the per-key bits are authoritative —
+/// but gains a distinct ` too_full=<n>` suffix so clients can tell
+/// "filter said no" from "key absent" without re-deriving it from the
+/// bits. Clients that split off only `<successes> <bits>` (like
+/// [`Client::op`]) ignore the suffix unchanged.
 fn run_op(batcher: &Batcher, req: Request) -> String {
     match batcher.call(req) {
         Ok(resp) => {
@@ -123,7 +131,12 @@ fn run_op(batcher: &Batcher, req: Request) -> String {
                 .iter()
                 .map(|&b| if b { '1' } else { '0' })
                 .collect();
-            format!("OK {} {}", resp.successes, bits)
+            let rejected = resp.too_full();
+            if rejected > 0 {
+                format!("OK {} {} too_full={}", resp.successes, bits, rejected)
+            } else {
+                format!("OK {} {}", resp.successes, bits)
+            }
         }
         Err(e) => format!("ERR {e}"),
     }
@@ -307,6 +320,10 @@ mod tests {
             })
             .unwrap(),
         );
+        // Growth-pinned micro-tenant for the saturation-reply leg below.
+        engine
+            .create_namespace_with_growth("full", 64, 1, crate::filter::GrowthConfig::disabled())
+            .unwrap();
         let server = Arc::new(Server::new(engine, BatcherConfig::default()));
         let shutdown = server.shutdown_handle();
         let (addr_tx, addr_rx) = std::sync::mpsc::channel();
@@ -376,6 +393,18 @@ mod tests {
         assert_eq!(c.call("DROP t9").unwrap(), "OK");
         assert_eq!(c.call("DROP t9").unwrap(), "ERR unknown namespace 't9'");
         assert_eq!(c.call("DROP default").unwrap(), "ERR namespace 'default' is pinned");
+
+        // Saturation is distinct on the wire: the growth-pinned tenant
+        // rejects overfill with a ` too_full=` suffix (still OK — the
+        // per-key bits stay authoritative) and the counters reach STATS.
+        let keys_line: String = (1..=400u64).map(|k| format!(" {k}")).collect();
+        let reply = c.call(&format!("NS full INSERT{keys_line}")).unwrap();
+        assert!(reply.starts_with("OK "), "saturated insert not OK: {reply}");
+        assert!(reply.contains(" too_full="), "saturated insert lacked suffix: {reply}");
+        let stats = c.call("STATS").unwrap();
+        assert!(stats.contains("too_full="), "saturation counter missing: {stats}");
+        assert!(stats.contains("grows="), "growth counter missing: {stats}");
+        assert!(stats.contains("slots="), "per-ns geometry missing: {stats}");
 
         assert_eq!(c.call("QUIT").unwrap(), "BYE");
 

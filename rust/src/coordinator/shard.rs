@@ -89,13 +89,13 @@
 
 use crate::device::{Backend, LaunchToken, SendMutPtr, WarpCtx};
 use crate::filter::batch::op_fn;
-use crate::filter::{CuckooConfig, CuckooFilter, FilterError, Layout};
+use crate::filter::{CuckooConfig, CuckooFilter, FilterError, GrowthConfig, Layout};
 use crate::mem::{BufferArena, Lease};
 use crate::op::OpKind;
 use crate::util::prng::mix64;
 use std::cell::UnsafeCell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Keys per fused launch — the `u32` permutation-index bound. Larger
@@ -117,6 +117,49 @@ pub struct ShardedFilter<L: Layout> {
     /// The three per-key primitives, wrapped once at construction so
     /// `submit` clones an `Arc` instead of allocating one per call.
     ops: [OpFn<L>; 3],
+    /// Elastic-capacity policy plus its trigger state (PR 8), `Arc`ed so
+    /// in-flight tickets — whose resolution may outlive the submitting
+    /// frame — can flag growth where the ledger is applied.
+    growth: Arc<GrowthState>,
+}
+
+/// Growth policy + trigger state shared between a sharded filter and its
+/// in-flight [`BatchTicket`]s.
+///
+/// Growth is split into **detection** and **execution**. Detection is
+/// folded into ticket resolution: right after a mutation batch's ledger
+/// is applied, the resolving thread checks whether any shard crossed the
+/// load threshold and, if so, sets `due` — it never migrates there,
+/// because resolution can run while sibling tickets are still in flight
+/// and the engine holds the mutation phase. Execution happens at an
+/// epoch-idle point via [`ShardedFilter::grow_where_needed`], driven by
+/// the engine (proactively, before admitting an insert batch) and the
+/// batcher (drain-then-grow when `due` is observed between groups).
+struct GrowthState {
+    cfg: GrowthConfig,
+    /// Set at ticket resolution when an applied insert ledger left a
+    /// shard over the threshold; cleared by `grow_where_needed`.
+    due: AtomicBool,
+    /// Completed growth events (level steps) across all shards.
+    grows: AtomicU64,
+}
+
+impl GrowthState {
+    fn new(cfg: GrowthConfig) -> Self {
+        Self {
+            cfg,
+            due: AtomicBool::new(false),
+            grows: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Is a shard carrying `len` keys over the growth threshold of its
+/// current geometry? Strictly greater: a shard sitting exactly at
+/// `threshold * slots` still admits, so `threshold: 1.0` (the disabled
+/// sentinel) can never fire.
+fn over_threshold(cfg: &GrowthConfig, len: usize, slots: usize) -> bool {
+    len as f64 > cfg.threshold * slots as f64
 }
 
 /// Which occupancy-ledger update a batch op owes its shards on
@@ -300,6 +343,7 @@ impl<L: Layout> ShardedFilter<L> {
             route_seed: 0xD15EA5E,
             arena: Arc::new(BufferArena::new()),
             ops: Self::cached_ops(),
+            growth: Arc::new(GrowthState::new(GrowthConfig::default())),
         })
     }
 
@@ -311,6 +355,7 @@ impl<L: Layout> ShardedFilter<L> {
             route_seed: 0xD15EA5E,
             arena: Arc::new(BufferArena::new()),
             ops: Self::cached_ops(),
+            growth: Arc::new(GrowthState::new(GrowthConfig::default())),
         }
     }
 
@@ -325,6 +370,116 @@ impl<L: Layout> ShardedFilter<L> {
     /// The arena `submit` leases its batch scratch from.
     pub fn arena(&self) -> &Arc<BufferArena> {
         &self.arena
+    }
+
+    /// Replace the growth policy (builder form). The default is elastic
+    /// growth ON at α = 0.9; pass [`GrowthConfig::disabled`] to pin the
+    /// create-time geometry (saturating inserts then fail with
+    /// `TooFull`, the pre-PR-8 behaviour).
+    pub fn with_growth(mut self, growth: GrowthConfig) -> Self {
+        self.growth = Arc::new(GrowthState::new(growth));
+        self
+    }
+
+    /// The filter's growth policy.
+    pub fn growth(&self) -> &GrowthConfig {
+        &self.growth.cfg
+    }
+
+    /// Completed growth events (level steps) across all shards.
+    pub fn grows(&self) -> u64 {
+        self.growth.grows.load(Ordering::Relaxed)
+    }
+
+    /// Did a resolved mutation ticket leave a shard over the load
+    /// threshold? Sticky until the next [`Self::grow_where_needed`];
+    /// the batcher polls this (through the engine) to drain its
+    /// pipeline and let growth run at an epoch-idle point.
+    pub fn growth_due(&self) -> bool {
+        self.growth.due.load(Ordering::Relaxed)
+    }
+
+    /// Has any shard grown past its create-time geometry?
+    pub fn has_grown(&self) -> bool {
+        self.shards.iter().any(|s| s.has_grown())
+    }
+
+    /// Growth levels above the base geometry, summed over shards.
+    /// Unlike [`Self::grows`] (events since construction) this is
+    /// derived from geometry, so it survives spill/fault-in and crash
+    /// recovery — STATS reports it per namespace.
+    pub fn growth_levels(&self) -> u64 {
+        self.shards.iter().map(|s| s.growth_level() as u64).sum()
+    }
+
+    /// Total slots across all shards at their *current* geometry.
+    pub fn total_slots(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.config().total_slots())
+            .sum()
+    }
+
+    /// Resident table bytes across all shards, retired generations
+    /// included (they stay mapped until the filter drops — see the
+    /// filter core). The registry re-accounts tiering budgets from this
+    /// after growth.
+    pub fn table_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.resident_bytes() as u64).sum()
+    }
+
+    /// Would admitting `extra` more keys leave some shard over the
+    /// growth threshold with level headroom to fix it? Deliberately
+    /// conservative — it charges the whole batch to every shard rather
+    /// than pre-routing it — so the answer is a pure function of
+    /// (ledgers, batch size) and live execution and WAL replay agree on
+    /// every growth point.
+    pub fn needs_growth(&self, extra: usize) -> bool {
+        let cfg = &self.growth.cfg;
+        cfg.enabled()
+            && self.shards.iter().any(|s| {
+                s.growth_level() < cfg.max_levels
+                    && over_threshold(cfg, s.len() + extra, s.config().total_slots())
+            })
+    }
+
+    /// Epoch-guarded growth execution (PR 8): bring every shard that
+    /// cannot absorb `extra` more keys within the load threshold up,
+    /// one level at a time, until it can or the per-namespace level cap
+    /// is reached. Returns the number of completed level steps.
+    ///
+    /// Caller contract: hold a **query-phase epoch token** (the engine
+    /// uses `try_begin_query`) so no mutation can run concurrently —
+    /// migration snapshots the retired generation's words and republishes
+    /// them in the grown geometry, so a racing insert could be lost.
+    /// Concurrent *queries* are safe: they hold a reference to whichever
+    /// generation was active when they started, and migration preserves
+    /// membership on both sides of the flip.
+    ///
+    /// A shard whose fingerprint width is exhausted stops growing and
+    /// saturates exactly as a growth-disabled filter would; the error is
+    /// deliberately swallowed (inserts then report `TooFull`).
+    pub fn grow_where_needed(&self, extra: usize) -> usize {
+        let cfg = &self.growth.cfg;
+        if !cfg.enabled() {
+            return 0;
+        }
+        let mut steps = 0usize;
+        for s in self.shards.iter() {
+            while s.growth_level() < cfg.max_levels
+                && over_threshold(cfg, s.len() + extra, s.config().total_slots())
+            {
+                if s.grow_one_level().is_err() {
+                    break;
+                }
+                steps += 1;
+            }
+        }
+        if steps > 0 {
+            self.growth.grows.fetch_add(steps as u64, Ordering::Relaxed);
+        }
+        self.growth.due.store(false, Ordering::Relaxed);
+        steps
     }
 
     #[inline]
@@ -470,6 +625,7 @@ impl<L: Layout> ShardedFilter<L> {
                 shards: self.shards.clone(),
                 arena: self.arena.clone(),
                 ledger,
+                growth: self.growth.clone(),
             }),
         }
     }
@@ -719,6 +875,9 @@ struct TicketState<L: Layout> {
     shards: Arc<Vec<CuckooFilter<L>>>,
     arena: Arc<BufferArena>,
     ledger: LedgerOp,
+    /// The filter's shared growth trigger; resolution flags it after
+    /// applying an insert ledger that crossed the threshold.
+    growth: Arc<GrowthState>,
 }
 
 impl<L: Layout> TicketState<L> {
@@ -769,6 +928,24 @@ impl<L: Layout> TicketState<L> {
             // the out vector on the drop-without-wait path) return to
             // the arena here, after the drain: recycling is tied to
             // ticket resolution by construction.
+        }
+        // Growth detection, folded into the point where the ledger is
+        // applied (PR 8): if this insert batch left a shard over the
+        // load threshold with level headroom remaining, flag the filter.
+        // Detection only — migrating here could deadlock, since
+        // resolution may run while sibling tickets are in flight and the
+        // mutation phase is held. Only insert ledgers are inspected, so
+        // growth points stay a pure function of the WAL-replayable op
+        // stream (queries are not logged and deletes never raise load).
+        if matches!(self.ledger, LedgerOp::Add) && self.growth.cfg.enabled() {
+            let cfg = &self.growth.cfg;
+            let crossed = shards.iter().any(|s| {
+                s.growth_level() < cfg.max_levels
+                    && over_threshold(cfg, s.len(), s.config().total_slots())
+            });
+            if crossed {
+                self.growth.due.store(true, Ordering::Relaxed);
+            }
         }
         (total, out)
     }
@@ -1236,5 +1413,85 @@ mod tests {
         assert_eq!(ok, 20_000);
         assert!(ins.iter().all(|&b| b));
         assert_eq!(s.len(), 20_000);
+    }
+
+    #[test]
+    fn ticket_resolution_flags_growth_and_grow_where_needed_clears_it() {
+        let device = Device::with_workers(2);
+        // Tiny shards so a modest batch crosses α = 0.9: 2 shards of
+        // 64 buckets × 16 slots = 1024 slots each.
+        let s = ShardedFilter::<Fp16>::with_capacity(1800, 2).unwrap();
+        let slots = s.total_slots();
+        assert!(s.growth().enabled(), "growth must default ON");
+        assert!(!s.growth_due());
+
+        // Fill to ~95% of total slots through the batch path; resolution
+        // applies the ledger and must notice the crossing.
+        let ks = keys(slots * 95 / 100, 71);
+        let (ok, _) = s.submit(&device, OpKind::Insert, &ks).wait();
+        assert_eq!(ok as usize, ks.len());
+        assert!(s.growth_due(), "insert ledger over α must set the due flag");
+        assert!(s.needs_growth(0));
+
+        // Queries never trigger growth bookkeeping.
+        let before = s.grows();
+        let _ = s.submit(&device, OpKind::Query, &ks).wait();
+        assert_eq!(s.grows(), before);
+
+        // Execution doubles the overloaded shards and clears the flag.
+        let bytes_before = s.table_bytes();
+        let steps = s.grow_where_needed(0);
+        assert!(steps >= 1, "both shards sat over α; steps = {steps}");
+        assert_eq!(s.grows(), steps as u64);
+        assert!(!s.growth_due());
+        assert!(!s.needs_growth(0));
+        assert!(s.has_grown());
+        assert!(s.total_slots() > slots);
+        assert!(s.table_bytes() > bytes_before, "retired gens stay resident");
+
+        // Every key inserted before growth is still served afterwards.
+        let (hits, got) = s.submit(&device, OpKind::Query, &ks).wait();
+        assert_eq!(hits as usize, ks.len());
+        assert!(got.iter().all(|&b| b));
+        assert_eq!(s.len(), ks.len());
+    }
+
+    #[test]
+    fn disabled_growth_never_flags_and_never_grows() {
+        let device = Device::with_workers(2);
+        let s = ShardedFilter::<Fp16>::with_capacity(900, 1)
+            .unwrap()
+            .with_growth(GrowthConfig::disabled());
+        let slots = s.total_slots();
+        let ks = keys(slots * 95 / 100, 72);
+        let (ok, _) = s.submit(&device, OpKind::Insert, &ks).wait();
+        assert_eq!(ok as usize, ks.len());
+        assert!(!s.growth_due());
+        assert!(!s.needs_growth(slots));
+        assert_eq!(s.grow_where_needed(slots), 0);
+        assert!(!s.has_grown());
+    }
+
+    #[test]
+    fn grow_where_needed_is_deterministic_and_idempotent() {
+        // Two filters built identically and driven identically must make
+        // identical growth decisions (the replay-determinism contract).
+        let build = || {
+            let s = ShardedFilter::<Fp16>::with_capacity(1000, 1).unwrap();
+            for k in keys(s.total_slots() * 92 / 100, 73) {
+                s.insert(k).unwrap();
+            }
+            s.grow_where_needed(0);
+            s
+        };
+        let a = build();
+        let b = build();
+        assert_eq!(a.grows(), b.grows());
+        assert!(a.grows() >= 1);
+        assert_eq!(a.shard(0).growth_level(), b.shard(0).growth_level());
+        assert_eq!(a.total_slots(), b.total_slots());
+        // Idempotent: nothing left over threshold, so a second call is a
+        // no-op.
+        assert_eq!(a.grow_where_needed(0), 0);
     }
 }

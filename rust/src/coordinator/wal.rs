@@ -16,7 +16,11 @@
 //! ```
 //! `kind` is the mutation op byte (0 insert, 2 delete) for a flush
 //! group, or a namespace-lifecycle record: 3 CREATE (`keys` =
-//! `[capacity, shards]`), 4 DROP (no keys). `ns` is the tenant
+//! `[capacity, shards]`, or `[capacity, shards, α_bits, max_levels]`
+//! when the namespace carries a non-default elastic-growth policy —
+//! `α_bits` is the raw `f64::to_bits` of the load threshold, so replay
+//! reconstructs the policy *exactly* and makes identical growth
+//! decisions), 4 DROP (no keys). `ns` is the tenant
 //! namespace the record applies to. Version-1 segments (payload
 //! `op u8 | pad u8×3 | nkeys u32 | keys`, no namespace field) still
 //! replay — every v1 record applies to the implicit `default`
@@ -82,7 +86,13 @@
 //! `Engine::replay_record`: groups re-execute in their namespace
 //! (skipped if a later DROP already removed it), CREATE/DROP rebuild
 //! namespaces born or dropped mid-log, and [`RecoveryStats`] reports
-//! what happened. v1 manifests (`CKWM 1`) restore the single
+//! what happened. Replay is deterministic even at (and past)
+//! saturation: growth points are pure functions of the logged insert
+//! stream (the engine grows before admitting an insert batch that
+//! would cross the threshold, never on queries, which are not
+//! logged), and the filter core derives eviction randomness from the
+//! key — so a replayed group reproduces the live run's table
+//! positions, including which victim a `TooFull` insert displaced. v1 manifests (`CKWM 1`) restore the single
 //! `default` namespace from the old image names. A torn *final*
 //! record (crash mid-append) is truncated away, not fatal; corruption
 //! anywhere earlier is an error. Replay never re-logs (only the
@@ -102,7 +112,7 @@ use super::engine::Engine;
 use super::registry::DEFAULT_NS;
 use super::request::OpKind;
 use crate::filter::persist::{save_image, sync_dir, write_atomic};
-use crate::filter::Fp16;
+use crate::filter::{Fp16, GrowthConfig};
 use crate::mem::BufferArena;
 use crate::util::crc::crc32;
 use std::collections::BTreeMap;
@@ -313,6 +323,7 @@ pub(crate) enum WalRecord {
         ns: String,
         capacity: usize,
         shards: usize,
+        growth: GrowthConfig,
     },
     /// `DROP <ns>`: the namespace died at this log position.
     Drop { ns: String },
@@ -457,9 +468,24 @@ impl Wal {
             namespaces.len()
         );
         for ns in &namespaces {
+            // Post-growth geometry rides in the row: `slots=` is the
+            // captured (possibly grown) total, `growth=` the policy as
+            // exact f64 bits + level cap. Both are optional key=value
+            // tokens — rows written by pre-growth binaries parse fine.
+            let slots: usize = ns
+                .images
+                .iter()
+                .map(|(cfg, _, _)| cfg.total_slots())
+                .sum();
             body.push_str(&format!(
-                "ns {} {} {} {}\n",
-                ns.name, ns.capacity, ns.shards, ns.count
+                "ns {} {} {} {} growth={:#018x}:{} slots={}\n",
+                ns.name,
+                ns.capacity,
+                ns.shards,
+                ns.count,
+                ns.growth.threshold.to_bits(),
+                ns.growth.max_levels,
+                slots
             ));
         }
         let crc = crc32(body.as_bytes());
@@ -521,7 +547,7 @@ impl Wal {
                     let images: Vec<PathBuf> = (0..*shards)
                         .map(|i| cfg.dir.join(format!("ckpt-{:016x}-shard-{i}.ckgf", m.id)))
                         .collect();
-                    engine.recover_namespace(DEFAULT_NS, 0, *shards, &images)?;
+                    engine.recover_namespace(DEFAULT_NS, 0, *shards, GrowthConfig::default(), &images)?;
                 }
                 ManifestShape::V2 { namespaces } => {
                     // Cross-check the manifest's namespace set against
@@ -560,7 +586,7 @@ impl Wal {
                         let images: Vec<PathBuf> = (0..e.shards)
                             .map(|i| cfg.dir.join(ckpt_image_name(m.id, &e.name, i)))
                             .collect();
-                        engine.recover_namespace(&e.name, e.capacity, e.shards, &images)?;
+                        engine.recover_namespace(&e.name, e.capacity, e.shards, e.growth, &images)?;
                     }
                 }
             }
@@ -743,11 +769,29 @@ impl CommitGuard<'_> {
         self.wal.write_record(&mut self.inner, op_to_byte(op), ns, keys)
     }
 
-    /// Log a namespace create (`keys` carry its geometry) so recovery
-    /// rebuilds namespaces born after the last checkpoint.
-    pub fn append_create(&mut self, ns: &str, capacity: usize, shards: usize) -> io::Result<()> {
-        self.wal
-            .write_record(&mut self.inner, REC_CREATE, ns, &[capacity as u64, shards as u64])
+    /// Log a namespace create (`keys` carry its geometry and growth
+    /// policy) so recovery rebuilds namespaces born after the last
+    /// checkpoint with identical growth behaviour. The default policy
+    /// is encoded as the short two-word form old binaries also wrote.
+    pub fn append_create(
+        &mut self,
+        ns: &str,
+        capacity: usize,
+        shards: usize,
+        growth: GrowthConfig,
+    ) -> io::Result<()> {
+        if growth == GrowthConfig::default() {
+            self.wal
+                .write_record(&mut self.inner, REC_CREATE, ns, &[capacity as u64, shards as u64])
+        } else {
+            let geom = [
+                capacity as u64,
+                shards as u64,
+                growth.threshold.to_bits(),
+                growth.max_levels as u64,
+            ];
+            self.wal.write_record(&mut self.inner, REC_CREATE, ns, &geom)
+        }
     }
 
     /// Log a namespace drop.
@@ -779,6 +823,8 @@ struct NsEntry {
     name: String,
     capacity: usize,
     shards: usize,
+    /// Elastic-growth policy; default when the row predates growth.
+    growth: GrowthConfig,
 }
 
 enum ManifestShape {
@@ -848,8 +894,11 @@ fn read_manifest(dir: &Path) -> io::Result<Option<Manifest>> {
             let n = manifest_field(&mut lines, "namespaces ")? as usize;
             let mut namespaces = Vec::with_capacity(n);
             for _ in 0..n {
-                // `ns <name> <capacity> <shards> <count>`; names cannot
-                // contain spaces (`valid_ns_name`), so a plain split works.
+                // `ns <name> <capacity> <shards> <count> [key=value...]`;
+                // names cannot contain spaces (`valid_ns_name`), so a
+                // plain split works. Trailing tokens are optional
+                // key=value pairs (`growth=`, `slots=`); unknown keys
+                // are skipped so newer rows stay readable.
                 let line = lines
                     .next()
                     .and_then(|l| l.strip_prefix("ns "))
@@ -869,10 +918,25 @@ fn read_manifest(dir: &Path) -> io::Result<Option<Manifest>> {
                     .next()
                     .and_then(|t| t.parse().ok())
                     .ok_or_else(parse_err)?;
+                let mut growth = GrowthConfig::default();
+                for tok in toks {
+                    if let Some(spec) = tok.strip_prefix("growth=") {
+                        let (bits, levels) = spec.split_once(':').ok_or_else(parse_err)?;
+                        let bits = bits
+                            .strip_prefix("0x")
+                            .and_then(|h| u64::from_str_radix(h, 16).ok())
+                            .ok_or_else(parse_err)?;
+                        growth = GrowthConfig {
+                            threshold: f64::from_bits(bits),
+                            max_levels: levels.parse().map_err(|_| parse_err())?,
+                        };
+                    }
+                }
                 namespaces.push(NsEntry {
                     name,
                     capacity,
                     shards,
+                    growth,
                 });
             }
             Ok(Some(Manifest {
@@ -984,13 +1048,19 @@ fn read_record<R: Read>(r: &mut R, version: u32) -> io::Result<Option<(WalRecord
             .collect();
         match kind {
             REC_CREATE => {
-                if keys.len() != 2 {
-                    return Err(bad(format!("CREATE record with {} geometry words", keys.len())));
-                }
+                let growth = match keys.len() {
+                    2 => GrowthConfig::default(),
+                    4 => GrowthConfig {
+                        threshold: f64::from_bits(keys[2]),
+                        max_levels: keys[3] as usize,
+                    },
+                    n => return Err(bad(format!("CREATE record with {n} geometry words"))),
+                };
                 WalRecord::Create {
                     ns,
                     capacity: keys[0] as usize,
                     shards: keys[1] as usize,
+                    growth,
                 }
             }
             REC_DROP => {

@@ -61,10 +61,61 @@ impl LoadWidth {
     }
 }
 
+/// Per-namespace elastic-capacity policy (PR 8): when a shard's ledger
+/// crosses `threshold` of its slots, the shard grows one level (bucket
+/// count doubles, entries migrate into growth slices — see
+/// [`crate::filter::policy`] module docs). `max_levels = 0` disables
+/// growth entirely (the pre-PR-8 fixed-capacity behaviour).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GrowthConfig {
+    /// Load factor α that triggers a growth step. Must be in (0, 1].
+    pub threshold: f64,
+    /// Maximum growth levels above the base geometry (capacity scales by
+    /// `2^max_levels`). Also clamped at runtime to the fingerprint width
+    /// so a slice index never consumes the whole tag.
+    pub max_levels: usize,
+}
+
+impl Default for GrowthConfig {
+    /// Grow at α = 0.9, up to 256× the provisioned capacity.
+    fn default() -> Self {
+        Self {
+            threshold: 0.9,
+            max_levels: 8,
+        }
+    }
+}
+
+impl GrowthConfig {
+    /// Fixed capacity: never grow (shards saturate with `TooFull` as
+    /// before).
+    pub fn disabled() -> Self {
+        Self {
+            threshold: 1.0,
+            max_levels: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.max_levels > 0
+    }
+
+    pub fn validate(&self) -> Result<(), FilterError> {
+        if !(self.threshold > 0.0 && self.threshold <= 1.0) {
+            return Err(FilterError::BadConfig(format!(
+                "growth threshold must be in (0, 1], got {}",
+                self.threshold
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// Full filter configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct CuckooConfig {
     /// Number of buckets (`m`). Power of two required for [`BucketPolicy::Xor`].
+    /// For a grown filter this is the CURRENT total, `m0 << growth_level`.
     pub num_buckets: usize,
     /// Slots (tags) per bucket (`b`). The paper's GPU default is 16.
     pub bucket_slots: usize,
@@ -76,6 +127,10 @@ pub struct CuckooConfig {
     pub load_width: LoadWidth,
     /// Hash seed baked into all derived values.
     pub seed: u64,
+    /// Elastic-capacity level `g`: the geometry has been doubled `g`
+    /// times from a base of `num_buckets >> g` buckets. 0 for filters
+    /// that have never grown — all pre-PR-8 configs.
+    pub growth_level: usize,
 }
 
 impl CuckooConfig {
@@ -90,6 +145,7 @@ impl CuckooConfig {
             max_evictions: 500,
             load_width: LoadWidth::W256,
             seed: super::hash::DEFAULT_SEED,
+            growth_level: 0,
         }
     }
 
@@ -140,6 +196,27 @@ impl CuckooConfig {
         self
     }
 
+    /// Set the growth level, keeping `num_buckets` as the CURRENT total
+    /// (so `base_buckets()` is `num_buckets >> g`). Used when loading a
+    /// persisted grown image; live growth goes through [`Self::grown`].
+    pub fn growth_level(mut self, g: usize) -> Self {
+        self.growth_level = g;
+        self
+    }
+
+    /// The geometry one growth level up: bucket count doubled, level
+    /// incremented, everything else identical.
+    pub fn grown(mut self) -> Self {
+        self.num_buckets *= 2;
+        self.growth_level += 1;
+        self
+    }
+
+    /// Base (level-0) bucket count `m0`; `num_buckets = m0 << growth_level`.
+    pub fn base_buckets(&self) -> usize {
+        self.num_buckets >> self.growth_level
+    }
+
     /// Total slot count.
     pub fn total_slots(&self) -> usize {
         self.num_buckets * self.bucket_slots
@@ -154,6 +231,27 @@ impl CuckooConfig {
             return Err(FilterError::BadConfig(format!(
                 "XOR policy requires a power-of-two bucket count, got {}",
                 self.num_buckets
+            )));
+        }
+        // Growth slices borrow the low `growth_level` fingerprint bits
+        // as a slice index (see filter/policy.rs): the base geometry
+        // must divide out exactly and at least one fingerprint bit must
+        // remain above the slice index.
+        let effective_fp_bits = match self.policy {
+            BucketPolicy::Xor => fp_bits,
+            BucketPolicy::Offset => fp_bits.saturating_sub(1),
+        };
+        if self.growth_level >= effective_fp_bits as usize {
+            return Err(FilterError::BadConfig(format!(
+                "growth level {} exhausts the {}-bit effective fingerprint",
+                self.growth_level, effective_fp_bits
+            )));
+        }
+        let base = self.num_buckets >> self.growth_level;
+        if base << self.growth_level != self.num_buckets || base < 2 {
+            return Err(FilterError::BadConfig(format!(
+                "growth level {} does not divide {} buckets into a base of >= 2",
+                self.growth_level, self.num_buckets
             )));
         }
         let tags_per_word = (64 / fp_bits) as usize;
@@ -212,6 +310,38 @@ mod tests {
         assert!(cfg.validate(16).is_err());
         let cfg = cfg.policy(BucketPolicy::Offset);
         cfg.validate(16).unwrap();
+    }
+
+    #[test]
+    fn growth_level_geometry_and_validation() {
+        let cfg = CuckooConfig::new(1 << 8).growth_level(3); // base 32
+        cfg.validate(16).unwrap();
+        assert_eq!(cfg.base_buckets(), 32);
+        // grown() doubles the total and bumps the level; base unchanged.
+        let g = cfg.grown();
+        assert_eq!(g.num_buckets, 1 << 9);
+        assert_eq!(g.growth_level, 4);
+        assert_eq!(g.base_buckets(), 32);
+        g.validate(16).unwrap();
+        // A level that leaves a base under 2 is rejected.
+        assert!(CuckooConfig::new(4).growth_level(2).validate(16).is_err());
+        // A level that exhausts the effective fingerprint is rejected
+        // (fp8 offset: 7 effective bits after the choice flag).
+        assert!(CuckooConfig::new(1 << 9)
+            .policy(BucketPolicy::Offset)
+            .growth_level(7)
+            .validate(8)
+            .is_err());
+        // GrowthConfig sanity.
+        GrowthConfig::default().validate().unwrap();
+        assert!((GrowthConfig::default().threshold - 0.9).abs() < 1e-9);
+        assert!(GrowthConfig {
+            threshold: 0.0,
+            max_levels: 4
+        }
+        .validate()
+        .is_err());
+        assert!(!GrowthConfig::disabled().enabled());
     }
 
     #[test]

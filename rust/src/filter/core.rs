@@ -19,62 +19,159 @@ use super::probe::{NoProbe, Probe};
 use super::swar::{clear_lane, first_lane, Layout};
 use super::table::Table;
 use crate::util::prng::SplitMix64;
-use std::cell::Cell;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
-thread_local! {
-    /// Per-thread eviction randomness (the CUDA version derives this from
-    /// thread id + clock; any per-thread stream works).
-    static EVICT_RNG: Cell<u64> = const { Cell::new(0) };
-}
-
+// Eviction randomness is derived from the key and the filter seed, NOT
+// from a per-thread stream. The paper derives it from thread id + clock
+// and notes any stream works; a key-derived stream works equally well
+// for eviction quality but makes every insert a pure function of (key,
+// table state) — which is what lets WAL replay reproduce saturation
+// exactly (a TooFull insert's eviction chain, including which victim
+// tag is lost at budget exhaustion, re-executes identically) and keeps
+// the seeded stress batteries scheduling-independent.
 #[inline]
-fn thread_rand() -> u64 {
-    EVICT_RNG.with(|c| {
-        let mut s = c.get();
-        if s == 0 {
-            // Seed lazily from the thread's address-ish entropy.
-            let tid = &s as *const _ as u64;
-            s = crate::util::prng::mix64(tid ^ 0x9E37_79B9_7F4A_7C15);
-        }
-        s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
-        c.set(s);
-        crate::util::prng::mix64(s)
-    })
+fn evict_rand(key: u64, seed: u64) -> u64 {
+    crate::util::prng::mix64(key ^ seed.rotate_left(17) ^ 0x9E37_79B9_7F4A_7C15)
 }
 
-/// A concurrent, lock-free Cuckoo filter with `L`-packed fingerprints.
-pub struct CuckooFilter<L: Layout> {
+/// One immutable-geometry **generation** of the filter: a table plus the
+/// policy engine and config that describe it. All per-key machinery
+/// (Algorithms 1–3) lives here, so every operation works against exactly
+/// one generation. Online growth (PR 8) builds the next generation,
+/// migrates the tags, and atomically publishes it.
+pub(crate) struct Gen<L: Layout> {
     table: Table,
     policy: PolicyEngine<L>,
     cfg: CuckooConfig,
+}
+
+/// Generation slots, indexed by growth level. `CuckooConfig::validate`
+/// caps `growth_level` strictly below the effective fingerprint width
+/// (≤ 32 bits), so 32 slots cover every layout.
+const MAX_GENS: usize = 32;
+
+/// A concurrent, lock-free Cuckoo filter with `L`-packed fingerprints.
+///
+/// ## Growth state machine (PR 8)
+///
+/// The filter is a sparse array of generations indexed by growth level;
+/// exactly one is *published* (`active`). Readers resolve the published
+/// generation once per operation and never look back. Growing one level
+/// is: build the next generation (bucket count doubled), migrate every
+/// stored tag into its growth slice (see [`super::policy`] module docs),
+/// publish with a release store. Retired generations are retained until
+/// the filter drops — an in-flight query batch may still hold a
+/// reference into one — and remain content-equivalent to the published
+/// table, so queries racing the flip read identical answers either way.
+/// Mutations must be excluded during migration (the coordinator holds a
+/// query-phase epoch token); nothing else about the lock-free core
+/// changes.
+pub struct CuckooFilter<L: Layout> {
+    /// Generations by growth level. Slots fill monotonically upward from
+    /// `boot_level`; a slot is never replaced once set.
+    gens: Box<[OnceLock<Gen<L>>]>,
+    /// Growth level of the published generation.
+    active: AtomicUsize,
+    /// Level this filter was constructed at (a persisted image can boot
+    /// above 0); `has_grown` compares against it.
+    boot_level: usize,
     /// Occupancy. Batch paths add per-block deltas (hierarchical counting,
-    /// §4.3); single-op paths add directly.
+    /// §4.3); single-op paths add directly. Lives on the filter, not the
+    /// generation: migration preserves it.
     count: AtomicU64,
 }
 
-impl<L: Layout> CuckooFilter<L> {
-    pub fn new(cfg: CuckooConfig) -> Result<Self, FilterError> {
+impl<L: Layout> Gen<L> {
+    fn new(cfg: CuckooConfig) -> Result<Self, FilterError> {
         cfg.validate(L::FP_BITS)?;
         let words_per_bucket = cfg.bucket_slots / L::TAGS_PER_WORD as usize;
         Ok(Self {
             table: Table::new(cfg.num_buckets, words_per_bucket),
-            policy: PolicyEngine::new(cfg.policy, cfg.num_buckets, cfg.seed),
+            policy: PolicyEngine::with_growth(
+                cfg.policy,
+                cfg.num_buckets,
+                cfg.growth_level as u32,
+                cfg.seed,
+            ),
             cfg,
+        })
+    }
+
+    pub(crate) fn config(&self) -> &CuckooConfig {
+        &self.cfg
+    }
+
+    pub(crate) fn policy(&self) -> &PolicyEngine<L> {
+        &self.policy
+    }
+
+    pub(crate) fn table(&self) -> &Table {
+        &self.table
+    }
+}
+
+impl<L: Layout> CuckooFilter<L> {
+    pub fn new(cfg: CuckooConfig) -> Result<Self, FilterError> {
+        let gen = Gen::new(cfg)?;
+        let level = cfg.growth_level;
+        let gens: Box<[OnceLock<Gen<L>>]> = (0..MAX_GENS).map(|_| OnceLock::new()).collect();
+        let _ = gens[level].set(gen);
+        Ok(Self {
+            gens,
+            active: AtomicUsize::new(level),
+            boot_level: level,
             count: AtomicU64::new(0),
         })
     }
 
+    /// Resolve the published generation. Safe to hoist across a batch:
+    /// growth cannot race a mutation batch (epoch-excluded), and a query
+    /// batch reading a just-retired generation sees content-equivalent
+    /// state.
+    #[inline]
+    pub(crate) fn active_gen(&self) -> &Gen<L> {
+        // The release store in `publish_gen` orders the OnceLock fill
+        // before the level, so the slot is always initialised here.
+        self.gens[self.active.load(Ordering::Acquire)]
+            .get()
+            .expect("active generation is initialised")
+    }
+
+    /// The ACTIVE generation's config — after growth this reflects the
+    /// current (grown) geometry, which is exactly what persistence and
+    /// spill snapshots must record.
     pub fn config(&self) -> &CuckooConfig {
-        &self.cfg
+        &self.active_gen().cfg
     }
 
     pub fn policy(&self) -> &PolicyEngine<L> {
-        &self.policy
+        &self.active_gen().policy
     }
 
     pub fn table(&self) -> &Table {
-        &self.table
+        &self.active_gen().table
+    }
+
+    /// Current growth level (`boot_level` until the first growth event).
+    pub fn growth_level(&self) -> usize {
+        self.active.load(Ordering::Acquire)
+    }
+
+    /// Has this filter grown past the geometry it was constructed with?
+    pub fn has_grown(&self) -> bool {
+        self.growth_level() > self.boot_level
+    }
+
+    /// Table bytes across ALL resident generations. Retired generations
+    /// are kept until drop, so this — not [`Self::bytes`] — is what the
+    /// registry's residency budget must charge.
+    pub fn resident_bytes(&self) -> usize {
+        self.gens
+            .iter()
+            .filter_map(|g| g.get())
+            .map(|g| g.table.bytes())
+            .sum()
     }
 
     /// Number of stored fingerprints.
@@ -86,14 +183,15 @@ impl<L: Layout> CuckooFilter<L> {
         self.len() == 0
     }
 
-    /// Current load factor α.
+    /// Current load factor α (against the ACTIVE geometry).
     pub fn load_factor(&self) -> f64 {
-        self.len() as f64 / self.cfg.total_slots() as f64
+        self.len() as f64 / self.config().total_slots() as f64
     }
 
-    /// Fingerprint-storage bytes (the paper's space metric).
+    /// Fingerprint-storage bytes of the active table (the paper's space
+    /// metric).
     pub fn bytes(&self) -> usize {
-        self.table.bytes()
+        self.table().bytes()
     }
 
     /// Used by batch paths that count successes hierarchically.
@@ -105,10 +203,77 @@ impl<L: Layout> CuckooFilter<L> {
         self.count.fetch_sub(delta, Ordering::Relaxed);
     }
 
-    /// Remove everything.
+    /// Remove everything (from the active generation; retired
+    /// generations are dead weight until drop either way).
     pub fn clear(&self) {
-        self.table.clear();
+        self.active_gen().table.clear();
         self.count.store(0, Ordering::Release);
+    }
+
+    // ------------------------------------------------------------------
+    // Online growth (PR 8)
+    // ------------------------------------------------------------------
+
+    /// Grow one level: build the next generation (bucket count doubled,
+    /// same base geometry), migrate every stored tag into its growth
+    /// slice, and atomically publish the new generation.
+    ///
+    /// Caller contract (CI-guarded — the only call sites are the shard
+    /// coordinator's epoch-guarded growth entry and this module's
+    /// tests): mutations are excluded for the duration, so the retired
+    /// table is frozen. Concurrent queries are safe — they resolve a
+    /// generation once and migration preserves content exactly, so
+    /// answers are identical on either side of the flip.
+    ///
+    /// Migration is deterministic: old buckets are walked in order and
+    /// each tag is appended to the lowest free lane of its target bucket
+    /// with plain stores (the new table is still thread-private), so the
+    /// grown table's bytes are a pure function of the old table's bytes.
+    /// The slice geometry guarantees each new bucket receives tags from
+    /// exactly one old bucket, so migration can never overflow a bucket.
+    pub fn grow_one_level(&self) -> Result<(), FilterError> {
+        let old = self.active_gen();
+        let cfg = old.cfg.grown();
+        let new = Gen::new(cfg)?; // validates: level capped below the fp width
+        for bucket in 0..old.table.num_buckets {
+            for w in 0..old.table.words_per_bucket {
+                let word = old.table.load(old.table.word_index(bucket, w));
+                for lane in 0..L::TAGS_PER_WORD {
+                    let tag = L::extract(word, lane);
+                    if tag != 0 {
+                        let target = new.policy.migrate_bucket(tag, bucket);
+                        let placed = new.append_tag_private(target, tag);
+                        debug_assert!(placed, "growth slice overflowed during migration");
+                    }
+                }
+            }
+        }
+        self.publish_gen(new)
+    }
+
+    /// Install and publish a fully-built generation. Fails if its level
+    /// slot is already occupied (growth only ever moves upward).
+    fn publish_gen(&self, gen: Gen<L>) -> Result<(), FilterError> {
+        let level = gen.cfg.growth_level;
+        if self.gens[level].set(gen).is_err() {
+            return Err(FilterError::BadConfig(format!(
+                "generation at growth level {level} already installed"
+            )));
+        }
+        self.active.store(level, Ordering::Release);
+        Ok(())
+    }
+
+    /// Persistence support: make the active generation match `cfg`
+    /// (which differs from the current one only by growth level — the
+    /// caller has already verified the base geometry). Used by
+    /// `load_into` when restoring a grown image into a freshly
+    /// constructed filter.
+    pub(crate) fn ensure_image_level(&self, cfg: CuckooConfig) -> Result<(), FilterError> {
+        if cfg.growth_level == self.growth_level() {
+            return Ok(());
+        }
+        self.publish_gen(Gen::new(cfg)?)
     }
 
     // ------------------------------------------------------------------
@@ -125,6 +290,83 @@ impl<L: Layout> CuckooFilter<L> {
     /// batch paths in `batch.rs`; this low-level entry leaves counting to
     /// the caller and returns `Ok` exactly when a fingerprint was stored.
     pub fn insert_probed_raw<P: Probe>(&self, key: u64, probe: &mut P) -> Result<(), FilterError> {
+        self.active_gen().insert_probed_raw(key, probe)
+    }
+
+    fn insert_probed<P: Probe>(&self, key: u64, probe: &mut P) -> Result<(), FilterError> {
+        let r = self.insert_probed_raw(key, probe);
+        if r.is_ok() {
+            self.count.fetch_add(1, Ordering::Relaxed);
+        }
+        r
+    }
+
+    // ------------------------------------------------------------------
+    // Query (Algorithm 2)
+    // ------------------------------------------------------------------
+
+    /// Approximate membership: never a false negative for inserted keys.
+    pub fn contains(&self, key: u64) -> bool {
+        self.contains_probed(key, &mut NoProbe)
+    }
+
+    pub fn contains_probed<P: Probe>(&self, key: u64, probe: &mut P) -> bool {
+        self.active_gen().contains_probed(key, probe)
+    }
+
+    // ------------------------------------------------------------------
+    // Deletion (Algorithm 3)
+    // ------------------------------------------------------------------
+
+    /// Remove a key (one stored instance). Returns whether a fingerprint
+    /// was removed. Deleting a never-inserted key may, with fingerprint-
+    /// collision probability, remove another key's fingerprint — the
+    /// standard Cuckoo-filter contract.
+    pub fn remove(&self, key: u64) -> bool {
+        self.remove_probed(key, &mut NoProbe)
+    }
+
+    pub fn remove_probed<P: Probe>(&self, key: u64, probe: &mut P) -> bool {
+        let r = self.remove_probed_raw(key, probe);
+        if r {
+            self.count.fetch_sub(1, Ordering::Relaxed);
+        }
+        r
+    }
+
+    /// As [`Self::remove_probed`] but without counter maintenance (batch
+    /// paths count hierarchically).
+    pub fn remove_probed_raw<P: Probe>(&self, key: u64, probe: &mut P) -> bool {
+        self.active_gen().remove_probed_raw(key, probe)
+    }
+}
+
+impl<L: Layout> Gen<L> {
+    /// Append `tag` into the lowest free lane of `bucket` with plain
+    /// stores. Only valid while the table is private to one thread
+    /// (growth migration); the fixed scan order is what makes grown
+    /// tables byte-deterministic.
+    fn append_tag_private(&self, bucket: usize, tag: u64) -> bool {
+        for w in 0..self.table.words_per_bucket {
+            let idx = self.table.word_index(bucket, w);
+            let word = self.table.load(idx);
+            let mask = L::zero_mask(word);
+            if mask != 0 {
+                let lane = first_lane::<L>(mask);
+                self.table.store(idx, L::replace(word, lane, tag));
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Algorithm 1 against this generation; returns `Ok` exactly when a
+    /// fingerprint was stored (counting is the caller's job).
+    pub(crate) fn insert_probed_raw<P: Probe>(
+        &self,
+        key: u64,
+        probe: &mut P,
+    ) -> Result<(), FilterError> {
         let c = self.policy.candidates(key);
         // Overlap the candidate fetches (see contains_probed).
         self.prefetch_bucket(c.alternate.0);
@@ -139,17 +381,9 @@ impl<L: Layout> CuckooFilter<L> {
 
         // Phase 2: eviction chain.
         match self.cfg.eviction {
-            EvictionPolicy::Dfs => self.evict_dfs(c, probe),
-            EvictionPolicy::Bfs => self.evict_bfs(c, probe),
+            EvictionPolicy::Dfs => self.evict_dfs(key, c, probe),
+            EvictionPolicy::Bfs => self.evict_bfs(key, c, probe),
         }
-    }
-
-    fn insert_probed<P: Probe>(&self, key: u64, probe: &mut P) -> Result<(), FilterError> {
-        let r = self.insert_probed_raw(key, probe);
-        if r.is_ok() {
-            self.count.fetch_add(1, Ordering::Relaxed);
-        }
-        r
     }
 
     /// `TryInsert` of Algorithm 1: scan the bucket's words from a
@@ -194,10 +428,11 @@ impl<L: Layout> CuckooFilter<L> {
     /// (Algorithm 1, phase 2).
     fn evict_dfs<P: Probe>(
         &self,
+        key: u64,
         c: super::policy::Candidates,
         probe: &mut P,
     ) -> Result<(), FilterError> {
-        let mut rnd = SplitMix64::new(thread_rand());
+        let mut rnd = SplitMix64::new(evict_rand(key, self.cfg.seed));
         // Randomly pick i1 or i2 (Alg. 1 line 8).
         let (mut bucket, mut tag) = if rnd.next_u64() & 1 == 0 {
             (c.primary.0, c.primary.1)
@@ -257,10 +492,11 @@ impl<L: Layout> CuckooFilter<L> {
     /// undo on failure). Fall back to evicting the last candidate.
     fn evict_bfs<P: Probe>(
         &self,
+        key: u64,
         c: super::policy::Candidates,
         probe: &mut P,
     ) -> Result<(), FilterError> {
-        let mut rnd = SplitMix64::new(thread_rand());
+        let mut rnd = SplitMix64::new(evict_rand(key, self.cfg.seed));
         let (mut bucket, mut tag) = if rnd.next_u64() & 1 == 0 {
             (c.primary.0, c.primary.1)
         } else {
@@ -430,16 +666,8 @@ impl<L: Layout> CuckooFilter<L> {
         self.try_remove_tag(bucket, tag, probe)
     }
 
-    // ------------------------------------------------------------------
-    // Query (Algorithm 2)
-    // ------------------------------------------------------------------
-
-    /// Approximate membership: never a false negative for inserted keys.
-    pub fn contains(&self, key: u64) -> bool {
-        self.contains_probed(key, &mut NoProbe)
-    }
-
-    pub fn contains_probed<P: Probe>(&self, key: u64, probe: &mut P) -> bool {
+    /// Algorithm 2 against this generation.
+    pub(crate) fn contains_probed<P: Probe>(&self, key: u64, probe: &mut P) -> bool {
         let c = self.policy.candidates(key);
         // Overlap the two candidate fetches: issue the alternate bucket's
         // cache-line fill before scanning the primary (the CPU analogue
@@ -498,29 +726,8 @@ impl<L: Layout> CuckooFilter<L> {
         false
     }
 
-    // ------------------------------------------------------------------
-    // Deletion (Algorithm 3)
-    // ------------------------------------------------------------------
-
-    /// Remove a key (one stored instance). Returns whether a fingerprint
-    /// was removed. Deleting a never-inserted key may, with fingerprint-
-    /// collision probability, remove another key's fingerprint — the
-    /// standard Cuckoo-filter contract.
-    pub fn remove(&self, key: u64) -> bool {
-        self.remove_probed(key, &mut NoProbe)
-    }
-
-    pub fn remove_probed<P: Probe>(&self, key: u64, probe: &mut P) -> bool {
-        let r = self.remove_probed_raw(key, probe);
-        if r {
-            self.count.fetch_sub(1, Ordering::Relaxed);
-        }
-        r
-    }
-
-    /// As [`Self::remove_probed`] but without counter maintenance (batch
-    /// paths count hierarchically).
-    pub fn remove_probed_raw<P: Probe>(&self, key: u64, probe: &mut P) -> bool {
+    /// Algorithm 3 against this generation (no counter maintenance).
+    pub(crate) fn remove_probed_raw<P: Probe>(&self, key: u64, probe: &mut P) -> bool {
         let c = self.policy.candidates(key);
         self.try_remove_tag(c.primary.0, c.primary.1, probe)
             || self.try_remove_tag(c.alternate.0, c.alternate.1, probe)
@@ -764,6 +971,83 @@ mod tests {
             assert!(f.remove(k));
         }
         assert_eq!(f.len(), f.table().count_occupied::<Fp16>());
+    }
+
+    #[test]
+    fn growth_preserves_membership_count_and_usability() {
+        for policy in [BucketPolicy::Xor, BucketPolicy::Offset] {
+            let base = match policy {
+                BucketPolicy::Xor => 1usize << 6,
+                BucketPolicy::Offset => 72,
+            };
+            let f = CuckooFilter::<Fp16>::new(CuckooConfig::new(base).policy(policy)).unwrap();
+            let ks = keys(700, 21);
+            for &k in &ks {
+                f.insert(k).unwrap();
+            }
+            let before_len = f.len();
+            assert!(!f.has_grown());
+            for level in 1..=3 {
+                f.grow_one_level().unwrap();
+                assert_eq!(f.growth_level(), level, "{policy:?}");
+                assert!(f.has_grown());
+                assert_eq!(f.len(), before_len, "{policy:?}: migration must not lose tags");
+                assert_eq!(f.config().num_buckets, base << level);
+                assert_eq!(f.config().base_buckets(), base);
+                assert_eq!(f.table().count_occupied::<Fp16>(), before_len);
+                for &k in &ks {
+                    assert!(f.contains(k), "{policy:?}: false negative after growth");
+                }
+            }
+            // Retired generations stay resident until drop.
+            assert!(f.resident_bytes() > f.bytes());
+            // Still fully usable at the grown geometry.
+            let more = keys(500, 22);
+            for &k in &more {
+                f.insert(k).unwrap();
+            }
+            for &k in &more {
+                assert!(f.contains(k), "{policy:?}");
+            }
+            for &k in &more {
+                assert!(f.remove(k), "{policy:?}");
+            }
+            assert_eq!(f.len(), before_len, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn growth_migration_is_a_pure_function_of_table_bytes() {
+        // Byte-identical tables must grow into byte-identical tables —
+        // the property WAL replay and the pre-sized-oracle stress
+        // schedules lean on. A persisted copy shares bytes with the
+        // original by construction; grow both and compare.
+        let f = CuckooFilter::<Fp16>::new(CuckooConfig::new(1 << 6)).unwrap();
+        for &k in &keys(900, 23) {
+            f.insert(k).unwrap();
+        }
+        let mut buf = Vec::new();
+        f.save(&mut buf).unwrap();
+        let g = CuckooFilter::<Fp16>::load(&buf[..]).unwrap();
+        assert_eq!(f.table().snapshot(), g.table().snapshot());
+        for _ in 0..2 {
+            f.grow_one_level().unwrap();
+            g.grow_one_level().unwrap();
+            assert_eq!(f.table().snapshot(), g.table().snapshot());
+        }
+    }
+
+    #[test]
+    fn growth_stops_at_the_fingerprint_width() {
+        // fp8 + offset = 7 effective bits, so level 7 would consume the
+        // whole fingerprint as a slice index and must be refused.
+        let f =
+            CuckooFilter::<Fp8>::new(CuckooConfig::new(64).policy(BucketPolicy::Offset)).unwrap();
+        for level in 1..7 {
+            f.grow_one_level().unwrap();
+            assert_eq!(f.growth_level(), level);
+        }
+        assert!(f.grow_one_level().is_err());
     }
 
     #[test]

@@ -6,7 +6,11 @@
 //! * [`swar`] — packed-word lane operations (§4.2);
 //! * [`policy`] — partial-key hashing, XOR and offset/choice-bit (§2.1, §4.6.2);
 //! * [`table`] — the atomic word array (§4.2, Fig. 2);
-//! * [`core`] — Algorithms 1–3 + BFS eviction (§4.3–§4.6.1);
+//! * [`core`] — Algorithms 1–3 + BFS eviction (§4.3–§4.6.1), plus the
+//!   elastic-capacity generation machinery (PR 8): a filter is a sparse
+//!   array of immutable-geometry generations, grown one level at a time
+//!   by migrating tags into growth slices (see [`policy`]) and
+//!   atomically publishing the new table;
 //! * [`batch`] — the device-wide batch entry point (§4.3 "parallel
 //!   insertion"): one `execute_batch(backend, OpKind, keys, out)` for
 //!   all three ops;
@@ -26,7 +30,7 @@ pub mod batch;
 pub mod sorted;
 pub mod persist;
 
-pub use config::{BucketPolicy, CuckooConfig, EvictionPolicy, LoadWidth};
+pub use config::{BucketPolicy, CuckooConfig, EvictionPolicy, GrowthConfig, LoadWidth};
 pub use core::CuckooFilter;
 pub use error::FilterError;
 pub use probe::{NoProbe, Probe, TraceProbe};

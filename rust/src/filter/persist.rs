@@ -10,10 +10,15 @@
 //! magic "CKGF" | version u32 | body                  (version 1, legacy)
 //!
 //! body = fp_bits u32 | num_buckets u64 | bucket_slots u32 |
-//!        policy u8 | eviction u8 | load_width u8 | pad u8 |
+//!        policy u8 | eviction u8 | load_width u8 | growth u8 |
 //!        max_evictions u64 | seed u64 | count u64 | num_words u64 |
 //!        words...
 //! ```
+//! `growth` (PR 8) is the elastic-capacity growth level: `num_buckets`
+//! is the CURRENT total and the base geometry is `num_buckets >>
+//! growth`. It reuses what was a zero pad byte, so never-grown filters
+//! (growth = 0) produce images bit-identical to pre-PR-8 writers and
+//! old images load as level 0 — no version bump needed.
 //! The version-2 trailer is the CRC-32 (IEEE) of every body byte, so
 //! corruption that preserves the occupancy count (a flipped tag bit) is
 //! rejected at load time; version-1 images (no trailer) still load and
@@ -95,7 +100,7 @@ fn write_body<L: Layout, W: Write>(
             EvictionPolicy::Bfs => 1,
         },
         cfg.load_width.words() as u8,
-        0,
+        cfg.growth_level as u8,
     ])?;
     w_u64(w, cfg.max_evictions as u64)?;
     w_u64(w, cfg.seed)?;
@@ -142,6 +147,7 @@ fn read_header<L: Layout, R: Read>(r: &mut R) -> io::Result<Header> {
         4 => LoadWidth::W256,
         l => return Err(bad(format!("bad load width {l}"))),
     };
+    let growth = flags[3] as usize;
     let max_evictions = r_u64(r)? as usize;
     let seed = r_u64(r)?;
     let count = r_u64(r)?;
@@ -152,7 +158,8 @@ fn read_header<L: Layout, R: Read>(r: &mut R) -> io::Result<Header> {
         .eviction(eviction)
         .load_width(load_width)
         .max_evictions(max_evictions)
-        .seed(seed);
+        .seed(seed)
+        .growth_level(growth);
     Ok(Header {
         cfg,
         count,
@@ -298,16 +305,20 @@ impl<L: Layout> CuckooFilter<L> {
     }
 
     /// Load an image into this existing filter, which must have been
-    /// built with an identical configuration (the recovery path restores
-    /// checkpoint shards into an engine constructed from its own config,
-    /// and a silently different geometry would corrupt every later
-    /// lookup). The filter is cleared first; on error it may be left
-    /// empty or partially loaded.
+    /// built with an identical BASE configuration (the recovery path
+    /// restores checkpoint shards into an engine constructed from its
+    /// own config, and a silently different geometry would corrupt
+    /// every later lookup). The image's growth level may differ from
+    /// the filter's: a shard that grew before it was checkpointed or
+    /// spilled restores by installing a generation at the image's level
+    /// (fault-in and recovery always construct the namespace at its
+    /// create-time geometry first). The filter is cleared first; on
+    /// error it may be left empty or partially loaded.
     pub fn load_into<R: Read>(&self, r: R) -> io::Result<()> {
         let count = read_versioned(r, |r| {
             let h = read_header::<L, _>(r)?;
-            let mine = self.config();
-            if h.cfg.num_buckets != mine.num_buckets
+            let mine = *self.config();
+            if h.cfg.base_buckets() != mine.base_buckets()
                 || h.cfg.bucket_slots != mine.bucket_slots
                 || h.cfg.policy != mine.policy
                 || h.cfg.eviction != mine.eviction
@@ -320,6 +331,8 @@ impl<L: Layout> CuckooFilter<L> {
                     h.cfg, mine
                 )));
             }
+            self.ensure_image_level(h.cfg)
+                .map_err(|e| bad(format!("cannot install image generation: {e}")))?;
             if h.num_words != self.table().num_words() {
                 return Err(bad(format!(
                     "word count mismatch: image {}, geometry {}",
@@ -539,6 +552,42 @@ mod tests {
             Ok(_) => panic!("config mismatch must be rejected"),
         };
         assert!(err.to_string().contains("does not match"));
+    }
+
+    #[test]
+    fn grown_images_roundtrip_and_restore_into_base_geometry() {
+        let cfg = CuckooConfig::new(1 << 6).seed(5);
+        let f = CuckooFilter::<Fp16>::new(cfg).unwrap();
+        let ks = keys(800);
+        for &k in &ks {
+            f.insert(k).unwrap();
+        }
+        f.grow_one_level().unwrap();
+        f.grow_one_level().unwrap();
+        let mut buf = Vec::new();
+        f.save(&mut buf).unwrap();
+
+        // Full load reconstructs the grown geometry.
+        let g = CuckooFilter::<Fp16>::load(&buf[..]).unwrap();
+        assert_eq!(g.growth_level(), 2);
+        assert_eq!(g.config().num_buckets, 1 << 8);
+        assert_eq!(g.config().base_buckets(), 1 << 6);
+        assert_eq!(g.table().snapshot(), f.table().snapshot());
+
+        // load_into a FRESH filter at the create-time (base) geometry —
+        // the fault-in / crash-recovery shape for a grown tenant.
+        let h = CuckooFilter::<Fp16>::new(cfg).unwrap();
+        h.load_into(&buf[..]).unwrap();
+        assert_eq!(h.growth_level(), 2);
+        assert_eq!(h.len(), f.len());
+        assert_eq!(h.table().snapshot(), f.table().snapshot());
+        for &k in &ks {
+            assert!(h.contains(k));
+        }
+
+        // A different base geometry still fails.
+        let wrong = CuckooFilter::<Fp16>::new(CuckooConfig::new(1 << 7).seed(5)).unwrap();
+        assert!(wrong.load_into(&buf[..]).is_err());
     }
 
     #[test]

@@ -18,6 +18,22 @@
 //!   bit*) records whether the item currently sits in its primary (0) or
 //!   alternate (1) bucket, and is flipped on every relocation. One
 //!   fingerprint bit is sacrificed.
+//!
+//! ## Growth slices (elastic capacity)
+//!
+//! A grown filter at growth level `g` has `m = m0 << g` buckets: `2^g`
+//! *slices* of the base geometry `m0`. A tag's slice is chosen by the
+//! low `g` bits of its effective fingerprint (`ext = fp & (2^g - 1)`)
+//! and its within-slice index by the base derivation, so
+//! `bucket = ext * m0 + low`. Both the alternate-bucket mapping and
+//! eviction relocation operate on `low` only and preserve the slice —
+//! which is what makes a stored tag *rehashable across geometries*: the
+//! level-`g+1` bucket of any tag is computable from its level-`g`
+//! bucket and the tag alone (`migrate_bucket`), no original key needed.
+//! At `g = 0` every formula degenerates to the classic single-table
+//! derivation bit-for-bit, and since queries always compare the full
+//! stored tag, borrowing fingerprint bits for slice selection does not
+//! change the false-positive rate.
 
 use super::hash::xxhash64_u64;
 use super::swar::Layout;
@@ -38,8 +54,14 @@ pub struct PolicyEngine<L: Layout> {
     pub num_buckets: u64,
     pub seed: u64,
     kind: super::config::BucketPolicy,
-    /// `num_buckets - 1` when the bucket count is a power of two —
-    /// strength-reduces the hot-path `% m` to an AND (a 20-40 cycle
+    /// Base (level-0) bucket count `m0`; `num_buckets = m0 << growth_level`.
+    base_buckets: u64,
+    /// Growth level `g`: how many times the geometry has doubled.
+    growth_level: u32,
+    /// `(1 << g) - 1`: low fingerprint bits selecting the slice.
+    ext_mask: u64,
+    /// `base_buckets - 1` when the base count is a power of two —
+    /// strength-reduces the hot-path `% m0` to an AND (a 20-40 cycle
     /// saving per access on the integer divider).
     pow2_mask: Option<u64>,
     _marker: std::marker::PhantomData<L>,
@@ -47,24 +69,56 @@ pub struct PolicyEngine<L: Layout> {
 
 impl<L: Layout> PolicyEngine<L> {
     pub fn new(kind: super::config::BucketPolicy, num_buckets: usize, seed: u64) -> Self {
+        Self::with_growth(kind, num_buckets, 0, seed)
+    }
+
+    /// Policy engine for a grown geometry: `num_buckets` is the CURRENT
+    /// total (`m0 << growth_level`). The caller (config validation)
+    /// guarantees divisibility and that `growth_level` fits the
+    /// effective fingerprint width.
+    pub fn with_growth(
+        kind: super::config::BucketPolicy,
+        num_buckets: usize,
+        growth_level: u32,
+        seed: u64,
+    ) -> Self {
+        let base = (num_buckets >> growth_level) as u64;
         Self {
             num_buckets: num_buckets as u64,
             seed,
             kind,
-            pow2_mask: num_buckets
-                .is_power_of_two()
-                .then(|| num_buckets as u64 - 1),
+            base_buckets: base,
+            growth_level,
+            ext_mask: (1u64 << growth_level) - 1,
+            pow2_mask: (base as usize).is_power_of_two().then(|| base - 1),
             _marker: std::marker::PhantomData,
         }
     }
 
-    /// `x mod num_buckets`, as an AND when the count is a power of two.
+    /// `x mod base_buckets`, as an AND when the base count is a power of
+    /// two. All index derivation happens in the base slice; the slice
+    /// offset is added afterwards.
     #[inline(always)]
-    fn mod_buckets(&self, x: u64) -> u64 {
+    fn mod_base(&self, x: u64) -> u64 {
         match self.pow2_mask {
             Some(mask) => x & mask,
-            None => x % self.num_buckets,
+            None => x % self.base_buckets,
         }
+    }
+
+    /// Slice offset of an effective fingerprint: the low `g` bits of
+    /// the fingerprint pick one of the `2^g` base-geometry slices.
+    #[inline(always)]
+    fn slice_of(&self, fp: u64) -> u64 {
+        (fp & self.ext_mask) * self.base_buckets
+    }
+
+    pub fn growth_level(&self) -> u32 {
+        self.growth_level
+    }
+
+    pub fn base_buckets(&self) -> u64 {
+        self.base_buckets
     }
 
     pub fn kind(&self) -> super::config::BucketPolicy {
@@ -101,11 +155,12 @@ impl<L: Layout> PolicyEngine<L> {
         mix64(fp ^ self.seed)
     }
 
-    /// Offset in `[1, m-1]` — never 0 so the two candidates differ
-    /// whenever `m > 1`.
+    /// Offset in `[1, m0-1]` — never 0 so the two candidates differ
+    /// whenever `m0 > 1`. Offsets stay within the base slice so the
+    /// alternate bucket shares the primary's slice.
     #[inline(always)]
     fn offset_of(&self, fp: u64) -> u64 {
-        1 + self.fp_spread(fp) % (self.num_buckets - 1)
+        1 + self.fp_spread(fp) % (self.base_buckets - 1)
     }
 
     /// Resolve a key to its two candidate `(bucket, stored_tag)` slots.
@@ -113,20 +168,21 @@ impl<L: Layout> PolicyEngine<L> {
     pub fn candidates(&self, key: u64) -> Candidates {
         let h = xxhash64_u64(key, self.seed);
         let fp = self.fingerprint(h);
-        let i1 = self.mod_buckets(h & 0xFFFF_FFFF);
+        let slice = self.slice_of(fp);
+        let i1 = self.mod_base(h & 0xFFFF_FFFF);
         match self.kind {
             super::config::BucketPolicy::Xor => {
-                let i2 = i1 ^ self.mod_buckets(self.fp_spread(fp));
+                let i2 = i1 ^ self.mod_base(self.fp_spread(fp));
                 Candidates {
-                    primary: (i1 as usize, fp),
-                    alternate: (i2 as usize, fp),
+                    primary: ((slice + i1) as usize, fp),
+                    alternate: ((slice + i2) as usize, fp),
                 }
             }
             super::config::BucketPolicy::Offset => {
-                let i2 = (i1 + self.offset_of(fp)) % self.num_buckets;
+                let i2 = (i1 + self.offset_of(fp)) % self.base_buckets;
                 Candidates {
-                    primary: (i1 as usize, fp),
-                    alternate: (i2 as usize, fp | self.choice_bit()),
+                    primary: ((slice + i1) as usize, fp),
+                    alternate: ((slice + i2) as usize, fp | self.choice_bit()),
                 }
             }
         }
@@ -134,29 +190,44 @@ impl<L: Layout> PolicyEngine<L> {
 
     /// Where does a *stored* tag go when evicted from `bucket`, and what
     /// is stored there? (Alg. 1 line 21 / §4.6.2 choice-bit flip.)
+    /// Relocation moves within the bucket's slice only.
     #[inline(always)]
     pub fn relocate(&self, stored_tag: u64, bucket: usize) -> (usize, u64) {
+        let low = self.mod_base(bucket as u64);
+        let slice = bucket as u64 - low;
         match self.kind {
             super::config::BucketPolicy::Xor => {
-                let alt = (bucket as u64) ^ self.mod_buckets(self.fp_spread(stored_tag));
-                (alt as usize, stored_tag)
+                let alt = low ^ self.mod_base(self.fp_spread(stored_tag));
+                ((slice + alt) as usize, stored_tag)
             }
             super::config::BucketPolicy::Offset => {
                 let choice = stored_tag & self.choice_bit();
                 let fp = stored_tag & self.fp_mask();
-                let m = self.num_buckets;
+                let m = self.base_buckets;
                 let off = self.offset_of(fp);
                 if choice == 0 {
                     // Currently in primary; moves to alternate.
-                    let alt = (bucket as u64 + off) % m;
-                    (alt as usize, fp | self.choice_bit())
+                    let alt = (low + off) % m;
+                    ((slice + alt) as usize, fp | self.choice_bit())
                 } else {
                     // Currently in alternate; moves back to primary.
-                    let prim = (bucket as u64 + m - off % m) % m;
-                    (prim as usize, fp)
+                    let prim = (low + m - off % m) % m;
+                    ((slice + prim) as usize, fp)
                 }
             }
         }
+    }
+
+    /// Level-(g+1) bucket of a tag stored in `old_bucket` of a level-g
+    /// geometry with the same base: the slice gains fingerprint bit `g`,
+    /// the within-slice index is preserved. This is the whole migration
+    /// map — collision-free (each new bucket receives tags from exactly
+    /// one old bucket) and computable from the stored tag alone.
+    #[inline(always)]
+    pub fn migrate_bucket(&self, stored_tag: u64, old_bucket: usize) -> usize {
+        debug_assert!(self.growth_level > 0, "migrate_bucket needs the grown policy");
+        let low = self.mod_base(old_bucket as u64);
+        (self.slice_of(stored_tag & self.fp_mask()) + low) as usize
     }
 
     /// Memory footprint note for benches: bits of fingerprint entropy.
@@ -252,6 +323,68 @@ mod tests {
         let o = PolicyEngine::<Fp16>::new(BucketPolicy::Offset, 17, 0);
         assert_eq!(x.effective_fp_bits(), 16);
         assert_eq!(o.effective_fp_bits(), 15);
+    }
+
+    #[test]
+    fn grown_geometry_keeps_relocation_properties_and_slices() {
+        // At every growth level, both policies keep the involution /
+        // roundtrip property, candidates stay inside one slice, and the
+        // within-slice (base) index is exactly the level-0 derivation.
+        for g in 1..=4u32 {
+            for (kind, m0) in [(BucketPolicy::Xor, 1usize << 10), (BucketPolicy::Offset, 977)] {
+                let base = PolicyEngine::<Fp16>::new(kind, m0, 42);
+                let eng = PolicyEngine::<Fp16>::with_growth(kind, m0 << g, g, 42);
+                assert_eq!(eng.base_buckets(), m0 as u64);
+                assert_eq!(eng.growth_level(), g);
+                let mut rng = crate::util::SplitMix64::new(g as u64);
+                for _ in 0..5_000 {
+                    let key = rng.next_u64();
+                    let c = eng.candidates(key);
+                    let c0 = base.candidates(key);
+                    // Same tag, same within-slice indices, one slice.
+                    assert_eq!(c.primary.1, c0.primary.1);
+                    assert_eq!(c.primary.0 % m0, c0.primary.0);
+                    assert_eq!(c.alternate.0 % m0, c0.alternate.0);
+                    assert_eq!(c.primary.0 / m0, c.alternate.0 / m0, "slice split");
+                    assert!(c.alternate.0 < m0 << g);
+                    assert_eq!(
+                        eng.relocate(c.primary.1, c.primary.0),
+                        (c.alternate.0, c.alternate.1)
+                    );
+                    assert_eq!(
+                        eng.relocate(c.alternate.1, c.alternate.0),
+                        (c.primary.0, c.primary.1)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn migrate_bucket_matches_the_grown_candidate_derivation() {
+        // Migrating a tag from its level-g bucket into level g+1 must
+        // land it exactly where the level-(g+1) candidate derivation
+        // would place that key — for primary AND alternate placements.
+        for kind in [BucketPolicy::Xor, BucketPolicy::Offset] {
+            let m0 = match kind {
+                BucketPolicy::Xor => 1usize << 9,
+                BucketPolicy::Offset => 1000,
+            };
+            for g in 0..3u32 {
+                let old = PolicyEngine::<Fp16>::with_growth(kind, m0 << g, g, 7);
+                let new = PolicyEngine::<Fp16>::with_growth(kind, m0 << (g + 1), g + 1, 7);
+                let mut rng = crate::util::SplitMix64::new(77 + g as u64);
+                for _ in 0..5_000 {
+                    let key = rng.next_u64();
+                    let (oc, nc) = (old.candidates(key), new.candidates(key));
+                    assert_eq!(new.migrate_bucket(oc.primary.1, oc.primary.0), nc.primary.0);
+                    assert_eq!(
+                        new.migrate_bucket(oc.alternate.1, oc.alternate.0),
+                        nc.alternate.0
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -172,6 +172,87 @@ fn wal_group_commit_preserves_the_zero_allocation_steady_state() {
 }
 
 #[test]
+fn growth_mid_window_keeps_the_arena_miss_count_constant() {
+    // PR-8 acceptance: elastic growth must not perturb the zero-
+    // allocation steady state. A new generation's table is long-lived
+    // filter state, deliberately allocated OUTSIDE the arena (the arena
+    // recycles batch scratch; a table is never donated back), and the
+    // batch-scratch sizes all scale with group/shard shape, not table
+    // geometry — so a tenant that doubles twice INSIDE the measured
+    // window still holds the miss counter perfectly still.
+    let seed = stress_seed();
+    let engine = Arc::new(
+        Engine::new(EngineConfig {
+            capacity: 1 << 18,
+            shards: 4,
+            workers: 4,
+            pools: 1,
+            artifacts_dir: None,
+        })
+        .unwrap(),
+    );
+    // 2_000 capacity → 4096 slots: two warmup groups stay below the
+    // 0.9 threshold, the measured groups cross it repeatedly.
+    engine.create_namespace_with("grow", 2_000, 1).unwrap();
+    let batcher = Batcher::new(
+        engine.clone(),
+        BatcherConfig {
+            max_keys: GROUP,
+            max_delay: Duration::from_millis(1),
+        },
+    );
+
+    let grows_of = |e: &Engine| {
+        e.namespaces().into_iter().find(|s| s.name == "grow").unwrap().grows
+    };
+
+    // Warmup: mixed triples on the default tenant (all op kinds, phase
+    // switches) plus two below-threshold insert+query groups on the
+    // grower — every size class both tenants will lease is populated.
+    for t in 0..3u64 {
+        let ks = block(t, seed);
+        assert_eq!(
+            batcher.call(Request::new(OpKind::Insert, ks.clone())).unwrap().successes as usize,
+            GROUP
+        );
+        batcher.call(Request::new(OpKind::Query, ks.clone())).unwrap();
+        batcher.call(Request::new(OpKind::Delete, ks)).unwrap();
+    }
+    for t in 0..2u64 {
+        let ks = block(100 + t, seed);
+        let r = batcher.call(Request::in_ns("grow", OpKind::Insert, ks.clone())).unwrap();
+        assert_eq!(r.successes as usize, GROUP);
+        batcher.call(Request::in_ns("grow", OpKind::Query, ks)).unwrap();
+    }
+    assert_eq!(grows_of(&engine), 0, "warmup must stay below the threshold");
+
+    let before = engine.arena_stats();
+    // Measured window: 8 more insert+query groups into the grower
+    // (2048 → 10240 keys, forcing at least two doublings mid-window)
+    // interleaved with default-tenant triples.
+    for t in 2..10u64 {
+        let ks = block(100 + t, seed);
+        let r = batcher.call(Request::in_ns("grow", OpKind::Insert, ks.clone())).unwrap();
+        assert_eq!(r.successes as usize, GROUP, "growth lagged a flush group");
+        let q = batcher.call(Request::in_ns("grow", OpKind::Query, ks)).unwrap();
+        assert_eq!(q.successes as usize, GROUP, "queries must serve across growth");
+        let ks = block(t, seed);
+        batcher.call(Request::new(OpKind::Insert, ks.clone())).unwrap();
+        batcher.call(Request::new(OpKind::Query, ks.clone())).unwrap();
+        batcher.call(Request::new(OpKind::Delete, ks)).unwrap();
+    }
+    let after = engine.arena_stats();
+
+    assert!(grows_of(&engine) >= 2, "window must contain growth steps");
+    assert_eq!(
+        after.misses, before.misses,
+        "growth perturbed the arena: generation tables must be allocated \
+         outside the batch-scratch cycle (seed {seed})"
+    );
+    assert!(after.acquires() > before.acquires());
+}
+
+#[test]
 fn multi_tenant_flush_groups_keep_the_arena_miss_count_constant() {
     // PR-7 acceptance: namespace fan-out must not cost the PR-5
     // property. Every tenant's filter is built over the ONE engine

@@ -494,6 +494,93 @@ fn v1_wal_segments_replay_into_the_default_namespace() {
 }
 
 #[test]
+fn saturated_tenant_kill_recovers_positionally_identical_to_oracle() {
+    // PR-8 leg: crash-inject at ≥95% load. A growth-pinned tenant is
+    // driven well past its fixed geometry, so the tail of the insert
+    // stream is rejecting keys and displacing victims — the regime
+    // where replay determinism is hardest: a replayed failed insert
+    // must lose exactly the victim the live run lost. Key-derived
+    // eviction randomness (see filter/core.rs) plus single-key tail
+    // groups (one saturated outcome per record, no intra-batch device
+    // ordering) make the whole sequence a pure function of the log.
+    let seed = stress_seed();
+    let dir = wal_dir("satkill", seed);
+    let cfg = WalConfig::new(&dir).segment_bytes(4096);
+    let a = engine(2);
+    Wal::open_and_recover(&a, cfg.clone()).unwrap();
+    // capacity 1000, 1 shard → 2048 slots; growth disabled pins it.
+    a.create_namespace_with_growth("sat", 1000, 1, cuckoo_gpu::filter::GrowthConfig::disabled())
+        .unwrap();
+
+    // Fill phase: 30 × 64-key groups = 1920 keys into 2048 slots
+    // (~94% load). Don't assert per-group successes — the last groups
+    // may already shed keys, identically on both sides.
+    let mut rejected = 0u64;
+    for g in 0..30u64 {
+        rejected += durable_apply_in(&a, "sat", OpKind::Insert, &block(g, seed))
+            .unwrap()
+            .too_full();
+    }
+    // Saturated tail: single-key groups, killed post-fsync on the
+    // 251st — durable but never executed in the crashed process.
+    const TAIL: u64 = 250;
+    let single = |i: u64| vec![mix64(i ^ (7777 << 32) ^ mix64(seed))];
+    a.wal().unwrap().debug_kill_at(KillPoint::PostFsyncPreKernel, TAIL, 0);
+    for i in 0..TAIL {
+        rejected += durable_apply_in(&a, "sat", OpKind::Insert, &single(i))
+            .unwrap()
+            .too_full();
+    }
+    assert!(
+        rejected >= (1920 + TAIL) - 2048,
+        "2170 keys into 2048 slots must reject ≥122 (pigeonhole), got {rejected}"
+    );
+    assert!(durable_apply_in(&a, "sat", OpKind::Insert, &single(TAIL)).is_err());
+    drop(a);
+
+    // Oracle: the durable prefix, uninterrupted and sequential — the
+    // killed single IS durable, so the oracle applies it too.
+    let oracle = engine(2);
+    oracle
+        .create_namespace_with_growth("sat", 1000, 1, cuckoo_gpu::filter::GrowthConfig::disabled())
+        .unwrap();
+    for g in 0..30u64 {
+        oracle.execute_op_in("sat", OpKind::Insert, block(g, seed)).unwrap();
+    }
+    for i in 0..=TAIL {
+        oracle.execute_op_in("sat", OpKind::Insert, single(i)).unwrap();
+    }
+
+    let b = engine(2);
+    let stats = Wal::open_and_recover(&b, cfg).unwrap();
+    // CREATE + 30 fill groups + TAIL singles + the durable killed one.
+    assert_eq!(stats.records_replayed, 1 + 30 + TAIL + 1);
+    assert_eq!(b.len(), oracle.len(), "saturated occupancy ledger diverged");
+
+    let sat = b.namespaces().into_iter().find(|s| s.name == "sat").unwrap();
+    assert_eq!(sat.slots, 2048, "pinned geometry must survive recovery");
+    assert_eq!(sat.grows, 0, "disabled growth policy must survive recovery");
+    assert!(
+        sat.len as f64 >= 0.95 * sat.slots as f64,
+        "leg must run at ≥95% load, got {}/{}",
+        sat.len,
+        sat.slots
+    );
+
+    // Positional identity at saturation: present keys, rejected keys,
+    // and absent keys must all answer bit-for-bit like the oracle —
+    // including which victims the failed inserts displaced.
+    let mut probe_sets = probes(seed);
+    probe_sets.push((0..=TAIL).map(&single).map(|v| v[0]).collect());
+    for ks in &probe_sets {
+        let r = b.execute_op_in("sat", OpKind::Query, ks.clone()).unwrap();
+        let o = oracle.execute_op_in("sat", OpKind::Query, ks.clone()).unwrap();
+        assert_eq!(r.outcomes, o.outcomes, "saturated positional outcomes diverged");
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn recovery_rejects_a_shard_count_mismatch() {
     let seed = stress_seed();
     let dir = wal_dir("shards", seed);

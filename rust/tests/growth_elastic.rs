@@ -1,0 +1,237 @@
+//! Elastic-capacity acceptance battery (the PR-8 bar): a tenant created
+//! at ~1% of its final size absorbs a seeded insert/query/remove
+//! schedule 100× past that capacity, growing online — no stop-the-world,
+//! queries answered between every growth step — and stays byte-identical
+//! (positional outcomes AND occupancy ledgers) to a PRE-SIZED oracle
+//! that never grows, across pools {1, 4}.
+//!
+//! The oracle comparison uses an all-true schedule: every query and
+//! every remove targets keys known to be present. A grown filter and a
+//! pre-sized one reach the same final geometry through different
+//! histories, so their false-positive patterns legitimately differ —
+//! but no-false-negatives is geometry-independent, which is exactly the
+//! contract growth must preserve. The durable leg then compares full
+//! probe sets (false positives included) against a same-history oracle,
+//! where bit-identity is required: WAL replay must reproduce every
+//! growth point, and checkpoint images must carry post-growth geometry.
+//!
+//! Runs inside the seeded `stress` CI matrix (fixed
+//! `CUCKOO_STRESS_SEED`s, single-threaded harness); every assertion is
+//! relative to an oracle fed the same seed-derived keys.
+
+use cuckoo_gpu::coordinator::{Engine, EngineConfig, OpKind, Wal, WalConfig};
+use cuckoo_gpu::util::prng::mix64;
+use std::fs;
+use std::path::PathBuf;
+
+fn stress_seed() -> u64 {
+    std::env::var("CUCKOO_STRESS_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Keys per schedule group. 200 groups = 50_000 keys = 100× the
+/// tenant's create-time capacity of 500.
+const GROUP: usize = 250;
+
+fn block(g: u64, seed: u64) -> Vec<u64> {
+    (0..GROUP as u64)
+        .map(|i| mix64(i ^ (g << 32) ^ mix64(seed ^ 0x9E37)))
+        .collect()
+}
+
+fn engine(pools: usize, shards: usize) -> Engine {
+    Engine::new(EngineConfig {
+        capacity: 1 << 16,
+        shards,
+        workers: 4,
+        pools,
+        artifacts_dir: None,
+    })
+    .unwrap()
+}
+
+fn row(e: &Engine, name: &str) -> cuckoo_gpu::coordinator::NamespaceStat {
+    e.namespaces()
+        .into_iter()
+        .find(|s| s.name == name)
+        .unwrap_or_else(|| panic!("no STATS row for namespace '{name}'"))
+}
+
+#[test]
+fn tenant_at_one_percent_capacity_absorbs_100x_byte_identically() {
+    let seed = stress_seed();
+    for &pools in &[1usize, 4] {
+        let e = engine(pools, 2);
+        // 500 capacity, 2 shards → 2 × 512 = 1024 slots: ~1% of where
+        // the schedule ends up. The oracle namespace is pre-sized for
+        // the full 50k and never grows.
+        e.create_namespace_with("elastic", 500, 2).unwrap();
+        let oracle = engine(pools, 2);
+        oracle.create_namespace_with("elastic", 50_000, 2).unwrap();
+
+        // Seeded schedule: 200 insert groups, interleaved with queries
+        // of random live groups and removals of ~10% of them — queries
+        // and removes only ever touch present keys (see module docs).
+        let mut live: Vec<u64> = Vec::new();
+        let mut removed = 0usize;
+        for g in 0..200u64 {
+            let ks = block(g, seed);
+            let got = e.execute_op_in("elastic", OpKind::Insert, ks.clone()).unwrap();
+            let want = oracle.execute_op_in("elastic", OpKind::Insert, ks).unwrap();
+            assert_eq!(
+                got.outcomes, want.outcomes,
+                "pools={pools} group {g}: insert outcomes diverged"
+            );
+            assert_eq!(got.successes as usize, GROUP, "pools={pools}: growth lagged group {g}");
+            assert_eq!(got.too_full(), 0);
+            live.push(g);
+
+            let r = mix64(g ^ mix64(seed ^ 0x5151));
+            if r % 2 == 0 {
+                // Query a random live group — this is the mid-growth
+                // serving check: growth steps happen between these.
+                let q = live[(r >> 8) as usize % live.len()];
+                let ks = block(q, seed);
+                let got = e.execute_op_in("elastic", OpKind::Query, ks.clone()).unwrap();
+                let want = oracle.execute_op_in("elastic", OpKind::Query, ks).unwrap();
+                assert_eq!(
+                    got.outcomes, want.outcomes,
+                    "pools={pools} group {q}: query outcomes diverged mid-growth"
+                );
+                assert!(got.outcomes.iter().all(|&b| b), "false negative mid-growth");
+            } else if r % 16 == 1 && live.len() > 4 {
+                let victim = live.remove((r >> 8) as usize % live.len());
+                let ks = block(victim, seed);
+                let got = e.execute_op_in("elastic", OpKind::Delete, ks.clone()).unwrap();
+                let want = oracle.execute_op_in("elastic", OpKind::Delete, ks).unwrap();
+                assert_eq!(
+                    got.outcomes, want.outcomes,
+                    "pools={pools} group {victim}: remove outcomes diverged"
+                );
+                removed += 1;
+            }
+        }
+        assert!(removed > 0, "schedule must exercise removals (seed {seed})");
+
+        // Ledgers byte-identical: per-tenant row and engine totals.
+        let (grown, sized) = (row(&e, "elastic"), row(&oracle, "elastic"));
+        assert_eq!(grown.len, sized.len, "pools={pools}: occupancy ledger diverged");
+        assert!(
+            grown.grows >= 4,
+            "pools={pools}: 100x overfill from 1024 slots needs ≥4 doublings, saw {}",
+            grown.grows
+        );
+        assert_eq!(sized.grows, 0, "the pre-sized oracle must never grow");
+        assert!(
+            grown.len as f64 <= 0.9 * grown.slots as f64 + (2 * GROUP) as f64,
+            "pools={pools}: grew past need: {}/{}",
+            grown.len,
+            grown.slots
+        );
+
+        // Final sweep: every live group still answers all-true in both.
+        for &g in &live {
+            let ks = block(g, seed);
+            let got = e.execute_op_in("elastic", OpKind::Query, ks.clone()).unwrap();
+            let want = oracle.execute_op_in("elastic", OpKind::Query, ks).unwrap();
+            assert_eq!(got.outcomes, want.outcomes, "pools={pools} final sweep: group {g}");
+            assert!(got.outcomes.iter().all(|&b| b), "pools={pools}: lost keys in group {g}");
+        }
+    }
+}
+
+fn wal_dir(name: &str, seed: u64) -> PathBuf {
+    let pid = std::process::id();
+    let dir = std::env::temp_dir().join(format!("cuckoo_growth_{name}_{pid}_{seed:x}"));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Apply one mutation group the way the batcher's flusher does (append
+/// under the commit guard, execute while it is held).
+fn durable_apply_in(engine: &Engine, ns: &str, op: OpKind, keys: &[u64]) -> std::io::Result<()> {
+    let wal = engine.wal().expect("wal attached");
+    let mut commit = wal.begin_commit()?;
+    commit.append_group(ns, op, keys)?;
+    engine
+        .execute_op_in(ns, op, keys.to_vec())
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::NotFound, e.to_string()))?;
+    drop(commit);
+    Ok(())
+}
+
+#[test]
+fn wal_replay_and_checkpoints_reproduce_growth_deterministically() {
+    // The durability half of elastic capacity: growth decisions are a
+    // pure function of the logged insert stream (queries are not
+    // logged and never grow; deletes never raise load), so a restart
+    // must land on the SAME geometry and — with key-derived eviction
+    // randomness — the same table bits as a never-crashed oracle.
+    // Checkpoint manifests/images then carry the post-growth geometry,
+    // so a restart from a checkpoint replays nothing and still serves
+    // the grown tenant.
+    let seed = stress_seed();
+    let dir = wal_dir("replay", seed);
+    let cfg = WalConfig::new(&dir);
+    let a = engine(1, 1);
+    Wal::open_and_recover(&a, cfg.clone()).unwrap();
+    a.create_namespace_with("g", 500, 1).unwrap();
+    for g in 0..20u64 {
+        durable_apply_in(&a, "g", OpKind::Insert, &block(g, seed)).unwrap();
+    }
+    let live = row(&a, "g");
+    assert!(live.grows >= 2, "5000 keys into 1024 slots must grow, saw {}", live.grows);
+    drop(a); // no checkpoint: the restart below replays the full log
+
+    // Same-history oracle: full-probe bit-identity is required here
+    // (both sides ran the identical sequential op stream).
+    let oracle = engine(1, 1);
+    oracle.create_namespace_with("g", 500, 1).unwrap();
+    for g in 0..20u64 {
+        oracle.execute_op_in("g", OpKind::Insert, block(g, seed)).unwrap();
+    }
+
+    let b = engine(1, 1);
+    let stats = Wal::open_and_recover(&b, cfg.clone()).unwrap();
+    assert_eq!(stats.records_replayed, 21, "CREATE + 20 groups");
+    let replayed = row(&b, "g");
+    assert_eq!(replayed.slots, live.slots, "replay must reproduce every growth point");
+    assert_eq!(replayed.grows, live.grows);
+    assert_eq!(replayed.len, live.len);
+    for g in (0..20u64).chain([900]) {
+        let ks = block(g, seed);
+        let got = b.execute_op_in("g", OpKind::Query, ks.clone()).unwrap();
+        let want = oracle.execute_op_in("g", OpKind::Query, ks).unwrap();
+        assert_eq!(
+            got.outcomes, want.outcomes,
+            "group {g}: replayed growth diverged (false positives included)"
+        );
+    }
+
+    // Checkpoint the grown engine: v2 images + manifest rows record the
+    // post-growth geometry, so a clean restart replays zero records and
+    // the tenant comes back already grown — and can keep growing.
+    let ck = b.checkpoint().unwrap().expect("durable engine");
+    assert!(ck.id >= 1);
+    let c = engine(1, 1);
+    let stats2 = Wal::open_and_recover(&c, cfg).unwrap();
+    assert_eq!(stats2.records_replayed, 0, "checkpoint must carry the grown state");
+    let restored = row(&c, "g");
+    assert_eq!(restored.slots, live.slots, "manifest/images lost the grown geometry");
+    assert_eq!(restored.grows, live.grows, "growth level must be geometry-derived");
+    assert_eq!(restored.len, live.len);
+    for g in 0..20u64 {
+        let ks = block(g, seed);
+        let got = c.execute_op_in("g", OpKind::Query, ks.clone()).unwrap();
+        let want = oracle.execute_op_in("g", OpKind::Query, ks).unwrap();
+        assert_eq!(got.outcomes, want.outcomes, "group {g}: checkpointed growth diverged");
+    }
+    // Post-restore growth still works on the restored generation stack.
+    for g in 100..110u64 {
+        durable_apply_in(&c, "g", OpKind::Insert, &block(g, seed)).unwrap();
+    }
+    assert!(row(&c, "g").grows > restored.grows, "restored tenant must keep growing");
+    let _ = fs::remove_dir_all(&dir);
+}

@@ -211,6 +211,77 @@ fn evicted_then_faulted_tenant_answers_byte_identically() {
 }
 
 #[test]
+fn grown_tenant_recharges_the_tiering_budget_and_pages_out_the_coldest() {
+    // PR-8 leg: elastic growth must re-account resident bytes LIVE. The
+    // registry caches no per-tenant byte figure — both the STATS row
+    // and the budget enforcement recompute from the filter (retired
+    // generations included), so a tenant that doubles mid-serving
+    // immediately weighs its true size against the budget and pushes
+    // the coldest idle tenant out.
+    let seed = stress_seed();
+    let spill = spill_dir("growbudget", seed);
+    let e = engine(1 << 14, 1);
+    e.create_namespace_with("grower", 1_000, 1).unwrap();
+    e.create_namespace_with("cold", 1_000, 1).unwrap();
+    let oracle = engine(1_000, 1);
+
+    for g in 0..2u64 {
+        e.execute_op_in("cold", OpKind::Insert, block(g ^ 0xCC, seed)).unwrap();
+    }
+    let ks = block(0, seed);
+    e.execute_op_in("grower", OpKind::Insert, ks.clone()).unwrap();
+    oracle.execute_op(OpKind::Insert, ks);
+
+    let before = row(&e, "grower");
+    assert_eq!(before.grows, 0);
+
+    // Budget: exactly everything as currently sized — any growth tips it.
+    let budget = row(&e, DEFAULT_NS).resident_bytes
+        + before.resident_bytes
+        + row(&e, "cold").resident_bytes;
+    e.enable_tiering(&spill, budget).unwrap();
+
+    // Drive the grower 4× past its create-time capacity (64 groups =
+    // 4096 keys into 2048 slots → two doublings); the oracle (same
+    // geometry, same growth policy, same sequence) grows at the same
+    // points, so outcomes stay comparable.
+    let mut inserted: Vec<u64> = block(0, seed);
+    for g in 1..64u64 {
+        let ks = block(g, seed);
+        let got = e.execute_op_in("grower", OpKind::Insert, ks.clone()).unwrap();
+        let want = oracle.execute_op(OpKind::Insert, ks.clone());
+        assert_eq!(got.outcomes, want.outcomes, "group {g}: insert outcomes diverged");
+        inserted.extend(ks);
+    }
+
+    let after = row(&e, "grower");
+    assert!(after.grows >= 1, "4x overfill never grew");
+    assert!(after.slots > before.slots, "slots row must show live geometry");
+    assert!(
+        after.resident_bytes > before.resident_bytes,
+        "resident bytes must be recomputed from the grown filter (retired gens included)"
+    );
+    assert_eq!(after.len, oracle.len() as u64, "grower ledger diverged");
+
+    // The grown bytes count against the budget at the next access:
+    // the untouched tenant pages out; the pinned default and the
+    // tenant being served never do.
+    assert!(!row(&e, "cold").resident, "growth must push the coldest tenant out");
+    assert!(row(&e, "grower").resident);
+    assert!(row(&e, DEFAULT_NS).resident);
+
+    // Growth was lossless: every inserted key answers like the oracle.
+    let got = e.execute_op_in("grower", OpKind::Query, inserted.clone()).unwrap();
+    let want = oracle.execute_op(OpKind::Query, inserted);
+    assert_eq!(got.outcomes, want.outcomes, "post-growth positional outcomes diverged");
+
+    // And the evicted tenant still faults back in intact.
+    let r = e.execute_op_in("cold", OpKind::Query, block(0 ^ 0xCC, seed)).unwrap();
+    assert_eq!(r.successes as usize, GROUP, "cold tenant lost keys across the page-out");
+    let _ = fs::remove_dir_all(&spill);
+}
+
+#[test]
 fn lru_budget_pages_out_the_coldest_idle_tenant() {
     let seed = stress_seed();
     let spill = spill_dir("budget", seed);

@@ -173,3 +173,52 @@ if [ -n "$stray_ns" ]; then
 fi
 
 echo "Namespace surface OK: registry lookups confined to registry.rs + engine.rs"
+
+# ---------------------------------------------------------------------
+# Elastic-growth migration confinement (PR 8).
+#
+# Online growth has exactly one migration primitive chain:
+#   CuckooFilter::grow_one_level  (filter/core.rs — walks the retiring
+#     generation, re-slots every tag via GrowthPolicy::migrate_bucket
+#     into a thread-private table, then publishes it)
+# reachable in the serving stack only through the epoch-guarded entry
+#   ShardedFilter::grow_where_needed  (coordinator/shard.rs — runs the
+#     migration under a non-blocking query-phase token so the epoch
+#     machinery keeps queries serving),
+# driven by the engine's pre-batch check. Fail CI if a grow/migrate call
+# site appears anywhere else in src/: a caller outside this chain could
+# migrate without an epoch phase (torn reads for concurrent queries) or
+# without the ledger/WAL ordering the growth decision is derived from.
+# (filter/persist.rs's test module grows filters directly to exercise
+# the grown-image round-trip — in-module tests of the owning layer are
+# part of the allowed surface.)
+
+GROWTH_CORE=rust/src/filter/core.rs
+GROWTH_SHARD=rust/src/coordinator/shard.rs
+if ! grep -q 'fn grow_one_level' "$GROWTH_CORE"; then
+  echo "error: grow_one_level not found in $GROWTH_CORE — this guard" >&2
+  echo "checks a stale entry point; update it with the filter core." >&2
+  exit 1
+fi
+if ! grep -q 'fn grow_where_needed' "$GROWTH_SHARD"; then
+  echo "error: grow_where_needed not found in $GROWTH_SHARD — this" >&2
+  echo "guard checks a stale entry point; update it with the shard layer." >&2
+  exit 1
+fi
+
+stray_migrations="$(grep -rnE '\.(grow_one_level|migrate_bucket)[[:space:]]*\(' rust/src \
+  | grep -vE '^rust/src/(filter/(core|policy|persist)\.rs|coordinator/shard\.rs):' || true)"
+stray_growth="$(grep -rnE '\.grow_where_needed[[:space:]]*\(' rust/src \
+  | grep -vE '^rust/src/coordinator/(shard|engine)\.rs:' || true)"
+if [ -n "$stray_migrations$stray_growth" ]; then
+  echo "error: growth/migration reached outside the epoch-guarded chain:" >&2
+  printf '%s\n' "$stray_migrations" "$stray_growth" | sed '/^$/d' >&2
+  echo >&2
+  echo "Growth is detected at ticket resolution (shard.rs) and executed" >&2
+  echo "only by ShardedFilter::grow_where_needed under a query-phase" >&2
+  echo "token; route new callers through the engine's pre-batch check" >&2
+  echo "instead of migrating directly." >&2
+  exit 1
+fi
+
+echo "Growth surface OK: migration confined to the epoch-guarded growth chain"
