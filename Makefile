@@ -1,0 +1,23 @@
+# Repo tooling. The Rust crate builds with plain cargo (std only);
+# `make artifacts` is the one Python step, lowering the JAX model to
+# the AOT HLO-text artifacts the native interpreter executes
+# (rust/src/runtime/interp/). Requires jax on the Python side only —
+# Python never runs on the Rust request path.
+
+ARTIFACTS_DIR ?= artifacts
+
+.PHONY: artifacts fixture
+
+# Serving-scale artifact set (defaults: 4096 buckets x 16 slots,
+# batch 4096). Point `repro serve --backend aot --artifacts $(ARTIFACTS_DIR)`
+# at the output.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
+
+# Regenerate the checked-in golden fixture consumed by `cargo test`
+# (tiny geometry: 64 buckets x 16 slots, batch 128, tile 64). Only
+# needed when the lowering in python/compile/ changes; the fixture is
+# committed so tests run with no Python step.
+fixture:
+	cd python && python -m compile.aot --out-dir ../rust/tests/fixtures/aot_64 \
+	  --buckets 64 --slots 16 --batch 128 --tile 64

@@ -25,7 +25,7 @@ fn main() {
             // Two device pools: shards {0,2} and {1,3} run their fused
             // kernels concurrently (the multi-GPU topology analogue).
             pools: 2,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap(),
     );

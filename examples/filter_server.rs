@@ -1,7 +1,8 @@
 //! END-TO-END DRIVER (the repo's full-stack validation): a filter server
-//! whose *query path runs through the AOT-compiled Pallas kernel via
-//! PJRT* — Layer 1 (Pallas SWAR kernel) → Layer 2 (JAX model, lowered to
-//! HLO once by `make artifacts`) → Layer 3 (this Rust coordinator:
+//! whose *query path executes the AOT-compiled artifacts through the
+//! native HLO interpreter* — Layer 1 (Pallas SWAR kernel) → Layer 2
+//! (JAX model, lowered to HLO once by `make artifacts`) → Layer 3
+//! (this Rust coordinator:
 //! dynamic batcher, epoch guard, TCP line protocol). Python is not
 //! running anywhere while this serves.
 //!
@@ -24,8 +25,8 @@ fn main() {
         std::process::exit(1);
     }
     let engine = Arc::new(Engine::with_pjrt(artifacts, cuckoo_gpu::device::default_workers()).unwrap());
-    assert!(engine.pjrt_active(), "PJRT query path must be active");
-    println!("engine up: PJRT query path ACTIVE (queries execute the AOT Pallas kernel)");
+    assert!(engine.pjrt_active(), "AOT query path must be active");
+    println!("engine up: AOT query path ACTIVE (queries execute the interpreted artifacts)");
 
     let server = Arc::new(Server::new(engine.clone(), BatcherConfig::default()));
     let shutdown = server.shutdown_handle();

@@ -208,7 +208,7 @@ fn batch_pipeline_overlap() {
             shards: 8,
             workers: cuckoo_gpu::device::default_workers(),
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap(),
     );
@@ -288,7 +288,7 @@ fn tenant_mix() {
             shards: 4,
             workers: cuckoo_gpu::device::default_workers(),
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap();
         let names: Vec<String> = (0..tenants).map(|t| format!("tenant{t}")).collect();

@@ -97,13 +97,20 @@ struct Row {
 
 pub fn run(opts: &BenchOpts) {
     println!("== Figure 3: throughput, all filters, 95% load ==");
-    println!(
-        "   scales: L2-resident {} slots, DRAM-resident {} slots, {} workers, {} runs",
-        opts.l2_slots, opts.dram_slots, opts.workers, opts.runs
-    );
     // One persistent pool for the whole figure: every measured batch is
     // an enqueue on already-running workers, so per-launch cost does not
-    // pollute the throughput numbers.
+    // pollute the throughput numbers. The measured batches go through the
+    // selected backend (`--backend aot` wraps the device in AotBackend);
+    // the access tracer below needs the concrete device.
+    let backend = opts.build_backend();
+    println!(
+        "   scales: L2-resident {} slots, DRAM-resident {} slots, {} workers, {} runs, backend {}",
+        opts.l2_slots,
+        opts.dram_slots,
+        opts.workers,
+        opts.runs,
+        backend.kind()
+    );
     let device = Device::with_workers(opts.workers);
     let mut rows = Vec::new();
 
@@ -133,15 +140,15 @@ pub fn run(opts: &BenchOpts) {
                 || *filter.borrow_mut() = kind.build(capacity),
                 || {
                     let f = filter.borrow();
-                    common::run_batch(f.as_ref(), &device, OpKind::Insert, &insert_keys);
+                    common::run_batch(f.as_ref(), backend.as_ref(), OpKind::Insert, &insert_keys);
                 },
             );
             // positive / negative queries over the filled filter
             let t_qpos = super::measure_throughput(n_probe, opts.runs, || {}, || {
-                common::run_batch(filter.borrow().as_ref(), &device, OpKind::Query, &pos);
+                common::run_batch(filter.borrow().as_ref(), backend.as_ref(), OpKind::Query, &pos);
             });
             let t_qneg = super::measure_throughput(n_probe, opts.runs, || {}, || {
-                common::run_batch(filter.borrow().as_ref(), &device, OpKind::Query, &neg);
+                common::run_batch(filter.borrow().as_ref(), backend.as_ref(), OpKind::Query, &neg);
             });
             // delete (refill between runs)
             let t_del = if filter.borrow().supports_delete() {
@@ -151,7 +158,7 @@ pub fn run(opts: &BenchOpts) {
                     || {},
                     || {
                         let f = filter.borrow();
-                        common::run_batch(f.as_ref(), &device, OpKind::Delete, &insert_keys);
+                        common::run_batch(f.as_ref(), backend.as_ref(), OpKind::Delete, &insert_keys);
                     },
                 )
             } else {
@@ -312,6 +319,7 @@ mod tests {
             warmup: 0,
             workers: 2,
             out_dir: std::env::temp_dir().join("fig3_test"),
+            ..BenchOpts::default()
         };
         run(&opts);
         assert!(opts.out_dir.join("fig3_throughput.csv").exists());

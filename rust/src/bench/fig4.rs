@@ -11,7 +11,6 @@ use crate::baselines::{
     common, AmqFilter, BlockedBloomFilter, PartitionedCuckooFilter, QuotientFilter,
     TwoChoiceFilter,
 };
-use crate::device::Device;
 use crate::filter::{CuckooConfig, CuckooFilter, Fp16};
 use crate::op::OpKind;
 use crate::workload;
@@ -72,7 +71,7 @@ pub const FILTERS: [(&str, Build); 5] = [
 
 pub fn run(opts: &BenchOpts) {
     println!("== Figure 4: empirical FPR vs memory size, 95% load ==");
-    let device = Device::with_workers(opts.workers);
+    let backend = opts.build_backend();
     let table = Table::new(&["bytes", "filter", "fill_keys", "empirical_fpr"]);
     let mut csv = Csv::create(&opts.out_dir, "fig4_fpr.csv", "bytes,filter,fill_keys,fpr")
         .expect("csv");
@@ -86,9 +85,9 @@ pub fn run(opts: &BenchOpts) {
         for (name, build) in FILTERS {
             let (filter, cap) = build(bytes);
             let keys = workload::insert_keys(cap, 0xF16_4 ^ pow as u64);
-            common::run_batch(filter.as_ref(), &device, OpKind::Insert, &keys);
+            common::run_batch(filter.as_ref(), backend.as_ref(), OpKind::Insert, &keys);
             let negatives = workload::negative_probes(probes_n, 0xBAD ^ pow as u64);
-            let fpr = common::empirical_fpr(filter.as_ref(), &device, &negatives);
+            let fpr = common::empirical_fpr(filter.as_ref(), backend.as_ref(), &negatives);
             table.print_row(&[
                 format!("2^{pow}"),
                 name.to_string(),

@@ -12,7 +12,6 @@
 use super::{fmt_tput, BenchOpts, Csv, Table};
 use crate::baselines::common;
 use crate::bench::fig3::{Kind, ALL_KINDS};
-use crate::device::Device;
 use crate::kmer::{distinct_kmers, SynthConfig, SyntheticGenome};
 use crate::op::OpKind;
 use crate::workload;
@@ -24,7 +23,7 @@ pub struct Row {
 }
 
 pub fn collect(opts: &BenchOpts, genome_len: usize) -> (Vec<Row>, usize) {
-    let device = Device::with_workers(opts.workers);
+    let backend = opts.build_backend();
     println!("   generating synthetic genome ({genome_len} bp)...");
     let genome = SyntheticGenome::generate(SynthConfig {
         length: genome_len,
@@ -46,15 +45,15 @@ pub fn collect(opts: &BenchOpts, genome_len: usize) -> (Vec<Row>, usize) {
             opts.runs,
             || *filter.borrow_mut() = kind.build(kmers.len()),
             || {
-                common::run_batch(filter.borrow().as_ref(), &device, OpKind::Insert, &kmers);
+                common::run_batch(filter.borrow().as_ref(), backend.as_ref(), OpKind::Insert, &kmers);
             },
         );
         let t_q = super::measure_throughput(probes.len(), opts.runs, || {}, || {
-            common::run_batch(filter.borrow().as_ref(), &device, OpKind::Query, &probes);
+            common::run_batch(filter.borrow().as_ref(), backend.as_ref(), OpKind::Query, &probes);
         });
         let t_d = if filter.borrow().supports_delete() {
             super::measure_throughput(kmers.len(), 1, || {}, || {
-                common::run_batch(filter.borrow().as_ref(), &device, OpKind::Delete, &kmers);
+                common::run_batch(filter.borrow().as_ref(), backend.as_ref(), OpKind::Delete, &kmers);
             })
         } else {
             f64::NAN

@@ -32,6 +32,12 @@ pub struct BenchOpts {
     pub workers: usize,
     /// Output directory for CSV capture.
     pub out_dir: std::path::PathBuf,
+    /// Execution backend family for the batch drivers
+    /// (`--backend {native,aot}`).
+    pub backend: crate::device::BackendKind,
+    /// Artifacts directory for `--backend aot` (`--artifacts DIR`,
+    /// default `artifacts/`).
+    pub artifacts: Option<std::path::PathBuf>,
 }
 
 impl Default for BenchOpts {
@@ -45,6 +51,8 @@ impl Default for BenchOpts {
             warmup: 1,
             workers: crate::device::default_workers(),
             out_dir: "bench_out".into(),
+            backend: crate::device::BackendKind::Native,
+            artifacts: None,
         }
     }
 }
@@ -63,7 +71,39 @@ impl BenchOpts {
         if let Some(d) = args.get("out-dir") {
             o.out_dir = d.into();
         }
+        if let Some(tok) = args.get("backend") {
+            match crate::device::BackendKind::parse(tok) {
+                Some(kind) => o.backend = kind,
+                None => {
+                    eprintln!("unknown backend '{tok}' (expected native or aot)");
+                    std::process::exit(2);
+                }
+            }
+        }
+        o.artifacts = args.get("artifacts").map(Into::into);
         o
+    }
+
+    /// Build the batch backend the figure drivers measure through. For
+    /// `--backend aot` the native device is wrapped in an
+    /// [`crate::device::AotBackend`] over the artifacts directory
+    /// (default `artifacts/`) — strict: a missing or unloadable artifact
+    /// set aborts, exactly like `repro serve --backend aot`.
+    pub fn build_backend(&self) -> Box<dyn crate::device::Backend> {
+        let native: Box<dyn crate::device::Backend> =
+            Box::new(crate::device::Device::with_workers(self.workers));
+        match self.backend {
+            crate::device::BackendKind::Native => native,
+            crate::device::BackendKind::Aot => {
+                let dir = self
+                    .artifacts
+                    .clone()
+                    .unwrap_or_else(|| "artifacts".into());
+                let rt = crate::runtime::RuntimeHandle::spawn(&dir)
+                    .unwrap_or_else(|e| panic!("--backend aot: {e}"));
+                Box::new(crate::device::AotBackend::new(native, rt))
+            }
+        }
     }
 
     /// Quick profile for `cargo bench` wrappers and CI smoke runs.

@@ -478,7 +478,7 @@ mod tests {
                 shards: 1,
                 workers: 2,
                 pools: 1,
-                artifacts_dir: None,
+                ..EngineConfig::default()
             })
             .unwrap(),
         )
@@ -639,7 +639,7 @@ mod tests {
                 shards: 4,
                 workers: 4,
                 pools: 2,
-                artifacts_dir: None,
+                ..EngineConfig::default()
             })
             .unwrap(),
         );

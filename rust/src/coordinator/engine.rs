@@ -1,5 +1,5 @@
 //! The servable engine: sharded filter + device backend + epoch guard
-//! + metrics (+ optional PJRT runtime on the query path).
+//! + metrics (+ optional AOT interpreter backend on the query path).
 //!
 //! The engine is written against the backend-agnostic launch surface
 //! ([`Backend`]): it holds a `Box<dyn Backend>` built from the
@@ -37,7 +37,7 @@ use super::registry::{
 use super::request::{OpKind, Request, Response};
 use super::shard::{BatchTicket, ShardedFilter};
 use super::wal::{CheckpointStats, Wal, WalRecord, WalStats};
-use crate::device::{build_backend, Backend};
+use crate::device::{build_backend, AotBackend, Backend, BackendKind};
 use crate::filter::{FilterError, Fp16, GrowthConfig};
 use crate::mem::{ArenaStats, BufferArena};
 use crate::runtime::{RuntimeError, RuntimeHandle};
@@ -45,8 +45,8 @@ use crate::util::Timer;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-/// Construction failure: the filter geometry was rejected or the PJRT
-/// runtime could not come up for a strict (`with_pjrt`) engine.
+/// Construction failure: the filter geometry was rejected or the AOT
+/// runtime could not come up for a strict (`backend: Aot`) engine.
 #[derive(Debug)]
 pub enum EngineError {
     Filter(FilterError),
@@ -88,8 +88,17 @@ pub struct EngineConfig {
     /// per-stream fused kernels that genuinely overlap (see
     /// [`crate::device::DeviceTopology`]).
     pub pools: usize,
-    /// Artifacts directory for the PJRT query path (None = native only).
+    /// Artifacts directory for the AOT query path (None = native only).
     pub artifacts_dir: Option<std::path::PathBuf>,
+    /// Execution backend family. [`BackendKind::Native`] serves from the
+    /// fused device kernels, opportunistically wrapping them in an
+    /// [`AotBackend`] when `artifacts_dir` is set and its geometry
+    /// matches; a mismatch is recorded ([`Engine::backend_note`]) and
+    /// serving proceeds natively. [`BackendKind::Aot`] is strict: it
+    /// requires `artifacts_dir`, builds the filter FROM the artifact
+    /// geometry (ignoring `capacity`/`shards`), and fails construction
+    /// if the runtime cannot come up.
+    pub backend: BackendKind,
 }
 
 impl Default for EngineConfig {
@@ -100,6 +109,7 @@ impl Default for EngineConfig {
             workers: crate::device::default_workers(),
             pools: 1,
             artifacts_dir: None,
+            backend: BackendKind::Native,
         }
     }
 }
@@ -123,7 +133,11 @@ pub struct Engine {
     backend: Box<dyn Backend>,
     epoch: EpochGuard,
     pub metrics: Metrics,
-    runtime: Option<RuntimeHandle>,
+    /// Why the AOT offload path is inactive on a native engine that
+    /// asked for artifacts: a named [`RuntimeError::GeometryMismatch`]
+    /// or the runtime's load error. Surfaced verbatim in STATS — a
+    /// disabled acceleration path is never silent.
+    backend_note: Option<RuntimeError>,
     /// The one batch-scratch arena shared by every layer of this
     /// engine's pipeline: the filter leases its submit scratch from it,
     /// the batcher leases group key buffers and donates response
@@ -144,49 +158,98 @@ pub struct Engine {
 impl Engine {
     pub fn new(cfg: EngineConfig) -> Result<Self, EngineError> {
         let arena = Arc::new(BufferArena::new());
-        let filter = Arc::new(
-            ShardedFilter::with_capacity(cfg.capacity, cfg.shards)?.with_arena(arena.clone()),
-        );
-        let runtime = match &cfg.artifacts_dir {
-            Some(dir) => match RuntimeHandle::spawn(dir) {
-                Ok(rt) => {
-                    // The PJRT artifact is usable only if the single shard
-                    // matches its static geometry exactly.
-                    let g = &rt.geometry;
-                    let usable = cfg.shards == 1
-                        && filter.shard(0).config().num_buckets == g.num_buckets
-                        && filter.shard(0).config().bucket_slots == g.bucket_slots
-                        && filter.shard(0).config().seed == g.seed;
-                    if usable {
-                        Some(rt)
-                    } else {
-                        eprintln!(
-                            "[cuckoo-gpu] warn: artifacts geometry mismatch; PJRT query \
-                             path disabled (need shards=1, buckets={}, slots={}, seed={})",
-                            g.num_buckets, g.bucket_slots, g.seed
-                        );
-                        None
-                    }
-                }
-                Err(e) => {
-                    // Soft fallback: serve natively rather than refuse to
-                    // start (e.g. built without the `xla` feature).
-                    eprintln!("[cuckoo-gpu] warn: PJRT runtime unavailable, native path only: {e}");
-                    None
-                }
-            },
-            None => None,
+        let mut backend_note = None;
+        // Resolve (filter, backend) per the requested backend family.
+        let (filter, capacity, shards, backend): (
+            Arc<ShardedFilter<Fp16>>,
+            usize,
+            usize,
+            Box<dyn Backend>,
+        ) = match cfg.backend {
+            BackendKind::Aot => {
+                // Strict: artifacts are the source of truth — the filter
+                // is built FROM their geometry so offload is active by
+                // construction, and any load failure aborts boot.
+                let dir = cfg.artifacts_dir.clone().ok_or_else(|| {
+                    RuntimeError::Manifest(
+                        "backend 'aot' requires an artifacts directory (--artifacts <dir>)"
+                            .to_string(),
+                    )
+                })?;
+                let rt = RuntimeHandle::spawn(&dir)?;
+                let g = rt.geometry.clone();
+                let fcfg = crate::filter::CuckooConfig::new(g.num_buckets)
+                    .bucket_slots(g.bucket_slots)
+                    .seed(g.seed);
+                let filter = Arc::new(
+                    ShardedFilter::from_single(crate::filter::CuckooFilter::<Fp16>::new(fcfg)?)
+                        .with_arena(arena.clone()),
+                );
+                let backend: Box<dyn Backend> =
+                    Box::new(AotBackend::new(build_backend(cfg.pools, cfg.workers), rt));
+                (filter, g.num_buckets * g.bucket_slots, 1, backend)
+            }
+            BackendKind::Native => {
+                let filter = Arc::new(
+                    ShardedFilter::with_capacity(cfg.capacity, cfg.shards)?
+                        .with_arena(arena.clone()),
+                );
+                let native = build_backend(cfg.pools, cfg.workers);
+                let backend: Box<dyn Backend> = match &cfg.artifacts_dir {
+                    Some(dir) => match RuntimeHandle::spawn(dir) {
+                        Ok(rt) => {
+                            // The artifacts are usable only if the single
+                            // shard matches their static geometry exactly.
+                            let g = &rt.geometry;
+                            let fcfg = filter.shard(0).config();
+                            let usable = cfg.shards == 1
+                                && fcfg.num_buckets == g.num_buckets
+                                && fcfg.bucket_slots == g.bucket_slots
+                                && fcfg.seed == g.seed;
+                            if usable {
+                                Box::new(AotBackend::new(native, rt))
+                            } else {
+                                backend_note = Some(RuntimeError::GeometryMismatch {
+                                    artifact: format!(
+                                        "{}x{} seed {}",
+                                        g.num_buckets, g.bucket_slots, g.seed
+                                    ),
+                                    filter: format!(
+                                        "{} shard(s), {}x{} seed {}",
+                                        cfg.shards,
+                                        fcfg.num_buckets,
+                                        fcfg.bucket_slots,
+                                        fcfg.seed
+                                    ),
+                                });
+                                native
+                            }
+                        }
+                        Err(e) => {
+                            // Recorded, not fatal: a native engine serves
+                            // natively; STATS names why offload is off.
+                            backend_note = Some(e);
+                            native
+                        }
+                    },
+                    None => native,
+                };
+                (filter, cfg.capacity, cfg.shards, backend)
+            }
         };
+        if let Some(note) = &backend_note {
+            eprintln!("[cuckoo-gpu] warn: AOT offload disabled: {note}");
+        }
         let registry = NamespaceRegistry::new(arena.clone());
-        registry.install_pinned(DEFAULT_NS, filter.clone(), cfg.capacity);
+        registry.install_pinned(DEFAULT_NS, filter.clone(), capacity);
         Ok(Self {
             registry,
             default_filter: filter,
-            ns_defaults: (cfg.capacity, cfg.shards),
-            backend: build_backend(cfg.pools, cfg.workers),
+            ns_defaults: (capacity, shards),
+            backend,
             epoch: EpochGuard::new(),
             metrics: Metrics::new(),
-            runtime,
+            backend_note,
             arena,
             wal: std::sync::OnceLock::new(),
             debug_fail_next_execute: AtomicBool::new(false),
@@ -194,38 +257,30 @@ impl Engine {
     }
 
     /// Build an engine whose single shard matches the artifacts exactly,
-    /// so the PJRT path is active (used by the filter_server example).
-    /// Strict: fails if the runtime cannot come up.
+    /// so the AOT offload path is active (used by the filter_server
+    /// example). Strict: fails if the runtime cannot come up. Thin
+    /// wrapper over [`Engine::new`] with [`BackendKind::Aot`].
     pub fn with_pjrt(dir: impl Into<std::path::PathBuf>, workers: usize) -> Result<Self, EngineError> {
-        let dir = dir.into();
-        let rt = RuntimeHandle::spawn(&dir)?;
-        let g = rt.geometry.clone();
-        let cfg = crate::filter::CuckooConfig::new(g.num_buckets)
-            .bucket_slots(g.bucket_slots)
-            .seed(g.seed);
-        let filter_inner = crate::filter::CuckooFilter::<Fp16>::new(cfg)?;
-        let arena = Arc::new(BufferArena::new());
-        let filter =
-            Arc::new(ShardedFilter::from_single(filter_inner).with_arena(arena.clone()));
-        let capacity = g.num_buckets * g.bucket_slots;
-        let registry = NamespaceRegistry::new(arena.clone());
-        registry.install_pinned(DEFAULT_NS, filter.clone(), capacity);
-        Ok(Self {
-            registry,
-            default_filter: filter,
-            ns_defaults: (capacity, 1),
-            backend: build_backend(1, workers),
-            epoch: EpochGuard::new(),
-            metrics: Metrics::new(),
-            runtime: Some(rt),
-            arena,
-            wal: std::sync::OnceLock::new(),
-            debug_fail_next_execute: AtomicBool::new(false),
+        Engine::new(EngineConfig {
+            workers,
+            artifacts_dir: Some(dir.into()),
+            backend: BackendKind::Aot,
+            ..EngineConfig::default()
         })
     }
 
+    /// Is the AOT offload path live (an [`AotBackend`] with loaded
+    /// artifacts answering default-namespace queries)?
     pub fn pjrt_active(&self) -> bool {
-        self.runtime.is_some()
+        self.backend.offload_shape().is_some()
+    }
+
+    /// Why the AOT offload path is inactive despite artifacts having
+    /// been requested (geometry mismatch or runtime load failure);
+    /// `None` when offload is live or was never asked for. The STATS
+    /// `backend:` section prints this verbatim.
+    pub fn backend_note(&self) -> Option<&RuntimeError> {
+        self.backend_note.as_ref()
     }
 
     /// Number of independent submission streams (device pools) serving
@@ -609,61 +664,15 @@ impl Engine {
         } else {
             self.epoch.begin_query()
         };
-        if op == OpKind::Query && ns == DEFAULT_NS && !filter.has_grown() {
-            if let Some(rt) = &self.runtime {
-                // AOT path only while the filter still has its boot
-                // geometry: the compiled artifact bakes in bucket
-                // count/snapshot layout, so a grown filter falls through
-                // to the native path (which reads the live generation).
-                // Snapshot + PJRT batches, synchronous inside
-                // the query phase (no concurrent mutation). This branch
-                // exchanges owned buffers with the runtime (a staged key
-                // copy in, the flag vector out), so it sits OUTSIDE the
-                // arena's zero-allocation cycle — the steady-state
-                // guarantee is scoped to the native path, which is the
-                // only one tests/alloc_reuse.rs runs.
-                let (successes, outcomes) = {
-                    let snapshot = Arc::new(filter.shard(0).table().snapshot());
-                    match rt.query_all(snapshot, keys.to_vec()) {
-                        Ok(flags) => {
-                            // The runtime's flags ARE the positional
-                            // outcomes — hold it to the same length
-                            // contract the old copy_from_slice enforced.
-                            assert_eq!(
-                                flags.len(),
-                                n,
-                                "PJRT runtime returned {} flags for {} keys",
-                                flags.len(),
-                                n
-                            );
-                            let successes = flags.iter().filter(|&&b| b).count() as u64;
-                            (successes, flags)
-                        }
-                        Err(e) => {
-                            eprintln!(
-                                "[cuckoo-gpu] error: PJRT query failed, native fallback: {e}"
-                            );
-                            // Same unified path, degraded to sync: submit
-                            // + wait inside the held query phase.
-                            filter.submit(self.backend.as_ref(), OpKind::Query, keys).wait()
-                        }
-                    }
-                };
-                drop(phase);
-                drop(guard);
-                self.metrics.record(op, n, successes, timer.elapsed_ns());
-                return Ok(ExecTicket {
-                    inner: Some(TicketInner::Ready(Response {
-                        op,
-                        outcomes,
-                        successes,
-                    })),
-                });
-            }
-        }
+        // AOT offload is the *filter's* concern now: `submit` consults
+        // the backend's offload shape, checks the live geometry (grown
+        // filters and sharded tenants fall back natively, counted in the
+        // backend's mismatch stats) and returns an already-resolved
+        // ticket when the interpreted graph answered the batch. The
+        // engine path is identical either way.
         let batch = filter.submit(self.backend.as_ref(), op, keys);
         Ok(ExecTicket {
-            inner: Some(TicketInner::Pending {
+            inner: Some(TicketInner {
                 op,
                 n,
                 batch,
@@ -688,23 +697,21 @@ pub struct ExecTicket<'e> {
     inner: Option<TicketInner<'e>>,
 }
 
-enum TicketInner<'e> {
-    /// Completed at submit (PJRT query path).
-    Ready(Response),
-    /// Kernels in flight on the backend (one per stream segment).
-    /// Field order matters: `batch` must drop (and thus resolve on every
-    /// stream) before `_phase` releases the epoch-phase token.
-    Pending {
-        op: OpKind,
-        n: usize,
-        batch: BatchTicket<Fp16>,
-        _phase: PhaseToken<'e>,
-        /// Holds the namespace's inflight count up (blocking eviction)
-        /// until after `batch` resolves — declared after it on purpose.
-        _ns: Option<InflightGuard>,
-        timer: Timer,
-        metrics: &'e Metrics,
-    },
+/// Kernels in flight on the backend (one per stream segment) — or, on
+/// the AOT offload path, an already-resolved batch ticket; both resolve
+/// through the same `wait`. Field order matters: `batch` must drop (and
+/// thus resolve on every stream) before `_phase` releases the
+/// epoch-phase token.
+struct TicketInner<'e> {
+    op: OpKind,
+    n: usize,
+    batch: BatchTicket<Fp16>,
+    _phase: PhaseToken<'e>,
+    /// Holds the namespace's inflight count up (blocking eviction)
+    /// until after `batch` resolves — declared after it on purpose.
+    _ns: Option<InflightGuard>,
+    timer: Timer,
+    metrics: &'e Metrics,
 }
 
 impl ExecTicket<'_> {
@@ -712,51 +719,40 @@ impl ExecTicket<'_> {
     /// per-key outcomes in the request's key order. A device-worker
     /// panic during the kernel re-raises here, not at submit.
     pub fn wait(mut self) -> Response {
-        match self.inner.take().expect("ticket already resolved") {
-            TicketInner::Ready(resp) => resp,
-            TicketInner::Pending {
-                op,
-                n,
-                batch,
-                _phase,
-                _ns,
-                timer,
-                metrics,
-            } => {
-                let (successes, outcomes) = batch.wait();
-                metrics.record(op, n, successes, timer.elapsed_ns());
-                let resp = Response {
-                    op,
-                    outcomes,
-                    successes,
-                };
-                // Saturation tally: rejected insert keys (TooFull) feed
-                // the global `too_full=` STATS counter at resolution —
-                // the same point the shard ledger is applied.
-                let rejected = resp.too_full();
-                if rejected > 0 {
-                    metrics.record_too_full(rejected);
-                }
-                resp
-            }
+        let TicketInner {
+            op,
+            n,
+            batch,
+            _phase,
+            _ns,
+            timer,
+            metrics,
+        } = self.inner.take().expect("ticket already resolved");
+        let (successes, outcomes) = batch.wait();
+        metrics.record(op, n, successes, timer.elapsed_ns());
+        let resp = Response {
+            op,
+            outcomes,
+            successes,
+        };
+        // Saturation tally: rejected insert keys (TooFull) feed the
+        // global `too_full=` STATS counter at resolution — the same
+        // point the shard ledger is applied.
+        let rejected = resp.too_full();
+        if rejected > 0 {
+            metrics.record_too_full(rejected);
         }
+        resp
     }
 
     /// Non-blocking completion probe.
     pub fn is_done(&self) -> bool {
-        match self.inner.as_ref() {
-            None => true,
-            Some(TicketInner::Ready(_)) => true,
-            Some(TicketInner::Pending { batch, .. }) => batch.is_done(),
-        }
+        self.inner.as_ref().map_or(true, |t| t.batch.is_done())
     }
 
     /// The operation this ticket resolves.
     pub fn op(&self) -> OpKind {
-        match self.inner.as_ref().expect("ticket already resolved") {
-            TicketInner::Ready(resp) => resp.op,
-            TicketInner::Pending { op, .. } => *op,
-        }
+        self.inner.as_ref().expect("ticket already resolved").op
     }
 }
 
@@ -776,7 +772,7 @@ mod tests {
             shards: 2,
             workers: 4,
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap();
         let ks = keys(10_000, 1);
@@ -804,7 +800,7 @@ mod tests {
             shards: 1,
             workers: 2,
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap();
         let present = keys(500, 2);
@@ -829,7 +825,7 @@ mod tests {
             shards: 5,
             workers: 4,
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap();
         let present = keys(8_000, 6);
@@ -853,7 +849,7 @@ mod tests {
             shards: 2,
             workers: 2,
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap();
         for op in OpKind::ALL {
@@ -875,7 +871,7 @@ mod tests {
             shards: 8,
             workers: 4,
             pools: 4,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap();
         assert_eq!(e.pools(), 4);
@@ -918,7 +914,7 @@ mod tests {
             shards: 4,
             workers: 4,
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap();
         let ks = keys(20_000, 8);
@@ -943,7 +939,7 @@ mod tests {
             shards: 3,
             workers: 4,
             pools: 2,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap();
         let ks = keys(6_000, 9);
@@ -963,7 +959,7 @@ mod tests {
             shards: 2,
             workers: 4,
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap();
         e.create_namespace("t1", Some(10_000)).unwrap();
@@ -1013,7 +1009,7 @@ mod tests {
             shards: 4,
             workers: 4,
             pools: 2,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap();
         let ks = keys(4_000, 12);
@@ -1048,7 +1044,7 @@ mod tests {
             shards: 1,
             workers: 2,
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap();
         e.create_namespace_with("tiny", 1_000, 1).unwrap();
@@ -1090,7 +1086,7 @@ mod tests {
             shards: 1,
             workers: 2,
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap();
         e.create_namespace_with_growth("pinned", 1_000, 1, GrowthConfig::disabled())
@@ -1117,5 +1113,91 @@ mod tests {
         assert_eq!(pinned.slots, slots0, "disabled growth resized the table");
         assert_eq!(pinned.grows, 0);
         assert!(!e.growth_due_in("pinned"));
+    }
+
+    fn fixture_dir() -> std::path::PathBuf {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/aot_64")
+    }
+
+    #[test]
+    fn aot_backend_without_artifacts_is_an_error() {
+        let e = Engine::new(EngineConfig {
+            backend: BackendKind::Aot,
+            ..EngineConfig::default()
+        });
+        let msg = e.err().expect("must refuse to boot").to_string();
+        assert!(msg.contains("requires an artifacts directory"), "{msg}");
+    }
+
+    #[test]
+    fn aot_engine_serves_queries_through_the_interpreter() {
+        let e = Engine::new(EngineConfig {
+            workers: 2,
+            artifacts_dir: Some(fixture_dir()),
+            backend: BackendKind::Aot,
+            ..EngineConfig::default()
+        })
+        .unwrap();
+        assert!(e.pjrt_active());
+        assert!(e.backend_note().is_none());
+        assert_eq!(e.backend().kind(), "aot");
+        // Geometry came from the manifest: 64 buckets x 16 slots.
+        assert_eq!(e.filter().total_slots(), 1024);
+
+        let ks = keys(100, 31);
+        let r = e.execute_op(OpKind::Insert, ks.clone());
+        assert_eq!(r.successes, 100);
+        let mut probe = ks.clone();
+        probe.extend(keys(100, 32));
+        let r = e.execute_op(OpKind::Query, probe.clone());
+        assert!(r.outcomes[..100].iter().all(|&b| b));
+        let fp = r.outcomes[100..].iter().filter(|&&b| b).count();
+        assert!(fp < 5, "absent keys should mostly miss, got {fp}");
+        let stats = e.backend().offload_stats().unwrap();
+        assert!(stats.launches >= 1, "queries must run on the interpreter");
+        assert_eq!(stats.mismatches, 0);
+    }
+
+    #[test]
+    fn native_engine_records_geometry_mismatch_and_serves_natively() {
+        let e = Engine::new(EngineConfig {
+            capacity: 10_000,
+            shards: 2,
+            workers: 2,
+            artifacts_dir: Some(fixture_dir()),
+            ..EngineConfig::default()
+        })
+        .unwrap();
+        assert!(!e.pjrt_active(), "mismatched geometry must not offload");
+        let note = e.backend_note().expect("mismatch must be recorded");
+        let s = note.to_string();
+        assert!(s.contains("geometry mismatch"), "{s}");
+        assert!(s.contains("artifact '64x16"), "{s}");
+        assert!(s.contains("2 shard(s)"), "{s}");
+        // Serving is unaffected.
+        let ks = keys(1_000, 33);
+        assert_eq!(e.execute_op(OpKind::Insert, ks.clone()).successes, 1_000);
+        assert_eq!(e.execute_op(OpKind::Query, ks).successes, 1_000);
+    }
+
+    #[test]
+    fn native_engine_with_matching_geometry_offloads_opportunistically() {
+        // capacity 900 at the 0.95 design load → 64 buckets x 16 slots,
+        // exactly the fixture geometry (and the default seed).
+        let e = Engine::new(EngineConfig {
+            capacity: 900,
+            shards: 1,
+            workers: 2,
+            artifacts_dir: Some(fixture_dir()),
+            ..EngineConfig::default()
+        })
+        .unwrap();
+        assert!(e.pjrt_active());
+        assert!(e.backend_note().is_none());
+        let ks = keys(50, 34);
+        e.execute_op(OpKind::Insert, ks.clone());
+        let r = e.execute_op(OpKind::Query, ks);
+        assert_eq!(r.successes, 50);
+        assert!(e.backend().offload_stats().unwrap().launches >= 1);
     }
 }

@@ -192,6 +192,37 @@ impl Metrics {
         line
     }
 
+    /// Backend section of the STATS reply. A native engine reports just
+    /// the family (`backend: native`); an AOT engine also reports the
+    /// loaded artifact geometry and the interpreted-launch counters:
+    /// `backend: aot geometry=64x16 seed=... launches=L keys=K
+    /// fallbacks=F mismatches=M`. When artifacts were requested but the
+    /// offload path could not come up, the recorded reason is appended
+    /// (`(aot off: ...)`) — a disabled acceleration path is named, not
+    /// silent.
+    pub fn backend_summary(backend: &dyn crate::device::Backend, note: Option<&str>) -> String {
+        let mut line = format!("backend: {}", backend.kind());
+        if let Some(shape) = backend.offload_shape() {
+            line.push_str(&format!(
+                " geometry={}x{} seed={}",
+                shape.num_buckets, shape.bucket_slots, shape.seed
+            ));
+        }
+        if let Some(s) = backend.offload_stats() {
+            line.push_str(&format!(
+                " launches={} keys={} fallbacks={} mismatches={}",
+                s.launches, s.keys, s.fallbacks, s.mismatches
+            ));
+            if let Some(m) = &s.last_mismatch {
+                line.push_str(&format!(" last_mismatch=\"{m}\""));
+            }
+        }
+        if let Some(n) = note {
+            line.push_str(&format!(" (aot off: {n})"));
+        }
+        line
+    }
+
     /// One-line human-readable summary (the server's STATS reply).
     pub fn summary(&self) -> String {
         let line = |name: &str, m: &OpMetrics| {
@@ -308,6 +339,23 @@ mod tests {
             "ns: default[n=4 resident=65536B slots=2048 grows=1] cold[n=9 evicted]"
         );
         assert_eq!(Metrics::ns_summary(&[]), "ns:");
+    }
+
+    #[test]
+    fn backend_summary_names_family_and_counters() {
+        let native = crate::device::Device::with_workers(1);
+        assert_eq!(Metrics::backend_summary(&native, None), "backend: native");
+        assert_eq!(
+            Metrics::backend_summary(&native, Some("geometry mismatch: artifact 'a' vs filter 'b'")),
+            "backend: native (aot off: geometry mismatch: artifact 'a' vs filter 'b')"
+        );
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/aot_64");
+        let rt = crate::runtime::RuntimeHandle::spawn(dir).unwrap();
+        let aot = crate::device::AotBackend::new(Box::new(crate::device::Device::with_workers(1)), rt);
+        let line = Metrics::backend_summary(&aot, None);
+        assert!(line.starts_with("backend: aot geometry=64x16 seed="), "{line}");
+        assert!(line.contains("launches=0"), "{line}");
+        assert!(line.contains("mismatches=0"), "{line}");
     }
 
     #[test]

@@ -188,12 +188,16 @@ fn handle_conn(
             }
             "LEN" => format!("OK {}", engine.len()),
             "STATS" => format!(
-                "OK {} | {} | {} | {} | {}",
+                "OK {} | {} | {} | {} | {} | {}",
                 engine.metrics.summary(),
                 crate::coordinator::metrics::Metrics::pools_summary(&engine.pool_stats()),
                 crate::coordinator::metrics::Metrics::arena_summary(&engine.arena_stats()),
                 crate::coordinator::metrics::Metrics::wal_summary(engine.wal_stats().as_ref()),
-                crate::coordinator::metrics::Metrics::ns_summary(&engine.namespaces())
+                crate::coordinator::metrics::Metrics::ns_summary(&engine.namespaces()),
+                crate::coordinator::metrics::Metrics::backend_summary(
+                    engine.backend(),
+                    engine.backend_note().map(|e| e.to_string()).as_deref(),
+                )
             ),
             "CREATE" => match parts.next() {
                 None => "ERR missing namespace".to_string(),
@@ -316,7 +320,7 @@ mod tests {
                 shards: 1,
                 workers: 2,
                 pools: 1,
-                artifacts_dir: None,
+                ..EngineConfig::default()
             })
             .unwrap(),
         );
@@ -378,6 +382,10 @@ mod tests {
         assert!(stats.contains("resident="), "arena residency missing: {stats}");
         assert!(stats.contains("wal: off"), "volatile engine must report wal off: {stats}");
         assert!(stats.contains("| ns: default[n="), "per-namespace stats missing: {stats}");
+        assert!(
+            stats.contains("| backend: native"),
+            "backend section missing: {stats}"
+        );
         assert!(c.call("BOGUS 1").unwrap().starts_with("ERR"));
 
         // Namespace lifecycle over the wire; every error names its token.

@@ -534,6 +534,59 @@ impl<L: Layout> ShardedFilter<L> {
         }
     }
 
+    /// Try to answer a query batch through the backend's AOT offload
+    /// path ([`Backend::offload_query`]): snapshot the table words,
+    /// hand `(words, keys)` to the interpreted graph, and wrap the
+    /// positional flags in an already-resolved ticket. Returns `None`
+    /// — run natively — when the backend doesn't offload at all, or
+    /// when the live filter's geometry no longer matches the compiled
+    /// artifacts (sharded, grown past the traced geometry, or differing
+    /// buckets/slots/seed). Every geometry mismatch is reported through
+    /// [`Backend::note_offload_mismatch`] so it is a named, counted
+    /// event in STATS — never a silent degradation.
+    fn submit_offload<B: Backend + ?Sized>(
+        &self,
+        backend: &B,
+        keys: &[u64],
+    ) -> Option<BatchTicket<L>> {
+        let shape = backend.offload_shape()?;
+        if self.shards.len() != 1 {
+            backend.note_offload_mismatch(&format!(
+                "geometry mismatch: artifact 'single shard' vs filter '{} shards'",
+                self.shards.len()
+            ));
+            return None;
+        }
+        let cfg = self.shards[0].config();
+        if self.has_grown()
+            || cfg.num_buckets != shape.num_buckets
+            || cfg.bucket_slots != shape.bucket_slots
+            || cfg.seed != shape.seed
+        {
+            backend.note_offload_mismatch(&format!(
+                "geometry mismatch: artifact '{}x{} seed {}' vs filter '{}x{} seed {}{}'",
+                shape.num_buckets,
+                shape.bucket_slots,
+                shape.seed,
+                cfg.num_buckets,
+                cfg.bucket_slots,
+                cfg.seed,
+                if self.has_grown() { ", grown" } else { "" },
+            ));
+            return None;
+        }
+        let words = self.shards[0].table().snapshot();
+        match backend.offload_query(words, keys) {
+            Ok(flags) => {
+                let successes = flags.iter().filter(|&&hit| hit).count() as u64;
+                Some(BatchTicket::ready(successes, flags))
+            }
+            // Execution errors are counted by the backend
+            // (`OffloadStats::fallbacks`); the batch runs natively.
+            Err(_) => None,
+        }
+    }
+
     // ARENA_HOT_PATH_BEGIN — steady-state allocation-free zone: no
     // ad-hoc Vec growth in here; all batch scratch comes from the
     // arena. Checked by scripts/check_api_surface.sh.
@@ -554,6 +607,15 @@ impl<L: Layout> ShardedFilter<L> {
         op: OpKind,
         keys: &[u64],
     ) -> BatchTicket<L> {
+        // Query batches may offload onto the backend's AOT graphs
+        // (empty batches keep the no-op ticket fast path). The helper
+        // returns None on any mismatch and the batch falls through to
+        // the native fused pipeline below.
+        if matches!(op, OpKind::Query) && !keys.is_empty() {
+            if let Some(ticket) = self.submit_offload(backend, keys) {
+                return ticket;
+            }
+        }
         let idx = match op {
             OpKind::Insert => 0,
             OpKind::Query => 1,
@@ -627,6 +689,7 @@ impl<L: Layout> ShardedFilter<L> {
                 ledger,
                 growth: self.growth.clone(),
             }),
+            ready: None,
         }
     }
 
@@ -867,6 +930,11 @@ struct ChunkInFlight {
 /// never aborts).
 pub struct BatchTicket<L: Layout> {
     inner: Option<TicketState<L>>,
+    /// Set on the AOT offload path: the batch was answered
+    /// synchronously by an interpreted graph execution — no launches to
+    /// drain, no scratch to recycle, no ledger to apply (queries never
+    /// touch the occupancy ledger).
+    ready: Option<(u64, Vec<bool>)>,
 }
 
 struct TicketState<L: Layout> {
@@ -958,19 +1026,31 @@ impl<L: Layout> TicketState<L> {
 }
 
 impl<L: Layout> BatchTicket<L> {
+    /// An already-resolved ticket: the AOT offload path answered the
+    /// batch synchronously.
+    fn ready(successes: u64, flags: Vec<bool>) -> Self {
+        BatchTicket {
+            inner: None,
+            ready: Some((successes, flags)),
+        }
+    }
+
     /// Block until every launch of the batch retires; returns the merged
     /// success count and the per-key outcomes in submitted key order.
     /// The outcomes vector is detached arena scratch — long-running
     /// callers can donate it back (`arena.flags().donate(out)`) to keep
     /// the steady state allocation-free, as the batcher does.
     pub fn wait(mut self) -> (u64, Vec<bool>) {
+        if let Some(done) = self.ready.take() {
+            return done;
+        }
         let inner = self.inner.take().expect("ticket already resolved");
         inner.finish(true)
     }
 
     /// Non-blocking completion probe: done once every launch is.
     pub fn is_done(&self) -> bool {
-        self.inner.as_ref().map_or(true, TicketState::is_done)
+        self.ready.is_some() || self.inner.as_ref().map_or(true, TicketState::is_done)
     }
 }
 
@@ -1493,5 +1573,74 @@ mod tests {
         // Idempotent: nothing left over threshold, so a second call is a
         // no-op.
         assert_eq!(a.grow_where_needed(0), 0);
+    }
+
+    fn aot_backend() -> crate::device::AotBackend {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("tests/fixtures/aot_64");
+        let rt = crate::runtime::RuntimeHandle::spawn(dir).unwrap();
+        crate::device::AotBackend::new(Box::new(Device::with_workers(2)), rt)
+    }
+
+    #[test]
+    fn query_batches_offload_onto_matching_aot_geometry() {
+        let backend = aot_backend();
+        // Fixture geometry: 64 buckets x 16 slots, default seed.
+        let s = ShardedFilter::from_single(
+            CuckooFilter::<Fp16>::new(CuckooConfig::new(64).bucket_slots(16)).unwrap(),
+        );
+        let ks = keys(60, 81);
+        let (ok, _) = s.submit(&backend, OpKind::Insert, &ks).wait();
+        assert_eq!(ok as usize, ks.len());
+        let mut probe = ks[..30].to_vec();
+        probe.extend(keys(30, 82));
+        let ticket = s.submit(&backend, OpKind::Query, &probe);
+        // The offload path resolves synchronously.
+        assert!(ticket.is_done());
+        let (hits, flags) = ticket.wait();
+        for (i, &k) in probe.iter().enumerate() {
+            assert_eq!(flags[i], s.contains(k), "key {i} disagrees with native");
+        }
+        assert_eq!(hits, flags.iter().filter(|&&b| b).count() as u64);
+        let stats = backend.offload_stats().unwrap();
+        assert!(stats.launches >= 1, "{stats:?}");
+        assert_eq!(stats.keys, probe.len() as u64);
+        assert_eq!(stats.mismatches, 0);
+    }
+
+    #[test]
+    fn geometry_mismatch_is_counted_and_served_natively() {
+        let backend = aot_backend();
+        let s = ShardedFilter::<Fp16>::with_capacity(10_000, 4).unwrap();
+        let ks = keys(500, 83);
+        s.submit(&backend, OpKind::Insert, &ks).wait();
+        let (hits, flags) = s.submit(&backend, OpKind::Query, &ks).wait();
+        assert_eq!(hits as usize, ks.len());
+        assert!(flags.iter().all(|&b| b));
+        let stats = backend.offload_stats().unwrap();
+        assert_eq!(stats.launches, 0);
+        assert!(stats.mismatches >= 1);
+        assert!(
+            stats.last_mismatch.unwrap().contains("geometry mismatch"),
+            "mismatch reason must be named"
+        );
+    }
+
+    #[test]
+    fn grown_filter_stops_offloading() {
+        let backend = aot_backend();
+        let s = ShardedFilter::from_single(
+            CuckooFilter::<Fp16>::new(CuckooConfig::new(64).bucket_slots(16)).unwrap(),
+        );
+        let ks = keys(32, 84);
+        s.submit(&backend, OpKind::Insert, &ks).wait();
+        assert!(s.submit(&backend, OpKind::Query, &ks).is_done());
+        s.shard(0).grow_one_level().unwrap();
+        assert!(s.has_grown());
+        let (hits, _) = s.submit(&backend, OpKind::Query, &ks).wait();
+        assert_eq!(hits as usize, ks.len(), "native path must still serve");
+        let stats = backend.offload_stats().unwrap();
+        assert!(stats.mismatches >= 1);
+        assert!(stats.last_mismatch.unwrap().contains("grown"));
     }
 }

@@ -1225,7 +1225,7 @@ mod tests {
             shards: 2,
             workers: 1,
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap()
     }

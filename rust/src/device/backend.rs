@@ -33,11 +33,69 @@
 //!   default to summing it.
 
 use super::{Device, DeviceTopology, LaunchToken, WarpCtx};
+use std::fmt;
 use std::sync::Arc;
 
 /// An owned, type-erased kernel: invoked once per warp with a
 /// [`WarpCtx`], shared by every worker of the launch.
 pub type Kernel = Arc<dyn Fn(&mut WarpCtx) + Send + Sync>;
+
+/// Which backend family serves an engine: the CLI's `--backend` knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The native worker-pool kernels ([`Device`] / [`DeviceTopology`]).
+    #[default]
+    Native,
+    /// [`super::AotBackend`]: query batches offload onto interpreted AOT
+    /// graph executions; mutations run on the wrapped native backend.
+    Aot,
+}
+
+impl BackendKind {
+    /// Parse the CLI token (`native` | `aot`).
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "native" => Some(BackendKind::Native),
+            "aot" => Some(BackendKind::Aot),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            BackendKind::Native => "native",
+            BackendKind::Aot => "aot",
+        })
+    }
+}
+
+/// The filter geometry a query-offloading backend can serve. A filter
+/// whose shape differs must stay on the native kernels — and the
+/// mismatch is recorded via [`Backend::note_offload_mismatch`], never
+/// silently dropped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OffloadShape {
+    pub num_buckets: usize,
+    pub bucket_slots: usize,
+    pub seed: u64,
+}
+
+/// Counters for the offload path, surfaced in STATS.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct OffloadStats {
+    /// Interpreted graph executions launched.
+    pub launches: u64,
+    /// Keys answered through the offload path.
+    pub keys: u64,
+    /// Offload attempts that errored and fell back to native kernels.
+    pub fallbacks: u64,
+    /// Geometry mismatches that kept batches on the native path.
+    pub mismatches: u64,
+    /// The most recent mismatch, verbatim.
+    pub last_mismatch: Option<String>,
+}
 
 /// Point-in-time stats of one submission stream.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -85,6 +143,38 @@ pub trait Backend: Send + Sync {
     /// Live submitted-but-unretired jobs across all streams.
     fn queue_depth(&self) -> u64 {
         self.stream_stats().iter().map(|s| s.queue_depth).sum()
+    }
+
+    /// Short family name for STATS (`native` | `aot`).
+    fn kind(&self) -> &'static str {
+        "native"
+    }
+
+    /// The filter geometry this backend can answer queries for without
+    /// the native kernels, or `None` if it never offloads (the default).
+    /// `ShardedFilter::submit` consults this before routing a query
+    /// batch to [`Backend::offload_query`].
+    fn offload_shape(&self) -> Option<OffloadShape> {
+        None
+    }
+
+    /// Answer one query batch against a table snapshot through the
+    /// offload substrate. Only called after [`Backend::offload_shape`]
+    /// matched the live filter; an `Err` sends the batch back to the
+    /// native kernels (and is counted as a fallback).
+    fn offload_query(&self, _words: Vec<u64>, _keys: &[u64]) -> Result<Vec<bool>, String> {
+        Err("backend does not offload queries".into())
+    }
+
+    /// Record a geometry mismatch that kept a batch on the native path;
+    /// offloading backends count these for STATS so the degradation is
+    /// visible, not silent.
+    fn note_offload_mismatch(&self, _why: &str) {}
+
+    /// Offload counters for STATS; `None` for backends that never
+    /// offload.
+    fn offload_stats(&self) -> Option<OffloadStats> {
+        None
     }
 }
 
@@ -218,6 +308,27 @@ mod tests {
         // Barrier semantics: every side effect visible at return.
         assert_eq!(ok, n as u64);
         assert_eq!(hits.load(Ordering::Relaxed), n as u64);
+    }
+
+    #[test]
+    fn backend_kind_parses_cli_tokens() {
+        assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("aot"), Some(BackendKind::Aot));
+        assert_eq!(BackendKind::parse("gpu"), None);
+        assert_eq!(BackendKind::default(), BackendKind::Native);
+        assert_eq!(BackendKind::Aot.to_string(), "aot");
+        assert_eq!(BackendKind::Native.to_string(), "native");
+    }
+
+    #[test]
+    fn native_backends_never_offload() {
+        let d = Device::with_workers(1);
+        assert_eq!(Backend::kind(&d), "native");
+        assert!(Backend::offload_shape(&d).is_none());
+        assert!(Backend::offload_stats(&d).is_none());
+        assert!(Backend::offload_query(&d, vec![0], &[1]).is_err());
+        // The mismatch hook is a no-op for native backends.
+        Backend::note_offload_mismatch(&d, "ignored");
     }
 
     #[test]

@@ -86,10 +86,14 @@
 //! against `&dyn Backend` / `&B: Backend` — a future real-GPU or PJRT
 //! backend slots in as one more `impl`, not another set of batch paths.
 
+pub mod aot;
 pub mod backend;
 pub mod topology;
 
-pub use backend::{build_backend, Backend, Kernel, StreamStat};
+pub use aot::AotBackend;
+pub use backend::{
+    build_backend, Backend, BackendKind, Kernel, OffloadShape, OffloadStats, StreamStat,
+};
 pub use topology::{DeviceTopology, Pinning, TopologyConfig};
 
 use std::collections::VecDeque;

@@ -7,8 +7,9 @@
 //!   ([`filter`]), a batch "kernel-launch" execution engine ([`device`]),
 //!   the five comparison baselines ([`baselines`]), a GPU memory-system
 //!   performance model ([`gpusim`]), a genomic k-mer substrate ([`kmer`]),
-//!   the serving coordinator ([`coordinator`]) and the PJRT runtime
-//!   ([`runtime`]) that executes the AOT-compiled query artifacts.
+//!   the serving coordinator ([`coordinator`]) and the native AOT
+//!   runtime ([`runtime`]) whose HLO-text interpreter executes the
+//!   compiled query artifacts.
 //! * **Layer 2** — `python/compile/model.py`: the batched filter math in
 //!   JAX, lowered once to HLO text.
 //! * **Layer 1** — `python/compile/kernels/`: Pallas kernels for hashing

@@ -4,10 +4,11 @@
 //! ```text
 //! repro bench <fig3|fig4|fig5|fig6|fig7|fig8|all> [--paper-scale]
 //!       [--l2-slots N] [--dram-slots N] [--runs N] [--workers N]
-//!       [--out-dir DIR]
+//!       [--out-dir DIR] [--backend native|aot] [--artifacts DIR]
 //! repro serve [--addr HOST:PORT] [--capacity N] [--shards N]
 //!       [--pools N] [--workers N]  # N independent device pools
-//!       [--artifacts DIR]          # line-protocol filter server
+//!       [--backend native|aot]     # query execution engine family
+//!       [--artifacts DIR]          # AOT HLO artifacts (interp runtime)
 //!       [--wal-dir DIR]            # durable serving: WAL + checkpoints
 //!       [--ckpt-secs N]            # background checkpoint period (30)
 //!       [--spill-dir DIR]          # tiering: evict cold namespaces here
@@ -65,23 +66,30 @@ fn cmd_bench(args: &Args) {
 
 fn cmd_serve(args: &Args) {
     let addr = args.get_or("addr", "127.0.0.1:7070").to_string();
-    let engine = if let Some(dir) = args.get("artifacts") {
-        println!("loading PJRT artifacts from {dir}...");
-        Arc::new(Engine::with_pjrt(dir, args.get_usize("workers", cuckoo_gpu::device::default_workers())).expect("engine"))
-    } else {
-        Arc::new(
-            Engine::new(EngineConfig {
-                capacity: args.get_usize("capacity", 1 << 20),
-                shards: args.get_usize("shards", 1),
-                workers: args.get_usize("workers", cuckoo_gpu::device::default_workers()),
-                pools: args.get_usize("pools", 1),
-                artifacts_dir: None,
-            })
-            .expect("engine"),
-        )
+    let backend = match args.get("backend") {
+        None => cuckoo_gpu::device::BackendKind::Native,
+        Some(tok) => cuckoo_gpu::device::BackendKind::parse(tok).unwrap_or_else(|| {
+            eprintln!("unknown backend '{tok}' (expected native or aot)");
+            std::process::exit(2);
+        }),
     };
+    if let Some(dir) = args.get("artifacts") {
+        println!("loading AOT artifacts from {dir}...");
+    }
+    let engine = Arc::new(
+        Engine::new(EngineConfig {
+            capacity: args.get_usize("capacity", 1 << 20),
+            shards: args.get_usize("shards", 1),
+            workers: args.get_usize("workers", cuckoo_gpu::device::default_workers()),
+            pools: args.get_usize("pools", 1),
+            artifacts_dir: args.get("artifacts").map(Into::into),
+            backend,
+        })
+        .expect("engine"),
+    );
     println!(
-        "serving on {addr} (pjrt={}, workers={}, pools={})",
+        "serving on {addr} (backend={}, offload={}, workers={}, pools={})",
+        engine.backend().kind(),
         engine.pjrt_active(),
         args.get_usize("workers", cuckoo_gpu::device::default_workers()),
         engine.pools()
@@ -125,22 +133,24 @@ fn cmd_selftest(args: &Args) {
         warmup: 0,
         workers: args.get_usize("workers", 4),
         out_dir: std::env::temp_dir().join("cuckoo_selftest"),
+        ..BenchOpts::default()
     };
     bench::fig3::run(&opts);
-    // PJRT path if artifacts exist and the backend is compiled in.
+    // AOT interpreter path if an artifact set is on disk.
     let dir = std::path::Path::new("artifacts");
-    if !cuckoo_gpu::runtime::QueryRuntime::available() {
-        println!("(built without the `xla` feature; skipping the PJRT path)");
-    } else if dir.join("manifest.json").exists() {
-        let engine = Engine::with_pjrt(dir, 4).expect("pjrt engine");
+    if dir.join("manifest.json").exists() {
+        let engine = Engine::with_pjrt(dir, 4).expect("aot engine");
         use cuckoo_gpu::coordinator::{OpKind, Request};
-        let keys: Vec<u64> = (0..1000u64).map(|i| i * 7 + 1).collect();
+        // Stay well under any artifact geometry's capacity: the strict
+        // AOT engine sizes the filter from the manifest, not --capacity.
+        let n = (engine.filter().total_slots() / 2).min(1000) as u64;
+        let keys: Vec<u64> = (0..n).map(|i| i * 7 + 1).collect();
         engine.execute(&Request::new(OpKind::Insert, keys.clone()));
         let r = engine.execute(&Request::new(OpKind::Query, keys));
-        assert_eq!(r.successes, 1000);
-        println!("PJRT query path OK ({} hits)", r.successes);
+        assert_eq!(r.successes, n);
+        println!("AOT interpreter query path OK ({} hits)", r.successes);
     } else {
-        println!("(artifacts missing; run `make artifacts` for the PJRT path)");
+        println!("(artifacts missing; run `make artifacts` for the AOT path)");
     }
     println!("selftest OK");
 }

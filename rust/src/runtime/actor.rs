@@ -1,9 +1,11 @@
-//! Runtime actor: the xla crate's PJRT client is `Rc`-based and thus
-//! neither `Send` nor `Sync`, so the compiled executables live on one
-//! dedicated driver thread. [`RuntimeHandle`] is the cloneable,
-//! thread-safe front the engine uses; jobs cross over an mpsc channel.
-//! (This mirrors how real deployments pin a CUDA context to a driver
-//! thread and feed it from a request pool.)
+//! Runtime actor: the loaded [`QueryRuntime`] lives on one dedicated
+//! driver thread and [`RuntimeHandle`] is the cloneable, thread-safe
+//! front the backend uses; jobs cross over an mpsc channel. The
+//! interpreter itself is `Send + Sync`, but the actor shape is kept on
+//! purpose: it mirrors how real deployments pin a device context (CUDA
+//! stream, PJRT client) to a driver thread and feed it from a request
+//! pool, so swapping a real accelerator runtime back in changes no
+//! caller.
 
 use super::artifacts::ModelGeometry;
 use super::client::{QueryRuntime, RuntimeError};
@@ -23,7 +25,7 @@ enum Job {
     Shutdown,
 }
 
-/// Thread-safe handle to the PJRT driver thread.
+/// Thread-safe handle to the artifact driver thread.
 #[derive(Clone)]
 pub struct RuntimeHandle {
     tx: Arc<Mutex<mpsc::Sender<Job>>>,
@@ -31,14 +33,14 @@ pub struct RuntimeHandle {
 }
 
 impl RuntimeHandle {
-    /// Spawn the driver thread, loading + compiling all artifacts in `dir`.
+    /// Spawn the driver thread, loading + parsing all artifacts in `dir`.
     /// Fails fast if loading fails.
     pub fn spawn(dir: impl AsRef<std::path::Path>) -> Result<Self, RuntimeError> {
         let dir = dir.as_ref().to_path_buf();
         let (tx, rx) = mpsc::channel::<Job>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<ModelGeometry, String>>();
         std::thread::Builder::new()
-            .name("pjrt-driver".into())
+            .name("aot-driver".into())
             .spawn(move || {
                 let rt = match QueryRuntime::load(&dir) {
                     Ok(rt) => {
@@ -64,7 +66,7 @@ impl RuntimeHandle {
                     }
                 }
             })
-            .expect("failed to spawn pjrt driver thread");
+            .expect("failed to spawn aot driver thread");
         let geometry = ready_rx
             .recv()
             .map_err(|_| RuntimeError::MissingArtifact("driver thread died".into()))?
@@ -80,7 +82,7 @@ impl RuntimeHandle {
             .lock()
             .unwrap()
             .send(job)
-            .expect("pjrt driver thread gone");
+            .expect("aot driver thread gone");
     }
 
     /// Chunked membership query through the compiled artifact.

@@ -45,10 +45,12 @@ impl ArtifactManifest {
     pub fn parse(text: &str, dir: PathBuf) -> Result<Self, RuntimeError> {
         let fields = flat_json_fields(text);
         let get = |k: &str| -> Result<u64, RuntimeError> {
-            fields
+            let raw = fields
                 .get(k)
-                .and_then(|v| v.parse::<u64>().ok())
-                .ok_or_else(|| RuntimeError::Manifest(format!("missing numeric field '{k}'")))
+                .ok_or_else(|| RuntimeError::Manifest(format!("missing numeric field '{k}'")))?;
+            raw.parse::<u64>().map_err(|_| {
+                RuntimeError::Manifest(format!("malformed numeric field '{k}': '{raw}'"))
+            })
         };
         let geometry = ModelGeometry {
             num_buckets: get("num_buckets")? as usize,
@@ -62,11 +64,35 @@ impl ArtifactManifest {
             bloom_k: get("bloom_k")? as u32,
             bloom_words: get("bloom_words")? as usize,
         };
+        // Artifact rows listed by the manifest itself (any `"name":
+        // "<file>.hlo.txt"` pair). A graph name the runtime doesn't know
+        // and a listed-but-absent file are both hard, token-named errors
+        // — a manifest that promises an artifact must deliver it.
+        const KNOWN: [&str; 4] = ["query", "query_stats", "hash", "bloom_query"];
         let mut artifacts = BTreeMap::new();
-        for name in ["query", "query_stats", "hash", "bloom_query"] {
-            let f = dir.join(format!("{name}.hlo.txt"));
-            if f.exists() {
-                artifacts.insert(name.to_string(), f);
+        for (name, val) in &fields {
+            if !val.ends_with(".hlo.txt") {
+                continue;
+            }
+            if !KNOWN.contains(&name.as_str()) {
+                return Err(RuntimeError::Manifest(format!(
+                    "unknown graph name '{name}'"
+                )));
+            }
+            let f = dir.join(val);
+            if !f.exists() {
+                return Err(RuntimeError::MissingArtifact(name.clone()));
+            }
+            artifacts.insert(name.clone(), f);
+        }
+        // Probing fallback for manifests predating the artifacts map:
+        // accept whichever known graphs are present on disk.
+        if artifacts.is_empty() {
+            for name in KNOWN {
+                let f = dir.join(format!("{name}.hlo.txt"));
+                if f.exists() {
+                    artifacts.insert(name.to_string(), f);
+                }
             }
         }
         if artifacts.is_empty() {
@@ -166,8 +192,41 @@ mod tests {
 
     #[test]
     fn missing_field_errors() {
-        let r = ArtifactManifest::parse("{}", std::env::temp_dir());
-        assert!(r.is_err());
+        let e = ArtifactManifest::parse("{}", std::env::temp_dir()).unwrap_err();
+        assert!(
+            e.to_string().contains("missing numeric field 'num_buckets'"),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn malformed_geometry_row_names_field_and_value() {
+        let text = SAMPLE.replace("\"num_words\": 16384", "\"num_words\": \"lots\"");
+        let e = ArtifactManifest::parse(&text, std::env::temp_dir()).unwrap_err();
+        let s = e.to_string();
+        assert!(s.contains("malformed numeric field 'num_words': 'lots'"), "{s}");
+    }
+
+    #[test]
+    fn unknown_graph_name_is_rejected() {
+        let text = SAMPLE.replace(
+            r#""artifacts": {"query": "query.hlo.txt"}"#,
+            r#""artifacts": {"frobnicate": "frobnicate.hlo.txt"}"#,
+        );
+        let e = ArtifactManifest::parse(&text, std::env::temp_dir()).unwrap_err();
+        assert!(
+            e.to_string().contains("unknown graph name 'frobnicate'"),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn listed_artifact_with_missing_file_is_rejected() {
+        let dir = std::env::temp_dir().join("cuckoo_manifest_missing_file");
+        std::fs::create_dir_all(&dir).unwrap();
+        let _ = std::fs::remove_file(dir.join("query.hlo.txt"));
+        let e = ArtifactManifest::parse(SAMPLE, dir).unwrap_err();
+        assert!(e.to_string().contains("artifact 'query' not found"), "{e}");
     }
 
     #[test]

@@ -1,15 +1,19 @@
-//! The PJRT execution wrapper: compile HLO-text artifacts once, execute
-//! batches from the hot path.
+//! The artifact execution wrapper: parse the HLO-text artifacts once,
+//! interpret batches from the request path.
 //!
-//! Mirrors /opt/xla-example/load_hlo.rs: `HloModuleProto::from_text_file`
-//! → `XlaComputation::from_proto` → `client.compile` → `execute`.
-//!
-//! The real client needs the (vendored) `xla` crate and is gated behind
-//! the `xla` cargo feature so the default build is dependency-free; the
-//! stub below keeps the API shape and reports itself unavailable, and
-//! the engine falls back to the native query path.
+//! [`QueryRuntime`] is the typed front over [`super::interp`]: it loads
+//! every graph named by the manifest, owns the static-geometry
+//! discipline (pad each key batch to the artifact's `batch`, demand an
+//! exactly-sized table snapshot), and converts between the engine's
+//! `u64`/`bool` vectors and the interpreter's tensor values. Earlier
+//! revisions gated a real PJRT client behind the `xla` feature; the
+//! interpreter replaced it as the default — and only — engine, so the
+//! feature is now a no-op compatibility shim (see `Cargo.toml`) and
+//! `available()` is unconditionally true.
 
 use super::artifacts::ArtifactManifest;
+use super::interp::{Graph, Tensor, Ty, Value};
+use std::collections::BTreeMap;
 use std::fmt;
 
 #[derive(Debug)]
@@ -18,10 +22,14 @@ pub enum RuntimeError {
     MissingArtifact(String),
     /// Batch/table shape doesn't match the compiled geometry.
     Geometry(String),
+    /// The loaded artifact's geometry doesn't match the live filter's —
+    /// the named mismatch the engine surfaces in STATS instead of
+    /// silently degrading to the native path.
+    GeometryMismatch { artifact: String, filter: String },
     /// manifest.json missing, unreadable or malformed.
     Manifest(String),
-    /// PJRT/XLA-side failure (or the backend isn't compiled in).
-    Xla(String),
+    /// HLO parse/evaluation failure inside the interpreter.
+    Interp(String),
     Other(String),
 }
 
@@ -32,8 +40,12 @@ impl fmt::Display for RuntimeError {
                 write!(f, "artifact '{a}' not found (run `make artifacts`)")
             }
             RuntimeError::Geometry(m) => write!(f, "geometry mismatch: {m}"),
+            RuntimeError::GeometryMismatch { artifact, filter } => write!(
+                f,
+                "geometry mismatch: artifact '{artifact}' vs filter '{filter}'"
+            ),
             RuntimeError::Manifest(m) => write!(f, "artifact manifest: {m}"),
-            RuntimeError::Xla(m) => write!(f, "xla: {m}"),
+            RuntimeError::Interp(m) => write!(f, "interp: {m}"),
             RuntimeError::Other(m) => write!(f, "{m}"),
         }
     }
@@ -41,56 +53,45 @@ impl fmt::Display for RuntimeError {
 
 impl std::error::Error for RuntimeError {}
 
-#[cfg(feature = "xla")]
-impl From<xla::Error> for RuntimeError {
-    fn from(e: xla::Error) -> Self {
-        RuntimeError::Xla(e.to_string())
-    }
-}
-
-/// A compiled filter runtime: the PJRT client plus one loaded executable
-/// per AOT graph.
-#[cfg(feature = "xla")]
+/// A loaded filter runtime: one parsed, executable [`Graph`] per AOT
+/// artifact, plus the manifest geometry they were lowered for.
 pub struct QueryRuntime {
     pub manifest: ArtifactManifest,
-    client: xla::PjRtClient,
-    executables: std::collections::BTreeMap<String, xla::PjRtLoadedExecutable>,
+    graphs: BTreeMap<String, Graph>,
 }
 
-#[cfg(feature = "xla")]
 impl QueryRuntime {
-    /// True when the PJRT backend is compiled into this binary.
+    /// True when artifact execution is compiled into this binary. The
+    /// interpreter is std-only, so this is always the case now; kept
+    /// because callers historically gated on it.
     pub const fn available() -> bool {
         true
     }
 
-    /// Compile every artifact in `dir` on the PJRT CPU client.
+    /// Parse every artifact named by `<dir>/manifest.json`.
     pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self, RuntimeError> {
         let manifest = ArtifactManifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        let mut executables = std::collections::BTreeMap::new();
+        let mut graphs = BTreeMap::new();
         for (name, path) in &manifest.artifacts {
-            let proto = xla::HloModuleProto::from_text_file(path)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            executables.insert(name.clone(), client.compile(&comp)?);
+            let g = Graph::from_file(path)
+                .map_err(|e| RuntimeError::Interp(format!("{name}: {e}")))?;
+            graphs.insert(name.clone(), g);
         }
-        Ok(Self {
-            manifest,
-            client,
-            executables,
-        })
+        Ok(Self { manifest, graphs })
     }
 
+    /// Execution substrate name (the interpreter; a real PJRT client
+    /// would report its platform here).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "interp".into()
     }
 
     pub fn has_graph(&self, name: &str) -> bool {
-        self.executables.contains_key(name)
+        self.graphs.contains_key(name)
     }
 
-    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable, RuntimeError> {
-        self.executables
+    fn graph(&self, name: &str) -> Result<&Graph, RuntimeError> {
+        self.graphs
             .get(name)
             .ok_or_else(|| RuntimeError::MissingArtifact(name.into()))
     }
@@ -121,17 +122,40 @@ impl QueryRuntime {
         Ok(())
     }
 
+    /// Execute a `(words, keys)` graph and return the root tuple.
+    fn run_words_keys(
+        &self,
+        name: &str,
+        words: &[u64],
+        keys: &[u64],
+    ) -> Result<Value, RuntimeError> {
+        let args = [
+            Value::Tensor(Tensor::vec1(Ty::U64, words.to_vec())),
+            Value::Tensor(Tensor::vec1(Ty::U64, keys.to_vec())),
+        ];
+        self.graph(name)?
+            .execute(&args)
+            .map_err(|e| RuntimeError::Interp(format!("{name}: {e}")))
+    }
+
+    /// The `i`-th element of a graph's root tuple, as raw element bits.
+    fn tuple_elem(name: &str, v: &Value, i: usize) -> Result<Vec<u64>, RuntimeError> {
+        v.as_tuple()
+            .and_then(|t| t.get(i))
+            .and_then(|e| e.as_tensor())
+            .map(|t| t.data.clone())
+            .ok_or_else(|| {
+                RuntimeError::Interp(format!("'{name}' returned an unexpected result shape"))
+            })
+    }
+
     /// Execute the `query` graph: membership flags for up to `batch` keys
     /// against a table snapshot.
     pub fn query(&self, words: &[u64], keys: &[u64]) -> Result<Vec<bool>, RuntimeError> {
         self.check_words(words, self.manifest.geometry.num_words)?;
         let padded = self.pad_keys(keys)?;
-        let w = xla::Literal::vec1(words);
-        let k = xla::Literal::vec1(&padded);
-        let result = self.exe("query")?.execute::<xla::Literal>(&[w, k])?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        let flags: Vec<u8> = out.to_vec::<u8>()?;
+        let out = self.run_words_keys("query", words, &padded)?;
+        let flags = Self::tuple_elem("query", &out, 0)?;
         Ok(flags[..keys.len()].iter().map(|&b| b != 0).collect())
     }
 
@@ -145,33 +169,32 @@ impl QueryRuntime {
     ) -> Result<(Vec<bool>, u64), RuntimeError> {
         self.check_words(words, self.manifest.geometry.num_words)?;
         let padded = self.pad_keys(keys)?;
-        let w = xla::Literal::vec1(words);
-        let k = xla::Literal::vec1(&padded);
-        let result = self.exe("query_stats")?.execute::<xla::Literal>(&[w, k])?[0][0]
-            .to_literal_sync()?;
-        let (flags_l, count_l) = result.to_tuple2()?;
-        let flags_u8: Vec<u8> = flags_l.to_vec::<u8>()?;
-        // Under jax_enable_x64 the fused sum promotes to u64.
-        let padded_count = count_l.to_vec::<u64>()?[0];
-        let pad_hits = flags_u8[keys.len()..].iter().filter(|&&b| b != 0).count() as u64;
-        let flags = flags_u8[..keys.len()].iter().map(|&b| b != 0).collect();
+        let out = self.run_words_keys("query_stats", words, &padded)?;
+        let flags_raw = Self::tuple_elem("query_stats", &out, 0)?;
+        let padded_count = Self::tuple_elem("query_stats", &out, 1)?
+            .first()
+            .copied()
+            .ok_or_else(|| {
+                RuntimeError::Interp("'query_stats' returned an unexpected result shape".into())
+            })?;
+        let pad_hits = flags_raw[keys.len()..].iter().filter(|&&b| b != 0).count() as u64;
+        let flags = flags_raw[..keys.len()].iter().map(|&b| b != 0).collect();
         Ok((flags, padded_count - pad_hits))
     }
 
     /// Execute the `hash` graph: (fp, i1, i2) planning vectors.
     pub fn hash(&self, keys: &[u64]) -> Result<(Vec<u32>, Vec<u32>, Vec<u32>), RuntimeError> {
         let padded = self.pad_keys(keys)?;
-        let k = xla::Literal::vec1(&padded);
-        let result = self.exe("hash")?.execute::<xla::Literal>(&[k])?[0][0]
-            .to_literal_sync()?;
-        let (fp, i1, i2) = result.to_tuple3()?;
+        let args = [Value::Tensor(Tensor::vec1(Ty::U64, padded))];
+        let out = self
+            .graph("hash")?
+            .execute(&args)
+            .map_err(|e| RuntimeError::Interp(format!("hash: {e}")))?;
         let n = keys.len();
-        let mut fp = fp.to_vec::<u32>()?;
-        let mut i1 = i1.to_vec::<u32>()?;
-        let mut i2 = i2.to_vec::<u32>()?;
-        fp.truncate(n);
-        i1.truncate(n);
-        i2.truncate(n);
+        let narrow = |data: Vec<u64>| data.iter().take(n).map(|&v| v as u32).collect();
+        let fp = narrow(Self::tuple_elem("hash", &out, 0)?);
+        let i1 = narrow(Self::tuple_elem("hash", &out, 1)?);
+        let i2 = narrow(Self::tuple_elem("hash", &out, 2)?);
         Ok((fp, i1, i2))
     }
 
@@ -179,12 +202,8 @@ impl QueryRuntime {
     pub fn bloom_query(&self, words: &[u64], keys: &[u64]) -> Result<Vec<bool>, RuntimeError> {
         self.check_words(words, self.manifest.geometry.bloom_words)?;
         let padded = self.pad_keys(keys)?;
-        let w = xla::Literal::vec1(words);
-        let k = xla::Literal::vec1(&padded);
-        let result = self.exe("bloom_query")?.execute::<xla::Literal>(&[w, k])?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        let flags: Vec<u8> = out.to_vec::<u8>()?;
+        let out = self.run_words_keys("bloom_query", words, &padded)?;
+        let flags = Self::tuple_elem("bloom_query", &out, 0)?;
         Ok(flags[..keys.len()].iter().map(|&b| b != 0).collect())
     }
 
@@ -200,60 +219,61 @@ impl QueryRuntime {
     }
 }
 
-/// Stub compiled when the `xla` feature is off: same API shape, every
-/// execution entry point reports the backend as unavailable. The engine
-/// treats that as "serve natively".
-#[cfg(not(feature = "xla"))]
-pub struct QueryRuntime {
-    pub manifest: ArtifactManifest,
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
 
-#[cfg(not(feature = "xla"))]
-impl QueryRuntime {
-    /// True when the PJRT backend is compiled into this binary.
-    pub const fn available() -> bool {
-        false
+    fn fixture_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/aot_64")
     }
 
-    fn unavailable() -> RuntimeError {
-        RuntimeError::Xla("built without the `xla` feature; native query path only".into())
+    #[test]
+    fn loads_fixture_and_reports_interp_platform() {
+        let rt = QueryRuntime::load(fixture_dir()).unwrap();
+        assert!(QueryRuntime::available());
+        assert_eq!(rt.platform(), "interp");
+        for g in ["query", "query_stats", "hash", "bloom_query"] {
+            assert!(rt.has_graph(g), "missing graph {g}");
+        }
+        assert_eq!(rt.manifest.geometry.batch, 128);
     }
 
-    /// Validates the manifest, then reports the backend unavailable.
-    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self, RuntimeError> {
-        let _manifest = ArtifactManifest::load(dir)?;
-        Err(Self::unavailable())
+    #[test]
+    fn batch_and_snapshot_shape_errors_are_named() {
+        let rt = QueryRuntime::load(fixture_dir()).unwrap();
+        let words = vec![0u64; rt.manifest.geometry.num_words];
+        let e = rt.query(&words, &[]).unwrap_err().to_string();
+        assert!(e.contains("batch size 0 not in 1..=128"), "{e}");
+        let too_big = vec![1u64; 129];
+        let e = rt.query(&words, &too_big).unwrap_err().to_string();
+        assert!(e.contains("batch size 129 not in 1..=128"), "{e}");
+        let e = rt.query(&[0u64; 7], &[1]).unwrap_err().to_string();
+        assert!(e.contains("7 words"), "{e}");
     }
 
-    pub fn platform(&self) -> String {
-        "unavailable".into()
+    #[test]
+    fn geometry_mismatch_display_names_both_sides() {
+        let e = RuntimeError::GeometryMismatch {
+            artifact: "buckets=64 slots=16 seed=1".into(),
+            filter: "buckets=128 slots=16 seed=1 shards=2".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("artifact 'buckets=64"), "{s}");
+        assert!(s.contains("filter 'buckets=128"), "{s}");
     }
 
-    pub fn has_graph(&self, _name: &str) -> bool {
-        false
-    }
-
-    pub fn query(&self, _words: &[u64], _keys: &[u64]) -> Result<Vec<bool>, RuntimeError> {
-        Err(Self::unavailable())
-    }
-
-    pub fn query_stats(
-        &self,
-        _words: &[u64],
-        _keys: &[u64],
-    ) -> Result<(Vec<bool>, u64), RuntimeError> {
-        Err(Self::unavailable())
-    }
-
-    pub fn hash(&self, _keys: &[u64]) -> Result<(Vec<u32>, Vec<u32>, Vec<u32>), RuntimeError> {
-        Err(Self::unavailable())
-    }
-
-    pub fn bloom_query(&self, _words: &[u64], _keys: &[u64]) -> Result<Vec<bool>, RuntimeError> {
-        Err(Self::unavailable())
-    }
-
-    pub fn query_all(&self, _words: &[u64], _keys: &[u64]) -> Result<Vec<bool>, RuntimeError> {
-        Err(Self::unavailable())
+    #[test]
+    fn query_on_empty_table_finds_nothing() {
+        let rt = QueryRuntime::load(fixture_dir()).unwrap();
+        let words = vec![0u64; rt.manifest.geometry.num_words];
+        // A zeroed table can still "contain" keys whose fingerprint is 0;
+        // the fixture seed maps none of these probe keys to fp 0.
+        let keys: Vec<u64> = (1..=7).collect();
+        let flags = rt.query(&words, &keys).unwrap();
+        assert_eq!(flags.len(), 7);
+        let (flags2, count) = rt.query_stats(&words, &keys).unwrap();
+        assert_eq!(flags, flags2);
+        assert_eq!(count, flags.iter().filter(|&&f| f).count() as u64);
     }
 }

@@ -1,0 +1,699 @@
+//! Typed op-evaluator for parsed HLO modules.
+//!
+//! Instructions are evaluated strictly in line order with a name→value
+//! environment (HLO text is topologically ordered within a
+//! computation). Semantics follow what XLA actually does on the ops the
+//! cuckoo/bloom query graphs use, validated element-for-element against
+//! JAX executions of the same artifacts:
+//!
+//! - integer add/subtract/multiply wrap at the element width;
+//! - shifts by ≥ width yield 0 (XLA's defined out-of-range result);
+//! - divide/remainder by zero yield 0; signed division truncates
+//!   toward zero (C semantics);
+//! - `compare` orders by the logical (sign-aware) value of the operand
+//!   type; the result is `pred`;
+//! - `select` with a scalar predicate picks a whole tensor, otherwise
+//!   it is elementwise;
+//! - `gather` (rank-1 operand, `slice_sizes={1}`) clamps each index
+//!   into `[0, n-1]`; `dynamic-slice`/`dynamic-update-slice` clamp the
+//!   start into `[0, n-size]`;
+//! - `reduce` applies its region computation pairwise over the reduced
+//!   dimension (rank-1 → scalar, rank-2 over either axis);
+//! - `while` re-evaluates its condition region on the loop-carried
+//!   tuple until the predicate is false.
+//!
+//! Unknown opcodes fail with a token-named error rather than a guess.
+
+use super::parser::{Computation, Instr, Module, Shape};
+use super::value::{encode, logical, Tensor, Ty, Value};
+use super::InterpError;
+use std::collections::HashMap;
+
+fn err(what: String) -> InterpError {
+    InterpError(what)
+}
+
+/// Execute the module's entry computation on `args`.
+pub(crate) fn execute(module: &Module, args: &[Value]) -> Result<Value, InterpError> {
+    run(module, &module.comps[module.entry], args)
+}
+
+/// Evaluate one computation top to bottom and return its ROOT value.
+fn run(m: &Module, comp: &Computation, args: &[Value]) -> Result<Value, InterpError> {
+    let mut env: HashMap<&str, Value> = HashMap::with_capacity(comp.instrs.len());
+    for ins in &comp.instrs {
+        let v = eval_instr(m, ins, &env, args)
+            .map_err(|e| err(format!("{} (at '{}' in '{}')", e.0, ins.name, comp.name)))?;
+        env.insert(ins.name.as_str(), v);
+    }
+    let root = comp.instrs[comp.root].name.as_str();
+    env.remove(root)
+        .ok_or_else(|| err(format!("ROOT '{root}' was never evaluated")))
+}
+
+fn get<'e>(env: &'e HashMap<&str, Value>, name: &str) -> Result<&'e Value, InterpError> {
+    env.get(name)
+        .ok_or_else(|| err(format!("unknown operand '{name}'")))
+}
+
+fn tensor<'e>(env: &'e HashMap<&str, Value>, name: &str) -> Result<&'e Tensor, InterpError> {
+    get(env, name)?
+        .as_tensor()
+        .ok_or_else(|| err(format!("operand '{name}' is a tuple, expected an array")))
+}
+
+fn operand<'a>(ins: &'a Instr, i: usize) -> Result<&'a str, InterpError> {
+    ins.operands
+        .get(i)
+        .map(|s| s.as_str())
+        .ok_or_else(|| err(format!("'{}' is missing operand {i}", ins.op)))
+}
+
+/// The array result type/dims this instruction was declared with.
+fn out_shape(ins: &Instr) -> Result<(Ty, Vec<usize>), InterpError> {
+    match &ins.shape {
+        Shape::Array { ty, dims } => Ok((*ty, dims.clone())),
+        Shape::Tuple => Err(err(format!("'{}' declared a tuple result shape", ins.op))),
+    }
+}
+
+fn attr<'a>(ins: &'a Instr, key: &str) -> Result<&'a str, InterpError> {
+    ins.attr(key)
+        .ok_or_else(|| err(format!("'{}' is missing attribute '{key}'", ins.op)))
+}
+
+/// `{1,0}`-style brace list → integers.
+fn brace_list(s: &str) -> Result<Vec<usize>, InterpError> {
+    let inner = s
+        .strip_prefix('{')
+        .and_then(|t| t.strip_suffix('}'))
+        .ok_or_else(|| err(format!("malformed brace list '{s}'")))?;
+    let mut out = Vec::new();
+    for d in inner.split(',') {
+        let d = d.trim();
+        if d.is_empty() {
+            continue;
+        }
+        out.push(
+            d.parse()
+                .map_err(|_| err(format!("malformed brace list '{s}'")))?,
+        );
+    }
+    Ok(out)
+}
+
+fn named_comp<'m>(m: &'m Module, ins: &Instr, key: &str) -> Result<&'m Computation, InterpError> {
+    let name = attr(ins, key)?;
+    m.by_name
+        .get(name)
+        .map(|&i| &m.comps[i])
+        .ok_or_else(|| err(format!("unknown computation '{name}'")))
+}
+
+/// Run a reduce region on one (accumulator, element) scalar pair.
+fn apply_region(
+    m: &Module,
+    region: &Computation,
+    ty: Ty,
+    acc: u64,
+    v: u64,
+) -> Result<u64, InterpError> {
+    let out = run(
+        m,
+        region,
+        &[
+            Value::Tensor(Tensor::scalar(ty, acc)),
+            Value::Tensor(Tensor::scalar(ty, v)),
+        ],
+    )?;
+    match out.as_tensor() {
+        Some(t) if t.data.len() == 1 => Ok(t.data[0]),
+        _ => Err(err(format!(
+            "reduce region '{}' returned a non-scalar",
+            region.name
+        ))),
+    }
+}
+
+fn eval_instr(
+    m: &Module,
+    ins: &Instr,
+    env: &HashMap<&str, Value>,
+    args: &[Value],
+) -> Result<Value, InterpError> {
+    match ins.op.as_str() {
+        "parameter" => {
+            let n = ins
+                .pnum
+                .ok_or_else(|| err("parameter without an index".to_string()))?;
+            args.get(n)
+                .cloned()
+                .ok_or_else(|| err(format!("parameter {n} out of range ({} args)", args.len())))
+        }
+        "constant" => {
+            let (ty, dims) = out_shape(ins)?;
+            let lit = ins
+                .literal
+                .as_deref()
+                .ok_or_else(|| err("constant without a literal".to_string()))?;
+            let bits = match lit {
+                "true" => 1,
+                "false" => 0,
+                _ => lit
+                    .parse::<i128>()
+                    .map(|v| encode(v, ty))
+                    .map_err(|_| err(format!("unsupported constant literal '{lit}'")))?,
+            };
+            if !dims.is_empty() {
+                return Err(err(format!("unsupported non-scalar constant '{lit}'")));
+            }
+            Ok(Value::Tensor(Tensor::scalar(ty, bits)))
+        }
+        "tuple" => {
+            let mut vs = Vec::with_capacity(ins.operands.len());
+            for o in &ins.operands {
+                vs.push(get(env, o)?.clone());
+            }
+            Ok(Value::Tuple(vs))
+        }
+        "get-tuple-element" => {
+            let idx: usize = attr(ins, "index")?
+                .parse()
+                .map_err(|_| err("malformed tuple index".to_string()))?;
+            let name = operand(ins, 0)?;
+            let vs = get(env, name)?
+                .as_tuple()
+                .ok_or_else(|| err(format!("operand '{name}' is not a tuple")))?;
+            vs.get(idx)
+                .cloned()
+                .ok_or_else(|| err(format!("tuple index {idx} out of range ({})", vs.len())))
+        }
+        "call" => {
+            let callee = named_comp(m, ins, "to_apply")?;
+            let mut call_args = Vec::with_capacity(ins.operands.len());
+            for o in &ins.operands {
+                call_args.push(get(env, o)?.clone());
+            }
+            run(m, callee, &call_args)
+        }
+        "while" => {
+            let cond = named_comp(m, ins, "condition")?;
+            let body = named_comp(m, ins, "body")?;
+            let mut state = get(env, operand(ins, 0)?)?.clone();
+            loop {
+                let keep = run(m, cond, std::slice::from_ref(&state))?;
+                let t = keep
+                    .as_tensor()
+                    .ok_or_else(|| err("while condition returned a tuple".to_string()))?;
+                if t.data.first().copied().unwrap_or(0) == 0 {
+                    return Ok(state);
+                }
+                state = run(m, body, std::slice::from_ref(&state))?;
+            }
+        }
+        "broadcast" => {
+            let (ty, dims) = out_shape(ins)?;
+            let t = tensor(env, operand(ins, 0)?)?;
+            if t.data.len() != 1 {
+                return Err(err(format!(
+                    "broadcast of a non-scalar operand '{}'",
+                    ins.operands[0]
+                )));
+            }
+            let n = Tensor::num_elems(&dims);
+            Ok(Value::Tensor(Tensor {
+                ty,
+                data: vec![t.data[0]; n],
+                dims,
+            }))
+        }
+        "reshape" => {
+            let (ty, dims) = out_shape(ins)?;
+            let t = tensor(env, operand(ins, 0)?)?;
+            if t.data.len() != Tensor::num_elems(&dims) {
+                return Err(err(format!(
+                    "reshape element-count mismatch at '{}'",
+                    ins.name
+                )));
+            }
+            Ok(Value::Tensor(Tensor {
+                ty,
+                dims,
+                data: t.data.clone(),
+            }))
+        }
+        "convert" => {
+            let (ty, dims) = out_shape(ins)?;
+            let t = tensor(env, operand(ins, 0)?)?;
+            let data = t
+                .data
+                .iter()
+                .map(|&v| {
+                    let l = logical(v, t.ty);
+                    if ty == Ty::Pred {
+                        u64::from(l != 0)
+                    } else {
+                        encode(l, ty)
+                    }
+                })
+                .collect();
+            Ok(Value::Tensor(Tensor { ty, dims, data }))
+        }
+        "not" => {
+            let (ty, dims) = out_shape(ins)?;
+            let t = tensor(env, operand(ins, 0)?)?;
+            let mask = t.ty.mask();
+            let data = t.data.iter().map(|&v| (!v) & mask).collect();
+            Ok(Value::Tensor(Tensor { ty, dims, data }))
+        }
+        "add" | "subtract" | "multiply" | "divide" | "remainder" | "and" | "or" | "xor"
+        | "shift-left" | "shift-right-logical" | "minimum" | "maximum" => {
+            let (ty, dims) = out_shape(ins)?;
+            let a = tensor(env, operand(ins, 0)?)?;
+            let b = tensor(env, operand(ins, 1)?)?;
+            if a.data.len() != b.data.len() {
+                return Err(err(format!("operand length mismatch at '{}'", ins.name)));
+            }
+            let data = a
+                .data
+                .iter()
+                .zip(&b.data)
+                .map(|(&x, &y)| binop(&ins.op, x, y, a.ty))
+                .collect::<Result<Vec<u64>, InterpError>>()?;
+            Ok(Value::Tensor(Tensor { ty, dims, data }))
+        }
+        "compare" => {
+            let dims = match &ins.shape {
+                Shape::Array { dims, .. } => dims.clone(),
+                Shape::Tuple => return Err(err("compare declared a tuple shape".to_string())),
+            };
+            let a = tensor(env, operand(ins, 0)?)?;
+            let b = tensor(env, operand(ins, 1)?)?;
+            if a.data.len() != b.data.len() {
+                return Err(err(format!("operand length mismatch at '{}'", ins.name)));
+            }
+            let dir = attr(ins, "direction")?;
+            let ty = a.ty;
+            let data = a
+                .data
+                .iter()
+                .zip(&b.data)
+                .map(|(&x, &y)| {
+                    let (sx, sy) = (logical(x, ty), logical(y, ty));
+                    let hit = match dir {
+                        "EQ" => sx == sy,
+                        "NE" => sx != sy,
+                        "LT" => sx < sy,
+                        "LE" => sx <= sy,
+                        "GT" => sx > sy,
+                        "GE" => sx >= sy,
+                        _ => return Err(err(format!("unsupported compare direction '{dir}'"))),
+                    };
+                    Ok(u64::from(hit))
+                })
+                .collect::<Result<Vec<u64>, InterpError>>()?;
+            Ok(Value::Tensor(Tensor {
+                ty: Ty::Pred,
+                dims,
+                data,
+            }))
+        }
+        "select" => {
+            let (ty, dims) = out_shape(ins)?;
+            let p = tensor(env, operand(ins, 0)?)?;
+            let t = tensor(env, operand(ins, 1)?)?;
+            let f = tensor(env, operand(ins, 2)?)?;
+            if t.data.len() != f.data.len() {
+                return Err(err(format!("operand length mismatch at '{}'", ins.name)));
+            }
+            let data = if p.data.len() == 1 && t.data.len() > 1 {
+                // Scalar predicate picks a whole branch tensor.
+                if p.data[0] != 0 {
+                    t.data.clone()
+                } else {
+                    f.data.clone()
+                }
+            } else {
+                if p.data.len() != t.data.len() {
+                    return Err(err(format!("operand length mismatch at '{}'", ins.name)));
+                }
+                p.data
+                    .iter()
+                    .zip(t.data.iter().zip(&f.data))
+                    .map(|(&pv, (&tv, &fv))| if pv != 0 { tv } else { fv })
+                    .collect()
+            };
+            Ok(Value::Tensor(Tensor { ty, dims, data }))
+        }
+        "gather" => {
+            let (ty, dims) = out_shape(ins)?;
+            let op0 = tensor(env, operand(ins, 0)?)?;
+            let idx = tensor(env, operand(ins, 1)?)?;
+            if op0.dims.len() != 1 {
+                return Err(err(format!(
+                    "unsupported gather operand rank {} at '{}'",
+                    op0.dims.len(),
+                    ins.name
+                )));
+            }
+            let n = op0.dims[0] as i128;
+            let data = idx
+                .data
+                .iter()
+                .map(|&raw| {
+                    // XLA clamps out-of-bounds gather indices.
+                    let i = logical(raw, idx.ty).clamp(0, n - 1) as usize;
+                    op0.data[i]
+                })
+                .collect();
+            Ok(Value::Tensor(Tensor { ty, dims, data }))
+        }
+        "dynamic-slice" => {
+            let (ty, dims) = out_shape(ins)?;
+            let op0 = tensor(env, operand(ins, 0)?)?;
+            let start_t = tensor(env, operand(ins, 1)?)?;
+            let sizes = brace_list(attr(ins, "dynamic_slice_sizes")?)?;
+            if op0.dims.len() != 1 || sizes.len() != 1 {
+                return Err(err(format!(
+                    "unsupported dynamic-slice rank at '{}'",
+                    ins.name
+                )));
+            }
+            let (n, size) = (op0.dims[0], sizes[0]);
+            let start = clamp_start(start_t, n, size);
+            Ok(Value::Tensor(Tensor {
+                ty,
+                dims,
+                data: op0.data[start..start + size].to_vec(),
+            }))
+        }
+        "dynamic-update-slice" => {
+            let (ty, dims) = out_shape(ins)?;
+            let op0 = tensor(env, operand(ins, 0)?)?;
+            let upd = tensor(env, operand(ins, 1)?)?;
+            let start_t = tensor(env, operand(ins, 2)?)?;
+            if op0.dims.len() != 1 || upd.dims.len() != 1 {
+                return Err(err(format!(
+                    "unsupported dynamic-update-slice rank at '{}'",
+                    ins.name
+                )));
+            }
+            let (n, size) = (op0.dims[0], upd.dims[0]);
+            let start = clamp_start(start_t, n, size);
+            let mut data = op0.data.clone();
+            data[start..start + size].copy_from_slice(&upd.data);
+            Ok(Value::Tensor(Tensor { ty, dims, data }))
+        }
+        "reduce" => {
+            let (ty, dims) = out_shape(ins)?;
+            let op0 = tensor(env, operand(ins, 0)?)?;
+            let init = tensor(env, operand(ins, 1)?)?;
+            let region = named_comp(m, ins, "to_apply")?;
+            let axes = brace_list(attr(ins, "dimensions")?)?;
+            let init = init
+                .data
+                .first()
+                .copied()
+                .ok_or_else(|| err("reduce init is empty".to_string()))?;
+            let ity = op0.ty;
+            let data = match op0.dims.len() {
+                1 => {
+                    let mut acc = init;
+                    for &v in &op0.data {
+                        acc = apply_region(m, region, ity, acc, v)?;
+                    }
+                    vec![acc]
+                }
+                2 if axes == [1] => {
+                    let (rows, cols) = (op0.dims[0], op0.dims[1]);
+                    let mut out = Vec::with_capacity(rows);
+                    for r in 0..rows {
+                        let mut acc = init;
+                        for c in 0..cols {
+                            acc = apply_region(m, region, ity, acc, op0.data[r * cols + c])?;
+                        }
+                        out.push(acc);
+                    }
+                    out
+                }
+                2 if axes == [0] => {
+                    let (rows, cols) = (op0.dims[0], op0.dims[1]);
+                    let mut out = Vec::with_capacity(cols);
+                    for c in 0..cols {
+                        let mut acc = init;
+                        for r in 0..rows {
+                            acc = apply_region(m, region, ity, acc, op0.data[r * cols + c])?;
+                        }
+                        out.push(acc);
+                    }
+                    out
+                }
+                _ => {
+                    return Err(err(format!(
+                        "unsupported reduce rank/axes at '{}'",
+                        ins.name
+                    )))
+                }
+            };
+            Ok(Value::Tensor(Tensor { ty, dims, data }))
+        }
+        op => Err(err(format!("unsupported op '{op}'"))),
+    }
+}
+
+/// Clamp a dynamic-slice start index (scalar tensor) into `[0, n - size]`.
+fn clamp_start(start: &Tensor, n: usize, size: usize) -> usize {
+    let hi = n.saturating_sub(size) as i128;
+    let raw = start.data.first().copied().unwrap_or(0);
+    logical(raw, start.ty).clamp(0, hi) as usize
+}
+
+/// One elementwise binary op at `ty`'s width.
+fn binop(op: &str, x: u64, y: u64, ty: Ty) -> Result<u64, InterpError> {
+    let m = ty.mask();
+    let w = u64::from(ty.width());
+    Ok(match op {
+        "add" => x.wrapping_add(y) & m,
+        "subtract" => x.wrapping_sub(y) & m,
+        "multiply" => x.wrapping_mul(y) & m,
+        "and" => x & y,
+        "or" => x | y,
+        "xor" => x ^ y,
+        "shift-left" => {
+            if y >= w {
+                0
+            } else {
+                (x << y) & m
+            }
+        }
+        "shift-right-logical" => {
+            if y >= w {
+                0
+            } else {
+                x >> y
+            }
+        }
+        "divide" => {
+            if ty.is_signed() {
+                let (sx, sy) = (logical(x, ty) as i64, logical(y, ty) as i64);
+                if sy == 0 {
+                    0
+                } else {
+                    encode(i128::from(sx.wrapping_div(sy)), ty)
+                }
+            } else if y == 0 {
+                0
+            } else {
+                x / y
+            }
+        }
+        "remainder" => {
+            if ty.is_signed() {
+                let (sx, sy) = (logical(x, ty) as i64, logical(y, ty) as i64);
+                if sy == 0 {
+                    0
+                } else {
+                    encode(i128::from(sx.wrapping_rem(sy)), ty)
+                }
+            } else if y == 0 {
+                0
+            } else {
+                x % y
+            }
+        }
+        "minimum" => encode(logical(x, ty).min(logical(y, ty)), ty),
+        "maximum" => encode(logical(x, ty).max(logical(y, ty)), ty),
+        other => return Err(err(format!("unsupported op '{other}'"))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::interp::Graph;
+
+    fn u64s(v: &Value) -> Vec<u64> {
+        v.as_tensor().unwrap().data.clone()
+    }
+
+    #[test]
+    fn wrapping_and_shift_semantics() {
+        assert_eq!(binop("add", u64::MAX, 1, Ty::U64).unwrap(), 0);
+        assert_eq!(binop("add", 0xFF, 1, Ty::U8).unwrap(), 0);
+        assert_eq!(binop("multiply", 1 << 32, 1 << 32, Ty::U64).unwrap(), 0);
+        assert_eq!(binop("shift-left", 1, 63, Ty::U64).unwrap(), 1 << 63);
+        assert_eq!(binop("shift-left", 1, 64, Ty::U64).unwrap(), 0);
+        assert_eq!(binop("shift-right-logical", 1 << 63, 63, Ty::U64).unwrap(), 1);
+        assert_eq!(binop("shift-right-logical", 7, 64, Ty::U64).unwrap(), 0);
+        assert_eq!(binop("divide", 10, 0, Ty::U64).unwrap(), 0);
+        assert_eq!(binop("remainder", 10, 0, Ty::U64).unwrap(), 0);
+        // Signed division truncates toward zero.
+        let neg7 = encode(-7, Ty::S32);
+        assert_eq!(binop("divide", neg7, 2, Ty::S32).unwrap(), encode(-3, Ty::S32));
+        assert_eq!(binop("remainder", neg7, 2, Ty::S32).unwrap(), encode(-1, Ty::S32));
+    }
+
+    #[test]
+    fn reduce_through_region() {
+        let g = Graph::parse(
+            "region_0.3 {\n\
+               a.4 = u64[] parameter(0)\n\
+               b.5 = u64[] parameter(1)\n\
+               ROOT add.6 = u64[] add(a.4, b.5)\n\
+             }\n\
+             ENTRY main.9 {\n\
+               xs.1 = u64[4]{0} parameter(0)\n\
+               zero.2 = u64[] constant(0)\n\
+               ROOT reduce.8 = u64[] reduce(xs.1, zero.2), dimensions={0}, to_apply=region_0.3\n\
+             }\n",
+        )
+        .unwrap();
+        let out = g
+            .execute(&[Value::Tensor(Tensor::vec1(Ty::U64, vec![1, 2, 3, 4]))])
+            .unwrap();
+        assert_eq!(u64s(&out), vec![10]);
+    }
+
+    #[test]
+    fn rank2_reduce_rows_with_and_region() {
+        // pred[2,2] reduced over dims={1} with an `and` region: per-row all().
+        let g = Graph::parse(
+            "region_0.3 {\n\
+               a.4 = pred[] parameter(0)\n\
+               b.5 = pred[] parameter(1)\n\
+               ROOT and.6 = pred[] and(a.4, b.5)\n\
+             }\n\
+             ENTRY main.9 {\n\
+               xs.1 = pred[2,2]{1,0} parameter(0)\n\
+               t.2 = pred[] constant(true)\n\
+               ROOT reduce.8 = pred[2]{0} reduce(xs.1, t.2), dimensions={1}, to_apply=region_0.3\n\
+             }\n",
+        )
+        .unwrap();
+        let xs = Tensor {
+            ty: Ty::Pred,
+            dims: vec![2, 2],
+            data: vec![1, 1, 1, 0],
+        };
+        let out = g.execute(&[Value::Tensor(xs)]).unwrap();
+        assert_eq!(u64s(&out), vec![1, 0]);
+    }
+
+    #[test]
+    fn gather_clamps_indices() {
+        let g = Graph::parse(
+            "ENTRY main.9 {\n\
+               tbl.1 = u64[4]{0} parameter(0)\n\
+               ix.2 = s64[3,1]{1,0} parameter(1)\n\
+               ROOT gather.3 = u64[3,1]{1,0} gather(tbl.1, ix.2), offset_dims={}, \
+             collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1}\n\
+             }\n",
+        )
+        .unwrap();
+        let tbl = Tensor::vec1(Ty::U64, vec![10, 11, 12, 13]);
+        let ix = Tensor {
+            ty: Ty::S64,
+            dims: vec![3, 1],
+            data: vec![2, encode(-5, Ty::S64), 99],
+        };
+        let out = g
+            .execute(&[Value::Tensor(tbl), Value::Tensor(ix)])
+            .unwrap();
+        assert_eq!(u64s(&out), vec![12, 10, 13]);
+    }
+
+    #[test]
+    fn while_loop_runs_to_fixpoint() {
+        // Counting loop: state (i, acc); body: i+1, acc+i; cond: i < 4.
+        let g = Graph::parse(
+            "cond.20 {\n\
+               st.21 = (s32[], s32[]) parameter(0)\n\
+               i.22 = s32[] get-tuple-element(st.21), index=0\n\
+               four.23 = s32[] constant(4)\n\
+               ROOT lt.24 = pred[] compare(i.22, four.23), direction=LT\n\
+             }\n\
+             body.10 {\n\
+               st.11 = (s32[], s32[]) parameter(0)\n\
+               i.12 = s32[] get-tuple-element(st.11), index=0\n\
+               acc.13 = s32[] get-tuple-element(st.11), index=1\n\
+               one.14 = s32[] constant(1)\n\
+               ni.15 = s32[] add(i.12, one.14)\n\
+               nacc.16 = s32[] add(acc.13, i.12)\n\
+               ROOT t.17 = (s32[], s32[]) tuple(ni.15, nacc.16)\n\
+             }\n\
+             ENTRY main.1 {\n\
+               z.2 = s32[] constant(0)\n\
+               st.3 = (s32[], s32[]) tuple(z.2, z.2)\n\
+               w.4 = (s32[], s32[]) while(st.3), condition=cond.20, body=body.10\n\
+               ROOT acc.5 = s32[] get-tuple-element(w.4), index=1\n\
+             }\n",
+        )
+        .unwrap();
+        let out = g.execute(&[]).unwrap();
+        assert_eq!(u64s(&out), vec![6]); // 0+1+2+3
+    }
+
+    #[test]
+    fn unknown_op_names_the_token() {
+        let g = Graph::parse(
+            "ENTRY main.1 {\n\
+               a.2 = u64[2]{0} parameter(0)\n\
+               ROOT c.3 = u64[2]{0} cosine(a.2)\n\
+             }\n",
+        )
+        .unwrap();
+        let e = g
+            .execute(&[Value::Tensor(Tensor::vec1(Ty::U64, vec![1, 2]))])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unsupported op 'cosine'"), "{e}");
+    }
+
+    #[test]
+    fn dynamic_slice_and_update_clamp() {
+        let g = Graph::parse(
+            "ENTRY main.1 {\n\
+               buf.2 = u64[4]{0} parameter(0)\n\
+               upd.3 = u64[2]{0} parameter(1)\n\
+               start.4 = s32[] parameter(2)\n\
+               dus.5 = u64[4]{0} dynamic-update-slice(buf.2, upd.3, start.4)\n\
+               ROOT ds.6 = u64[2]{0} dynamic-slice(dus.5, start.4), dynamic_slice_sizes={2}\n\
+             }\n",
+        )
+        .unwrap();
+        let run = |start: u64| {
+            let out = g
+                .execute(&[
+                    Value::Tensor(Tensor::vec1(Ty::U64, vec![1, 2, 3, 4])),
+                    Value::Tensor(Tensor::vec1(Ty::U64, vec![8, 9])),
+                    Value::Tensor(Tensor::scalar(Ty::S32, start)),
+                ])
+                .unwrap();
+            u64s(&out)
+        };
+        assert_eq!(run(1), vec![8, 9]);
+        // Start 3 clamps to 2 (n - size); start -1 clamps to 0.
+        assert_eq!(run(3), vec![8, 9]);
+        assert_eq!(run(encode(-1, Ty::S32)), vec![8, 9]);
+    }
+}

@@ -1,0 +1,420 @@
+//! Parser for the HLO text emitted by `python/compile/aot.py`.
+//!
+//! The format is the stable-ish textual HLO dump: an `HloModule` header
+//! line, then one block per computation —
+//!
+//! ```text
+//! region_1.10 {
+//!   acc.11 = u64[] parameter(0)
+//!   v.12 = u64[] parameter(1)
+//!   ROOT add.13 = u64[] add(acc.11, v.12)
+//! }
+//!
+//! ENTRY main.43 {
+//!   words.1 = u64[256]{0} parameter(0) /*index=0*/
+//!   ...
+//!   ROOT tuple.42 = (u8[128]{0}) tuple(convert.41)
+//! }
+//! ```
+//!
+//! Each instruction line is `[ROOT ]name = SHAPE opcode(operands)`
+//! followed by optional `, attr=value` pairs. `/* ... */` comments are
+//! stripped globally first; layout suffixes (`{1,0}`) after the dims
+//! are accepted and ignored. Instructions are topologically ordered
+//! within a computation, so the evaluator runs them top to bottom with
+//! a name→value environment.
+
+use super::value::Ty;
+use super::InterpError;
+use std::collections::HashMap;
+
+/// Result shape of an instruction: a typed array or a tuple (tuple
+/// element shapes are re-derived from the operands at evaluation time,
+/// so only the distinction is kept).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) enum Shape {
+    Array { ty: Ty, dims: Vec<usize> },
+    Tuple,
+}
+
+/// One parsed instruction.
+#[derive(Clone, Debug)]
+pub(crate) struct Instr {
+    pub name: String,
+    pub shape: Shape,
+    pub op: String,
+    pub operands: Vec<String>,
+    /// `attr=value` pairs after the operand list, verbatim.
+    pub attrs: Vec<(String, String)>,
+    pub root: bool,
+    /// `parameter(N)` index — operands are empty for parameters.
+    pub pnum: Option<usize>,
+    /// `constant(...)` literal text — operands are empty for constants.
+    pub literal: Option<String>,
+}
+
+impl Instr {
+    pub fn attr(&self, key: &str) -> Option<&str> {
+        self.attrs
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// One computation block (the entry or a called region).
+#[derive(Clone, Debug)]
+pub(crate) struct Computation {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    /// Index of the `ROOT` instruction in `instrs`.
+    pub root: usize,
+}
+
+impl Computation {
+    /// Number of parameters (`max pnum + 1`).
+    pub fn num_params(&self) -> usize {
+        self.instrs
+            .iter()
+            .filter_map(|i| i.pnum)
+            .map(|n| n + 1)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// A whole parsed module: all computations plus the entry index.
+#[derive(Clone, Debug)]
+pub(crate) struct Module {
+    pub comps: Vec<Computation>,
+    pub by_name: HashMap<String, usize>,
+    pub entry: usize,
+}
+
+fn err(what: String) -> InterpError {
+    InterpError(what)
+}
+
+/// Remove every `/* ... */` comment (the emitter's `/*index=N*/`
+/// operand annotations). Delimiters are ASCII, so byte-level removal
+/// preserves UTF-8 validity of the remainder.
+fn strip_comments(text: &str) -> String {
+    let bytes = text.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'/' && i + 1 < bytes.len() && bytes[i + 1] == b'*' {
+            let mut j = i + 2;
+            while j + 1 < bytes.len() && !(bytes[j] == b'*' && bytes[j + 1] == b'/') {
+                j += 1;
+            }
+            i = j + 2; // past "*/" (an unterminated comment drops the tail)
+        } else {
+            out.push(bytes[i]);
+            i += 1;
+        }
+    }
+    String::from_utf8(out).unwrap_or_default()
+}
+
+/// Parse `ty[d0,d1]{layout}` — the layout suffix is optional and
+/// ignored. Returns `None` on anything malformed.
+fn parse_shape(s: &str) -> Option<(Ty, Vec<usize>)> {
+    let open = s.find('[')?;
+    let close = s.find(']')?;
+    let ty = Ty::parse(&s[..open])?;
+    let mut dims = Vec::new();
+    for d in s[open + 1..close].split(',') {
+        let d = d.trim();
+        if d.is_empty() {
+            continue;
+        }
+        dims.push(d.parse().ok()?);
+    }
+    let tail = &s[close + 1..];
+    if !(tail.is_empty() || (tail.starts_with('{') && tail.ends_with('}'))) {
+        return None;
+    }
+    Some((ty, dims))
+}
+
+/// Split on top-level commas only — commas inside `(...)` or `{...}`
+/// (tuple shapes, `dimensions={1,0}` attrs) don't separate.
+fn split_top(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    for ch in s.chars() {
+        match ch {
+            '(' | '{' => {
+                depth += 1;
+                cur.push(ch);
+            }
+            ')' | '}' => {
+                depth = depth.saturating_sub(1);
+                cur.push(ch);
+            }
+            ',' if depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(ch),
+        }
+    }
+    let last = cur.trim();
+    if !last.is_empty() {
+        out.push(last.to_string());
+    }
+    out
+}
+
+/// Index of the `)` matching the `(` at byte offset `open`.
+fn matching_paren(s: &str, open: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    for (i, &c) in s.as_bytes().iter().enumerate().skip(open) {
+        match c {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_instr(line: &str) -> Result<Instr, InterpError> {
+    let (root, line) = match line.strip_prefix("ROOT ") {
+        Some(rest) => (true, rest),
+        None => (false, line),
+    };
+    let eq = line
+        .find(" = ")
+        .ok_or_else(|| err(format!("malformed instruction '{line}'")))?;
+    let name = line[..eq].trim().to_string();
+    let mut rest = line[eq + 3..].trim();
+
+    // Result shape: a parenthesised tuple or one `ty[dims]{layout}`.
+    let shape = if rest.starts_with('(') {
+        let close = matching_paren(rest, 0)
+            .ok_or_else(|| err(format!("unbalanced tuple shape in '{name}'")))?;
+        rest = rest[close + 1..].trim_start();
+        Shape::Tuple
+    } else {
+        let sp = rest
+            .find(' ')
+            .ok_or_else(|| err(format!("malformed instruction '{name}'")))?;
+        let (ty, dims) = parse_shape(&rest[..sp])
+            .ok_or_else(|| err(format!("bad shape '{}'", &rest[..sp])))?;
+        rest = rest[sp + 1..].trim_start();
+        Shape::Array { ty, dims }
+    };
+
+    // Opcode and its parenthesised operand list.
+    let open = rest
+        .find('(')
+        .ok_or_else(|| err(format!("missing operand list in '{name}'")))?;
+    let op = rest[..open].trim().to_string();
+    let op_ok = !op.is_empty()
+        && op.starts_with(|c: char| c.is_ascii_lowercase())
+        && op
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-');
+    if !op_ok {
+        return Err(err(format!("bad opcode '{op}'")));
+    }
+    let close = matching_paren(rest, open)
+        .ok_or_else(|| err(format!("unbalanced operand list in '{name}'")))?;
+    let inner = &rest[open + 1..close];
+    let tail = rest[close + 1..].trim_start();
+
+    let mut operands = Vec::new();
+    let mut pnum = None;
+    let mut literal = None;
+    match op.as_str() {
+        "parameter" => {
+            pnum = Some(
+                inner
+                    .trim()
+                    .parse::<usize>()
+                    .map_err(|_| err(format!("bad parameter index '{}'", inner.trim())))?,
+            );
+        }
+        "constant" => literal = Some(inner.trim().to_string()),
+        _ => {
+            operands = split_top(inner)
+                .into_iter()
+                .filter(|o| !o.is_empty())
+                .collect();
+        }
+    }
+
+    let mut attrs = Vec::new();
+    if let Some(t) = tail.strip_prefix(',') {
+        for a in split_top(t) {
+            if let Some(e) = a.find('=') {
+                attrs.push((a[..e].trim().to_string(), a[e + 1..].trim().to_string()));
+            }
+        }
+    }
+
+    Ok(Instr {
+        name,
+        shape,
+        op,
+        operands,
+        attrs,
+        root,
+        pnum,
+        literal,
+    })
+}
+
+/// Parse a whole HLO-text module into its computations.
+pub(crate) fn parse_module(text: &str) -> Result<Module, InterpError> {
+    let text = strip_comments(text);
+    let mut comps: Vec<Computation> = Vec::new();
+    let mut by_name = HashMap::new();
+    let mut entry = None;
+    // (name, instrs, is_entry) of the block being filled.
+    let mut cur: Option<(String, Vec<Instr>, bool)> = None;
+
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("HloModule") {
+            continue;
+        }
+        if line.ends_with('{') && !line.contains(" = ") {
+            let header = line[..line.len() - 1].trim();
+            let is_entry = header.starts_with("ENTRY ");
+            let name = header
+                .split_whitespace()
+                .last()
+                .ok_or_else(|| err("empty computation header".to_string()))?
+                .to_string();
+            cur = Some((name, Vec::new(), is_entry));
+            continue;
+        }
+        if line == "}" {
+            let (name, instrs, is_entry) = cur
+                .take()
+                .ok_or_else(|| err("unmatched '}' outside a computation".to_string()))?;
+            let root = instrs
+                .iter()
+                .position(|i| i.root)
+                .ok_or_else(|| err(format!("computation '{name}' has no ROOT")))?;
+            if is_entry {
+                entry = Some(comps.len());
+            }
+            by_name.insert(name.clone(), comps.len());
+            comps.push(Computation { name, instrs, root });
+            continue;
+        }
+        // Instruction lines outside any block (module-level noise from a
+        // future emitter) are skipped, mirroring the dump's leniency.
+        if let Some((_, instrs, _)) = cur.as_mut() {
+            instrs.push(parse_instr(line)?);
+        }
+    }
+
+    let entry = entry.ok_or_else(|| err("no ENTRY computation in module".to_string()))?;
+    Ok(Module {
+        comps,
+        by_name,
+        entry,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = "\
+HloModule tiny, entry_computation_layout={(u64[4]{0})->u64[]}
+
+region_0.3 {
+  a.4 = u64[] parameter(0)
+  b.5 = u64[] parameter(1)
+  ROOT add.6 = u64[] add(a.4, b.5)
+}
+
+ENTRY main.9 {
+  xs.1 = u64[4]{0} parameter(0) /*index=0*/
+  zero.2 = u64[] constant(0)
+  ROOT reduce.8 = u64[] reduce(xs.1, zero.2), dimensions={0}, to_apply=region_0.3
+}
+";
+
+    #[test]
+    fn parses_computations_and_entry() {
+        let m = parse_module(TINY).unwrap();
+        assert_eq!(m.comps.len(), 2);
+        assert_eq!(m.comps[m.entry].name, "main.9");
+        assert_eq!(m.comps[m.entry].num_params(), 1);
+        let region = &m.comps[m.by_name["region_0.3"]];
+        assert_eq!(region.num_params(), 2);
+        assert_eq!(region.instrs[region.root].op, "add");
+    }
+
+    #[test]
+    fn instruction_fields() {
+        let m = parse_module(TINY).unwrap();
+        let main = &m.comps[m.entry];
+        let reduce = &main.instrs[main.root];
+        assert!(reduce.root);
+        assert_eq!(reduce.op, "reduce");
+        assert_eq!(reduce.operands, vec!["xs.1", "zero.2"]);
+        assert_eq!(reduce.attr("dimensions"), Some("{0}"));
+        assert_eq!(reduce.attr("to_apply"), Some("region_0.3"));
+        // Comment stripped, layout accepted, parameter index captured.
+        let p = &main.instrs[0];
+        assert_eq!(p.pnum, Some(0));
+        assert_eq!(
+            p.shape,
+            Shape::Array {
+                ty: Ty::U64,
+                dims: vec![4]
+            }
+        );
+        let c = &main.instrs[1];
+        assert_eq!(c.literal.as_deref(), Some("0"));
+    }
+
+    #[test]
+    fn tuple_shapes_and_while_attrs() {
+        let line = "ROOT while.30 = (s32[], u64[128]{0}) while(tuple.29), \
+                    condition=region_2.20, body=region_1.10";
+        let i = parse_instr(line).unwrap();
+        assert_eq!(i.shape, Shape::Tuple);
+        assert_eq!(i.op, "while");
+        assert_eq!(i.operands, vec!["tuple.29"]);
+        assert_eq!(i.attr("condition"), Some("region_2.20"));
+        assert_eq!(i.attr("body"), Some("region_1.10"));
+    }
+
+    #[test]
+    fn malformed_inputs_name_the_token() {
+        let e = parse_module("ENTRY main {\n  x.1 = f32[2]{0} parameter(0)\n}\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("bad shape 'f32[2]{0}'"), "{e}");
+        let e = parse_module("ENTRY main {\n  x.1 = u64[] constant(0)\n}\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("has no ROOT"), "{e}");
+        let e = parse_module("x.1 = u64[] constant(0)\n").unwrap_err().to_string();
+        assert!(e.contains("no ENTRY"), "{e}");
+    }
+
+    #[test]
+    fn split_top_respects_nesting() {
+        assert_eq!(
+            split_top("a, b(c, d), e={1,0}, f"),
+            vec!["a", "b(c, d)", "e={1,0}", "f"]
+        );
+        assert!(split_top("").is_empty());
+    }
+}

@@ -1,0 +1,218 @@
+//! Typed tensor values for the HLO interpreter.
+//!
+//! Every array element is stored as **masked bits** in a `u64`: the low
+//! `Ty::width()` bits hold the value, two's-complement for the signed
+//! types. All arithmetic in the evaluator masks back to the element
+//! width, so overflow wraps exactly like the device types the graphs
+//! were traced with (`u64`, `s64`, `u32`, `s32`, `u8`, `pred`).
+
+use std::fmt;
+
+/// Element type of an HLO array shape.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Ty {
+    /// 1-bit boolean.
+    Pred,
+    /// Unsigned 8-bit.
+    U8,
+    /// Unsigned 32-bit.
+    U32,
+    /// Unsigned 64-bit.
+    U64,
+    /// Signed 32-bit (two's complement).
+    S32,
+    /// Signed 64-bit (two's complement).
+    S64,
+}
+
+impl Ty {
+    /// Parse an HLO element-type token (`pred`, `u8`, `u32`, `u64`,
+    /// `s32`, `s64`).
+    pub fn parse(s: &str) -> Option<Ty> {
+        Some(match s {
+            "pred" => Ty::Pred,
+            "u8" => Ty::U8,
+            "u32" => Ty::U32,
+            "u64" => Ty::U64,
+            "s32" => Ty::S32,
+            "s64" => Ty::S64,
+            _ => return None,
+        })
+    }
+
+    /// Bit width of one element.
+    pub fn width(self) -> u32 {
+        match self {
+            Ty::Pred => 1,
+            Ty::U8 => 8,
+            Ty::U32 | Ty::S32 => 32,
+            Ty::U64 | Ty::S64 => 64,
+        }
+    }
+
+    /// Mask selecting the low `width()` bits.
+    pub fn mask(self) -> u64 {
+        match self.width() {
+            64 => u64::MAX,
+            w => (1u64 << w) - 1,
+        }
+    }
+
+    /// Whether the type compares/divides as two's-complement signed.
+    pub fn is_signed(self) -> bool {
+        matches!(self, Ty::S32 | Ty::S64)
+    }
+
+    /// The HLO token for this type.
+    pub fn name(self) -> &'static str {
+        match self {
+            Ty::Pred => "pred",
+            Ty::U8 => "u8",
+            Ty::U32 => "u32",
+            Ty::U64 => "u64",
+            Ty::S32 => "s32",
+            Ty::S64 => "s64",
+        }
+    }
+}
+
+impl fmt::Display for Ty {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Interpret masked storage bits as the logical numeric value:
+/// sign-extended for signed types, zero-extended otherwise. `i128`
+/// holds every representable value of every supported type exactly, so
+/// comparisons and conversions share one code path.
+pub fn logical(bits: u64, ty: Ty) -> i128 {
+    if ty.is_signed() {
+        let w = ty.width();
+        let sign = 1u64 << (w - 1);
+        if bits & sign != 0 {
+            bits as i128 - (1i128 << w)
+        } else {
+            bits as i128
+        }
+    } else {
+        bits as i128
+    }
+}
+
+/// Re-encode a logical value as masked storage bits at `ty`'s width
+/// (two's complement for negatives).
+pub fn encode(v: i128, ty: Ty) -> u64 {
+    (v as u64) & ty.mask()
+}
+
+/// A dense array value: flat row-major `data`, each element masked to
+/// `ty`'s width. Rank 0 (`dims` empty) is a scalar with one element.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tensor {
+    /// Element type.
+    pub ty: Ty,
+    /// Row-major dimensions; empty for a scalar.
+    pub dims: Vec<usize>,
+    /// Flat element storage, `dims.iter().product()` entries.
+    pub data: Vec<u64>,
+}
+
+impl Tensor {
+    /// A rank-0 scalar.
+    pub fn scalar(ty: Ty, bits: u64) -> Tensor {
+        Tensor {
+            ty,
+            dims: Vec::new(),
+            data: vec![bits & ty.mask()],
+        }
+    }
+
+    /// A rank-1 tensor over `data` (each element masked to width).
+    pub fn vec1(ty: Ty, data: Vec<u64>) -> Tensor {
+        let m = ty.mask();
+        let data: Vec<u64> = data.into_iter().map(|v| v & m).collect();
+        Tensor {
+            ty,
+            dims: vec![data.len()],
+            data,
+        }
+    }
+
+    /// Number of elements a shape holds.
+    pub fn num_elems(dims: &[usize]) -> usize {
+        dims.iter().product()
+    }
+}
+
+/// An HLO value: a tensor or a tuple of values.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Value {
+    /// A dense array (or scalar).
+    Tensor(Tensor),
+    /// An ordered tuple, as produced by the `tuple` op and consumed by
+    /// `get-tuple-element`.
+    Tuple(Vec<Value>),
+}
+
+impl Value {
+    /// The tensor inside, if this is not a tuple.
+    pub fn as_tensor(&self) -> Option<&Tensor> {
+        match self {
+            Value::Tensor(t) => Some(t),
+            Value::Tuple(_) => None,
+        }
+    }
+
+    /// The tuple elements, if this is a tuple.
+    pub fn as_tuple(&self) -> Option<&[Value]> {
+        match self {
+            Value::Tuple(vs) => Some(vs),
+            Value::Tensor(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_and_masks() {
+        assert_eq!(Ty::Pred.width(), 1);
+        assert_eq!(Ty::Pred.mask(), 1);
+        assert_eq!(Ty::U8.mask(), 0xFF);
+        assert_eq!(Ty::U32.mask(), 0xFFFF_FFFF);
+        assert_eq!(Ty::U64.mask(), u64::MAX);
+        assert_eq!(Ty::S64.mask(), u64::MAX);
+        assert!(Ty::S32.is_signed() && Ty::S64.is_signed());
+        assert!(!Ty::U64.is_signed());
+    }
+
+    #[test]
+    fn signed_round_trip() {
+        // -1 in s32 storage is 0xFFFF_FFFF; logical view sign-extends.
+        let bits = encode(-1, Ty::S32);
+        assert_eq!(bits, 0xFFFF_FFFF);
+        assert_eq!(logical(bits, Ty::S32), -1);
+        // The same bits viewed as u32 are 2^32 - 1.
+        assert_eq!(logical(bits, Ty::U32), 0xFFFF_FFFF);
+        // s64 min round-trips through i128 exactly.
+        let min = encode(i64::MIN as i128, Ty::S64);
+        assert_eq!(logical(min, Ty::S64), i64::MIN as i128);
+        // u64 values above i64::MAX stay exact (no i64 funnel).
+        assert_eq!(logical(u64::MAX, Ty::U64), u64::MAX as i128);
+    }
+
+    #[test]
+    fn tensor_constructors_mask() {
+        let t = Tensor::vec1(Ty::U8, vec![0x1FF, 1, 0]);
+        assert_eq!(t.data, vec![0xFF, 1, 0]);
+        assert_eq!(t.dims, vec![3]);
+        let s = Tensor::scalar(Ty::Pred, 3);
+        assert_eq!(s.data, vec![1]);
+        assert!(s.dims.is_empty());
+        assert_eq!(Tensor::num_elems(&[64, 1]), 64);
+        assert_eq!(Tensor::num_elems(&[]), 1);
+    }
+}

@@ -1,13 +1,33 @@
-//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
-//! `python/compile/aot.py` and executes them from the Rust request path.
+//! AOT artifact runtime: manifest → interpreter → backend.
 //!
-//! Python runs exactly once (at `make artifacts`); afterwards the Rust
-//! binary is self-contained: `PjRtClient::cpu()` compiles the HLO text
-//! and the coordinator executes query/hash batches against it.
+//! `python/compile/aot.py` runs exactly once (at `make artifacts`) and
+//! lowers the filter's query graphs to textual HLO plus a
+//! `manifest.json` recording the static geometry they were traced for.
+//! From there the Rust binary is self-contained; the pipeline is
+//!
+//! 1. [`artifacts`] — parse `manifest.json` into a [`ModelGeometry`]
+//!    and the named artifact files ([`ArtifactManifest`]);
+//! 2. [`interp`] — parse each `*.hlo.txt` into an executable
+//!    [`interp::Graph`] and evaluate it natively (no XLA/PJRT
+//!    dependency; the **only** place artifact graphs are executed,
+//!    enforced by `scripts/check_api_surface.sh`);
+//! 3. [`client`] — [`QueryRuntime`], the typed front that pads batches
+//!    to the artifact's static `batch`, checks snapshot shapes, and
+//!    converts between engine vectors and interpreter tensors;
+//! 4. [`actor`] — [`RuntimeHandle`], the cloneable thread-safe handle
+//!    that pins the loaded runtime to one driver thread;
+//!
+//! which `device::AotBackend` adapts onto the `device::Backend` submit
+//! surface: query batches offload onto interpreted graph executions,
+//! mutations fall through to the native kernels. Geometry mismatches
+//! between artifact and live filter are **named errors**
+//! ([`RuntimeError::GeometryMismatch`]) surfaced in STATS, never a
+//! silent fallback.
 
 pub mod artifacts;
 pub mod client;
 pub mod actor;
+pub mod interp;
 
 pub use artifacts::{ArtifactManifest, ModelGeometry};
 pub use actor::RuntimeHandle;

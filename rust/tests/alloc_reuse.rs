@@ -46,7 +46,7 @@ fn steady_state_batcher_runs_at_100_percent_arena_hit_rate() {
                 shards,
                 workers: 4,
                 pools,
-                artifacts_dir: None,
+                ..EngineConfig::default()
             })
             .unwrap(),
         );
@@ -127,7 +127,7 @@ fn wal_group_commit_preserves_the_zero_allocation_steady_state() {
             shards: 4,
             workers: 4,
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap(),
     );
@@ -187,7 +187,7 @@ fn growth_mid_window_keeps_the_arena_miss_count_constant() {
             shards: 4,
             workers: 4,
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap(),
     );
@@ -268,7 +268,7 @@ fn multi_tenant_flush_groups_keep_the_arena_miss_count_constant() {
             shards: 4,
             workers: 4,
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap(),
     );

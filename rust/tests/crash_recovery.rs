@@ -57,7 +57,7 @@ fn engine(shards: usize) -> Arc<Engine> {
             shards,
             workers: 2,
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap(),
     )

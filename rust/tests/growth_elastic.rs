@@ -47,7 +47,7 @@ fn engine(pools: usize, shards: usize) -> Engine {
         shards,
         workers: 4,
         pools,
-        artifacts_dir: None,
+        ..EngineConfig::default()
     })
     .unwrap()
 }

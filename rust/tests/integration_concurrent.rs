@@ -173,7 +173,7 @@ fn epoch_guard_under_engine_load() {
             shards: 2,
             workers: 4,
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap(),
     );

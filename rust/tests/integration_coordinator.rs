@@ -16,7 +16,7 @@ fn engine(capacity: usize, shards: usize) -> Arc<Engine> {
             shards,
             workers: 4,
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap(),
     )
@@ -126,7 +126,7 @@ fn tcp_server_over_multi_pool_engine() {
             shards: 8,
             workers: 4,
             pools: 4,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap(),
     );

@@ -281,7 +281,7 @@ fn engine_shared_device_serves_mixed_phases() {
             shards: 4,
             workers: 4,
             pools: 1,
-            artifacts_dir: None,
+            ..EngineConfig::default()
         })
         .unwrap(),
     );

@@ -44,7 +44,7 @@ fn engine(capacity: usize, shards: usize) -> Engine {
         shards,
         workers: 2,
         pools: 1,
-        artifacts_dir: None,
+        ..EngineConfig::default()
     })
     .unwrap()
 }

@@ -20,9 +20,10 @@
 
 use cuckoo_gpu::coordinator::ShardedFilter;
 use cuckoo_gpu::device::{
-    Backend, Device, DeviceTopology, LaunchConfig, Pinning, TopologyConfig,
+    AotBackend, Backend, Device, DeviceTopology, LaunchConfig, Pinning, TopologyConfig,
 };
-use cuckoo_gpu::filter::Fp16;
+use cuckoo_gpu::filter::{CuckooConfig, CuckooFilter, Fp16};
+use cuckoo_gpu::runtime::RuntimeHandle;
 use cuckoo_gpu::util::prng::{mix64, SplitMix64};
 use cuckoo_gpu::OpKind;
 use std::collections::VecDeque;
@@ -126,6 +127,14 @@ fn oracle_device() -> Device {
     })
 }
 
+/// The third backend leg: the AOT interpreter wrapper over a plain
+/// device, loaded from the golden 64x16 artifact fixture.
+fn aot_backend() -> AotBackend {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/aot_64");
+    let rt = RuntimeHandle::spawn(&dir).expect("golden fixture loads");
+    AotBackend::new(Box::new(oracle_device()), rt)
+}
+
 /// Replay `schedule` on `sf` over `backend` — every batch through the
 /// one unified entry point, `submit(backend, OpKind, keys)` — and
 /// return the full outcome log and the final ledger total.
@@ -200,10 +209,11 @@ fn multi_pool_matches_single_pool_oracle_across_matrix() {
 #[test]
 fn backend_trait_equivalence_device_vs_topologies() {
     // Satellite battery: the SAME schedule submitted through the SAME
-    // API to a plain `Device`, a 1-pool `DeviceTopology` and a 4-pool
-    // `DeviceTopology` must produce byte-identical positional outcomes
-    // and identical occupancy ledgers — the Backend trait's contract
-    // is that callers cannot tell the shapes apart.
+    // API to a plain `Device`, a 1-pool `DeviceTopology`, a 4-pool
+    // `DeviceTopology` and an `AotBackend` wrapper must produce
+    // byte-identical positional outcomes and identical occupancy
+    // ledgers — the Backend trait's contract is that callers cannot
+    // tell the shapes apart.
     let seed = stress_seed().wrapping_add(3);
     let schedule = build_schedule(seed, 12);
     for &shards in &[1usize, 4, 8] {
@@ -217,7 +227,92 @@ fn backend_trait_equivalence_device_vs_topologies() {
             assert_logs_equal(&log, &dev_log, &what, seed);
             assert_eq!(len, dev_len, "ledger drift at {what} (seed {seed})");
         }
+        // Third leg: the AOT wrapper. At 100k capacity the filter can
+        // never match the fixture's 64x16 artifact geometry, so every
+        // query batch is refused by name and served natively — the
+        // wrapper must be observationally identical to the bare device.
+        let aot = aot_backend();
+        let (log, len, _) = run_schedule(&aot, shards, &schedule);
+        let what = format!("Device vs AotBackend shards={shards}");
+        assert_logs_equal(&log, &dev_log, &what, seed);
+        assert_eq!(len, dev_len, "ledger drift at {what} (seed {seed})");
+        let st = aot.offload_stats().expect("aot backend reports offload stats");
+        assert_eq!(st.launches, 0, "no query may offload onto a mismatched artifact");
+        assert!(st.mismatches >= 1, "mismatches must be counted, got {st:?}");
+        let why = st.last_mismatch.expect("mismatch reason recorded");
+        assert!(why.contains("geometry mismatch"), "unnamed refusal: {why}");
     }
+}
+
+#[test]
+fn aot_offload_leg_matches_oracle_on_fixture_geometry() {
+    // The offload path itself joins the battery: a single-shard filter
+    // built to the fixture's exact geometry (64 buckets x 16 slots,
+    // default seed) routes every non-empty query batch through the
+    // interpreted artifact, and the outcomes must stay byte-identical
+    // to the plain-device oracle. The live set stays well under the
+    // 1024-slot capacity so the two legs never diverge on saturation.
+    let seed = stress_seed().wrapping_add(5);
+    let mut rng = SplitMix64::new(seed ^ 0xA07);
+    let base = mix64(seed);
+    let mut counter = 0u64;
+    let mut fresh = |n: usize, counter: &mut u64| -> Vec<u64> {
+        (0..n)
+            .map(|_| {
+                *counter += 1;
+                mix64(base.wrapping_add(*counter))
+            })
+            .collect()
+    };
+    // Small boundary-straddling sizes; queries are never empty, so the
+    // offload counter must advance every round.
+    const SMALL: &[usize] = &[1, 7, 31, 32, 33, 64];
+    let mut live: VecDeque<u64> = VecDeque::new();
+    let mut schedule = Vec::new();
+    for _ in 0..8 {
+        let insert = fresh(SMALL[rng.next_below(SMALL.len() as u64) as usize], &mut counter);
+        let rem_n = rng.next_below(live.len() as u64 / 2 + 1) as usize;
+        let remove: Vec<u64> = live.drain(..rem_n).collect();
+        let qn = SMALL[rng.next_below(SMALL.len() as u64) as usize];
+        let mut query = Vec::with_capacity(qn);
+        for _ in 0..qn {
+            if !live.is_empty() && rng.next_below(2) == 0 {
+                query.push(live[rng.next_below(live.len() as u64) as usize]);
+            } else {
+                query.extend(fresh(1, &mut counter).iter().map(|&k| k | (1 << 63)));
+            }
+        }
+        live.extend(&insert);
+        schedule.push(Round {
+            insert,
+            remove,
+            query,
+        });
+    }
+
+    let fixture_filter = || {
+        ShardedFilter::from_single(
+            CuckooFilter::<Fp16>::new(CuckooConfig::new(64).bucket_slots(16)).unwrap(),
+        )
+    };
+    let device = oracle_device();
+    let oracle = fixture_filter();
+    let (oracle_log, oracle_len) = run_schedule_on(&oracle, &device, &schedule);
+
+    let aot = aot_backend();
+    let offloaded = fixture_filter();
+    let (aot_log, aot_len) = run_schedule_on(&offloaded, &aot, &schedule);
+
+    assert_logs_equal(&aot_log, &oracle_log, "interpreted offload vs native oracle", seed);
+    assert_eq!(aot_len, oracle_len, "ledger drift on the offload leg (seed {seed})");
+    let st = aot.offload_stats().expect("aot backend reports offload stats");
+    assert_eq!(
+        st.launches,
+        schedule.len() as u64,
+        "every non-empty query batch must offload: {st:?}"
+    );
+    assert_eq!(st.mismatches, 0, "matching geometry must never be refused: {st:?}");
+    assert_eq!(st.fallbacks, 0, "no interpreter errors expected: {st:?}");
 }
 
 #[test]

@@ -222,3 +222,44 @@ if [ -n "$stray_migrations$stray_growth" ]; then
 fi
 
 echo "Growth surface OK: migration confined to the epoch-guarded growth chain"
+
+# ---------------------------------------------------------------------
+# AOT interpreter confinement (PR 9).
+#
+# Artifact graph execution has exactly one home: runtime::interp. The
+# HLO text is parsed by Graph::parse/Graph::from_file and evaluated by
+# Graph::execute, fronted by QueryRuntime (typed tensor conversion +
+# static-geometry discipline) and RuntimeHandle (the serving actor).
+# Fail CI if interpreter internals — the interp module, its Graph type
+# or raw .hlo.txt handling — are reached from any module outside
+# rust/src/runtime/: the device's AotBackend, the engine and the bench
+# drivers must go through RuntimeHandle/QueryRuntime so batch padding,
+# snapshot sizing and geometry checks cannot be bypassed by a second
+# execution path.
+
+INTERP_MOD=rust/src/runtime/interp/mod.rs
+if [ ! -f "$INTERP_MOD" ]; then
+  echo "error: $INTERP_MOD missing (update the interp guard in $0)" >&2
+  exit 1
+fi
+if ! grep -q 'fn execute' "$INTERP_MOD"; then
+  echo "error: Graph::execute not found in $INTERP_MOD — this guard" >&2
+  echo "checks a stale entry point; update it with the interpreter." >&2
+  exit 1
+fi
+
+INTERP_PATTERN='interp::|Graph::(parse|from_file|execute)|\.hlo\.txt'
+stray_interp="$(grep -rnE "$INTERP_PATTERN" rust/src \
+  | grep -v '^rust/src/runtime/' || true)"
+if [ -n "$stray_interp" ]; then
+  echo "error: interpreter internals reached outside runtime/:" >&2
+  echo "$stray_interp" >&2
+  echo >&2
+  echo "Execute artifacts through runtime::RuntimeHandle (serving) or" >&2
+  echo "runtime::QueryRuntime (direct) — they own padding, snapshot" >&2
+  echo "sizing and the geometry-mismatch discipline. Do not parse or" >&2
+  echo "evaluate HLO text from other modules." >&2
+  exit 1
+fi
+
+echo "Interp surface OK: HLO evaluation confined to rust/src/runtime/"
