@@ -6,8 +6,11 @@
 use cuckoo_gpu::coordinator::{
     Batcher, BatcherConfig, Engine, EngineConfig, OpKind, Request, ShardedFilter,
 };
-use cuckoo_gpu::device::{build_backend, Backend, Device};
+use cuckoo_gpu::device::{
+    build_backend, build_backend_placed, effective_streams, Backend, Device, PlacementPolicy,
+};
 use cuckoo_gpu::filter::{hash::xxhash64_u64, CuckooConfig, CuckooFilter, Fp16, GrowthConfig, Layout};
+use cuckoo_gpu::mem::BufferArena;
 use cuckoo_gpu::util::Timer;
 use std::collections::VecDeque;
 use std::hint::black_box;
@@ -410,6 +413,75 @@ fn growth_migration() {
     }
 }
 
+/// Hardware-placement costs (PR 10): (a) pinned vs unpinned worker
+/// pools at a fixed worker budget — the same fused query stream with
+/// workers floating (the scheduler's choice) or pinned at spawn under
+/// `Compact`; (b) partitioned vs shared batch-scratch arena at the same
+/// backend shape, small and large batches, 1 and 4 pools — the
+/// partition count mirrors the engine's sizing (one per stream) and the
+/// donate cycle matches the batcher's. Placement never changes results,
+/// so both axes are pure locality measurements. Run at the pre/post
+/// commits on real hardware to record before/after numbers (this
+/// container has no Rust toolchain).
+fn placement() {
+    println!("-- placement (pinned workers, partitioned arena) --");
+    let total = cuckoo_gpu::device::default_workers();
+    let shards = 8usize;
+
+    // (a) Pinned vs unpinned at fixed workers.
+    let batch = 1 << 14;
+    let ks: Vec<u64> = (0..batch as u64)
+        .map(|i| cuckoo_gpu::util::prng::mix64(i ^ 0x9142))
+        .collect();
+    for pools in [1usize, 4] {
+        for policy in [PlacementPolicy::None, PlacementPolicy::Compact] {
+            let label = policy.label();
+            let backend: Box<dyn Backend> = build_backend_placed(pools, total, policy);
+            let backend = backend.as_ref();
+            let sf = ShardedFilter::<Fp16>::with_capacity(2 * batch, shards).unwrap();
+            sf.submit(backend, OpKind::Insert, &ks).wait();
+            let iters = (1 << 21) / batch;
+            bench(&format!("query pin={label:<7} {pools}p x{total}w"), batch * iters, || {
+                for _ in 0..iters {
+                    black_box(sf.submit(backend, OpKind::Query, &ks).wait().0);
+                }
+            });
+        }
+    }
+
+    // (b) Partitioned vs shared arena. Partitioning is arena-driven
+    // (`lease_in` activates whenever the arena has >1 partition), so it
+    // benches without any pinning in play.
+    for pools in [1usize, 4] {
+        let streams = effective_streams(pools, total);
+        let backend: Box<dyn Backend> = build_backend(pools, total);
+        let backend = backend.as_ref();
+        for batch in [1usize << 10, 1 << 16] {
+            for (name, parts) in [("shared", 1usize), ("part'd", streams)] {
+                let arena = Arc::new(BufferArena::partitioned(parts));
+                let sf = ShardedFilter::<Fp16>::with_capacity(2 * batch, shards)
+                    .unwrap()
+                    .with_arena(arena);
+                let ks: Vec<u64> = (0..batch as u64)
+                    .map(|i| cuckoo_gpu::util::prng::mix64(i ^ 0x9143))
+                    .collect();
+                sf.submit(backend, OpKind::Insert, &ks).wait();
+                let iters = (1 << 21) / batch;
+                bench(
+                    &format!("query arena={name:<6} batch={batch} {pools}p"),
+                    batch * iters,
+                    || {
+                        for _ in 0..iters {
+                            let (_, out) = sf.submit(backend, OpKind::Query, &ks).wait();
+                            sf.arena().flags().donate(out);
+                        }
+                    },
+                );
+            }
+        }
+    }
+}
+
 fn main() {
     launch_overhead();
     scatter_reuse();
@@ -417,6 +489,7 @@ fn main() {
     batch_pipeline_overlap();
     tenant_mix();
     growth_migration();
+    placement();
     let n = 1 << 22;
     let keys: Vec<u64> = (0..n as u64).map(cuckoo_gpu::util::prng::mix64).collect();
 

@@ -37,7 +37,9 @@ use super::registry::{
 use super::request::{OpKind, Request, Response};
 use super::shard::{BatchTicket, ShardedFilter};
 use super::wal::{CheckpointStats, Wal, WalRecord, WalStats};
-use crate::device::{build_backend, AotBackend, Backend, BackendKind};
+use crate::device::{
+    build_backend_placed, effective_streams, AotBackend, Backend, BackendKind, PlacementPolicy,
+};
 use crate::filter::{FilterError, Fp16, GrowthConfig};
 use crate::mem::{ArenaStats, BufferArena};
 use crate::runtime::{RuntimeError, RuntimeHandle};
@@ -99,6 +101,14 @@ pub struct EngineConfig {
     /// geometry (ignoring `capacity`/`shards`), and fails construction
     /// if the runtime cannot come up.
     pub backend: BackendKind,
+    /// Worker→core placement policy (`--pin` / `CUCKOO_PIN`). A
+    /// non-`None` policy pins every pool worker at spawn and switches
+    /// the batch-scratch arena to one free-list partition per backend
+    /// stream; [`PlacementPolicy::None`] is fully inert — no probe, no
+    /// syscalls, a single shared arena, byte-identical behavior to the
+    /// pre-placement engine. Placement changes *where* work runs and
+    /// *which* free lists serve it, never *what* it computes.
+    pub placement: PlacementPolicy,
 }
 
 impl Default for EngineConfig {
@@ -110,6 +120,7 @@ impl Default for EngineConfig {
             pools: 1,
             artifacts_dir: None,
             backend: BackendKind::Native,
+            placement: PlacementPolicy::from_env(),
         }
     }
 }
@@ -157,7 +168,16 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(cfg: EngineConfig) -> Result<Self, EngineError> {
-        let arena = Arc::new(BufferArena::new());
+        // Placement mode partitions the batch-scratch arena one-to-one
+        // with the backend's streams (`effective_streams` mirrors the
+        // topology's pool clamp, so the counts can't drift apart);
+        // otherwise the historical single shared arena.
+        let streams = effective_streams(cfg.pools, cfg.workers);
+        let arena = if cfg.placement.is_none() || streams <= 1 {
+            Arc::new(BufferArena::new())
+        } else {
+            Arc::new(BufferArena::partitioned(streams))
+        };
         let mut backend_note = None;
         // Resolve (filter, backend) per the requested backend family.
         let (filter, capacity, shards, backend): (
@@ -185,8 +205,10 @@ impl Engine {
                     ShardedFilter::from_single(crate::filter::CuckooFilter::<Fp16>::new(fcfg)?)
                         .with_arena(arena.clone()),
                 );
-                let backend: Box<dyn Backend> =
-                    Box::new(AotBackend::new(build_backend(cfg.pools, cfg.workers), rt));
+                let backend: Box<dyn Backend> = Box::new(AotBackend::new(
+                    build_backend_placed(cfg.pools, cfg.workers, cfg.placement.clone()),
+                    rt,
+                ));
                 (filter, g.num_buckets * g.bucket_slots, 1, backend)
             }
             BackendKind::Native => {
@@ -194,7 +216,7 @@ impl Engine {
                     ShardedFilter::with_capacity(cfg.capacity, cfg.shards)?
                         .with_arena(arena.clone()),
                 );
-                let native = build_backend(cfg.pools, cfg.workers);
+                let native = build_backend_placed(cfg.pools, cfg.workers, cfg.placement.clone());
                 let backend: Box<dyn Backend> = match &cfg.artifacts_dir {
                     Some(dir) => match RuntimeHandle::spawn(dir) {
                         Ok(rt) => {

@@ -1,6 +1,7 @@
 //! Serving metrics: per-op counters, latency histograms, per-pool
-//! device stats for multi-pool topologies, and the batch-scratch
-//! arena's hit/miss/resident counters.
+//! device stats for multi-pool topologies, the batch-scratch arena's
+//! hit/miss/resident counters, and the hardware-placement ledger
+//! (pin outcomes per pool, per-partition arena counters).
 
 use crate::coordinator::request::OpKind;
 use crate::coordinator::wal::WalStats;
@@ -150,6 +151,50 @@ impl Metrics {
         )
     }
 
+    /// Placement section of the STATS reply:
+    /// `placement: policy=compact 0[cpus=0-1 pin=2/2] 1[cpus=4,6 pin=1/2 fail=1]
+    /// p0[hits=H misses=M] p1[...] xdonate=N`.
+    ///
+    /// One bracket per pool: its target cores as collapsed ranges and
+    /// `pin=ok/workers` (with `fail=` appended only when a pin attempt
+    /// failed — every worker's outcome is recorded at spawn, so
+    /// `ok + fail == workers` always). An unpinned pool prints
+    /// `N[unpinned w=W]`. Per-partition arena counters (`pN[...]`)
+    /// appear only on a partitioned arena; `xdonate` is the
+    /// cross-partition donation count (see
+    /// [`crate::mem::BufferArena::cross_donations`]).
+    pub fn placement_summary(
+        p: &crate::device::PlacementSummary,
+        parts: &[ArenaStats],
+        cross_donations: u64,
+    ) -> String {
+        let mut line = format!("placement: policy={}", p.policy);
+        for pool in &p.pools {
+            if pool.cpus.is_empty() {
+                line.push_str(&format!(" {}[unpinned w={}]", pool.pool, pool.workers));
+            } else {
+                line.push_str(&format!(
+                    " {}[cpus={} pin={}/{}",
+                    pool.pool,
+                    fmt_cpus(&pool.cpus),
+                    pool.pinned,
+                    pool.workers
+                ));
+                if pool.failed > 0 {
+                    line.push_str(&format!(" fail={}", pool.failed));
+                }
+                line.push(']');
+            }
+        }
+        if parts.len() > 1 {
+            for (i, s) in parts.iter().enumerate() {
+                line.push_str(&format!(" p{i}[hits={} misses={}]", s.hits, s.misses));
+            }
+        }
+        line.push_str(&format!(" xdonate={cross_donations}"));
+        line
+    }
+
     /// WAL section of the STATS reply:
     /// `wal: segments=S appended=A replayed=R last_ckpt=C` (`C` is `-`
     /// before the first checkpoint), or `wal: off` on a volatile engine.
@@ -246,6 +291,35 @@ impl Metrics {
     }
 }
 
+/// Collapse a core list into sorted, deduplicated ranges — `[0,1,2,3]`
+/// → `"0-3"`, `[0,2,4]` → `"0,2,4"` — so a 64-core pool prints as one
+/// token instead of 64.
+fn fmt_cpus(cpus: &[usize]) -> String {
+    let mut sorted: Vec<usize> = cpus.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    let mut out = String::new();
+    let mut i = 0;
+    while i < sorted.len() {
+        let start = sorted[i];
+        let mut end = start;
+        while i + 1 < sorted.len() && sorted[i + 1] == end + 1 {
+            i += 1;
+            end = sorted[i];
+        }
+        if !out.is_empty() {
+            out.push(',');
+        }
+        if end > start {
+            out.push_str(&format!("{start}-{end}"));
+        } else {
+            out.push_str(&start.to_string());
+        }
+        i += 1;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -302,6 +376,51 @@ mod tests {
         assert_eq!(
             Metrics::arena_summary(&idle),
             "arena: hits=0 misses=0 hit_rate=100.0% resident=0B"
+        );
+    }
+
+    #[test]
+    fn cpu_lists_collapse_into_ranges() {
+        assert_eq!(fmt_cpus(&[0, 1, 2, 3]), "0-3");
+        assert_eq!(fmt_cpus(&[0, 2, 4]), "0,2,4");
+        assert_eq!(fmt_cpus(&[3, 1, 2, 7, 2]), "1-3,7");
+        assert_eq!(fmt_cpus(&[5]), "5");
+        assert_eq!(fmt_cpus(&[]), "");
+    }
+
+    #[test]
+    fn placement_summary_reports_pools_partitions_and_cross_traffic() {
+        use crate::device::{PlacementSummary, PoolPlacement};
+        let p = PlacementSummary {
+            policy: "compact".to_string(),
+            pools: vec![
+                PoolPlacement { pool: 0, workers: 2, cpus: vec![0, 1], pinned: 2, failed: 0 },
+                PoolPlacement { pool: 1, workers: 2, cpus: vec![4, 6], pinned: 1, failed: 1 },
+            ],
+        };
+        let parts = [
+            ArenaStats { hits: 10, misses: 2, resident_bytes: 0 },
+            ArenaStats { hits: 8, misses: 2, resident_bytes: 0 },
+        ];
+        assert_eq!(
+            Metrics::placement_summary(&p, &parts, 3),
+            "placement: policy=compact 0[cpus=0-1 pin=2/2] 1[cpus=4,6 pin=1/2 fail=1] \
+             p0[hits=10 misses=2] p1[hits=8 misses=2] xdonate=3"
+        );
+    }
+
+    #[test]
+    fn placement_summary_inert_default_is_one_unpinned_line() {
+        use crate::device::{PlacementSummary, PoolPlacement};
+        let p = PlacementSummary {
+            policy: "none".to_string(),
+            pools: vec![PoolPlacement { pool: 0, workers: 4, ..PoolPlacement::default() }],
+        };
+        // A single shared partition prints no per-partition brackets.
+        let parts = [ArenaStats { hits: 12, misses: 4, resident_bytes: 0 }];
+        assert_eq!(
+            Metrics::placement_summary(&p, &parts, 0),
+            "placement: policy=none 0[unpinned w=4] xdonate=0"
         );
     }
 

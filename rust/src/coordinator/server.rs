@@ -188,10 +188,15 @@ fn handle_conn(
             }
             "LEN" => format!("OK {}", engine.len()),
             "STATS" => format!(
-                "OK {} | {} | {} | {} | {} | {}",
+                "OK {} | {} | {} | {} | {} | {} | {}",
                 engine.metrics.summary(),
                 crate::coordinator::metrics::Metrics::pools_summary(&engine.pool_stats()),
                 crate::coordinator::metrics::Metrics::arena_summary(&engine.arena_stats()),
+                crate::coordinator::metrics::Metrics::placement_summary(
+                    &engine.backend().placement(),
+                    &engine.arena().partition_stats(),
+                    engine.arena().cross_donations(),
+                ),
                 crate::coordinator::metrics::Metrics::wal_summary(engine.wal_stats().as_ref()),
                 crate::coordinator::metrics::Metrics::ns_summary(&engine.namespaces()),
                 crate::coordinator::metrics::Metrics::backend_summary(
@@ -380,6 +385,8 @@ mod tests {
         assert!(stats.contains("pools: 0[w="), "per-pool stats missing: {stats}");
         assert!(stats.contains("arena: hits="), "arena counters missing: {stats}");
         assert!(stats.contains("resident="), "arena residency missing: {stats}");
+        assert!(stats.contains("placement: policy="), "placement row missing: {stats}");
+        assert!(stats.contains("xdonate="), "cross-donation counter missing: {stats}");
         assert!(stats.contains("wal: off"), "volatile engine must report wal off: {stats}");
         assert!(stats.contains("| ns: default[n="), "per-namespace stats missing: {stats}");
         assert!(

@@ -67,6 +67,11 @@
 //! `wait` *detaches* it and returns it to the caller as the outcomes
 //! vector; the batcher donates it back to the arena once per-client
 //! responses are scattered (see [`super::batcher`]), closing the cycle.
+//! On a *partitioned* arena (hardware-placement mode) each chunk's
+//! internal scratch homes on one partition, round-robin per chunk,
+//! while the out vector always leases from partition 0 — the partition
+//! `Pool::donate` returns to — so both recycle loops stay hit-clean
+//! per partition (see `crate::mem`).
 //! Ticket semantics are otherwise unchanged: the per-shard tallies
 //! merge into the occupancy ledger exactly once at resolution, a kernel
 //! panic re-raises at `wait()` *after* the full drain (ledger skipped
@@ -708,9 +713,20 @@ impl<L: Layout> ShardedFilter<L> {
     ) -> ChunkInFlight {
         let n = keys.len();
         let num_shards = self.shards.len();
+        // Partitioned-arena mode: all of this chunk's internal scratch
+        // homes on one partition (round-robin per chunk), so each
+        // partition warms up its own free lists and a steady workload
+        // holds *per-partition* misses constant. The out vector is the
+        // exception: it leaves the arena via `wait`/`detach` and comes
+        // back through the provenance-free `Pool::donate`, which lands
+        // in partition 0 — so it is always leased from partition 0 to
+        // keep that cycle hit-clean. On a single-partition arena
+        // `next_home()` is 0 and this is byte-identical to the
+        // historical path.
+        let home = self.arena.next_home();
         let mut scratch = Scratch {
             out: self.arena.flags().lease(n),
-            per_shard: self.arena.tallies().lease(num_shards),
+            per_shard: self.arena.tallies().lease_in(home, num_shards),
             flat: Lease::detached(),
             tables: Lease::detached(),
             keys: Lease::detached(),
@@ -733,7 +749,7 @@ impl<L: Layout> ShardedFilter<L> {
             // launch cannot borrow the caller's slice) and write
             // outcomes straight to their input positions.
             assert!(n <= FUSED_CHUNK, "chunk exceeds the fused launch bound");
-            scratch.keys = self.arena.keys().lease(n);
+            scratch.keys = self.arena.keys().lease_in(home, n);
             scratch.keys.extend_from_slice(keys);
             let state = Arc::new(AsyncBatchState::new(scratch));
             let shards = self.shards.clone();
@@ -777,8 +793,8 @@ impl<L: Layout> ShardedFilter<L> {
         //     ids (m) · starts (m) · bounds (m+1)
         // Worst case ≈ 5S + 5·streams + 4 entries, leased once.
         let streams = backend.streams();
-        scratch.flat = self.arena.pairs().lease(n);
-        scratch.tables = self.arena.indices().lease(5 * num_shards + 5 * streams + 4);
+        scratch.flat = self.arena.pairs().lease_in(home, n);
+        scratch.tables = self.arena.indices().lease_in(home, 5 * num_shards + 5 * streams + 4);
         self.scatter_into(keys, &mut scratch.tables, &mut scratch.flat);
         let tables = &mut scratch.tables;
         let counts_at = tables.len();

@@ -22,7 +22,7 @@
 //! mismatch is a named, counted event in STATS — never a silent
 //! degradation.
 
-use super::backend::{Backend, Kernel, OffloadShape, OffloadStats, StreamStat};
+use super::backend::{Backend, Kernel, OffloadShape, OffloadStats, PlacementSummary, StreamStat};
 use super::LaunchToken;
 use crate::runtime::RuntimeHandle;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -85,6 +85,12 @@ impl Backend for AotBackend {
 
     fn stream_stats(&self) -> Vec<StreamStat> {
         self.inner.stream_stats()
+    }
+
+    fn placement(&self) -> PlacementSummary {
+        // Pinning lives with the wrapped pools; the interpreter thread
+        // is not a pool worker.
+        self.inner.placement()
     }
 
     fn kind(&self) -> &'static str {

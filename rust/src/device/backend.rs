@@ -32,7 +32,8 @@
 //!   lifetime launches, live queue depth); the aggregate accessors
 //!   default to summing it.
 
-use super::{Device, DeviceTopology, LaunchToken, WarpCtx};
+use super::{Device, DeviceTopology, LaunchToken, TopologyConfig, WarpCtx};
+use crate::util::affinity::PlacementPolicy;
 use std::fmt;
 use std::sync::Arc;
 
@@ -95,6 +96,32 @@ pub struct OffloadStats {
     pub mismatches: u64,
     /// The most recent mismatch, verbatim.
     pub last_mismatch: Option<String>,
+}
+
+/// Hardware-placement ledger of one pool/stream, for the STATS
+/// `placement:` row. Every worker's pin-attempt outcome lands in
+/// exactly one of `pinned`/`failed` (or in neither for an unpinned
+/// pool, where `cpus` is empty and no attempt was made).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PoolPlacement {
+    pub pool: usize,
+    /// Persistent workers in this pool.
+    pub workers: usize,
+    /// Target CPUs the workers were asked to pin to (empty = unpinned).
+    pub cpus: Vec<usize>,
+    /// Workers whose spawn-time pin succeeded.
+    pub pinned: u64,
+    /// Workers whose pin attempt failed (running unpinned, warned once).
+    pub failed: u64,
+}
+
+/// A backend's placement report: the policy it was built under plus the
+/// per-pool pin ledgers. See [`Backend::placement`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PlacementSummary {
+    /// Placement label (`none`/`compact`/`spread`/`explicit`).
+    pub policy: String,
+    pub pools: Vec<PoolPlacement>,
 }
 
 /// Point-in-time stats of one submission stream.
@@ -176,6 +203,25 @@ pub trait Backend: Send + Sync {
     fn offload_stats(&self) -> Option<OffloadStats> {
         None
     }
+
+    /// Hardware-placement report: the policy this backend was built
+    /// under and, per pool, the target cores plus every worker's
+    /// pin-attempt outcome. The default (for backends without worker
+    /// pools of their own) reports each stream as an unpinned pool.
+    fn placement(&self) -> PlacementSummary {
+        PlacementSummary {
+            policy: "none".to_string(),
+            pools: self
+                .stream_stats()
+                .iter()
+                .map(|s| PoolPlacement {
+                    pool: s.stream,
+                    workers: s.workers,
+                    ..PoolPlacement::default()
+                })
+                .collect(),
+        }
+    }
 }
 
 /// One device = one stream.
@@ -209,6 +255,20 @@ impl Backend for Device {
             queue_depth: self.queue_depth(),
         }]
     }
+
+    fn placement(&self) -> PlacementSummary {
+        let (cpus, pinned, failed) = self.pin_outcomes();
+        PlacementSummary {
+            policy: self.pin_policy().to_string(),
+            pools: vec![PoolPlacement {
+                pool: 0,
+                workers: self.workers(),
+                cpus,
+                pinned,
+                failed,
+            }],
+        }
+    }
 }
 
 /// One stream per pool; shard assignment is the topology's pinning.
@@ -241,6 +301,27 @@ impl Backend for DeviceTopology {
             })
             .collect()
     }
+
+    fn placement(&self) -> PlacementSummary {
+        PlacementSummary {
+            policy: self.policy().to_string(),
+            pools: self
+                .pools()
+                .iter()
+                .enumerate()
+                .map(|(i, d)| {
+                    let (cpus, pinned, failed) = d.pin_outcomes();
+                    PoolPlacement {
+                        pool: i,
+                        workers: d.workers(),
+                        cpus,
+                        pinned,
+                        failed,
+                    }
+                })
+                .collect(),
+        }
+    }
 }
 
 /// Build the backend for a `pools`/`total_workers` knob pair: one plain
@@ -250,10 +331,52 @@ impl Backend for DeviceTopology {
 /// `tests/stress_topology.rs`); callers hold a `Box<dyn Backend>` and
 /// never learn which they got.
 pub fn build_backend(pools: usize, total_workers: usize) -> Box<dyn Backend> {
+    build_backend_placed(pools, total_workers, PlacementPolicy::None)
+}
+
+/// [`build_backend`] with a worker→core [`PlacementPolicy`].
+/// `PlacementPolicy::None` is inert (no topology probe, no syscalls) —
+/// identical to the two-argument form. Anything else pins each pool's
+/// workers at spawn and reports the outcomes via [`Backend::placement`];
+/// see the `device` module docs ("Hardware placement").
+pub fn build_backend_placed(
+    pools: usize,
+    total_workers: usize,
+    placement: PlacementPolicy,
+) -> Box<dyn Backend> {
     if pools <= 1 {
-        Box::new(Device::with_workers(total_workers))
+        let workers = total_workers.max(1);
+        let policy = placement.label();
+        let plan = placement.plan(&[workers]);
+        let cpus = plan.pools.into_iter().next().unwrap_or_default();
+        Box::new(Device::with_placement(
+            super::LaunchConfig {
+                workers,
+                ..super::LaunchConfig::default()
+            },
+            cpus,
+            policy,
+        ))
     } else {
-        Box::new(DeviceTopology::with_pools(pools, total_workers))
+        Box::new(DeviceTopology::new(TopologyConfig {
+            pools,
+            total_workers,
+            placement,
+            ..TopologyConfig::default()
+        }))
+    }
+}
+
+/// The stream count [`build_backend_placed`] will actually produce for
+/// a `pools`/`total_workers` knob pair, after the topology's
+/// oversubscription clamp. The engine sizes its arena partitions with
+/// this *before* the backend exists, so partitions and streams can
+/// never disagree.
+pub fn effective_streams(pools: usize, total_workers: usize) -> usize {
+    if pools <= 1 {
+        1
+    } else {
+        pools.clamp(1, total_workers.max(1))
     }
 }
 
@@ -345,5 +468,42 @@ mod tests {
             seen[st] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn effective_streams_matches_what_build_backend_produces() {
+        for (pools, workers) in [(0, 4), (1, 4), (2, 4), (4, 2), (8, 3), (3, 0)] {
+            assert_eq!(
+                effective_streams(pools, workers),
+                build_backend(pools, workers).streams(),
+                "pools={pools} workers={workers}"
+            );
+        }
+    }
+
+    #[test]
+    fn placed_backends_report_per_pool_pin_ledgers() {
+        // Unplaced: the two-argument form stays inert, every pool
+        // unpinned with zero attempts.
+        let b = build_backend(2, 4);
+        let p = b.placement();
+        assert_eq!(p.policy, "none");
+        assert_eq!(p.pools.len(), 2);
+        assert!(p.pools.iter().all(|pp| pp.cpus.is_empty() && pp.pinned == 0 && pp.failed == 0));
+
+        // Placed: one target per worker, one recorded outcome per
+        // worker, on both backend shapes.
+        for pools in [1, 2] {
+            let b = build_backend_placed(pools, 4, PlacementPolicy::Compact);
+            let p = b.placement();
+            assert_eq!(p.policy, "compact");
+            assert_eq!(p.pools.len(), pools);
+            for pp in &p.pools {
+                assert_eq!(pp.cpus.len(), pp.workers);
+                assert_eq!(pp.pinned + pp.failed, pp.workers as u64);
+            }
+            // Placement never changes results.
+            assert_eq!(count_evens(b.as_ref(), 0, 10_000), 5_000);
+        }
     }
 }

@@ -85,20 +85,44 @@
 //! introspection. `ShardedFilter`, `Engine` and the benches are written
 //! against `&dyn Backend` / `&B: Backend` — a future real-GPU or PJRT
 //! backend slots in as one more `impl`, not another set of batch paths.
+//!
+//! ## Hardware placement
+//!
+//! By default the OS scheduler places worker threads freely. A
+//! [`PlacementPolicy`] (from [`crate::util::affinity`], re-exported
+//! here) opts a backend into **core pinning**:
+//! [`build_backend_placed`] probes the socket topology, computes one
+//! target core per worker, and each pool's workers pin themselves **at
+//! spawn** — in the worker prologue, before the first job — because
+//! `sched_setaffinity` only targets the calling thread, and re-pinning
+//! mid-stream would migrate a worker exactly when its cached filter
+//! state is hottest (the cost pinning exists to avoid). Construction
+//! waits for every worker to record its pin outcome, so the per-pool
+//! ok/failed tallies in [`Backend::placement`] are settled before the
+//! first launch and STATS never reports a half-pinned pool. Placement
+//! **never** changes results — the stress battery replays pinned
+//! topologies byte-for-byte against the unpinned oracle — and a failed
+//! pin degrades to unpinned execution with one named warning. Under
+//! `Compact` on a multi-socket machine, [`DeviceTopology`] also swaps
+//! its default round-robin shard map for a socket-major
+//! [`Pinning::Explicit`] map, so a shard group's pool, its workers and
+//! its arena partition share a socket.
 
 pub mod aot;
 pub mod backend;
 pub mod topology;
 
+pub use crate::util::affinity::{CpuTopology, PlacementPlan, PlacementPolicy};
 pub use aot::AotBackend;
 pub use backend::{
-    build_backend, Backend, BackendKind, Kernel, OffloadShape, OffloadStats, StreamStat,
+    build_backend, build_backend_placed, effective_streams, Backend, BackendKind, Kernel,
+    OffloadShape, OffloadStats, PlacementSummary, PoolPlacement, StreamStat,
 };
 pub use topology::{DeviceTopology, Pinning, TopologyConfig};
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 /// GPU-like launch geometry.
@@ -122,10 +146,15 @@ impl Default for LaunchConfig {
     }
 }
 
+/// Default worker count: `CUCKOO_WORKERS` if set, else the size of the
+/// process **affinity mask** (so a run confined to 2 CPUs of a 64-CPU
+/// host by a container cpuset spawns 2 workers, not 64), else
+/// `available_parallelism`, else 4.
 pub fn default_workers() -> usize {
     std::env::var("CUCKOO_WORKERS")
         .ok()
         .and_then(|v| v.parse().ok())
+        .or_else(|| crate::util::affinity::allowed_cpus().map(|cpus| cpus.len()))
         .unwrap_or_else(|| {
             std::thread::available_parallelism()
                 .map(|n| n.get())
@@ -250,6 +279,26 @@ struct PoolState {
     shutdown: bool,
 }
 
+/// Spawn-time pinning plan plus the per-worker outcome ledger for one
+/// pool. Workers pin **themselves** in their prologue (the affinity
+/// syscall targets the calling thread); [`WorkerPool::new`] parks until
+/// every worker has recorded an outcome, so placement state is settled
+/// before the first launch.
+struct PinPlan {
+    /// Target CPU per worker (len == pool size).
+    cpus: Vec<usize>,
+    /// Workers whose pin attempt succeeded.
+    ok: AtomicU64,
+    /// Workers whose pin attempt failed (they run unpinned).
+    failed: AtomicU64,
+    /// Workers that have recorded an outcome; construction waits for
+    /// this to reach the pool size.
+    recorded: Mutex<usize>,
+    recorded_cv: Condvar,
+    /// One named warning per pool on pin failure, not one per worker.
+    warned: AtomicBool,
+}
+
 struct PoolShared {
     state: Mutex<PoolState>,
     /// Workers park here between jobs.
@@ -260,6 +309,8 @@ struct PoolShared {
     /// this so a small launch never jumps ahead of queued jobs — FIFO
     /// stream order holds for any single submitter.
     inflight: AtomicU64,
+    /// `Some` when this pool's workers pin themselves at spawn.
+    pin: Option<PinPlan>,
 }
 
 struct WorkerPool {
@@ -272,7 +323,18 @@ struct WorkerPool {
 }
 
 impl WorkerPool {
-    fn new(size: usize) -> Self {
+    /// Spawn `size` workers. `pin_cpus` (non-empty) pins worker `j` to
+    /// `pin_cpus[j % len]` in its prologue; construction then waits for
+    /// every worker's pin outcome before returning.
+    fn new(size: usize, pin_cpus: Option<Vec<usize>>) -> Self {
+        let pin = pin_cpus.filter(|c| !c.is_empty()).map(|cpus| PinPlan {
+            cpus: (0..size).map(|j| cpus[j % cpus.len()]).collect(),
+            ok: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            recorded: Mutex::new(0),
+            recorded_cv: Condvar::new(),
+            warned: AtomicBool::new(false),
+        });
         let shared = Arc::new(PoolShared {
             state: Mutex::new(PoolState {
                 epoch: 0,
@@ -285,6 +347,7 @@ impl WorkerPool {
             work_cv: Condvar::new(),
             size,
             inflight: AtomicU64::new(0),
+            pin,
         });
         let spawned = AtomicU64::new(0);
         let handles = (0..size)
@@ -297,6 +360,14 @@ impl WorkerPool {
                     .expect("failed to spawn device worker")
             })
             .collect();
+        if let Some(pin) = &shared.pin {
+            // Settle placement before the first launch: every worker has
+            // either landed on its core or been counted as failed.
+            let mut done = pin.recorded.lock().unwrap();
+            while *done < size {
+                done = pin.recorded_cv.wait(done).unwrap();
+            }
+        }
         Self {
             shared,
             handles,
@@ -322,6 +393,24 @@ impl Drop for WorkerPool {
 }
 
 fn worker_loop(shared: &PoolShared, worker: usize) {
+    if let Some(pin) = &shared.pin {
+        // Spawn-time pinning: the syscall targets the calling thread, so
+        // it must run here, before the first job, not in the spawner.
+        match crate::util::affinity::pin_current_thread(&[pin.cpus[worker]]) {
+            Ok(()) => {
+                pin.ok.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(why) => {
+                pin.failed.fetch_add(1, Ordering::Relaxed);
+                if !pin.warned.swap(true, Ordering::Relaxed) {
+                    eprintln!("[cuckoo-gpu] warn: worker pinning degraded to unpinned: {why}");
+                }
+            }
+        }
+        let mut done = pin.recorded.lock().unwrap();
+        *done += 1;
+        pin.recorded_cv.notify_all();
+    }
     let mut seen_epoch = 0u64;
     loop {
         let task = {
@@ -404,6 +493,9 @@ impl LaunchToken {
 pub struct Device {
     pub cfg: LaunchConfig,
     pool: WorkerPool,
+    /// Placement policy label this pool was built under ("none" for an
+    /// unpinned device) — surfaced in the STATS `placement:` row.
+    pin_policy: &'static str,
     /// Lifetime count of non-empty launches through any entry point
     /// (inline fast paths included, unlike the pool job ledger).
     launches: AtomicU64,
@@ -417,12 +509,7 @@ impl Default for Device {
 
 impl Device {
     pub fn new(cfg: LaunchConfig) -> Self {
-        let size = cfg.workers.max(1);
-        Self {
-            cfg,
-            pool: WorkerPool::new(size),
-            launches: AtomicU64::new(0),
-        }
+        Self::with_placement(cfg, Vec::new(), "none")
     }
 
     pub fn with_workers(workers: usize) -> Self {
@@ -430,6 +517,42 @@ impl Device {
             workers: workers.max(1),
             ..LaunchConfig::default()
         })
+    }
+
+    /// Build a device whose workers pin themselves at spawn: worker `j`
+    /// pins to `cpus[j % cpus.len()]` (empty = unpinned, identical to
+    /// [`Device::new`]). `policy` is the placement label reported by
+    /// [`Backend::placement`]. See the module docs ("Hardware
+    /// placement") for why pinning happens only at spawn.
+    pub fn with_placement(cfg: LaunchConfig, cpus: Vec<usize>, policy: &'static str) -> Self {
+        let size = cfg.workers.max(1);
+        let pin = if cpus.is_empty() { None } else { Some(cpus) };
+        Self {
+            cfg,
+            pool: WorkerPool::new(size, pin),
+            pin_policy: policy,
+            launches: AtomicU64::new(0),
+        }
+    }
+
+    /// The placement label this device was built under.
+    pub fn pin_policy(&self) -> &'static str {
+        self.pin_policy
+    }
+
+    /// Per-pool pin ledger: `(target cpus, succeeded, failed)`. Empty
+    /// targets = unpinned pool (no attempts were made); otherwise
+    /// `succeeded + failed == workers` — every worker's outcome is
+    /// recorded before construction returns.
+    pub fn pin_outcomes(&self) -> (Vec<usize>, u64, u64) {
+        match &self.pool.shared.pin {
+            Some(p) => (
+                p.cpus.clone(),
+                p.ok.load(Ordering::Relaxed),
+                p.failed.load(Ordering::Relaxed),
+            ),
+            None => (Vec::new(), 0, 0),
+        }
     }
 
     /// Number of persistent worker threads ("SMs") in the pool.
@@ -838,6 +961,38 @@ mod tests {
         let seen = d.launch_items(64, |_| counter.load(Ordering::Relaxed) == n1 as u64);
         assert_eq!(seen, 64, "sync inline launch overtook the queue");
         big.wait();
+    }
+
+    #[test]
+    fn unpinned_device_reports_no_pin_attempts() {
+        let d = Device::with_workers(2);
+        assert_eq!(d.pin_policy(), "none");
+        assert_eq!(d.pin_outcomes(), (Vec::new(), 0, 0));
+    }
+
+    #[test]
+    fn pinned_device_records_every_worker_outcome_before_first_launch() {
+        // Pin to CPUs from the live affinity mask where readable (the
+        // attempts then succeed); elsewhere the attempts fail with a
+        // named warning — either way every worker's outcome is recorded
+        // and results are unchanged.
+        let targets = crate::util::affinity::allowed_cpus().unwrap_or_else(|| vec![0]);
+        let d = Device::with_placement(
+            LaunchConfig {
+                workers: 3,
+                ..LaunchConfig::default()
+            },
+            targets.clone(),
+            "compact",
+        );
+        assert_eq!(d.pin_policy(), "compact");
+        let (cpus, ok, failed) = d.pin_outcomes();
+        assert_eq!(cpus.len(), 3, "one target per worker");
+        assert!(cpus.iter().all(|c| targets.contains(c)));
+        assert_eq!(ok + failed, 3, "an outcome per worker, settled at construction");
+        // Pinned pools execute identically.
+        assert_eq!(d.launch_items(10_000, |i| i % 2 == 0), 5_000);
+        assert_eq!(d.threads_spawned(), 3);
     }
 
     #[test]

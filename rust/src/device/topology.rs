@@ -22,8 +22,20 @@
 //! pools (earlier pools take the remainder), so `pools = N` re-partitions
 //! a fixed set of "SMs" instead of multiplying threads — the
 //! fixed-hardware comparison the `topology_scaling` bench runs.
+//!
+//! Hardware placement ([`TopologyConfig::placement`]): a non-`None`
+//! [`PlacementPolicy`] probes the socket topology once, computes one
+//! target core per worker (`Compact` keeps each pool on one socket,
+//! `Spread` interleaves sockets), and each pool's workers pin
+//! themselves at spawn (see the `device` module docs). Under `Compact`
+//! on a multi-socket machine a default round-robin shard map is
+//! upgraded to a socket-major [`Pinning::Explicit`] map, so consecutive
+//! shard groups fill one socket's pools before crossing to the next —
+//! an explicitly-configured `Pinning` is never overridden. Placement
+//! changes *where* work runs, never *what* it computes.
 
 use super::{default_workers, Device, LaunchConfig};
+use crate::util::affinity::{CpuTopology, PlacementPlan, PlacementPolicy};
 
 /// Shard → pool assignment policy.
 #[derive(Clone, Debug)]
@@ -50,6 +62,10 @@ pub struct TopologyConfig {
     pub block_size: usize,
     pub warp_size: usize,
     pub pinning: Pinning,
+    /// Worker→core placement. `PlacementPolicy::None` (the default) is
+    /// inert: no probe, no syscalls, byte-identical to the pre-placement
+    /// behavior.
+    pub placement: PlacementPolicy,
 }
 
 impl Default for TopologyConfig {
@@ -61,6 +77,7 @@ impl Default for TopologyConfig {
             block_size: lc.block_size,
             warp_size: lc.warp_size,
             pinning: Pinning::RoundRobin,
+            placement: PlacementPolicy::None,
         }
     }
 }
@@ -69,6 +86,8 @@ impl Default for TopologyConfig {
 pub struct DeviceTopology {
     pools: Vec<Device>,
     pinning: Pinning,
+    /// Placement label this topology was built under (STATS reporting).
+    policy: &'static str,
 }
 
 impl DeviceTopology {
@@ -80,19 +99,41 @@ impl DeviceTopology {
         let n = cfg.pools.clamp(1, total);
         let base = total / n;
         let rem = total % n;
-        let pools = (0..n)
-            .map(|i| {
-                let workers = base + usize::from(i < rem);
-                Device::new(LaunchConfig {
-                    block_size: cfg.block_size,
-                    warp_size: cfg.warp_size,
-                    workers,
-                })
+        let widths: Vec<usize> = (0..n).map(|i| base + usize::from(i < rem)).collect();
+        // Placement: probe the socket layout once, derive one target
+        // core per worker, and (Compact, >1 socket, default pinning
+        // only) a socket-major shard map aligning shard groups with
+        // sockets. `None` skips all of it.
+        let policy = cfg.placement.label();
+        let (plan, socket_order) = if cfg.placement.is_none() {
+            (PlacementPlan::unpinned(n), None)
+        } else {
+            let topo = CpuTopology::probe();
+            (cfg.placement.plan_on(&topo, &widths), cfg.placement.socket_pool_order(&topo, n))
+        };
+        let pinning = match (matches!(cfg.pinning, Pinning::RoundRobin), socket_order) {
+            (true, Some(order)) => Pinning::Explicit(order),
+            _ => cfg.pinning,
+        };
+        let pools = widths
+            .iter()
+            .zip(plan.pools)
+            .map(|(&workers, cpus)| {
+                Device::with_placement(
+                    LaunchConfig {
+                        block_size: cfg.block_size,
+                        warp_size: cfg.warp_size,
+                        workers,
+                    },
+                    cpus,
+                    policy,
+                )
             })
             .collect();
         Self {
             pools,
-            pinning: cfg.pinning,
+            pinning,
+            policy,
         }
     }
 
@@ -107,10 +148,17 @@ impl DeviceTopology {
 
     /// Wrap one existing device as a single-pool topology.
     pub fn single(device: Device) -> Self {
+        let policy = device.pin_policy();
         Self {
             pools: vec![device],
             pinning: Pinning::RoundRobin,
+            policy,
         }
+    }
+
+    /// The placement label this topology was built under.
+    pub fn policy(&self) -> &'static str {
+        self.policy
     }
 
     pub fn num_pools(&self) -> usize {
@@ -183,6 +231,45 @@ mod tests {
         assert_eq!(t.pool_for_shard(1), 1);
         assert_eq!(t.pool_for_shard(2), 0);
         assert_eq!(t.pool_for_shard(3), 1); // wraps: map[3 % 3]
+    }
+
+    #[test]
+    fn placement_threads_through_to_every_pool() {
+        let t = DeviceTopology::new(TopologyConfig {
+            pools: 2,
+            total_workers: 4,
+            placement: PlacementPolicy::Compact,
+            ..TopologyConfig::default()
+        });
+        assert_eq!(t.policy(), "compact");
+        for d in t.pools() {
+            let (cpus, ok, failed) = d.pin_outcomes();
+            assert_eq!(cpus.len(), d.workers(), "one target core per worker");
+            assert_eq!(ok + failed, d.workers() as u64, "every outcome recorded");
+        }
+        // Placement never changes results.
+        assert_eq!(t.pool(0).launch_items(10_000, |i| i % 2 == 0), 5_000);
+        // The default stays inert: no targets, no attempts, no probe.
+        let unpinned = DeviceTopology::with_pools(2, 4);
+        assert_eq!(unpinned.policy(), "none");
+        for d in unpinned.pools() {
+            assert_eq!(d.pin_outcomes(), (Vec::new(), 0, 0));
+        }
+    }
+
+    #[test]
+    fn explicit_pinning_survives_placement_and_round_robin_upgrades_only_on_multi_socket() {
+        // An explicitly-configured shard map must never be overridden by
+        // placement, whatever the machine's socket count.
+        let t = DeviceTopology::new(TopologyConfig {
+            pools: 2,
+            total_workers: 4,
+            pinning: Pinning::Explicit(vec![1]),
+            placement: PlacementPolicy::Compact,
+            ..TopologyConfig::default()
+        });
+        assert_eq!(t.pool_for_shard(0), 1);
+        assert_eq!(t.pool_for_shard(7), 1);
     }
 
     #[test]

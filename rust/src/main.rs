@@ -7,6 +7,7 @@
 //!       [--out-dir DIR] [--backend native|aot] [--artifacts DIR]
 //! repro serve [--addr HOST:PORT] [--capacity N] [--shards N]
 //!       [--pools N] [--workers N]  # N independent device pools
+//!       [--pin none|compact|spread] # worker→core placement (CUCKOO_PIN)
 //!       [--backend native|aot]     # query execution engine family
 //!       [--artifacts DIR]          # AOT HLO artifacts (interp runtime)
 //!       [--wal-dir DIR]            # durable serving: WAL + checkpoints
@@ -73,6 +74,14 @@ fn cmd_serve(args: &Args) {
             std::process::exit(2);
         }),
     };
+    // --pin overrides the CUCKOO_PIN environment default.
+    let placement = match args.get("pin") {
+        None => cuckoo_gpu::device::PlacementPolicy::from_env(),
+        Some(tok) => cuckoo_gpu::device::PlacementPolicy::parse(tok).unwrap_or_else(|| {
+            eprintln!("unknown pin policy '{tok}' (expected none, compact or spread)");
+            std::process::exit(2);
+        }),
+    };
     if let Some(dir) = args.get("artifacts") {
         println!("loading AOT artifacts from {dir}...");
     }
@@ -84,15 +93,17 @@ fn cmd_serve(args: &Args) {
             pools: args.get_usize("pools", 1),
             artifacts_dir: args.get("artifacts").map(Into::into),
             backend,
+            placement,
         })
         .expect("engine"),
     );
     println!(
-        "serving on {addr} (backend={}, offload={}, workers={}, pools={})",
+        "serving on {addr} (backend={}, offload={}, workers={}, pools={}, pin={})",
         engine.backend().kind(),
         engine.pjrt_active(),
         args.get_usize("workers", cuckoo_gpu::device::default_workers()),
-        engine.pools()
+        engine.pools(),
+        engine.backend().placement().policy
     );
     // Tiering: enabled before recovery so namespaces restored from a
     // checkpoint are immediately evictable under the budget.

@@ -27,6 +27,23 @@
 //! how "steady-state zero-allocation" is a tested property rather than
 //! a hope.
 //!
+//! ## Partitions (hardware-placement mode)
+//!
+//! [`BufferArena::partitioned`] splits every pool's free lists into `n`
+//! independent partitions — the engine sizes `n` to the backend's
+//! stream count — each with its own hit/miss/resident counters
+//! ([`BufferArena::partition_stats`]). [`Pool::lease_in`] serves from
+//! exactly one partition; the lease remembers its home
+//! ([`Lease::home`]) and returns there on drop, so a fixed workload
+//! holds *per-partition* misses constant, not just the aggregate.
+//! Cross-partition traffic is explicit and counted: [`Lease::donate_to`]
+//! tallies a donation that lands away from home
+//! ([`BufferArena::cross_donations`]), while the provenance-free
+//! [`Pool::donate`] always lands in partition 0 (the partition the
+//! detached out-vector path leases from). [`BufferArena::new`] is
+//! `partitioned(1)` — byte-identical to the historical single-free-list
+//! arena.
+//!
 //! ## Lifecycle and ownership
 //!
 //! Leases are plain owned values (`Deref`/`DerefMut` to `Vec<T>`): they
@@ -46,11 +63,11 @@
 //! buffer can never return to the pool while a device kernel may still
 //! read or write it (see `coordinator::shard`).
 //!
-//! Each free list is capped (`PER_CLASS_CAP` buffers per class); a
-//! return beyond the cap simply drops the buffer, bounding resident
-//! memory under bursty workloads. [`BufferArena::stats`] exposes the
-//! aggregate hit/miss/resident-bytes counters the server's STATS reply
-//! reports.
+//! Each free list is capped (`PER_CLASS_CAP` buffers per class and
+//! partition); a return beyond the cap simply drops the buffer, bounding
+//! resident memory under bursty workloads. [`BufferArena::stats`]
+//! exposes the aggregate hit/miss/resident-bytes counters the server's
+//! STATS reply reports.
 
 use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -59,8 +76,8 @@ use std::sync::{Arc, Mutex};
 /// One bucket per possible power-of-two capacity class.
 const NUM_CLASSES: usize = usize::BITS as usize;
 
-/// Free buffers retained per class; returns beyond this are dropped so
-/// resident memory stays bounded.
+/// Free buffers retained per class (per partition); returns beyond this
+/// are dropped so resident memory stays bounded.
 const PER_CLASS_CAP: usize = 32;
 
 /// Smallest class whose buffers are guaranteed to hold `n` elements.
@@ -79,12 +96,31 @@ fn class_for_capacity(cap: usize) -> usize {
     (usize::BITS - 1 - cap.leading_zeros()) as usize
 }
 
-/// Arena-wide counters, shared by every pool of the arena.
+/// Per-partition counters, shared by every pool of the arena.
 #[derive(Default)]
 struct Counters {
     hits: AtomicU64,
     misses: AtomicU64,
     resident_bytes: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> ArenaStats {
+        ArenaStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            resident_bytes: self.resident_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Arena-wide shared state: one counter set per partition plus the
+/// cross-partition donation tally. Every typed pool of one arena holds
+/// the same `ArenaShared`, so the aggregate counters tell the whole
+/// story across scratch types.
+struct ArenaShared {
+    parts: Vec<Counters>,
+    cross_donations: AtomicU64,
 }
 
 /// Point-in-time arena counters: lease requests served from a free list
@@ -119,25 +155,27 @@ impl ArenaStats {
 type FreeLists<T> = Vec<Vec<Vec<T>>>;
 
 struct PoolInner<T> {
-    classes: Mutex<FreeLists<T>>,
-    counters: Arc<Counters>,
+    /// One independent free-list set per partition.
+    parts: Vec<Mutex<FreeLists<T>>>,
+    shared: Arc<ArenaShared>,
 }
 
 impl<T> PoolInner<T> {
-    /// Return a buffer to its capacity class (elements dropped, capacity
-    /// kept). Zero-capacity and over-cap returns are silently dropped.
-    fn put(&self, mut buf: Vec<T>) {
+    /// Return a buffer to its capacity class in `part` (elements
+    /// dropped, capacity kept). Zero-capacity and over-cap returns are
+    /// silently dropped.
+    fn put(&self, part: usize, mut buf: Vec<T>) {
         buf.clear();
         if buf.capacity() == 0 {
             return;
         }
         let class = class_for_capacity(buf.capacity());
         let bytes = (buf.capacity() * std::mem::size_of::<T>()) as u64;
-        let mut classes = self.classes.lock().unwrap();
+        let mut classes = self.parts[part].lock().unwrap();
         if classes[class].len() >= PER_CLASS_CAP {
             return; // dropped: bounds resident memory under bursts
         }
-        self.counters.resident_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.shared.parts[part].resident_bytes.fetch_add(bytes, Ordering::Relaxed);
         classes[class].push(buf);
     }
 }
@@ -148,69 +186,91 @@ pub struct Pool<T> {
 }
 
 impl<T> Pool<T> {
-    fn new(counters: Arc<Counters>) -> Self {
+    fn new(partitions: usize, shared: Arc<ArenaShared>) -> Self {
         Self {
             inner: Arc::new(PoolInner {
-                classes: Mutex::new((0..NUM_CLASSES).map(|_| Vec::new()).collect()),
-                counters,
+                parts: (0..partitions)
+                    .map(|_| Mutex::new((0..NUM_CLASSES).map(|_| Vec::new()).collect()))
+                    .collect(),
+                shared,
             }),
         }
     }
 
-    /// Lease a cleared buffer with capacity ≥ `min_capacity`. Served
-    /// from the smallest adequate class with a free buffer (a *hit*),
-    /// else freshly allocated at the class-rounded capacity (a *miss*).
+    /// Lease a cleared buffer with capacity ≥ `min_capacity` from
+    /// partition 0 — equivalent to [`Pool::lease_in`]`(0, ..)`, and the
+    /// whole story on a single-partition arena.
     pub fn lease(&self, min_capacity: usize) -> Lease<T> {
+        self.lease_in(0, min_capacity)
+    }
+
+    /// Lease a cleared buffer with capacity ≥ `min_capacity` from one
+    /// partition's free lists. Served from the smallest adequate class
+    /// with a free buffer **in that partition** (a *hit*, counted
+    /// against that partition), else freshly allocated at the
+    /// class-rounded capacity (a *miss*). The lease remembers
+    /// `partition` as its home and returns there on drop.
+    pub fn lease_in(&self, partition: usize, min_capacity: usize) -> Lease<T> {
         let class = class_for_request(min_capacity);
+        let counters = &self.inner.shared.parts[partition];
         {
-            let mut classes = self.inner.classes.lock().unwrap();
+            let mut classes = self.inner.parts[partition].lock().unwrap();
             for bucket in classes[class..].iter_mut() {
                 if let Some(buf) = bucket.pop() {
                     let bytes = (buf.capacity() * std::mem::size_of::<T>()) as u64;
-                    self.inner.counters.hits.fetch_add(1, Ordering::Relaxed);
-                    self.inner.counters.resident_bytes.fetch_sub(bytes, Ordering::Relaxed);
+                    counters.hits.fetch_add(1, Ordering::Relaxed);
+                    counters.resident_bytes.fetch_sub(bytes, Ordering::Relaxed);
                     return Lease {
                         buf,
+                        home: partition,
                         pool: Some(self.inner.clone()),
                     };
                 }
             }
         }
-        self.inner.counters.misses.fetch_add(1, Ordering::Relaxed);
+        counters.misses.fetch_add(1, Ordering::Relaxed);
         let capacity = min_capacity.max(1).next_power_of_two();
         Lease {
             buf: Vec::with_capacity(capacity),
+            home: partition,
             pool: Some(self.inner.clone()),
         }
     }
 
     /// Push an arbitrary `Vec` into the matching free list — the return
     /// half of [`Lease::detach`], used to recycle buffers that left the
-    /// arena (e.g. response outcome vectors) once their consumer is done.
+    /// arena (e.g. response outcome vectors) once their consumer is
+    /// done. Provenance is unknown by construction, so the buffer lands
+    /// in partition 0 — the partition the detached-buffer paths lease
+    /// from — and is never counted as a cross-partition donation.
     pub fn donate(&self, buf: Vec<T>) {
-        self.inner.put(buf);
+        self.inner.put(0, buf);
     }
 
-    /// Drop every pooled buffer (counters other than resident bytes are
-    /// preserved). Subsequent leases miss — the "fresh allocation"
-    /// baseline the `scatter_reuse` bench compares against.
+    /// Drop every pooled buffer in every partition (counters other than
+    /// resident bytes are preserved). Subsequent leases miss — the
+    /// "fresh allocation" baseline the `scatter_reuse` bench compares
+    /// against.
     pub fn clear(&self) {
-        let mut classes = self.inner.classes.lock().unwrap();
-        for bucket in classes.iter_mut() {
-            for buf in bucket.drain(..) {
-                let bytes = (buf.capacity() * std::mem::size_of::<T>()) as u64;
-                self.inner.counters.resident_bytes.fetch_sub(bytes, Ordering::Relaxed);
+        for (part, counters) in self.inner.parts.iter().zip(&self.inner.shared.parts) {
+            let mut classes = part.lock().unwrap();
+            for bucket in classes.iter_mut() {
+                for buf in bucket.drain(..) {
+                    let bytes = (buf.capacity() * std::mem::size_of::<T>()) as u64;
+                    counters.resident_bytes.fetch_sub(bytes, Ordering::Relaxed);
+                }
             }
         }
     }
 }
 
-/// A pooled buffer on loan: behaves as a `Vec<T>`, returns to its free
-/// list (capacity intact) on drop. [`Lease::detach`] opts out of the
-/// return; [`Lease::detached`] is an empty, pool-less lease for paths
-/// that don't use a given buffer.
+/// A pooled buffer on loan: behaves as a `Vec<T>`, returns to its home
+/// partition's free list (capacity intact) on drop. [`Lease::detach`]
+/// opts out of the return; [`Lease::detached`] is an empty, pool-less
+/// lease for paths that don't use a given buffer.
 pub struct Lease<T> {
     buf: Vec<T>,
+    home: usize,
     pool: Option<Arc<PoolInner<T>>>,
 }
 
@@ -220,8 +280,15 @@ impl<T> Lease<T> {
     pub fn detached() -> Self {
         Self {
             buf: Vec::new(),
+            home: 0,
             pool: None,
         }
+    }
+
+    /// The partition this lease was served from and returns to on drop
+    /// (always 0 on a single-partition arena).
+    pub fn home(&self) -> usize {
+        self.home
     }
 
     /// Take the buffer out of the lease without returning it to the
@@ -229,6 +296,20 @@ impl<T> Lease<T> {
     pub fn detach(mut self) -> Vec<T> {
         self.pool = None;
         std::mem::take(&mut self.buf)
+    }
+
+    /// Return the buffer to `partition` instead of home. A target other
+    /// than home is the one sanctioned way scratch migrates between
+    /// partitions, and it is counted ([`BufferArena::cross_donations`])
+    /// so placement drift shows up in STATS instead of silently eroding
+    /// per-partition hit rates.
+    pub fn donate_to(mut self, partition: usize) {
+        if let Some(pool) = self.pool.take() {
+            if partition != self.home {
+                pool.shared.cross_donations.fetch_add(1, Ordering::Relaxed);
+            }
+            pool.put(partition, std::mem::take(&mut self.buf));
+        }
     }
 }
 
@@ -249,7 +330,7 @@ impl<T> DerefMut for Lease<T> {
 impl<T> Drop for Lease<T> {
     fn drop(&mut self) {
         if let Some(pool) = self.pool.take() {
-            pool.put(std::mem::take(&mut self.buf));
+            pool.put(self.home, std::mem::take(&mut self.buf));
         }
     }
 }
@@ -260,7 +341,10 @@ impl<T> Drop for Lease<T> {
 /// recycles into the same free lists and the aggregate counters tell
 /// the whole story.
 pub struct BufferArena {
-    counters: Arc<Counters>,
+    shared: Arc<ArenaShared>,
+    /// Round-robin cursor handing out home partitions to chunk scratch
+    /// (see [`BufferArena::next_home`]).
+    home_cursor: AtomicU64,
     pairs: Pool<(u64, u32)>,
     indices: Pool<usize>,
     flags: Pool<bool>,
@@ -276,17 +360,49 @@ impl Default for BufferArena {
 }
 
 impl BufferArena {
+    /// A single-partition arena — the historical default; every lease
+    /// and donation lands in partition 0.
     pub fn new() -> Self {
-        let counters = Arc::new(Counters::default());
+        Self::partitioned(1)
+    }
+
+    /// An arena whose free lists are split into `partitions` independent
+    /// sets (clamped to ≥ 1), one per backend stream, each with its own
+    /// counters. See the module docs' "Partitions" section.
+    pub fn partitioned(partitions: usize) -> Self {
+        let n = partitions.max(1);
+        let shared = Arc::new(ArenaShared {
+            parts: (0..n).map(|_| Counters::default()).collect(),
+            cross_donations: AtomicU64::new(0),
+        });
         Self {
-            pairs: Pool::new(counters.clone()),
-            indices: Pool::new(counters.clone()),
-            flags: Pool::new(counters.clone()),
-            tallies: Pool::new(counters.clone()),
-            keys: Pool::new(counters.clone()),
-            bytes: Pool::new(counters.clone()),
-            counters,
+            pairs: Pool::new(n, shared.clone()),
+            indices: Pool::new(n, shared.clone()),
+            flags: Pool::new(n, shared.clone()),
+            tallies: Pool::new(n, shared.clone()),
+            keys: Pool::new(n, shared.clone()),
+            bytes: Pool::new(n, shared.clone()),
+            home_cursor: AtomicU64::new(0),
+            shared,
         }
+    }
+
+    /// Number of free-list partitions (1 for [`BufferArena::new`]).
+    pub fn partitions(&self) -> usize {
+        self.shared.parts.len()
+    }
+
+    /// The next home partition for a batch's scratch, round-robin over
+    /// the partitions (always 0 on a single-partition arena). The
+    /// submit path calls this once per chunk so all of one chunk's
+    /// scratch homes together and successive chunks cycle through the
+    /// partitions deterministically.
+    pub fn next_home(&self) -> usize {
+        let n = self.shared.parts.len();
+        if n <= 1 {
+            return 0;
+        }
+        (self.home_cursor.fetch_add(1, Ordering::Relaxed) % n as u64) as usize
     }
 
     /// `(key, original index)` scatter pairs — the one flat batch buffer.
@@ -322,13 +438,35 @@ impl BufferArena {
         &self.bytes
     }
 
-    /// Aggregate counters across every pool of this arena.
+    /// Aggregate counters across every pool and partition of this arena.
     pub fn stats(&self) -> ArenaStats {
-        ArenaStats {
-            hits: self.counters.hits.load(Ordering::Relaxed),
-            misses: self.counters.misses.load(Ordering::Relaxed),
-            resident_bytes: self.counters.resident_bytes.load(Ordering::Relaxed),
+        let mut total = ArenaStats {
+            hits: 0,
+            misses: 0,
+            resident_bytes: 0,
+        };
+        for c in &self.shared.parts {
+            let s = c.snapshot();
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.resident_bytes += s.resident_bytes;
         }
+        total
+    }
+
+    /// Per-partition counters, in partition order. On a partitioned
+    /// arena a steady workload must hold *each entry's* misses constant
+    /// — the per-partition form of the zero-allocation contract that
+    /// `tests/alloc_reuse.rs` enforces.
+    pub fn partition_stats(&self) -> Vec<ArenaStats> {
+        self.shared.parts.iter().map(Counters::snapshot).collect()
+    }
+
+    /// Buffers returned to a partition other than their home via
+    /// [`Lease::donate_to`] — the explicit cross-partition traffic
+    /// counter STATS reports.
+    pub fn cross_donations(&self) -> u64 {
+        self.shared.cross_donations.load(Ordering::Relaxed)
     }
 
     /// Drop every pooled buffer in every pool (hit/miss history is
@@ -417,6 +555,7 @@ mod tests {
     fn detached_lease_is_inert() {
         let l: Lease<u64> = Lease::detached();
         assert!(l.is_empty());
+        assert_eq!(l.home(), 0);
         drop(l); // no pool, no counters, no panic
     }
 
@@ -468,5 +607,85 @@ mod tests {
         t.resize_with(8, || AtomicU64::new(0));
         assert!(t.iter().all(|a| a.load(Ordering::Relaxed) == 0));
         assert_eq!(arena.stats().hits, 1);
+    }
+
+    #[test]
+    fn single_partition_arena_is_the_partitioned_degenerate_case() {
+        let arena = BufferArena::new();
+        assert_eq!(arena.partitions(), 1);
+        assert_eq!(arena.next_home(), 0);
+        assert_eq!(arena.next_home(), 0, "single partition never advances");
+        drop(arena.keys().lease(64));
+        let parts = arena.partition_stats();
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0], arena.stats(), "one partition == the aggregate");
+        assert_eq!(arena.cross_donations(), 0);
+        // partitioned(0) clamps rather than building a zero-way arena.
+        assert_eq!(BufferArena::partitioned(0).partitions(), 1);
+    }
+
+    #[test]
+    fn partitioned_leases_stay_in_their_partition() {
+        let arena = BufferArena::partitioned(2);
+        let a = arena.keys().lease_in(1, 600);
+        assert_eq!(a.home(), 1);
+        drop(a); // returns to partition 1
+        // Partition 0 cannot see partition 1's free buffer: fresh miss.
+        let b = arena.keys().lease_in(0, 600);
+        assert_eq!(b.home(), 0);
+        drop(b);
+        // Partition 1 reuses its own buffer: hit.
+        let c = arena.keys().lease_in(1, 600);
+        let parts = arena.partition_stats();
+        assert_eq!((parts[0].hits, parts[0].misses), (0, 1));
+        assert_eq!((parts[1].hits, parts[1].misses), (1, 1));
+        let total = arena.stats();
+        assert_eq!((total.hits, total.misses), (1, 2), "aggregate sums the partitions");
+        drop(c);
+    }
+
+    #[test]
+    fn cross_partition_donation_is_counted() {
+        let arena = BufferArena::partitioned(2);
+        // Home donation: no cross traffic.
+        arena.flags().lease_in(1, 64).donate_to(1);
+        assert_eq!(arena.cross_donations(), 0);
+        // Away donation: counted, and the buffer really moves.
+        arena.flags().lease_in(0, 64).donate_to(1);
+        assert_eq!(arena.cross_donations(), 1);
+        let hit = arena.flags().lease_in(1, 64);
+        assert_eq!(arena.partition_stats()[1].hits, 1);
+        drop(hit);
+        // Pool::donate (provenance unknown) lands in partition 0, uncounted.
+        let v = arena.keys().lease_in(1, 64).detach();
+        arena.keys().donate(v);
+        assert_eq!(arena.cross_donations(), 1);
+        assert_eq!(arena.keys().lease_in(0, 64).capacity(), 64);
+        assert_eq!(arena.partition_stats()[0].hits, 1);
+    }
+
+    #[test]
+    fn next_home_round_robins_deterministically() {
+        let arena = BufferArena::partitioned(3);
+        let homes: Vec<usize> = (0..7).map(|_| arena.next_home()).collect();
+        assert_eq!(homes, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn per_partition_misses_hold_constant_in_steady_state() {
+        // The per-partition form of the zero-allocation contract: after
+        // one warmup cycle over every partition, a repeating workload
+        // adds hits only, to the partition it homes on.
+        let arena = BufferArena::partitioned(4);
+        for round in 0..8 {
+            let home = arena.next_home();
+            assert_eq!(home, round % 4);
+            drop(arena.pairs().lease_in(home, 1024));
+            drop(arena.indices().lease_in(home, 64));
+        }
+        for (i, p) in arena.partition_stats().iter().enumerate() {
+            assert_eq!(p.misses, 2, "partition {i} warms up exactly once per pool/class");
+            assert_eq!(p.hits, 2, "partition {i} reuses its own buffers thereafter");
+        }
     }
 }

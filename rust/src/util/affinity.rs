@@ -1,0 +1,529 @@
+//! Platform-gated CPU affinity: thread pinning, topology discovery and
+//! placement policies.
+//!
+//! This is the hardware-placement substrate for the device layer. It is
+//! deliberately dependency-free: on Linux the `sched_{set,get}affinity`
+//! syscalls are issued directly through libc's raw `syscall(2)` entry
+//! point (which the std runtime already links), and the socket/core
+//! layout is read from `/sys/devices/system/cpu/*/topology/`. Everywhere
+//! else [`pin_current_thread`] is a no-op that returns a *named* error
+//! naming the platform, and [`CpuTopology::probe`] falls back to a flat
+//! single-socket layout — callers degrade to unpinned execution, never
+//! to silent misplacement.
+//!
+//! The three layers, bottom up:
+//!
+//! * [`pin_current_thread`] / [`allowed_cpus`] — the raw affinity mask
+//!   of the calling thread (set / get);
+//! * [`CpuTopology`] — which CPUs exist and how they group into
+//!   physical sockets, restricted to the CPUs this process is allowed
+//!   to run on (so cgroup cpusets and container limits are respected);
+//! * [`PlacementPolicy`] — turns a topology plus per-pool worker counts
+//!   into a [`PlacementPlan`]: one target CPU per worker, per pool.
+//!
+//! `sched_setaffinity` is confined to this module by a CI guard in
+//! `scripts/check_api_surface.sh`; everything above it (device pools,
+//! the engine, the CLI) speaks [`PlacementPolicy`].
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Largest CPU id representable in an affinity mask (glibc parity:
+/// 1024-bit `cpu_set_t`). Machines with more CPUs fall back to the
+/// unpinned path.
+pub const MAX_CPUS: usize = 1024;
+const WORDS: usize = MAX_CPUS / usize::BITS as usize;
+
+#[cfg(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64", target_arch = "riscv64")
+))]
+mod imp {
+    use super::WORDS;
+    use std::ffi::c_long;
+
+    #[cfg(target_arch = "x86_64")]
+    const SYS_SCHED_SETAFFINITY: c_long = 203;
+    #[cfg(target_arch = "x86_64")]
+    const SYS_SCHED_GETAFFINITY: c_long = 204;
+    #[cfg(any(target_arch = "aarch64", target_arch = "riscv64"))]
+    const SYS_SCHED_SETAFFINITY: c_long = 122;
+    #[cfg(any(target_arch = "aarch64", target_arch = "riscv64"))]
+    const SYS_SCHED_GETAFFINITY: c_long = 123;
+
+    extern "C" {
+        // libc's raw syscall trampoline; std links libc on Linux, so
+        // this adds no dependency.
+        fn syscall(num: c_long, ...) -> c_long;
+    }
+
+    pub fn set_affinity(mask: &[usize; WORDS]) -> Result<(), String> {
+        let pid: c_long = 0; // 0 = the calling thread
+        let ret = unsafe {
+            syscall(SYS_SCHED_SETAFFINITY, pid, std::mem::size_of_val(mask), mask.as_ptr())
+        };
+        if ret == 0 {
+            Ok(())
+        } else {
+            Err("sched_setaffinity syscall failed".to_string())
+        }
+    }
+
+    /// Returns the number of mask bytes the kernel wrote, or `None` on
+    /// failure (the raw syscall reports bytes-copied, unlike the glibc
+    /// wrapper which normalises to 0).
+    pub fn get_affinity(mask: &mut [usize; WORDS]) -> Option<usize> {
+        let pid: c_long = 0;
+        let ret = unsafe {
+            syscall(SYS_SCHED_GETAFFINITY, pid, std::mem::size_of_val(mask), mask.as_mut_ptr())
+        };
+        if ret > 0 {
+            Some(ret as usize)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(not(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64", target_arch = "riscv64")
+)))]
+mod imp {
+    use super::WORDS;
+
+    pub fn set_affinity(_mask: &[usize; WORDS]) -> Result<(), String> {
+        Err(format!(
+            "cpu pinning is unsupported on this platform (os={}, arch={})",
+            std::env::consts::OS,
+            std::env::consts::ARCH
+        ))
+    }
+
+    pub fn get_affinity(_mask: &mut [usize; WORDS]) -> Option<usize> {
+        None
+    }
+}
+
+/// Pin the **calling** thread to `cpus`. Pinning is done by the thread
+/// being pinned (the syscall targets tid 0 = self), which is why worker
+/// pools apply their plan at spawn, inside the worker's own prologue.
+///
+/// On unsupported platforms this returns a named error; callers log it
+/// once and continue unpinned.
+pub fn pin_current_thread(cpus: &[usize]) -> Result<(), String> {
+    if cpus.is_empty() {
+        return Err("empty cpu list".to_string());
+    }
+    let mut mask = [0usize; WORDS];
+    for &c in cpus {
+        if c >= MAX_CPUS {
+            return Err(format!("cpu {c} out of range (supported max {MAX_CPUS})"));
+        }
+        mask[c / usize::BITS as usize] |= 1 << (c % usize::BITS as usize);
+    }
+    imp::set_affinity(&mask).map_err(|e| format!("pinning to cpus {cpus:?} failed: {e}"))
+}
+
+/// The CPUs the calling thread is allowed to run on (its affinity
+/// mask), in ascending order. `None` when the mask cannot be read —
+/// non-Linux platforms, or a machine wider than [`MAX_CPUS`].
+///
+/// This is the honest parallelism bound for containerized runs: a
+/// process restricted to 2 CPUs of a 64-CPU host sees 2 here.
+pub fn allowed_cpus() -> Option<Vec<usize>> {
+    let mut mask = [0usize; WORDS];
+    let bytes = imp::get_affinity(&mut mask)?;
+    let bits = (bytes * 8).min(MAX_CPUS);
+    let out: Vec<usize> = (0..bits)
+        .filter(|&c| mask[c / usize::BITS as usize] & (1 << (c % usize::BITS as usize)) != 0)
+        .collect();
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// The machine's socket/core layout, restricted to the CPUs this
+/// process may use.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CpuTopology {
+    /// `sockets[i]` = ascending CPU ids on physical package `i`. Never
+    /// empty; every inner list is non-empty.
+    pub sockets: Vec<Vec<usize>>,
+    /// `true` when read from `/sys/devices/system/cpu/*/topology/`,
+    /// `false` for the flat single-socket fallback.
+    pub from_sysfs: bool,
+}
+
+impl CpuTopology {
+    /// Probe sysfs; on any failure (non-Linux, masked sysfs, containers
+    /// without `/sys`) fall back to a flat layout sized by the affinity
+    /// mask (or `available_parallelism` as a last resort).
+    pub fn probe() -> Self {
+        Self::probe_sysfs().unwrap_or_else(|| {
+            let n = allowed_cpus().map(|v| v.len()).unwrap_or_else(|| {
+                std::thread::available_parallelism().map(usize::from).unwrap_or(1)
+            });
+            Self::flat(n)
+        })
+    }
+
+    fn probe_sysfs() -> Option<Self> {
+        let allowed = allowed_cpus();
+        let mut by_pkg: std::collections::BTreeMap<u64, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for entry in std::fs::read_dir("/sys/devices/system/cpu").ok()?.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(cpu) = name.strip_prefix("cpu").and_then(|s| s.parse::<usize>().ok()) else {
+                continue;
+            };
+            if cpu >= MAX_CPUS {
+                continue;
+            }
+            if let Some(allowed) = &allowed {
+                if !allowed.contains(&cpu) {
+                    continue;
+                }
+            }
+            let pkg_path = entry.path().join("topology/physical_package_id");
+            let Ok(raw) = std::fs::read_to_string(pkg_path) else { continue };
+            let Ok(pkg) = raw.trim().parse::<i64>() else { continue };
+            // Some platforms report -1 for "no package"; fold into 0.
+            by_pkg.entry(pkg.max(0) as u64).or_default().push(cpu);
+        }
+        if by_pkg.is_empty() {
+            return None;
+        }
+        let mut sockets: Vec<Vec<usize>> = by_pkg.into_values().collect();
+        for s in &mut sockets {
+            s.sort_unstable();
+        }
+        Some(Self { sockets, from_sysfs: true })
+    }
+
+    /// A flat layout: one socket holding CPUs `0..n` (at least one).
+    pub fn flat(n: usize) -> Self {
+        Self { sockets: vec![(0..n.max(1)).collect()], from_sysfs: false }
+    }
+
+    pub fn num_sockets(&self) -> usize {
+        self.sockets.len()
+    }
+
+    pub fn total_cpus(&self) -> usize {
+        self.sockets.iter().map(Vec::len).sum()
+    }
+}
+
+/// How device-pool workers map onto cores. Inert by default: the
+/// `None` policy issues no syscalls and probes nothing — byte-identical
+/// to a build without this module.
+///
+/// * `Compact` — pool *p* goes to socket `p % sockets`; its workers
+///   take consecutive cores within that socket. Shard groups, their
+///   pool's workers, and the pool's arena partition then share a
+///   socket.
+/// * `Spread` — workers take cores in socket-interleaved order, so a
+///   single pool's workers straddle all sockets (maximum aggregate
+///   memory bandwidth, the paper's saturation regime).
+/// * `Explicit(map)` — worker *g* (global, pool-major order) pins to
+///   `map[g % map.len()]`. Programmatic escape hatch; not on the CLI.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    #[default]
+    None,
+    Compact,
+    Spread,
+    Explicit(Vec<usize>),
+}
+
+impl PlacementPolicy {
+    /// Parse a `--pin` / `CUCKOO_PIN` token.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "none" => Some(Self::None),
+            "compact" => Some(Self::Compact),
+            "spread" => Some(Self::Spread),
+            _ => None,
+        }
+    }
+
+    /// Default placement from `CUCKOO_PIN` (unset/empty → `None`; an
+    /// unparseable value warns once and stays unpinned).
+    pub fn from_env() -> Self {
+        match std::env::var("CUCKOO_PIN") {
+            Ok(v) if !v.trim().is_empty() => Self::parse(&v).unwrap_or_else(|| {
+                warn_once(&format!("ignoring CUCKOO_PIN='{v}' (expected none, compact or spread)"));
+                Self::None
+            }),
+            _ => Self::None,
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, Self::None)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Compact => "compact",
+            Self::Spread => "spread",
+            Self::Explicit(_) => "explicit",
+        }
+    }
+
+    /// Compute a plan for `pool_workers[p]` workers per pool, probing
+    /// the live topology. `None` probes nothing.
+    pub fn plan(&self, pool_workers: &[usize]) -> PlacementPlan {
+        if self.is_none() {
+            return PlacementPlan::unpinned(pool_workers.len());
+        }
+        self.plan_on(&CpuTopology::probe(), pool_workers)
+    }
+
+    /// Compute a plan against an explicit topology (unit-testable).
+    pub fn plan_on(&self, topo: &CpuTopology, pool_workers: &[usize]) -> PlacementPlan {
+        let sockets: Vec<&Vec<usize>> = topo.sockets.iter().filter(|s| !s.is_empty()).collect();
+        if sockets.is_empty() {
+            return PlacementPlan::unpinned(pool_workers.len());
+        }
+        match self {
+            Self::None => PlacementPlan::unpinned(pool_workers.len()),
+            Self::Compact => {
+                let mut cursors = vec![0usize; sockets.len()];
+                let pools = pool_workers
+                    .iter()
+                    .enumerate()
+                    .map(|(p, &w)| {
+                        let sock = p % sockets.len();
+                        let cores = sockets[sock];
+                        (0..w)
+                            .map(|_| {
+                                let cpu = cores[cursors[sock] % cores.len()];
+                                cursors[sock] += 1;
+                                cpu
+                            })
+                            .collect()
+                    })
+                    .collect();
+                PlacementPlan { pools }
+            }
+            Self::Spread => {
+                let deepest = sockets.iter().map(|s| s.len()).max().unwrap_or(0);
+                let mut order = Vec::with_capacity(topo.total_cpus());
+                for i in 0..deepest {
+                    for s in &sockets {
+                        if i < s.len() {
+                            order.push(s[i]);
+                        }
+                    }
+                }
+                let mut cur = 0usize;
+                let pools = pool_workers
+                    .iter()
+                    .map(|&w| {
+                        (0..w)
+                            .map(|_| {
+                                let cpu = order[cur % order.len()];
+                                cur += 1;
+                                cpu
+                            })
+                            .collect()
+                    })
+                    .collect();
+                PlacementPlan { pools }
+            }
+            Self::Explicit(map) => {
+                if map.is_empty() {
+                    return PlacementPlan::unpinned(pool_workers.len());
+                }
+                let mut g = 0usize;
+                let pools = pool_workers
+                    .iter()
+                    .map(|&w| {
+                        (0..w)
+                            .map(|_| {
+                                let cpu = map[g % map.len()];
+                                g += 1;
+                                cpu
+                            })
+                            .collect()
+                    })
+                    .collect();
+                PlacementPlan { pools }
+            }
+        }
+    }
+
+    /// Socket-major pool order for shard→pool pinning: under `Compact`
+    /// on a multi-socket machine, shards should fill all the pools of
+    /// socket 0 before touching socket 1, so consecutive shard groups
+    /// stay socket-local. `None` when the policy or topology makes the
+    /// default round-robin equivalent.
+    pub fn socket_pool_order(&self, topo: &CpuTopology, pools: usize) -> Option<Vec<usize>> {
+        if !matches!(self, Self::Compact) || topo.num_sockets() < 2 || pools < 2 {
+            return None;
+        }
+        let s = topo.num_sockets();
+        let mut order = Vec::with_capacity(pools);
+        for k in 0..s {
+            order.extend((0..pools).filter(|p| p % s == k));
+        }
+        Some(order)
+    }
+}
+
+impl std::fmt::Display for PlacementPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// One target CPU per worker, per pool. `pools[p]` is either empty (no
+/// pinning for pool `p`) or exactly one CPU id per worker.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PlacementPlan {
+    pub pools: Vec<Vec<usize>>,
+}
+
+impl PlacementPlan {
+    pub fn unpinned(pools: usize) -> Self {
+        Self { pools: vec![Vec::new(); pools] }
+    }
+
+    pub fn is_unpinned(&self) -> bool {
+        self.pools.iter().all(Vec::is_empty)
+    }
+}
+
+fn warn_once(msg: &str) {
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    if !WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!("[cuckoo-gpu] warn: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_sockets() -> CpuTopology {
+        CpuTopology { sockets: vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]], from_sysfs: true }
+    }
+
+    #[test]
+    fn parse_covers_the_cli_tokens_and_rejects_junk() {
+        assert_eq!(PlacementPolicy::parse("none"), Some(PlacementPolicy::None));
+        assert_eq!(PlacementPolicy::parse("Compact"), Some(PlacementPolicy::Compact));
+        assert_eq!(PlacementPolicy::parse(" spread "), Some(PlacementPolicy::Spread));
+        assert_eq!(PlacementPolicy::parse("numa"), None);
+        assert_eq!(PlacementPolicy::Compact.label(), "compact");
+        assert_eq!(PlacementPolicy::Explicit(vec![1]).label(), "explicit");
+        assert!(PlacementPolicy::default().is_none());
+    }
+
+    #[test]
+    fn compact_plan_keeps_each_pool_on_one_socket() {
+        let plan = PlacementPolicy::Compact.plan_on(&two_sockets(), &[2, 2, 2]);
+        // Pools 0 and 2 share socket 0 and take consecutive cores;
+        // pool 1 owns socket 1.
+        assert_eq!(plan.pools, vec![vec![0, 1], vec![4, 5], vec![2, 3]]);
+    }
+
+    #[test]
+    fn compact_plan_wraps_when_workers_outnumber_cores() {
+        let topo = CpuTopology { sockets: vec![vec![0, 1]], from_sysfs: true };
+        let plan = PlacementPolicy::Compact.plan_on(&topo, &[5]);
+        assert_eq!(plan.pools, vec![vec![0, 1, 0, 1, 0]]);
+    }
+
+    #[test]
+    fn spread_plan_interleaves_sockets() {
+        let plan = PlacementPolicy::Spread.plan_on(&two_sockets(), &[2, 2]);
+        assert_eq!(plan.pools, vec![vec![0, 4], vec![1, 5]]);
+    }
+
+    #[test]
+    fn explicit_plan_cycles_the_map_in_pool_major_order() {
+        let plan = PlacementPolicy::Explicit(vec![3, 1]).plan_on(&two_sockets(), &[2, 1]);
+        assert_eq!(plan.pools, vec![vec![3, 1], vec![3]]);
+        let unpinned = PlacementPolicy::Explicit(Vec::new()).plan_on(&two_sockets(), &[2]);
+        assert!(unpinned.is_unpinned());
+    }
+
+    #[test]
+    fn none_plan_is_unpinned_and_probes_nothing() {
+        let plan = PlacementPolicy::None.plan(&[4, 4]);
+        assert!(plan.is_unpinned());
+        assert_eq!(plan.pools.len(), 2);
+    }
+
+    #[test]
+    fn socket_pool_order_groups_pools_socket_major() {
+        let topo = two_sockets();
+        assert_eq!(
+            PlacementPolicy::Compact.socket_pool_order(&topo, 4),
+            Some(vec![0, 2, 1, 3])
+        );
+        assert_eq!(PlacementPolicy::Compact.socket_pool_order(&topo, 1), None);
+        assert_eq!(PlacementPolicy::Spread.socket_pool_order(&topo, 4), None);
+        let flat = CpuTopology::flat(8);
+        assert_eq!(PlacementPolicy::Compact.socket_pool_order(&flat, 4), None);
+    }
+
+    #[test]
+    fn flat_topology_has_one_nonempty_socket() {
+        let t = CpuTopology::flat(0);
+        assert_eq!(t.num_sockets(), 1);
+        assert_eq!(t.total_cpus(), 1);
+        assert!(!t.from_sysfs);
+    }
+
+    #[test]
+    fn probe_always_yields_a_usable_topology() {
+        let t = CpuTopology::probe();
+        assert!(t.total_cpus() >= 1);
+        assert!(t.sockets.iter().all(|s| !s.is_empty()));
+    }
+
+    #[test]
+    fn out_of_range_cpu_is_a_named_error() {
+        let e = pin_current_thread(&[MAX_CPUS]).unwrap_err();
+        assert!(e.contains("out of range"), "{e}");
+        let e = pin_current_thread(&[]).unwrap_err();
+        assert!(e.contains("empty"), "{e}");
+    }
+
+    #[cfg(all(
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64", target_arch = "riscv64")
+    ))]
+    #[test]
+    fn pinning_a_thread_narrows_its_affinity_mask() {
+        let before = allowed_cpus().expect("affinity mask readable on linux");
+        let target = before[0];
+        // Pin a scratch thread (not the test runner's) and read the
+        // mask back from inside it.
+        let seen = std::thread::spawn(move || {
+            pin_current_thread(&[target]).expect("pin to an allowed cpu");
+            allowed_cpus().expect("mask readable after pin")
+        })
+        .join()
+        .unwrap();
+        assert_eq!(seen, vec![target]);
+    }
+
+    #[cfg(not(all(
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64", target_arch = "riscv64")
+    )))]
+    #[test]
+    fn unsupported_platforms_fail_with_a_named_warning() {
+        let e = pin_current_thread(&[0]).unwrap_err();
+        assert!(e.contains("unsupported"), "{e}");
+        assert!(allowed_cpus().is_none());
+    }
+}

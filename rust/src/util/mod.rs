@@ -1,7 +1,9 @@
-//! Small self-contained utilities: PRNGs, statistics, timing, CRC-32
-//! and a mini CLI parser. The build environment is fully offline, so
-//! these replace the usual `rand`/`clap`/`criterion`/`crc` dependencies.
+//! Small self-contained utilities: PRNGs, statistics, timing, CRC-32,
+//! CPU affinity/topology and a mini CLI parser. The build environment
+//! is fully offline, so these replace the usual
+//! `rand`/`clap`/`criterion`/`crc`/`core_affinity` dependencies.
 
+pub mod affinity;
 pub mod prng;
 pub mod stats;
 pub mod timer;
@@ -9,6 +11,7 @@ pub mod cli;
 pub mod crc;
 pub mod prop;
 
+pub use affinity::{CpuTopology, PlacementPlan, PlacementPolicy};
 pub use crc::{crc32, Crc32};
 pub use prng::{SplitMix64, Xoshiro256};
 pub use stats::{median, percentile, Summary};

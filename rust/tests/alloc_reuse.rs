@@ -15,6 +15,7 @@
 use cuckoo_gpu::coordinator::{
     Batcher, BatcherConfig, Engine, EngineConfig, OpKind, Request, Wal, WalConfig,
 };
+use cuckoo_gpu::device::PlacementPolicy;
 use cuckoo_gpu::util::prng::mix64;
 use std::sync::Arc;
 use std::time::Duration;
@@ -109,6 +110,92 @@ fn steady_state_batcher_runs_at_100_percent_arena_hit_rate() {
             "pools={pools} shards={shards}: free lists empty at steady state"
         );
     }
+}
+
+#[test]
+fn partitioned_arena_holds_per_partition_misses_constant() {
+    // PR-10 acceptance: under a placement policy the engine splits the
+    // arena into one free-list partition per backend stream, and the
+    // zero-allocation property must hold PER PARTITION, not just in
+    // aggregate — a partition silently stealing from (or leaking into)
+    // another would keep the total flat while defeating the locality
+    // the partitioning exists for. Chunk scratch homes round-robin, so
+    // after one warmup cycle over every partition each one's miss
+    // counter stands perfectly still, and the out-vector donate cycle
+    // stays entirely on partition 0 (zero cross-partition donations).
+    let seed = stress_seed();
+    let engine = Arc::new(
+        Engine::new(EngineConfig {
+            capacity: 1 << 18,
+            shards: 8,
+            workers: 4,
+            pools: 4,
+            placement: PlacementPolicy::Compact,
+            ..EngineConfig::default()
+        })
+        .unwrap(),
+    );
+    let arena = engine.arena().clone();
+    assert_eq!(arena.partitions(), 4, "one arena partition per backend stream");
+    let batcher = Batcher::new(
+        engine.clone(),
+        BatcherConfig {
+            max_keys: GROUP,
+            max_delay: Duration::from_millis(1),
+        },
+    );
+
+    let run_triple = |t: u64| {
+        let ks = block(t, seed);
+        let ins = batcher.call(Request::new(OpKind::Insert, ks.clone())).unwrap();
+        assert_eq!(ins.successes as usize, GROUP);
+        let qry = batcher.call(Request::new(OpKind::Query, ks.clone())).unwrap();
+        assert_eq!(qry.successes as usize, GROUP);
+        let del = batcher.call(Request::new(OpKind::Delete, ks)).unwrap();
+        assert!(del.successes as usize >= GROUP - 8);
+    };
+
+    // Warmup: 6 triples = 18 chunks, ≥4 per partition — every
+    // (partition, pool, size-class) combo the window will lease.
+    for t in 0..6 {
+        run_triple(t);
+    }
+    let before = arena.partition_stats();
+    // 34 triples = 102 mixed flush groups cycling over the partitions.
+    for t in 6..40 {
+        run_triple(t);
+    }
+    let after = arena.partition_stats();
+
+    for (i, (b, a)) in before.iter().zip(&after).enumerate() {
+        assert_eq!(
+            a.misses, b.misses,
+            "partition {i} allocated new scratch at steady state \
+             (per-partition hit rate must be 100% after warmup; seed {seed})"
+        );
+        assert!(
+            a.hits > b.hits,
+            "partition {i} served no leases over the window (seed {seed})"
+        );
+    }
+    assert_eq!(
+        arena.cross_donations(),
+        0,
+        "the out-vector donate cycle must stay on partition 0 (seed {seed})"
+    );
+
+    // Inert control: the default policy keeps the single shared arena
+    // even on a multi-pool engine.
+    let plain = Engine::new(EngineConfig {
+        capacity: 1 << 18,
+        shards: 8,
+        workers: 4,
+        pools: 4,
+        placement: PlacementPolicy::None,
+        ..EngineConfig::default()
+    })
+    .unwrap();
+    assert_eq!(plain.arena().partitions(), 1, "placement off ⇒ one shared partition");
 }
 
 #[test]

@@ -20,7 +20,8 @@
 
 use cuckoo_gpu::coordinator::ShardedFilter;
 use cuckoo_gpu::device::{
-    AotBackend, Backend, Device, DeviceTopology, LaunchConfig, Pinning, TopologyConfig,
+    AotBackend, Backend, Device, DeviceTopology, LaunchConfig, Pinning, PlacementPolicy,
+    TopologyConfig,
 };
 use cuckoo_gpu::filter::{CuckooConfig, CuckooFilter, Fp16};
 use cuckoo_gpu::runtime::RuntimeHandle;
@@ -109,12 +110,17 @@ struct RoundLog {
 }
 
 fn topology(pools: usize, pinning: Pinning) -> DeviceTopology {
+    topology_placed(pools, pinning, PlacementPolicy::None)
+}
+
+fn topology_placed(pools: usize, pinning: Pinning, placement: PlacementPolicy) -> DeviceTopology {
     DeviceTopology::new(TopologyConfig {
         pools,
         total_workers: 8,
         block_size: 256,
         warp_size: 32,
         pinning,
+        placement,
     })
 }
 
@@ -327,6 +333,42 @@ fn explicit_pinning_matches_oracle() {
     assert_logs_equal(&log, &oracle_log, "explicit pinning", seed);
     assert_eq!(len, oracle_len);
     assert!(launches.iter().all(|&l| l > 0), "{launches:?}");
+}
+
+#[test]
+fn pinned_placement_matches_unpinned_oracle() {
+    // The PR-10 acceptance leg: core pinning changes WHERE workers run,
+    // never WHAT they compute. The same schedule replays through
+    // placement {None, Compact} × pools {1, 4}; every leg must be
+    // byte-identical to the unpinned 1-pool oracle — positional
+    // outcomes AND occupancy ledgers — whatever this machine's socket
+    // layout, affinity mask, or pin-syscall availability (a failed pin
+    // attempt degrades to unpinned and is counted, not a test failure).
+    let seed = stress_seed().wrapping_add(6);
+    let schedule = build_schedule(seed, 12);
+    let (oracle_log, oracle_len, _) =
+        run_schedule(&topology(1, Pinning::RoundRobin), 8, &schedule);
+    for placement in [PlacementPolicy::None, PlacementPolicy::Compact] {
+        for &pools in &[1usize, 4] {
+            let topo = topology_placed(pools, Pinning::RoundRobin, placement.clone());
+            let (log, len, _) = run_schedule(&topo, 8, &schedule);
+            let what = format!("placement={placement} pools={pools}");
+            assert_logs_equal(&log, &oracle_log, &what, seed);
+            assert_eq!(len, oracle_len, "ledger drift at {what} (seed {seed})");
+            // The pin ledger is settled before the first launch: every
+            // worker's outcome is recorded, and an inert policy records
+            // no targets and no attempts at all.
+            for d in topo.pools() {
+                let (cpus, ok, failed) = d.pin_outcomes();
+                if placement.is_none() {
+                    assert_eq!((cpus, ok, failed), (Vec::new(), 0, 0), "{what}");
+                } else {
+                    assert_eq!(cpus.len(), d.workers(), "one target per worker at {what}");
+                    assert_eq!(ok + failed, d.workers() as u64, "unsettled ledger at {what}");
+                }
+            }
+        }
+    }
 }
 
 #[test]

@@ -263,3 +263,44 @@ if [ -n "$stray_interp" ]; then
 fi
 
 echo "Interp surface OK: HLO evaluation confined to rust/src/runtime/"
+
+# ---------------------------------------------------------------------
+# Affinity-syscall confinement (PR 10).
+#
+# Hardware placement has exactly one OS boundary: util/affinity.rs owns
+# the raw `syscall` trampoline and the sched_{set,get}affinity numbers,
+# platform-gated so every other module stays portable (non-Linux builds
+# get the named-warning no-op from the same file). Fail CI if a raw
+# syscall or an affinity call appears anywhere else in src/: a second
+# call site would dodge the cfg gating, the MAX_CPUS mask bounds and the
+# failure-is-degradation (never an error) discipline, and break the
+# non-Linux build. Comment/doc mentions are fine; code is not.
+
+AFFINITY_FILE=rust/src/util/affinity.rs
+if [ ! -f "$AFFINITY_FILE" ]; then
+  echo "error: $AFFINITY_FILE missing (update the affinity guard in $0)" >&2
+  exit 1
+fi
+if ! grep -q 'fn pin_current_thread' "$AFFINITY_FILE"; then
+  echo "error: pin_current_thread not found in $AFFINITY_FILE — this" >&2
+  echo "guard checks a stale entry point; update it with the affinity" >&2
+  echo "module." >&2
+  exit 1
+fi
+
+AFFINITY_PATTERN='sched_setaffinity|sched_getaffinity|syscall[[:space:]]*\('
+stray_affinity="$(grep -rnE "$AFFINITY_PATTERN" rust/src \
+  | grep -v '^rust/src/util/affinity.rs:' \
+  | grep -vE ':[0-9]+:[[:space:]]*//' || true)"
+if [ -n "$stray_affinity" ]; then
+  echo "error: raw syscall / affinity call outside util/affinity.rs:" >&2
+  echo "$stray_affinity" >&2
+  echo >&2
+  echo "Pin threads through util::affinity (pin_current_thread, or a" >&2
+  echo "PlacementPolicy plan threaded via build_backend_placed) — that" >&2
+  echo "module owns the platform gating, the CPU-mask bounds and the" >&2
+  echo "pin-failure-is-degradation discipline." >&2
+  exit 1
+fi
+
+echo "Affinity surface OK: syscalls confined to rust/src/util/affinity.rs"
